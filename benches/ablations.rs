@@ -1,0 +1,104 @@
+//! Design-choice ablations called out in DESIGN.md:
+//!
+//! 1. **Lookahead field width** — Algorithm 2 reserves one bit per
+//!    weight (4 bits per block, skip ≤ 15). How many loop iterations
+//!    does each width save? Justifies the paper's 4-bit choice.
+//! 2. **INT4/INT2 extension** (Section IV-D) — the variable-cycle MAC
+//!    at 8 and 16 lanes per register: simulated vs the generalized
+//!    binomial model.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use sparse_riscv::analysis::report::{f2, Table};
+use sparse_riscv::analysis::speedup::vc_speedup_observed_n;
+use sparse_riscv::cfu::int4::{int4_seq_mac, int4_vc_mac, pack8_i4};
+use sparse_riscv::encoding::lookahead::visited_blocks_with_max;
+use sparse_riscv::sparsity::generator::gen_block_sparse;
+use sparse_riscv::util::Pcg32;
+
+fn ablation_lookahead_width() {
+    let mut rng = Pcg32::new(0xAB1);
+    let lanes = 256usize;
+    let lane_len = 256usize; // 64 blocks per lane
+    let mut table = Table::new(
+        "ablation 1 — SSSA visited-block ratio vs lookahead field width",
+        &["x_ss", "w=0 (none)", "w=1 (skip<=1)", "w=2 (<=3)", "w=3 (<=7)", "w=4 (<=15)", "ideal"],
+    );
+    for x_ss in [0.25, 0.5, 0.75, 0.9] {
+        let ws = gen_block_sparse(lanes * lane_len, x_ss, &mut rng);
+        let total_blocks = (lanes * lane_len / 4) as f64;
+        let mut cells = vec![f2(x_ss)];
+        for width in 0..=4u32 {
+            let max_skip = (1u16 << width) as u8 - 1;
+            let visited: usize = ws
+                .chunks(lane_len)
+                .map(|lane| visited_blocks_with_max(lane, max_skip))
+                .sum();
+            cells.push(f2(visited as f64 / total_blocks));
+        }
+        // ideal: only non-zero blocks visited
+        let nz = ws.chunks(4).filter(|b| b.iter().any(|&w| w != 0)).count() as f64;
+        cells.push(f2(nz / total_blocks));
+        table.row(&cells);
+    }
+    print!("{}", table.render());
+    println!(
+        "w=4 is within a leading-zero-visit of ideal at every sparsity —\n\
+         the paper's one-bit-per-weight budget is sufficient.\n"
+    );
+}
+
+fn ablation_int4() {
+    let mut rng = Pcg32::new(0xAB2);
+    let words = 4096usize;
+    let mut table = Table::new(
+        "ablation 2 — INT4 variable-cycle MAC (8 lanes/register)",
+        &["x", "sim speedup", "model s_o(n=8)", "model s_o(n=16, INT2)"],
+    );
+    for i in 0..=9 {
+        let x = i as f64 * 0.1;
+        let mut base_cycles = 0u64;
+        let mut vc_cycles = 0u64;
+        for _ in 0..words {
+            let w: [i8; 8] = std::array::from_fn(|_| {
+                if rng.bernoulli(x) {
+                    0
+                } else {
+                    // strictly non-zero so lane sparsity is exactly x
+                    let v = rng.range_i32(1, 7) as i8;
+                    if rng.bernoulli(0.5) {
+                        -v
+                    } else {
+                        v
+                    }
+                }
+            });
+            let xv: [i8; 8] = std::array::from_fn(|_| rng.range_i32(-8, 7) as i8);
+            let ww = pack8_i4(&w);
+            let xw = pack8_i4(&xv);
+            let seq = int4_seq_mac(ww, xw);
+            let vc = int4_vc_mac(ww, xw);
+            assert_eq!(seq.acc, vc.acc, "value mismatch");
+            base_cycles += seq.cycles as u64;
+            vc_cycles += vc.cycles as u64;
+        }
+        table.row(&[
+            f2(x),
+            f2(base_cycles as f64 / vc_cycles as f64),
+            f2(vc_speedup_observed_n(x, 8)),
+            f2(vc_speedup_observed_n(x, 16)),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "the INT4 unit saturates at 8× (vs 4× for INT8) exactly as\n\
+         Section IV-D predicts; INT2 would saturate at 16×."
+    );
+}
+
+fn main() {
+    ablation_lookahead_width();
+    ablation_int4();
+}

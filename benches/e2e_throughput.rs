@@ -1,0 +1,63 @@
+//! End-to-end serving throughput — the L3 coordinator benchmark used by
+//! the §Perf pass: host wall-time to simulate a request batch (the
+//! simulator *is* our hot path), plus simulated device throughput.
+//!
+//! ```bash
+//! cargo bench --bench e2e_throughput
+//! ```
+
+use sparse_riscv::analysis::report::{f2, Table};
+use sparse_riscv::bench::harness::{bench_fn, BenchConfig};
+use sparse_riscv::coordinator::serve::{ServeOptions, Server};
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::models::builder::{apply_sparsity, random_input, ModelConfig};
+use sparse_riscv::models::zoo::build_model;
+use sparse_riscv::tensor::QTensor;
+use sparse_riscv::util::Pcg32;
+
+fn main() {
+    let cfg = ModelConfig { scale: 0.125, ..Default::default() };
+    let mut info = build_model("dscnn", &cfg).expect("model");
+    apply_sparsity(&mut info.graph, 0.5, 0.3);
+    let mut rng = Pcg32::new(77);
+    let reqs: Vec<QTensor> = (0..32)
+        .map(|_| random_input(info.input_shape.clone(), cfg.act_params(), &mut rng))
+        .collect();
+
+    let mut table = Table::new(
+        "serving throughput (32 requests, DSCNN @0.125, x_us=0.5 x_ss=0.3)",
+        &["design", "threads", "host wall s", "host inf/s", "sim inf/s @100MHz"],
+    );
+    for design in [DesignKind::BaselineSimd, DesignKind::Csa] {
+        for threads in [1usize, 4] {
+            let server = Server::new(
+                &info.graph,
+                design,
+                &ServeOptions { threads, clock_hz: 100_000_000, verify: false },
+            )
+            .expect("server");
+            let (_, m) = server.serve_batch(reqs.clone()).expect("serve");
+            table.row(&[
+                design.name().to_string(),
+                threads.to_string(),
+                format!("{:.3}", m.wall_seconds),
+                f2(reqs.len() as f64 / m.wall_seconds),
+                f2(1.0 / m.sim_latency.mean()),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+
+    // Single-layer hot-path micro-bench for profiling iterations.
+    let server =
+        Server::new(&info.graph, DesignKind::Csa, &ServeOptions::default()).expect("server");
+    let one = vec![reqs[0].clone()];
+    let r = bench_fn(
+        "single CSA inference (host wall)",
+        &BenchConfig { warmup: 2, iters: 8 },
+        || {
+            std::hint::black_box(server.serve_batch(one.clone()).unwrap());
+        },
+    );
+    println!("{}", r.render());
+}

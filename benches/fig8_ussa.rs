@@ -1,0 +1,93 @@
+//! Figure 8 — USSA: analytical vs observed speedup over element
+//! sparsity.
+//!
+//! Series:
+//! - `s_a = 4/c_a` and `s_o = 4/c_o` — the paper's closed forms
+//!   (Section IV-D), reproduced exactly by `analysis::speedup`;
+//! - `sim (mac-only)` — the cycle simulator restricted to MAC-unit
+//!   cycles (the quantity the paper's formulas describe): sampled IID
+//!   sparse weights through the real USSA CFU vs the 4-cycle sequential
+//!   baseline;
+//! - `sim (full loop)` — end-to-end VexRiscv-model cycles including loop
+//!   overhead (our added realism; dilutes the speedup as expected).
+//!
+//! ```bash
+//! cargo bench --bench fig8_ussa
+//! ```
+
+use sparse_riscv::analysis::report::{f2, Table};
+use sparse_riscv::analysis::speedup::{ussa_speedup_analytical, ussa_speedup_observed};
+use sparse_riscv::bench::harness::{bench_fn, BenchConfig};
+use sparse_riscv::cpu::CostModel;
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::kernels::lane::{prepare_lanes, run_lane};
+use sparse_riscv::sparsity::generator::gen_unstructured_sparse;
+use sparse_riscv::util::Pcg32;
+
+const LANES: usize = 64;
+const LANE_LEN: usize = 256;
+
+fn simulate(weights: &[i8], design: DesignKind, model: &CostModel) -> u64 {
+    let prep = prepare_lanes(weights, LANE_LEN, design).unwrap();
+    let mut cfu = sparse_riscv::cfu::AnyCfu::new(design, 128);
+    let mut counter = sparse_riscv::cpu::CycleCounter::new(model.clone());
+    let xs: Vec<i8> = (0..LANE_LEN).map(|i| (i % 251) as i8).collect();
+    for lane in 0..prep.lanes {
+        run_lane(
+            design,
+            &mut cfu,
+            prep.lane_words(lane),
+            |j| {
+                let p = j * 4;
+                (
+                    sparse_riscv::encoding::pack::pack4_i8(&[
+                        xs[p],
+                        xs[p + 1],
+                        xs[p + 2],
+                        xs[p + 3],
+                    ]),
+                    1,
+                    0,
+                )
+            },
+            0,
+            &mut counter,
+        )
+        .unwrap();
+    }
+    counter.cycles()
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Figure 8 — USSA speedup vs unstructured sparsity x",
+        &["x", "s_a (paper)", "s_o (paper)", "sim mac-only", "sim full-loop"],
+    );
+    let mut rng = Pcg32::new(0xF16_8);
+    for i in 0..=19 {
+        let x = i as f64 * 0.05;
+        let ws = gen_unstructured_sparse(LANES * LANE_LEN, x, &mut rng);
+        let mac = CostModel::mac_only();
+        let full = CostModel::vexriscv();
+        let base_mac = simulate(&ws, DesignKind::BaselineSequential, &mac);
+        let ussa_mac = simulate(&ws, DesignKind::Ussa, &mac);
+        let base_full = simulate(&ws, DesignKind::BaselineSequential, &full);
+        let ussa_full = simulate(&ws, DesignKind::Ussa, &full);
+        table.row(&[
+            f2(x),
+            f2(ussa_speedup_analytical(x.min(0.9999))),
+            f2(ussa_speedup_observed(x)),
+            f2(base_mac as f64 / ussa_mac as f64),
+            f2(base_full as f64 / ussa_full as f64),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // Harness wall-time for the hot path (perf tracking, §Perf).
+    let mut rng = Pcg32::new(1);
+    let ws = gen_unstructured_sparse(LANES * LANE_LEN, 0.75, &mut rng);
+    let r = bench_fn("ussa lane sweep (x=0.75, 16k weights)", &BenchConfig::default(), || {
+        std::hint::black_box(simulate(&ws, DesignKind::Ussa, &CostModel::vexriscv()));
+    });
+    println!("{}", r.render());
+}

@@ -1,0 +1,96 @@
+//! Table I — comparison with the state of the art.
+//!
+//! Published rows (IndexMAC, Lu et al.) are cited from their papers;
+//! our three designs' speedup ranges are *measured* here by sweeping
+//! each design over its target sparsity regime and taking the min–max
+//! end-to-end speedup, then printed next to the paper's claimed ranges.
+//!
+//! ```bash
+//! cargo bench --bench table1_sota
+//! ```
+
+use sparse_riscv::analysis::report::{f2, Table};
+use sparse_riscv::analysis::sota::{paper_our_rows, published_baselines};
+use sparse_riscv::config::experiment::{ExperimentConfig, SimOptions};
+use sparse_riscv::coordinator::runner::run_experiment;
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::models::builder::ModelConfig;
+
+fn measure_range(design: DesignKind, configs: &[(f64, f64)]) -> (f64, f64) {
+    // vgg16 at 0.25 has the longest lanes (up to 128 channels = 32
+    // blocks), matching the deep-model regime the paper's ranges
+    // summarize. The ranges are MAC-unit cycle ratios — the quantity
+    // Figures 8/9 call "observed speedup" — each design against the
+    // baseline it replaces (SSSA vs the 1-cycle SIMD unit, USSA/CSA vs
+    // the 4-cycle sequential unit).
+    let model_cfg = ModelConfig { scale: 0.25, ..Default::default() };
+    let mut lo = f64::INFINITY;
+    let mut hi = 0.0f64;
+    for &(x_us, x_ss) in configs {
+        let mk = |designs: Vec<DesignKind>| ExperimentConfig {
+            name: "tab1".into(),
+            model: "vgg16".into(),
+            designs,
+            x_us,
+            x_ss,
+            batch: 1,
+            sim: SimOptions { seed: 11, threads: 0, verify: false, clock_hz: 100_000_000 },
+        };
+        let res = run_experiment(&mk(vec![design]), &model_cfg).expect("experiment");
+        let base_design = match design {
+            DesignKind::Sssa => DesignKind::BaselineSimd,
+            _ => DesignKind::BaselineSequential,
+        };
+        let base =
+            run_experiment(&mk(vec![base_design]), &model_cfg).expect("experiment");
+        // USSA/CSA accelerate the MAC unit itself → MAC-cycle ratio
+        // (Fig 8's "observed"). SSSA's win is skipping whole loop
+        // iterations (its `inc_indvar` replaces the baseline `addi`) →
+        // end-to-end cycle ratio (Fig 9's "observed").
+        let s = if design == DesignKind::Sssa {
+            base.designs[0].total_cycles as f64 / res.designs[0].total_cycles as f64
+        } else {
+            base.designs[0].mac_cycles as f64 / res.designs[0].mac_cycles as f64
+        };
+        lo = lo.min(s);
+        hi = hi.max(s);
+    }
+    (lo, hi)
+}
+
+fn main() {
+    // Sparsity regimes per Table I: USSA "High" unstructured, SSSA "Low"
+    // block, CSA "Moderate" combined.
+    let ussa = measure_range(DesignKind::Ussa, &[(0.5, 0.0), (0.8, 0.0)]);
+    let sssa = measure_range(DesignKind::Sssa, &[(0.0, 0.5), (0.0, 0.75)]);
+    let csa = measure_range(DesignKind::Csa, &[(0.5, 0.3), (0.75, 0.6)]);
+
+    let mut t = Table::new(
+        "Table I — accelerating sparse DNNs: ours (measured) vs published",
+        &["method", "semi-str", "unstr", "pattern", "speedup paper", "speedup measured", "arch"],
+    );
+    let measured = [("Ours (USSA)", ussa), ("Ours (SSSA)", sssa), ("Ours (CSA)", csa)];
+    for (row, (_, m)) in paper_our_rows().iter().zip(measured.iter()) {
+        t.row(&[
+            row.method.to_string(),
+            if row.semi_structured { "yes" } else { "no" }.into(),
+            if row.unstructured { "yes" } else { "no" }.into(),
+            row.pattern.to_string(),
+            format!("{}–{}x", f2(row.speedup.0), f2(row.speedup.1)),
+            format!("{}–{}x", f2(m.0), f2(m.1)),
+            row.architecture.to_string(),
+        ]);
+    }
+    for row in published_baselines() {
+        t.row(&[
+            row.method.to_string(),
+            if row.semi_structured { "yes" } else { "no" }.into(),
+            if row.unstructured { "yes" } else { "no" }.into(),
+            row.pattern.to_string(),
+            format!("{}–{}x", f2(row.speedup.0), f2(row.speedup.1)),
+            "(published)".into(),
+            row.architecture.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,62 @@
+//! Table III — FPGA resource usage of the three CFU designs.
+//!
+//! Structural estimate (component inventory → LUT/FF/BRAM/DSP) printed
+//! against the paper's synthesized numbers for the Xilinx XC7A35T; the
+//! DSP counts must match exactly, LUT/FF land in the same order of
+//! magnitude (synthesis is heuristic — see DESIGN.md).
+//!
+//! ```bash
+//! cargo bench --bench table3_resources
+//! ```
+
+use sparse_riscv::analysis::report::{pct, Table};
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::resources::fpga::{estimate_cfu, inventory, paper_increment, BASELINE_SOC};
+
+fn main() {
+    let mut t = Table::new(
+        "Table III — FPGA resource increments over the baseline SoC",
+        &[
+            "design",
+            "LUTs est",
+            "LUTs paper",
+            "LUT% est",
+            "LUT% paper",
+            "FFs est",
+            "FFs paper",
+            "DSPs est",
+            "DSPs paper",
+            "BRAM",
+        ],
+    );
+    let paper_pct = [(DesignKind::Ussa, 0.0136), (DesignKind::Sssa, 0.0384), (DesignKind::Csa, 0.0439)];
+    for (design, lut_pct_paper) in paper_pct {
+        let est = estimate_cfu(design);
+        let paper = paper_increment(design).unwrap();
+        t.row(&[
+            design.name().to_string(),
+            est.luts.to_string(),
+            paper.luts.to_string(),
+            pct(est.luts as f64 / BASELINE_SOC.luts as f64),
+            pct(lut_pct_paper),
+            est.ffs.to_string(),
+            paper.ffs.to_string(),
+            est.dsps.to_string(),
+            paper.dsps.to_string(),
+            "0".to_string(),
+        ]);
+        assert_eq!(est.dsps, paper.dsps, "{design}: DSP estimate must match the paper");
+    }
+    print!("{}", t.render());
+
+    println!("\ncomponent inventories:");
+    for design in [DesignKind::Ussa, DesignKind::Sssa, DesignKind::Csa] {
+        let inv: Vec<String> =
+            inventory(design).iter().map(|(c, n)| format!("{n}x {c:?}")).collect();
+        println!("  {design}: {}", inv.join(", "));
+    }
+    println!(
+        "\nbaseline SoC (w/o CFU): {} LUTs, {} FFs, {} BRAMs, {} DSPs (XC7A35T)",
+        BASELINE_SOC.luts, BASELINE_SOC.ffs, BASELINE_SOC.brams, BASELINE_SOC.dsps
+    );
+}

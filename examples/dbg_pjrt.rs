@@ -1,0 +1,13 @@
+use sparse_riscv::config::value::Value;
+use sparse_riscv::runtime::pjrt::PjrtRuntime;
+fn main() -> sparse_riscv::Result<()> {
+    let doc = Value::parse(&std::fs::read_to_string("artifacts/dscnn_testset.json")?)?;
+    let scale = doc.get("input_scale")?.as_f64()? as f32;
+    let xq = doc.get("inputs")?.as_arr()?[0].as_i8_vec()?;
+    let x_f32: Vec<f32> = xq.iter().map(|&q| q as f32 * scale).collect();
+    let rt = PjrtRuntime::cpu()?;
+    let loaded = rt.load_hlo_text("artifacts/dscnn_int8.hlo.txt")?;
+    let outs = loaded.run_f32(&[(&x_f32, &[1, 49, 10, 4])])?;
+    println!("pjrt logits: {:?}", outs[0]);
+    Ok(())
+}

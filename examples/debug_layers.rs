@@ -1,0 +1,37 @@
+//! Dev utility: print per-layer activations of the imported model for
+//! cross-checking against the Python integer graph.
+
+use sparse_riscv::config::value::Value;
+use sparse_riscv::nn::graph::Layer;
+use sparse_riscv::runtime::model_io::import_graph_file;
+use sparse_riscv::tensor::quant::QuantParams;
+use sparse_riscv::tensor::{QTensor, Shape};
+
+fn main() -> sparse_riscv::Result<()> {
+    let (graph, shape) = import_graph_file("artifacts/dscnn_int8.json")?;
+    let doc = Value::parse(&std::fs::read_to_string("artifacts/dscnn_testset.json")?)?;
+    let scale = doc.get("input_scale")?.as_f64()? as f32;
+    let xq = doc.get("inputs")?.as_arr()?[0].as_i8_vec()?;
+    let dims: Vec<usize> = doc
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect::<sparse_riscv::Result<Vec<_>>>()?;
+    assert_eq!(&dims, shape.dims());
+    let mut cur = QTensor::new(Shape::new(&dims)?, xq, QuantParams::new(scale, 0)?)?;
+    for layer in &graph.layers {
+        cur = match layer {
+            Layer::Conv(op) => op.forward_ref(&cur)?,
+            Layer::Fc(op) => op.forward_ref(&cur)?,
+            Layer::GlobalAvgPool => sparse_riscv::nn::pooling::global_avg_pool(&cur)?,
+            Layer::MaxPool { k, stride } => {
+                sparse_riscv::nn::pooling::max_pool2d(&cur, *k, *stride)?
+            }
+            other => panic!("unhandled {}", other.label()),
+        };
+        let head: Vec<i8> = cur.data().iter().take(8).cloned().collect();
+        println!("{} {:?}", layer.label(), head);
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real (trained)
+//! small workload.
+//!
+//! 1. Load the JAX-trained, post-training-quantized DSCNN (keyword
+//!    spotting) exported by `make artifacts` — INT8 and INT7 variants —
+//!    plus its held-out test set.
+//! 2. Cross-check the Rust integer graph against the PJRT-executed HLO
+//!    artifact (the L2 graph with the L1 Pallas kernel inside): logits
+//!    must agree.
+//! 3. Evaluate Table II (INT8 vs INT7 accuracy) on the Rust side.
+//! 4. Run the paper's pipeline (Fig 2): prune → lookahead-encode →
+//!    simulate on every CFU design; report accuracy + cycles + speedups.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+
+use sparse_riscv::analysis::report::{f2, pct, Table};
+use sparse_riscv::config::value::Value;
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::models::builder::apply_sparsity;
+use sparse_riscv::nn::activation::argmax;
+use sparse_riscv::nn::graph::Graph;
+use sparse_riscv::runtime::model_io::import_graph_file;
+use sparse_riscv::runtime::pjrt::PjrtRuntime;
+use sparse_riscv::simulator::SimEngine;
+use sparse_riscv::tensor::quant::QuantParams;
+use sparse_riscv::tensor::{QTensor, Shape};
+
+struct TestSet {
+    inputs: Vec<Vec<i8>>,
+    labels: Vec<usize>,
+    shape: Shape,
+    input_scale: f32,
+}
+
+fn load_testset(path: &str) -> sparse_riscv::Result<TestSet> {
+    let doc = Value::parse(&std::fs::read_to_string(path)?)?;
+    let shape_dims: Vec<usize> = doc
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect::<sparse_riscv::Result<Vec<_>>>()?;
+    Ok(TestSet {
+        inputs: doc
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_i8_vec())
+            .collect::<sparse_riscv::Result<Vec<_>>>()?,
+        labels: doc
+            .get("labels")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<sparse_riscv::Result<Vec<_>>>()?,
+        shape: Shape::new(&shape_dims)?,
+        input_scale: doc.get("input_scale")?.as_f64()? as f32,
+    })
+}
+
+fn accuracy(graph: &Graph, ts: &TestSet, design: DesignKind, limit: usize)
+    -> sparse_riscv::Result<(f64, u64)> {
+    let engine = SimEngine::new(design);
+    let prepared = engine.prepare(graph)?;
+    let params = QuantParams::new(ts.input_scale, 0)?;
+    let mut correct = 0usize;
+    let mut cycles = 0u64;
+    let n = ts.inputs.len().min(limit);
+    for i in 0..n {
+        let input = QTensor::new(ts.shape.clone(), ts.inputs[i].clone(), params)?;
+        let report = engine.run(&prepared, &input)?;
+        cycles += report.total_cycles;
+        let pred = argmax(&report.output, graph.classes)?[0];
+        correct += (pred == ts.labels[i]) as usize;
+    }
+    Ok((correct as f64 / n as f64, cycles / n as u64))
+}
+
+fn main() -> sparse_riscv::Result<()> {
+    let dir = std::env::var("ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let (graph8, shape8) = import_graph_file(format!("{dir}/dscnn_int8.json"))?;
+    let (graph7, _) = import_graph_file(format!("{dir}/dscnn_int7.json"))?;
+    let ts = load_testset(&format!("{dir}/dscnn_testset.json"))?;
+    println!(
+        "loaded trained DSCNN: {} MAC layers, {} weights, test set n={}",
+        graph8.mac_layers(),
+        graph8.total_weights(),
+        ts.inputs.len()
+    );
+    assert_eq!(shape8, ts.shape);
+
+    // ---- (2) PJRT cross-check: rust integer graph vs JAX HLO artifact.
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let loaded = rt.load_hlo_text(format!("{dir}/dscnn_int8.hlo.txt"))?;
+    let head_scale = match graph8.layers.last().unwrap() {
+        sparse_riscv::nn::graph::Layer::Fc(op) => op.output_params.scale,
+        _ => panic!("expected fc head"),
+    };
+    let dims: Vec<i64> = ts.shape.dims().iter().map(|&d| d as i64).collect();
+    let mut max_abs_diff = 0.0f32;
+    let mut argmax_agree = 0usize;
+    let ncheck = 16.min(ts.inputs.len());
+    for i in 0..ncheck {
+        // f32 input that quantizes back to exactly the stored int8s.
+        let x_f32: Vec<f32> =
+            ts.inputs[i].iter().map(|&q| q as f32 * ts.input_scale).collect();
+        let outs = loaded.run_f32(&[(&x_f32, &dims)])?;
+        let jax_logits = &outs[0];
+        // Rust integer path.
+        let input = QTensor::new(
+            ts.shape.clone(),
+            ts.inputs[i].clone(),
+            QuantParams::new(ts.input_scale, 0)?,
+        )?;
+        let rust_q = graph8.forward_ref(&input)?;
+        let rust_logits: Vec<f32> =
+            rust_q.data().iter().map(|&q| q as f32 * head_scale).collect();
+        for (a, b) in jax_logits.iter().zip(&rust_logits) {
+            max_abs_diff = max_abs_diff.max((a - b).abs());
+        }
+        let jx = jax_logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let rx = argmax(&rust_q, graph8.classes)?[0];
+        argmax_agree += (jx == rx) as usize;
+    }
+    println!(
+        "PJRT vs Rust integer graph over {ncheck} inputs: max |Δlogit| = {max_abs_diff:.6}, argmax agreement {argmax_agree}/{ncheck}"
+    );
+    assert_eq!(argmax_agree, ncheck, "PJRT and Rust disagreed on predictions");
+
+    // ---- (3) Table II: INT8 vs INT7 accuracy (unpruned, baseline design).
+    let limit = 96;
+    let (acc8, _) = accuracy(&graph8, &ts, DesignKind::BaselineSimd, limit)?;
+    let (acc7, _) = accuracy(&graph7, &ts, DesignKind::Csa, limit)?;
+    let mut t2 = Table::new(
+        "Table II shape — INT8 vs INT7 accuracy (trained DSCNN, synthetic GSC)",
+        &["variant", "accuracy"],
+    );
+    t2.row(&["INT8 (baseline design)".into(), pct(acc8)]);
+    t2.row(&["INT7 (lookahead-encoded, CSA)".into(), pct(acc7)]);
+    print!("{}", t2.render());
+
+    // ---- (4) The co-design pipeline: prune → encode → accelerate.
+    // One-shot magnitude pruning without the paper's iterative
+    // fine-tuning, so ratios are kept mild; the speedups on this *tiny*
+    // model are also modest because its lanes are only 1–4 blocks long
+    // (in_c = 4/16) — the fig8–fig10 benches use full-depth lanes.
+    let mut pruned = graph7.clone();
+    apply_sparsity(&mut pruned, 0.4, 0.15);
+    let mut t = Table::new(
+        "pruned DSCNN (x_us=0.4, x_ss=0.15): accuracy & cycles per design",
+        &["design", "accuracy", "cycles/inf", "speedup-vs-simd", "speedup-vs-seq"],
+    );
+    let mut base_simd = 0u64;
+    let mut base_seq = 0u64;
+    for design in DesignKind::ALL {
+        let (acc, cyc) = accuracy(&pruned, &ts, design, limit)?;
+        match design {
+            DesignKind::BaselineSimd => base_simd = cyc,
+            DesignKind::BaselineSequential => base_seq = cyc,
+            _ => {}
+        }
+        t.row(&[
+            design.name().to_string(),
+            pct(acc),
+            cyc.to_string(),
+            if base_simd > 0 { f2(base_simd as f64 / cyc as f64) } else { "-".into() },
+            if base_seq > 0 { f2(base_seq as f64 / cyc as f64) } else { "-".into() },
+        ]);
+    }
+    print!("{}", t.render());
+    println!("e2e OK — record these numbers in EXPERIMENTS.md");
+    Ok(())
+}

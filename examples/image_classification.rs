@@ -1,0 +1,52 @@
+//! Image classification (ResNet-56 / VGG16, CIFAR-10 scenario): sweep
+//! sparsity configurations on one model and print per-design speedups —
+//! the per-model slice of Figure 10.
+//!
+//! ```bash
+//! cargo run --release --example image_classification -- [model] [scale]
+//! ```
+
+use sparse_riscv::analysis::report::{f2, pct, Table};
+use sparse_riscv::config::experiment::{ExperimentConfig, SimOptions};
+use sparse_riscv::coordinator::runner::run_experiment;
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::models::builder::ModelConfig;
+
+fn main() -> sparse_riscv::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "resnet56".to_string());
+    let scale: f64 = args.get(2).map(|s| s.parse().unwrap()).unwrap_or(0.125);
+    let model_cfg = ModelConfig { scale, ..Default::default() };
+
+    println!("image classification: {model} at scale {scale}");
+    let mut table = Table::new(
+        "sparsity sweep (speedups vs SIMD / sequential baselines)",
+        &[
+            "x_us", "x_ss", "elem-sparsity", "SSSA/simd", "USSA/seq", "CSA/seq", "CSA/simd",
+        ],
+    );
+    for (x_us, x_ss) in [(0.3, 0.2), (0.5, 0.3), (0.7, 0.5)] {
+        let cfg = ExperimentConfig {
+            name: format!("{model}-{x_us}-{x_ss}"),
+            model: model.clone(),
+            designs: vec![DesignKind::Sssa, DesignKind::Ussa, DesignKind::Csa],
+            x_us,
+            x_ss,
+            batch: 1,
+            sim: SimOptions { seed: 7, threads: 0, verify: false, clock_hz: 100_000_000 },
+        };
+        let res = run_experiment(&cfg, &model_cfg)?;
+        let get = |d: DesignKind| res.designs.iter().find(|r| r.design == d).unwrap();
+        table.row(&[
+            f2(x_us),
+            f2(x_ss),
+            pct(res.element_sparsity),
+            f2(get(DesignKind::Sssa).speedup_vs_simd),
+            f2(get(DesignKind::Ussa).speedup_vs_seq),
+            f2(get(DesignKind::Csa).speedup_vs_seq),
+            f2(get(DesignKind::Csa).speedup_vs_simd),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

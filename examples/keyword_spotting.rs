@@ -1,0 +1,67 @@
+//! Keyword spotting (DSCNN / Google-Speech-Commands scenario): serve a
+//! stream of spectrogram inference requests through the coordinator on
+//! every design and compare simulated latency/throughput.
+//!
+//! ```bash
+//! cargo run --release --example keyword_spotting -- [requests] [scale]
+//! ```
+
+use sparse_riscv::analysis::report::{f2, Table};
+use sparse_riscv::coordinator::serve::{ServeOptions, Server};
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::models::builder::{apply_sparsity, random_input, ModelConfig};
+use sparse_riscv::models::zoo::build_model;
+use sparse_riscv::tensor::QTensor;
+use sparse_riscv::util::Pcg32;
+
+fn main() -> sparse_riscv::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(16);
+    let scale: f64 = args.get(2).map(|s| s.parse().unwrap()).unwrap_or(0.25);
+
+    let cfg = ModelConfig { scale, ..Default::default() };
+    let mut info = build_model("dscnn", &cfg)?;
+    // Moderate combined sparsity — the regime Figure 10 reports.
+    apply_sparsity(&mut info.graph, 0.5, 0.3);
+    println!(
+        "DSCNN keyword spotting: scale {scale}, {} MAC layers, {} weights, {requests} requests",
+        info.graph.mac_layers(),
+        info.graph.total_weights()
+    );
+
+    let mut rng = Pcg32::new(99);
+    let reqs: Vec<QTensor> = (0..requests)
+        .map(|_| random_input(info.input_shape.clone(), cfg.act_params(), &mut rng))
+        .collect();
+
+    let mut table = Table::new(
+        "keyword spotting service (simulated 100 MHz SoC)",
+        &["design", "p50 latency", "p99 latency", "inf/s", "speedup", "host wall s"],
+    );
+    let mut base_lat = 0.0f64;
+    for design in [
+        DesignKind::BaselineSimd,
+        DesignKind::BaselineSequential,
+        DesignKind::Ussa,
+        DesignKind::Sssa,
+        DesignKind::Csa,
+    ] {
+        let server = Server::new(&info.graph, design, &ServeOptions::default())?;
+        let (preds, mut m) = server.serve_batch(reqs.clone())?;
+        assert_eq!(preds.len(), requests);
+        let mean_lat = m.sim_latency.mean();
+        if design == DesignKind::BaselineSimd {
+            base_lat = mean_lat;
+        }
+        table.row(&[
+            design.name().to_string(),
+            format!("{:.3} ms", m.sim_percentiles.percentile(50.0) * 1e3),
+            format!("{:.3} ms", m.sim_percentiles.percentile(99.0) * 1e3),
+            f2(1.0 / mean_lat),
+            f2(base_lat / mean_lat),
+            format!("{:.3}", m.wall_seconds),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Person detection (MobileNetV2 / Visual-Wake-Words scenario): the
+//! always-on TinyML use case — compare energy-proxy metrics (cycles and
+//! memory traffic) per inference across designs, plus a layer-level
+//! breakdown showing where the cycles go.
+//!
+//! ```bash
+//! cargo run --release --example person_detection -- [scale]
+//! ```
+
+use sparse_riscv::analysis::energy::EnergyModel;
+use sparse_riscv::analysis::report::{f2, pct, Table};
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::models::builder::{apply_sparsity, random_input, ModelConfig};
+use sparse_riscv::models::zoo::build_model;
+use sparse_riscv::simulator::SimEngine;
+use sparse_riscv::util::Pcg32;
+
+fn main() -> sparse_riscv::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let scale: f64 = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(0.125);
+    let cfg = ModelConfig { scale, ..Default::default() };
+    let mut info = build_model("mobilenetv2", &cfg)?;
+    apply_sparsity(&mut info.graph, 0.6, 0.4);
+    let mut rng = Pcg32::new(314);
+    let input = random_input(info.input_shape.clone(), cfg.act_params(), &mut rng);
+    println!(
+        "MobileNetV2 person detection: scale {scale}, {} MAC layers",
+        info.graph.mac_layers()
+    );
+
+    let mut table = Table::new(
+        "per-inference cost (energy proxies at 100 MHz)",
+        &["design", "cycles", "time", "MB loaded", "energy uJ", "speedup-vs-simd"],
+    );
+    let mut base = 0u64;
+    let mut csa_report = None;
+    for design in DesignKind::ALL {
+        let engine = SimEngine::new(design);
+        let prepared = engine.prepare(&info.graph)?;
+        let report = engine.run(&prepared, &input)?;
+        if design == DesignKind::BaselineSimd {
+            base = report.total_cycles;
+        }
+        let loaded: u64 = report.layers.iter().map(|l| l.loaded_bytes).sum();
+        let energy = EnergyModel::default().estimate(&report.counter);
+        table.row(&[
+            design.name().to_string(),
+            report.total_cycles.to_string(),
+            format!("{:.2} ms", report.seconds_at(100_000_000) * 1e3),
+            format!("{:.2}", loaded as f64 / 1e6),
+            format!("{:.1}", energy.total_uj()),
+            f2(base as f64 / report.total_cycles as f64),
+        ]);
+        if design == DesignKind::Csa {
+            csa_report = Some(report);
+        }
+    }
+    print!("{}", table.render());
+
+    // Layer breakdown for CSA: where do the cycles go?
+    let report = csa_report.unwrap();
+    let total = report.total_cycles.max(1);
+    let mut top: Vec<_> = report.layers.iter().collect();
+    top.sort_by_key(|l| std::cmp::Reverse(l.cycles));
+    let mut t = Table::new(
+        "CSA cycle breakdown (top 10 layers)",
+        &["layer", "cycles", "share", "weight sparsity"],
+    );
+    for l in top.iter().take(10) {
+        t.row(&[
+            l.label.clone(),
+            l.cycles.to_string(),
+            pct(l.cycles as f64 / total as f64),
+            pct(l.weight_sparsity),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

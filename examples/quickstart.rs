@@ -1,0 +1,100 @@
+//! Quickstart: encode a sparse weight tensor, run one convolution layer
+//! through all five CFU designs, and print cycle counts + speedups.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sparse_riscv::analysis::report::{f2, pct, Table};
+use sparse_riscv::cpu::CostModel;
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::kernels::PreparedConv;
+use sparse_riscv::nn::conv2d::{Conv2dOp, Padding};
+use sparse_riscv::sparsity::prune::prune_combined;
+use sparse_riscv::sparsity::stats::SparsityProfile;
+use sparse_riscv::tensor::quant::QuantParams;
+use sparse_riscv::tensor::{QTensor, Shape};
+use sparse_riscv::util::Pcg32;
+
+fn main() -> sparse_riscv::Result<()> {
+    // A 3×3 conv: 32 output channels over 32 input channels, 16×16 map.
+    let (out_c, in_c, k) = (32usize, 32usize, 3usize);
+    let mut rng = Pcg32::new(2026);
+    let mut weights: Vec<i8> = (0..out_c * k * k * in_c)
+        .map(|_| {
+            let w = rng.range_i32(-64, 63) as i8;
+            if w == 0 {
+                1
+            } else {
+                w
+            }
+        })
+        .collect();
+    // Prune: 40% of blocks zeroed (semi-structured) + 50% unstructured
+    // zeros inside surviving blocks — the combined pattern CSA targets.
+    prune_combined(&mut weights, in_c, 0.4, 0.5);
+    let profile = SparsityProfile::measure(&weights, in_c);
+    println!(
+        "weights: {} elements, element sparsity {}, block sparsity {}",
+        profile.elements,
+        pct(profile.element),
+        pct(profile.block)
+    );
+
+    let act = QuantParams::new(0.05, 0)?;
+    let op = Conv2dOp::new(
+        "quickstart",
+        weights,
+        vec![0; out_c],
+        out_c,
+        in_c,
+        k,
+        k,
+        1,
+        Padding::Same,
+        false,
+        act,
+        0.02,
+        act,
+        true,
+    )?;
+    let input_data: Vec<i8> =
+        (0..16 * 16 * in_c).map(|_| rng.range_i32(-128, 127) as i8).collect();
+    let input = QTensor::new(Shape::nhwc(1, 16, 16, in_c), input_data, act)?;
+
+    let mut table = Table::new(
+        "one conv layer, five designs (VexRiscv cost model)",
+        &["design", "cycles", "mac-cycles", "speedup-vs-simd", "speedup-vs-seq"],
+    );
+    let mut base_simd = 0u64;
+    let mut base_seq = 0u64;
+    let mut outputs: Vec<Vec<i8>> = Vec::new();
+    for design in DesignKind::ALL {
+        let prep = PreparedConv::new(&op, design)?;
+        let run = prep.run(&input, &CostModel::vexriscv())?;
+        // bit-exact vs the golden reference op
+        let reference = prep.reference_op().forward_ref(&input)?;
+        assert_eq!(run.output.data(), reference.data(), "{design} kernel mismatch");
+        outputs.push(run.output.data().to_vec());
+        let cycles = run.counter.cycles();
+        match design {
+            DesignKind::BaselineSimd => base_simd = cycles,
+            DesignKind::BaselineSequential => base_seq = cycles,
+            _ => {}
+        }
+        table.row(&[
+            design.name().to_string(),
+            cycles.to_string(),
+            run.counter.cfu_cycles().to_string(),
+            if base_simd > 0 { f2(base_simd as f64 / cycles as f64) } else { "-".into() },
+            if base_seq > 0 { f2(base_seq as f64 / cycles as f64) } else { "-".into() },
+        ]);
+    }
+    print!("{}", table.render());
+    // All designs computed the same INT7 network.
+    for o in &outputs[1..] {
+        assert_eq!(o, &outputs[0]);
+    }
+    println!("all five designs produced bit-identical outputs ✓");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time Python layer (L1 Pallas kernels + L2 JAX model + AOT).
+
+Nothing in this package runs at request time: ``make artifacts`` invokes
+``train.py`` and ``aot.py`` once, producing ``artifacts/*.hlo.txt`` and
+``artifacts/*.json`` which the Rust coordinator loads via PJRT.
+"""

@@ -1,0 +1,103 @@
+"""AOT: lower the quantized L2 model (with its L1 Pallas kernels) to HLO
+**text** for the Rust PJRT runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+(See /opt/xla-example/README.md.)
+
+Usage:  python -m compile.aot --out ../artifacts [--models dscnn,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import LayerSpec, QModel, forward_f32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def model_from_json(doc: dict) -> QModel:
+    layers = []
+    for ld in doc["layers"]:
+        kind = ld["kind"]
+        spec = LayerSpec(kind=kind)
+        if kind in ("conv", "fc"):
+            spec.name = ld["name"]
+            spec.weights = np.asarray(ld["weights"], np.int8)
+            spec.bias = np.asarray(ld["bias"], np.int32)
+            spec.relu = ld["relu"]
+            spec.input_scale = ld["input_scale"]
+            spec.input_zp = ld["input_zp"]
+            spec.weight_scale = ld["weight_scale"]
+            spec.output_scale = ld["output_scale"]
+            spec.output_zp = ld["output_zp"]
+        if kind == "conv":
+            spec.out_c, spec.in_c = ld["out_c"], ld["in_c"]
+            spec.kh, spec.kw = ld["kh"], ld["kw"]
+            spec.stride = ld["stride"]
+            spec.padding = ld["padding"]
+            spec.depthwise = ld["depthwise"]
+            spec.weights = spec.weights.reshape(-1)
+        if kind == "fc":
+            spec.out_c, spec.in_c = ld["out_n"], ld["in_n"]
+        if kind in ("maxpool", "avgpool"):
+            spec.k, spec.stride = ld["k"], ld["stride"]
+        layers.append(spec)
+    return QModel(
+        name=doc["name"],
+        classes=doc["classes"],
+        input_shape=tuple(doc["input_shape"]),
+        layers=layers,
+    )
+
+
+def lower_model(json_path: str, out_path: str) -> None:
+    with open(json_path) as f:
+        doc = json.load(f)
+    qmodel = model_from_json(doc)
+    in_scale = doc["input_scale"]
+    in_zp = doc.get("input_zp", 0)
+
+    def fn(x):
+        return forward_f32(qmodel, x, in_scale, in_zp)
+
+    spec = jax.ShapeDtypeStruct(qmodel.input_shape, jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"lowered {qmodel.name}: {len(text)} chars -> {out_path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="dscnn")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for m in args.models.split(","):
+        json_path = os.path.join(args.out, f"{m}_int8.json")
+        if not os.path.exists(json_path):
+            raise SystemExit(f"{json_path} missing — run train.py first")
+        lower_model(json_path, os.path.join(args.out, f"{m}_int8.hlo.txt"))
+        json7 = os.path.join(args.out, f"{m}_int7.json")
+        if os.path.exists(json7):
+            lower_model(json7, os.path.join(args.out, f"{m}_int7.hlo.txt"))
+
+
+if __name__ == "__main__":
+    main()

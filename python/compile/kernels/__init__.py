@@ -1,0 +1,1 @@
+"""L1 kernels: Pallas implementations + pure-jnp reference oracles."""

@@ -1,0 +1,156 @@
+"""L1 Pallas kernel: lookahead-encoded sparse quantized matmul.
+
+The paper's compute hot-spot — the blocked MAC over lookahead-encoded
+INT7 weights — adapted from the FPGA CFU to a tiled data-parallel
+kernel (DESIGN.md §Hardware-Adaptation):
+
+* the FPGA extracts each 7-bit weight from bits [7:1] of the encoded
+  byte; here the whole weight tile is decoded with one arithmetic
+  right-shift (`w_enc >> 1`) in VMEM;
+* the FPGA's `sssa_inc_indvar` *sequentially* skips runs of all-zero
+  blocks; on a vector/systolic machine the same sparsity is exploited by
+  *masking*: zero blocks contribute nothing to the MXU matmul, and the
+  companion `effective_cycles` kernel computes exactly the cycle count
+  the serialized FPGA unit would spend (asserted equal to the Rust
+  simulator's count in the cross-layer tests);
+* tiling: `BlockSpec` carves (TM × TK) input and (TN × TK) weight tiles
+  into VMEM and accumulates over the K grid axis, the HBM↔VMEM schedule
+  the paper expresses with its inner channel loop.
+
+Pallas runs with ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT client cannot execute (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: sized for ~(128·256 + 64·256 + 128·64) i32 words ≈ 140 KiB
+# of VMEM at the default — comfortably under the ~16 MiB/core budget;
+# see DESIGN.md §Perf for the footprint/utilization estimate.
+TILE_M = 128
+TILE_N = 64
+TILE_K = 256
+
+
+def _decode(w_enc):
+    """Bits [7:1] of each encoded byte, sign-extended (arithmetic >> 1)."""
+    return (w_enc >> 1).astype(jnp.int8)
+
+
+def _mac_kernel(x_ref, w_ref, o_ref, *, input_offset, nsteps, decode):
+    """One (TM, TN) output tile; grid axis 2 walks K in TILE_K steps."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32) + input_offset   # (TM, TK)
+    w_raw = w_ref[...]
+    w = (_decode(w_raw) if decode else w_raw).astype(jnp.int32)  # (TN, TK)
+    o_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def _pad_to(a, m_mult, k_mult, fill=0):
+    m, k = a.shape
+    pm = (-m) % m_mult
+    pk = (-k) % k_mult
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)), constant_values=fill)
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("input_offset", "decode"))
+def lookahead_qmatmul(x_q, w_enc, bias, input_offset: int = 0, decode: bool = True):
+    """``acc[m, n] = bias[n] + Σ_k decode(w_enc)[n, k] * (x[m, k] + off)``.
+
+    x_q: int8 [M, K]; w_enc: lookahead-encoded int8 [N, K]; bias: int32
+    [N]. Returns int32 [M, N]. Zero-padding K is safe: padded encoded
+    weights decode to 0 (0 >> 1 == 0) and padded inputs multiply by it.
+
+    ``decode=False`` runs the same tiled MAC over *plain* INT8 weights
+    (the baseline-design path, used by the INT8 Table-II variant).
+    """
+    m, k = x_q.shape
+    n, k2 = w_enc.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    assert bias.shape == (n,)
+    xp = _pad_to(x_q, TILE_M, TILE_K)
+    wp = _pad_to(w_enc, TILE_N, TILE_K)
+    mp, kp = xp.shape
+    np_, _ = wp.shape
+    grid = (mp // TILE_M, np_ // TILE_N, kp // TILE_K)
+    out = pl.pallas_call(
+        functools.partial(
+            _mac_kernel, input_offset=input_offset, nsteps=grid[2], decode=decode
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE_N, TILE_K), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n] + bias.astype(jnp.int32)[None, :]
+
+
+def _cycles_kernel(w_ref, o_ref):
+    """Per-lane effective CSA MAC cycles for one weight tile.
+
+    Reproduces the FPGA while-loop walk *exactly*, vectorized across
+    lanes: per lane, the next-visit pointer hops `1 + skip` blocks, a
+    visited block costs ``max(1, #nonzero)`` MAC cycles, and skip
+    counters saturate at 15 (the 4-bit lookahead field) — bit-identical
+    to the Rust cycle simulator (asserted in the cross-layer tests).
+    """
+    w = _decode(w_ref[...])                        # (N, K)
+    nlanes, k = w.shape
+    nblocks = k // 4
+    blocks = w.reshape(nlanes, nblocks, 4)
+    nz = jnp.sum(blocks != 0, axis=2).astype(jnp.int32)   # (N, B)
+    zero = nz == 0
+    # Suffix zero-run lengths: run[b] = consecutive zero blocks from b.
+    run0 = jnp.zeros((nlanes, nblocks + 1), jnp.int32)
+
+    def suffix(i, run):
+        b = nblocks - 1 - i
+        v = jnp.where(zero[:, b], run[:, b + 1] + 1, 0)
+        return run.at[:, b].set(v)
+
+    run = jax.lax.fori_loop(0, nblocks, suffix, run0)
+    # skip[b] = min(15, zero blocks immediately after b) — Algorithm 1.
+    skip = jnp.minimum(15, run[:, 1:])
+
+    def walk(b, state):
+        cycles, nxt = state
+        visit = nxt == b
+        cycles = cycles + jnp.where(visit, jnp.maximum(nz[:, b], 1), 0)
+        nxt = jnp.where(visit, b + 1 + skip[:, b], nxt)
+        return cycles, nxt
+
+    init = (jnp.zeros(nlanes, jnp.int32), jnp.zeros(nlanes, jnp.int32))
+    cycles, _ = jax.lax.fori_loop(0, nblocks, walk, init)
+    o_ref[...] = cycles
+
+
+@jax.jit
+def effective_cycles(w_enc):
+    """CSA variable-cycle MAC cycles per output lane (int32 [N]).
+
+    Matches the Rust cycle simulator exactly when no all-zero run
+    exceeds the 15-block lookahead limit (asserted in tests).
+    """
+    n, k = w_enc.shape
+    assert k % 4 == 0
+    return pl.pallas_call(
+        _cycles_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(w_enc)

@@ -1,0 +1,186 @@
+"""Pure-jnp/numpy reference oracles for the L1 kernels.
+
+These mirror the Rust implementations bit-for-bit:
+
+- the lookahead encoding of Algorithms 1 & 2 (`encode_lanes`,
+  `decode_weights`, `decode_skip`) — cross-checked against the paper's
+  Figure 5/6 worked example in the tests, like ``rust/src/encoding``;
+- TFLite/gemmlowp requantization (`srdhm`, `rounding_divide_by_pot`,
+  `quantize_multiplier`, `requantize`) — the same arithmetic as
+  ``rust/src/tensor/quant.rs``;
+- the quantized blocked matmul oracle (`qmatmul_ref`) the Pallas kernel
+  is validated against.
+"""
+
+import numpy as np
+
+BLOCK = 4
+MAX_SKIP_BLOCKS = 15
+INT7_MIN, INT7_MAX = -64, 63
+
+
+# --------------------------------------------------------------------------
+# Lookahead encoding (Algorithms 1 & 2)
+# --------------------------------------------------------------------------
+
+def clamp_int7(w: np.ndarray) -> np.ndarray:
+    """Clamp INT8 weights into the paper's INT7 dynamic range [-64, 63]."""
+    return np.clip(w, INT7_MIN, INT7_MAX).astype(np.int8)
+
+
+def skip_of_block(row: np.ndarray, block_idx: int) -> int:
+    """Number of consecutive all-zero blocks after ``block_idx`` (≤ 15)."""
+    c = len(row)
+    i_nxt = (block_idx + 1) * BLOCK
+    skip = 0
+    while i_nxt + BLOCK <= c and skip < MAX_SKIP_BLOCKS:
+        if np.all(row[i_nxt:i_nxt + BLOCK] == 0):
+            skip += 1
+            i_nxt += BLOCK
+        else:
+            break
+    return skip
+
+
+def encode_last_bits(block: np.ndarray, skip_blocks: int) -> np.ndarray:
+    """Algorithm 2: embed the 4-bit skip counter into a 4-weight block."""
+    assert block.shape == (BLOCK,)
+    assert 0 <= skip_blocks <= MAX_SKIP_BLOCKS
+    out = np.empty(BLOCK, dtype=np.int8)
+    for i in range(BLOCK):
+        w = int(block[i])
+        assert INT7_MIN <= w <= INT7_MAX, f"weight {w} outside INT7"
+        bits = w & 0xFF
+        sign_bit = (bits >> 7) & 0b1
+        skip_bit = (skip_blocks >> i) & 0b1
+        v = bits & 0b10111111
+        v = (v << 1) & 0b01111110
+        v |= skip_bit
+        v |= sign_bit << 7
+        out[i] = np.int8(np.uint8(v).view(np.int8))
+    return out
+
+
+def encode_lanes(weights: np.ndarray, lane_len: int) -> np.ndarray:
+    """Algorithm 1 over rows ("lanes") of length ``lane_len``."""
+    assert lane_len > 0 and lane_len % BLOCK == 0
+    flat = np.asarray(weights, dtype=np.int8).reshape(-1)
+    assert flat.size % lane_len == 0
+    out = flat.copy()
+    blocks_per_lane = lane_len // BLOCK
+    for lane_start in range(0, flat.size, lane_len):
+        lane = flat[lane_start:lane_start + lane_len]
+        skips = [skip_of_block(lane, b) for b in range(blocks_per_lane)]
+        for b in range(blocks_per_lane):
+            blk = lane[b * BLOCK:(b + 1) * BLOCK]
+            s = lane_start + b * BLOCK
+            out[s:s + BLOCK] = encode_last_bits(blk, skips[b])
+    return out.reshape(np.asarray(weights).shape)
+
+
+def decode_weights(encoded: np.ndarray) -> np.ndarray:
+    """Hardware weight decode: arithmetic shift right by one (bits 7:1)."""
+    return (np.asarray(encoded, dtype=np.int8) >> 1).astype(np.int8)
+
+
+def decode_skip(block: np.ndarray) -> int:
+    """Hardware skip decode: gather the LSB of each of the 4 bytes."""
+    b = np.asarray(block, dtype=np.int8).view(np.uint8)
+    return int((b[0] & 1) | ((b[1] & 1) << 1) | ((b[2] & 1) << 2) | ((b[3] & 1) << 3))
+
+
+# --------------------------------------------------------------------------
+# gemmlowp / TFLite requantization (mirrors rust/src/tensor/quant.rs)
+# --------------------------------------------------------------------------
+
+def srdhm(a: np.ndarray, b: int) -> np.ndarray:
+    """SaturatingRoundingDoublingHighMul, vectorized over ``a``."""
+    a64 = np.asarray(a, dtype=np.int64)
+    ab = a64 * np.int64(b)
+    nudge = np.where(ab >= 0, np.int64(1 << 30), np.int64(1 - (1 << 30)))
+    # C-style truncating division (exact, in integers).
+    q = ab + nudge
+    res = np.where(q >= 0, q // (1 << 31), -((-q) // (1 << 31)))
+    overflow = (a64 == np.int64(-(1 << 31))) & (np.int64(b) == np.int64(-(1 << 31)))
+    return np.where(overflow, np.int64((1 << 31) - 1), res).astype(np.int64)
+
+
+def rounding_divide_by_pot(x: np.ndarray, exponent: int) -> np.ndarray:
+    """gemmlowp RoundingDivideByPOT (vectorized)."""
+    x = np.asarray(x, dtype=np.int64)
+    if exponent == 0:
+        return x
+    mask = np.int64((1 << exponent) - 1)
+    remainder = x & mask
+    threshold = (mask >> 1) + np.where(x < 0, 1, 0)
+    return (x >> exponent) + np.where(remainder > threshold, 1, 0)
+
+
+def quantize_multiplier(real: float) -> tuple[int, int]:
+    """Decompose a positive real multiplier into (Q31 multiplier, shift)."""
+    assert real > 0 and np.isfinite(real)
+    e = int(np.floor(np.log2(real))) + 1
+    m = real / (2.0 ** e)
+    q = int(round(m * (1 << 31)))
+    if q == (1 << 31):
+        q //= 2
+        e += 1
+    assert e <= 30, f"multiplier too large: {real}"
+    if e < -31:
+        return 0, 0
+    return q, e
+
+
+def multiply_by_quantized_multiplier(x: np.ndarray, mult: int, shift: int) -> np.ndarray:
+    """TFLite MultiplyByQuantizedMultiplier (vectorized)."""
+    left = shift if shift > 0 else 0
+    right = 0 if shift > 0 else -shift
+    shifted = np.asarray(x, dtype=np.int64) << left
+    return rounding_divide_by_pot(srdhm(shifted, mult), right)
+
+
+def requantize(acc: np.ndarray, mult: int, shift: int, zp: int,
+               qmin: int = -128, qmax: int = 127) -> np.ndarray:
+    """i32 accumulator → i8 activation."""
+    scaled = multiply_by_quantized_multiplier(acc, mult, shift) + zp
+    return np.clip(scaled, qmin, qmax).astype(np.int8)
+
+
+# --------------------------------------------------------------------------
+# Quantized matmul oracle
+# --------------------------------------------------------------------------
+
+def qmatmul_ref(x_q: np.ndarray, w_q: np.ndarray, bias: np.ndarray,
+                input_offset: int) -> np.ndarray:
+    """``acc[m, n] = bias[n] + Σ_k w[n, k] * (x[m, k] + input_offset)``.
+
+    x_q: int8 [M, K]; w_q: int8 [N, K]; bias: int32 [N]. Returns int32.
+    """
+    x = x_q.astype(np.int32) + np.int32(input_offset)
+    w = w_q.astype(np.int32)
+    return x @ w.T + bias.astype(np.int32)[None, :]
+
+
+def lookahead_qmatmul_ref(x_q: np.ndarray, w_enc: np.ndarray, bias: np.ndarray,
+                          input_offset: int) -> np.ndarray:
+    """Same contract but weights arrive lookahead-encoded (int8 [N, K])."""
+    return qmatmul_ref(x_q, decode_weights(w_enc), bias, input_offset)
+
+
+def effective_mac_cycles(w: np.ndarray) -> int:
+    """FPGA-unit cycle count of the CSA variable-cycle MAC over decoded
+    weights ``w`` [N, K]: per visited block max(1, #nonzero) — with fully
+    zero blocks skipped by the lookahead walk (leading zero blocks are
+    visited, matching the Rust kernel walk)."""
+    w = np.asarray(w)
+    total = 0
+    for row in w.reshape(-1, w.shape[-1]):
+        nblocks = len(row) // BLOCK
+        skips = [skip_of_block(row, b) for b in range(nblocks)]
+        b = 0
+        while b < nblocks:
+            blk = row[b * BLOCK:(b + 1) * BLOCK]
+            nz = int(np.count_nonzero(blk))
+            total += max(1, nz)
+            b += 1 + skips[b]
+    return total

@@ -1,0 +1,307 @@
+"""L2: quantized DNN inference graphs in JAX (bit-exact TFLite INT8).
+
+The forward pass is *integer* arithmetic end to end — i32 accumulation,
+gemmlowp requantization in i64 — mirroring ``rust/src/nn`` bit for bit,
+so the PJRT-executed artifact and the Rust cycle simulator produce
+identical activations for identical weights (asserted by the e2e
+example). Convolutions are lowered to im2col + the L1 Pallas
+``lookahead_qmatmul`` kernel; weights are lookahead-encoded per input-
+channel lane at build time (Algorithm 1), exactly like the Rust
+``PreparedConv``.
+
+Requires ``jax_enable_x64`` (the requantizer needs 62-bit products).
+"""
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import ref
+from .kernels.lookahead_mac import lookahead_qmatmul
+
+
+# --------------------------------------------------------------------------
+# Quantization helpers (jnp, mirroring ref.py / rust quant.rs)
+# --------------------------------------------------------------------------
+
+def srdhm_jnp(a, b: int):
+    a64 = a.astype(jnp.int64)
+    ab = a64 * jnp.int64(b)
+    nudge = jnp.where(ab >= 0, jnp.int64(1 << 30), jnp.int64(1 - (1 << 30)))
+    q = ab + nudge
+    div = jnp.int64(1 << 31)
+    return jnp.where(q >= 0, q // div, -((-q) // div))
+
+
+def rounding_divide_by_pot_jnp(x, exponent: int):
+    if exponent == 0:
+        return x
+    mask = jnp.int64((1 << exponent) - 1)
+    remainder = x & mask
+    threshold = (mask >> 1) + jnp.where(x < 0, 1, 0).astype(jnp.int64)
+    return (x >> exponent) + jnp.where(remainder > threshold, 1, 0).astype(jnp.int64)
+
+
+def requantize_jnp(acc, mult: int, shift: int, zp: int, qmin: int = -128, qmax: int = 127):
+    left = shift if shift > 0 else 0
+    right = 0 if shift > 0 else -shift
+    shifted = acc.astype(jnp.int64) << left
+    scaled = rounding_divide_by_pot_jnp(srdhm_jnp(shifted, mult), right) + zp
+    return jnp.clip(scaled, qmin, qmax).astype(jnp.int8)
+
+
+def quantize_input_jnp(x_f32, scale: float, zp: int):
+    q = jnp.round(x_f32 / scale).astype(jnp.int64) + zp
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+# --------------------------------------------------------------------------
+# Layer specs (the JSON-interchange schema shared with rust model_io)
+# --------------------------------------------------------------------------
+
+@dataclass
+class LayerSpec:
+    """One layer; mirrors rust ``runtime::model_io`` JSON schema."""
+
+    kind: str  # conv | fc | maxpool | avgpool | gap | relu
+    name: str = ""
+    weights: Optional[np.ndarray] = None  # int8
+    bias: Optional[np.ndarray] = None  # int32
+    out_c: int = 0
+    in_c: int = 0
+    kh: int = 0
+    kw: int = 0
+    stride: int = 1
+    padding: str = "same"
+    depthwise: bool = False
+    relu: bool = False
+    k: int = 0  # pooling window
+    input_scale: float = 1.0
+    input_zp: int = 0
+    weight_scale: float = 1.0
+    output_scale: float = 1.0
+    output_zp: int = 0
+
+    def requant_params(self):
+        mult, shift = ref.quantize_multiplier(
+            float(self.input_scale) * float(self.weight_scale) / float(self.output_scale)
+        )
+        qmin = max(-128, self.output_zp) if self.relu else -128
+        return mult, shift, qmin
+
+    def to_json_dict(self):
+        d = {"kind": self.kind}
+        if self.kind in ("conv", "fc"):
+            d.update(
+                name=self.name,
+                weights=[int(w) for w in self.weights.reshape(-1)],
+                bias=[int(b) for b in self.bias],
+                relu=self.relu,
+                input_scale=float(self.input_scale),
+                input_zp=int(self.input_zp),
+                weight_scale=float(self.weight_scale),
+                output_scale=float(self.output_scale),
+                output_zp=int(self.output_zp),
+            )
+        if self.kind == "conv":
+            d.update(
+                out_c=self.out_c, in_c=self.in_c, kh=self.kh, kw=self.kw,
+                stride=self.stride, padding=self.padding, depthwise=self.depthwise,
+            )
+        if self.kind == "fc":
+            d.update(out_n=self.out_c, in_n=self.in_c)
+        if self.kind in ("maxpool", "avgpool"):
+            d.update(k=self.k, stride=self.stride)
+        return d
+
+
+@dataclass
+class QModel:
+    """A quantized model: ordered layer specs + metadata."""
+
+    name: str
+    classes: int
+    input_shape: tuple  # (1, H, W, C)
+    layers: list = field(default_factory=list)
+
+    def to_json_dict(self):
+        return {
+            "name": self.name,
+            "classes": self.classes,
+            "input_shape": list(self.input_shape),
+            "layers": [l.to_json_dict() for l in self.layers],
+        }
+
+
+# --------------------------------------------------------------------------
+# Integer forward pass
+# --------------------------------------------------------------------------
+
+def _same_pads(in_h, in_w, kh, kw, stride):
+    out_h = -(-in_h // stride)
+    out_w = -(-in_w // stride)
+    pad_h = max((out_h - 1) * stride + kh - in_h, 0) // 2
+    pad_w = max((out_w - 1) * stride + kw - in_w, 0) // 2
+    return out_h, out_w, pad_h, pad_w
+
+
+def _im2col(x_q, kh, kw, stride, padding, input_zp):
+    """x_q int8 [1, H, W, C] → patches int8 [OH*OW, KH*KW*C]."""
+    _, h, w, c = x_q.shape
+    if padding == "same":
+        oh, ow, ph, pw = _same_pads(h, w, kh, kw, stride)
+        x_q = jnp.pad(
+            x_q,
+            ((0, 0), (ph, kh - 1), (pw, kw - 1), (0, 0)),
+            constant_values=np.int8(input_zp),
+        )
+    else:
+        oh = (h - kh) // stride + 1
+        ow = (w - kw) // stride + 1
+    rows = []
+    for ki in range(kh):
+        for kj in range(kw):
+            sl = x_q[0, ki:ki + oh * stride:stride, kj:kj + ow * stride:stride, :]
+            rows.append(sl.reshape(oh * ow, c))
+    patches = jnp.concatenate(rows, axis=1)  # [OH*OW, KH*KW*C]
+    return patches, oh, ow
+
+
+def _is_int7(w: np.ndarray) -> bool:
+    return bool(w.min() >= -64 and w.max() <= 63)
+
+
+def _encode_conv_weights(spec: LayerSpec) -> np.ndarray:
+    """Lookahead-encode per input-channel lane (Algorithm 1), then
+    arrange as [out, KH*KW*C] rows matching the im2col K-order."""
+    w = spec.weights.reshape(spec.out_c, spec.kh * spec.kw, spec.in_c)
+    enc = ref.encode_lanes(w.reshape(-1, spec.in_c), spec.in_c)
+    return enc.reshape(spec.out_c, spec.kh * spec.kw * spec.in_c)
+
+
+def conv_int(spec: LayerSpec, x_q):
+    """Quantized conv via im2col + the Pallas MAC kernel.
+
+    INT7 weights take the lookahead-encoded path (the SSSA/CSA data
+    layout); INT8 weights take the plain path (the baseline design, which
+    cannot spare the encoding bit)."""
+    patches, oh, ow = _im2col(
+        x_q, spec.kh, spec.kw, spec.stride, spec.padding, spec.input_zp
+    )
+    w = spec.weights.reshape(spec.out_c, -1)
+    if _is_int7(w):
+        w_op, decode = jnp.asarray(_encode_conv_weights(spec)), True
+    else:
+        w_op, decode = jnp.asarray(w), False
+    acc = lookahead_qmatmul(
+        patches, w_op, jnp.asarray(spec.bias, jnp.int32),
+        input_offset=-spec.input_zp, decode=decode,
+    )
+    mult, shift, qmin = spec.requant_params()
+    out = requantize_jnp(acc, mult, shift, spec.output_zp, qmin=qmin)
+    return out.reshape(1, oh, ow, spec.out_c)
+
+
+def dwconv_int(spec: LayerSpec, x_q):
+    """Depthwise conv (vectorized jnp; not the hot path)."""
+    patches, oh, ow = _im2col(
+        x_q, spec.kh, spec.kw, spec.stride, spec.padding, spec.input_zp
+    )
+    c = spec.out_c
+    taps = spec.kh * spec.kw
+    p = patches.reshape(oh * ow, taps, c).astype(jnp.int32) + (-spec.input_zp)
+    w = jnp.asarray(spec.weights, jnp.int32).reshape(c, taps)  # [C, taps]
+    acc = jnp.einsum("ptc,ct->pc", p, w) + jnp.asarray(spec.bias, jnp.int32)[None, :]
+    mult, shift, qmin = spec.requant_params()
+    out = requantize_jnp(acc, mult, shift, spec.output_zp, qmin=qmin)
+    return out.reshape(1, oh, ow, c)
+
+
+def fc_int(spec: LayerSpec, x_q):
+    flat = x_q.reshape(1, -1)
+    w = spec.weights.reshape(spec.out_c, spec.in_c)
+    if _is_int7(w):
+        w_op, decode = jnp.asarray(ref.encode_lanes(w, spec.in_c)), True
+    else:
+        w_op, decode = jnp.asarray(w), False
+    acc = lookahead_qmatmul(
+        flat, w_op, jnp.asarray(spec.bias, jnp.int32),
+        input_offset=-spec.input_zp, decode=decode,
+    )
+    mult, shift, qmin = spec.requant_params()
+    return requantize_jnp(acc, mult, shift, spec.output_zp, qmin=qmin)
+
+
+def _trunc_div(a, b: int):
+    return jnp.where(a >= 0, a // b, -((-a) // b))
+
+
+def pool_int(spec: LayerSpec, x_q, kind: str):
+    _, h, w, c = x_q.shape
+    k, s = spec.k, spec.stride
+    oh = (h - k) // s + 1
+    ow = (w - k) // s + 1
+    windows = []
+    for ki in range(k):
+        for kj in range(k):
+            windows.append(x_q[0, ki:ki + oh * s:s, kj:kj + ow * s:s, :])
+    stack = jnp.stack(windows)  # [k*k, OH, OW, C]
+    if kind == "max":
+        out = jnp.max(stack, axis=0)
+    else:
+        ssum = jnp.sum(stack.astype(jnp.int32), axis=0)
+        cnt = k * k
+        avg = jnp.where(
+            ssum >= 0, (ssum + cnt // 2) // cnt, _trunc_div(ssum - cnt // 2, cnt)
+        )
+        out = jnp.clip(avg, -128, 127).astype(jnp.int8)
+    return out.reshape(1, oh, ow, c)
+
+
+def gap_int(x_q):
+    _, h, w, c = x_q.shape
+    ssum = jnp.sum(x_q.astype(jnp.int32), axis=(1, 2)).reshape(c)
+    cnt = h * w
+    avg = jnp.where(ssum >= 0, (ssum + cnt // 2) // cnt, _trunc_div(ssum - cnt // 2, cnt))
+    return jnp.clip(avg, -128, 127).astype(jnp.int8).reshape(1, 1, 1, c)
+
+
+def forward_int8(model: QModel, x_q):
+    """Integer forward: int8 NHWC in → int8 logits [1, classes]."""
+    cur = x_q
+    for spec in model.layers:
+        if spec.kind == "conv" and not spec.depthwise:
+            cur = conv_int(spec, cur)
+        elif spec.kind == "conv":
+            cur = dwconv_int(spec, cur)
+        elif spec.kind == "fc":
+            cur = fc_int(spec, cur)
+        elif spec.kind == "maxpool":
+            cur = pool_int(spec, cur, "max")
+        elif spec.kind == "avgpool":
+            cur = pool_int(spec, cur, "avg")
+        elif spec.kind == "gap":
+            cur = gap_int(cur)
+        elif spec.kind == "relu":
+            cur = jnp.maximum(cur, 0)
+        else:
+            raise ValueError(f"unknown layer kind {spec.kind}")
+    return cur.reshape(1, -1)
+
+
+def forward_f32(model: QModel, x_f32, input_scale: float, input_zp: int = 0):
+    """f32 input → quantize → integer graph → dequantized f32 logits.
+
+    This is the function ``aot.py`` lowers to HLO for the Rust runtime.
+    """
+    x_q = quantize_input_jnp(x_f32, input_scale, input_zp)
+    logits_q = forward_int8(model, x_q)
+    head = model.layers[-1]
+    return (
+        (logits_q.astype(jnp.float32) - head.output_zp) * head.output_scale,
+    )

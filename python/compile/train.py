@@ -1,0 +1,344 @@
+"""Train tiny analogues of the paper's three Table-II models on
+synthetic datasets, post-training-quantize them to INT8 *and* INT7, and
+export weights + test sets for the Rust layer.
+
+Substitution note (DESIGN.md): the paper trains ResNet-56/CIFAR-10,
+MobileNetV2/VWW and DSCNN/GSC. We have none of those datasets offline,
+so each model gets a deterministic synthetic classification task with
+the same input geometry and layer types; Table II's claim — that
+sacrificing the post-sign bit (INT7) costs no accuracy — is a property
+of quantization dynamics that these tasks exercise equally.
+
+Outputs (under artifacts/):
+  <model>_int8.json / <model>_int7.json   — rust model_io schema
+  <model>_testset.json                    — int8 inputs + labels + scale
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+
+from .model import LayerSpec, QModel, forward_int8
+
+SEED = 20260710
+TRAIN_N = 512
+TEST_N = 256
+STEPS = 400
+LR = 0.05
+
+
+# --------------------------------------------------------------------------
+# Synthetic datasets: smooth class prototypes + noise
+# --------------------------------------------------------------------------
+
+def make_dataset(rng, n, h, w, c, classes, noise=0.5):
+    """Gaussian class prototypes (low-frequency) + white noise."""
+    # Smooth prototypes: random coarse grids upsampled bilinearly.
+    coarse = rng.normal(size=(classes, max(2, h // 4), max(2, w // 4), c))
+    protos = np.stack([
+        np.stack([
+            np.array(jax.image.resize(jnp.asarray(coarse[k, :, :, ch]), (h, w), "linear"))
+            for ch in range(c)
+        ], axis=-1)
+        for k in range(classes)
+    ])
+    protos /= np.abs(protos).max() + 1e-9
+    labels = rng.integers(0, classes, n)
+    xs = protos[labels] + noise * rng.normal(size=(n, h, w, c))
+    return xs.astype(np.float32), labels.astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# Float model (trained): conv stacks expressed as parameter pytrees
+# --------------------------------------------------------------------------
+
+def arch_for(model_name):
+    """Layer schedule per tiny model (all channels multiples of 4)."""
+    if model_name == "dscnn":
+        # GSC-like 49x10 spectrogram, stem 10x4 s2 + ds block, 12 classes.
+        return dict(
+            input=(49, 10, 4), classes=12,
+            layers=[
+                ("conv", dict(out=16, kh=10, kw=4, stride=2)),
+                ("dw", dict(kh=3, kw=3, stride=1)),
+                ("conv", dict(out=16, kh=1, kw=1, stride=1)),
+                ("gap", {}),
+                ("fc", dict(out=12)),
+            ],
+        )
+    if model_name == "resnet56":
+        # CIFAR-like 32x32 image classifier (plain conv net analogue).
+        return dict(
+            input=(32, 32, 4), classes=10,
+            layers=[
+                ("conv", dict(out=16, kh=3, kw=3, stride=1)),
+                ("maxpool", dict(k=2, stride=2)),
+                ("conv", dict(out=16, kh=3, kw=3, stride=1)),
+                ("gap", {}),
+                ("fc", dict(out=10)),
+            ],
+        )
+    if model_name == "mobilenetv2":
+        # VWW-like 32x32 person detection (2 classes, padded to 4).
+        return dict(
+            input=(32, 32, 4), classes=4,
+            layers=[
+                ("conv", dict(out=16, kh=3, kw=3, stride=2)),
+                ("dw", dict(kh=3, kw=3, stride=1)),
+                ("conv", dict(out=16, kh=1, kw=1, stride=1)),
+                ("gap", {}),
+                ("fc", dict(out=4)),
+            ],
+        )
+    raise ValueError(model_name)
+
+
+def init_params(rng, arch):
+    params = []
+    c_in = arch["input"][2]
+    for kind, cfg in arch["layers"]:
+        if kind == "conv":
+            fan_in = cfg["kh"] * cfg["kw"] * c_in
+            w = rng.normal(size=(cfg["out"], cfg["kh"], cfg["kw"], c_in)) / np.sqrt(fan_in)
+            params.append((jnp.asarray(w, jnp.float32), jnp.zeros(cfg["out"], jnp.float32)))
+            c_in = cfg["out"]
+        elif kind == "dw":
+            fan_in = cfg["kh"] * cfg["kw"]
+            w = rng.normal(size=(c_in, cfg["kh"], cfg["kw"])) / np.sqrt(fan_in)
+            params.append((jnp.asarray(w, jnp.float32), jnp.zeros(c_in, jnp.float32)))
+        elif kind == "fc":
+            # in features resolved at trace time (gap → c_in)
+            w = rng.normal(size=(cfg["out"], c_in)) / np.sqrt(c_in)
+            params.append((jnp.asarray(w, jnp.float32), jnp.zeros(cfg["out"], jnp.float32)))
+            c_in = cfg["out"]
+        else:
+            params.append(None)
+    return params
+
+
+def _same_pad(x, kh, kw, stride):
+    h, w = x.shape[1], x.shape[2]
+    oh, ow = -(-h // stride), -(-w // stride)
+    ph = max((oh - 1) * stride + kh - h, 0)
+    pw = max((ow - 1) * stride + kw - w, 0)
+    return jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)))
+
+
+def forward_float(arch, params, x, collect=False):
+    """Float forward (training); optionally collect activations for
+    quantization calibration."""
+    acts = []
+    for (kind, cfg), p in zip(arch["layers"], params):
+        if kind == "conv":
+            w, b = p
+            xp = _same_pad(x, cfg["kh"], cfg["kw"], cfg["stride"])
+            x = jax.lax.conv_general_dilated(
+                xp, jnp.transpose(w, (1, 2, 3, 0)),
+                (cfg["stride"], cfg["stride"]), "VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + b
+            x = jax.nn.relu(x)
+        elif kind == "dw":
+            w, b = p
+            c = w.shape[0]
+            xp = _same_pad(x, cfg["kh"], cfg["kw"], cfg["stride"])
+            x = jax.lax.conv_general_dilated(
+                xp, jnp.transpose(w, (1, 2, 0))[:, :, None, :],
+                (cfg["stride"], cfg["stride"]), "VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=c,
+            ) + b
+            x = jax.nn.relu(x)
+        elif kind == "maxpool":
+            k, s = cfg["k"], cfg["stride"]
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID"
+            )
+        elif kind == "gap":
+            x = jnp.mean(x, axis=(1, 2), keepdims=True)
+        elif kind == "fc":
+            w, b = p
+            x = x.reshape(x.shape[0], -1) @ w.T + b
+        if collect:
+            acts.append(x)
+    return (x, acts) if collect else x
+
+
+def train(model_name, seed=SEED, steps=STEPS, verbose=True):
+    arch = arch_for(model_name)
+    h, w, c = arch["input"]
+    rng = np.random.default_rng(seed)
+    xs, ys = make_dataset(rng, TRAIN_N + TEST_N, h, w, c, arch["classes"])
+    xtr, ytr = xs[:TRAIN_N], ys[:TRAIN_N]
+    xte, yte = xs[TRAIN_N:], ys[TRAIN_N:]
+    params = init_params(rng, arch)
+
+    trainable_ix = [i for i, p in enumerate(params) if p is not None]
+
+    def pack(params):
+        return [params[i] for i in trainable_ix]
+
+    def unpack(tparams):
+        out = list(params)
+        for i, tp in zip(trainable_ix, tparams):
+            out[i] = tp
+        return out
+
+    def loss_fn(tparams, xb, yb):
+        logits = forward_float(arch, unpack(tparams), xb)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(len(yb)), yb])
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    tparams = pack(params)
+    momentum = jax.tree_util.tree_map(jnp.zeros_like, tparams)
+    bs = 64
+    for step in range(steps):
+        ix = rng.integers(0, TRAIN_N, bs)
+        loss, grads = grad_fn(tparams, jnp.asarray(xtr[ix]), jnp.asarray(ytr[ix]))
+        momentum = jax.tree_util.tree_map(lambda m, g: 0.9 * m + g, momentum, grads)
+        tparams = jax.tree_util.tree_map(lambda p, m: p - LR * m, tparams, momentum)
+        if verbose and step % 100 == 0:
+            print(f"[{model_name}] step {step:4d} loss {float(loss):.4f}")
+    params = unpack(tparams)
+
+    logits = forward_float(arch, params, jnp.asarray(xte))
+    acc = float(np.mean(np.argmax(np.array(logits), axis=1) == yte))
+    if verbose:
+        print(f"[{model_name}] float test accuracy: {acc:.4f}")
+    return arch, params, (xtr, ytr, xte, yte), acc
+
+
+# --------------------------------------------------------------------------
+# Post-training quantization → QModel
+# --------------------------------------------------------------------------
+
+def quantize(arch, params, calib_x, int7=False, name="model"):
+    """Per-tensor symmetric PTQ; activation scales from calibration max."""
+    wmax_q = 63.0 if int7 else 127.0
+    _, acts = forward_float(arch, params, jnp.asarray(calib_x), collect=True)
+    in_scale = float(np.abs(calib_x).max() / 127.0) or 1e-3
+    layers = []
+    cur_scale = in_scale
+    c_in = arch["input"][2]
+    for i, ((kind, cfg), p) in enumerate(zip(arch["layers"], params)):
+        act_max = float(np.abs(np.array(acts[i])).max()) or 1e-3
+        out_scale = act_max / 127.0
+        if kind == "conv":
+            w, b = np.array(p[0]), np.array(p[1])
+            ws = float(np.abs(w).max() / wmax_q) or 1e-9
+            wq = np.clip(np.round(w / ws), -wmax_q, wmax_q).astype(np.int8)
+            bq = np.round(b / (cur_scale * ws)).astype(np.int32)
+            layers.append(LayerSpec(
+                kind="conv", name=f"l{i}", weights=wq, bias=bq,
+                out_c=cfg["out"], in_c=c_in, kh=cfg["kh"], kw=cfg["kw"],
+                stride=cfg["stride"], padding="same", depthwise=False, relu=True,
+                input_scale=cur_scale, input_zp=0, weight_scale=ws,
+                output_scale=out_scale, output_zp=0,
+            ))
+            c_in = cfg["out"]
+            cur_scale = out_scale
+        elif kind == "dw":
+            w, b = np.array(p[0]), np.array(p[1])
+            ws = float(np.abs(w).max() / wmax_q) or 1e-9
+            wq = np.clip(np.round(w / ws), -wmax_q, wmax_q).astype(np.int8)
+            bq = np.round(b / (cur_scale * ws)).astype(np.int32)
+            layers.append(LayerSpec(
+                kind="conv", name=f"l{i}", weights=wq, bias=bq,
+                out_c=c_in, in_c=c_in, kh=cfg["kh"], kw=cfg["kw"],
+                stride=cfg["stride"], padding="same", depthwise=True, relu=True,
+                input_scale=cur_scale, input_zp=0, weight_scale=ws,
+                output_scale=out_scale, output_zp=0,
+            ))
+            cur_scale = out_scale
+        elif kind == "fc":
+            w, b = np.array(p[0]), np.array(p[1])
+            ws = float(np.abs(w).max() / wmax_q) or 1e-9
+            wq = np.clip(np.round(w / ws), -wmax_q, wmax_q).astype(np.int8)
+            bq = np.round(b / (cur_scale * ws)).astype(np.int32)
+            layers.append(LayerSpec(
+                kind="fc", name=f"l{i}", weights=wq, bias=bq,
+                out_c=cfg["out"], in_c=w.shape[1], relu=False,
+                input_scale=cur_scale, input_zp=0, weight_scale=ws,
+                output_scale=out_scale, output_zp=0,
+            ))
+            cur_scale = out_scale
+        elif kind == "maxpool":
+            layers.append(LayerSpec(kind="maxpool", k=cfg["k"], stride=cfg["stride"]))
+        elif kind == "gap":
+            layers.append(LayerSpec(kind="gap"))
+    h, w0, c = arch["input"]
+    return QModel(name=name, classes=arch["classes"], input_shape=(1, h, w0, c),
+                  layers=layers), in_scale
+
+
+def int8_accuracy(qmodel, in_scale, xte, yte, limit=None):
+    n = len(xte) if limit is None else min(limit, len(xte))
+    correct = 0
+    fwd = jax.jit(lambda xq: forward_int8(qmodel, xq))
+    for i in range(n):
+        xq = np.clip(np.round(xte[i] / in_scale), -128, 127).astype(np.int8)
+        logits = np.array(fwd(jnp.asarray(xq[None])))
+        correct += int(np.argmax(logits) == yte[i])
+    return correct / n
+
+
+def export(model_name, out_dir, verbose=True):
+    arch, params, (xtr, ytr, xte, yte), float_acc = train(model_name, verbose=verbose)
+    results = {"float_acc": float_acc}
+    for int7 in (False, True):
+        tag = "int7" if int7 else "int8"
+        qmodel, in_scale = quantize(
+            arch, params, xtr[:128], int7=int7, name=f"{model_name}_{tag}"
+        )
+        acc = int8_accuracy(qmodel, in_scale, xte, yte, limit=128)
+        results[f"{tag}_acc"] = acc
+        doc = qmodel.to_json_dict()
+        doc["input_scale"] = in_scale
+        doc["input_zp"] = 0
+        path = os.path.join(out_dir, f"{model_name}_{tag}.json")
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        if verbose:
+            print(f"[{model_name}] {tag} accuracy {acc:.4f} → {path}")
+    # Test set (quantized at the int8 input scale; identical for int7 —
+    # the input layer keeps 8 bits, only weights lose a bit).
+    qmodel8, in_scale = quantize(arch, params, xtr[:128], int7=False)
+    testset = {
+        "input_scale": in_scale,
+        "input_zp": 0,
+        "shape": list(qmodel8.input_shape),
+        "inputs": [
+            [int(v) for v in np.clip(np.round(x / in_scale), -128, 127)
+             .astype(np.int8).reshape(-1)]
+            for x in xte[:128]
+        ],
+        "labels": [int(y) for y in yte[:128]],
+    }
+    with open(os.path.join(out_dir, f"{model_name}_testset.json"), "w") as f:
+        json.dump(testset, f)
+    return results
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    os.makedirs(out_dir, exist_ok=True)
+    models = sys.argv[2].split(",") if len(sys.argv) > 2 else [
+        "dscnn", "resnet56", "mobilenetv2"
+    ]
+    summary = {}
+    for m in models:
+        summary[m] = export(m, out_dir)
+    with open(os.path.join(out_dir, "table2_accuracy.json"), "w") as f:
+        json.dump(summary, f, indent=2)
+    print(json.dumps(summary, indent=2))
+
+
+if __name__ == "__main__":
+    main()

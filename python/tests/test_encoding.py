@@ -1,0 +1,97 @@
+"""Lookahead-encoding oracle tests (mirrors rust/src/encoding tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def blocks(*bs):
+    return np.array([w for b in bs for w in b], dtype=np.int8)
+
+
+class TestEncodeLastBits:
+    def test_roundtrip_every_int7_weight(self):
+        for w in range(-64, 64):
+            block = np.array([w, 0, 0, 0], dtype=np.int8)
+            enc = ref.encode_last_bits(block, 0b1010)
+            assert ref.decode_weights(enc)[0] == w
+            assert ref.decode_skip(enc) == 0b1010
+
+    def test_figure6_bit_layout(self):
+        enc = ref.encode_last_bits(np.array([-3, 63, -64, 0], dtype=np.int8), 0b0101)
+        assert list(ref.decode_weights(enc)) == [-3, 63, -64, 0]
+        lsbs = [int(b) & 1 for b in enc.view(np.uint8)]
+        assert lsbs == [1, 0, 1, 0]
+
+    def test_int8_weight_rejected(self):
+        with pytest.raises(AssertionError):
+            ref.encode_last_bits(np.array([64, 0, 0, 0], dtype=np.int8), 0)
+
+
+class TestSkipOfBlock:
+    def test_figure5_example(self):
+        row = blocks([4, 7, 3, 1], [0] * 4, [0] * 4, [11, 7, 12, 4],
+                     [0] * 4, [13, 0, 12, 4], [0, 1, 0, 0])
+        assert ref.skip_of_block(row, 0) == 2
+        assert ref.skip_of_block(row, 3) == 1
+        assert ref.skip_of_block(row, 5) == 0
+        assert ref.skip_of_block(row, 6) == 0
+
+    def test_saturates_at_15(self):
+        row = np.zeros(21 * 4, dtype=np.int8)
+        row[0] = 7
+        assert ref.skip_of_block(row, 0) == 15
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.one_of(st.just(0), st.integers(-64, 63)),
+        min_size=4, max_size=64,
+    ).filter(lambda l: len(l) % 4 == 0)
+)
+def test_encode_decode_roundtrip_property(weights):
+    ws = np.array(weights, dtype=np.int8)
+    enc = ref.encode_lanes(ws, len(ws))
+    assert np.array_equal(ref.decode_weights(enc), ws)
+    for b in range(len(ws) // 4):
+        assert ref.decode_skip(enc[b * 4:(b + 1) * 4]) == ref.skip_of_block(ws, b)
+
+
+def test_cross_language_golden():
+    """Golden vector shared with the Rust tests (encoding/lookahead.rs):
+    the same lane must encode to the same bytes in both languages."""
+    lane = blocks([1, -2, 3, -4], [0] * 4, [0] * 4, [5, 0, -6, 0])
+    enc = ref.encode_lanes(lane, 16)
+    # decoded weights roundtrip
+    assert np.array_equal(ref.decode_weights(enc), lane)
+    # block 0 carries skip=2, block 3 skip=0
+    assert ref.decode_skip(enc[0:4]) == 2
+    assert ref.decode_skip(enc[12:16]) == 0
+    # bit-exact bytes: w=1,skip_bit=0 → (1<<1)=2 ; w=-2 & skip_bit=1 →
+    # sign|((-2&0x3F)<<1)|1 : -2=0b11111110 → enc 0b11111101 = -3
+    assert enc[0] == 2
+    assert enc[1] == -3
+
+
+class TestRequantOracle:
+    def test_srdhm_matches_rust_goldens(self):
+        assert ref.srdhm(np.array([1 << 20]), 1 << 30)[0] == 1 << 19
+        assert ref.srdhm(np.array([-(1 << 20)]), 1 << 30)[0] == -(1 << 19)
+        assert ref.srdhm(np.array([3]), 1 << 30)[0] == 2
+        assert ref.srdhm(np.array([-3]), 1 << 30)[0] == -1
+
+    def test_rounding_divide_goldens(self):
+        assert ref.rounding_divide_by_pot(np.array([5]), 1)[0] == 3
+        assert ref.rounding_divide_by_pot(np.array([-5]), 1)[0] == -3
+        assert ref.rounding_divide_by_pot(np.array([4]), 1)[0] == 2
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(-(1 << 20), 1 << 20), st.integers(1, 1000))
+    def test_mbqm_close_to_real(self, x, m):
+        real = m / 1024.0
+        mult, shift = ref.quantize_multiplier(real)
+        got = ref.multiply_by_quantized_multiplier(np.array([x]), mult, shift)[0]
+        assert abs(got - x * real) <= 1.0 + abs(x * real) * 1e-6

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel vs pure-jnp/numpy oracle — the core correctness
+signal for the compile path (hypothesis sweeps shapes & sparsity)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lookahead_mac import (
+    effective_cycles,
+    lookahead_qmatmul,
+    TILE_K,
+    TILE_M,
+    TILE_N,
+)
+
+
+def sparse_weights(rng, n, k, sparsity):
+    w = rng.integers(-64, 64, (n, k)).astype(np.int8)
+    w[rng.random((n, k)) < sparsity] = 0
+    return w
+
+
+class TestLookaheadQmatmul:
+    @pytest.mark.parametrize("m,n,k", [(1, 1, 4), (3, 5, 16), (8, 12, 64), (130, 70, 260)])
+    @pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.95])
+    def test_matches_oracle(self, m, n, k, sparsity):
+        rng = np.random.default_rng(m * 1000 + n + int(sparsity * 10))
+        w = sparse_weights(rng, n, k, sparsity)
+        x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+        bias = rng.integers(-1000, 1000, n).astype(np.int32)
+        enc = ref.encode_lanes(w, k)
+        out = np.asarray(lookahead_qmatmul(x, enc, bias, input_offset=128))
+        assert np.array_equal(out, ref.qmatmul_ref(x, w, bias, 128))
+
+    def test_plain_path_int8(self):
+        rng = np.random.default_rng(9)
+        w = rng.integers(-128, 128, (6, 32)).astype(np.int8)
+        x = rng.integers(-128, 128, (4, 32)).astype(np.int8)
+        bias = np.zeros(6, np.int32)
+        out = np.asarray(lookahead_qmatmul(x, w, bias, input_offset=0, decode=False))
+        assert np.array_equal(out, ref.qmatmul_ref(x, w, bias, 0))
+
+    def test_padding_boundary_shapes(self):
+        """Shapes straddling the tile sizes must still be exact."""
+        rng = np.random.default_rng(11)
+        for m, n, k in [(TILE_M, TILE_N, TILE_K), (TILE_M + 1, TILE_N + 1, TILE_K + 4)]:
+            w = sparse_weights(rng, n, k, 0.6)
+            x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+            bias = rng.integers(-10, 10, n).astype(np.int32)
+            enc = ref.encode_lanes(w, k)
+            out = np.asarray(lookahead_qmatmul(x, enc, bias, input_offset=7))
+            assert np.array_equal(out, ref.qmatmul_ref(x, w, bias, 7))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 9),
+        n=st.integers(1, 9),
+        kb=st.integers(1, 12),
+        sparsity=st.floats(0.0, 1.0),
+        offset=st.sampled_from([0, 7, 128]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_property_sweep(self, m, n, kb, sparsity, offset, seed):
+        k = kb * 4
+        rng = np.random.default_rng(seed)
+        w = sparse_weights(rng, n, k, sparsity)
+        x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+        bias = rng.integers(-100, 100, n).astype(np.int32)
+        enc = ref.encode_lanes(w, k)
+        out = np.asarray(lookahead_qmatmul(x, enc, bias, input_offset=offset))
+        assert np.array_equal(out, ref.qmatmul_ref(x, w, bias, offset))
+
+
+class TestEffectiveCycles:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 6),
+        kb=st.integers(1, 20),
+        sparsity=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_walk_oracle(self, n, kb, sparsity, seed):
+        k = kb * 4
+        rng = np.random.default_rng(seed)
+        w = sparse_weights(rng, n, k, sparsity)
+        enc = ref.encode_lanes(w, k)
+        got = np.asarray(effective_cycles(enc))
+        expect = np.array([ref.effective_mac_cycles(w[i:i + 1]) for i in range(n)])
+        assert np.array_equal(got, expect)
+
+    def test_dense_lane_is_k_cycles(self):
+        w = np.full((1, 16), 3, dtype=np.int8)
+        enc = ref.encode_lanes(w, 16)
+        assert int(effective_cycles(enc)[0]) == 16
+
+    def test_all_zero_lane_collapses(self):
+        # 16 blocks of zeros: visit block0 (skip 15) → 1 cycle total.
+        w = np.zeros((1, 64), dtype=np.int8)
+        enc = ref.encode_lanes(w, 64)
+        assert int(effective_cycles(enc)[0]) == 1
+
+    def test_long_zero_run_reenters(self):
+        # nonzero + 20 zero blocks: skip 15 covers blocks 1..15, the walk
+        # re-enters at block 16 (zero, 1 cycle) whose skip covers the rest.
+        w = np.zeros((1, 21 * 4), dtype=np.int8)
+        w[0, 0] = 5
+        enc = ref.encode_lanes(w, w.shape[1])
+        assert int(effective_cycles(enc)[0]) == 1 + 1

@@ -1,0 +1,109 @@
+"""L2 integer model graph tests: shapes, float-vs-int agreement, and the
+training/quantization pipeline."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import train as T
+from compile.model import forward_f32, forward_int8
+
+
+@pytest.fixture(scope="module")
+def trained_dscnn():
+    arch, params, data, acc = T.train("dscnn", steps=150, verbose=False)
+    return arch, params, data, acc
+
+
+def test_float_training_learns(trained_dscnn):
+    _, _, _, acc = trained_dscnn
+    assert acc > 0.6, f"float accuracy too low: {acc}"
+
+
+def test_int8_quantization_preserves_accuracy(trained_dscnn):
+    arch, params, (xtr, ytr, xte, yte), facc = trained_dscnn
+    q8, s8 = T.quantize(arch, params, xtr[:64], int7=False)
+    a8 = T.int8_accuracy(q8, s8, xte, yte, limit=48)
+    assert a8 > facc - 0.15, f"int8 {a8} vs float {facc}"
+
+
+def test_int7_close_to_int8(trained_dscnn):
+    """Table II's claim: sacrificing the post-sign bit costs ~nothing."""
+    arch, params, (xtr, ytr, xte, yte), _ = trained_dscnn
+    q8, s8 = T.quantize(arch, params, xtr[:64], int7=False)
+    q7, s7 = T.quantize(arch, params, xtr[:64], int7=True)
+    a8 = T.int8_accuracy(q8, s8, xte, yte, limit=48)
+    a7 = T.int8_accuracy(q7, s7, xte, yte, limit=48)
+    assert abs(a8 - a7) < 0.08, f"int8 {a8} vs int7 {a7}"
+
+
+def test_int7_weights_in_range(trained_dscnn):
+    arch, params, (xtr, _, _, _), _ = trained_dscnn
+    q7, _ = T.quantize(arch, params, xtr[:64], int7=True)
+    for spec in q7.layers:
+        if spec.weights is not None:
+            assert spec.weights.min() >= -64 and spec.weights.max() <= 63
+
+
+def test_forward_shapes(trained_dscnn):
+    arch, params, (xtr, _, _, _), _ = trained_dscnn
+    q8, s8 = T.quantize(arch, params, xtr[:64], int7=False)
+    xq = np.clip(np.round(xtr[0] / s8), -128, 127).astype(np.int8)
+    logits = np.asarray(forward_int8(q8, jnp.asarray(xq[None])))
+    assert logits.shape == (1, 12)
+    assert logits.dtype == np.int8
+
+
+def test_forward_f32_wrapper_consistent(trained_dscnn):
+    """The AOT entry point (f32 in → f32 logits) must agree with the
+    integer graph it wraps."""
+    arch, params, (xtr, _, xte, _), _ = trained_dscnn
+    q8, s8 = T.quantize(arch, params, xtr[:64], int7=False)
+    x = xte[0:1]
+    (logits_f,) = forward_f32(q8, jnp.asarray(x), s8, 0)
+    xq = np.clip(np.round(x[0] / s8), -128, 127).astype(np.int8)
+    logits_q = np.asarray(forward_int8(q8, jnp.asarray(xq[None])))
+    head = q8.layers[-1]
+    expect = (logits_q.astype(np.float32) - head.output_zp) * head.output_scale
+    assert np.allclose(np.asarray(logits_f), expect)
+
+
+def test_int_graph_tracks_float_graph(trained_dscnn):
+    """Quantized logits should correlate with float logits (argmax
+    agreement on a small batch)."""
+    arch, params, (xtr, _, xte, yte), _ = trained_dscnn
+    q8, s8 = T.quantize(arch, params, xtr[:64], int7=False)
+    agree = 0
+    n = 24
+    for i in range(n):
+        fl = np.asarray(T.forward_float(arch, params, jnp.asarray(xte[i:i + 1])))
+        xq = np.clip(np.round(xte[i] / s8), -128, 127).astype(np.int8)
+        il = np.asarray(forward_int8(q8, jnp.asarray(xq[None])))
+        agree += int(np.argmax(fl) == np.argmax(il))
+    assert agree >= n * 0.7, f"argmax agreement {agree}/{n}"
+
+
+def test_all_three_models_train_and_quantize():
+    for name in ("resnet56", "mobilenetv2"):
+        arch, params, (xtr, ytr, xte, yte), acc = T.train(name, steps=150, verbose=False)
+        q8, s8 = T.quantize(arch, params, xtr[:32], int7=False)
+        a = T.int8_accuracy(q8, s8, xte, yte, limit=24)
+        assert a > 0.4, f"{name}: quantized accuracy {a}"
+
+
+def test_aot_lowering_produces_hlo(tmp_path, trained_dscnn):
+    from compile import aot
+    import json
+    arch, params, (xtr, _, _, _), _ = trained_dscnn
+    q8, s8 = T.quantize(arch, params, xtr[:64], int7=False)
+    doc = q8.to_json_dict()
+    doc["input_scale"] = s8
+    doc["input_zp"] = 0
+    jpath = tmp_path / "m.json"
+    jpath.write_text(json.dumps(doc))
+    hpath = tmp_path / "m.hlo.txt"
+    aot.lower_model(str(jpath), str(hpath))
+    text = hpath.read_text()
+    assert text.startswith("HloModule") and "ENTRY" in text

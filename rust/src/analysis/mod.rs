@@ -1,0 +1,18 @@
+//! Analytical models and report formatting.
+//!
+//! [`speedup`] implements the closed-form cycle/speedup models of
+//! Sections IV-D and IV-E (Figures 8 and 9); [`sota`] encodes the
+//! state-of-the-art comparison of Table I; [`report`] renders aligned
+//! text tables/series for the bench harness output.
+
+pub mod energy;
+pub mod report;
+pub mod sota;
+pub mod speedup;
+
+pub use energy::{EnergyModel, EnergyReport};
+pub use report::Table;
+pub use speedup::{
+    csa_analytical_speedup, sssa_analytical_speedup, ussa_analytical_cycles,
+    ussa_observed_cycles, ussa_speedup_analytical, ussa_speedup_observed,
+};

@@ -1,0 +1,109 @@
+//! Table I — comparison with the state of the art.
+//!
+//! IndexMAC [17] and the Lu et al. [27] FPGA accelerator are *published
+//! baselines*; their speedup ranges are taken from their papers (as
+//! Table I does). Our designs' ranges are *measured* by the bench
+//! harness (`table1_sota`), which sweeps sparsity and reports the
+//! resulting min–max speedups next to the published rows.
+
+/// One row of Table I.
+#[derive(Debug, Clone)]
+pub struct SotaEntry {
+    /// Method name.
+    pub method: &'static str,
+    /// Supports semi-structured sparsity.
+    pub semi_structured: bool,
+    /// Supports unstructured sparsity.
+    pub unstructured: bool,
+    /// Sparsity pattern constraint.
+    pub pattern: &'static str,
+    /// Published / measured speedup range.
+    pub speedup: (f64, f64),
+    /// Sparsity regime label from the paper.
+    pub sparsity_regime: &'static str,
+    /// Architecture class.
+    pub architecture: &'static str,
+}
+
+/// The published baseline rows of Table I.
+pub fn published_baselines() -> Vec<SotaEntry> {
+    vec![
+        SotaEntry {
+            method: "IndexMAC [17]",
+            semi_structured: true,
+            unstructured: false,
+            pattern: "2:4",
+            speedup: (2.0, 3.0),
+            sparsity_regime: "Moderate",
+            architecture: "CPU+HW",
+        },
+        SotaEntry {
+            method: "Lu et al. [27]",
+            semi_structured: false,
+            unstructured: true,
+            pattern: "NA",
+            speedup: (2.4, 12.9),
+            sparsity_regime: "Low",
+            architecture: "HW",
+        },
+    ]
+}
+
+/// The paper's rows for our three designs (for comparison against
+/// measured ranges).
+pub fn paper_our_rows() -> Vec<SotaEntry> {
+    vec![
+        SotaEntry {
+            method: "Ours (USSA)",
+            semi_structured: false,
+            unstructured: true,
+            pattern: "NA",
+            speedup: (2.0, 3.0),
+            sparsity_regime: "High",
+            architecture: "CPU+HW",
+        },
+        SotaEntry {
+            method: "Ours (SSSA)",
+            semi_structured: true,
+            unstructured: false,
+            pattern: "4:4",
+            speedup: (2.0, 4.0),
+            sparsity_regime: "Low",
+            architecture: "CPU+HW",
+        },
+        SotaEntry {
+            method: "Ours (CSA)",
+            semi_structured: true,
+            unstructured: true,
+            pattern: "4:4, random",
+            speedup: (4.0, 5.0),
+            sparsity_regime: "Moderate",
+            architecture: "CPU+HW",
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_rows_complete() {
+        assert_eq!(published_baselines().len(), 2);
+        assert_eq!(paper_our_rows().len(), 3);
+    }
+
+    #[test]
+    fn csa_supports_both_sparsity_types() {
+        let csa = &paper_our_rows()[2];
+        assert!(csa.semi_structured && csa.unstructured);
+        assert!(csa.speedup.1 >= 5.0);
+    }
+
+    #[test]
+    fn ranges_ordered() {
+        for e in published_baselines().iter().chain(paper_our_rows().iter()) {
+            assert!(e.speedup.0 <= e.speedup.1, "{}", e.method);
+        }
+    }
+}

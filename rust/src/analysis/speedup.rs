@@ -1,0 +1,199 @@
+//! Closed-form speedup models (Sections IV-D / IV-E).
+//!
+//! With IID element sparsity `x`, the number of non-zero weights in a
+//! 4-block is Binomial(4, 1-x). The baseline sequential MAC always takes
+//! 4 cycles; the ideal accelerator takes one cycle per non-zero weight:
+//!
+//! `c_a = Σ_k C(4,k) x^k (1-x)^(4-k) (4-k)`            (= 4(1-x))
+//!
+//! USSA still spends one cycle on an all-zero block:
+//!
+//! `c_o = Σ_{k=0}^{3} C(4,k) x^k (1-x)^(4-k) (4-k) + x^4`
+//!
+//! and the speedups are `s_a = 4/c_a`, `s_o = 4/c_o`.
+
+/// Binomial coefficient C(4, k).
+fn c4(k: u32) -> f64 {
+    match k {
+        0 | 4 => 1.0,
+        1 | 3 => 4.0,
+        2 => 6.0,
+        _ => 0.0,
+    }
+}
+
+/// Binomial coefficient C(n, k) (for the INT4/INT2 generalization of
+/// Section IV-D, where a register holds n = 8 or 16 lanes).
+fn binom(n: u32, k: u32) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut num = 1.0f64;
+    let mut den = 1.0f64;
+    for i in 0..k {
+        num *= (n - i) as f64;
+        den *= (i + 1) as f64;
+    }
+    num / den
+}
+
+/// Generalized observed cycles for an n-lane variable-cycle MAC: one
+/// cycle per non-zero lane, one idle cycle for an all-zero word.
+pub fn vc_observed_cycles_n(x: f64, n: u32) -> f64 {
+    assert!((0.0..=1.0).contains(&x));
+    let partial: f64 = (0..n)
+        .map(|k| binom(n, k) * x.powi(k as i32) * (1.0 - x).powi((n - k) as i32) * (n - k) as f64)
+        .sum();
+    partial + x.powi(n as i32)
+}
+
+/// Generalized observed speedup `n / c_o(x, n)` — saturates at n.
+pub fn vc_speedup_observed_n(x: f64, n: u32) -> f64 {
+    n as f64 / vc_observed_cycles_n(x, n)
+}
+
+/// Analytical (ideal) average cycles per block at element sparsity `x`.
+pub fn ussa_analytical_cycles(x: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&x));
+    (0..=4)
+        .map(|k| c4(k) * x.powi(k as i32) * (1.0 - x).powi(4 - k as i32) * (4 - k) as f64)
+        .sum()
+}
+
+/// Observed average cycles per block: all-zero blocks still cost 1.
+pub fn ussa_observed_cycles(x: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&x));
+    let partial: f64 = (0..=3)
+        .map(|k| c4(k) * x.powi(k as i32) * (1.0 - x).powi(4 - k as i32) * (4 - k) as f64)
+        .sum();
+    partial + x.powi(4)
+}
+
+/// `s_a = 4 / c_a` (unbounded as x → 1).
+pub fn ussa_speedup_analytical(x: f64) -> f64 {
+    4.0 / ussa_analytical_cycles(x)
+}
+
+/// `s_o = 4 / c_o` (saturates at 4 as x → 1 due to the 1-cycle floor).
+pub fn ussa_speedup_observed(x: f64) -> f64 {
+    4.0 / ussa_observed_cycles(x)
+}
+
+/// SSSA analytical speedup at 4:4 block sparsity `x_ss`: the ratio of
+/// total weights to weights in non-zero blocks (Section IV-E).
+pub fn sssa_analytical_speedup(x_ss: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&x_ss));
+    if x_ss >= 1.0 {
+        f64::INFINITY
+    } else {
+        1.0 / (1.0 - x_ss)
+    }
+}
+
+/// CSA analytical speedup against the 4-cycle sequential baseline at
+/// block sparsity `x_ss` and intra-block unstructured sparsity `x_us`:
+/// visited fraction `(1-x_ss)` of blocks, each costing
+/// `c_o(x_us)` MAC cycles plus one `inc_indvar` cycle, versus 4 baseline
+/// MAC cycles per block.
+pub fn csa_analytical_speedup(x_us: f64, x_ss: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&x_us));
+    assert!((0.0..=1.0).contains(&x_ss));
+    let per_visited = ussa_observed_cycles(x_us) + 1.0;
+    4.0 / ((1.0 - x_ss) * per_visited).max(f64::MIN_POSITIVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytical_cycles_closed_form() {
+        // c_a = 4(1-x) — the binomial mean.
+        for x in [0.0, 0.25, 0.5, 0.75, 0.9, 1.0] {
+            assert!((ussa_analytical_cycles(x) - 4.0 * (1.0 - x)).abs() < 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn observed_equals_analytical_plus_zero_block_term() {
+        for x in [0.0, 0.3, 0.6, 0.9] {
+            let diff = ussa_observed_cycles(x) - ussa_analytical_cycles(x);
+            assert!((diff - x.powi(4)).abs() < 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn speedups_at_paper_points() {
+        // Dense: no speedup.
+        assert!((ussa_speedup_analytical(0.0) - 1.0).abs() < 1e-12);
+        assert!((ussa_speedup_observed(0.0) - 1.0).abs() < 1e-12);
+        // x = 0.75 → c_a = 1 → s_a = 4.
+        assert!((ussa_speedup_analytical(0.75) - 4.0).abs() < 1e-12);
+        // Fully sparse: observed saturates at 4 (1-cycle zero blocks),
+        // analytical diverges.
+        assert!((ussa_speedup_observed(1.0) - 4.0).abs() < 1e-12);
+        assert!(ussa_speedup_analytical(0.999) > 100.0);
+        // Paper: USSA offers "speedups of up to a factor of 3" at high
+        // sparsity — s_o crosses 3 near x ≈ 0.75.
+        assert!(ussa_speedup_observed(0.75) > 3.0);
+    }
+
+    #[test]
+    fn observed_below_analytical_only_at_high_sparsity() {
+        for x in [0.1, 0.3, 0.5] {
+            let gap = ussa_speedup_analytical(x) - ussa_speedup_observed(x);
+            assert!(gap >= 0.0 && gap < 0.1, "x={x} gap={gap}");
+        }
+        let gap_hi = ussa_speedup_analytical(0.95) - ussa_speedup_observed(0.95);
+        assert!(gap_hi > 1.0, "divergence should be visible at x=0.95, gap={gap_hi}");
+    }
+
+    #[test]
+    fn sssa_speedup_examples() {
+        assert!((sssa_analytical_speedup(0.0) - 1.0).abs() < 1e-12);
+        assert!((sssa_analytical_speedup(0.5) - 2.0).abs() < 1e-12);
+        // Paper: SSSA "speedups of up to a factor of 4" — x_ss = 0.75.
+        assert!((sssa_analytical_speedup(0.75) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csa_reaches_paper_range() {
+        // Paper: combined design "speedups of up to a factor of 5"
+        // at moderate combined sparsity.
+        let s = csa_analytical_speedup(0.8, 0.6);
+        assert!(s > 4.0 && s < 7.0, "csa speedup {s}");
+        // Dense: the +1 inc_indvar cycle costs ~20% vs 4-cycle baseline.
+        let dense = csa_analytical_speedup(0.0, 0.0);
+        assert!((dense - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_rejected() {
+        ussa_analytical_cycles(1.5);
+    }
+
+    #[test]
+    fn generalized_n4_matches_specialized() {
+        for x in [0.0, 0.3, 0.6, 0.9, 1.0] {
+            assert!(
+                (vc_observed_cycles_n(x, 4) - ussa_observed_cycles(x)).abs() < 1e-12,
+                "x={x}"
+            );
+        }
+    }
+
+    #[test]
+    fn int4_extension_speedups() {
+        // Section IV-D: 8 lanes per register → saturation at 8×.
+        assert!((vc_speedup_observed_n(1.0, 8) - 8.0).abs() < 1e-12);
+        // 7 of 8 zero (x = 7/8): close to the "single cycle" regime.
+        let s = vc_speedup_observed_n(0.875, 8);
+        assert!(s > 5.0 && s < 8.0, "{s}");
+        // INT2: 16 lanes.
+        assert!((vc_speedup_observed_n(1.0, 16) - 16.0).abs() < 1e-12);
+        // Dense: no speedup at any width.
+        assert!((vc_speedup_observed_n(0.0, 8) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,111 @@
+//! Wall-clock micro-benchmark runner.
+
+use crate::util::stats::{OnlineStats, Percentiles};
+use std::time::Instant;
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup iterations (not measured).
+    pub warmup: usize,
+    /// Measured iterations.
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 3, iters: 10 }
+    }
+}
+
+/// Result of a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub label: String,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Standard deviation.
+    pub stddev_s: f64,
+    /// Median seconds.
+    pub median_s: f64,
+    /// Minimum seconds.
+    pub min_s: f64,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Render one line, auto-scaling units.
+    pub fn render(&self) -> String {
+        fn scale(s: f64) -> String {
+            if s >= 1.0 {
+                format!("{s:.3} s")
+            } else if s >= 1e-3 {
+                format!("{:.3} ms", s * 1e3)
+            } else if s >= 1e-6 {
+                format!("{:.3} µs", s * 1e6)
+            } else {
+                format!("{:.1} ns", s * 1e9)
+            }
+        }
+        format!(
+            "{:40} mean {:>12}  median {:>12}  min {:>12}  (±{:.1}%, n={})",
+            self.label,
+            scale(self.mean_s),
+            scale(self.median_s),
+            scale(self.min_s),
+            if self.mean_s > 0.0 { 100.0 * self.stddev_s / self.mean_s } else { 0.0 },
+            self.iters
+        )
+    }
+}
+
+/// Run a closure under the harness and report timing.
+pub fn bench_fn<F: FnMut()>(label: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut stats = OnlineStats::new();
+    let mut pcts = Percentiles::new();
+    for _ in 0..cfg.iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        stats.push(dt);
+        pcts.push(dt);
+    }
+    BenchResult {
+        label: label.to_string(),
+        mean_s: stats.mean(),
+        stddev_s: stats.stddev(),
+        median_s: pcts.median(),
+        min_s: stats.min(),
+        iters: cfg.iters.max(1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_work() {
+        let mut acc = 0u64;
+        let r = bench_fn("spin", &BenchConfig { warmup: 1, iters: 5 }, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(acc > 0);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s + 1e-12);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn render_contains_label() {
+        let r = bench_fn("my-label", &BenchConfig { warmup: 0, iters: 1 }, || {});
+        assert!(r.render().contains("my-label"));
+    }
+}

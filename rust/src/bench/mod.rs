@@ -1,0 +1,11 @@
+//! Minimal benchmark harness (offline substitute for `criterion`).
+//!
+//! Used by the `benches/` binaries (`cargo bench` with `harness = false`):
+//! warmup, timed iterations, and mean/stddev/percentile reporting via
+//! [`crate::util::stats`]. Wall-clock timing is for *harness* performance
+//! (the L3 perf pass); the paper's metrics are simulated clock cycles,
+//! which are deterministic and need no statistical treatment.
+
+pub mod harness;
+
+pub use harness::{bench_fn, BenchConfig, BenchResult};

@@ -1,0 +1,133 @@
+//! Baseline CFUs.
+//!
+//! - [`BaselineSimdMac`] — the CFU Playground TFLite starting point
+//!   (Section III-A): four INT8×INT8 multipliers in parallel, one cycle
+//!   per 4-weight block regardless of sparsity.
+//! - [`BaselineSequentialMac`] — the USSA comparison baseline
+//!   (Section III-C1): a *single* multiplier applied over four cycles,
+//!   "consistently requires four clock cycles regardless of the presence
+//!   of zeros".
+
+use super::{dot4, Cfu, CfuResponse};
+use crate::encoding::pack::unpack4_i8;
+use crate::error::{Error, Result};
+use crate::isa::{CfuOpcode, DesignKind};
+
+/// Parallel SIMD MAC: 1 cycle per block (4 DSP multipliers).
+#[derive(Debug, Clone)]
+pub struct BaselineSimdMac {
+    input_offset: i32,
+}
+
+impl BaselineSimdMac {
+    /// New unit with a hardware input-offset constant.
+    pub fn new(input_offset: i32) -> Self {
+        BaselineSimdMac { input_offset }
+    }
+}
+
+impl Cfu for BaselineSimdMac {
+    fn design(&self) -> DesignKind {
+        DesignKind::BaselineSimd
+    }
+
+    fn execute(&mut self, op: CfuOpcode, rs1: u32, rs2: u32) -> Result<CfuResponse> {
+        match op {
+            CfuOpcode::CfuSimdMac => {
+                let w = unpack4_i8(rs1);
+                let x = unpack4_i8(rs2);
+                Ok(CfuResponse { rd: dot4(w, x, self.input_offset) as u32, cycles: 1 })
+            }
+            other => Err(Error::Sim(format!(
+                "baseline-simd CFU cannot execute {}",
+                other.mnemonic()
+            ))),
+        }
+    }
+}
+
+/// Sequential single-multiplier MAC: always 4 cycles per block.
+#[derive(Debug, Clone)]
+pub struct BaselineSequentialMac {
+    input_offset: i32,
+}
+
+impl BaselineSequentialMac {
+    /// New unit.
+    pub fn new(input_offset: i32) -> Self {
+        BaselineSequentialMac { input_offset }
+    }
+}
+
+impl Cfu for BaselineSequentialMac {
+    fn design(&self) -> DesignKind {
+        DesignKind::BaselineSequential
+    }
+
+    fn execute(&mut self, op: CfuOpcode, rs1: u32, rs2: u32) -> Result<CfuResponse> {
+        match op {
+            CfuOpcode::CfuSeqMac => {
+                let w = unpack4_i8(rs1);
+                let x = unpack4_i8(rs2);
+                // One multiply per cycle, four cycles, sparsity-blind.
+                Ok(CfuResponse { rd: dot4(w, x, self.input_offset) as u32, cycles: 4 })
+            }
+            other => Err(Error::Sim(format!(
+                "baseline-seq CFU cannot execute {}",
+                other.mnemonic()
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::pack::pack4_i8;
+
+    #[test]
+    fn simd_mac_one_cycle_any_sparsity() {
+        let mut cfu = BaselineSimdMac::new(128);
+        for w in [[0i8; 4], [1, 0, 0, 0], [1, 2, 3, 4]] {
+            let r = cfu.execute(CfuOpcode::CfuSimdMac, pack4_i8(&w), pack4_i8(&[1, 1, 1, 1]))
+                .unwrap();
+            assert_eq!(r.cycles, 1);
+        }
+    }
+
+    #[test]
+    fn seq_mac_always_four_cycles() {
+        let mut cfu = BaselineSequentialMac::new(0);
+        for w in [[0i8; 4], [1, 0, 0, 0], [1, 2, 3, 4]] {
+            let r = cfu.execute(CfuOpcode::CfuSeqMac, pack4_i8(&w), pack4_i8(&[9, 9, 9, 9]))
+                .unwrap();
+            assert_eq!(r.cycles, 4);
+        }
+    }
+
+    #[test]
+    fn mac_value_negative_weights() {
+        let mut cfu = BaselineSimdMac::new(0);
+        let r = cfu
+            .execute(
+                CfuOpcode::CfuSimdMac,
+                pack4_i8(&[-128, 127, -1, 2]),
+                pack4_i8(&[127, -128, 3, -4]),
+            )
+            .unwrap();
+        let expect = (-128i32 * 127) + (127 * -128) + (-1 * 3) + (2 * -4);
+        assert_eq!(r.rd as i32, expect);
+    }
+
+    #[test]
+    fn simd_and_seq_agree() {
+        let mut a = BaselineSimdMac::new(77);
+        let mut b = BaselineSequentialMac::new(77);
+        let w = pack4_i8(&[-5, 0, 63, -64]);
+        let x = pack4_i8(&[100, -100, 5, 0]);
+        assert_eq!(
+            a.execute(CfuOpcode::CfuSimdMac, w, x).unwrap().rd,
+            b.execute(CfuOpcode::CfuSeqMac, w, x).unwrap().rd
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Case-signal control logic + alignment multiplexers of the USSA
+//! datapath (Fig 7).
+//!
+//! Each of the four weights is compared to zero in parallel, producing
+//! the case signal `(c3, c2, c1, c0)` (bit i set ⇔ weight i non-zero).
+//! The control logic derives mux selects `(cl0..cl3)` that compact the
+//! non-zero `(w, x)` pairs to the front of the sequential MAC's input
+//! queue, so the MAC runs exactly `popcount(case)` cycles (one per
+//! non-zero weight), or a single idle cycle for an all-zero block.
+
+/// Zero-compare stage: case signal bits (bit i ⇔ `w[i] != 0`).
+#[inline]
+pub fn case_signal(weights: &[i8; 4]) -> u8 {
+    let mut c = 0u8;
+    for (i, &w) in weights.iter().enumerate() {
+        if w != 0 {
+            c |= 1 << i;
+        }
+    }
+    c
+}
+
+/// Control logic + muxes: compact the lanes selected by `case` to the
+/// front, preserving order. Returns the aligned pairs and their count.
+#[inline]
+pub fn align_nonzero(
+    weights: &[i8; 4],
+    inputs: &[i8; 4],
+    case: u8,
+) -> ([i8; 4], [i8; 4], usize) {
+    let mut w_out = [0i8; 4];
+    let mut x_out = [0i8; 4];
+    let mut n = 0usize;
+    for i in 0..4 {
+        if case & (1 << i) != 0 {
+            w_out[n] = weights[i];
+            x_out[n] = inputs[i];
+            n += 1;
+        }
+    }
+    (w_out, x_out, n)
+}
+
+/// MAC cycle count dictated by the case signal: one cycle per non-zero
+/// weight; an all-zero block still costs one (idle) cycle — the paper's
+/// `c_o` model (Section IV-D).
+#[inline]
+pub fn mac_cycles(case: u8) -> u32 {
+    (case.count_ones()).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn case_signal_bits() {
+        assert_eq!(case_signal(&[0, 0, 0, 0]), 0b0000);
+        assert_eq!(case_signal(&[1, 0, 0, 0]), 0b0001);
+        assert_eq!(case_signal(&[0, 2, 0, -3]), 0b1010);
+        assert_eq!(case_signal(&[1, 1, 1, 1]), 0b1111);
+    }
+
+    #[test]
+    fn align_compacts_in_order() {
+        let (w, x, n) = align_nonzero(&[0, 5, 0, -7], &[10, 20, 30, 40], 0b1010);
+        assert_eq!(n, 2);
+        assert_eq!(&w[..2], &[5, -7]);
+        assert_eq!(&x[..2], &[20, 40]);
+    }
+
+    #[test]
+    fn cycles_per_case() {
+        assert_eq!(mac_cycles(0b0000), 1); // all-zero block: single idle cycle
+        assert_eq!(mac_cycles(0b0001), 1);
+        assert_eq!(mac_cycles(0b0110), 2);
+        assert_eq!(mac_cycles(0b1111), 4);
+    }
+
+    #[test]
+    fn prop_alignment_preserves_dot_product() {
+        check(
+            Config::default().cases(256),
+            |r: &mut Pcg32| {
+                let mut v = Vec::with_capacity(8);
+                for _ in 0..8 {
+                    v.push(if r.bernoulli(0.4) { 0 } else { r.range_i32(-128, 127) });
+                }
+                v
+            },
+            |v| {
+                let w = [v[0] as i8, v[1] as i8, v[2] as i8, v[3] as i8];
+                let x = [v[4] as i8, v[5] as i8, v[6] as i8, v[7] as i8];
+                let case = case_signal(&w);
+                let (wa, xa, n) = align_nonzero(&w, &x, case);
+                let full: i32 = (0..4).map(|i| w[i] as i32 * x[i] as i32).sum();
+                let aligned: i32 = (0..n).map(|i| wa[i] as i32 * xa[i] as i32).sum();
+                full == aligned && n as u32 == case.count_ones()
+            },
+        );
+    }
+}

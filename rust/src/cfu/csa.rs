@@ -1,0 +1,130 @@
+//! CSA — Combined Sparsity Accelerator (Section III-D).
+//!
+//! Integrates both prior designs:
+//! - `csa_vcmac`: variable-cycle sequential MAC like USSA's, except the
+//!   weights are lookahead-encoded INT7 values (decoded from bits `[7:1]`
+//!   of each byte). The zero-compare operates on the *decoded* weights so
+//!   the lookahead bits never inflate the cycle count.
+//! - `csa_inc_indvar`: identical behaviour to `sssa_inc_indvar`.
+//!
+//! Because the surrounding kernel (Listing 3) skips all-zero blocks via
+//! the induction-variable increment, the USSA's one-cycle all-zero-block
+//! penalty "can be avoided using CSA" (Section IV-D).
+
+use super::case_logic::{align_nonzero, case_signal, mac_cycles};
+use super::sssa::{decode_weights, indvar_increment};
+use super::{Cfu, CfuResponse};
+use crate::encoding::pack::unpack4_i8;
+use crate::error::{Error, Result};
+use crate::isa::{CfuOpcode, DesignKind};
+
+/// The CSA CFU.
+#[derive(Debug, Clone)]
+pub struct CsaCfu {
+    input_offset: i32,
+}
+
+impl CsaCfu {
+    /// New unit.
+    pub fn new(input_offset: i32) -> Self {
+        CsaCfu { input_offset }
+    }
+}
+
+impl Cfu for CsaCfu {
+    fn design(&self) -> DesignKind {
+        DesignKind::Csa
+    }
+
+    fn execute(&mut self, op: CfuOpcode, rs1: u32, rs2: u32) -> Result<CfuResponse> {
+        match op {
+            CfuOpcode::CsaVcMac => {
+                let w = decode_weights(rs1);
+                let x = unpack4_i8(rs2);
+                let case = case_signal(&w);
+                let (wa, xa, n) = align_nonzero(&w, &x, case);
+                let mut acc = 0i32;
+                for i in 0..n {
+                    acc = acc
+                        .wrapping_add((wa[i] as i32).wrapping_mul(xa[i] as i32 + self.input_offset));
+                }
+                Ok(CfuResponse { rd: acc as u32, cycles: mac_cycles(case) })
+            }
+            CfuOpcode::CsaIncIndvar => {
+                Ok(CfuResponse { rd: rs2.wrapping_add(indvar_increment(rs1)), cycles: 1 })
+            }
+            other => Err(Error::Sim(format!("CSA CFU cannot execute {}", other.mnemonic()))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::lookahead::encode_last_bits;
+    use crate::encoding::pack::pack4_i8;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Pcg32;
+
+    fn encoded_word(weights: [i8; 4], skip: u8) -> u32 {
+        let mut enc = weights;
+        encode_last_bits(&mut enc, skip).unwrap();
+        pack4_i8(&enc)
+    }
+
+    #[test]
+    fn vcmac_cycles_use_decoded_zeros() {
+        let mut cfu = CsaCfu::new(0);
+        let x = pack4_i8(&[1, 1, 1, 1]);
+        // Weights [0,0,5,0] with skip bits 0b1111: encoded bytes are all
+        // non-zero, but only one *decoded* weight is non-zero → 1 cycle.
+        let rs1 = encoded_word([0, 0, 5, 0], 0b1111);
+        let r = cfu.execute(CfuOpcode::CsaVcMac, rs1, x).unwrap();
+        assert_eq!(r.cycles, 1);
+        assert_eq!(r.rd as i32, 5);
+    }
+
+    #[test]
+    fn inc_indvar_matches_sssa() {
+        use crate::cfu::sssa::SssaCfu;
+        let mut csa = CsaCfu::new(0);
+        let mut sssa = SssaCfu::new(0);
+        for skip in 0..=15u8 {
+            let rs1 = encoded_word([1, -1, 2, -2], skip);
+            let a = csa.execute(CfuOpcode::CsaIncIndvar, rs1, 100).unwrap().rd;
+            let b = sssa.execute(CfuOpcode::SssaIncIndvar, rs1, 100).unwrap().rd;
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn prop_vcmac_value_and_cycles() {
+        check(
+            Config::default().cases(512),
+            |r: &mut Pcg32| {
+                let mut v = Vec::with_capacity(9);
+                for _ in 0..4 {
+                    v.push(if r.bernoulli(0.5) { 0 } else { r.range_i32(-64, 63) });
+                }
+                for _ in 0..4 {
+                    v.push(r.range_i32(-128, 127));
+                }
+                v.push(r.range_i32(0, 15));
+                v
+            },
+            |v| {
+                let w = [v[0] as i8, v[1] as i8, v[2] as i8, v[3] as i8];
+                let x = [v[4] as i8, v[5] as i8, v[6] as i8, v[7] as i8];
+                let skip = v[8] as u8;
+                let mut cfu = CsaCfu::new(128);
+                let r = cfu
+                    .execute(CfuOpcode::CsaVcMac, encoded_word(w, skip), pack4_i8(&x))
+                    .unwrap();
+                let expect: i32 =
+                    (0..4).map(|i| w[i] as i32 * (x[i] as i32 + 128)).sum();
+                let nz = w.iter().filter(|&&wi| wi != 0).count() as u32;
+                r.rd as i32 == expect && r.cycles == nz.max(1)
+            },
+        );
+    }
+}

@@ -1,0 +1,130 @@
+//! INT4 extension of the variable-cycle MAC (Section IV-D).
+//!
+//! *"Our approach can be extended to cases involving INT4 and INT2
+//! weights, where the speedup over the baseline would be higher. For
+//! example, one 32-bit register can contain eight INT4 weights, and if
+//! seven of them are zeros, then the USSA will take a single clock
+//! cycle, whereas the baseline will take eight clock cycles."*
+//!
+//! This module models that extension: 8 signed INT4 lanes per 32-bit
+//! operand, a sparsity-blind 8-cycle sequential baseline, and a
+//! variable-cycle unit taking `max(1, #nonzero)` cycles. The
+//! `ablation_int4` bench sweeps sparsity against the generalized
+//! binomial model ([`crate::analysis::speedup::vc_speedup_observed_n`]).
+
+/// Lanes per register word for INT4.
+pub const INT4_LANES: usize = 8;
+
+/// Pack 8 signed INT4 values (each in `[-8, 7]`) into a u32, lane i at
+/// bits `4i+3..4i`.
+pub fn pack8_i4(lanes: &[i8; INT4_LANES]) -> u32 {
+    let mut w = 0u32;
+    for (i, &v) in lanes.iter().enumerate() {
+        debug_assert!((-8..=7).contains(&v), "INT4 out of range: {v}");
+        w |= ((v as u8 & 0xF) as u32) << (4 * i);
+    }
+    w
+}
+
+/// Unpack 8 signed INT4 lanes.
+pub fn unpack8_i4(word: u32) -> [i8; INT4_LANES] {
+    let mut out = [0i8; INT4_LANES];
+    for (i, o) in out.iter_mut().enumerate() {
+        let nib = ((word >> (4 * i)) & 0xF) as u8;
+        // sign-extend from 4 bits
+        *o = ((nib << 4) as i8) >> 4;
+    }
+    out
+}
+
+/// Result of one INT4 MAC block: value + cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Int4MacResponse {
+    /// Dot product (i32).
+    pub acc: i32,
+    /// Cycles consumed.
+    pub cycles: u32,
+}
+
+/// Sparsity-blind sequential INT4 MAC: always 8 cycles.
+pub fn int4_seq_mac(w_word: u32, x_word: u32) -> Int4MacResponse {
+    let w = unpack8_i4(w_word);
+    let x = unpack8_i4(x_word);
+    let acc: i32 = (0..INT4_LANES).map(|i| w[i] as i32 * x[i] as i32).sum();
+    Int4MacResponse { acc, cycles: INT4_LANES as u32 }
+}
+
+/// Variable-cycle INT4 MAC: `max(1, #nonzero weights)` cycles.
+pub fn int4_vc_mac(w_word: u32, x_word: u32) -> Int4MacResponse {
+    let w = unpack8_i4(w_word);
+    let x = unpack8_i4(x_word);
+    let mut acc = 0i32;
+    let mut nz = 0u32;
+    for i in 0..INT4_LANES {
+        if w[i] != 0 {
+            acc += w[i] as i32 * x[i] as i32;
+            nz += 1;
+        }
+    }
+    Int4MacResponse { acc, cycles: nz.max(1) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let lanes = [-8i8, 7, 0, -1, 3, -4, 5, -6];
+        assert_eq!(unpack8_i4(pack8_i4(&lanes)), lanes);
+    }
+
+    #[test]
+    fn seq_always_eight_cycles() {
+        let zero = pack8_i4(&[0; 8]);
+        assert_eq!(int4_seq_mac(zero, zero).cycles, 8);
+        let dense = pack8_i4(&[1; 8]);
+        assert_eq!(int4_seq_mac(dense, dense).cycles, 8);
+    }
+
+    #[test]
+    fn paper_example_seven_zeros_single_cycle() {
+        // "if seven of them are zeros, then the USSA will take a single
+        // clock cycle, whereas the baseline will take eight".
+        let w = pack8_i4(&[0, 0, 0, 5, 0, 0, 0, 0]);
+        let x = pack8_i4(&[1, 2, 3, 4, 5, 6, 7, -8]);
+        let vc = int4_vc_mac(w, x);
+        assert_eq!(vc.cycles, 1);
+        assert_eq!(vc.acc, 20);
+        assert_eq!(int4_seq_mac(w, x).cycles, 8);
+    }
+
+    #[test]
+    fn prop_vc_matches_seq_value() {
+        check(
+            Config::default().cases(512),
+            |r: &mut Pcg32| {
+                let mut v = Vec::with_capacity(16);
+                for _ in 0..8 {
+                    v.push(if r.bernoulli(0.6) { 0 } else { r.range_i32(-8, 7) });
+                }
+                for _ in 0..8 {
+                    v.push(r.range_i32(-8, 7));
+                }
+                v
+            },
+            |v| {
+                let w: [i8; 8] = std::array::from_fn(|i| v[i] as i8);
+                let x: [i8; 8] = std::array::from_fn(|i| v[8 + i] as i8);
+                let ww = pack8_i4(&w);
+                let xw = pack8_i4(&x);
+                let vc = int4_vc_mac(ww, xw);
+                let seq = int4_seq_mac(ww, xw);
+                let nz = w.iter().filter(|&&wi| wi != 0).count() as u32;
+                vc.acc == seq.acc && vc.cycles == nz.max(1)
+            },
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! Custom Functional Unit models.
+//!
+//! Each CFU is modelled at the CPU–CFU contract level (Fig 3): it
+//! receives two 32-bit operands (`rs1`, `rs2`) plus the `funct` fields,
+//! and returns a 32-bit result after a number of clock cycles. The cycle
+//! count is part of the architectural contract (the CPU stalls on the
+//! valid/ready handshake), so each model returns `(rd, cycles)` and the
+//! CPU timing model ([`crate::cpu`]) charges the stall.
+//!
+//! Functional semantics are bit-exact to the paper:
+//! - [`baseline`] — `cfu_simd_mac` (4 parallel INT8×INT8, 1 cycle) and the
+//!   sequential single-multiplier MAC (always 4 cycles; USSA's baseline),
+//! - [`sssa`] — `sssa_mac` (4 parallel INT7×INT8 on lookahead-encoded
+//!   weights, 1 cycle) + `sssa_inc_indvar` (Fig 4 datapath),
+//! - [`ussa`] — `ussa_vcmac`, the variable-cycle sequential MAC with
+//!   zero-compare case signals and alignment muxes (Fig 7),
+//! - [`csa`] — `csa_vcmac` (variable-cycle over decoded INT7 weights) +
+//!   `csa_inc_indvar`.
+
+pub mod baseline;
+pub mod case_logic;
+pub mod csa;
+pub mod int4;
+pub mod sssa;
+pub mod ussa;
+
+use crate::error::Result;
+use crate::isa::{CfuOpcode, DesignKind};
+
+/// Result of one CFU instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CfuResponse {
+    /// Value written back to `rd`.
+    pub rd: u32,
+    /// Clock cycles from issue to `valid` (≥ 1).
+    pub cycles: u32,
+}
+
+/// A CFU design: executes the custom instructions it implements.
+pub trait Cfu: Send {
+    /// Which design this is.
+    fn design(&self) -> DesignKind;
+
+    /// Execute one custom instruction. Errors if the op does not belong
+    /// to this design.
+    fn execute(&mut self, op: CfuOpcode, rs1: u32, rs2: u32) -> Result<CfuResponse>;
+}
+
+/// Instantiate the CFU for a design.
+///
+/// `input_offset` is the activation zero-point correction the CFU adds to
+/// each input lane before multiplying (CFU Playground's TFLite CFU bakes
+/// this in as a hardware constant; TFLite conv computes
+/// `w * (x + input_offset)` with `input_offset = -input_zero_point`).
+pub fn build_cfu(design: DesignKind, input_offset: i32) -> Box<dyn Cfu> {
+    match design {
+        DesignKind::BaselineSimd => Box::new(baseline::BaselineSimdMac::new(input_offset)),
+        DesignKind::BaselineSequential => {
+            Box::new(baseline::BaselineSequentialMac::new(input_offset))
+        }
+        DesignKind::Sssa => Box::new(sssa::SssaCfu::new(input_offset)),
+        DesignKind::Ussa => Box::new(ussa::UssaCfu::new(input_offset)),
+        DesignKind::Csa => Box::new(csa::CsaCfu::new(input_offset)),
+    }
+}
+
+/// Statically-dispatched CFU (enum devirtualization of [`build_cfu`]) —
+/// the simulator hot path executes two CFU ops per visited block, so
+/// removing the vtable indirection is a measurable win
+/// (EXPERIMENTS.md §Perf). Semantics are identical to the boxed trait
+/// objects (delegates to the same implementations).
+#[derive(Debug, Clone)]
+pub enum AnyCfu {
+    /// Baseline SIMD MAC.
+    BaselineSimd(baseline::BaselineSimdMac),
+    /// Baseline sequential MAC.
+    BaselineSequential(baseline::BaselineSequentialMac),
+    /// SSSA.
+    Sssa(sssa::SssaCfu),
+    /// USSA.
+    Ussa(ussa::UssaCfu),
+    /// CSA.
+    Csa(csa::CsaCfu),
+}
+
+impl AnyCfu {
+    /// Build for a design.
+    pub fn new(design: DesignKind, input_offset: i32) -> AnyCfu {
+        match design {
+            DesignKind::BaselineSimd => {
+                AnyCfu::BaselineSimd(baseline::BaselineSimdMac::new(input_offset))
+            }
+            DesignKind::BaselineSequential => {
+                AnyCfu::BaselineSequential(baseline::BaselineSequentialMac::new(input_offset))
+            }
+            DesignKind::Sssa => AnyCfu::Sssa(sssa::SssaCfu::new(input_offset)),
+            DesignKind::Ussa => AnyCfu::Ussa(ussa::UssaCfu::new(input_offset)),
+            DesignKind::Csa => AnyCfu::Csa(csa::CsaCfu::new(input_offset)),
+        }
+    }
+
+    /// Execute one custom instruction (static dispatch).
+    #[inline]
+    pub fn execute(&mut self, op: CfuOpcode, rs1: u32, rs2: u32) -> Result<CfuResponse> {
+        match self {
+            AnyCfu::BaselineSimd(c) => c.execute(op, rs1, rs2),
+            AnyCfu::BaselineSequential(c) => c.execute(op, rs1, rs2),
+            AnyCfu::Sssa(c) => c.execute(op, rs1, rs2),
+            AnyCfu::Ussa(c) => c.execute(op, rs1, rs2),
+            AnyCfu::Csa(c) => c.execute(op, rs1, rs2),
+        }
+    }
+}
+
+/// Shared MAC arithmetic: `Σ w_i * (x_i + input_offset)` over 4 lanes,
+/// wrapping i32 (the hardware accumulator width).
+#[inline]
+pub(crate) fn dot4(weights: [i8; 4], inputs: [i8; 4], input_offset: i32) -> i32 {
+    let mut acc = 0i32;
+    for i in 0..4 {
+        acc = acc.wrapping_add((weights[i] as i32).wrapping_mul(inputs[i] as i32 + input_offset));
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::pack::pack4_i8;
+
+    #[test]
+    fn build_all_designs() {
+        for d in DesignKind::ALL {
+            let cfu = build_cfu(d, 0);
+            assert_eq!(cfu.design(), d);
+        }
+    }
+
+    #[test]
+    fn wrong_op_rejected() {
+        let mut cfu = build_cfu(DesignKind::BaselineSimd, 0);
+        assert!(cfu.execute(CfuOpcode::SssaMac, 0, 0).is_err());
+    }
+
+    #[test]
+    fn dot4_matches_scalar() {
+        let w = [1i8, -2, 3, -4];
+        let x = [10i8, 20, -30, 40];
+        let off = 12;
+        let expect: i32 =
+            (0..4).map(|i| w[i] as i32 * (x[i] as i32 + off)).sum();
+        assert_eq!(dot4(w, x, off), expect);
+    }
+
+    #[test]
+    fn all_macs_agree_on_dense_int7_blocks() {
+        // For INT7 weights (encoded for SSSA/CSA), every design's MAC
+        // must produce the same arithmetic result.
+        let w = [5i8, -60, 0, 33];
+        let x = [-120i8, 7, 99, -1];
+        let off = 128;
+        let expect = dot4(w, x, off) as u32;
+
+        let mut enc = w;
+        crate::encoding::lookahead::encode_last_bits(&mut enc, 0b1010).unwrap();
+
+        let cases: Vec<(DesignKind, CfuOpcode, u32)> = vec![
+            (DesignKind::BaselineSimd, CfuOpcode::CfuSimdMac, pack4_i8(&w)),
+            (DesignKind::BaselineSequential, CfuOpcode::CfuSeqMac, pack4_i8(&w)),
+            (DesignKind::Sssa, CfuOpcode::SssaMac, pack4_i8(&enc)),
+            (DesignKind::Ussa, CfuOpcode::UssaVcMac, pack4_i8(&w)),
+            (DesignKind::Csa, CfuOpcode::CsaVcMac, pack4_i8(&enc)),
+        ];
+        for (design, op, rs1) in cases {
+            let mut cfu = build_cfu(design, off);
+            let resp = cfu.execute(op, rs1, pack4_i8(&x)).unwrap();
+            assert_eq!(resp.rd, expect, "{design} mac mismatch");
+        }
+    }
+}

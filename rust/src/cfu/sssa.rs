@@ -1,0 +1,155 @@
+//! SSSA — Semi-Structured Sparsity Accelerator (Section III-B, Fig 4).
+//!
+//! Two instructions share the datapath, selected by `funct7`'s LSB:
+//!
+//! - `sssa_mac` (`f0 = 0`): `rs1` carries four lookahead-encoded weights;
+//!   the hardware extracts each 7-bit weight from bits `[7:1]` of its byte
+//!   (arithmetic right shift by one) and performs a four-multiplier
+//!   parallel MAC against the four INT8 inputs in `rs2`. One cycle.
+//! - `sssa_inc_indvar` (`f0 = 1`): the four lookahead bits
+//!   `(b24, b16, b8, b0)` of `rs1` form `skip_blocks`; the unit returns
+//!   `rs2 + ((skip_blocks + 1) << 2)` — "adding one to the bits encoding
+//!   skip blocks information and left shifting by two to multiply by
+//!   four". One cycle.
+
+use super::{dot4, Cfu, CfuResponse};
+use crate::encoding::pack::{pack4_u32_skip_bits, unpack4_i8};
+use crate::error::{Error, Result};
+use crate::isa::{CfuOpcode, DesignKind};
+
+/// Decode the four 7-bit weights of an encoded register word.
+#[inline]
+pub fn decode_weights(rs1: u32) -> [i8; 4] {
+    let enc = unpack4_i8(rs1);
+    // bits [7:1] sign-extended = arithmetic shift right by 1.
+    [enc[0] >> 1, enc[1] >> 1, enc[2] >> 1, enc[3] >> 1]
+}
+
+/// The induction-variable increment datapath: `(skip + 1) << 2`.
+#[inline]
+pub fn indvar_increment(rs1: u32) -> u32 {
+    ((pack4_u32_skip_bits(rs1) as u32) + 1) << 2
+}
+
+/// The SSSA CFU.
+#[derive(Debug, Clone)]
+pub struct SssaCfu {
+    input_offset: i32,
+}
+
+impl SssaCfu {
+    /// New unit.
+    pub fn new(input_offset: i32) -> Self {
+        SssaCfu { input_offset }
+    }
+}
+
+impl Cfu for SssaCfu {
+    fn design(&self) -> DesignKind {
+        DesignKind::Sssa
+    }
+
+    fn execute(&mut self, op: CfuOpcode, rs1: u32, rs2: u32) -> Result<CfuResponse> {
+        match op {
+            CfuOpcode::SssaMac => {
+                let w = decode_weights(rs1);
+                let x = unpack4_i8(rs2);
+                Ok(CfuResponse { rd: dot4(w, x, self.input_offset) as u32, cycles: 1 })
+            }
+            CfuOpcode::SssaIncIndvar => {
+                Ok(CfuResponse { rd: rs2.wrapping_add(indvar_increment(rs1)), cycles: 1 })
+            }
+            other => {
+                Err(Error::Sim(format!("SSSA CFU cannot execute {}", other.mnemonic())))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::lookahead::encode_last_bits;
+    use crate::encoding::pack::pack4_i8;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Pcg32;
+
+    fn encoded_word(weights: [i8; 4], skip: u8) -> u32 {
+        let mut enc = weights;
+        encode_last_bits(&mut enc, skip).unwrap();
+        pack4_i8(&enc)
+    }
+
+    #[test]
+    fn mac_decodes_weights_exactly() {
+        let mut cfu = SssaCfu::new(0);
+        let w = [-64i8, 63, 0, -1];
+        let x = [3i8, -2, 100, 50];
+        let rs1 = encoded_word(w, 0b1111); // skip bits must not disturb MAC
+        let r = cfu.execute(CfuOpcode::SssaMac, rs1, pack4_i8(&x)).unwrap();
+        let expect: i32 = (0..4).map(|i| w[i] as i32 * x[i] as i32).sum();
+        assert_eq!(r.rd as i32, expect);
+        assert_eq!(r.cycles, 1);
+    }
+
+    #[test]
+    fn inc_indvar_adds_skip_plus_one_blocks() {
+        let mut cfu = SssaCfu::new(0);
+        for skip in 0..=15u8 {
+            let rs1 = encoded_word([1, 2, 3, 4], skip);
+            let i0 = 36u32;
+            let r = cfu.execute(CfuOpcode::SssaIncIndvar, rs1, i0).unwrap();
+            assert_eq!(r.rd, i0 + 4 * (skip as u32 + 1), "skip={skip}");
+            assert_eq!(r.cycles, 1);
+        }
+    }
+
+    #[test]
+    fn increment_is_seven_bit_datapath() {
+        // max skip 15 → increment (15+1)*4 = 64 = (a4..a0,0,0) with a4=1:
+        // fits the 7-bit increment of Fig 4.
+        assert_eq!(indvar_increment(encoded_word([0, 0, 0, 0], 15)), 64);
+        assert_eq!(indvar_increment(encoded_word([0, 0, 0, 0], 0)), 4);
+    }
+
+    #[test]
+    fn mac_with_input_offset() {
+        let mut cfu = SssaCfu::new(128);
+        let w = [2i8, -3, 0, 1];
+        let x = [-128i8, 0, 5, 127];
+        let r = cfu
+            .execute(CfuOpcode::SssaMac, encoded_word(w, 0), pack4_i8(&x))
+            .unwrap();
+        let expect: i32 = (0..4).map(|i| w[i] as i32 * (x[i] as i32 + 128)).sum();
+        assert_eq!(r.rd as i32, expect);
+    }
+
+    #[test]
+    fn prop_mac_equals_int7_dot() {
+        check(
+            Config::default().cases(256),
+            |r: &mut Pcg32| {
+                let mut v = Vec::with_capacity(9);
+                for _ in 0..4 {
+                    v.push(r.range_i32(-64, 63));
+                }
+                for _ in 0..4 {
+                    v.push(r.range_i32(-128, 127));
+                }
+                v.push(r.range_i32(0, 15));
+                v
+            },
+            |v| {
+                let w = [v[0] as i8, v[1] as i8, v[2] as i8, v[3] as i8];
+                let x = [v[4] as i8, v[5] as i8, v[6] as i8, v[7] as i8];
+                let skip = v[8] as u8;
+                let mut cfu = SssaCfu::new(0);
+                let r = cfu
+                    .execute(CfuOpcode::SssaMac, encoded_word(w, skip), pack4_i8(&x))
+                    .unwrap();
+                let expect: i32 = (0..4).map(|i| w[i] as i32 * x[i] as i32).sum();
+                r.rd as i32 == expect
+            },
+        );
+    }
+}

@@ -1,0 +1,129 @@
+//! USSA — Unstructured Sparsity Accelerator (Section III-C, Fig 7).
+//!
+//! `ussa_vcmac`: a variable-cycle sequential MAC. The four INT8 weights
+//! in `rs1` are zero-compared in parallel (case signal); alignment muxes
+//! compact the non-zero `(w, x)` pairs onto a single sequential
+//! multiplier, which takes one cycle per non-zero weight — one idle cycle
+//! for an all-zero block. No assumptions on the structure or number of
+//! zeros.
+
+use super::case_logic::{align_nonzero, case_signal, mac_cycles};
+use super::{Cfu, CfuResponse};
+use crate::encoding::pack::unpack4_i8;
+use crate::error::{Error, Result};
+use crate::isa::{CfuOpcode, DesignKind};
+
+/// The USSA CFU.
+#[derive(Debug, Clone)]
+pub struct UssaCfu {
+    input_offset: i32,
+}
+
+impl UssaCfu {
+    /// New unit.
+    pub fn new(input_offset: i32) -> Self {
+        UssaCfu { input_offset }
+    }
+}
+
+impl Cfu for UssaCfu {
+    fn design(&self) -> DesignKind {
+        DesignKind::Ussa
+    }
+
+    fn execute(&mut self, op: CfuOpcode, rs1: u32, rs2: u32) -> Result<CfuResponse> {
+        match op {
+            CfuOpcode::UssaVcMac => {
+                let w = unpack4_i8(rs1);
+                let x = unpack4_i8(rs2);
+                let case = case_signal(&w);
+                let (wa, xa, n) = align_nonzero(&w, &x, case);
+                // Sequential MAC over the aligned non-zero lanes.
+                let mut acc = 0i32;
+                for i in 0..n {
+                    acc = acc
+                        .wrapping_add((wa[i] as i32).wrapping_mul(xa[i] as i32 + self.input_offset));
+                }
+                Ok(CfuResponse { rd: acc as u32, cycles: mac_cycles(case) })
+            }
+            other => {
+                Err(Error::Sim(format!("USSA CFU cannot execute {}", other.mnemonic())))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfu::dot4;
+    use crate::encoding::pack::pack4_i8;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn cycles_equal_nonzero_count() {
+        let mut cfu = UssaCfu::new(0);
+        let x = pack4_i8(&[1, 1, 1, 1]);
+        let cases: [([i8; 4], u32); 5] = [
+            ([0, 0, 0, 0], 1), // all-zero: single cycle
+            ([5, 0, 0, 0], 1),
+            ([5, 0, -3, 0], 2),
+            ([5, 1, -3, 0], 3),
+            ([5, 1, -3, 9], 4),
+        ];
+        for (w, expect_cycles) in cases {
+            let r = cfu.execute(CfuOpcode::UssaVcMac, pack4_i8(&w), x).unwrap();
+            assert_eq!(r.cycles, expect_cycles, "weights {w:?}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_lanes_do_not_contribute_offset() {
+        // Critical: with input_offset != 0, a zero weight must contribute
+        // 0 (w * (x + off) = 0), so skipping it is arithmetically safe.
+        let mut cfu = UssaCfu::new(128);
+        let w = [0i8, 7, 0, -9];
+        let x = [55i8, -66, 77, -88];
+        let r = cfu.execute(CfuOpcode::UssaVcMac, pack4_i8(&w), pack4_i8(&x)).unwrap();
+        assert_eq!(r.rd as i32, dot4(w, x, 128));
+    }
+
+    #[test]
+    fn matches_baseline_simd_value() {
+        use crate::cfu::baseline::BaselineSimdMac;
+        let mut ussa = UssaCfu::new(3);
+        let mut base = BaselineSimdMac::new(3);
+        let w = pack4_i8(&[-128, 0, 127, 1]);
+        let x = pack4_i8(&[9, 9, -9, 0]);
+        assert_eq!(
+            ussa.execute(CfuOpcode::UssaVcMac, w, x).unwrap().rd,
+            base.execute(CfuOpcode::CfuSimdMac, w, x).unwrap().rd
+        );
+    }
+
+    #[test]
+    fn prop_value_and_cycles() {
+        check(
+            Config::default().cases(512),
+            |r: &mut Pcg32| {
+                let mut v = Vec::with_capacity(8);
+                for _ in 0..4 {
+                    v.push(if r.bernoulli(0.5) { 0 } else { r.range_i32(-128, 127) });
+                }
+                for _ in 0..4 {
+                    v.push(r.range_i32(-128, 127));
+                }
+                v
+            },
+            |v| {
+                let w = [v[0] as i8, v[1] as i8, v[2] as i8, v[3] as i8];
+                let x = [v[4] as i8, v[5] as i8, v[6] as i8, v[7] as i8];
+                let mut cfu = UssaCfu::new(128);
+                let r = cfu.execute(CfuOpcode::UssaVcMac, pack4_i8(&w), pack4_i8(&x)).unwrap();
+                let nz = w.iter().filter(|&&wi| wi != 0).count() as u32;
+                r.rd as i32 == dot4(w, x, 128) && r.cycles == nz.max(1)
+            },
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! Minimal declarative CLI parser (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options with defaults, and positional arguments, plus generated
+//! `--help` text. Used by the `sparse-riscv` binary, the examples, and
+//! the bench harness.
+
+pub mod parser;
+
+pub use parser::{ArgSpec, Command, ParsedArgs};

@@ -1,0 +1,338 @@
+//! Declarative argument parsing.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Specification of one option/flag/positional.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    /// Long name without dashes (`"sparsity"` → `--sparsity`).
+    pub name: &'static str,
+    /// Help text.
+    pub help: &'static str,
+    /// Default value; `None` makes the argument required.
+    pub default: Option<String>,
+    /// Boolean flag (no value).
+    pub is_flag: bool,
+}
+
+impl ArgSpec {
+    /// Option with a default value.
+    pub fn opt(name: &'static str, default: &str, help: &'static str) -> Self {
+        ArgSpec { name, help, default: Some(default.to_string()), is_flag: false }
+    }
+
+    /// Required option.
+    pub fn required(name: &'static str, help: &'static str) -> Self {
+        ArgSpec { name, help, default: None, is_flag: false }
+    }
+
+    /// Boolean flag.
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        ArgSpec { name, help, default: Some(String::new()), is_flag: true }
+    }
+}
+
+/// A (sub)command with its argument specs.
+#[derive(Debug, Clone)]
+pub struct Command {
+    /// Command name (binary name for the root command).
+    pub name: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Named options and flags.
+    pub args: Vec<ArgSpec>,
+    /// Subcommands (if non-empty the first positional selects one).
+    pub subcommands: Vec<Command>,
+}
+
+impl Command {
+    /// New command.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, args: Vec::new(), subcommands: Vec::new() }
+    }
+
+    /// Add an argument spec.
+    pub fn arg(mut self, spec: ArgSpec) -> Self {
+        self.args.push(spec);
+        self
+    }
+
+    /// Add a subcommand.
+    pub fn subcommand(mut self, cmd: Command) -> Self {
+        self.subcommands.push(cmd);
+        self
+    }
+
+    /// Render help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str(" <SUBCOMMAND>");
+        }
+        if !self.args.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        s.push('\n');
+        if !self.args.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for a in &self.args {
+                let meta = if a.is_flag { String::new() } else { " <VALUE>".to_string() };
+                let dflt = match (&a.default, a.is_flag) {
+                    (Some(d), false) if !d.is_empty() => format!(" [default: {d}]"),
+                    (None, _) => " [required]".to_string(),
+                    _ => String::new(),
+                };
+                s.push_str(&format!("  --{}{}\n      {}{}\n", a.name, meta, a.help, dflt));
+            }
+        }
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for c in &self.subcommands {
+                s.push_str(&format!("  {:14} {}\n", c.name, c.about));
+            }
+        }
+        s
+    }
+
+    /// Parse a token list (excluding argv[0]).
+    pub fn parse(&self, tokens: &[String]) -> Result<ParsedArgs> {
+        // Help short-circuits.
+        if tokens.iter().any(|t| t == "--help" || t == "-h") {
+            return Ok(ParsedArgs {
+                command_path: vec![self.name.to_string()],
+                values: HashMap::new(),
+                positionals: Vec::new(),
+                help: Some(self.help_text()),
+            });
+        }
+        // Subcommand dispatch.
+        if !self.subcommands.is_empty() {
+            match tokens.first() {
+                Some(tok) if !tok.starts_with('-') => {
+                    let sub = self
+                        .subcommands
+                        .iter()
+                        .find(|c| c.name == tok)
+                        .ok_or_else(|| Error::Cli(format!("unknown subcommand '{tok}'")))?;
+                    let mut parsed = sub.parse(&tokens[1..])?;
+                    parsed.command_path.insert(0, self.name.to_string());
+                    return Ok(parsed);
+                }
+                _ => {
+                    return Err(Error::Cli(format!(
+                        "expected a subcommand; try '{} --help'",
+                        self.name
+                    )));
+                }
+            }
+        }
+        let mut values: HashMap<String, String> = HashMap::new();
+        let mut positionals = Vec::new();
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| Error::Cli(format!("unknown option '--{key}'")))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(Error::Cli(format!("flag '--{key}' takes no value")));
+                    }
+                    values.insert(key, "true".to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Cli(format!("option '--{key}' needs a value")))?
+                        }
+                    };
+                    values.insert(key, val);
+                }
+            } else {
+                positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Apply defaults / required checks.
+        for spec in &self.args {
+            if values.contains_key(spec.name) {
+                continue;
+            }
+            match &spec.default {
+                Some(d) if spec.is_flag => {
+                    let _ = d;
+                    values.insert(spec.name.to_string(), "false".to_string());
+                }
+                Some(d) => {
+                    values.insert(spec.name.to_string(), d.clone());
+                }
+                None => {
+                    return Err(Error::Cli(format!("missing required option '--{}'", spec.name)))
+                }
+            }
+        }
+        Ok(ParsedArgs {
+            command_path: vec![self.name.to_string()],
+            values,
+            positionals,
+            help: None,
+        })
+    }
+
+    /// Parse the process arguments.
+    pub fn parse_env(&self) -> Result<ParsedArgs> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&tokens)
+    }
+}
+
+/// Parsed argument values.
+#[derive(Debug, Clone)]
+pub struct ParsedArgs {
+    /// Command path, e.g. `["sparse-riscv", "bench"]`.
+    pub command_path: Vec<String>,
+    /// Resolved option values (defaults applied).
+    pub values: HashMap<String, String>,
+    /// Positional arguments.
+    pub positionals: Vec<String>,
+    /// Help text, if `--help` was requested.
+    pub help: Option<String>,
+}
+
+impl ParsedArgs {
+    /// Leaf subcommand name.
+    pub fn subcommand(&self) -> &str {
+        self.command_path.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// String value (defaults are always present, so missing = program bug).
+    pub fn get(&self, name: &str) -> Result<&str> {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::Cli(format!("internal: option '{name}' not declared")))
+    }
+
+    /// Typed accessors.
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)?
+            .parse()
+            .map_err(|e| Error::Cli(format!("option '--{name}' expects a number: {e}")))
+    }
+
+    /// Parse as usize.
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)?
+            .parse()
+            .map_err(|e| Error::Cli(format!("option '--{name}' expects an integer: {e}")))
+    }
+
+    /// Parse as u64.
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)?
+            .parse()
+            .map_err(|e| Error::Cli(format!("option '--{name}' expects an integer: {e}")))
+    }
+
+    /// Flag state.
+    pub fn get_flag(&self, name: &str) -> Result<bool> {
+        Ok(self.get(name)? == "true")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("tool", "test tool")
+            .arg(ArgSpec::opt("sparsity", "0.5", "sparsity ratio"))
+            .arg(ArgSpec::required("model", "model name"))
+            .arg(ArgSpec::flag("verbose", "chatty output"))
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = cmd().parse(&toks(&["--model", "dscnn"])).unwrap();
+        assert_eq!(p.get("sparsity").unwrap(), "0.5");
+        assert_eq!(p.get("model").unwrap(), "dscnn");
+        assert!(!p.get_flag("verbose").unwrap());
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&toks(&[])).is_err());
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = cmd().parse(&toks(&["--model=vgg16", "--sparsity=0.9", "--verbose"])).unwrap();
+        assert_eq!(p.get("model").unwrap(), "vgg16");
+        assert_eq!(p.get_f64("sparsity").unwrap(), 0.9);
+        assert!(p.get_flag("verbose").unwrap());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&toks(&["--model", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&toks(&["--model", "x", "--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn subcommand_dispatch() {
+        let root = Command::new("root", "r")
+            .subcommand(Command::new("run", "run things").arg(ArgSpec::opt("n", "3", "count")));
+        let p = root.parse(&toks(&["run", "--n", "7"])).unwrap();
+        assert_eq!(p.command_path, vec!["root", "run"]);
+        assert_eq!(p.subcommand(), "run");
+        assert_eq!(p.get_usize("n").unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_subcommand_rejected() {
+        let root = Command::new("root", "r").subcommand(Command::new("run", "x"));
+        assert!(root.parse(&toks(&["fly"])).is_err());
+    }
+
+    #[test]
+    fn help_requested() {
+        let p = cmd().parse(&toks(&["--help"])).unwrap();
+        let h = p.help.unwrap();
+        assert!(h.contains("--sparsity"));
+        assert!(h.contains("[default: 0.5]"));
+        assert!(h.contains("[required]"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let c = Command::new("t", "t").arg(ArgSpec::opt("k", "v", "h"));
+        let p = c.parse(&toks(&["a", "--k", "x", "b"])).unwrap();
+        assert_eq!(p.positionals, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn typed_parse_errors() {
+        let p = cmd().parse(&toks(&["--model", "m", "--sparsity", "abc"])).unwrap();
+        assert!(p.get_f64("sparsity").is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! Typed experiment configuration consumed by the coordinator.
+
+use super::value::Value;
+use crate::error::{Error, Result};
+use crate::isa::DesignKind;
+
+/// Simulator options.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimOptions {
+    /// RNG seed for synthetic weights/inputs.
+    pub seed: u64,
+    /// Worker threads for the coordinator (0 = auto).
+    pub threads: usize,
+    /// Verify kernel outputs against the reference nn ops.
+    pub verify: bool,
+    /// Clock frequency (Hz) used to convert cycles to wall time
+    /// (paper: 100 MHz LiteX SoC).
+    pub clock_hz: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { seed: 0xDEAD_BEEF, threads: 0, verify: true, clock_hz: 100_000_000 }
+    }
+}
+
+/// One experiment: a model, a design, sparsity levels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Experiment name (report label).
+    pub name: String,
+    /// Model zoo identifier (`vgg16`, `resnet56`, `mobilenetv2`, `dscnn`).
+    pub model: String,
+    /// Accelerator designs to evaluate.
+    pub designs: Vec<DesignKind>,
+    /// Unstructured sparsity within surviving blocks (x_us).
+    pub x_us: f64,
+    /// Semi-structured 4:4 block sparsity (x_ss).
+    pub x_ss: f64,
+    /// Batch of inference requests to simulate.
+    pub batch: usize,
+    /// Simulator options.
+    pub sim: SimOptions,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            model: "dscnn".into(),
+            designs: vec![DesignKind::BaselineSimd, DesignKind::Csa],
+            x_us: 0.5,
+            x_ss: 0.3,
+            batch: 1,
+            sim: SimOptions::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Validate ranges.
+    pub fn validate(&self) -> Result<()> {
+        for (label, x) in [("x_us", self.x_us), ("x_ss", self.x_ss)] {
+            if !(0.0..=1.0).contains(&x) {
+                return Err(Error::Config(format!("{label} must be in [0,1], got {x}")));
+            }
+        }
+        if self.designs.is_empty() {
+            return Err(Error::Config("at least one design required".into()));
+        }
+        if self.batch == 0 {
+            return Err(Error::Config("batch must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Parse from a JSON value.
+    pub fn from_value(v: &Value) -> Result<ExperimentConfig> {
+        let d = ExperimentConfig::default();
+        let designs = match v.get_opt("designs") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|x| {
+                    let s = x.as_str()?;
+                    DesignKind::parse(s)
+                        .ok_or_else(|| Error::Config(format!("unknown design '{s}'")))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => d.designs.clone(),
+        };
+        let sim = match v.get_opt("sim") {
+            Some(s) => SimOptions {
+                seed: s.get_opt("seed").map(|x| x.as_i64()).transpose()?.map(|i| i as u64)
+                    .unwrap_or(d.sim.seed),
+                threads: s.get_opt("threads").map(|x| x.as_usize()).transpose()?
+                    .unwrap_or(d.sim.threads),
+                verify: s.get_opt("verify").map(|x| x.as_bool()).transpose()?
+                    .unwrap_or(d.sim.verify),
+                clock_hz: s.get_opt("clock_hz").map(|x| x.as_i64()).transpose()?
+                    .map(|i| i as u64).unwrap_or(d.sim.clock_hz),
+            },
+            None => d.sim.clone(),
+        };
+        let cfg = ExperimentConfig {
+            name: v.get_opt("name").map(|x| x.as_str().map(String::from)).transpose()?
+                .unwrap_or(d.name),
+            model: v.get_opt("model").map(|x| x.as_str().map(String::from)).transpose()?
+                .unwrap_or(d.model),
+            designs,
+            x_us: v.get_opt("x_us").map(|x| x.as_f64()).transpose()?.unwrap_or(d.x_us),
+            x_ss: v.get_opt("x_ss").map(|x| x.as_f64()).transpose()?.unwrap_or(d.x_ss),
+            batch: v.get_opt("batch").map(|x| x.as_usize()).transpose()?.unwrap_or(d.batch),
+            sim,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json(json: &str) -> Result<ExperimentConfig> {
+        ExperimentConfig::from_value(&Value::parse(json)?)
+    }
+
+    /// Serialize to a JSON value.
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("model", Value::Str(self.model.clone())),
+            (
+                "designs",
+                Value::Arr(
+                    self.designs.iter().map(|d| Value::Str(d.name().to_string())).collect(),
+                ),
+            ),
+            ("x_us", Value::Num(self.x_us)),
+            ("x_ss", Value::Num(self.x_ss)),
+            ("batch", Value::Num(self.batch as f64)),
+            (
+                "sim",
+                Value::obj(vec![
+                    ("seed", Value::Num(self.sim.seed as f64)),
+                    ("threads", Value::Num(self.sim.threads as f64)),
+                    ("verify", Value::Bool(self.sim.verify)),
+                    ("clock_hz", Value::Num(self.sim.clock_hz as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// A sweep over sparsity values (Figures 8/9 harness input).
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Sparsity grid.
+    pub sparsities: Vec<f64>,
+    /// Elements per measured lane.
+    pub lane_len: usize,
+    /// Lanes per measurement (statistical mass).
+    pub lanes: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            sparsities: (0..=19).map(|i| i as f64 * 0.05).collect(),
+            lane_len: 256,
+            lanes: 64,
+            seed: 0xFEED,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ExperimentConfig {
+            name: "fig10-dscnn".into(),
+            model: "dscnn".into(),
+            designs: vec![DesignKind::Csa, DesignKind::BaselineSimd],
+            x_us: 0.6,
+            x_ss: 0.25,
+            batch: 4,
+            sim: SimOptions { seed: 7, threads: 2, verify: false, clock_hz: 100_000_000 },
+        };
+        let json = cfg.to_value().to_json();
+        let back = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = ExperimentConfig::from_json(r#"{"model": "vgg16", "x_ss": 0.4}"#).unwrap();
+        assert_eq!(cfg.model, "vgg16");
+        assert_eq!(cfg.x_ss, 0.4);
+        assert_eq!(cfg.x_us, ExperimentConfig::default().x_us);
+    }
+
+    #[test]
+    fn invalid_ranges_rejected() {
+        assert!(ExperimentConfig::from_json(r#"{"x_us": 1.5}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"batch": 0}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"designs": []}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"designs": ["warp"]}"#).is_err());
+    }
+}

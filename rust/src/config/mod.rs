@@ -1,0 +1,14 @@
+//! Configuration system.
+//!
+//! [`value`] implements a strict JSON parser/serializer (no `serde`
+//! offline); [`experiment`] defines the typed experiment configurations
+//! the coordinator consumes (design choice, model, sparsity levels,
+//! simulator options) with JSON (de)serialization and validation.
+//! Weight/model interchange with the Python layer (train.py exports)
+//! also flows through [`value`].
+
+pub mod experiment;
+pub mod value;
+
+pub use experiment::{ExperimentConfig, SimOptions, SweepConfig};
+pub use value::Value;

@@ -1,0 +1,17 @@
+//! L3 coordinator: the system glue that owns process lifecycle, worker
+//! threads, experiment orchestration, and the request-serving loop.
+//!
+//! - [`scheduler`] — a generic work-stealing-free threaded job pool
+//!   (std threads + channels; no tokio offline),
+//! - [`runner`] — experiment orchestration: build model → prune → prepare
+//!   per design → simulate batch → collect speedups,
+//! - [`serve`] — a closed-loop inference server over the cycle simulator
+//!   with latency/throughput metrics (simulated clock + host wall clock).
+
+pub mod runner;
+pub mod scheduler;
+pub mod serve;
+
+pub use runner::{run_experiment, DesignResult, ExperimentResult};
+pub use scheduler::JobPool;
+pub use serve::{ServeMetrics, ServeOptions, Server};

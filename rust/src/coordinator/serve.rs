@@ -1,0 +1,168 @@
+//! Closed-loop inference serving over the cycle simulator.
+//!
+//! Models the deployed TinyML system: requests arrive, worker threads run
+//! them through the prepared (encoded) model, and metrics track both the
+//! *simulated device time* (cycles at the SoC clock) and host wall time.
+//! Demonstrates that the rust coordinator owns the request path end to
+//! end — Python never appears here.
+
+use super::scheduler::JobPool;
+use crate::error::Result;
+use crate::isa::DesignKind;
+use crate::nn::graph::Graph;
+use crate::simulator::{PreparedModel, SimEngine};
+use crate::tensor::QTensor;
+use crate::util::stats::{OnlineStats, Percentiles};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Server options.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// SoC clock for simulated-latency conversion.
+    pub clock_hz: u64,
+    /// Verify outputs against the reference ops.
+    pub verify: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { threads: 0, clock_hz: 100_000_000, verify: false }
+    }
+}
+
+/// Serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    /// Requests completed.
+    pub completed: u64,
+    /// Simulated device latency stats (seconds at the SoC clock).
+    pub sim_latency: OnlineStats,
+    /// Simulated latency percentiles.
+    pub sim_percentiles: Percentiles,
+    /// Host wall-clock seconds for the whole batch.
+    pub wall_seconds: f64,
+    /// Total simulated cycles.
+    pub total_cycles: u64,
+}
+
+impl ServeMetrics {
+    /// Simulated device throughput (inferences/sec at the SoC clock),
+    /// assuming sequential execution on the single-core SoC.
+    pub fn sim_throughput(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.sim_latency.mean() / self.completed as f64
+    }
+}
+
+/// An inference server bound to one design.
+pub struct Server {
+    engine: SimEngine,
+    prepared: Arc<PreparedModel>,
+    pool: JobPool,
+    clock_hz: u64,
+}
+
+impl Server {
+    /// Prepare a model for serving.
+    pub fn new(graph: &Graph, design: DesignKind, opts: &ServeOptions) -> Result<Self> {
+        let engine = SimEngine::new(design).with_verify(opts.verify);
+        let prepared = Arc::new(engine.prepare(graph)?);
+        Ok(Server { engine, prepared, pool: JobPool::new(opts.threads), clock_hz: opts.clock_hz })
+    }
+
+    /// Design served.
+    pub fn design(&self) -> DesignKind {
+        self.engine.design
+    }
+
+    /// Serve a batch of requests; returns per-request predicted classes
+    /// and aggregate metrics.
+    pub fn serve_batch(&self, requests: Vec<QTensor>) -> Result<(Vec<usize>, ServeMetrics)> {
+        let t0 = Instant::now();
+        let engine = self.engine.clone();
+        let prepared = Arc::clone(&self.prepared);
+        let classes = self.prepared.classes;
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let clock = self.clock_hz;
+        let m2 = Arc::clone(&metrics);
+        let outputs: Vec<Result<usize>> = self.pool.map(requests, move |req| {
+            let report = engine.run(&prepared, &req)?;
+            let pred = crate::nn::activation::argmax(&report.output, classes)?[0];
+            let mut m = m2.lock().unwrap();
+            m.completed += 1;
+            m.total_cycles += report.total_cycles;
+            let lat = report.seconds_at(clock);
+            m.sim_latency.push(lat);
+            m.sim_percentiles.push(lat);
+            Ok(pred)
+        });
+        let mut preds = Vec::with_capacity(outputs.len());
+        for o in outputs {
+            preds.push(o?);
+        }
+        // Workers may still hold their Arc clones for an instant after
+        // delivering results, so clone out of the mutex instead of
+        // unwrapping the Arc.
+        let mut metrics = metrics.lock().unwrap().clone();
+        metrics.wall_seconds = t0.elapsed().as_secs_f64();
+        Ok((preds, metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builder::{apply_sparsity, random_input, ModelConfig};
+    use crate::models::zoo::build_model;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn serves_batch_with_metrics() {
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let mut info = build_model("dscnn", &cfg).unwrap();
+        apply_sparsity(&mut info.graph, 0.5, 0.3);
+        let server = Server::new(
+            &info.graph,
+            DesignKind::Csa,
+            &ServeOptions { threads: 2, clock_hz: 100_000_000, verify: false },
+        )
+        .unwrap();
+        let mut rng = Pcg32::new(5);
+        let reqs: Vec<QTensor> = (0..6)
+            .map(|_| random_input(info.input_shape.clone(), cfg.act_params(), &mut rng))
+            .collect();
+        let (preds, metrics) = server.serve_batch(reqs).unwrap();
+        assert_eq!(preds.len(), 6);
+        assert!(preds.iter().all(|&p| p < 12));
+        assert_eq!(metrics.completed, 6);
+        assert!(metrics.total_cycles > 0);
+        assert!(metrics.sim_latency.mean() > 0.0);
+        assert!(metrics.wall_seconds > 0.0);
+    }
+
+    #[test]
+    fn deterministic_predictions_across_designs() {
+        // Same INT7 weights ⇒ every design must predict identically.
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let mut info = build_model("dscnn", &cfg).unwrap();
+        apply_sparsity(&mut info.graph, 0.4, 0.2);
+        let mut rng = Pcg32::new(6);
+        let reqs: Vec<QTensor> = (0..3)
+            .map(|_| random_input(info.input_shape.clone(), cfg.act_params(), &mut rng))
+            .collect();
+        let mut all_preds = Vec::new();
+        for design in [DesignKind::BaselineSimd, DesignKind::Ussa, DesignKind::Csa] {
+            let server =
+                Server::new(&info.graph, design, &ServeOptions::default()).unwrap();
+            let (preds, _) = server.serve_batch(reqs.clone()).unwrap();
+            all_preds.push(preds);
+        }
+        assert_eq!(all_preds[0], all_preds[1]);
+        assert_eq!(all_preds[0], all_preds[2]);
+    }
+}

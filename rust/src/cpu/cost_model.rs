@@ -1,0 +1,80 @@
+//! Instruction cycle costs of the modelled core.
+
+/// Per-class cycle costs for a VexRiscv-like five-stage in-order core.
+///
+/// Defaults correspond to the "full" VexRiscv configuration used by CFU
+/// Playground: single-issue, 1-cycle ALU ops, 1-cycle cached loads and
+/// stores, taken branches flush the front-end (1 + 2 penalty cycles),
+/// and custom instructions occupy the pipeline for one issue cycle plus
+/// any CFU stall cycles (charged separately from [`super::CycleCounter`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CostModel {
+    /// Integer ALU op (add/sub/shift/logic/compare).
+    pub alu: u64,
+    /// Load (cache hit).
+    pub load: u64,
+    /// Store (cache hit).
+    pub store: u64,
+    /// Taken branch/jump (includes pipeline flush).
+    pub branch_taken: u64,
+    /// Not-taken branch.
+    pub branch_not_taken: u64,
+    /// CFU instruction issue slot (stall cycles added per-response).
+    pub cfu_issue: u64,
+}
+
+impl CostModel {
+    /// VexRiscv five-stage defaults (CFU Playground configuration).
+    pub fn vexriscv() -> Self {
+        CostModel {
+            alu: 1,
+            load: 1,
+            store: 1,
+            branch_taken: 3,
+            branch_not_taken: 1,
+            cfu_issue: 1,
+        }
+    }
+
+    /// An idealized core where only CFU cycles count — used to isolate
+    /// the MAC-unit speedups the paper's analytical model describes
+    /// (Figures 8/9 "observed" series measure the accelerated inner
+    /// loop; this mode removes the common loop overhead from both sides
+    /// of the ratio).
+    pub fn mac_only() -> Self {
+        CostModel {
+            alu: 0,
+            load: 0,
+            store: 0,
+            branch_taken: 0,
+            branch_not_taken: 0,
+            cfu_issue: 1,
+        }
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::vexriscv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vexriscv_defaults_sane() {
+        let m = CostModel::vexriscv();
+        assert_eq!(m.alu, 1);
+        assert!(m.branch_taken > m.branch_not_taken);
+        assert_eq!(m.cfu_issue, 1);
+    }
+
+    #[test]
+    fn mac_only_zeroes_cpu_side() {
+        let m = CostModel::mac_only();
+        assert_eq!(m.alu + m.load + m.store + m.branch_taken + m.branch_not_taken, 0);
+        assert_eq!(m.cfu_issue, 1);
+    }
+}

@@ -1,0 +1,262 @@
+//! Cycle and instruction accounting.
+
+use super::cost_model::CostModel;
+use crate::cfu::CfuResponse;
+
+/// Instruction classes tracked by the counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstrClass {
+    /// Integer ALU.
+    Alu,
+    /// Load.
+    Load,
+    /// Store.
+    Store,
+    /// Branch (taken or not).
+    Branch,
+    /// CFU custom instruction.
+    Cfu,
+}
+
+/// Accumulates cycles and instruction counts for one simulated kernel run.
+#[derive(Debug, Clone)]
+pub struct CycleCounter {
+    model: CostModel,
+    cycles: u64,
+    instrs: [u64; 5],
+    /// Stall cycles spent waiting on multi-cycle CFU responses.
+    cfu_stall_cycles: u64,
+    /// Cycles attributable to the CFU (issue + stall) — the "MAC unit"
+    /// share used for Figure 8/9 style accounting.
+    cfu_total_cycles: u64,
+    /// Bytes moved by loads (memory-traffic model).
+    loaded_bytes: u64,
+    /// Bytes moved by stores.
+    stored_bytes: u64,
+}
+
+impl CycleCounter {
+    /// New counter under a cost model.
+    pub fn new(model: CostModel) -> Self {
+        CycleCounter {
+            model,
+            cycles: 0,
+            instrs: [0; 5],
+            cfu_stall_cycles: 0,
+            cfu_total_cycles: 0,
+            loaded_bytes: 0,
+            stored_bytes: 0,
+        }
+    }
+
+    /// Charge `n` ALU instructions.
+    #[inline]
+    pub fn alu(&mut self, n: u64) {
+        self.instrs[0] += n;
+        self.cycles += n * self.model.alu;
+    }
+
+    /// Charge `n` word loads.
+    #[inline]
+    pub fn load_words(&mut self, n: u64) {
+        self.instrs[1] += n;
+        self.cycles += n * self.model.load;
+        self.loaded_bytes += n * 4;
+    }
+
+    /// Charge `n` word stores.
+    #[inline]
+    pub fn store_words(&mut self, n: u64) {
+        self.instrs[2] += n;
+        self.cycles += n * self.model.store;
+        self.stored_bytes += n * 4;
+    }
+
+    /// Charge one branch.
+    #[inline]
+    pub fn branch(&mut self, taken: bool) {
+        self.instrs[3] += 1;
+        self.cycles +=
+            if taken { self.model.branch_taken } else { self.model.branch_not_taken };
+    }
+
+    /// Charge one CFU instruction given its response.
+    #[inline]
+    pub fn cfu(&mut self, resp: &CfuResponse) {
+        self.instrs[4] += 1;
+        let stall = (resp.cycles as u64).saturating_sub(1);
+        let total = self.model.cfu_issue + stall;
+        self.cycles += total;
+        self.cfu_stall_cycles += stall;
+        self.cfu_total_cycles += total;
+    }
+
+    /// Total cycles so far.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Instruction count for a class.
+    pub fn instr_count(&self, class: InstrClass) -> u64 {
+        self.instrs[class as usize]
+    }
+
+    /// Total retired instructions.
+    pub fn total_instrs(&self) -> u64 {
+        self.instrs.iter().sum()
+    }
+
+    /// CFU stall cycles.
+    pub fn cfu_stalls(&self) -> u64 {
+        self.cfu_stall_cycles
+    }
+
+    /// CFU issue+stall cycles (the MAC-unit share).
+    pub fn cfu_cycles(&self) -> u64 {
+        self.cfu_total_cycles
+    }
+
+    /// Bytes loaded.
+    pub fn loaded_bytes(&self) -> u64 {
+        self.loaded_bytes
+    }
+
+    /// Bytes stored.
+    pub fn stored_bytes(&self) -> u64 {
+        self.stored_bytes
+    }
+
+    /// Bulk charge: the same totals as the per-instruction methods but
+    /// one call per *lane* instead of several per *block* — the hot-path
+    /// optimization recorded in EXPERIMENTS.md §Perf. `cfu_issues` CFU
+    /// instructions with `cfu_stalls` total stall cycles are charged
+    /// alongside plain instruction counts.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn charge_bulk(
+        &mut self,
+        alu: u64,
+        loads: u64,
+        stores: u64,
+        branches_taken: u64,
+        branches_not_taken: u64,
+        cfu_issues: u64,
+        cfu_stalls: u64,
+    ) {
+        self.instrs[0] += alu;
+        self.instrs[1] += loads;
+        self.instrs[2] += stores;
+        self.instrs[3] += branches_taken + branches_not_taken;
+        self.instrs[4] += cfu_issues;
+        let cfu_total = cfu_issues * self.model.cfu_issue + cfu_stalls;
+        self.cycles += alu * self.model.alu
+            + loads * self.model.load
+            + stores * self.model.store
+            + branches_taken * self.model.branch_taken
+            + branches_not_taken * self.model.branch_not_taken
+            + cfu_total;
+        self.cfu_stall_cycles += cfu_stalls;
+        self.cfu_total_cycles += cfu_total;
+        self.loaded_bytes += loads * 4;
+        self.stored_bytes += stores * 4;
+    }
+
+    /// Merge another counter (parallel layer simulation).
+    pub fn merge(&mut self, other: &CycleCounter) {
+        self.cycles += other.cycles;
+        for i in 0..self.instrs.len() {
+            self.instrs[i] += other.instrs[i];
+        }
+        self.cfu_stall_cycles += other.cfu_stall_cycles;
+        self.cfu_total_cycles += other.cfu_total_cycles;
+        self.loaded_bytes += other.loaded_bytes;
+        self.stored_bytes += other.stored_bytes;
+    }
+
+    /// Convert cycles to seconds at a clock frequency.
+    pub fn seconds_at(&self, clock_hz: u64) -> f64 {
+        self.cycles as f64 / clock_hz as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_match_model() {
+        let mut c = CycleCounter::new(CostModel::vexriscv());
+        c.alu(3); // 3
+        c.load_words(2); // 2
+        c.store_words(1); // 1
+        c.branch(true); // 3
+        c.branch(false); // 1
+        c.cfu(&CfuResponse { rd: 0, cycles: 4 }); // 1 issue + 3 stall
+        assert_eq!(c.cycles(), 3 + 2 + 1 + 3 + 1 + 4);
+        assert_eq!(c.total_instrs(), 3 + 2 + 1 + 2 + 1);
+        assert_eq!(c.cfu_stalls(), 3);
+        assert_eq!(c.cfu_cycles(), 4);
+        assert_eq!(c.loaded_bytes(), 8);
+        assert_eq!(c.stored_bytes(), 4);
+    }
+
+    #[test]
+    fn single_cycle_cfu_no_stall() {
+        let mut c = CycleCounter::new(CostModel::vexriscv());
+        c.cfu(&CfuResponse { rd: 0, cycles: 1 });
+        assert_eq!(c.cycles(), 1);
+        assert_eq!(c.cfu_stalls(), 0);
+    }
+
+    #[test]
+    fn mac_only_counts_only_cfu() {
+        let mut c = CycleCounter::new(CostModel::mac_only());
+        c.alu(10);
+        c.load_words(10);
+        c.branch(true);
+        c.cfu(&CfuResponse { rd: 0, cycles: 2 });
+        assert_eq!(c.cycles(), 2);
+    }
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = CycleCounter::new(CostModel::vexriscv());
+        a.alu(5);
+        let mut b = CycleCounter::new(CostModel::vexriscv());
+        b.load_words(2);
+        b.cfu(&CfuResponse { rd: 0, cycles: 3 });
+        a.merge(&b);
+        assert_eq!(a.cycles(), 5 + 2 + 3);
+        assert_eq!(a.instr_count(InstrClass::Alu), 5);
+        assert_eq!(a.instr_count(InstrClass::Load), 2);
+        assert_eq!(a.instr_count(InstrClass::Cfu), 1);
+    }
+
+    #[test]
+    fn charge_bulk_equals_individual_charges() {
+        let mut a = CycleCounter::new(CostModel::vexriscv());
+        a.alu(7);
+        a.load_words(3);
+        a.store_words(2);
+        a.branch(true);
+        a.branch(true);
+        a.branch(false);
+        a.cfu(&CfuResponse { rd: 0, cycles: 3 });
+        a.cfu(&CfuResponse { rd: 0, cycles: 1 });
+        let mut b = CycleCounter::new(CostModel::vexriscv());
+        b.charge_bulk(7, 3, 2, 2, 1, 2, 2);
+        assert_eq!(a.cycles(), b.cycles());
+        assert_eq!(a.total_instrs(), b.total_instrs());
+        assert_eq!(a.cfu_cycles(), b.cfu_cycles());
+        assert_eq!(a.cfu_stalls(), b.cfu_stalls());
+        assert_eq!(a.loaded_bytes(), b.loaded_bytes());
+        assert_eq!(a.stored_bytes(), b.stored_bytes());
+    }
+
+    #[test]
+    fn seconds_at_clock() {
+        let mut c = CycleCounter::new(CostModel::vexriscv());
+        c.alu(100_000_000);
+        assert!((c.seconds_at(100_000_000) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,18 @@
+//! VexRiscv-like CPU timing model.
+//!
+//! The paper's SoC is a VexRiscv five-stage in-order soft core at 100 MHz
+//! (CFU Playground / LiteX). Reported speedups are ratios of clock-cycle
+//! counts of the same convolution kernels under different CFUs, so an
+//! instruction-class cycle-cost model reproduces them without RTL:
+//! every instruction the kernel's inner loops would execute is charged
+//! through [`CostModel`], and CFU instructions additionally stall the
+//! pipeline for `cycles - 1` (the valid/ready handshake of Fig 3).
+//!
+//! [`CycleCounter`] accumulates cycles and per-class instruction counts;
+//! the kernel implementations in [`crate::kernels`] drive it.
+
+pub mod cost_model;
+pub mod counter;
+
+pub use cost_model::CostModel;
+pub use counter::{CycleCounter, InstrClass};

@@ -1,0 +1,67 @@
+//! INT7 weight range (`[-64, 63]`).
+//!
+//! The paper (Section III-B): *"The dynamic range of INT8 weights is
+//! limited to [-64, 63] so as to not use the most significant bit after
+//! the signed bit, effectively simulating INT7 precision."* Table II shows
+//! this costs no accuracy on the considered applications.
+
+/// Minimum INT7 value.
+pub const INT7_MIN: i8 = -64;
+/// Maximum INT7 value.
+pub const INT7_MAX: i8 = 63;
+
+/// Is the weight already within INT7 dynamic range?
+#[inline]
+pub fn is_int7(w: i8) -> bool {
+    (INT7_MIN..=INT7_MAX).contains(&w)
+}
+
+/// Clamp an INT8 weight into INT7 range.
+#[inline]
+pub fn clamp_int7(w: i8) -> i8 {
+    w.clamp(INT7_MIN, INT7_MAX)
+}
+
+/// Clamp a whole slice in place; returns how many weights were clamped
+/// (useful to report quantization impact).
+pub fn clamp_slice_int7(ws: &mut [i8]) -> usize {
+    let mut clamped = 0;
+    for w in ws {
+        if !is_int7(*w) {
+            *w = clamp_int7(*w);
+            clamped += 1;
+        }
+    }
+    clamped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds() {
+        assert!(is_int7(-64));
+        assert!(is_int7(63));
+        assert!(!is_int7(-65));
+        assert!(!is_int7(64));
+        assert!(!is_int7(i8::MIN));
+        assert!(!is_int7(i8::MAX));
+    }
+
+    #[test]
+    fn clamp_values() {
+        assert_eq!(clamp_int7(100), 63);
+        assert_eq!(clamp_int7(-100), -64);
+        assert_eq!(clamp_int7(5), 5);
+        assert_eq!(clamp_int7(0), 0);
+    }
+
+    #[test]
+    fn clamp_slice_counts() {
+        let mut ws = [127i8, -128, 0, 63, -64, 64, -65];
+        let n = clamp_slice_int7(&mut ws);
+        assert_eq!(n, 4);
+        assert_eq!(ws, [63, -64, 0, 63, -64, 63, -64]);
+    }
+}

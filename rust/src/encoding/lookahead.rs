@@ -1,0 +1,379 @@
+//! Algorithms 1 & 2: lookahead encoding of CNN kernel weights.
+//!
+//! Bit layout of an **encoded** weight byte (Figure 6):
+//!
+//! ```text
+//!   bit:   7     6   5   4   3   2   1     0
+//!        sign   b5  b4  b3  b2  b1  b0   skip
+//! ```
+//!
+//! where `sign b5..b0` is exactly the 7-bit two's-complement
+//! representation of the original INT7 weight, and `skip` is one bit of
+//! the 4-bit `skip_blocks` counter (bit *i* of the counter goes to the
+//! LSB of weight *i* in the block, per Figure 6). The hardware therefore
+//! recovers the weight as `encoded >> 1` (arithmetic, 7-bit) and the skip
+//! counter from the four block LSBs.
+
+use super::int7::is_int7;
+use crate::error::{Error, Result};
+
+/// A block is 4 weights (one 32-bit register operand).
+pub const BLOCK: usize = 4;
+
+/// Maximum number of succeeding all-zero blocks encodable in 4 bits.
+pub const MAX_SKIP_BLOCKS: u8 = 15;
+
+/// `checkBlkSkip` of Algorithm 1: is the 4-weight block all zero?
+#[inline]
+pub fn block_is_zero(block: &[i8]) -> bool {
+    debug_assert_eq!(block.len(), BLOCK);
+    block.iter().all(|&w| w == 0)
+}
+
+/// Algorithm 2 `encodeLastBits`, bit-for-bit: embed the 4-bit
+/// `skip_blocks` value into a block of four INT7 weights.
+///
+/// Returns an error if any weight is outside INT7 range (the model must
+/// be INT7-quantized *before* encoding; see [`super::int7`]).
+pub fn encode_last_bits(weights: &mut [i8; BLOCK], skip_blocks: u8) -> Result<()> {
+    if skip_blocks > MAX_SKIP_BLOCKS {
+        return Err(Error::Encoding(format!("skip_blocks {skip_blocks} > {MAX_SKIP_BLOCKS}")));
+    }
+    for (i, w) in weights.iter_mut().enumerate() {
+        if !is_int7(*w) {
+            return Err(Error::Encoding(format!(
+                "weight {w} at lane {i} outside INT7 range [-64, 63]"
+            )));
+        }
+        let bits = *w as u8;
+        // Isolate the sign bit.
+        let sign_bit = (bits >> 7) & 0b1;
+        // Extract skip bit i.
+        let skip_bit = (skip_blocks >> i) & 0b1;
+        // Remove the MSB after the sign bit.
+        let mut v = bits & 0b1011_1111;
+        // Shift bits one position to the left.
+        v = (v << 1) & 0b0111_1110;
+        // Insert skip bit.
+        v |= skip_bit;
+        // Restore the sign bit.
+        v |= sign_bit << 7;
+        *w = v as i8;
+    }
+    Ok(())
+}
+
+/// Hardware-side weight decode: bits `[7:1]` of the encoded byte,
+/// sign-extended from 7 bits — i.e. an arithmetic shift right by one.
+#[inline]
+pub fn decode_weight(encoded: i8) -> i8 {
+    encoded >> 1
+}
+
+/// Hardware-side skip decode: gather the LSB of each of the four encoded
+/// weights, bit *i* from weight *i* (`b0, b8, b16, b24` of the packed
+/// register word).
+#[inline]
+pub fn decode_skip(block: &[i8; BLOCK]) -> u8 {
+    let mut skip = 0u8;
+    for (i, &w) in block.iter().enumerate() {
+        skip |= ((w as u8) & 1) << i;
+    }
+    skip
+}
+
+/// Compute the skip counter for the block starting at `block_idx` within
+/// `row` (a lane of `C` weights walked in steps of 4): the number of
+/// immediately-following all-zero blocks, saturated at
+/// [`MAX_SKIP_BLOCKS`]. Lines 5–14 of Algorithm 1.
+pub fn skip_of_block(row: &[i8], block_idx: usize) -> u8 {
+    skip_of_block_with_max(row, block_idx, MAX_SKIP_BLOCKS)
+}
+
+/// [`skip_of_block`] with a configurable saturation limit — the design
+/// ablation over the lookahead field width (a w-bit field saturates at
+/// `2^w - 1`; the paper fixes w = 4).
+pub fn skip_of_block_with_max(row: &[i8], block_idx: usize, max_skip: u8) -> u8 {
+    let c = row.len();
+    let mut i_nxt = (block_idx + 1) * BLOCK;
+    let mut skip_blocks = 0u8;
+    while i_nxt + BLOCK <= c && skip_blocks < max_skip {
+        if block_is_zero(&row[i_nxt..i_nxt + BLOCK]) {
+            skip_blocks += 1;
+            i_nxt += BLOCK;
+        } else {
+            break;
+        }
+    }
+    skip_blocks
+}
+
+/// Number of blocks the SSSA while-loop visits in `row` when the skip
+/// field saturates at `max_skip` (ablation helper).
+pub fn visited_blocks_with_max(row: &[i8], max_skip: u8) -> usize {
+    let nblocks = row.len() / BLOCK;
+    let mut visited = 0usize;
+    let mut b = 0usize;
+    while b < nblocks {
+        visited += 1;
+        b += 1 + skip_of_block_with_max(row, b, max_skip) as usize;
+    }
+    visited
+}
+
+/// Result of encoding a weight tensor: encoded bytes plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct EncodedLanes {
+    /// Encoded weights, same layout as the input.
+    pub encoded: Vec<i8>,
+    /// Lane (row) length in weights — the input-channel extent `C`.
+    pub lane_len: usize,
+    /// Total number of 4-weight blocks.
+    pub total_blocks: usize,
+    /// Number of all-zero blocks (skippable work).
+    pub zero_blocks: usize,
+    /// Number of blocks actually *visited* by the SSSA while-loop
+    /// (non-zero blocks + zero blocks not covered by any lookahead,
+    /// e.g. leading zero blocks or runs longer than 15).
+    pub visited_blocks: usize,
+}
+
+impl EncodedLanes {
+    /// Fraction of blocks that are all-zero (the semi-structured
+    /// sparsity ratio at block granularity).
+    pub fn block_sparsity(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 0.0;
+        }
+        self.zero_blocks as f64 / self.total_blocks as f64
+    }
+}
+
+/// Algorithm 1 over a flat weight buffer interpreted as rows ("lanes") of
+/// length `lane_len` — one lane per (filter, kh, kw) position walked along
+/// input channels. `lane_len` must be a multiple of 4.
+///
+/// Every block (including all-zero ones) receives its lookahead code; the
+/// decoded weight of an all-zero block is still zero because only the
+/// LSBs change.
+pub fn encode_lanes(weights: &[i8], lane_len: usize) -> Result<EncodedLanes> {
+    if lane_len == 0 || lane_len % BLOCK != 0 {
+        return Err(Error::Encoding(format!("lane_len {lane_len} not a positive multiple of 4")));
+    }
+    if weights.len() % lane_len != 0 {
+        return Err(Error::Encoding(format!(
+            "weight buffer length {} not divisible by lane_len {lane_len}",
+            weights.len()
+        )));
+    }
+    let mut encoded = weights.to_vec();
+    let blocks_per_lane = lane_len / BLOCK;
+    let mut total_blocks = 0;
+    let mut zero_blocks = 0;
+    let mut visited_blocks = 0;
+    for lane in encoded.chunks_mut(lane_len) {
+        // First pass: compute skip counters from the *original* values.
+        let skips: Vec<u8> = (0..blocks_per_lane).map(|b| skip_of_block(lane, b)).collect();
+        // Count visited blocks by simulating the while-loop walk.
+        let mut b = 0usize;
+        while b < blocks_per_lane {
+            visited_blocks += 1;
+            b += 1 + skips[b] as usize;
+        }
+        // Second pass: encode.
+        for (b, chunk) in lane.chunks_mut(BLOCK).enumerate() {
+            total_blocks += 1;
+            if block_is_zero(chunk) {
+                zero_blocks += 1;
+            }
+            let mut arr: [i8; BLOCK] = chunk.try_into().unwrap();
+            encode_last_bits(&mut arr, skips[b])?;
+            chunk.copy_from_slice(&arr);
+        }
+    }
+    Ok(EncodedLanes { encoded, lane_len, total_blocks, zero_blocks, visited_blocks })
+}
+
+/// Decode an encoded buffer back to INT7 weights (inverse of the weight
+/// part of [`encode_lanes`]; skip bits are discarded).
+pub fn decode_lanes(encoded: &[i8]) -> Vec<i8> {
+    encoded.iter().map(|&w| decode_weight(w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn encode_decode_single_weights() {
+        for w in -64i8..=63 {
+            let mut block = [w, 0, 0, 0];
+            encode_last_bits(&mut block, 0b1010).unwrap();
+            assert_eq!(decode_weight(block[0]), w, "weight {w}");
+            assert_eq!(decode_skip(&block), 0b1010);
+        }
+    }
+
+    #[test]
+    fn paper_figure6_bit_layout() {
+        // Sign bit preserved at 7, value shifted to [6:1], skip at 0.
+        let mut block = [-3i8, 63, -64, 0];
+        encode_last_bits(&mut block, 0b0101).unwrap();
+        // -3 = 0b11111101 → enc = sign1 | (111101)<<1... decoded must be -3.
+        assert_eq!(decode_weight(block[0]), -3);
+        assert_eq!((block[0] as u8) & 1, 1); // skip bit 0 = 1
+        assert_eq!(decode_weight(block[1]), 63);
+        assert_eq!((block[1] as u8) & 1, 0); // skip bit 1 = 0
+        assert_eq!(decode_weight(block[2]), -64);
+        assert_eq!((block[2] as u8) & 1, 1); // skip bit 2 = 1
+        assert_eq!(decode_weight(block[3]), 0);
+        assert_eq!((block[3] as u8) & 1, 0); // skip bit 3 = 0
+    }
+
+    #[test]
+    fn int8_out_of_range_rejected() {
+        let mut block = [64i8, 0, 0, 0];
+        assert!(encode_last_bits(&mut block, 0).is_err());
+        let mut block = [-65i8, 0, 0, 0];
+        assert!(encode_last_bits(&mut block, 0).is_err());
+    }
+
+    #[test]
+    fn skip_too_large_rejected() {
+        let mut block = [0i8; 4];
+        assert!(encode_last_bits(&mut block, 16).is_err());
+    }
+
+    #[test]
+    fn skip_of_block_counts_runs() {
+        // blocks: [nz] [z] [z] [nz] [z]
+        let row: Vec<i8> = [
+            [1i8, 0, 0, 0],
+            [0, 0, 0, 0],
+            [0, 0, 0, 0],
+            [2, 0, 0, 0],
+            [0, 0, 0, 0],
+        ]
+        .concat();
+        assert_eq!(skip_of_block(&row, 0), 2);
+        assert_eq!(skip_of_block(&row, 1), 1); // zero block also gets its lookahead
+        assert_eq!(skip_of_block(&row, 3), 1);
+        assert_eq!(skip_of_block(&row, 4), 0); // last block: nothing follows
+    }
+
+    #[test]
+    fn skip_saturates_at_15() {
+        // 1 non-zero block followed by 20 zero blocks
+        let mut row = vec![0i8; 21 * 4];
+        row[0] = 7;
+        assert_eq!(skip_of_block(&row, 0), 15);
+    }
+
+    #[test]
+    fn figure5_example() {
+        // Fig 5: blocks [nz][z][z][nz][z][nz][z-ish]... codes 2,-,-,1,-,0/1...
+        // block1=(4,7,3,1) nz, block2/3 zero, block4 nz, block5 zero,
+        // block6=(13,0,12,4) nz, block7=(0,1,0,0) nz.
+        let row: Vec<i8> = [
+            [4i8, 7, 3, 1],
+            [0, 0, 0, 0],
+            [0, 0, 0, 0],
+            [11, 7, 12, 4],
+            [0, 0, 0, 0],
+            [13, 0, 12, 4],
+            [0, 1, 0, 0],
+        ]
+        .concat();
+        assert_eq!(skip_of_block(&row, 0), 2);
+        assert_eq!(skip_of_block(&row, 3), 1);
+        assert_eq!(skip_of_block(&row, 5), 0);
+        assert_eq!(skip_of_block(&row, 6), 0);
+    }
+
+    #[test]
+    fn encode_lanes_roundtrip_and_counts() {
+        let lane: Vec<i8> = [
+            [1i8, -2, 3, -4],
+            [0, 0, 0, 0],
+            [0, 0, 0, 0],
+            [5, 0, -6, 0],
+        ]
+        .concat();
+        let enc = encode_lanes(&lane, 16).unwrap();
+        assert_eq!(enc.total_blocks, 4);
+        assert_eq!(enc.zero_blocks, 2);
+        // walk: block0 (skip 2) → block3 → done ⇒ 2 visited
+        assert_eq!(enc.visited_blocks, 2);
+        let dec = decode_lanes(&enc.encoded);
+        assert_eq!(dec, lane);
+    }
+
+    #[test]
+    fn leading_zero_blocks_are_visited() {
+        // [z][z][nz][nz] — the while loop must visit the leading zero
+        // block (it carries its own lookahead to hop over the second).
+        let lane: Vec<i8> = [[0i8, 0, 0, 0], [0, 0, 0, 0], [1, 0, 0, 0], [2, 0, 0, 0]].concat();
+        let enc = encode_lanes(&lane, 16).unwrap();
+        // walk: block0 (zero, skip=1) → block2 → block3 ⇒ 3 visited
+        assert_eq!(enc.visited_blocks, 3);
+        // decoded zero block is still zero ⇒ MAC contributes nothing
+        let dec = decode_lanes(&enc.encoded);
+        assert_eq!(&dec[0..8], &[0i8; 8]);
+    }
+
+    #[test]
+    fn bad_lane_len_rejected() {
+        assert!(encode_lanes(&[0i8; 8], 3).is_err());
+        assert!(encode_lanes(&[0i8; 8], 0).is_err());
+        assert!(encode_lanes(&[0i8; 10], 4).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_int7_lanes() {
+        check(
+            Config::default().cases(128),
+            |r: &mut Pcg32| {
+                let blocks = 1 + r.below(16) as usize;
+                (0..blocks * 4)
+                    .map(|_| {
+                        if r.bernoulli(0.6) {
+                            0i32
+                        } else {
+                            r.range_i32(-64, 63)
+                        }
+                    })
+                    .collect::<Vec<i32>>()
+            },
+            |lane| {
+                let ws: Vec<i8> = lane.iter().map(|&w| w as i8).collect();
+                let enc = encode_lanes(&ws, ws.len()).unwrap();
+                // 1) weights decode exactly
+                if decode_lanes(&enc.encoded) != ws {
+                    return false;
+                }
+                // 2) every block's decoded skip equals skip_of_block
+                for b in 0..ws.len() / 4 {
+                    let arr: [i8; 4] = enc.encoded[b * 4..b * 4 + 4].try_into().unwrap();
+                    if decode_skip(&arr) != skip_of_block(&ws, b) {
+                        return false;
+                    }
+                }
+                // 3) the while-loop walk never lands past the end and
+                //    covers every non-zero block
+                let blocks = ws.len() / 4;
+                let mut visited = vec![false; blocks];
+                let mut b = 0usize;
+                while b < blocks {
+                    visited[b] = true;
+                    let arr: [i8; 4] = enc.encoded[b * 4..b * 4 + 4].try_into().unwrap();
+                    b += 1 + decode_skip(&arr) as usize;
+                }
+                (0..blocks).all(|b| {
+                    visited[b] || block_is_zero(&ws[b * 4..b * 4 + 4])
+                })
+            },
+        );
+    }
+}

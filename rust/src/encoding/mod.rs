@@ -1,0 +1,25 @@
+//! Lookahead weight encoding (the paper's Algorithms 1 & 2).
+//!
+//! Semi-structured (4:4 block) sparsity is exploited by *pre-encoding* the
+//! number of consecutive all-zero weight blocks after each block into the
+//! block's own weights: each INT8 weight gives up its post-sign MSB
+//! (restricting the dynamic range to INT7, `[-64, 63]`), all lower bits
+//! shift left by one, and the freed LSB carries one bit of the 4-bit
+//! `skip_blocks` counter (0–15). At runtime the SSSA/CSA CFU extracts the
+//! four LSBs of a packed 4-weight word to advance the inner-loop induction
+//! variable — zero software overhead.
+//!
+//! - [`int7`] — INT7 range checks and clamping,
+//! - [`lookahead`] — encode (Alg 1 & 2), decode, and verification,
+//! - [`pack`] — 4×i8 ↔ u32 register-word packing (byte i ↔ bits 8i+7..8i).
+
+pub mod int7;
+pub mod lookahead;
+pub mod pack;
+
+pub use int7::{clamp_int7, is_int7, INT7_MAX, INT7_MIN};
+pub use lookahead::{
+    decode_skip, decode_weight, encode_lanes, encode_last_bits, skip_of_block, EncodedLanes,
+    MAX_SKIP_BLOCKS,
+};
+pub use pack::{pack4_i8, pack4_u32_skip_bits, unpack4_i8};

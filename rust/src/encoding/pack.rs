@@ -1,0 +1,68 @@
+//! Register-word packing: four INT8 lanes in one 32-bit operand.
+//!
+//! The CFU receives operands through two 32-bit registers (`rs1`, `rs2`).
+//! Byte *i* of the word carries lane *i* (`w0` in bits 7..0, `w1` in
+//! 15..8, …), so the lookahead bits of an encoded block sit at
+//! `b0, b8, b16, b24` exactly as in Figure 4.
+
+/// Pack four i8 lanes into a u32 (lane i → byte i, little-endian order).
+#[inline]
+pub fn pack4_i8(lanes: &[i8; 4]) -> u32 {
+    u32::from_le_bytes([lanes[0] as u8, lanes[1] as u8, lanes[2] as u8, lanes[3] as u8])
+}
+
+/// Unpack a u32 into four i8 lanes.
+#[inline]
+pub fn unpack4_i8(word: u32) -> [i8; 4] {
+    let b = word.to_le_bytes();
+    [b[0] as i8, b[1] as i8, b[2] as i8, b[3] as i8]
+}
+
+/// Extract the four lookahead bits (`b0, b8, b16, b24`) of a packed
+/// encoded-weight word into a 4-bit skip counter — the hardware path of
+/// Figure 4.
+#[inline]
+pub fn pack4_u32_skip_bits(word: u32) -> u8 {
+    ((word & 1) | ((word >> 8) & 1) << 1 | ((word >> 16) & 1) << 2 | ((word >> 24) & 1) << 3)
+        as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::lookahead::{decode_skip, encode_last_bits};
+    use crate::util::proptest::{check, Config};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let lanes = [-1i8, 0, 63, -64];
+        assert_eq!(unpack4_i8(pack4_i8(&lanes)), lanes);
+    }
+
+    #[test]
+    fn byte_positions() {
+        let w = pack4_i8(&[1, 2, 3, 4]);
+        assert_eq!(w, 0x04_03_02_01);
+    }
+
+    #[test]
+    fn skip_bits_match_software_decode() {
+        for skip in 0..=15u8 {
+            let mut block = [7i8, -3, 0, 21];
+            encode_last_bits(&mut block, skip).unwrap();
+            let word = pack4_i8(&block);
+            assert_eq!(pack4_u32_skip_bits(word), skip);
+            assert_eq!(pack4_u32_skip_bits(word), decode_skip(&block));
+        }
+    }
+
+    #[test]
+    fn prop_pack_roundtrip() {
+        check(
+            Config::default().cases(256),
+            |r: &mut Pcg32| r.next_u32(),
+            |&w| pack4_i8(&unpack4_i8(w)) == w,
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the sparse-riscv library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Tensor shape mismatch or invalid dimension.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Quantization parameter or range violation.
+    #[error("quantization error: {0}")]
+    Quant(String),
+
+    /// Lookahead encoding violation (e.g. weight outside INT7 range).
+    #[error("encoding error: {0}")]
+    Encoding(String),
+
+    /// Configuration parse or validation failure.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// CLI argument error.
+    #[error("cli error: {0}")]
+    Cli(String),
+
+    /// Model definition / graph construction error.
+    #[error("model error: {0}")]
+    Model(String),
+
+    /// Simulator invariant violation.
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator scheduling failure.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,234 @@
+//! Concrete CFU instruction assignments for the four designs.
+//!
+//! The paper differentiates sub-operations by the LSB of `funct7`
+//! (Section III-B1): `f0 = 0` selects the MAC operation, `f0 = 1` selects
+//! the induction-variable increment. `funct3` selects the design family so
+//! that all designs can coexist in one combined CFU build (as CFU
+//! Playground does).
+
+use super::rtype::RType;
+use crate::error::Result;
+
+/// Which accelerator design a kernel is compiled against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DesignKind {
+    /// Parallel 4×INT8 SIMD MAC, 1 cycle/block (Listing 1 baseline).
+    BaselineSimd,
+    /// Sequential single-multiplier MAC, always 4 cycles/block
+    /// (the USSA comparison baseline, Section III-C1).
+    BaselineSequential,
+    /// Semi-Structured Sparsity Accelerator (Section III-B).
+    Sssa,
+    /// Unstructured Sparsity Accelerator (Section III-C).
+    Ussa,
+    /// Combined Sparsity Accelerator (Section III-D).
+    Csa,
+}
+
+impl DesignKind {
+    /// All designs, in presentation order.
+    pub const ALL: [DesignKind; 5] = [
+        DesignKind::BaselineSimd,
+        DesignKind::BaselineSequential,
+        DesignKind::Sssa,
+        DesignKind::Ussa,
+        DesignKind::Csa,
+    ];
+
+    /// Human-readable name as used in the paper.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DesignKind::BaselineSimd => "baseline-simd",
+            DesignKind::BaselineSequential => "baseline-seq",
+            DesignKind::Sssa => "SSSA",
+            DesignKind::Ussa => "USSA",
+            DesignKind::Csa => "CSA",
+        }
+    }
+
+    /// Does the design consume lookahead-encoded (INT7) weights?
+    pub fn uses_lookahead_encoding(&self) -> bool {
+        matches!(self, DesignKind::Sssa | DesignKind::Csa)
+    }
+
+    /// Does the design skip zero weights inside a block (variable-cycle MAC)?
+    pub fn variable_cycle_mac(&self) -> bool {
+        matches!(self, DesignKind::Ussa | DesignKind::Csa)
+    }
+
+    /// `funct3` value assigned to the design family.
+    pub fn funct3(&self) -> u8 {
+        match self {
+            DesignKind::BaselineSimd => 0,
+            DesignKind::BaselineSequential => 1,
+            DesignKind::Sssa => 2,
+            DesignKind::Ussa => 3,
+            DesignKind::Csa => 4,
+        }
+    }
+
+    /// Parse from CLI/config string.
+    pub fn parse(s: &str) -> Option<DesignKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" | "baseline-simd" | "simd" => Some(DesignKind::BaselineSimd),
+            "baseline-seq" | "sequential" | "seq" => Some(DesignKind::BaselineSequential),
+            "sssa" => Some(DesignKind::Sssa),
+            "ussa" => Some(DesignKind::Ussa),
+            "csa" => Some(DesignKind::Csa),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DesignKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// CFU sub-operations across the designs, as named in the paper's
+/// listings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CfuOpcode {
+    /// `cfu_simd_mac` — 4×(INT8×INT8) parallel MAC (Listing 1).
+    CfuSimdMac,
+    /// Sequential 4-cycle single-multiplier MAC (USSA baseline).
+    CfuSeqMac,
+    /// `sssa_mac` — 4×(INT7×INT8) parallel MAC on encoded weights.
+    SssaMac,
+    /// `sssa_inc_indvar` — lookahead-driven induction-variable increment.
+    SssaIncIndvar,
+    /// `ussa_vcmac` — variable-cycle sequential MAC (INT8 weights).
+    UssaVcMac,
+    /// `csa_vcmac` — variable-cycle sequential MAC (INT7 encoded weights).
+    CsaVcMac,
+    /// `csa_inc_indvar` — same behaviour as `sssa_inc_indvar`.
+    CsaIncIndvar,
+}
+
+impl CfuOpcode {
+    /// Assembly-level mnemonic from the paper.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            CfuOpcode::CfuSimdMac => "cfu_simd_mac",
+            CfuOpcode::CfuSeqMac => "cfu_seq_mac",
+            CfuOpcode::SssaMac => "sssa_mac",
+            CfuOpcode::SssaIncIndvar => "sssa_inc_indvar",
+            CfuOpcode::UssaVcMac => "ussa_vcmac",
+            CfuOpcode::CsaVcMac => "csa_vcmac",
+            CfuOpcode::CsaIncIndvar => "csa_inc_indvar",
+        }
+    }
+
+    /// Design family this op belongs to.
+    pub fn design(&self) -> DesignKind {
+        match self {
+            CfuOpcode::CfuSimdMac => DesignKind::BaselineSimd,
+            CfuOpcode::CfuSeqMac => DesignKind::BaselineSequential,
+            CfuOpcode::SssaMac | CfuOpcode::SssaIncIndvar => DesignKind::Sssa,
+            CfuOpcode::UssaVcMac => DesignKind::Ussa,
+            CfuOpcode::CsaVcMac | CfuOpcode::CsaIncIndvar => DesignKind::Csa,
+        }
+    }
+
+    /// `funct7` value: LSB (`f0`) distinguishes MAC (0) from
+    /// `inc_indvar` (1), per Section III-B1.
+    pub fn funct7(&self) -> u8 {
+        match self {
+            CfuOpcode::CfuSimdMac
+            | CfuOpcode::CfuSeqMac
+            | CfuOpcode::SssaMac
+            | CfuOpcode::UssaVcMac
+            | CfuOpcode::CsaVcMac => 0b0000000,
+            CfuOpcode::SssaIncIndvar | CfuOpcode::CsaIncIndvar => 0b0000001,
+        }
+    }
+
+    /// Encode this op as a full `custom-0` R-type instruction over
+    /// registers `(rd, rs1, rs2)`.
+    pub fn instruction(&self, rd: u8, rs1: u8, rs2: u8) -> Result<RType> {
+        RType::custom0(self.funct7(), self.design().funct3(), rd, rs1, rs2)
+    }
+
+    /// Decode a `custom-0` instruction back into the CFU op it selects.
+    pub fn from_instruction(it: &RType) -> Option<CfuOpcode> {
+        if !it.is_cfu() {
+            return None;
+        }
+        let inc = it.funct7 & 1 == 1;
+        match (it.funct3, inc) {
+            (0, false) => Some(CfuOpcode::CfuSimdMac),
+            (1, false) => Some(CfuOpcode::CfuSeqMac),
+            (2, false) => Some(CfuOpcode::SssaMac),
+            (2, true) => Some(CfuOpcode::SssaIncIndvar),
+            (3, false) => Some(CfuOpcode::UssaVcMac),
+            (4, false) => Some(CfuOpcode::CsaVcMac),
+            (4, true) => Some(CfuOpcode::CsaIncIndvar),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL_OPS: [CfuOpcode; 7] = [
+        CfuOpcode::CfuSimdMac,
+        CfuOpcode::CfuSeqMac,
+        CfuOpcode::SssaMac,
+        CfuOpcode::SssaIncIndvar,
+        CfuOpcode::UssaVcMac,
+        CfuOpcode::CsaVcMac,
+        CfuOpcode::CsaIncIndvar,
+    ];
+
+    #[test]
+    fn op_instruction_roundtrip() {
+        for op in ALL_OPS {
+            let it = op.instruction(1, 2, 3).unwrap();
+            assert_eq!(CfuOpcode::from_instruction(&it), Some(op), "{}", op.mnemonic());
+        }
+    }
+
+    #[test]
+    fn funct7_lsb_selects_incindvar() {
+        assert_eq!(CfuOpcode::SssaIncIndvar.funct7() & 1, 1);
+        assert_eq!(CfuOpcode::SssaMac.funct7() & 1, 0);
+        assert_eq!(CfuOpcode::CsaIncIndvar.funct7() & 1, 1);
+        assert_eq!(CfuOpcode::CsaVcMac.funct7() & 1, 0);
+    }
+
+    #[test]
+    fn design_properties() {
+        assert!(DesignKind::Sssa.uses_lookahead_encoding());
+        assert!(DesignKind::Csa.uses_lookahead_encoding());
+        assert!(!DesignKind::Ussa.uses_lookahead_encoding());
+        assert!(DesignKind::Ussa.variable_cycle_mac());
+        assert!(DesignKind::Csa.variable_cycle_mac());
+        assert!(!DesignKind::Sssa.variable_cycle_mac());
+        assert!(!DesignKind::BaselineSimd.variable_cycle_mac());
+    }
+
+    #[test]
+    fn design_parse_roundtrip() {
+        for d in DesignKind::ALL {
+            assert_eq!(DesignKind::parse(d.name()), Some(d));
+        }
+        assert_eq!(DesignKind::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn non_cfu_instruction_decodes_to_none() {
+        let add = RType { funct7: 0, rs2: 3, rs1: 2, funct3: 0, rd: 1, opcode: 0b011_0011 };
+        assert_eq!(CfuOpcode::from_instruction(&add), None);
+    }
+
+    #[test]
+    fn funct3_unique_per_design() {
+        let mut seen = std::collections::HashSet::new();
+        for d in DesignKind::ALL {
+            assert!(seen.insert(d.funct3()), "funct3 collision for {d}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! RISC-V instruction-set plumbing for the CFU interface.
+//!
+//! The paper drives every accelerator through the RISC-V *R-type*
+//! `custom-0` instruction (Fig 3): `funct7 | rs2 | rs1 | funct3 | rd |
+//! opcode`. [`rtype`] implements bit-exact encode/decode of that format,
+//! and [`cfu_ops`] defines the concrete instruction assignments used by
+//! the four CFU designs (baseline SIMD MAC, SSSA, USSA, CSA).
+
+pub mod cfu_ops;
+pub mod rtype;
+
+pub use cfu_ops::{CfuOpcode, DesignKind};
+pub use rtype::{RType, CUSTOM0_OPCODE};

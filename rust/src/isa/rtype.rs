@@ -1,0 +1,166 @@
+//! Bit-exact R-type instruction encoding (RISC-V base format).
+//!
+//! Layout (Fig 3 of the paper / RISC-V spec):
+//!
+//! ```text
+//!  31      25 24  20 19  15 14  12 11   7 6      0
+//! +----------+------+------+------+------+--------+
+//! |  funct7  | rs2  | rs1  |funct3|  rd  | opcode |
+//! +----------+------+------+------+------+--------+
+//! ```
+//!
+//! CFU Playground routes `custom-0` (opcode `0b0001011`) to the CFU; the
+//! CFU sees `funct7`, `funct3` and the two resolved source registers.
+
+use crate::error::{Error, Result};
+
+/// The `custom-0` major opcode reserved by the RISC-V spec for custom
+/// instruction extensions.
+pub const CUSTOM0_OPCODE: u32 = 0b000_1011;
+
+/// Decoded R-type instruction fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RType {
+    /// 7-bit function code (CFU sub-operation select).
+    pub funct7: u8,
+    /// Second source register index (0–31).
+    pub rs2: u8,
+    /// First source register index (0–31).
+    pub rs1: u8,
+    /// 3-bit function code.
+    pub funct3: u8,
+    /// Destination register index (0–31).
+    pub rd: u8,
+    /// 7-bit major opcode.
+    pub opcode: u8,
+}
+
+impl RType {
+    /// Construct a `custom-0` CFU instruction.
+    pub fn custom0(funct7: u8, funct3: u8, rd: u8, rs1: u8, rs2: u8) -> Result<Self> {
+        let it = RType { funct7, rs2, rs1, funct3, rd, opcode: CUSTOM0_OPCODE as u8 };
+        it.validate()?;
+        Ok(it)
+    }
+
+    /// Check field ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.funct7 > 0x7F {
+            return Err(Error::Encoding(format!("funct7 out of range: {}", self.funct7)));
+        }
+        if self.funct3 > 0x7 {
+            return Err(Error::Encoding(format!("funct3 out of range: {}", self.funct3)));
+        }
+        for (name, v) in [("rs1", self.rs1), ("rs2", self.rs2), ("rd", self.rd)] {
+            if v > 31 {
+                return Err(Error::Encoding(format!("{name} out of range: {v}")));
+            }
+        }
+        if self.opcode > 0x7F {
+            return Err(Error::Encoding(format!("opcode out of range: {}", self.opcode)));
+        }
+        Ok(())
+    }
+
+    /// Pack into a 32-bit instruction word.
+    pub fn encode(&self) -> u32 {
+        ((self.funct7 as u32) << 25)
+            | ((self.rs2 as u32) << 20)
+            | ((self.rs1 as u32) << 15)
+            | ((self.funct3 as u32) << 12)
+            | ((self.rd as u32) << 7)
+            | self.opcode as u32
+    }
+
+    /// Unpack from a 32-bit instruction word.
+    pub fn decode(word: u32) -> Self {
+        RType {
+            funct7: ((word >> 25) & 0x7F) as u8,
+            rs2: ((word >> 20) & 0x1F) as u8,
+            rs1: ((word >> 15) & 0x1F) as u8,
+            funct3: ((word >> 12) & 0x7) as u8,
+            rd: ((word >> 7) & 0x1F) as u8,
+            opcode: (word & 0x7F) as u8,
+        }
+    }
+
+    /// True if this instruction is routed to the CFU (`custom-0` space).
+    pub fn is_cfu(&self) -> bool {
+        self.opcode as u32 == CUSTOM0_OPCODE
+    }
+
+    /// The 10-bit CFU function id = `{funct7, funct3}` as CFU Playground
+    /// presents it to the CFU.
+    pub fn cfu_function_id(&self) -> u16 {
+        ((self.funct7 as u16) << 3) | self.funct3 as u16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn encode_decode_roundtrip_exhaustive_fields() {
+        for funct7 in [0u8, 1, 0x55, 0x7F] {
+            for funct3 in 0..8u8 {
+                for reg in [0u8, 1, 15, 31] {
+                    let it = RType::custom0(funct7, funct3, reg, reg, reg).unwrap();
+                    assert_eq!(RType::decode(it.encode()), it);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn custom0_recognized() {
+        let it = RType::custom0(0, 0, 1, 2, 3).unwrap();
+        assert!(it.is_cfu());
+        assert_eq!(it.encode() & 0x7F, CUSTOM0_OPCODE);
+    }
+
+    #[test]
+    fn non_custom_not_cfu() {
+        // `add x1, x2, x3` has opcode 0b0110011
+        let add = RType { funct7: 0, rs2: 3, rs1: 2, funct3: 0, rd: 1, opcode: 0b011_0011 };
+        assert!(!add.is_cfu());
+    }
+
+    #[test]
+    fn known_encoding_value() {
+        // funct7=1, rs2=4, rs1=3, funct3=2, rd=5, opcode=custom-0
+        let it = RType::custom0(1, 2, 5, 3, 4).unwrap();
+        let w = it.encode();
+        assert_eq!(w, (1 << 25) | (4 << 20) | (3 << 15) | (2 << 12) | (5 << 7) | 0b000_1011);
+    }
+
+    #[test]
+    fn function_id_packs_funct7_funct3() {
+        let it = RType::custom0(0x7F, 0x7, 0, 0, 0).unwrap();
+        assert_eq!(it.cfu_function_id(), 0x3FF);
+        let it = RType::custom0(0x01, 0x0, 0, 0, 0).unwrap();
+        assert_eq!(it.cfu_function_id(), 0x8);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        assert!(RType::custom0(0, 0, 32, 0, 0).is_err());
+        assert!(RType::custom0(0, 8, 0, 0, 0).is_err());
+        assert!(RType::custom0(0x80, 0, 0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_words() {
+        // Any 32-bit word decodes; re-encoding preserves all R-type fields.
+        check(
+            Config::default().cases(512),
+            |r: &mut Pcg32| r.next_u32(),
+            |&w| {
+                let d = RType::decode(w);
+                RType::decode(d.encode()) == d
+            },
+        );
+    }
+}

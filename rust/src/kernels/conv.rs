@@ -1,0 +1,395 @@
+//! CFU-accelerated convolution kernel (normal + depthwise).
+
+use super::lane::{prepare_lanes, run_lane, PreparedLanes};
+use super::KernelRun;
+use crate::cfu::AnyCfu;
+use crate::cpu::{CostModel, CycleCounter};
+use crate::encoding::pack::pack4_i8;
+use crate::error::{Error, Result};
+use crate::isa::DesignKind;
+use crate::nn::conv2d::Conv2dOp;
+use crate::tensor::{QTensor, Shape};
+
+/// A conv layer prepared for one accelerator design: weights packed (and
+/// for SSSA/CSA lookahead-encoded) per lane.
+#[derive(Debug, Clone)]
+pub struct PreparedConv {
+    /// The underlying layer description.
+    pub op: Conv2dOp,
+    /// Target design.
+    pub design: DesignKind,
+    /// Packed weight lanes.
+    pub lanes: PreparedLanes,
+    /// Padded lane length (depthwise pads `kh*kw` up to a multiple of 4).
+    pub lane_len: usize,
+    /// Per-tap (kh, kw) lookup for the depthwise gather (avoids div/mod
+    /// in the hot loop — EXPERIMENTS.md §Perf).
+    dw_taps: Vec<(usize, usize)>,
+}
+
+impl PreparedConv {
+    /// Prepare a layer for a design.
+    ///
+    /// Normal conv requires `in_c % 4 == 0` (the model builders pad input
+    /// channels); depthwise lanes are the `kh*kw` taps zero-padded to a
+    /// multiple of 4.
+    pub fn new(op: &Conv2dOp, design: DesignKind) -> Result<Self> {
+        if op.depthwise {
+            let taps = op.kh * op.kw;
+            let lane_len = taps.div_ceil(4) * 4;
+            let mut padded = vec![0i8; op.out_c * lane_len];
+            for ch in 0..op.out_c {
+                for t in 0..taps {
+                    padded[ch * lane_len + t] = op.weights[ch * taps + t];
+                }
+            }
+            let lanes = prepare_lanes(&padded, lane_len, design)?;
+            let dw_taps =
+                (0..taps).map(|t| (t / op.kw, t % op.kw)).collect();
+            Ok(PreparedConv {
+                op: Self::with_effective(op, &lanes, lane_len),
+                design,
+                lanes,
+                lane_len,
+                dw_taps,
+            })
+        } else {
+            if op.in_c % 4 != 0 {
+                return Err(Error::Model(format!(
+                    "{}: in_c {} must be a multiple of 4 (pad input channels)",
+                    op.name, op.in_c
+                )));
+            }
+            let lanes = prepare_lanes(&op.weights, op.in_c, design)?;
+            Ok(PreparedConv {
+                op: Self::with_effective(op, &lanes, op.in_c),
+                design,
+                lanes,
+                lane_len: op.in_c,
+                dw_taps: Vec::new(),
+            })
+        }
+    }
+
+    /// Clone of the op with the *effective* (possibly INT7-clamped)
+    /// weights — the exact values the CFU multiplies. Running
+    /// [`Conv2dOp::forward_ref`] on this clone must match the kernel
+    /// output bit-for-bit.
+    fn with_effective(op: &Conv2dOp, lanes: &PreparedLanes, lane_len: usize) -> Conv2dOp {
+        let mut eff = op.clone();
+        if op.depthwise {
+            let taps = op.kh * op.kw;
+            for ch in 0..op.out_c {
+                for t in 0..taps {
+                    eff.weights[ch * taps + t] = lanes.effective_weights[ch * lane_len + t];
+                }
+            }
+        } else {
+            eff.weights = lanes.effective_weights.clone();
+        }
+        eff
+    }
+
+    /// Reference op view (effective weights).
+    pub fn reference_op(&self) -> &Conv2dOp {
+        &self.op
+    }
+
+    /// Run the kernel over an NHWC input under a CPU cost model.
+    pub fn run(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
+        let op = &self.op;
+        let ishape = input.shape();
+        if ishape.rank() != 4 || ishape.c() != op.in_c {
+            return Err(Error::Shape(format!(
+                "{}: input {} incompatible with in_c {}",
+                op.name, ishape, op.in_c
+            )));
+        }
+        let (n, in_h, in_w) = (ishape.n(), ishape.h(), ishape.w());
+        let (out_h, out_w, pad_h, pad_w) = op.geometry(in_h, in_w);
+        let mut out =
+            QTensor::zeros(Shape::nhwc(n, out_h, out_w, op.out_c), op.output_params);
+        let mut counter = CycleCounter::new(model.clone());
+        let mut cfu = AnyCfu::new(self.design, op.input_offset());
+        let x = input.data();
+        let input_zp = op.input_params.zero_point.clamp(-128, 127) as i8;
+
+        let out_data = out.data_mut();
+        let mut out_idx = 0usize;
+        for b in 0..n {
+            for oh in 0..out_h {
+                for ow in 0..out_w {
+                    for oc in 0..op.out_c {
+                        // Per-output-position software charges accumulated
+                        // locally, flushed once (§Perf): bias load + move,
+                        // bounds tests, lane setup, requantize + store.
+                        let mut alu = 1u64; // acc init move
+                        let mut taken = 0u64;
+                        let mut not_taken = 0u64;
+                        let mut acc = op.bias[oc];
+                        if op.depthwise {
+                            acc = self.run_depthwise_lane(
+                                &mut cfu,
+                                &mut counter,
+                                x,
+                                (b, oh, ow, oc),
+                                (in_h, in_w, pad_h, pad_w),
+                                input_zp,
+                                acc,
+                            )?;
+                        } else {
+                            for kh in 0..op.kh {
+                                let ih = (oh * op.stride + kh) as i64 - pad_h;
+                                // bounds test per kernel row
+                                alu += 1;
+                                let oob_h = ih < 0 || ih >= in_h as i64;
+                                if oob_h {
+                                    taken += 1;
+                                    continue;
+                                }
+                                not_taken += 1;
+                                for kw in 0..op.kw {
+                                    let iw = (ow * op.stride + kw) as i64 - pad_w;
+                                    alu += 1;
+                                    let oob_w = iw < 0 || iw >= in_w as i64;
+                                    if oob_w {
+                                        taken += 1;
+                                        continue;
+                                    }
+                                    not_taken += 1;
+                                    let lane_idx = (oc * op.kh + kh) * op.kw + kw;
+                                    let base = ((b * in_h + ih as usize) * in_w
+                                        + iw as usize)
+                                        * op.in_c;
+                                    // lane setup (base pointer arithmetic)
+                                    alu += 2;
+                                    acc = run_lane(
+                                        self.design,
+                                        &mut cfu,
+                                        self.lanes.lane_words(lane_idx),
+                                        |j| {
+                                            let p = base + j * 4;
+                                            (
+                                                pack4_i8(&[
+                                                    x[p],
+                                                    x[p + 1],
+                                                    x[p + 2],
+                                                    x[p + 3],
+                                                ]),
+                                                1,
+                                                0,
+                                            )
+                                        },
+                                        acc,
+                                        &mut counter,
+                                    )?;
+                                }
+                            }
+                        }
+                        // requantize (~6 ALU: mul-high, shift, add zp, clamp x2, pack)
+                        alu += 6;
+                        counter.charge_bulk(alu, 1, 1, taken, not_taken, 0, 0);
+                        out_data[out_idx] = op.requant.apply(acc);
+                        out_idx += 1;
+                    }
+                }
+            }
+        }
+        Ok(KernelRun { output: out, counter })
+    }
+
+    /// Depthwise inner loop: the lane is the channel's padded tap list;
+    /// input words are gathered (4 byte loads + 3 packing ALU ops per
+    /// block), with padding positions supplying the input zero point.
+    #[allow(clippy::too_many_arguments)]
+    fn run_depthwise_lane(
+        &self,
+        cfu: &mut AnyCfu,
+        counter: &mut CycleCounter,
+        x: &[i8],
+        pos: (usize, usize, usize, usize),
+        geom: (usize, usize, i64, i64),
+        input_zp: i8,
+        acc: i32,
+    ) -> Result<i32> {
+        let op = &self.op;
+        let (b, oh, ow, oc) = pos;
+        let (in_h, in_w, pad_h, pad_w) = geom;
+        let taps = op.kh * op.kw;
+        let base_h = (oh * op.stride) as i64 - pad_h;
+        let base_w = (ow * op.stride) as i64 - pad_w;
+        let dw_taps = &self.dw_taps;
+        run_lane(
+            self.design,
+            cfu,
+            self.lanes.lane_words(oc),
+            |j| {
+                let mut lanes4 = [input_zp; 4];
+                let t0 = j * 4;
+                let end = (t0 + 4).min(taps);
+                for t in t0..end {
+                    let (kh, kw) = dw_taps[t];
+                    let ih = base_h + kh as i64;
+                    let iw = base_w + kw as i64;
+                    if ih >= 0 && ih < in_h as i64 && iw >= 0 && iw < in_w as i64 {
+                        lanes4[t - t0] =
+                            x[((b * in_h + ih as usize) * in_w + iw as usize) * op.in_c + oc];
+                    }
+                }
+                // gather: 4 byte loads + 3 packing ops
+                (pack4_i8(&lanes4), 4, 3)
+            },
+            acc,
+            counter,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::conv2d::Padding;
+    use crate::tensor::quant::QuantParams;
+    use crate::util::Pcg32;
+
+    fn qp(scale: f32, zp: i32) -> QuantParams {
+        QuantParams::new(scale, zp).unwrap()
+    }
+
+    fn random_conv(
+        seed: u64,
+        out_c: usize,
+        in_c: usize,
+        k: usize,
+        stride: usize,
+        padding: Padding,
+        depthwise: bool,
+        sparsity: f64,
+    ) -> Conv2dOp {
+        let mut rng = Pcg32::new(seed);
+        let n = if depthwise { out_c * k * k } else { out_c * k * k * in_c };
+        let weights: Vec<i8> = (0..n)
+            .map(|_| {
+                if rng.bernoulli(sparsity) {
+                    0
+                } else {
+                    rng.range_i32(-64, 63) as i8
+                }
+            })
+            .collect();
+        let bias: Vec<i32> = (0..out_c).map(|_| rng.range_i32(-500, 500)).collect();
+        Conv2dOp::new(
+            "t",
+            weights,
+            bias,
+            out_c,
+            in_c,
+            k,
+            k,
+            stride,
+            padding,
+            depthwise,
+            qp(0.05, -3),
+            0.02,
+            qp(0.08, 5),
+            true,
+        )
+        .unwrap()
+    }
+
+    fn random_input(seed: u64, h: usize, w: usize, c: usize) -> QTensor {
+        let mut rng = Pcg32::new(seed);
+        let data: Vec<i8> = (0..h * w * c).map(|_| rng.range_i32(-128, 127) as i8).collect();
+        QTensor::new(Shape::nhwc(1, h, w, c), data, qp(0.05, -3)).unwrap()
+    }
+
+    #[test]
+    fn kernel_matches_reference_all_designs() {
+        let op = random_conv(1, 8, 8, 3, 1, Padding::Same, false, 0.5);
+        let input = random_input(2, 6, 6, 8);
+        for design in DesignKind::ALL {
+            let prep = PreparedConv::new(&op, design).unwrap();
+            let run = prep.run(&input, &CostModel::vexriscv()).unwrap();
+            let reference = prep.reference_op().forward_ref(&input).unwrap();
+            assert_eq!(run.output.data(), reference.data(), "{design}");
+        }
+    }
+
+    #[test]
+    fn kernel_matches_reference_strided_valid() {
+        let op = random_conv(3, 4, 12, 3, 2, Padding::Valid, false, 0.6);
+        let input = random_input(4, 9, 9, 12);
+        for design in DesignKind::ALL {
+            let prep = PreparedConv::new(&op, design).unwrap();
+            let run = prep.run(&input, &CostModel::vexriscv()).unwrap();
+            let reference = prep.reference_op().forward_ref(&input).unwrap();
+            assert_eq!(run.output.data(), reference.data(), "{design}");
+        }
+    }
+
+    #[test]
+    fn depthwise_matches_reference_all_designs() {
+        let op = random_conv(5, 8, 8, 3, 1, Padding::Same, true, 0.4);
+        let input = random_input(6, 5, 5, 8);
+        for design in DesignKind::ALL {
+            let prep = PreparedConv::new(&op, design).unwrap();
+            let run = prep.run(&input, &CostModel::vexriscv()).unwrap();
+            let reference = prep.reference_op().forward_ref(&input).unwrap();
+            assert_eq!(run.output.data(), reference.data(), "{design}");
+        }
+    }
+
+    #[test]
+    fn sparsity_speeds_up_sssa_and_csa() {
+        let dense = random_conv(7, 8, 16, 3, 1, Padding::Same, false, 0.0);
+        let mut sparse = dense.clone();
+        // block-prune 60%
+        crate::sparsity::prune::prune_blocks_magnitude(&mut sparse.weights, 16, 0.6);
+        let input = random_input(8, 5, 5, 16);
+        for design in [DesignKind::Sssa, DesignKind::Csa] {
+            let c_dense = PreparedConv::new(&dense, design)
+                .unwrap()
+                .run(&input, &CostModel::vexriscv())
+                .unwrap()
+                .counter
+                .cycles();
+            let c_sparse = PreparedConv::new(&sparse, design)
+                .unwrap()
+                .run(&input, &CostModel::vexriscv())
+                .unwrap()
+                .counter
+                .cycles();
+            assert!(
+                (c_sparse as f64) < 0.7 * c_dense as f64,
+                "{design}: sparse {c_sparse} vs dense {c_dense}"
+            );
+        }
+    }
+
+    #[test]
+    fn baseline_cycles_independent_of_sparsity() {
+        let dense = random_conv(9, 4, 8, 3, 1, Padding::Same, false, 0.0);
+        let mut sparse = dense.clone();
+        crate::sparsity::prune::prune_unstructured_magnitude(&mut sparse.weights, 8, 0.9);
+        let input = random_input(10, 5, 5, 8);
+        let cd = PreparedConv::new(&dense, DesignKind::BaselineSimd)
+            .unwrap()
+            .run(&input, &CostModel::vexriscv())
+            .unwrap()
+            .counter
+            .cycles();
+        let cs = PreparedConv::new(&sparse, DesignKind::BaselineSimd)
+            .unwrap()
+            .run(&input, &CostModel::vexriscv())
+            .unwrap()
+            .counter
+            .cycles();
+        assert_eq!(cd, cs);
+    }
+
+    #[test]
+    fn unaligned_channels_rejected() {
+        let op = random_conv(11, 4, 6, 1, 1, Padding::Valid, false, 0.0);
+        assert!(PreparedConv::new(&op, DesignKind::BaselineSimd).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! CFU-accelerated fully-connected kernel.
+
+use super::lane::{prepare_lanes, run_lane, PreparedLanes};
+use super::KernelRun;
+use crate::cfu::AnyCfu;
+use crate::cpu::{CostModel, CycleCounter};
+use crate::encoding::pack::pack4_i8;
+use crate::error::{Error, Result};
+use crate::isa::DesignKind;
+use crate::nn::fully_connected::FullyConnectedOp;
+use crate::tensor::{QTensor, Shape};
+
+/// A dense layer prepared for one accelerator design.
+#[derive(Debug, Clone)]
+pub struct PreparedFc {
+    /// The layer with effective (possibly INT7-clamped) weights.
+    pub op: FullyConnectedOp,
+    /// Target design.
+    pub design: DesignKind,
+    /// Packed weight lanes (one lane per output neuron).
+    pub lanes: PreparedLanes,
+}
+
+impl PreparedFc {
+    /// Prepare; `in_n` must be a multiple of 4.
+    pub fn new(op: &FullyConnectedOp, design: DesignKind) -> Result<Self> {
+        if op.in_n % 4 != 0 {
+            return Err(Error::Model(format!(
+                "{}: in_n {} must be a multiple of 4 (pad features)",
+                op.name, op.in_n
+            )));
+        }
+        let lanes = prepare_lanes(&op.weights, op.in_n, design)?;
+        let mut eff = op.clone();
+        eff.weights = lanes.effective_weights.clone();
+        Ok(PreparedFc { op: eff, design, lanes })
+    }
+
+    /// Reference op view (effective weights).
+    pub fn reference_op(&self) -> &FullyConnectedOp {
+        &self.op
+    }
+
+    /// Run over a batch of flattened inputs.
+    pub fn run(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
+        let op = &self.op;
+        let numel = input.shape().numel();
+        if numel % op.in_n != 0 {
+            return Err(Error::Shape(format!(
+                "{}: input numel {numel} not divisible by in_n {}",
+                op.name, op.in_n
+            )));
+        }
+        let batch = numel / op.in_n;
+        let x = input.data();
+        let mut out = QTensor::zeros(Shape::d2(batch, op.out_n), op.output_params);
+        let mut counter = CycleCounter::new(model.clone());
+        let mut cfu = AnyCfu::new(self.design, op.input_offset());
+        for b in 0..batch {
+            let xrow = &x[b * op.in_n..(b + 1) * op.in_n];
+            for o in 0..op.out_n {
+                counter.load_words(1); // bias
+                counter.alu(1);
+                let mut acc = op.bias[o];
+                counter.alu(2); // lane base setup
+                acc = run_lane(
+                    self.design,
+                    &mut cfu,
+                    self.lanes.lane_words(o),
+                    |j| {
+                        let p = j * 4;
+                        (pack4_i8(&[xrow[p], xrow[p + 1], xrow[p + 2], xrow[p + 3]]), 1, 0)
+                    },
+                    acc,
+                    &mut counter,
+                )?;
+                counter.alu(6); // requantize
+                counter.store_words(1);
+                out.set(&[b, o], op.requant.apply(acc));
+            }
+        }
+        Ok(KernelRun { output: out, counter })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::quant::QuantParams;
+    use crate::util::Pcg32;
+
+    fn random_fc(seed: u64, out_n: usize, in_n: usize, sparsity: f64) -> FullyConnectedOp {
+        let mut rng = Pcg32::new(seed);
+        let weights: Vec<i8> = (0..out_n * in_n)
+            .map(|_| {
+                if rng.bernoulli(sparsity) {
+                    0
+                } else {
+                    rng.range_i32(-64, 63) as i8
+                }
+            })
+            .collect();
+        let bias: Vec<i32> = (0..out_n).map(|_| rng.range_i32(-200, 200)).collect();
+        FullyConnectedOp::new(
+            "fc",
+            weights,
+            bias,
+            out_n,
+            in_n,
+            QuantParams::new(0.1, 4).unwrap(),
+            0.05,
+            QuantParams::new(0.2, -6).unwrap(),
+            false,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn kernel_matches_reference_all_designs() {
+        let op = random_fc(21, 10, 64, 0.55);
+        let mut rng = Pcg32::new(22);
+        let data: Vec<i8> = (0..2 * 64).map(|_| rng.range_i32(-128, 127) as i8).collect();
+        let input =
+            QTensor::new(Shape::d2(2, 64), data, QuantParams::new(0.1, 4).unwrap()).unwrap();
+        for design in DesignKind::ALL {
+            let prep = PreparedFc::new(&op, design).unwrap();
+            let run = prep.run(&input, &CostModel::vexriscv()).unwrap();
+            let reference = prep.reference_op().forward_ref(&input).unwrap();
+            assert_eq!(run.output.data(), reference.data(), "{design}");
+        }
+    }
+
+    #[test]
+    fn unaligned_features_rejected() {
+        let op = random_fc(23, 4, 63, 0.0);
+        // in_n=63 not multiple of 4 — but FullyConnectedOp::new succeeded,
+        // preparation must reject.
+        assert!(PreparedFc::new(&op, DesignKind::Csa).is_err());
+    }
+
+    #[test]
+    fn csa_faster_than_baseline_on_sparse_rows() {
+        let op = random_fc(25, 16, 256, 0.0);
+        let mut sparse = op.clone();
+        crate::sparsity::prune::prune_combined(&mut sparse.weights, 256, 0.4, 0.5);
+        let mut rng = Pcg32::new(26);
+        let data: Vec<i8> = (0..256).map(|_| rng.range_i32(-128, 127) as i8).collect();
+        let input =
+            QTensor::new(Shape::d1(256), data, QuantParams::new(0.1, 4).unwrap()).unwrap();
+        let base = PreparedFc::new(&sparse, DesignKind::BaselineSimd)
+            .unwrap()
+            .run(&input, &CostModel::vexriscv())
+            .unwrap()
+            .counter
+            .cycles();
+        let csa = PreparedFc::new(&sparse, DesignKind::Csa)
+            .unwrap()
+            .run(&input, &CostModel::vexriscv())
+            .unwrap()
+            .counter
+            .cycles();
+        assert!(csa < base, "csa {csa} !< baseline {base}");
+    }
+}

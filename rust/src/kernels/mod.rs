@@ -1,0 +1,42 @@
+//! CFU-specialized compute kernels (Listings 1, 2, 3 of the paper).
+//!
+//! Each kernel runs the *actual* integer arithmetic through the CFU
+//! functional models while charging every instruction of the inner-loop
+//! code shape to a [`crate::cpu::CycleCounter`]. Outputs are therefore
+//! bit-exact against [`crate::nn`]'s golden ops (asserted in tests), and
+//! cycle counts are comparable across designs.
+//!
+//! ## Modelled instruction sequences (per 4-weight block)
+//!
+//! Baseline / USSA (`for` loop, Listing 1):
+//! `add a_w` · `lw w` · `add a_x` · `lw x` · `cfu mac` · `add acc` ·
+//! `addi i` · `blt` — 4 ALU, 2 loads, 1 CFU, 1 branch.
+//!
+//! SSSA / CSA (`while` loop, Listings 2/3):
+//! `add a_w` · `lw w` · `add a_x` · `lw x` · `cfu mac` · `add acc` ·
+//! `cfu inc_indvar` · `bltu` — 3 ALU, 2 loads, 2 CFU, 1 branch.
+//!
+//! The `inc_indvar` custom instruction *replaces* the `addi`, so a
+//! visited block costs the same CPU overhead in both shapes; the savings
+//! come from visiting fewer blocks (SSSA) and/or fewer MAC stall cycles
+//! (USSA/CSA).
+
+pub mod conv;
+pub mod fc;
+pub mod lane;
+
+pub use conv::PreparedConv;
+pub use fc::PreparedFc;
+pub use lane::{prepare_lanes, run_lane, PreparedLanes};
+
+use crate::cpu::CycleCounter;
+use crate::tensor::QTensor;
+
+/// Output of one kernel invocation.
+#[derive(Debug, Clone)]
+pub struct KernelRun {
+    /// Computed activation tensor (bit-exact vs the reference op).
+    pub output: QTensor,
+    /// Cycle/instruction accounting for the whole layer.
+    pub counter: CycleCounter,
+}

@@ -1,0 +1,53 @@
+//! # sparse-riscv
+//!
+//! Reproduction of *"Hardware/Software Co-Design of RISC-V Extensions for
+//! Accelerating Sparse DNNs on FPGAs"* (Sabih et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper extends a VexRiscv soft core with Custom Functional Units
+//! (CFUs) that exploit semi-structured (SSSA), unstructured (USSA), and
+//! combined (CSA) weight sparsity. This crate provides:
+//!
+//! - bit-accurate functional + cycle models of the four CFU designs
+//!   ([`cfu`]),
+//! - a VexRiscv-like instruction cycle-cost model and kernel executor
+//!   ([`cpu`], [`kernels`]),
+//! - the lookahead weight encoding of Algorithms 1 & 2 ([`encoding`]),
+//! - a pruning library for unstructured and 4:4 semi-structured sparsity
+//!   ([`sparsity`]),
+//! - TFLite-style INT8 quantized tensor and NN ops ([`tensor`], [`nn`]),
+//! - the paper's four evaluation models ([`models`]) and a layer-by-layer
+//!   cycle simulator ([`simulator`]),
+//! - an FPGA resource estimator reproducing Table III ([`resources`]),
+//! - analytical speedup models for Figures 8/9 ([`analysis`]),
+//! - an experiment coordinator with a threaded scheduler and a request
+//!   serving loop ([`coordinator`]),
+//! - a PJRT runtime that loads JAX-lowered HLO text artifacts ([`runtime`]),
+//! - offline-friendly substrates: CLI parser ([`cli`]), config system
+//!   ([`config`]), bench harness ([`bench`]), PRNG/stats/property testing
+//!   ([`util`]).
+//!
+//! See `DESIGN.md` for the hardware-substitution rationale and the
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench;
+pub mod cfu;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cpu;
+pub mod encoding;
+pub mod error;
+pub mod isa;
+pub mod kernels;
+pub mod models;
+pub mod nn;
+pub mod resources;
+pub mod runtime;
+pub mod simulator;
+pub mod sparsity;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};

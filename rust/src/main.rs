@@ -1,0 +1,258 @@
+//! `sparse-riscv` — leader binary: encode weights, run experiments,
+//! serve inference, estimate resources.
+
+use sparse_riscv::analysis::report::{f2, pct, Table};
+use sparse_riscv::cli::{ArgSpec, Command, ParsedArgs};
+use sparse_riscv::config::experiment::{ExperimentConfig, SimOptions};
+use sparse_riscv::coordinator::runner::run_experiment;
+use sparse_riscv::coordinator::serve::{ServeOptions, Server};
+use sparse_riscv::encoding::lookahead::encode_lanes;
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::models::builder::{apply_sparsity, random_input, ModelConfig};
+use sparse_riscv::models::zoo::{build_model, model_names};
+use sparse_riscv::resources::fpga::{estimate_cfu, paper_increment, BASELINE_SOC};
+use sparse_riscv::sparsity::generator::gen_combined_sparse;
+use sparse_riscv::util::Pcg32;
+
+fn cli() -> Command {
+    Command::new("sparse-riscv", "RISC-V sparse-DNN CFU co-design simulator")
+        .subcommand(
+            Command::new("experiment", "simulate a model on the accelerator designs")
+                .arg(ArgSpec::opt("model", "dscnn", "model (vgg16|resnet56|mobilenetv2|dscnn)"))
+                .arg(ArgSpec::opt("designs", "sssa,ussa,csa", "comma-separated designs"))
+                .arg(ArgSpec::opt("x-us", "0.5", "unstructured sparsity within blocks"))
+                .arg(ArgSpec::opt("x-ss", "0.3", "4:4 block sparsity"))
+                .arg(ArgSpec::opt("scale", "0.125", "model width multiplier"))
+                .arg(ArgSpec::opt("batch", "1", "inference requests"))
+                .arg(ArgSpec::opt("threads", "0", "worker threads (0=auto)"))
+                .arg(ArgSpec::opt("seed", "42", "rng seed"))
+                .arg(ArgSpec::flag("verify", "verify kernels against reference ops"))
+                .arg(ArgSpec::opt("config", "", "JSON experiment config file (overrides flags)")),
+        )
+        .subcommand(
+            Command::new("serve", "serve a batch of inference requests")
+                .arg(ArgSpec::opt("model", "dscnn", "model name"))
+                .arg(ArgSpec::opt("design", "csa", "accelerator design"))
+                .arg(ArgSpec::opt("requests", "16", "number of requests"))
+                .arg(ArgSpec::opt("x-us", "0.5", "unstructured sparsity"))
+                .arg(ArgSpec::opt("x-ss", "0.3", "block sparsity"))
+                .arg(ArgSpec::opt("scale", "0.125", "model width multiplier"))
+                .arg(ArgSpec::opt("threads", "0", "worker threads"))
+                .arg(ArgSpec::opt("seed", "42", "rng seed")),
+        )
+        .subcommand(
+            Command::new("encode", "demonstrate the lookahead encoding on synthetic weights")
+                .arg(ArgSpec::opt("blocks", "8", "number of 4-weight blocks"))
+                .arg(ArgSpec::opt("x-us", "0.2", "unstructured sparsity"))
+                .arg(ArgSpec::opt("x-ss", "0.4", "block sparsity"))
+                .arg(ArgSpec::opt("seed", "7", "rng seed")),
+        )
+        .subcommand(Command::new("resources", "print the FPGA resource estimate (Table III)"))
+        .subcommand(Command::new("models", "list the model zoo"))
+}
+
+fn parse_designs(s: &str) -> Result<Vec<DesignKind>, String> {
+    s.split(',')
+        .map(|tok| {
+            DesignKind::parse(tok.trim()).ok_or_else(|| format!("unknown design '{tok}'"))
+        })
+        .collect()
+}
+
+fn cmd_experiment(args: &ParsedArgs) -> sparse_riscv::Result<()> {
+    let cfg = {
+        let path = args.get("config")?;
+        if !path.is_empty() {
+            ExperimentConfig::from_json(&std::fs::read_to_string(path)?)?
+        } else {
+            ExperimentConfig {
+                name: "cli".into(),
+                model: args.get("model")?.to_string(),
+                designs: parse_designs(args.get("designs")?)
+                    .map_err(sparse_riscv::Error::Cli)?,
+                x_us: args.get_f64("x-us")?,
+                x_ss: args.get_f64("x-ss")?,
+                batch: args.get_usize("batch")?,
+                sim: SimOptions {
+                    seed: args.get_u64("seed")?,
+                    threads: args.get_usize("threads")?,
+                    verify: args.get_flag("verify")?,
+                    clock_hz: 100_000_000,
+                },
+            }
+        }
+    };
+    let model_cfg = ModelConfig { scale: args.get_f64("scale")?, ..Default::default() };
+    println!(
+        "experiment: model={} x_us={} x_ss={} batch={} scale={}",
+        cfg.model, cfg.x_us, cfg.x_ss, cfg.batch, model_cfg.scale
+    );
+    let res = run_experiment(&cfg, &model_cfg)?;
+    println!(
+        "achieved sparsity: element={} block={}",
+        pct(res.element_sparsity),
+        pct(res.block_sparsity)
+    );
+    let mut t = Table::new(
+        "results",
+        &["design", "cycles", "mac-cycles", "speedup-vs-simd", "speedup-vs-seq"],
+    );
+    for d in &res.designs {
+        t.row(&[
+            d.design.name().to_string(),
+            d.total_cycles.to_string(),
+            d.mac_cycles.to_string(),
+            f2(d.speedup_vs_simd),
+            f2(d.speedup_vs_seq),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
+    let design = DesignKind::parse(args.get("design")?)
+        .ok_or_else(|| sparse_riscv::Error::Cli("unknown design".into()))?;
+    let model_cfg = ModelConfig { scale: args.get_f64("scale")?, ..Default::default() };
+    let mut info = build_model(args.get("model")?, &model_cfg)?;
+    apply_sparsity(&mut info.graph, args.get_f64("x-us")?, args.get_f64("x-ss")?);
+    let server = Server::new(
+        &info.graph,
+        design,
+        &ServeOptions {
+            threads: args.get_usize("threads")?,
+            clock_hz: 100_000_000,
+            verify: false,
+        },
+    )?;
+    let mut rng = Pcg32::new(args.get_u64("seed")?);
+    let reqs: Vec<_> = (0..args.get_usize("requests")?)
+        .map(|_| random_input(info.input_shape.clone(), model_cfg.act_params(), &mut rng))
+        .collect();
+    let n = reqs.len();
+    let (preds, mut metrics) = server.serve_batch(reqs)?;
+    println!("served {n} requests on {design}");
+    println!(
+        "simulated latency: mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms (at 100 MHz)",
+        metrics.sim_latency.mean() * 1e3,
+        metrics.sim_percentiles.percentile(50.0) * 1e3,
+        metrics.sim_percentiles.percentile(99.0) * 1e3,
+    );
+    println!(
+        "total simulated cycles: {}   host wall: {:.3} s",
+        metrics.total_cycles, metrics.wall_seconds
+    );
+    let hist: std::collections::BTreeMap<usize, usize> =
+        preds.iter().fold(Default::default(), |mut m, &p| {
+            *m.entry(p).or_default() += 1;
+            m
+        });
+    println!("prediction histogram: {hist:?}");
+    Ok(())
+}
+
+fn cmd_encode(args: &ParsedArgs) -> sparse_riscv::Result<()> {
+    let blocks = args.get_usize("blocks")?;
+    let mut rng = Pcg32::new(args.get_u64("seed")?);
+    let ws = gen_combined_sparse(
+        blocks * 4,
+        args.get_f64("x-us")?,
+        args.get_f64("x-ss")?,
+        &mut rng,
+    );
+    let enc = encode_lanes(&ws, ws.len())?;
+    println!("weights ({} blocks):", blocks);
+    for (i, b) in ws.chunks(4).enumerate() {
+        let eb = &enc.encoded[i * 4..i * 4 + 4];
+        let arr: [i8; 4] = eb.try_into().unwrap();
+        let skip = sparse_riscv::encoding::lookahead::decode_skip(&arr);
+        println!(
+            "  block {i:2}: {b:?} -> encoded {:?} (skip={skip})",
+            eb.iter().map(|&w| format!("{:#04x}", w as u8)).collect::<Vec<_>>()
+        );
+    }
+    println!(
+        "total blocks {}  zero blocks {}  visited by SSSA loop {}",
+        enc.total_blocks, enc.zero_blocks, enc.visited_blocks
+    );
+    Ok(())
+}
+
+fn cmd_resources() {
+    let mut t = Table::new(
+        "Table III — FPGA resource increments (estimated vs paper)",
+        &["design", "LUTs est", "LUTs paper", "FFs est", "FFs paper", "DSPs est", "DSPs paper"],
+    );
+    for d in [DesignKind::Ussa, DesignKind::Sssa, DesignKind::Csa] {
+        let est = estimate_cfu(d);
+        let paper = paper_increment(d).unwrap();
+        t.row(&[
+            d.name().to_string(),
+            est.luts.to_string(),
+            paper.luts.to_string(),
+            est.ffs.to_string(),
+            paper.ffs.to_string(),
+            est.dsps.to_string(),
+            paper.dsps.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "baseline SoC (w/o CFU): {} LUTs, {} FFs, {} BRAMs, {} DSPs",
+        BASELINE_SOC.luts, BASELINE_SOC.ffs, BASELINE_SOC.brams, BASELINE_SOC.dsps
+    );
+}
+
+fn cmd_models() -> sparse_riscv::Result<()> {
+    let cfg = ModelConfig { scale: 0.125, ..Default::default() };
+    let mut t = Table::new(
+        "model zoo (at scale 0.125)",
+        &["model", "dataset", "mac-layers", "weights", "input"],
+    );
+    for name in model_names() {
+        let info = build_model(name, &cfg)?;
+        t.row(&[
+            name.to_string(),
+            info.dataset.to_string(),
+            info.graph.mac_layers().to_string(),
+            info.graph.total_weights().to_string(),
+            info.input_shape.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn main() {
+    sparse_riscv::util::logging::init();
+    let parsed = match cli().parse_env() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("try 'sparse-riscv --help'");
+            std::process::exit(2);
+        }
+    };
+    if let Some(help) = &parsed.help {
+        println!("{help}");
+        return;
+    }
+    let result = match parsed.subcommand() {
+        "experiment" => cmd_experiment(&parsed),
+        "serve" => cmd_serve(&parsed),
+        "encode" => cmd_encode(&parsed),
+        "resources" => {
+            cmd_resources();
+            Ok(())
+        }
+        "models" => cmd_models(),
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,337 @@
+//! Shared model-construction helpers.
+
+use crate::error::Result;
+use crate::nn::conv2d::{Conv2dOp, Padding};
+use crate::nn::fully_connected::FullyConnectedOp;
+use crate::nn::graph::{Graph, Layer};
+use crate::sparsity::prune::prune_combined;
+use crate::tensor::quant::QuantParams;
+use crate::tensor::{QTensor, Shape};
+use crate::util::Pcg32;
+
+/// Configuration for synthetic model construction.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    /// Width multiplier (1.0 = paper-size model). Channel counts are
+    /// scaled then rounded up to a multiple of 4.
+    pub scale: f64,
+    /// Weight RNG seed.
+    pub seed: u64,
+    /// Default activation scale.
+    pub act_scale: f32,
+    /// Default weight scale.
+    pub weight_scale: f32,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        // scale 0.25 keeps full-model cycle simulation tractable while
+        // preserving every layer type and the channel-blocking structure.
+        ModelConfig { scale: 0.25, seed: 0x5EED, act_scale: 0.05, weight_scale: 0.02 }
+    }
+}
+
+impl ModelConfig {
+    /// Paper-size model (scale 1.0).
+    pub fn full() -> Self {
+        ModelConfig { scale: 1.0, ..Default::default() }
+    }
+
+    /// Scale a channel count, rounding up to a multiple of 4 (min 4).
+    pub fn ch(&self, base: usize) -> usize {
+        let scaled = (base as f64 * self.scale).round().max(1.0) as usize;
+        scaled.div_ceil(4) * 4
+    }
+
+    /// Default activation quant params.
+    pub fn act_params(&self) -> QuantParams {
+        QuantParams::new(self.act_scale, 0).unwrap()
+    }
+}
+
+/// Stateful helper threading RNG + quant params through layer building.
+pub struct GraphBuilder {
+    cfg: ModelConfig,
+    rng: Pcg32,
+    layers: Vec<Layer>,
+}
+
+impl GraphBuilder {
+    /// Start a builder.
+    pub fn new(cfg: &ModelConfig) -> Self {
+        GraphBuilder { cfg: cfg.clone(), rng: Pcg32::new(cfg.seed), layers: Vec::new() }
+    }
+
+    fn random_weights(&mut self, n: usize) -> Vec<i8> {
+        // INT7-ranged so every design runs identical effective weights.
+        (0..n)
+            .map(|_| {
+                let w = self.rng.range_i32(-64, 63) as i8;
+                if w == 0 {
+                    1
+                } else {
+                    w
+                }
+            })
+            .collect()
+    }
+
+    fn random_bias(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.rng.range_i32(-256, 256)).collect()
+    }
+
+    /// Construct a conv op without pushing it (projection shortcuts).
+    #[allow(clippy::too_many_arguments)]
+    pub fn make_conv(
+        &mut self,
+        name: &str,
+        out_c: usize,
+        in_c: usize,
+        k: usize,
+        stride: usize,
+        padding: Padding,
+        relu: bool,
+    ) -> Result<Conv2dOp> {
+        let weights = self.random_weights(out_c * k * k * in_c);
+        let bias = self.random_bias(out_c);
+        Conv2dOp::new(
+            name,
+            weights,
+            bias,
+            out_c,
+            in_c,
+            k,
+            k,
+            stride,
+            padding,
+            false,
+            self.cfg.act_params(),
+            self.cfg.weight_scale,
+            self.cfg.act_params(),
+            relu,
+        )
+    }
+
+    /// Add a conv layer (normal).
+    pub fn conv(
+        &mut self,
+        name: &str,
+        out_c: usize,
+        in_c: usize,
+        k: usize,
+        stride: usize,
+        padding: Padding,
+        relu: bool,
+    ) -> Result<usize> {
+        let weights = self.random_weights(out_c * k * k * in_c);
+        let bias = self.random_bias(out_c);
+        let op = Conv2dOp::new(
+            name,
+            weights,
+            bias,
+            out_c,
+            in_c,
+            k,
+            k,
+            stride,
+            padding,
+            false,
+            self.cfg.act_params(),
+            self.cfg.weight_scale,
+            self.cfg.act_params(),
+            relu,
+        )?;
+        self.layers.push(Layer::Conv(op));
+        Ok(out_c)
+    }
+
+    /// Add a non-square conv (DSCNN's 10×4 first layer).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_rect(
+        &mut self,
+        name: &str,
+        out_c: usize,
+        in_c: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        padding: Padding,
+        relu: bool,
+    ) -> Result<usize> {
+        let weights = self.random_weights(out_c * kh * kw * in_c);
+        let bias = self.random_bias(out_c);
+        let op = Conv2dOp::new(
+            name,
+            weights,
+            bias,
+            out_c,
+            in_c,
+            kh,
+            kw,
+            stride,
+            padding,
+            false,
+            self.cfg.act_params(),
+            self.cfg.weight_scale,
+            self.cfg.act_params(),
+            relu,
+        )?;
+        self.layers.push(Layer::Conv(op));
+        Ok(out_c)
+    }
+
+    /// Add a depthwise conv layer.
+    pub fn dwconv(
+        &mut self,
+        name: &str,
+        ch: usize,
+        k: usize,
+        stride: usize,
+        relu: bool,
+    ) -> Result<usize> {
+        let weights = self.random_weights(ch * k * k);
+        let bias = self.random_bias(ch);
+        let op = Conv2dOp::new(
+            name,
+            weights,
+            bias,
+            ch,
+            ch,
+            k,
+            k,
+            stride,
+            Padding::Same,
+            true,
+            self.cfg.act_params(),
+            self.cfg.weight_scale,
+            self.cfg.act_params(),
+            relu,
+        )?;
+        self.layers.push(Layer::Conv(op));
+        Ok(ch)
+    }
+
+    /// Add a fully-connected layer.
+    pub fn fc(&mut self, name: &str, out_n: usize, in_n: usize, relu: bool) -> Result<usize> {
+        let weights = self.random_weights(out_n * in_n);
+        let bias = self.random_bias(out_n);
+        let op = FullyConnectedOp::new(
+            name,
+            weights,
+            bias,
+            out_n,
+            in_n,
+            self.cfg.act_params(),
+            self.cfg.weight_scale,
+            self.cfg.act_params(),
+            relu,
+        )?;
+        self.layers.push(Layer::Fc(op));
+        Ok(out_n)
+    }
+
+    /// Push a raw layer.
+    pub fn push(&mut self, layer: Layer) {
+        self.layers.push(layer);
+    }
+
+    /// Output quant params used for residual adds.
+    pub fn act_params(&self) -> QuantParams {
+        self.cfg.act_params()
+    }
+
+    /// Finish the graph.
+    pub fn finish(self, name: &str, classes: usize) -> Graph {
+        Graph::new(name, self.layers, classes)
+    }
+}
+
+/// Apply combined sparsity to every MAC layer of a graph in place
+/// (Figure 10's (x_us, x_ss) parameterization: x_ss of blocks zeroed,
+/// then x_us unstructured zeros within surviving blocks).
+pub fn apply_sparsity(graph: &mut Graph, x_us: f64, x_ss: f64) {
+    for layer in &mut graph.layers {
+        match layer {
+            Layer::Conv(op) => {
+                let lane = op.lane_len();
+                if op.depthwise {
+                    // depthwise lanes are kh*kw (may not be %4); prune at
+                    // element granularity only.
+                    let n = op.weights.len();
+                    let padded_lane = lane.div_ceil(4) * 4;
+                    let mut padded = vec![0i8; (n / lane) * padded_lane];
+                    for (i, chunk) in op.weights.chunks(lane).enumerate() {
+                        padded[i * padded_lane..i * padded_lane + lane].copy_from_slice(chunk);
+                    }
+                    prune_combined(&mut padded, padded_lane, x_ss, x_us);
+                    for (i, chunk) in op.weights.chunks_mut(lane).enumerate() {
+                        chunk.copy_from_slice(&padded[i * padded_lane..i * padded_lane + lane]);
+                    }
+                } else {
+                    prune_combined(&mut op.weights, lane, x_ss, x_us);
+                }
+            }
+            Layer::Fc(op) => {
+                prune_combined(&mut op.weights, op.in_n, x_ss, x_us);
+            }
+            Layer::Shortcut { conv: Some(op), .. } => {
+                let lane = op.lane_len();
+                prune_combined(&mut op.weights, lane, x_ss, x_us);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Generate a random input activation tensor for a model input shape.
+pub fn random_input(shape: Shape, params: QuantParams, rng: &mut Pcg32) -> QTensor {
+    let data: Vec<i8> = (0..shape.numel()).map(|_| rng.range_i32(-128, 127) as i8).collect();
+    QTensor::new(shape, data, params).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_scaling_multiple_of_4() {
+        let cfg = ModelConfig { scale: 0.3, ..Default::default() };
+        assert_eq!(cfg.ch(64) % 4, 0);
+        assert!(cfg.ch(64) >= 4);
+        let full = ModelConfig::full();
+        assert_eq!(full.ch(64), 64);
+        assert_eq!(full.ch(3), 4); // rounds up to block size
+    }
+
+    #[test]
+    fn builder_produces_runnable_graph() {
+        let cfg = ModelConfig::default();
+        let mut b = GraphBuilder::new(&cfg);
+        let c = b.conv("c1", 8, 4, 3, 1, Padding::Same, true).unwrap();
+        b.push(Layer::MaxPool { k: 2, stride: 2 });
+        let c = b.conv("c2", 8, c, 3, 1, Padding::Same, true).unwrap();
+        b.push(Layer::GlobalAvgPool);
+        b.fc("head", 10, c, false).unwrap();
+        let g = b.finish("tiny", 10);
+        let mut rng = Pcg32::new(1);
+        let input = random_input(Shape::nhwc(1, 8, 8, 4), cfg.act_params(), &mut rng);
+        let out = g.forward_ref(&input).unwrap();
+        assert_eq!(out.shape().dims(), &[1, 10]);
+    }
+
+    #[test]
+    fn apply_sparsity_reaches_targets() {
+        let cfg = ModelConfig::default();
+        let mut b = GraphBuilder::new(&cfg);
+        b.conv("c1", 16, 16, 3, 1, Padding::Same, true).unwrap();
+        b.fc("fc", 16, 64, false).unwrap();
+        let mut g = b.finish("t", 16);
+        apply_sparsity(&mut g, 0.5, 0.4);
+        for layer in &g.layers {
+            if let Layer::Conv(op) = layer {
+                let p = crate::sparsity::stats::SparsityProfile::measure(&op.weights, op.in_c);
+                assert!((p.block - 0.4).abs() < 0.05, "block {}", p.block);
+            }
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! DSCNN (Google Speech Commands keyword spotting): the MLPerf-Tiny /
+//! TFLite-Micro depthwise-separable CNN — a 10×4 strided stem conv over
+//! the 49×10 MFCC spectrogram, four depthwise-separable blocks at 64
+//! channels, global average pooling, and a 12-way softmax head
+//! (10 keywords + "silence" + "unknown").
+
+use super::builder::{GraphBuilder, ModelConfig};
+use crate::error::Result;
+use crate::nn::conv2d::Padding;
+use crate::nn::graph::{Graph, Layer};
+use crate::tensor::Shape;
+
+/// GSC spectrogram input: 49 frames × 10 MFCCs, padded to 4 channels.
+pub fn input_shape() -> Shape {
+    Shape::nhwc(1, 49, 10, 4)
+}
+
+/// Number of output classes.
+pub const CLASSES: usize = 12;
+
+/// Build DSCNN at the configured width.
+pub fn build(cfg: &ModelConfig) -> Result<Graph> {
+    let mut b = GraphBuilder::new(cfg);
+    let ch = cfg.ch(64);
+    // Stem: 10×4 conv, stride 2, padding same.
+    let mut c = b.conv_rect("stem", ch, 4, 10, 4, 2, Padding::Same, true)?;
+    for blk in 1..=4 {
+        c = b.dwconv(&format!("b{blk}dw"), c, 3, 1, true)?;
+        c = b.conv(&format!("b{blk}pw"), ch, c, 1, 1, Padding::Same, true)?;
+    }
+    b.push(Layer::GlobalAvgPool);
+    b.fc("head", CLASSES, c, false)?;
+    Ok(b.finish("dscnn", CLASSES))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builder::random_input;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn builds_and_runs() {
+        let cfg = ModelConfig::default();
+        let g = build(&cfg).unwrap();
+        // stem + 4×(dw+pw) + fc = 10 MAC layers
+        assert_eq!(g.mac_layers(), 10);
+        let mut rng = Pcg32::new(4);
+        let input = random_input(input_shape(), cfg.act_params(), &mut rng);
+        let out = g.forward_ref(&input).unwrap();
+        assert_eq!(out.shape().numel(), CLASSES);
+    }
+
+    #[test]
+    fn stem_is_rectangular() {
+        let cfg = ModelConfig::default();
+        let g = build(&cfg).unwrap();
+        if let Layer::Conv(op) = &g.layers[0] {
+            assert_eq!((op.kh, op.kw), (10, 4));
+            assert_eq!(op.stride, 2);
+        } else {
+            panic!("first layer must be the stem conv");
+        }
+    }
+}

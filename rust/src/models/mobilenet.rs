@@ -1,0 +1,101 @@
+//! MobileNetV2 (Visual Wake Words person detection): inverted residual
+//! bottlenecks (1×1 expand → 3×3 depthwise → 1×1 project) with the
+//! standard (t, c, n, s) schedule, on a 96×96 VWW-style input.
+
+use super::builder::{GraphBuilder, ModelConfig};
+use crate::error::Result;
+use crate::nn::conv2d::Padding;
+use crate::nn::graph::{Graph, Layer};
+use crate::tensor::Shape;
+
+/// VWW-style input: 96×96 RGB padded to 4 channels.
+pub fn input_shape() -> Shape {
+    Shape::nhwc(1, 96, 96, 4)
+}
+
+/// Standard MobileNetV2 schedule: (expansion t, channels c, repeats n,
+/// stride s).
+const SCHEDULE: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+/// Build MobileNetV2 at the configured width.
+pub fn build(cfg: &ModelConfig) -> Result<Graph> {
+    let mut b = GraphBuilder::new(cfg);
+    let mut c_in = b.conv("stem", cfg.ch(32), 4, 3, 2, Padding::Same, true)?;
+    let mut block_id = 0usize;
+    for &(t, c, n, s) in &SCHEDULE {
+        let c_out = cfg.ch(c);
+        for rep in 0..n {
+            block_id += 1;
+            let stride = if rep == 0 { s } else { 1 };
+            let hidden = (c_in * t).div_ceil(4) * 4;
+            let residual = stride == 1 && c_in == c_out;
+            if residual {
+                b.push(Layer::Shortcut { conv: None, slot: 0 });
+            }
+            if t != 1 {
+                b.conv(&format!("ir{block_id}expand"), hidden, c_in, 1, 1, Padding::Same, true)?;
+            }
+            let dw_in = if t != 1 { hidden } else { c_in };
+            b.dwconv(&format!("ir{block_id}dw"), dw_in, 3, stride, true)?;
+            b.conv(&format!("ir{block_id}proj"), c_out, dw_in, 1, 1, Padding::Same, false)?;
+            if residual {
+                let params = b.act_params();
+                b.push(Layer::ResidualAdd { slot: 0, out_params: params });
+            }
+            c_in = c_out;
+        }
+    }
+    let last = b.conv("head_conv", cfg.ch(1280), c_in, 1, 1, Padding::Same, true)?;
+    b.push(Layer::GlobalAvgPool);
+    // Person detection: 2 classes (padded to 4 outputs).
+    b.fc("head", 4, last, false)?;
+    Ok(b.finish("mobilenetv2", 2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builder::random_input;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn builds_and_runs_small() {
+        let cfg = ModelConfig { scale: 0.125, ..Default::default() };
+        let g = build(&cfg).unwrap();
+        let mut rng = Pcg32::new(3);
+        // Use a reduced input for test speed (the graph is input-size
+        // agnostic as long as strides divide cleanly).
+        let input = random_input(Shape::nhwc(1, 32, 32, 4), cfg.act_params(), &mut rng);
+        let out = g.forward_ref(&input).unwrap();
+        assert_eq!(out.shape().numel(), 4);
+    }
+
+    #[test]
+    fn has_17_inverted_residual_blocks() {
+        let cfg = ModelConfig { scale: 0.125, ..Default::default() };
+        let g = build(&cfg).unwrap();
+        let dw = g
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Conv(op) if op.depthwise))
+            .count();
+        assert_eq!(dw, 17); // Σ n over the schedule
+    }
+
+    #[test]
+    fn residual_blocks_present() {
+        let cfg = ModelConfig { scale: 0.125, ..Default::default() };
+        let g = build(&cfg).unwrap();
+        let adds =
+            g.layers.iter().filter(|l| matches!(l, Layer::ResidualAdd { .. })).count();
+        assert!(adds >= 5, "expected inverted-residual adds, got {adds}");
+    }
+}

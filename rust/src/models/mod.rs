@@ -1,0 +1,27 @@
+//! Model zoo: the paper's four evaluation networks (Section IV-B).
+//!
+//! - **VGG16** and **ResNet-56** for CIFAR-10-class image classification,
+//! - **MobileNetV2** for Visual-Wake-Words person detection,
+//! - **DSCNN** for Google-Speech-Commands keyword spotting.
+//!
+//! Models are built as [`crate::nn::Graph`]s with synthetic (seeded)
+//! weights at configurable width `scale` — cycle counts depend only on
+//! shapes and sparsity patterns, not on weight values, so scaled-down
+//! variants reproduce the paper's *speedup ratios* while keeping the
+//! cycle-accurate simulation tractable. Trained weights for the accuracy
+//! experiments (Table II) are imported from the Python layer instead
+//! (see `python/compile/train.py` and [`crate::runtime`]).
+//!
+//! All channel counts are padded to multiples of 4 (the CFU block size);
+//! the image input is zero-padded from 3 to 4 channels, spectrograms
+//! from 1 to 4.
+
+pub mod builder;
+pub mod dscnn;
+pub mod mobilenet;
+pub mod resnet;
+pub mod vgg;
+pub mod zoo;
+
+pub use builder::{apply_sparsity, ModelConfig};
+pub use zoo::{build_model, model_names, ModelInfo};

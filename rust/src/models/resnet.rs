@@ -1,0 +1,98 @@
+//! ResNet-56 (CIFAR-10): 3 stages × 9 basic blocks (2 convs each) at
+//! 16/32/64 channels, identity residuals, 1×1 strided projection
+//! shortcuts at stage transitions.
+
+use super::builder::{GraphBuilder, ModelConfig};
+use crate::error::Result;
+use crate::nn::conv2d::Padding;
+use crate::nn::graph::{Graph, Layer};
+use crate::tensor::Shape;
+
+/// CIFAR-style input.
+pub fn input_shape() -> Shape {
+    Shape::nhwc(1, 32, 32, 4)
+}
+
+/// Blocks per stage for ResNet-56: (56 - 2) / 6 = 9.
+pub const BLOCKS_PER_STAGE: usize = 9;
+
+/// Build ResNet-56 at the configured width.
+pub fn build(cfg: &ModelConfig) -> Result<Graph> {
+    let mut b = GraphBuilder::new(cfg);
+    let stage_ch = [cfg.ch(16), cfg.ch(32), cfg.ch(64)];
+    let mut c_in = b.conv("stem", stage_ch[0], 4, 3, 1, Padding::Same, true)?;
+    for (si, &ch) in stage_ch.iter().enumerate() {
+        for bi in 0..BLOCKS_PER_STAGE {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let needs_proj = stride != 1 || c_in != ch;
+            let proj = if needs_proj {
+                Some(Box::new(b.make_conv(
+                    &format!("s{}b{}proj", si + 1, bi + 1),
+                    ch,
+                    c_in,
+                    1,
+                    stride,
+                    Padding::Same,
+                    false,
+                )?))
+            } else {
+                None
+            };
+            b.push(Layer::Shortcut { conv: proj, slot: 0 });
+            b.conv(
+                &format!("s{}b{}c1", si + 1, bi + 1),
+                ch,
+                c_in,
+                3,
+                stride,
+                Padding::Same,
+                true,
+            )?;
+            b.conv(&format!("s{}b{}c2", si + 1, bi + 1), ch, ch, 3, 1, Padding::Same, false)?;
+            let params = b.act_params();
+            b.push(Layer::ResidualAdd { slot: 0, out_params: params });
+            b.push(Layer::Relu);
+            c_in = ch;
+        }
+    }
+    b.push(Layer::GlobalAvgPool);
+    b.fc("head", 12, c_in, false)?;
+    Ok(b.finish("resnet56", 10))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builder::random_input;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn builds_and_runs() {
+        let cfg = ModelConfig { scale: 0.25, ..Default::default() };
+        let g = build(&cfg).unwrap();
+        // 1 stem + 27 blocks × 2 convs + 2 projections + 1 fc
+        assert_eq!(g.mac_layers(), 1 + 27 * 2 + 2 + 1);
+        let mut rng = Pcg32::new(2);
+        let input = random_input(input_shape(), cfg.act_params(), &mut rng);
+        let out = g.forward_ref(&input).unwrap();
+        assert_eq!(out.shape().numel(), 12);
+    }
+
+    #[test]
+    fn stage_transitions_project() {
+        let cfg = ModelConfig { scale: 0.25, ..Default::default() };
+        let g = build(&cfg).unwrap();
+        let projections = g
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Shortcut { conv: Some(_), .. }))
+            .count();
+        assert_eq!(projections, 2);
+        let identity_shortcuts = g
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Shortcut { conv: None, .. }))
+            .count();
+        assert_eq!(identity_shortcuts, 25);
+    }
+}

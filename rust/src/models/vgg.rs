@@ -1,0 +1,65 @@
+//! VGG16 (CIFAR-10 variant): thirteen 3×3 conv layers in five blocks
+//! with max-pooling, then the classifier head.
+
+use super::builder::{GraphBuilder, ModelConfig};
+use crate::error::Result;
+use crate::nn::conv2d::Padding;
+use crate::nn::graph::{Graph, Layer};
+use crate::tensor::Shape;
+
+/// CIFAR-style input: 32×32 RGB padded to 4 channels.
+pub fn input_shape() -> Shape {
+    Shape::nhwc(1, 32, 32, 4)
+}
+
+/// Build VGG16 at the configured width.
+pub fn build(cfg: &ModelConfig) -> Result<Graph> {
+    let mut b = GraphBuilder::new(cfg);
+    let mut c_in = 4usize;
+    // (block channels, convs per block)
+    let blocks: [(usize, usize); 5] =
+        [(cfg.ch(64), 2), (cfg.ch(128), 2), (cfg.ch(256), 3), (cfg.ch(512), 3), (cfg.ch(512), 3)];
+    for (bi, (ch, convs)) in blocks.iter().enumerate() {
+        for ci in 0..*convs {
+            let name = format!("b{}c{}", bi + 1, ci + 1);
+            c_in = b.conv(&name, *ch, c_in, 3, 1, Padding::Same, true)?;
+        }
+        b.push(Layer::MaxPool { k: 2, stride: 2 });
+    }
+    // After five pools: 1×1 spatial → flatten = c_in features.
+    let h = b.fc("fc1", cfg.ch(512), c_in, true)?;
+    b.fc("head", 12, h, false)?;
+    Ok(b.finish("vgg16", 10))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builder::random_input;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn builds_and_runs() {
+        let cfg = ModelConfig { scale: 0.125, ..Default::default() };
+        let g = build(&cfg).unwrap();
+        assert_eq!(g.mac_layers(), 15); // 13 convs + 2 fc
+        let mut rng = Pcg32::new(1);
+        let input = random_input(input_shape(), cfg.act_params(), &mut rng);
+        let out = g.forward_ref(&input).unwrap();
+        assert_eq!(out.shape().numel(), 12);
+    }
+
+    #[test]
+    fn full_scale_channel_counts() {
+        let g = build(&ModelConfig::full()).unwrap();
+        // first conv: 64 out channels × 3×3 × 4 in
+        if let Layer::Conv(op) = &g.layers[0] {
+            assert_eq!(op.out_c, 64);
+            assert_eq!(op.in_c, 4);
+        } else {
+            panic!("first layer should be conv");
+        }
+        // ~15M weights at full scale (vgg16 CIFAR variant)
+        assert!(g.total_weights() > 10_000_000);
+    }
+}

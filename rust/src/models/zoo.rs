@@ -1,0 +1,78 @@
+//! Model registry.
+
+use super::builder::ModelConfig;
+use super::{dscnn, mobilenet, resnet, vgg};
+use crate::error::{Error, Result};
+use crate::nn::graph::Graph;
+use crate::tensor::Shape;
+
+/// A zoo entry: graph + canonical input shape + dataset label.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    /// The built graph.
+    pub graph: Graph,
+    /// Canonical input shape.
+    pub input_shape: Shape,
+    /// Dataset the paper pairs the model with.
+    pub dataset: &'static str,
+}
+
+/// Names accepted by [`build_model`].
+pub fn model_names() -> [&'static str; 4] {
+    ["vgg16", "resnet56", "mobilenetv2", "dscnn"]
+}
+
+/// Build a model by name.
+pub fn build_model(name: &str, cfg: &ModelConfig) -> Result<ModelInfo> {
+    match name.to_ascii_lowercase().as_str() {
+        "vgg16" => Ok(ModelInfo {
+            graph: vgg::build(cfg)?,
+            input_shape: vgg::input_shape(),
+            dataset: "CIFAR-10",
+        }),
+        "resnet56" => Ok(ModelInfo {
+            graph: resnet::build(cfg)?,
+            input_shape: resnet::input_shape(),
+            dataset: "CIFAR-10",
+        }),
+        "mobilenetv2" => Ok(ModelInfo {
+            graph: mobilenet::build(cfg)?,
+            input_shape: mobilenet::input_shape(),
+            dataset: "VWW",
+        }),
+        "dscnn" => Ok(ModelInfo {
+            graph: dscnn::build(cfg)?,
+            input_shape: dscnn::input_shape(),
+            dataset: "GSC",
+        }),
+        other => Err(Error::Model(format!(
+            "unknown model '{other}' (expected one of {:?})",
+            model_names()
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_build() {
+        let cfg = ModelConfig { scale: 0.125, ..Default::default() };
+        for name in model_names() {
+            let info = build_model(name, &cfg).unwrap();
+            assert!(info.graph.mac_layers() > 0, "{name}");
+            assert_eq!(info.input_shape.rank(), 4, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        assert!(build_model("alexnet", &ModelConfig::default()).is_err());
+    }
+
+    #[test]
+    fn case_insensitive() {
+        assert!(build_model("DSCNN", &ModelConfig::default()).is_ok());
+    }
+}

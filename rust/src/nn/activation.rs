@@ -1,0 +1,147 @@
+//! Standalone activations: ReLU (when not fused into requantization),
+//! residual add, and softmax.
+
+use crate::error::{Error, Result};
+use crate::tensor::quant::{
+    multiply_by_quantized_multiplier, quantize_multiplier, QuantParams,
+};
+use crate::tensor::QTensor;
+
+/// Elementwise ReLU in the quantized domain: clamp at the zero point.
+pub fn relu(input: &QTensor) -> QTensor {
+    let zp = input.params().zero_point.clamp(-128, 127) as i8;
+    let mut out = input.clone();
+    for v in out.data_mut() {
+        if *v < zp {
+            *v = zp;
+        }
+    }
+    out
+}
+
+/// Quantized residual add (TFLite ADD): rescale both operands to the
+/// output scale in i32, add, then clamp. Uses a left-shift of 20 bits of
+/// headroom like the TFLite kernel.
+pub fn add(a: &QTensor, b: &QTensor, out_params: QuantParams) -> Result<QTensor> {
+    if a.shape() != b.shape() {
+        return Err(Error::Shape(format!("add shapes differ: {} vs {}", a.shape(), b.shape())));
+    }
+    const LEFT_SHIFT: i32 = 20;
+    let twice_max = 2.0 * a.params().scale.max(b.params().scale) as f64;
+    let (mult_a, shift_a) =
+        quantize_multiplier(a.params().scale as f64 / twice_max)?;
+    let (mult_b, shift_b) =
+        quantize_multiplier(b.params().scale as f64 / twice_max)?;
+    let (mult_out, shift_out) =
+        quantize_multiplier(twice_max / ((1i64 << LEFT_SHIFT) as f64 * out_params.scale as f64))?;
+    let mut out = QTensor::zeros(a.shape().clone(), out_params);
+    let az = a.params().zero_point;
+    let bz = b.params().zero_point;
+    let data: Vec<i8> = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(&qa, &qb)| {
+            let sa = (qa as i32 - az) << LEFT_SHIFT;
+            let sb = (qb as i32 - bz) << LEFT_SHIFT;
+            let ra = multiply_by_quantized_multiplier(sa, mult_a, shift_a);
+            let rb = multiply_by_quantized_multiplier(sb, mult_b, shift_b);
+            let sum = ra + rb;
+            let res = multiply_by_quantized_multiplier(sum, mult_out, shift_out)
+                + out_params.zero_point;
+            res.clamp(-128, 127) as i8
+        })
+        .collect();
+    out.data_mut().copy_from_slice(&data);
+    Ok(out)
+}
+
+/// Softmax over the last dimension, computed in f32 on dequantized
+/// logits (the classification head; not on the accelerated path).
+pub fn softmax_f32(logits: &QTensor, classes: usize) -> Result<Vec<f32>> {
+    let numel = logits.shape().numel();
+    if numel % classes != 0 {
+        return Err(Error::Shape(format!(
+            "softmax: numel {numel} not divisible by classes {classes}"
+        )));
+    }
+    let reals = logits.to_f32();
+    let mut out = Vec::with_capacity(numel);
+    for row in reals.chunks(classes) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|&x| (x - m).exp()).collect();
+        let s: f32 = exps.iter().sum();
+        out.extend(exps.iter().map(|&e| e / s));
+    }
+    Ok(out)
+}
+
+/// Argmax per row of the last dimension.
+pub fn argmax(logits: &QTensor, classes: usize) -> Result<Vec<usize>> {
+    let numel = logits.shape().numel();
+    if numel % classes != 0 {
+        return Err(Error::Shape(format!(
+            "argmax: numel {numel} not divisible by classes {classes}"
+        )));
+    }
+    Ok(logits
+        .data()
+        .chunks(classes)
+        .map(|row| {
+            row.iter().enumerate().max_by_key(|&(i, &v)| (v, std::cmp::Reverse(i))).unwrap().0
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn relu_clamps_at_zero_point() {
+        let p = QuantParams::new(0.5, -10).unwrap();
+        let t = QTensor::new(Shape::d1(4), vec![-50, -10, 0, 50], p).unwrap();
+        let r = relu(&t);
+        assert_eq!(r.data(), &[-10, -10, 0, 50]);
+    }
+
+    #[test]
+    fn add_matches_real_arithmetic() {
+        let pa = QuantParams::new(0.1, 0).unwrap();
+        let pb = QuantParams::new(0.05, 10).unwrap();
+        let po = QuantParams::new(0.1, -5).unwrap();
+        let a = QTensor::new(Shape::d1(3), vec![10, -20, 50], pa).unwrap(); // 1.0, -2.0, 5.0
+        let b = QTensor::new(Shape::d1(3), vec![30, 10, -30], pb).unwrap(); // 1.0, 0.0, -2.0
+        let out = add(&a, &b, po).unwrap();
+        let real = out.to_f32();
+        for (got, expect) in real.iter().zip([2.0f32, -2.0, 3.0]) {
+            assert!((got - expect).abs() < 0.1, "{got} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn add_shape_mismatch_rejected() {
+        let p = QuantParams::new(0.1, 0).unwrap();
+        let a = QTensor::zeros(Shape::d1(3), p);
+        let b = QTensor::zeros(Shape::d1(4), p);
+        assert!(add(&a, &b, p).is_err());
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let p = QuantParams::new(0.25, 0).unwrap();
+        let t = QTensor::new(Shape::d2(1, 4), vec![0, 10, 20, 5], p).unwrap();
+        let probs = softmax_f32(&t, 4).unwrap();
+        let s: f32 = probs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(probs[2] > probs[1] && probs[1] > probs[3] && probs[3] > probs[0]);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let p = QuantParams::new(1.0, 0).unwrap();
+        let t = QTensor::new(Shape::d2(2, 3), vec![1, 5, 3, 9, 2, 9], p).unwrap();
+        assert_eq!(argmax(&t, 3).unwrap(), vec![1, 0]); // tie → first index
+    }
+}

@@ -1,0 +1,420 @@
+//! Quantized 2-D convolution (normal and depthwise), reference
+//! implementation with TFLite semantics.
+
+use crate::error::{Error, Result};
+use crate::tensor::quant::{QuantParams, Requantizer};
+use crate::tensor::{QTensor, Shape};
+
+/// Spatial padding mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// No padding; output shrinks by kernel-1.
+    Valid,
+    /// Zero ("same") padding keeping `out = ceil(in / stride)`.
+    Same,
+}
+
+/// A quantized conv2d layer (set `depthwise` for per-channel filtering).
+///
+/// Weight layout: `[out_c][kh][kw][in_c]` for normal conv (lanes along
+/// `in_c`, the dimension Algorithm 1 encodes), and `[ch][kh][kw]` for
+/// depthwise (lanes along the flattened spatial kernel, zero-padded to a
+/// multiple of 4 — see DESIGN.md §Hardware-Adaptation).
+#[derive(Debug, Clone)]
+pub struct Conv2dOp {
+    /// Layer name for reports.
+    pub name: String,
+    /// INT8 weights (symmetric, zero-point 0).
+    pub weights: Vec<i8>,
+    /// Per-output-channel i32 bias.
+    pub bias: Vec<i32>,
+    /// Output channels (= input channels for depthwise).
+    pub out_c: usize,
+    /// Input channels.
+    pub in_c: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Stride (same both dims).
+    pub stride: usize,
+    /// Padding mode.
+    pub padding: Padding,
+    /// Depthwise flag.
+    pub depthwise: bool,
+    /// Input quantization (activations).
+    pub input_params: QuantParams,
+    /// Weight scale (symmetric).
+    pub weight_scale: f32,
+    /// Output quantization.
+    pub output_params: QuantParams,
+    /// Requantizer (folded scales + ReLU clamp).
+    pub requant: Requantizer,
+}
+
+impl Conv2dOp {
+    /// Build a layer, validating weight/bias sizes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        weights: Vec<i8>,
+        bias: Vec<i32>,
+        out_c: usize,
+        in_c: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        padding: Padding,
+        depthwise: bool,
+        input_params: QuantParams,
+        weight_scale: f32,
+        output_params: QuantParams,
+        relu: bool,
+    ) -> Result<Self> {
+        let expect = if depthwise {
+            if out_c != in_c {
+                return Err(Error::Model(format!(
+                    "{name}: depthwise requires out_c == in_c ({out_c} != {in_c})"
+                )));
+            }
+            out_c * kh * kw
+        } else {
+            out_c * kh * kw * in_c
+        };
+        if weights.len() != expect {
+            return Err(Error::Model(format!(
+                "{name}: weight count {} != expected {expect}",
+                weights.len()
+            )));
+        }
+        if bias.len() != out_c {
+            return Err(Error::Model(format!(
+                "{name}: bias count {} != out_c {out_c}",
+                bias.len()
+            )));
+        }
+        if stride == 0 {
+            return Err(Error::Model(format!("{name}: stride must be >= 1")));
+        }
+        let requant = Requantizer::new(input_params.scale, weight_scale, &output_params, relu)?;
+        Ok(Conv2dOp {
+            name: name.to_string(),
+            weights,
+            bias,
+            out_c,
+            in_c,
+            kh,
+            kw,
+            stride,
+            padding,
+            depthwise,
+            input_params,
+            weight_scale,
+            output_params,
+            requant,
+        })
+    }
+
+    /// Padding offsets (top/left) and output spatial dims for an input.
+    pub fn geometry(&self, in_h: usize, in_w: usize) -> (usize, usize, i64, i64) {
+        match self.padding {
+            Padding::Valid => {
+                let out_h = (in_h - self.kh) / self.stride + 1;
+                let out_w = (in_w - self.kw) / self.stride + 1;
+                (out_h, out_w, 0, 0)
+            }
+            Padding::Same => {
+                let out_h = in_h.div_ceil(self.stride);
+                let out_w = in_w.div_ceil(self.stride);
+                let pad_h =
+                    (((out_h - 1) * self.stride + self.kh).saturating_sub(in_h)) as i64 / 2;
+                let pad_w =
+                    (((out_w - 1) * self.stride + self.kw).saturating_sub(in_w)) as i64 / 2;
+                (out_h, out_w, pad_h, pad_w)
+            }
+        }
+    }
+
+    /// Flat index into the weight buffer for normal conv.
+    #[inline]
+    pub fn w_idx(&self, oc: usize, kh: usize, kw: usize, ic: usize) -> usize {
+        ((oc * self.kh + kh) * self.kw + kw) * self.in_c + ic
+    }
+
+    /// Flat index for depthwise weights.
+    #[inline]
+    pub fn dw_idx(&self, ch: usize, kh: usize, kw: usize) -> usize {
+        (ch * self.kh + kh) * self.kw + kw
+    }
+
+    /// The hardware input-offset constant (`-input_zero_point`).
+    #[inline]
+    pub fn input_offset(&self) -> i32 {
+        -self.input_params.zero_point
+    }
+
+    /// Reference forward pass (golden semantics).
+    pub fn forward_ref(&self, input: &QTensor) -> Result<QTensor> {
+        let ishape = input.shape();
+        if ishape.rank() != 4 || ishape.c() != self.in_c {
+            return Err(Error::Shape(format!(
+                "{}: input {} incompatible with in_c {}",
+                self.name,
+                ishape,
+                self.in_c
+            )));
+        }
+        let (n, in_h, in_w) = (ishape.n(), ishape.h(), ishape.w());
+        let (out_h, out_w, pad_h, pad_w) = self.geometry(in_h, in_w);
+        let mut out = QTensor::zeros(Shape::nhwc(n, out_h, out_w, self.out_c), self.output_params);
+        let offset = self.input_offset();
+        let x = input.data();
+        for b in 0..n {
+            for oh in 0..out_h {
+                for ow in 0..out_w {
+                    for oc in 0..self.out_c {
+                        let mut acc = self.bias[oc];
+                        for kh in 0..self.kh {
+                            let ih = (oh * self.stride + kh) as i64 - pad_h;
+                            if ih < 0 || ih >= in_h as i64 {
+                                continue;
+                            }
+                            for kw in 0..self.kw {
+                                let iw = (ow * self.stride + kw) as i64 - pad_w;
+                                if iw < 0 || iw >= in_w as i64 {
+                                    continue;
+                                }
+                                let base = ((b * in_h + ih as usize) * in_w + iw as usize)
+                                    * self.in_c;
+                                if self.depthwise {
+                                    let w = self.weights[self.dw_idx(oc, kh, kw)] as i32;
+                                    acc += w * (x[base + oc] as i32 + offset);
+                                } else {
+                                    for ic in 0..self.in_c {
+                                        let w = self.weights[self.w_idx(oc, kh, kw, ic)] as i32;
+                                        acc += w * (x[base + ic] as i32 + offset);
+                                    }
+                                }
+                            }
+                        }
+                        out.set(&[b, oh, ow, oc], self.requant.apply(acc));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total MAC-relevant weight lanes: used by the encoder. Normal conv
+    /// lanes run along `in_c` per `(oc, kh, kw)`; depthwise lanes are the
+    /// flattened spatial kernel per channel.
+    pub fn lane_len(&self) -> usize {
+        if self.depthwise {
+            self.kh * self.kw
+        } else {
+            self.in_c
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_op(weights: Vec<i8>, relu: bool) -> Conv2dOp {
+        Conv2dOp::new(
+            "t",
+            weights,
+            vec![0, 0],
+            2,
+            4,
+            1,
+            1,
+            1,
+            Padding::Valid,
+            false,
+            QuantParams::new(1.0, 0).unwrap(),
+            1.0,
+            QuantParams::new(1.0, 0).unwrap(),
+            relu,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pointwise_conv_known_values() {
+        // 1x1 conv, 4 in channels, 2 out channels, identity-ish scales.
+        let weights = vec![
+            1, 0, 0, 0, // oc0 picks channel 0
+            0, 1, 1, 0, // oc1 sums channels 1+2
+        ];
+        let op = simple_op(weights, false);
+        let input = QTensor::new(
+            Shape::nhwc(1, 1, 1, 4),
+            vec![5, 6, 7, 8],
+            QuantParams::new(1.0, 0).unwrap(),
+        )
+        .unwrap();
+        let out = op.forward_ref(&input).unwrap();
+        assert_eq!(out.data(), &[5, 13]);
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        let weights = vec![-1, 0, 0, 0, 1, 0, 0, 0];
+        let op = simple_op(weights, true);
+        let input = QTensor::new(
+            Shape::nhwc(1, 1, 1, 4),
+            vec![5, 0, 0, 0],
+            QuantParams::new(1.0, 0).unwrap(),
+        )
+        .unwrap();
+        let out = op.forward_ref(&input).unwrap();
+        assert_eq!(out.data(), &[0, 5]); // -5 clamped to zero point 0
+    }
+
+    #[test]
+    fn input_zero_point_respected() {
+        // x_q = zp → real 0 → contributes nothing.
+        let weights = vec![3, 3, 3, 3, 1, 1, 1, 1];
+        let mut op = simple_op(weights, false);
+        op.input_params = QuantParams::new(1.0, 7).unwrap();
+        op.requant = Requantizer::new(1.0, 1.0, &op.output_params, false).unwrap();
+        let input = QTensor::new(
+            Shape::nhwc(1, 1, 1, 4),
+            vec![7, 7, 7, 7],
+            op.input_params,
+        )
+        .unwrap();
+        let out = op.forward_ref(&input).unwrap();
+        assert_eq!(out.data(), &[0, 0]);
+    }
+
+    #[test]
+    fn same_padding_geometry() {
+        let op = Conv2dOp::new(
+            "t",
+            vec![0; 2 * 3 * 3 * 4],
+            vec![0; 2],
+            2,
+            4,
+            3,
+            3,
+            1,
+            Padding::Same,
+            false,
+            QuantParams::new(1.0, 0).unwrap(),
+            1.0,
+            QuantParams::new(1.0, 0).unwrap(),
+            false,
+        )
+        .unwrap();
+        let (oh, ow, ph, pw) = op.geometry(8, 8);
+        assert_eq!((oh, ow), (8, 8));
+        assert_eq!((ph, pw), (1, 1));
+    }
+
+    #[test]
+    fn valid_padding_geometry_with_stride() {
+        let op = Conv2dOp::new(
+            "t",
+            vec![0; 2 * 3 * 3 * 4],
+            vec![0; 2],
+            2,
+            4,
+            3,
+            3,
+            2,
+            Padding::Valid,
+            false,
+            QuantParams::new(1.0, 0).unwrap(),
+            1.0,
+            QuantParams::new(1.0, 0).unwrap(),
+            false,
+        )
+        .unwrap();
+        let (oh, ow, _, _) = op.geometry(9, 9);
+        assert_eq!((oh, ow), (4, 4));
+    }
+
+    #[test]
+    fn depthwise_identity_kernel() {
+        // 3x3 depthwise with center weight 1 = identity (same padding).
+        let ch = 4;
+        let mut weights = vec![0i8; ch * 9];
+        for c in 0..ch {
+            weights[c * 9 + 4] = 1; // center tap
+        }
+        let op = Conv2dOp::new(
+            "dw",
+            weights,
+            vec![0; ch],
+            ch,
+            ch,
+            3,
+            3,
+            1,
+            Padding::Same,
+            true,
+            QuantParams::new(1.0, 0).unwrap(),
+            1.0,
+            QuantParams::new(1.0, 0).unwrap(),
+            false,
+        )
+        .unwrap();
+        let data: Vec<i8> = (0..2 * 2 * ch as i32).map(|i| (i % 50) as i8).collect();
+        let input =
+            QTensor::new(Shape::nhwc(1, 2, 2, ch), data.clone(), QuantParams::new(1.0, 0).unwrap())
+                .unwrap();
+        let out = op.forward_ref(&input).unwrap();
+        assert_eq!(out.data(), &data[..]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let op = simple_op(vec![0; 8], false);
+        let input =
+            QTensor::zeros(Shape::nhwc(1, 1, 1, 8), QuantParams::new(1.0, 0).unwrap());
+        assert!(op.forward_ref(&input).is_err());
+    }
+
+    #[test]
+    fn bad_construction_rejected() {
+        // wrong weight count
+        assert!(Conv2dOp::new(
+            "t",
+            vec![0; 7],
+            vec![0; 2],
+            2,
+            4,
+            1,
+            1,
+            1,
+            Padding::Valid,
+            false,
+            QuantParams::new(1.0, 0).unwrap(),
+            1.0,
+            QuantParams::new(1.0, 0).unwrap(),
+            false,
+        )
+        .is_err());
+        // depthwise out != in
+        assert!(Conv2dOp::new(
+            "t",
+            vec![0; 8 * 9],
+            vec![0; 8],
+            8,
+            4,
+            3,
+            3,
+            1,
+            Padding::Same,
+            true,
+            QuantParams::new(1.0, 0).unwrap(),
+            1.0,
+            QuantParams::new(1.0, 0).unwrap(),
+            false,
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Quantized fully-connected (dense) layer.
+
+use crate::error::{Error, Result};
+use crate::tensor::quant::{QuantParams, Requantizer};
+use crate::tensor::{QTensor, Shape};
+
+/// A quantized dense layer: `out[o] = requant(Σ_i w[o][i] * (x[i]+off) + b[o])`.
+///
+/// Weight layout `[out][in]`; lanes for the lookahead encoder run along
+/// `in` (must be padded to a multiple of 4 by the model builder).
+#[derive(Debug, Clone)]
+pub struct FullyConnectedOp {
+    /// Layer name.
+    pub name: String,
+    /// INT8 weights, `[out][in]` row-major.
+    pub weights: Vec<i8>,
+    /// Per-output i32 bias.
+    pub bias: Vec<i32>,
+    /// Output features.
+    pub out_n: usize,
+    /// Input features.
+    pub in_n: usize,
+    /// Input activation params.
+    pub input_params: QuantParams,
+    /// Weight scale (symmetric).
+    pub weight_scale: f32,
+    /// Output activation params.
+    pub output_params: QuantParams,
+    /// Requantizer.
+    pub requant: Requantizer,
+}
+
+impl FullyConnectedOp {
+    /// Build with validation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        weights: Vec<i8>,
+        bias: Vec<i32>,
+        out_n: usize,
+        in_n: usize,
+        input_params: QuantParams,
+        weight_scale: f32,
+        output_params: QuantParams,
+        relu: bool,
+    ) -> Result<Self> {
+        if weights.len() != out_n * in_n {
+            return Err(Error::Model(format!(
+                "{name}: weight count {} != {out_n}x{in_n}",
+                weights.len()
+            )));
+        }
+        if bias.len() != out_n {
+            return Err(Error::Model(format!("{name}: bias count {} != {out_n}", bias.len())));
+        }
+        let requant = Requantizer::new(input_params.scale, weight_scale, &output_params, relu)?;
+        Ok(FullyConnectedOp {
+            name: name.to_string(),
+            weights,
+            bias,
+            out_n,
+            in_n,
+            input_params,
+            weight_scale,
+            output_params,
+            requant,
+        })
+    }
+
+    /// Hardware input offset.
+    #[inline]
+    pub fn input_offset(&self) -> i32 {
+        -self.input_params.zero_point
+    }
+
+    /// Reference forward over a flattened input (batch of vectors
+    /// `[N, in_n]` or any shape with `numel = N * in_n`).
+    pub fn forward_ref(&self, input: &QTensor) -> Result<QTensor> {
+        let numel = input.shape().numel();
+        if numel % self.in_n != 0 {
+            return Err(Error::Shape(format!(
+                "{}: input numel {numel} not divisible by in_n {}",
+                self.name, self.in_n
+            )));
+        }
+        let batch = numel / self.in_n;
+        let x = input.data();
+        let mut out = QTensor::zeros(Shape::d2(batch, self.out_n), self.output_params);
+        let offset = self.input_offset();
+        for b in 0..batch {
+            for o in 0..self.out_n {
+                let mut acc = self.bias[o];
+                let wrow = &self.weights[o * self.in_n..(o + 1) * self.in_n];
+                let xrow = &x[b * self.in_n..(b + 1) * self.in_n];
+                for i in 0..self.in_n {
+                    acc += wrow[i] as i32 * (xrow[i] as i32 + offset);
+                }
+                out.set(&[b, o], self.requant.apply(acc));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op() -> FullyConnectedOp {
+        FullyConnectedOp::new(
+            "fc",
+            vec![1, 2, 3, 4, -1, -2, -3, -4],
+            vec![10, -10],
+            2,
+            4,
+            QuantParams::new(1.0, 0).unwrap(),
+            1.0,
+            QuantParams::new(1.0, 0).unwrap(),
+            false,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn known_values() {
+        let input = QTensor::new(
+            Shape::d2(1, 4),
+            vec![1, 1, 1, 1],
+            QuantParams::new(1.0, 0).unwrap(),
+        )
+        .unwrap();
+        let out = op().forward_ref(&input).unwrap();
+        // oc0: 1+2+3+4+10 = 20; oc1: -10-10 = -20
+        assert_eq!(out.data(), &[20, -20]);
+    }
+
+    #[test]
+    fn batch_processing() {
+        let input = QTensor::new(
+            Shape::d2(2, 4),
+            vec![1, 0, 0, 0, 0, 1, 0, 0],
+            QuantParams::new(1.0, 0).unwrap(),
+        )
+        .unwrap();
+        let out = op().forward_ref(&input).unwrap();
+        assert_eq!(out.shape().dims(), &[2, 2]);
+        assert_eq!(out.data(), &[11, -11, 12, -12]);
+    }
+
+    #[test]
+    fn indivisible_input_rejected() {
+        let input = QTensor::zeros(Shape::d1(7), QuantParams::new(1.0, 0).unwrap());
+        assert!(op().forward_ref(&input).is_err());
+    }
+
+    #[test]
+    fn construction_validation() {
+        assert!(FullyConnectedOp::new(
+            "fc",
+            vec![0; 7],
+            vec![0; 2],
+            2,
+            4,
+            QuantParams::new(1.0, 0).unwrap(),
+            1.0,
+            QuantParams::new(1.0, 0).unwrap(),
+            false
+        )
+        .is_err());
+    }
+}

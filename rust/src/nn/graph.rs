@@ -1,0 +1,274 @@
+//! Composable model graphs.
+//!
+//! A [`Graph`] is a sequence of [`Layer`]s over one streaming activation
+//! tensor, with save/add slots for residual connections (sufficient for
+//! VGG-style chains, ResNet blocks, and MobileNet inverted residuals).
+//! The graph's `forward_ref` runs the golden nn ops; the simulator
+//! ([`crate::simulator`]) runs the same graph through the CFU kernels.
+
+use super::activation::{add, relu};
+use super::conv2d::Conv2dOp;
+use super::fully_connected::FullyConnectedOp;
+use super::pooling::{avg_pool2d, global_avg_pool, max_pool2d};
+use crate::error::{Error, Result};
+use crate::tensor::quant::QuantParams;
+use crate::tensor::QTensor;
+
+/// One layer of a model graph.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// Convolution (normal or depthwise — the op knows).
+    Conv(Conv2dOp),
+    /// Fully connected.
+    Fc(FullyConnectedOp),
+    /// Max pool `k`,`stride`.
+    MaxPool {
+        /// Window size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+    },
+    /// Average pool `k`,`stride`.
+    AvgPool {
+        /// Window size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+    },
+    /// Global average pool to 1×1.
+    GlobalAvgPool,
+    /// Standalone ReLU (when not fused).
+    Relu,
+    /// Save current activation into a residual slot.
+    Save(usize),
+    /// Shortcut branch: save `conv(current)` (or `current` when `conv` is
+    /// `None`) into a slot, leaving the streaming activation unchanged —
+    /// ResNet projection shortcuts.
+    Shortcut {
+        /// Optional 1×1 projection conv applied to the branch.
+        conv: Option<Box<Conv2dOp>>,
+        /// Destination slot.
+        slot: usize,
+    },
+    /// Add the saved slot into the current activation.
+    ResidualAdd {
+        /// Slot index to add.
+        slot: usize,
+        /// Output quantization of the sum.
+        out_params: QuantParams,
+    },
+}
+
+impl Layer {
+    /// Layer label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            Layer::Conv(op) => {
+                if op.depthwise {
+                    format!("dwconv:{}", op.name)
+                } else {
+                    format!("conv:{}", op.name)
+                }
+            }
+            Layer::Fc(op) => format!("fc:{}", op.name),
+            Layer::MaxPool { k, stride } => format!("maxpool{k}s{stride}"),
+            Layer::AvgPool { k, stride } => format!("avgpool{k}s{stride}"),
+            Layer::GlobalAvgPool => "gap".to_string(),
+            Layer::Relu => "relu".to_string(),
+            Layer::Save(s) => format!("save{s}"),
+            Layer::Shortcut { conv, slot } => match conv {
+                Some(op) => format!("proj{slot}:{}", op.name),
+                None => format!("shortcut{slot}"),
+            },
+            Layer::ResidualAdd { slot, .. } => format!("add{slot}"),
+        }
+    }
+
+    /// Is this a MAC layer the accelerators touch?
+    pub fn is_mac_layer(&self) -> bool {
+        matches!(
+            self,
+            Layer::Conv(_) | Layer::Fc(_) | Layer::Shortcut { conv: Some(_), .. }
+        )
+    }
+}
+
+/// A sequential model graph with residual slots.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Model name.
+    pub name: String,
+    /// Layers in execution order.
+    pub layers: Vec<Layer>,
+    /// Number of output classes.
+    pub classes: usize,
+}
+
+impl Graph {
+    /// New graph.
+    pub fn new(name: &str, layers: Vec<Layer>, classes: usize) -> Self {
+        Graph { name: name.to_string(), layers, classes }
+    }
+
+    /// Number of MAC layers (conv + fc).
+    pub fn mac_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_mac_layer()).count()
+    }
+
+    /// Total MAC-layer weights.
+    pub fn total_weights(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv(op) => op.weights.len(),
+                Layer::Fc(op) => op.weights.len(),
+                Layer::Shortcut { conv: Some(op), .. } => op.weights.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Golden forward pass.
+    pub fn forward_ref(&self, input: &QTensor) -> Result<QTensor> {
+        let mut cur = input.clone();
+        let mut slots: Vec<Option<QTensor>> = vec![None; 8];
+        for layer in &self.layers {
+            cur = match layer {
+                Layer::Conv(op) => op.forward_ref(&cur)?,
+                Layer::Fc(op) => op.forward_ref(&cur)?,
+                Layer::MaxPool { k, stride } => max_pool2d(&cur, *k, *stride)?,
+                Layer::AvgPool { k, stride } => avg_pool2d(&cur, *k, *stride)?,
+                Layer::GlobalAvgPool => global_avg_pool(&cur)?,
+                Layer::Relu => relu(&cur),
+                Layer::Save(s) => {
+                    if *s >= slots.len() {
+                        return Err(Error::Model(format!("slot {s} out of range")));
+                    }
+                    slots[*s] = Some(cur.clone());
+                    cur
+                }
+                Layer::Shortcut { conv, slot } => {
+                    if *slot >= slots.len() {
+                        return Err(Error::Model(format!("slot {slot} out of range")));
+                    }
+                    slots[*slot] = Some(match conv {
+                        Some(op) => op.forward_ref(&cur)?,
+                        None => cur.clone(),
+                    });
+                    cur
+                }
+                Layer::ResidualAdd { slot, out_params } => {
+                    let saved = slots[*slot]
+                        .as_ref()
+                        .ok_or_else(|| Error::Model(format!("slot {slot} empty at add")))?;
+                    add(&cur, saved, *out_params)?
+                }
+            };
+        }
+        Ok(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::conv2d::Padding;
+    use crate::tensor::Shape;
+
+    fn identity_params() -> QuantParams {
+        QuantParams::new(1.0, 0).unwrap()
+    }
+
+    fn pointwise(name: &str, weights: Vec<i8>, out_c: usize, in_c: usize) -> Conv2dOp {
+        Conv2dOp::new(
+            name,
+            weights,
+            vec![0; out_c],
+            out_c,
+            in_c,
+            1,
+            1,
+            1,
+            Padding::Valid,
+            false,
+            identity_params(),
+            1.0,
+            identity_params(),
+            false,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sequential_pipeline() {
+        // conv (identity on ch0..3) → maxpool 2x2
+        let mut w = vec![0i8; 4 * 4];
+        for i in 0..4 {
+            w[i * 4 + i] = 1;
+        }
+        let g = Graph::new(
+            "t",
+            vec![Layer::Conv(pointwise("c", w, 4, 4)), Layer::MaxPool { k: 2, stride: 2 }],
+            4,
+        );
+        let input = QTensor::new(
+            Shape::nhwc(1, 2, 2, 4),
+            (0..16).map(|i| i as i8).collect(),
+            identity_params(),
+        )
+        .unwrap();
+        let out = g.forward_ref(&input).unwrap();
+        assert_eq!(out.shape().dims(), &[1, 1, 1, 4]);
+        assert_eq!(out.data(), &[12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn residual_roundtrip() {
+        // save → conv(zero weights) → add slot ⇒ output ≈ input
+        let g = Graph::new(
+            "res",
+            vec![
+                Layer::Save(0),
+                Layer::Conv(pointwise("z", vec![0; 16], 4, 4)),
+                Layer::ResidualAdd { slot: 0, out_params: identity_params() },
+            ],
+            4,
+        );
+        let input = QTensor::new(
+            Shape::nhwc(1, 1, 1, 4),
+            vec![5, -6, 7, -8],
+            identity_params(),
+        )
+        .unwrap();
+        let out = g.forward_ref(&input).unwrap();
+        for (a, b) in out.data().iter().zip(input.data()) {
+            assert!((*a as i32 - *b as i32).abs() <= 1, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn empty_slot_errors() {
+        let g = Graph::new(
+            "bad",
+            vec![Layer::ResidualAdd { slot: 0, out_params: identity_params() }],
+            2,
+        );
+        let input = QTensor::zeros(Shape::nhwc(1, 1, 1, 4), identity_params());
+        assert!(g.forward_ref(&input).is_err());
+    }
+
+    #[test]
+    fn stats() {
+        let g = Graph::new(
+            "s",
+            vec![
+                Layer::Conv(pointwise("a", vec![0; 16], 4, 4)),
+                Layer::Relu,
+                Layer::Conv(pointwise("b", vec![0; 16], 4, 4)),
+            ],
+            4,
+        );
+        assert_eq!(g.mac_layers(), 2);
+        assert_eq!(g.total_weights(), 32);
+    }
+}

@@ -1,0 +1,22 @@
+//! TFLite-style INT8 neural-network operators (reference semantics).
+//!
+//! These are the *golden* implementations: plain nested loops with
+//! bit-exact TFLite arithmetic (i32 accumulation, gemmlowp
+//! requantization). The CFU-accelerated kernels in [`crate::kernels`]
+//! must produce byte-identical outputs — that equivalence is asserted in
+//! tests and (optionally) at simulation time.
+//!
+//! Layer inventory (what the paper's four models need):
+//! conv2d, depthwise conv2d, fully connected, max/avg pooling, ReLU
+//! (fused into requantization), residual add, and softmax.
+
+pub mod activation;
+pub mod conv2d;
+pub mod fully_connected;
+pub mod graph;
+pub mod pooling;
+
+pub use conv2d::{Conv2dOp, Padding};
+pub use fully_connected::FullyConnectedOp;
+pub use graph::{Graph, Layer};
+pub use pooling::{avg_pool2d, max_pool2d};

@@ -1,0 +1,177 @@
+//! Quantized pooling (max / average) over NHWC tensors.
+//!
+//! Pooling keeps the input quantization parameters (TFLite requires
+//! identical input/output scales for pooling ops).
+
+use crate::error::{Error, Result};
+use crate::tensor::{QTensor, Shape};
+
+fn pool_geometry(in_h: usize, in_w: usize, k: usize, stride: usize) -> Result<(usize, usize)> {
+    if k == 0 || stride == 0 {
+        return Err(Error::Model("pool kernel/stride must be >= 1".into()));
+    }
+    if in_h < k || in_w < k {
+        return Err(Error::Shape(format!("pool kernel {k} larger than input {in_h}x{in_w}")));
+    }
+    Ok(((in_h - k) / stride + 1, (in_w - k) / stride + 1))
+}
+
+/// Max pooling with a square `k`×`k` window.
+pub fn max_pool2d(input: &QTensor, k: usize, stride: usize) -> Result<QTensor> {
+    let s = input.shape();
+    if s.rank() != 4 {
+        return Err(Error::Shape("max_pool2d expects NHWC".into()));
+    }
+    let (out_h, out_w) = pool_geometry(s.h(), s.w(), k, stride)?;
+    let (n, c) = (s.n(), s.c());
+    let x = input.data();
+    let mut out = QTensor::zeros(Shape::nhwc(n, out_h, out_w, c), *input.params());
+    for b in 0..n {
+        for oh in 0..out_h {
+            for ow in 0..out_w {
+                for ch in 0..c {
+                    let mut m = i8::MIN;
+                    for ih in oh * stride..oh * stride + k {
+                        for iw in ow * stride..ow * stride + k {
+                            let v = x[((b * s.h() + ih) * s.w() + iw) * c + ch];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    out.set(&[b, oh, ow, ch], m);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Average pooling with a square `k`×`k` window (TFLite rounding:
+/// round-half-away-from-zero on the i32 sum).
+pub fn avg_pool2d(input: &QTensor, k: usize, stride: usize) -> Result<QTensor> {
+    let s = input.shape();
+    if s.rank() != 4 {
+        return Err(Error::Shape("avg_pool2d expects NHWC".into()));
+    }
+    let (out_h, out_w) = pool_geometry(s.h(), s.w(), k, stride)?;
+    let (n, c) = (s.n(), s.c());
+    let x = input.data();
+    let count = (k * k) as i32;
+    let mut out = QTensor::zeros(Shape::nhwc(n, out_h, out_w, c), *input.params());
+    for b in 0..n {
+        for oh in 0..out_h {
+            for ow in 0..out_w {
+                for ch in 0..c {
+                    let mut sum = 0i32;
+                    for ih in oh * stride..oh * stride + k {
+                        for iw in ow * stride..ow * stride + k {
+                            sum += x[((b * s.h() + ih) * s.w() + iw) * c + ch] as i32;
+                        }
+                    }
+                    let avg = if sum >= 0 {
+                        (sum + count / 2) / count
+                    } else {
+                        (sum - count / 2) / count
+                    };
+                    out.set(&[b, oh, ow, ch], avg.clamp(-128, 127) as i8);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Global average pooling: collapse H×W to 1×1.
+pub fn global_avg_pool(input: &QTensor) -> Result<QTensor> {
+    let s = input.shape();
+    if s.rank() != 4 {
+        return Err(Error::Shape("global_avg_pool expects NHWC".into()));
+    }
+    avg_pool2d(input, s.h().min(s.w()), 1).and_then(|t| {
+        // If H != W fall back to explicit averaging.
+        if s.h() == s.w() {
+            return Ok(t);
+        }
+        let (n, c) = (s.n(), s.c());
+        let x = input.data();
+        let count = (s.h() * s.w()) as i32;
+        let mut out = QTensor::zeros(Shape::nhwc(n, 1, 1, c), *input.params());
+        for b in 0..n {
+            for ch in 0..c {
+                let mut sum = 0i32;
+                for ih in 0..s.h() {
+                    for iw in 0..s.w() {
+                        sum += x[((b * s.h() + ih) * s.w() + iw) * c + ch] as i32;
+                    }
+                }
+                let avg = if sum >= 0 {
+                    (sum + count / 2) / count
+                } else {
+                    (sum - count / 2) / count
+                };
+                out.set(&[b, 0, 0, ch], avg.clamp(-128, 127) as i8);
+            }
+        }
+        Ok(out)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::quant::QuantParams;
+
+    fn tensor_2x2x2(vals: Vec<i8>) -> QTensor {
+        QTensor::new(Shape::nhwc(1, 2, 2, 2), vals, QuantParams::new(1.0, 0).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn max_pool_basic() {
+        let t = tensor_2x2x2(vec![1, -1, 3, -3, 5, -5, 7, 9]);
+        let out = max_pool2d(&t, 2, 2).unwrap();
+        assert_eq!(out.shape().dims(), &[1, 1, 1, 2]);
+        assert_eq!(out.data(), &[7, 9]);
+    }
+
+    #[test]
+    fn avg_pool_rounding() {
+        let t = tensor_2x2x2(vec![1, -1, 2, -2, 3, -3, 4, -4]);
+        let out = avg_pool2d(&t, 2, 2).unwrap();
+        // ch0: (1+2+3+4)/4 = 2.5 → 3 (half away from zero)
+        // ch1: -2.5 → -3
+        assert_eq!(out.data(), &[3, -3]);
+    }
+
+    #[test]
+    fn pool_stride_one() {
+        let t = QTensor::new(
+            Shape::nhwc(1, 3, 3, 1),
+            vec![1, 2, 3, 4, 5, 6, 7, 8, 9],
+            QuantParams::new(1.0, 0).unwrap(),
+        )
+        .unwrap();
+        let out = max_pool2d(&t, 2, 1).unwrap();
+        assert_eq!(out.shape().dims(), &[1, 2, 2, 1]);
+        assert_eq!(out.data(), &[5, 6, 8, 9]);
+    }
+
+    #[test]
+    fn global_avg_pool_square() {
+        let t = QTensor::new(
+            Shape::nhwc(1, 2, 2, 1),
+            vec![4, 8, 12, 16],
+            QuantParams::new(1.0, 0).unwrap(),
+        )
+        .unwrap();
+        let out = global_avg_pool(&t).unwrap();
+        assert_eq!(out.shape().dims(), &[1, 1, 1, 1]);
+        assert_eq!(out.data(), &[10]);
+    }
+
+    #[test]
+    fn too_large_kernel_rejected() {
+        let t = tensor_2x2x2(vec![0; 8]);
+        assert!(max_pool2d(&t, 3, 1).is_err());
+    }
+}

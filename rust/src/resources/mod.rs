@@ -1,0 +1,14 @@
+//! FPGA resource estimation (Table III substitute).
+//!
+//! Without a synthesis flow (Vivado/SymbiFlow) in the loop, resource
+//! usage is *estimated structurally*: each CFU design is decomposed into
+//! RTL-level components (comparators, alignment muxes, multipliers,
+//! accumulators, FSM state, operand registers) with per-component
+//! LUT/FF/DSP costs typical of Xilinx 7-series (XC7A35T) mapping. The
+//! bench harness prints the estimate next to the paper's published
+//! numbers; deviations are expected (synthesis is heuristic) and
+//! documented in EXPERIMENTS.md.
+
+pub mod fpga;
+
+pub use fpga::{estimate_cfu, Component, ResourceUsage, BASELINE_SOC};

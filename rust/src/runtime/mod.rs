@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute JAX-lowered HLO artifacts.
+//!
+//! The Python layer (`python/compile/aot.py`) lowers the L2 model graph
+//! (which calls the L1 Pallas kernels) to HLO **text** once at build
+//! time; [`pjrt`] loads that text through the `xla` crate
+//! (`HloModuleProto::from_text_file` → `XlaComputation` → PJRT CPU
+//! client) and executes it from Rust. Python never runs at request time.
+//!
+//! [`model_io`] imports the quantized weights exported by
+//! `python/compile/train.py` (JSON) and reconstructs the same network as
+//! a [`crate::nn::Graph`] so the cycle simulator and the PJRT path can
+//! be cross-checked on identical parameters (the e2e example).
+
+pub mod model_io;
+pub mod pjrt;
+
+pub use model_io::import_graph;
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,181 @@
+//! Import of Python-trained quantized models (JSON interchange).
+//!
+//! `python/compile/train.py` exports the trained tiny model as a JSON
+//! document; this module reconstructs it as a [`Graph`] with the *same*
+//! integer parameters, so the Rust simulator computes the same network
+//! the JAX/PJRT artifact does.
+
+use crate::config::value::Value;
+use crate::error::{Error, Result};
+use crate::nn::conv2d::{Conv2dOp, Padding};
+use crate::nn::fully_connected::FullyConnectedOp;
+use crate::nn::graph::{Graph, Layer};
+use crate::tensor::quant::QuantParams;
+use crate::tensor::Shape;
+
+fn params_of(v: &Value, scale_key: &str, zp_key: &str) -> Result<QuantParams> {
+    QuantParams::new(v.get(scale_key)?.as_f64()? as f32, v.get(zp_key)?.as_i64()? as i32)
+}
+
+fn padding_of(v: &Value) -> Result<Padding> {
+    match v.get("padding")?.as_str()? {
+        "same" => Ok(Padding::Same),
+        "valid" => Ok(Padding::Valid),
+        other => Err(Error::Config(format!("unknown padding '{other}'"))),
+    }
+}
+
+fn bias_of(v: &Value) -> Result<Vec<i32>> {
+    v.get("bias")?
+        .as_arr()?
+        .iter()
+        .map(|x| x.as_i64().map(|i| i as i32))
+        .collect()
+}
+
+/// Parse a model JSON document into a [`Graph`] plus its input shape.
+pub fn import_graph(json: &str) -> Result<(Graph, Shape)> {
+    let doc = Value::parse(json)?;
+    let name = doc.get("name")?.as_str()?.to_string();
+    let classes = doc.get("classes")?.as_usize()?;
+    let ishape: Vec<usize> = doc
+        .get("input_shape")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    let input_shape = Shape::new(&ishape)?;
+    let mut layers = Vec::new();
+    for (li, lv) in doc.get("layers")?.as_arr()?.iter().enumerate() {
+        let kind = lv.get("kind")?.as_str()?;
+        let layer = match kind {
+            "conv" => {
+                let lname = lv.get("name")?.as_str()?;
+                let op = Conv2dOp::new(
+                    lname,
+                    lv.get("weights")?.as_i8_vec()?,
+                    bias_of(lv)?,
+                    lv.get("out_c")?.as_usize()?,
+                    lv.get("in_c")?.as_usize()?,
+                    lv.get("kh")?.as_usize()?,
+                    lv.get("kw")?.as_usize()?,
+                    lv.get("stride")?.as_usize()?,
+                    padding_of(lv)?,
+                    lv.get("depthwise")?.as_bool()?,
+                    params_of(lv, "input_scale", "input_zp")?,
+                    lv.get("weight_scale")?.as_f64()? as f32,
+                    params_of(lv, "output_scale", "output_zp")?,
+                    lv.get("relu")?.as_bool()?,
+                )?;
+                Layer::Conv(op)
+            }
+            "fc" => {
+                let lname = lv.get("name")?.as_str()?;
+                let op = FullyConnectedOp::new(
+                    lname,
+                    lv.get("weights")?.as_i8_vec()?,
+                    bias_of(lv)?,
+                    lv.get("out_n")?.as_usize()?,
+                    lv.get("in_n")?.as_usize()?,
+                    params_of(lv, "input_scale", "input_zp")?,
+                    lv.get("weight_scale")?.as_f64()? as f32,
+                    params_of(lv, "output_scale", "output_zp")?,
+                    lv.get("relu")?.as_bool()?,
+                )?;
+                Layer::Fc(op)
+            }
+            "maxpool" => Layer::MaxPool {
+                k: lv.get("k")?.as_usize()?,
+                stride: lv.get("stride")?.as_usize()?,
+            },
+            "avgpool" => Layer::AvgPool {
+                k: lv.get("k")?.as_usize()?,
+                stride: lv.get("stride")?.as_usize()?,
+            },
+            "gap" => Layer::GlobalAvgPool,
+            "relu" => Layer::Relu,
+            other => {
+                return Err(Error::Config(format!("layer {li}: unknown kind '{other}'")))
+            }
+        };
+        layers.push(layer);
+    }
+    Ok((Graph::new(&name, layers, classes), input_shape))
+}
+
+/// Load a model JSON file.
+pub fn import_graph_file<P: AsRef<std::path::Path>>(path: P) -> Result<(Graph, Shape)> {
+    let path = path.as_ref();
+    if !path.exists() {
+        return Err(Error::Config(format!(
+            "model file {} not found — run `make artifacts` first",
+            path.display()
+        )));
+    }
+    let json = std::fs::read_to_string(path)?;
+    import_graph(&json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::QTensor;
+
+    fn sample_json() -> String {
+        r#"{
+          "name": "tiny", "classes": 4, "input_shape": [1, 4, 4, 4],
+          "layers": [
+            {"kind": "conv", "name": "c1", "out_c": 4, "in_c": 4,
+             "kh": 3, "kw": 3, "stride": 1, "padding": "same",
+             "depthwise": false, "relu": true,
+             "weights": [REPLACED],
+             "bias": [0, 1, -1, 2],
+             "input_scale": 0.05, "input_zp": 0,
+             "weight_scale": 0.02,
+             "output_scale": 0.05, "output_zp": 0},
+            {"kind": "gap"},
+            {"kind": "fc", "name": "head", "out_n": 4, "in_n": 4,
+             "weights": [1,0,0,0, 0,1,0,0, 0,0,1,0, 0,0,0,1],
+             "bias": [0,0,0,0],
+             "input_scale": 0.05, "input_zp": 0,
+             "weight_scale": 0.02,
+             "output_scale": 0.1, "output_zp": 0,
+             "relu": false}
+          ]
+        }"#
+        .replace(
+            "[REPLACED]",
+            &format!(
+                "[{}]",
+                (0..4 * 3 * 3 * 4).map(|i| ((i % 13) as i32 - 6).to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        )
+    }
+
+    #[test]
+    fn imports_and_runs() {
+        let (graph, shape) = import_graph(&sample_json()).unwrap();
+        assert_eq!(graph.name, "tiny");
+        assert_eq!(graph.classes, 4);
+        assert_eq!(shape.dims(), &[1, 4, 4, 4]);
+        assert_eq!(graph.mac_layers(), 2);
+        let input = QTensor::zeros(shape, QuantParams::new(0.05, 0).unwrap());
+        let out = graph.forward_ref(&input).unwrap();
+        assert_eq!(out.shape().numel(), 4);
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let json = r#"{"name":"x","classes":2,"input_shape":[1,2,2,4],
+            "layers":[{"kind":"transformer"}]}"#;
+        assert!(import_graph(json).is_err());
+    }
+
+    #[test]
+    fn missing_file_mentions_make() {
+        let err = import_graph_file("/nope/model.json").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

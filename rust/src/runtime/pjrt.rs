@@ -1,0 +1,83 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+
+use crate::error::{Error, Result};
+
+/// A PJRT CPU runtime holding compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module.
+pub struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact (the interchange format — jax ≥ 0.5
+    /// serialized protos are rejected by xla_extension 0.5.1; see
+    /// DESIGN.md) and compile it.
+    pub fn load_hlo_text<P: AsRef<std::path::Path>>(&self, path: P) -> Result<Loaded> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "HLO artifact {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Loaded { exe })
+    }
+}
+
+impl Loaded {
+    /// Execute with f32 inputs of given shapes; returns the flattened
+    /// f32 outputs (the module is lowered with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(dims).map_err(Error::from)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Error::from))
+            .collect::<Result<Vec<_>>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_clear_error() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        let err = match rt.load_hlo_text("/nonexistent/model.hlo.txt") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error for missing artifact"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

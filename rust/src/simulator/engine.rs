@@ -1,0 +1,384 @@
+//! The simulation engine.
+
+use crate::cpu::{CostModel, CycleCounter};
+use crate::error::{Error, Result};
+use crate::isa::DesignKind;
+use crate::kernels::{PreparedConv, PreparedFc};
+use crate::nn::activation::{add, relu};
+use crate::nn::graph::{Graph, Layer};
+use crate::nn::pooling::{avg_pool2d, global_avg_pool, max_pool2d};
+use crate::tensor::QTensor;
+
+/// Per-layer simulation statistics.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    /// Layer label.
+    pub label: String,
+    /// Total cycles.
+    pub cycles: u64,
+    /// CFU (MAC-unit) cycles.
+    pub cfu_cycles: u64,
+    /// Retired instructions.
+    pub instrs: u64,
+    /// Bytes loaded.
+    pub loaded_bytes: u64,
+    /// Weight element sparsity of the layer (MAC layers only).
+    pub weight_sparsity: f64,
+}
+
+/// Result of simulating one inference.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Model name.
+    pub model: String,
+    /// Design simulated.
+    pub design: DesignKind,
+    /// Total cycles across all layers.
+    pub total_cycles: u64,
+    /// Total CFU (MAC-unit) cycles.
+    pub mac_cycles: u64,
+    /// Per-layer breakdown.
+    pub layers: Vec<LayerStats>,
+    /// Final activation tensor.
+    pub output: QTensor,
+    /// Aggregate instruction/cycle counter (for energy estimation).
+    pub counter: CycleCounter,
+}
+
+impl SimReport {
+    /// Wall time at a clock frequency.
+    pub fn seconds_at(&self, clock_hz: u64) -> f64 {
+        self.total_cycles as f64 / clock_hz as f64
+    }
+}
+
+/// A prepared layer: weights packed for the target design.
+enum PreparedLayer {
+    Conv(PreparedConv),
+    Fc(PreparedFc),
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    GlobalAvgPool,
+    Relu,
+    Save(usize),
+    Shortcut { conv: Option<PreparedConv>, slot: usize },
+    ResidualAdd { slot: usize, out_params: crate::tensor::quant::QuantParams },
+}
+
+/// A model prepared for one design (weights packed/encoded once).
+pub struct PreparedModel {
+    /// Model name.
+    pub name: String,
+    /// Design the model is prepared for.
+    pub design: DesignKind,
+    layers: Vec<PreparedLayer>,
+    /// Number of output classes.
+    pub classes: usize,
+    /// INT8→INT7 clamped weight count (SSSA/CSA designs).
+    pub clamped_weights: usize,
+}
+
+/// Simulation engine: design + CPU cost model + verification toggle.
+#[derive(Debug, Clone)]
+pub struct SimEngine {
+    /// Accelerator design.
+    pub design: DesignKind,
+    /// CPU instruction cost model.
+    pub cost_model: CostModel,
+    /// Verify every MAC layer output against the golden nn op.
+    pub verify: bool,
+}
+
+impl SimEngine {
+    /// Engine with the VexRiscv cost model.
+    pub fn new(design: DesignKind) -> Self {
+        SimEngine { design, cost_model: CostModel::vexriscv(), verify: false }
+    }
+
+    /// Enable bit-exact verification against the reference ops.
+    pub fn with_verify(mut self, verify: bool) -> Self {
+        self.verify = verify;
+        self
+    }
+
+    /// Use a custom cost model (e.g. [`CostModel::mac_only`]).
+    pub fn with_cost_model(mut self, m: CostModel) -> Self {
+        self.cost_model = m;
+        self
+    }
+
+    /// Prepare a graph: pack (and for SSSA/CSA lookahead-encode) every
+    /// MAC layer's weights. This is the paper's offline pre-processing —
+    /// it is *not* charged to inference cycles.
+    pub fn prepare(&self, graph: &Graph) -> Result<PreparedModel> {
+        let mut layers = Vec::with_capacity(graph.layers.len());
+        let mut clamped = 0usize;
+        for layer in &graph.layers {
+            layers.push(match layer {
+                Layer::Conv(op) => {
+                    let p = PreparedConv::new(op, self.design)?;
+                    clamped += p.lanes.clamped;
+                    PreparedLayer::Conv(p)
+                }
+                Layer::Fc(op) => {
+                    let p = PreparedFc::new(op, self.design)?;
+                    clamped += p.lanes.clamped;
+                    PreparedLayer::Fc(p)
+                }
+                Layer::MaxPool { k, stride } => {
+                    PreparedLayer::MaxPool { k: *k, stride: *stride }
+                }
+                Layer::AvgPool { k, stride } => {
+                    PreparedLayer::AvgPool { k: *k, stride: *stride }
+                }
+                Layer::GlobalAvgPool => PreparedLayer::GlobalAvgPool,
+                Layer::Relu => PreparedLayer::Relu,
+                Layer::Save(s) => PreparedLayer::Save(*s),
+                Layer::Shortcut { conv, slot } => PreparedLayer::Shortcut {
+                    conv: match conv {
+                        Some(op) => {
+                            let p = PreparedConv::new(op, self.design)?;
+                            clamped += p.lanes.clamped;
+                            Some(p)
+                        }
+                        None => None,
+                    },
+                    slot: *slot,
+                },
+                Layer::ResidualAdd { slot, out_params } => {
+                    PreparedLayer::ResidualAdd { slot: *slot, out_params: *out_params }
+                }
+            });
+        }
+        Ok(PreparedModel {
+            name: graph.name.clone(),
+            design: self.design,
+            layers,
+            classes: graph.classes,
+            clamped_weights: clamped,
+        })
+    }
+
+    /// Simulate one inference.
+    pub fn run(&self, model: &PreparedModel, input: &QTensor) -> Result<SimReport> {
+        if model.design != self.design {
+            return Err(Error::Sim(format!(
+                "model prepared for {} but engine is {}",
+                model.design, self.design
+            )));
+        }
+        let mut cur = input.clone();
+        let mut slots: Vec<Option<QTensor>> = vec![None; 8];
+        let mut stats = Vec::new();
+        let mut total = CycleCounter::new(self.cost_model.clone());
+        for layer in &model.layers {
+            let (next, layer_stat) = self.run_layer(layer, cur, &mut slots)?;
+            if let Some(s) = &layer_stat {
+                total.merge(&s.1);
+                stats.push(LayerStats {
+                    label: s.0.clone(),
+                    cycles: s.1.cycles(),
+                    cfu_cycles: s.1.cfu_cycles(),
+                    instrs: s.1.total_instrs(),
+                    loaded_bytes: s.1.loaded_bytes(),
+                    weight_sparsity: s.2,
+                });
+            }
+            cur = next;
+        }
+        Ok(SimReport {
+            model: model.name.clone(),
+            design: self.design,
+            total_cycles: total.cycles(),
+            mac_cycles: total.cfu_cycles(),
+            layers: stats,
+            output: cur,
+            counter: total,
+        })
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn run_layer(
+        &self,
+        layer: &PreparedLayer,
+        cur: QTensor,
+        slots: &mut [Option<QTensor>],
+    ) -> Result<(QTensor, Option<(String, CycleCounter, f64)>)> {
+        Ok(match layer {
+            PreparedLayer::Conv(p) => {
+                let run = p.run(&cur, &self.cost_model)?;
+                if self.verify {
+                    let reference = p.reference_op().forward_ref(&cur)?;
+                    if reference.data() != run.output.data() {
+                        return Err(Error::Sim(format!(
+                            "verification failed for layer {}",
+                            p.op.name
+                        )));
+                    }
+                }
+                let sparsity = crate::sparsity::stats::element_sparsity(&p.op.weights);
+                (run.output, Some((format!("conv:{}", p.op.name), run.counter, sparsity)))
+            }
+            PreparedLayer::Fc(p) => {
+                let run = p.run(&cur, &self.cost_model)?;
+                if self.verify {
+                    let reference = p.reference_op().forward_ref(&cur)?;
+                    if reference.data() != run.output.data() {
+                        return Err(Error::Sim(format!(
+                            "verification failed for layer {}",
+                            p.op.name
+                        )));
+                    }
+                }
+                let sparsity = crate::sparsity::stats::element_sparsity(&p.op.weights);
+                (run.output, Some((format!("fc:{}", p.op.name), run.counter, sparsity)))
+            }
+            PreparedLayer::MaxPool { k, stride } => {
+                let out = max_pool2d(&cur, *k, *stride)?;
+                let mut c = CycleCounter::new(self.cost_model.clone());
+                // k*k compares + 1 store per output element
+                c.alu(out.shape().numel() as u64 * (k * k) as u64);
+                c.store_words(out.shape().numel() as u64);
+                (out, Some((format!("maxpool{k}"), c, 0.0)))
+            }
+            PreparedLayer::AvgPool { k, stride } => {
+                let out = avg_pool2d(&cur, *k, *stride)?;
+                let mut c = CycleCounter::new(self.cost_model.clone());
+                c.alu(out.shape().numel() as u64 * ((k * k) as u64 + 2));
+                c.store_words(out.shape().numel() as u64);
+                (out, Some((format!("avgpool{k}"), c, 0.0)))
+            }
+            PreparedLayer::GlobalAvgPool => {
+                let n_in = cur.shape().numel() as u64;
+                let out = global_avg_pool(&cur)?;
+                let mut c = CycleCounter::new(self.cost_model.clone());
+                c.alu(n_in + out.shape().numel() as u64 * 2);
+                c.store_words(out.shape().numel() as u64);
+                (out, Some(("gap".to_string(), c, 0.0)))
+            }
+            PreparedLayer::Relu => {
+                let out = relu(&cur);
+                let mut c = CycleCounter::new(self.cost_model.clone());
+                c.alu(out.shape().numel() as u64);
+                (out, Some(("relu".to_string(), c, 0.0)))
+            }
+            PreparedLayer::Save(s) => {
+                slots[*s] = Some(cur.clone());
+                (cur, None)
+            }
+            PreparedLayer::Shortcut { conv, slot } => {
+                match conv {
+                    Some(p) => {
+                        let run = p.run(&cur, &self.cost_model)?;
+                        if self.verify {
+                            let reference = p.reference_op().forward_ref(&cur)?;
+                            if reference.data() != run.output.data() {
+                                return Err(Error::Sim(format!(
+                                    "verification failed for projection {}",
+                                    p.op.name
+                                )));
+                            }
+                        }
+                        let sparsity =
+                            crate::sparsity::stats::element_sparsity(&p.op.weights);
+                        slots[*slot] = Some(run.output);
+                        (cur, Some((format!("proj:{}", p.op.name), run.counter, sparsity)))
+                    }
+                    None => {
+                        slots[*slot] = Some(cur.clone());
+                        (cur, None)
+                    }
+                }
+            }
+            PreparedLayer::ResidualAdd { slot, out_params } => {
+                let saved = slots[*slot]
+                    .take()
+                    .ok_or_else(|| Error::Sim(format!("slot {slot} empty at add")))?;
+                let out = add(&cur, &saved, *out_params)?;
+                let mut c = CycleCounter::new(self.cost_model.clone());
+                // ~4 ALU ops per element (rescale×2, add, clamp)
+                c.alu(out.shape().numel() as u64 * 4);
+                (out, Some(("add".to_string(), c, 0.0)))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builder::{apply_sparsity, random_input, ModelConfig};
+    use crate::models::zoo::build_model;
+    use crate::util::Pcg32;
+
+    fn dscnn_setup(x_us: f64, x_ss: f64) -> (crate::nn::graph::Graph, QTensor) {
+        let cfg = ModelConfig { scale: 0.125, ..Default::default() };
+        let mut info = build_model("dscnn", &cfg).unwrap();
+        apply_sparsity(&mut info.graph, x_us, x_ss);
+        let mut rng = Pcg32::new(9);
+        let input = random_input(info.input_shape.clone(), cfg.act_params(), &mut rng);
+        (info.graph, input)
+    }
+
+    #[test]
+    fn verified_run_all_designs() {
+        let (graph, input) = dscnn_setup(0.5, 0.3);
+        for design in DesignKind::ALL {
+            let engine = SimEngine::new(design).with_verify(true);
+            let prepared = engine.prepare(&graph).unwrap();
+            let report = engine.run(&prepared, &input).unwrap();
+            assert!(report.total_cycles > 0, "{design}");
+            assert_eq!(report.output.shape().numel(), 12);
+        }
+    }
+
+    #[test]
+    fn csa_beats_baselines_on_combined_sparsity() {
+        let (graph, input) = dscnn_setup(0.6, 0.4);
+        let mut cycles = std::collections::HashMap::new();
+        for design in DesignKind::ALL {
+            let engine = SimEngine::new(design);
+            let prepared = engine.prepare(&graph).unwrap();
+            cycles.insert(design, engine.run(&prepared, &input).unwrap().total_cycles);
+        }
+        assert!(cycles[&DesignKind::Csa] < cycles[&DesignKind::BaselineSequential]);
+        assert!(cycles[&DesignKind::Sssa] < cycles[&DesignKind::BaselineSimd]);
+        assert!(cycles[&DesignKind::Ussa] < cycles[&DesignKind::BaselineSequential]);
+    }
+
+    #[test]
+    fn outputs_identical_across_int7_designs() {
+        // All designs compute the same network when weights are INT7.
+        let (graph, input) = dscnn_setup(0.5, 0.2);
+        let mut outputs = Vec::new();
+        for design in DesignKind::ALL {
+            let engine = SimEngine::new(design);
+            let prepared = engine.prepare(&graph).unwrap();
+            assert_eq!(prepared.clamped_weights, 0, "builder weights are INT7 already");
+            outputs.push(engine.run(&prepared, &input).unwrap().output);
+        }
+        for o in &outputs[1..] {
+            assert_eq!(o.data(), outputs[0].data());
+        }
+    }
+
+    #[test]
+    fn design_mismatch_rejected() {
+        let (graph, input) = dscnn_setup(0.0, 0.0);
+        let e1 = SimEngine::new(DesignKind::Csa);
+        let prepared = e1.prepare(&graph).unwrap();
+        let e2 = SimEngine::new(DesignKind::Ussa);
+        assert!(e2.run(&prepared, &input).is_err());
+    }
+
+    #[test]
+    fn layer_stats_cover_mac_layers() {
+        let (graph, input) = dscnn_setup(0.3, 0.2);
+        let engine = SimEngine::new(DesignKind::BaselineSimd);
+        let prepared = engine.prepare(&graph).unwrap();
+        let report = engine.run(&prepared, &input).unwrap();
+        let mac_stats =
+            report.layers.iter().filter(|l| l.label.starts_with("conv") || l.label.starts_with("fc")).count();
+        assert_eq!(mac_stats, graph.mac_layers());
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-by-layer cycle simulator.
+//!
+//! [`engine::SimEngine`] prepares a model graph once per accelerator
+//! design (weight packing + lookahead encoding at "bitstream build time",
+//! exactly like the paper's pre-processing) and then simulates inference
+//! requests: every MAC layer runs through the CFU kernels with full cycle
+//! accounting; cheap layers (pooling, ReLU, residual add) are charged
+//! per-element software costs identical across designs.
+
+pub mod engine;
+
+pub use engine::{LayerStats, PreparedModel, SimEngine, SimReport};

@@ -1,0 +1,182 @@
+//! Magnitude pruning: unstructured (arbitrary zeros) and 4:4
+//! semi-structured (whole-block zeros), matching the sparsity structures
+//! of Figure 1(b)/(c).
+//!
+//! The paper applies iterative explainable-AI-ranked pruning offline; the
+//! accelerator only requires that the *resulting pattern* conforms
+//! (arbitrary zeros for USSA, all-zero 4-blocks for SSSA). Magnitude
+//! ranking produces the same patterns and is the standard proxy.
+
+use super::stats::SparsityProfile;
+
+/// Outcome of a pruning pass.
+#[derive(Debug, Clone)]
+pub struct PruneReport {
+    /// Elements zeroed by this pass.
+    pub zeroed: usize,
+    /// Profile after pruning.
+    pub profile: SparsityProfile,
+}
+
+/// Unstructured magnitude pruning: zero the `target` fraction of
+/// smallest-|w| elements. Deterministic (stable sort by magnitude, then
+/// index). Already-zero weights count toward the target.
+pub fn prune_unstructured_magnitude(ws: &mut [i8], lane_len: usize, target: f64) -> PruneReport {
+    assert!((0.0..=1.0).contains(&target), "target must be in [0,1]");
+    let n = ws.len();
+    let want_zeros = (target * n as f64).round() as usize;
+    let existing = ws.iter().filter(|&&w| w == 0).count();
+    let mut zeroed = 0usize;
+    if want_zeros > existing {
+        let need = want_zeros - existing;
+        // indices of non-zero weights sorted by (|w|, idx)
+        let mut idx: Vec<usize> = (0..n).filter(|&i| ws[i] != 0).collect();
+        idx.sort_by_key(|&i| ((ws[i] as i32).abs(), i));
+        for &i in idx.iter().take(need) {
+            ws[i] = 0;
+            zeroed += 1;
+        }
+    }
+    PruneReport { zeroed, profile: SparsityProfile::measure(ws, lane_len) }
+}
+
+/// Semi-structured (4:4) magnitude pruning: zero the `target` fraction of
+/// blocks with the smallest L1 norm. Blocks are 4 consecutive weights
+/// along each lane. Already-zero blocks count toward the target.
+pub fn prune_blocks_magnitude(ws: &mut [i8], lane_len: usize, target: f64) -> PruneReport {
+    assert!((0.0..=1.0).contains(&target), "target must be in [0,1]");
+    assert!(lane_len > 0 && lane_len % 4 == 0);
+    assert_eq!(ws.len() % lane_len, 0);
+    let blocks = ws.len() / 4;
+    let want_zero_blocks = (target * blocks as f64).round() as usize;
+    let mut norms: Vec<(u32, usize)> = Vec::with_capacity(blocks);
+    let mut existing = 0usize;
+    for b in 0..blocks {
+        let s: u32 = ws[b * 4..b * 4 + 4].iter().map(|&w| (w as i32).unsigned_abs()).sum();
+        if s == 0 {
+            existing += 1;
+        } else {
+            norms.push((s, b));
+        }
+    }
+    let mut zeroed = 0usize;
+    if want_zero_blocks > existing {
+        let need = want_zero_blocks - existing;
+        norms.sort();
+        for &(_, b) in norms.iter().take(need) {
+            for w in &mut ws[b * 4..b * 4 + 4] {
+                if *w != 0 {
+                    zeroed += 1;
+                }
+                *w = 0;
+            }
+        }
+    }
+    PruneReport { zeroed, profile: SparsityProfile::measure(ws, lane_len) }
+}
+
+/// Combined pruning for CSA workloads: first block-prune to `block_target`
+/// (semi-structured sparsity x_ss), then unstructured-prune the remaining
+/// non-zero weights so that *element* sparsity reaches
+/// `block_target + intra_target * (1 - block_target)` — i.e.
+/// `intra_target` is the unstructured ratio x_us *within* surviving
+/// blocks, matching Figure 10's (x_us, x_ss) parameterization.
+pub fn prune_combined(
+    ws: &mut [i8],
+    lane_len: usize,
+    block_target: f64,
+    intra_target: f64,
+) -> PruneReport {
+    prune_blocks_magnitude(ws, lane_len, block_target);
+    let elem_target = block_target + intra_target * (1.0 - block_target);
+    prune_unstructured_magnitude(ws, lane_len, elem_target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_weights(n: usize, seed: u64) -> Vec<i8> {
+        let mut r = Pcg32::new(seed);
+        (0..n)
+            .map(|_| {
+                // mostly non-zero values in INT7 range
+                let v = r.range_i32(-63, 63) as i8;
+                if v == 0 {
+                    1
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn unstructured_hits_target() {
+        let mut ws = random_weights(1024, 1);
+        let rep = prune_unstructured_magnitude(&mut ws, 64, 0.7);
+        assert!((rep.profile.element - 0.7).abs() < 0.01, "got {}", rep.profile.element);
+    }
+
+    #[test]
+    fn unstructured_removes_smallest_first() {
+        let mut ws = vec![1i8, -50, 2, 60, -1, 40, 3, -30];
+        prune_unstructured_magnitude(&mut ws, 8, 0.5);
+        // smallest |w|: 1, -1, 2, 3 zeroed
+        assert_eq!(ws, vec![0, -50, 0, 60, 0, 40, 0, -30]);
+    }
+
+    #[test]
+    fn block_prune_hits_target_blockwise() {
+        let mut ws = random_weights(1024, 2);
+        let rep = prune_blocks_magnitude(&mut ws, 64, 0.5);
+        assert!((rep.profile.block - 0.5).abs() < 0.01, "got {}", rep.profile.block);
+        // block pruning creates element sparsity equal to block sparsity
+        assert!((rep.profile.element - rep.profile.block).abs() < 0.01);
+    }
+
+    #[test]
+    fn block_prune_zeroes_whole_blocks_only() {
+        let mut ws = random_weights(256, 3);
+        prune_blocks_magnitude(&mut ws, 32, 0.4);
+        for block in ws.chunks(4) {
+            let zeros = block.iter().filter(|&&w| w == 0).count();
+            assert!(zeros == 0 || zeros == 4, "partial block zeroed: {block:?}");
+        }
+    }
+
+    #[test]
+    fn combined_reaches_both_ratios() {
+        let mut ws = random_weights(4096, 4);
+        let rep = prune_combined(&mut ws, 64, 0.4, 0.5);
+        assert!((rep.profile.block - 0.4).abs() < 0.02, "block {}", rep.profile.block);
+        assert!((rep.profile.intra_block - 0.5).abs() < 0.03, "intra {}", rep.profile.intra_block);
+    }
+
+    #[test]
+    fn idempotent_at_reached_target() {
+        let mut ws = random_weights(512, 5);
+        prune_unstructured_magnitude(&mut ws, 64, 0.6);
+        let before = ws.clone();
+        let rep = prune_unstructured_magnitude(&mut ws, 64, 0.6);
+        assert_eq!(ws, before);
+        assert_eq!(rep.zeroed, 0);
+    }
+
+    #[test]
+    fn target_zero_is_noop() {
+        let mut ws = random_weights(128, 6);
+        let orig = ws.clone();
+        prune_unstructured_magnitude(&mut ws, 64, 0.0);
+        assert_eq!(ws, orig);
+    }
+
+    #[test]
+    fn target_one_zeroes_everything() {
+        let mut ws = random_weights(128, 7);
+        let rep = prune_unstructured_magnitude(&mut ws, 64, 1.0);
+        assert!(ws.iter().all(|&w| w == 0));
+        assert_eq!(rep.profile.element, 1.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Sparsity measurement.
+
+/// Fraction of zero elements (the paper's "sparsity ratio x").
+pub fn element_sparsity(ws: &[i8]) -> f64 {
+    if ws.is_empty() {
+        return 0.0;
+    }
+    ws.iter().filter(|&&w| w == 0).count() as f64 / ws.len() as f64
+}
+
+/// Fraction of all-zero 4-element blocks (4:4 semi-structured sparsity),
+/// blocks taken along lanes of length `lane_len`.
+pub fn block_sparsity(ws: &[i8], lane_len: usize) -> f64 {
+    assert!(lane_len > 0 && lane_len % 4 == 0, "lane_len must be positive multiple of 4");
+    assert_eq!(ws.len() % lane_len, 0, "buffer not divisible by lane_len");
+    let mut total = 0usize;
+    let mut zero = 0usize;
+    for lane in ws.chunks(lane_len) {
+        for block in lane.chunks(4) {
+            total += 1;
+            if block.iter().all(|&w| w == 0) {
+                zero += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        zero as f64 / total as f64
+    }
+}
+
+/// Full sparsity profile of one weight tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsityProfile {
+    /// Element-level sparsity (x in the paper).
+    pub element: f64,
+    /// Block-level (4:4) sparsity.
+    pub block: f64,
+    /// Element sparsity *within* non-zero blocks — what USSA/CSA's
+    /// variable-cycle MAC exploits after SSSA's block skipping.
+    pub intra_block: f64,
+    /// Total elements.
+    pub elements: usize,
+    /// Total 4-element blocks.
+    pub blocks: usize,
+}
+
+impl SparsityProfile {
+    /// Measure a buffer of lanes.
+    pub fn measure(ws: &[i8], lane_len: usize) -> SparsityProfile {
+        assert!(lane_len > 0 && lane_len % 4 == 0);
+        assert_eq!(ws.len() % lane_len, 0);
+        let mut blocks = 0usize;
+        let mut zero_blocks = 0usize;
+        let mut zeros = 0usize;
+        let mut nz_block_zeros = 0usize;
+        let mut nz_block_elems = 0usize;
+        for lane in ws.chunks(lane_len) {
+            for block in lane.chunks(4) {
+                blocks += 1;
+                let z = block.iter().filter(|&&w| w == 0).count();
+                zeros += z;
+                if z == 4 {
+                    zero_blocks += 1;
+                } else {
+                    nz_block_zeros += z;
+                    nz_block_elems += 4;
+                }
+            }
+        }
+        SparsityProfile {
+            element: if ws.is_empty() { 0.0 } else { zeros as f64 / ws.len() as f64 },
+            block: if blocks == 0 { 0.0 } else { zero_blocks as f64 / blocks as f64 },
+            intra_block: if nz_block_elems == 0 {
+                0.0
+            } else {
+                nz_block_zeros as f64 / nz_block_elems as f64
+            },
+            elements: ws.len(),
+            blocks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_sparsity_basic() {
+        assert_eq!(element_sparsity(&[0, 0, 1, 0]), 0.75);
+        assert_eq!(element_sparsity(&[]), 0.0);
+        assert_eq!(element_sparsity(&[1, 2]), 0.0);
+    }
+
+    #[test]
+    fn block_sparsity_basic() {
+        let ws = [[0i8; 4], [1, 0, 0, 0], [0; 4], [0; 4]].concat();
+        assert_eq!(block_sparsity(&ws, 16), 0.75);
+    }
+
+    #[test]
+    fn profile_decomposes() {
+        // one zero block + one block with 2 zeros
+        let ws = [[0i8; 4], [1, 0, 2, 0]].concat();
+        let p = SparsityProfile::measure(&ws, 8);
+        assert_eq!(p.element, 6.0 / 8.0);
+        assert_eq!(p.block, 0.5);
+        assert_eq!(p.intra_block, 0.5);
+        assert_eq!(p.blocks, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_lane_len_panics() {
+        block_sparsity(&[0i8; 8], 6);
+    }
+}

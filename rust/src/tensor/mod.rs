@@ -1,0 +1,16 @@
+//! Quantized tensor substrate.
+//!
+//! The paper's kernels run TFLite-Micro style INT8 inference on the
+//! RISC-V core: per-tensor affine activations (`real = scale * (q - zp)`),
+//! symmetric per-tensor weights (`zp = 0`), INT32 accumulators, and
+//! gemmlowp fixed-point requantization. [`quant`] reproduces that
+//! arithmetic bit-for-bit; [`qtensor`] stores NHWC-laid-out INT8 data;
+//! [`shape`] provides dimension bookkeeping.
+
+pub mod qtensor;
+pub mod quant;
+pub mod shape;
+
+pub use qtensor::QTensor;
+pub use quant::{quantize_f32, dequantize_i8, QuantParams, Requantizer};
+pub use shape::Shape;

@@ -1,0 +1,173 @@
+//! Quantized INT8 tensor with NHWC storage.
+
+use super::quant::{dequantize_i8, quantize_f32, QuantParams};
+use super::shape::Shape;
+use crate::error::{Error, Result};
+
+/// An INT8 tensor + its quantization parameters.
+///
+/// Storage is row-major over the shape dims; for rank-4 activations this
+/// is NHWC (channels innermost — the layout the paper's kernels walk in
+/// blocks of 4 along the input-channel dimension).
+#[derive(Debug, Clone)]
+pub struct QTensor {
+    shape: Shape,
+    data: Vec<i8>,
+    params: QuantParams,
+}
+
+impl QTensor {
+    /// Create from raw data (length must match shape).
+    pub fn new(shape: Shape, data: Vec<i8>, params: QuantParams) -> Result<Self> {
+        if data.len() != shape.numel() {
+            return Err(Error::Shape(format!(
+                "data length {} != shape {} numel {}",
+                data.len(),
+                shape,
+                shape.numel()
+            )));
+        }
+        Ok(QTensor { shape, data, params })
+    }
+
+    /// All-zero-point tensor ("real zero").
+    pub fn zeros(shape: Shape, params: QuantParams) -> Self {
+        let n = shape.numel();
+        let zp = params.zero_point.clamp(-128, 127) as i8;
+        QTensor { shape, data: vec![zp; n], params }
+    }
+
+    /// Quantize a float slice.
+    pub fn from_f32(shape: Shape, xs: &[f32], params: QuantParams) -> Result<Self> {
+        if xs.len() != shape.numel() {
+            return Err(Error::Shape(format!(
+                "float data length {} != shape numel {}",
+                xs.len(),
+                shape.numel()
+            )));
+        }
+        let data = xs.iter().map(|&x| quantize_f32(x, &params)).collect();
+        Ok(QTensor { shape, data, params })
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    /// Quantization params accessor.
+    pub fn params(&self) -> &QuantParams {
+        &self.params
+    }
+
+    /// Raw data accessor.
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    /// Mutable raw data accessor.
+    pub fn data_mut(&mut self) -> &mut [i8] {
+        &mut self.data
+    }
+
+    /// Flat element access.
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> i8 {
+        self.data[self.shape.index(idx)]
+    }
+
+    /// Flat element set.
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: i8) {
+        let flat = self.shape.index(idx);
+        self.data[flat] = v;
+    }
+
+    /// Dequantize all elements.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&q| dequantize_i8(q, &self.params)).collect()
+    }
+
+    /// Fraction of elements equal to the *quantized zero* (for weights:
+    /// literal 0 since weights are symmetric). This is the paper's
+    /// "sparsity ratio x".
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zero = if self.params.zero_point == 0 {
+            0i8
+        } else {
+            self.params.zero_point.clamp(-128, 127) as i8
+        };
+        let zeros = self.data.iter().filter(|&&q| q == zero).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    /// Reinterpret with a new shape of identical numel (e.g. flatten).
+    pub fn reshaped(&self, shape: Shape) -> Result<QTensor> {
+        if shape.numel() != self.shape.numel() {
+            return Err(Error::Shape(format!(
+                "reshape {} -> {} changes numel",
+                self.shape, shape
+            )));
+        }
+        Ok(QTensor { shape, data: self.data.clone(), params: self.params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> QuantParams {
+        QuantParams::new(0.1, 0).unwrap()
+    }
+
+    #[test]
+    fn length_checked() {
+        assert!(QTensor::new(Shape::d2(2, 3), vec![0; 5], p()).is_err());
+        assert!(QTensor::new(Shape::d2(2, 3), vec![0; 6], p()).is_ok());
+    }
+
+    #[test]
+    fn zeros_uses_zero_point() {
+        let params = QuantParams::new(0.1, -7).unwrap();
+        let t = QTensor::zeros(Shape::d1(4), params);
+        assert!(t.data().iter().all(|&q| q == -7));
+        assert!(t.to_f32().iter().all(|&x| x.abs() < 1e-6));
+    }
+
+    #[test]
+    fn from_f32_roundtrip() {
+        let xs = [0.0f32, 0.1, -0.3, 1.25, -12.8, 12.7];
+        let t = QTensor::from_f32(Shape::d1(6), &xs, p()).unwrap();
+        let back = t.to_f32();
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() <= 0.05 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparsity_counts_zero_point() {
+        let t = QTensor::new(Shape::d1(8), vec![0, 0, 1, 0, -3, 0, 0, 5], p()).unwrap();
+        assert!((t.sparsity() - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn at_set_roundtrip_nhwc() {
+        let mut t = QTensor::zeros(Shape::nhwc(1, 2, 2, 4), p());
+        t.set(&[0, 1, 0, 3], 42);
+        assert_eq!(t.at(&[0, 1, 0, 3]), 42);
+        // NHWC flat position: ((0*2+1)*2+0)*4+3 = 11
+        assert_eq!(t.data()[11], 42);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = QTensor::new(Shape::d2(2, 6), (0..12).map(|i| i as i8).collect(), p()).unwrap();
+        let r = t.reshaped(Shape::nhwc(1, 2, 2, 3)).unwrap();
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshaped(Shape::d1(11)).is_err());
+    }
+}

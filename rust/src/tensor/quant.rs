@@ -1,0 +1,311 @@
+//! TFLite / gemmlowp quantized arithmetic, bit-exact.
+//!
+//! - Activations: `real = scale * (q - zero_point)`, `q ∈ [-128, 127]`.
+//! - Weights: symmetric per-tensor (`zero_point = 0`). The paper's SSSA
+//!   design additionally restricts weights to INT7 range `[-64, 63]`
+//!   (Section III-B) so the post-sign MSB can carry lookahead bits.
+//! - Accumulation in `i32`, then requantization via
+//!   `SaturatingRoundingDoublingHighMul` + rounding divide-by-power-of-two,
+//!   exactly as TFLite's `MultiplyByQuantizedMultiplier`.
+
+use crate::error::{Error, Result};
+
+/// Affine quantization parameters of one tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Positive real scale.
+    pub scale: f32,
+    /// Zero point in `[-128, 127]` (0 for symmetric weights).
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    /// Construct with validation.
+    pub fn new(scale: f32, zero_point: i32) -> Result<Self> {
+        if !(scale.is_finite() && scale > 0.0) {
+            return Err(Error::Quant(format!("scale must be positive finite, got {scale}")));
+        }
+        if !(-128..=127).contains(&zero_point) {
+            return Err(Error::Quant(format!("zero_point out of i8 range: {zero_point}")));
+        }
+        Ok(QuantParams { scale, zero_point })
+    }
+
+    /// Symmetric params (zero_point = 0).
+    pub fn symmetric(scale: f32) -> Result<Self> {
+        QuantParams::new(scale, 0)
+    }
+
+    /// Choose params covering `[lo, hi]` for asymmetric INT8 activations
+    /// (TFLite `ChooseQuantizationParams`).
+    pub fn from_range(lo: f32, hi: f32) -> Result<Self> {
+        let lo = lo.min(0.0); // range must include 0
+        let hi = hi.max(0.0);
+        let scale = ((hi - lo) / 255.0).max(1e-9);
+        let zp_real = -128.0 - lo / scale;
+        let zero_point = zp_real.round().clamp(-128.0, 127.0) as i32;
+        QuantParams::new(scale, zero_point)
+    }
+
+    /// Symmetric params covering `[-max_abs, max_abs]` for INT8 weights.
+    pub fn symmetric_from_max_abs(max_abs: f32) -> Result<Self> {
+        QuantParams::symmetric((max_abs / 127.0).max(1e-9))
+    }
+
+    /// Symmetric params for INT7 weights (range `[-64, 63]`, the paper's
+    /// "sacrificed bit" precision).
+    pub fn symmetric_int7_from_max_abs(max_abs: f32) -> Result<Self> {
+        QuantParams::symmetric((max_abs / 63.0).max(1e-9))
+    }
+}
+
+/// Quantize a real value to i8 under `params`.
+#[inline]
+pub fn quantize_f32(x: f32, params: &QuantParams) -> i8 {
+    let q = (x / params.scale).round() as i32 + params.zero_point;
+    q.clamp(-128, 127) as i8
+}
+
+/// Dequantize an i8 value.
+#[inline]
+pub fn dequantize_i8(q: i8, params: &QuantParams) -> f32 {
+    params.scale * (q as i32 - params.zero_point) as f32
+}
+
+/// gemmlowp `SaturatingRoundingDoublingHighMul`.
+#[inline]
+pub fn sat_rounding_doubling_high_mul(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX; // the single overflow case
+    }
+    let ab: i64 = a as i64 * b as i64;
+    let nudge: i64 = if ab >= 0 { 1 << 30 } else { 1 - (1 << 30) };
+    // gemmlowp divides (truncation toward zero), not an arithmetic shift —
+    // the two differ by one for negative operands.
+    ((ab + nudge) / (1i64 << 31)) as i32
+}
+
+/// gemmlowp `RoundingDivideByPOT` (round-half-away-from-zero).
+#[inline]
+pub fn rounding_divide_by_pot(x: i32, exponent: i32) -> i32 {
+    debug_assert!((0..=31).contains(&exponent));
+    if exponent == 0 {
+        return x;
+    }
+    let mask: i32 = (1i64 << exponent).wrapping_sub(1) as i32;
+    let remainder = x & mask;
+    let threshold = (mask >> 1) + (if x < 0 { 1 } else { 0 });
+    (x >> exponent) + (if remainder > threshold { 1 } else { 0 })
+}
+
+/// TFLite `MultiplyByQuantizedMultiplier`: `x * mult * 2^shift` where
+/// `mult` is Q31 and `shift` may be negative (right) or positive (left).
+#[inline]
+pub fn multiply_by_quantized_multiplier(x: i32, quantized_multiplier: i32, shift: i32) -> i32 {
+    let left_shift = if shift > 0 { shift } else { 0 };
+    let right_shift = if shift > 0 { 0 } else { -shift };
+    rounding_divide_by_pot(
+        sat_rounding_doubling_high_mul(x << left_shift, quantized_multiplier),
+        right_shift,
+    )
+}
+
+/// Decompose a positive real multiplier into (Q31 quantized multiplier,
+/// shift) — TFLite `QuantizeMultiplier`.
+pub fn quantize_multiplier(real: f64) -> Result<(i32, i32)> {
+    if real <= 0.0 || !real.is_finite() {
+        return Err(Error::Quant(format!("multiplier must be positive finite, got {real}")));
+    }
+    // real = m * 2^e with m in [0.5, 1)
+    let (mut m, mut e) = {
+        let e = real.log2().floor() as i32 + 1;
+        (real / 2f64.powi(e), e)
+    };
+    debug_assert!((0.5..1.0).contains(&m) || (m - 1.0).abs() < 1e-15);
+    let mut q = (m * (1i64 << 31) as f64).round() as i64;
+    if q == 1i64 << 31 {
+        q /= 2;
+        e += 1;
+        m = 0.5;
+    }
+    let _ = m;
+    if e > 30 {
+        return Err(Error::Quant(format!("multiplier too large: {real}")));
+    }
+    if e < -31 {
+        // Effectively zero at i32 precision.
+        return Ok((0, 0));
+    }
+    Ok((q as i32, e))
+}
+
+/// A requantization stage: output scale conversion + zero point + clamp.
+///
+/// Folds `acc_real = in_scale * w_scale * acc_i32` into
+/// `q_out = clamp(zp_out + MBQM(acc, mult, shift))`.
+#[derive(Debug, Clone, Copy)]
+pub struct Requantizer {
+    /// Q31 multiplier.
+    pub multiplier: i32,
+    /// Binary exponent (shift).
+    pub shift: i32,
+    /// Output zero point.
+    pub output_zp: i32,
+    /// Activation clamp low (after zp), e.g. -128 or zp for ReLU.
+    pub qmin: i32,
+    /// Activation clamp high.
+    pub qmax: i32,
+}
+
+impl Requantizer {
+    /// Build from real scales. `relu` clamps the real output at 0.
+    pub fn new(
+        input_scale: f32,
+        weight_scale: f32,
+        output: &QuantParams,
+        relu: bool,
+    ) -> Result<Self> {
+        let real_mult = input_scale as f64 * weight_scale as f64 / output.scale as f64;
+        let (multiplier, shift) = quantize_multiplier(real_mult)?;
+        let qmin = if relu { output.zero_point.max(-128) } else { -128 };
+        Ok(Requantizer { multiplier, shift, output_zp: output.zero_point, qmin, qmax: 127 })
+    }
+
+    /// Requantize an i32 accumulator to i8.
+    #[inline]
+    pub fn apply(&self, acc: i32) -> i8 {
+        let scaled = multiply_by_quantized_multiplier(acc, self.multiplier, self.shift);
+        (scaled + self.output_zp).clamp(self.qmin, self.qmax) as i8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn quantize_dequantize_roundtrip_error_below_half_scale() {
+        let p = QuantParams::new(0.05, 10).unwrap();
+        for i in -100..=100 {
+            let x = i as f32 * 0.033;
+            let q = quantize_f32(x, &p);
+            let back = dequantize_i8(q, &p);
+            if (-128 - p.zero_point) as f32 * p.scale < x
+                && x < (127 - p.zero_point) as f32 * p.scale
+            {
+                assert!((back - x).abs() <= p.scale * 0.5 + 1e-6, "x={x} back={back}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_range_contains_zero_exactly() {
+        let p = QuantParams::from_range(-1.0, 3.0).unwrap();
+        // zero must be exactly representable
+        let q0 = quantize_f32(0.0, &p);
+        assert!((dequantize_i8(q0, &p)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn srdhm_reference_values() {
+        // SRDHM(x, q) = round(x * q / 2^31); with q = 2^30 (0.5 in Q31)
+        // the result is x/2.
+        assert_eq!(sat_rounding_doubling_high_mul(1 << 20, 1 << 30), 1 << 19);
+        assert_eq!(sat_rounding_doubling_high_mul(i32::MIN, i32::MIN), i32::MAX);
+        assert_eq!(sat_rounding_doubling_high_mul(0, 12345), 0);
+        // Negative symmetric (truncating-division semantics).
+        assert_eq!(sat_rounding_doubling_high_mul(-(1 << 20), 1 << 30), -(1 << 19));
+        // Rounding at .5: gemmlowp is asymmetric here — +1.5 → 2 but
+        // -1.5 → -1 (nudge + truncating division), bit-exact with the
+        // C++ reference.
+        assert_eq!(sat_rounding_doubling_high_mul(3, 1 << 30), 2);
+        assert_eq!(sat_rounding_doubling_high_mul(-3, 1 << 30), -1);
+    }
+
+    #[test]
+    fn rounding_divide_matches_round_half_away() {
+        assert_eq!(rounding_divide_by_pot(5, 1), 3); // 2.5 → 3
+        assert_eq!(rounding_divide_by_pot(-5, 1), -3); // -2.5 → -3 (away from 0... gemmlowp: -2.5 → -2? )
+        assert_eq!(rounding_divide_by_pot(4, 1), 2);
+        assert_eq!(rounding_divide_by_pot(7, 2), 2); // 1.75 → 2
+        assert_eq!(rounding_divide_by_pot(x_ref(), 0), x_ref());
+    }
+
+    fn x_ref() -> i32 {
+        123456
+    }
+
+    #[test]
+    fn quantize_multiplier_identity() {
+        let (q, s) = quantize_multiplier(1.0).unwrap();
+        // 1.0 = 0.5 * 2^1 → q = 2^30, shift = 1... our convention: m in [0.5,1), e such that real = m*2^e
+        assert_eq!(s, 1);
+        assert_eq!(q, 1 << 30);
+        // Apply: x * 1.0 == x
+        for x in [-1000, -1, 0, 1, 999, 65536] {
+            assert_eq!(multiply_by_quantized_multiplier(x, q, s), x);
+        }
+    }
+
+    #[test]
+    fn quantize_multiplier_small_values() {
+        let (q, s) = quantize_multiplier(0.0009765625).unwrap(); // 2^-10
+        for x in [-4096, -1024, 0, 1024, 1 << 20] {
+            let got = multiply_by_quantized_multiplier(x, q, s);
+            let expect = (x as f64 * 0.0009765625).round() as i32;
+            assert!((got - expect).abs() <= 1, "x={x} got={got} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn prop_mbqm_close_to_real_product() {
+        check(
+            Config::default().cases(256),
+            |r: &mut Pcg32| {
+                let x = r.range_i32(-1 << 20, 1 << 20);
+                let m = r.range_i32(1, 1000);
+                (x, m)
+            },
+            |&(x, m)| {
+                if m < 1 {
+                    return true; // shrink candidates may leave the domain
+                }
+                let real = m as f64 / 1024.0; // multipliers in (0, ~1)
+                let (q, s) = quantize_multiplier(real).unwrap();
+                let got = multiply_by_quantized_multiplier(x, q, s) as f64;
+                let expect = x as f64 * real;
+                (got - expect).abs() <= 1.0 + expect.abs() * 1e-6
+            },
+        );
+    }
+
+    #[test]
+    fn requantizer_clamps_and_offsets() {
+        let out = QuantParams::new(0.1, -10).unwrap();
+        let rq = Requantizer::new(0.05, 0.02, &out, false).unwrap();
+        // acc=1000 → real = 1.0 → q = -10 + 10 = 0
+        assert_eq!(rq.apply(1000), 0);
+        // Huge accumulator saturates at 127.
+        assert_eq!(rq.apply(i32::MAX / 2), 127);
+        assert_eq!(rq.apply(i32::MIN / 2), -128);
+    }
+
+    #[test]
+    fn requantizer_relu_clamps_at_zero_point() {
+        let out = QuantParams::new(0.1, -10).unwrap();
+        let rq = Requantizer::new(0.05, 0.02, &out, true).unwrap();
+        // Negative real output → clamped to zp (-10), i.e. real 0.
+        assert_eq!(rq.apply(-100_000), -10);
+    }
+
+    #[test]
+    fn int7_params_span() {
+        let p = QuantParams::symmetric_int7_from_max_abs(6.3).unwrap();
+        assert!((p.scale - 0.1).abs() < 1e-6);
+        // 6.3 / 0.1 = 63 → fits INT7
+        assert_eq!(quantize_f32(6.3, &p), 63);
+        assert_eq!(quantize_f32(-6.4, &p), -64);
+    }
+}

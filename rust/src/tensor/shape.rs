@@ -1,0 +1,145 @@
+//! Tensor shape bookkeeping (row-major / NHWC).
+
+use crate::error::{Error, Result};
+
+/// A tensor shape: up to 4 dimensions stored as `[N, H, W, C]` for
+/// activations and `[Out, Kh, Kw, In]` for convolution filters.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<usize>,
+}
+
+impl Shape {
+    /// Create a shape; rejects empty and zero-sized dims.
+    pub fn new(dims: &[usize]) -> Result<Self> {
+        if dims.is_empty() {
+            return Err(Error::Shape("shape must have at least one dim".into()));
+        }
+        if dims.iter().any(|&d| d == 0) {
+            return Err(Error::Shape(format!("zero-sized dim in {dims:?}")));
+        }
+        Ok(Shape { dims: dims.to_vec() })
+    }
+
+    /// 1-D shape.
+    pub fn d1(a: usize) -> Self {
+        Shape { dims: vec![a] }
+    }
+
+    /// 2-D shape.
+    pub fn d2(a: usize, b: usize) -> Self {
+        Shape { dims: vec![a, b] }
+    }
+
+    /// 4-D NHWC shape.
+    pub fn nhwc(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Shape { dims: vec![n, h, w, c] }
+    }
+
+    /// Dimension list.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.dims.len()];
+        for i in (0..self.dims.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+
+    /// Flat index of a multi-index; debug-checked.
+    #[inline]
+    pub fn index(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        let mut flat = 0usize;
+        for (i, (&ix, &d)) in idx.iter().zip(&self.dims).enumerate() {
+            debug_assert!(ix < d, "index {ix} out of bound {d} at dim {i}");
+            flat = flat * d + ix;
+        }
+        flat
+    }
+
+    /// NHWC accessor helpers for rank-4 shapes.
+    pub fn n(&self) -> usize {
+        self.dims[0]
+    }
+    /// Height (rank-4).
+    pub fn h(&self) -> usize {
+        self.dims[1]
+    }
+    /// Width (rank-4).
+    pub fn w(&self) -> usize {
+        self.dims[2]
+    }
+    /// Channels (rank-4, innermost).
+    pub fn c(&self) -> usize {
+        self.dims[3]
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, "x")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_strides() {
+        let s = Shape::nhwc(1, 4, 5, 8);
+        assert_eq!(s.numel(), 160);
+        assert_eq!(s.strides(), vec![160, 40, 8, 1]);
+    }
+
+    #[test]
+    fn flat_index_matches_strides() {
+        let s = Shape::nhwc(2, 3, 4, 5);
+        let strides = s.strides();
+        for n in 0..2 {
+            for h in 0..3 {
+                for w in 0..4 {
+                    for c in 0..5 {
+                        let flat = s.index(&[n, h, w, c]);
+                        let expect =
+                            n * strides[0] + h * strides[1] + w * strides[2] + c * strides[3];
+                        assert_eq!(flat, expect);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_dim_rejected() {
+        assert!(Shape::new(&[4, 0, 2]).is_err());
+        assert!(Shape::new(&[]).is_err());
+    }
+
+    #[test]
+    fn display_format() {
+        assert_eq!(Shape::nhwc(1, 2, 3, 4).to_string(), "[1x2x3x4]");
+    }
+}

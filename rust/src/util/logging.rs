@@ -1,0 +1,54 @@
+//! Minimal `log` facade backend (no `env_logger` offline).
+//!
+//! Writes `LEVEL target: message` lines to stderr; level filtered by the
+//! `SPARSE_RISCV_LOG` environment variable (error|warn|info|debug|trace,
+//! default info).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+struct StderrLogger {
+    max: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("{:5} {}: {}", record.level(), record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+
+/// Install the stderr logger. Idempotent; safe to call from every
+/// binary/test entry point.
+pub fn init() {
+    let level = match std::env::var("SPARSE_RISCV_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { max: level });
+    // set_logger fails if already set — that's fine (tests call init many times).
+    let _ = log::set_logger(logger);
+    log::set_max_level(LevelFilter::Trace);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained substrates: deterministic PRNG, statistics,
+//! logging, and a property-testing helper.
+//!
+//! The build environment is offline (no `rand`, `proptest`, `env_logger`
+//! crates), so these are implemented from scratch. All randomness in the
+//! repository flows through [`Pcg32`] seeded explicitly, making every
+//! experiment bit-reproducible.
+
+pub mod logging;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+
+pub use prng::Pcg32;
+pub use stats::{OnlineStats, Percentiles};

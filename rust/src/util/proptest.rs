@@ -1,0 +1,210 @@
+//! Tiny property-based testing helper (offline substitute for `proptest`).
+//!
+//! [`check`] runs a property over `n` generated cases; on failure it
+//! performs greedy shrinking via the case's [`Shrink`] implementation and
+//! panics with the minimal counterexample. Generators are plain closures
+//! over [`Pcg32`], so properties stay readable:
+//!
+//! ```text
+//! use sparse_riscv::util::proptest::{check, Config};
+//! check(Config::default().cases(64), |rng| rng.range_i32(-128, 127),
+//!       |&w| (w as i32) >= -128 && (w as i32) <= 127);
+//! ```
+
+use super::prng::Pcg32;
+
+/// Shrinkable test case: yields strictly "smaller" candidate values.
+pub trait Shrink: Sized {
+    /// Candidate smaller values (tried in order).
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for i32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            if *self < 0 {
+                out.push(-self);
+            }
+            out.push(self - self.signum());
+        }
+        out
+    }
+}
+
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Halve the vector.
+        out.push(self[..self.len() / 2].to_vec());
+        // Drop first / last element.
+        out.push(self[1..].to_vec());
+        out.push(self[..self.len() - 1].to_vec());
+        // Shrink each element once.
+        for i in 0..self.len().min(8) {
+            for cand in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = cand;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1.clone()));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of generated cases.
+    pub cases: usize,
+    /// PRNG seed (tests are deterministic).
+    pub seed: u64,
+    /// Maximum shrink iterations.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE, max_shrink: 1000 }
+    }
+}
+
+impl Config {
+    /// Override case count.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Override seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` over `cfg.cases` values from `gen`; panic with a shrunk
+/// counterexample on failure.
+pub fn check<T, G, P>(cfg: Config, mut gen: G, prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg32) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Pcg32::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let value = gen(&mut rng);
+        if prop(&value) {
+            continue;
+        }
+        // Shrink.
+        let mut minimal = value.clone();
+        let mut budget = cfg.max_shrink;
+        'outer: while budget > 0 {
+            for cand in minimal.shrink() {
+                budget -= 1;
+                if !prop(&cand) {
+                    minimal = cand;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed at case {case_idx}\n  original: {value:?}\n  shrunk:   {minimal:?}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(Config::default().cases(128), |r| r.range_i32(-100, 100), |&x| x >= -100 && x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(Config::default().cases(512), |r| r.range_i32(0, 1000), |&x| x < 900);
+    }
+
+    #[test]
+    fn shrink_i32_reaches_zero() {
+        // property "x < 1" fails for any x >= 1; the shrinker should land on 1.
+        let result = std::panic::catch_unwind(|| {
+            check(Config::default().cases(512), |r| r.range_i32(0, 1000), |&x| x < 1);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk:   1"), "minimal counterexample should be 1, got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_is_smaller() {
+        let v = vec![5i32, 6, 7, 8];
+        for cand in v.shrink() {
+            assert!(
+                cand.len() < v.len() || cand.iter().zip(&v).any(|(a, b)| a != b),
+                "shrink must change something"
+            );
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! End-to-end tests of the `sparse-riscv` binary (spawned as a process).
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_sparse-riscv"))
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = bin().args(args).output().expect("spawn binary");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, stdout, _) = run(&["--help"]);
+    assert!(ok);
+    for sub in ["experiment", "serve", "encode", "resources", "models"] {
+        assert!(stdout.contains(sub), "help missing '{sub}':\n{stdout}");
+    }
+}
+
+#[test]
+fn models_subcommand_lists_zoo() {
+    let (ok, stdout, _) = run(&["models"]);
+    assert!(ok);
+    for m in ["vgg16", "resnet56", "mobilenetv2", "dscnn"] {
+        assert!(stdout.contains(m), "{stdout}");
+    }
+}
+
+#[test]
+fn resources_matches_table3_dsps() {
+    let (ok, stdout, _) = run(&["resources"]);
+    assert!(ok);
+    assert!(stdout.contains("USSA"));
+    assert!(stdout.contains("CSA"));
+    assert!(stdout.contains("2471 LUTs"), "{stdout}");
+}
+
+#[test]
+fn encode_prints_blocks_and_skips() {
+    let (ok, stdout, _) = run(&["encode", "--blocks", "5", "--x-ss", "0.5", "--seed", "3"]);
+    assert!(ok);
+    assert!(stdout.contains("total blocks 5"), "{stdout}");
+    assert!(stdout.contains("skip="), "{stdout}");
+}
+
+#[test]
+fn experiment_runs_with_verification() {
+    let (ok, stdout, stderr) = run(&[
+        "experiment",
+        "--model",
+        "dscnn",
+        "--designs",
+        "csa",
+        "--x-us",
+        "0.5",
+        "--x-ss",
+        "0.3",
+        "--scale",
+        "0.07",
+        "--verify",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("CSA"), "{stdout}");
+    assert!(stdout.contains("speedup-vs-seq"), "{stdout}");
+}
+
+#[test]
+fn serve_reports_latency() {
+    let (ok, stdout, stderr) = run(&[
+        "serve", "--model", "dscnn", "--design", "sssa", "--requests", "3", "--scale", "0.07",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("simulated latency"), "{stdout}");
+    assert!(stdout.contains("prediction histogram"), "{stdout}");
+}
+
+#[test]
+fn bad_arguments_fail_cleanly() {
+    let (ok, _, stderr) = run(&["experiment", "--bogus-flag", "1"]);
+    assert!(!ok);
+    assert!(stderr.contains("bogus-flag"), "{stderr}");
+
+    let (ok, _, stderr) = run(&["fly-to-the-moon"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"), "{stderr}");
+
+    let (ok, _, stderr) =
+        run(&["experiment", "--model", "dscnn", "--x-us", "7.5", "--scale", "0.07"]);
+    assert!(!ok);
+    assert!(stderr.contains("x_us"), "{stderr}");
+}

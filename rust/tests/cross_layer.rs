@@ -1,0 +1,154 @@
+//! Cross-layer tests: the Rust L3 against the Python-built artifacts
+//! (L2 JAX graph with the L1 Pallas kernel inside, AOT-lowered to HLO).
+//!
+//! These tests require `make artifacts`; they self-skip (with a stderr
+//! note) when the artifacts are absent so `cargo test` works in a fresh
+//! checkout.
+
+use sparse_riscv::config::value::Value;
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::nn::activation::argmax;
+use sparse_riscv::runtime::model_io::import_graph_file;
+use sparse_riscv::runtime::pjrt::PjrtRuntime;
+use sparse_riscv::simulator::SimEngine;
+use sparse_riscv::tensor::quant::QuantParams;
+use sparse_riscv::tensor::{QTensor, Shape};
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(&format!("{dir}/dscnn_int8.json")).exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("cross_layer: artifacts missing — run `make artifacts`; skipping");
+    None
+}
+
+struct TestSet {
+    inputs: Vec<Vec<i8>>,
+    labels: Vec<usize>,
+    shape: Shape,
+    scale: f32,
+}
+
+fn load_testset(dir: &str, model: &str) -> TestSet {
+    let doc =
+        Value::parse(&std::fs::read_to_string(format!("{dir}/{model}_testset.json")).unwrap())
+            .unwrap();
+    TestSet {
+        inputs: doc
+            .get("inputs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i8_vec().unwrap())
+            .collect(),
+        labels: doc
+            .get("labels")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect(),
+        shape: Shape::new(
+            &doc.get("shape")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect::<Vec<_>>(),
+        )
+        .unwrap(),
+        scale: doc.get("input_scale").unwrap().as_f64().unwrap() as f32,
+    }
+}
+
+#[test]
+fn pjrt_artifact_matches_rust_integer_graph_bit_exactly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (graph, _) = import_graph_file(format!("{dir}/dscnn_int8.json")).unwrap();
+    let ts = load_testset(&dir, "dscnn");
+    let rt = PjrtRuntime::cpu().unwrap();
+    let loaded = rt.load_hlo_text(format!("{dir}/dscnn_int8.hlo.txt")).unwrap();
+    let head_scale = match graph.layers.last().unwrap() {
+        sparse_riscv::nn::graph::Layer::Fc(op) => op.output_params.scale,
+        _ => panic!("expected fc head"),
+    };
+    let dims: Vec<i64> = ts.shape.dims().iter().map(|&d| d as i64).collect();
+    for i in 0..8 {
+        let x_f32: Vec<f32> = ts.inputs[i].iter().map(|&q| q as f32 * ts.scale).collect();
+        let outs = loaded.run_f32(&[(&x_f32, &dims)]).unwrap();
+        let input = QTensor::new(
+            ts.shape.clone(),
+            ts.inputs[i].clone(),
+            QuantParams::new(ts.scale, 0).unwrap(),
+        )
+        .unwrap();
+        let rust_q = graph.forward_ref(&input).unwrap();
+        for (lane, (&j, &r)) in outs[0].iter().zip(rust_q.data()).enumerate() {
+            let rust_f = r as f32 * head_scale;
+            assert!(
+                (j - rust_f).abs() < 1e-5,
+                "input {i} logit {lane}: jax {j} vs rust {rust_f}"
+            );
+        }
+    }
+}
+
+#[test]
+fn trained_model_accuracy_is_design_invariant() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (graph, _) = import_graph_file(format!("{dir}/dscnn_int7.json")).unwrap();
+    let ts = load_testset(&dir, "dscnn");
+    let params = QuantParams::new(ts.scale, 0).unwrap();
+    let n = 24;
+    let mut all: Vec<Vec<usize>> = Vec::new();
+    for design in DesignKind::ALL {
+        let engine = SimEngine::new(design).with_verify(true);
+        let prepared = engine.prepare(&graph).unwrap();
+        assert_eq!(prepared.clamped_weights, 0, "int7 export must need no clamping");
+        let mut preds = Vec::new();
+        for i in 0..n {
+            let input =
+                QTensor::new(ts.shape.clone(), ts.inputs[i].clone(), params).unwrap();
+            let report = engine.run(&prepared, &input).unwrap();
+            preds.push(argmax(&report.output, graph.classes).unwrap()[0]);
+        }
+        all.push(preds);
+    }
+    for preds in &all[1..] {
+        assert_eq!(preds, &all[0], "predictions must be design-invariant");
+    }
+}
+
+#[test]
+fn int7_artifact_accuracy_close_to_int8() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ts = load_testset(&dir, "dscnn");
+    let params = QuantParams::new(ts.scale, 0).unwrap();
+    let mut accs = Vec::new();
+    for tag in ["int8", "int7"] {
+        let (graph, _) = import_graph_file(format!("{dir}/dscnn_{tag}.json")).unwrap();
+        let engine = SimEngine::new(DesignKind::BaselineSimd);
+        let prepared = engine.prepare(&graph).unwrap();
+        let n = 64;
+        let mut correct = 0;
+        for i in 0..n {
+            let input =
+                QTensor::new(ts.shape.clone(), ts.inputs[i].clone(), params).unwrap();
+            let report = engine.run(&prepared, &input).unwrap();
+            let pred = argmax(&report.output, graph.classes).unwrap()[0];
+            correct += (pred == ts.labels[i]) as usize;
+        }
+        accs.push(correct as f64 / n as f64);
+    }
+    assert!(
+        (accs[0] - accs[1]).abs() < 0.1,
+        "int8 {} vs int7 {}: losing the lookahead bit must be ~free",
+        accs[0],
+        accs[1]
+    );
+}
