@@ -1,0 +1,55 @@
+//! Batched multi-design serving (engine v2): stream request batches for
+//! one model through every accelerator design on a shared worker pool,
+//! reusing the prepared-model cache, and compare simulated latency,
+//! throughput and memory traffic.
+//!
+//! ```bash
+//! cargo run --release --example batch_serving -- [model] [batch] [batches] [threads]
+//! ```
+
+use sparse_riscv::analysis::report::{f2, Table};
+use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
+use sparse_riscv::isa::DesignKind;
+
+fn main() -> sparse_riscv::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "dscnn".to_string());
+    let batch: usize = args.get(2).map(|s| s.parse().unwrap()).unwrap_or(8);
+    let batches: usize = args.get(3).map(|s| s.parse().unwrap()).unwrap_or(4);
+    let threads: usize = args.get(4).map(|s| s.parse().unwrap()).unwrap_or(0);
+
+    let engine = BatchEngine::new(BatchOptions { threads, ..Default::default() });
+    println!(
+        "batch serving: {model}, {batches} batches of {batch} on {} workers",
+        engine.workers()
+    );
+
+    let mut table = Table::new(
+        "per-design batched serving (simulated 100 MHz SoC)",
+        &["design", "inf", "p50 ms", "p99 ms", "sim inf/s", "host inf/s", "stall %", "MB loaded"],
+    );
+    for design in DesignKind::ALL {
+        let spec = BatchSpec { scale: 0.125, ..BatchSpec::new(&model, design) };
+        let reqs = BatchEngine::gen_requests(&model, batch * batches, 2026)?;
+        let report = engine.run_stream(&spec, reqs, batch)?;
+        let stall_pct = 100.0 * report.cfu_stalls as f64 / report.total_cycles.max(1) as f64;
+        table.row(&[
+            design.name().to_string(),
+            report.completed.to_string(),
+            format!("{:.3}", report.p50 * 1e3),
+            format!("{:.3}", report.p99 * 1e3),
+            f2(report.sim_throughput(100_000_000)),
+            f2(report.host_throughput()),
+            f2(stall_pct),
+            format!("{:.2}", report.loaded_bytes as f64 / 1e6),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "prepared-model cache: {} builds, {} hits across {} cached models",
+        engine.cache().misses(),
+        engine.cache().hits(),
+        engine.cache().len()
+    );
+    Ok(())
+}

@@ -1,0 +1,244 @@
+//! End-to-end batched-throughput sweep: every zoo model under every
+//! requested design, batch-scheduled on the engine-v2
+//! [`crate::coordinator::BatchEngine`], at one worker thread vs many.
+//!
+//! Shared by the `sparse-riscv bench-e2e` subcommand and the
+//! `benches/e2e_throughput.rs` cargo bench so the CLI and the bench
+//! cannot drift apart.
+
+use crate::coordinator::batch::{BatchEngine, BatchOptions, BatchReport, BatchSpec};
+use crate::error::Result;
+use crate::isa::DesignKind;
+use crate::simulator::PreparedCache;
+use crate::util::stats::geomean;
+use std::sync::Arc;
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct E2eConfig {
+    /// Model zoo identifiers to run.
+    pub models: Vec<String>,
+    /// Accelerator designs to run.
+    pub designs: Vec<DesignKind>,
+    /// Requests per batch (the acceptance floor is 8).
+    pub batch: usize,
+    /// Worker threads for the multi-threaded side (0 = auto).
+    pub threads: usize,
+    /// Model width multiplier.
+    pub scale: f64,
+    /// Unstructured sparsity within surviving blocks.
+    pub x_us: f64,
+    /// 4:4 block sparsity.
+    pub x_ss: f64,
+    /// Request RNG seed.
+    pub seed: u64,
+    /// SoC clock (simulated-latency conversion).
+    pub clock_hz: u64,
+}
+
+impl Default for E2eConfig {
+    fn default() -> Self {
+        E2eConfig {
+            models: crate::models::zoo::model_names().iter().map(|s| s.to_string()).collect(),
+            designs: vec![
+                DesignKind::BaselineSimd,
+                DesignKind::Sssa,
+                DesignKind::Ussa,
+                DesignKind::Csa,
+            ],
+            batch: 8,
+            threads: 0,
+            scale: 0.1,
+            x_us: 0.5,
+            x_ss: 0.3,
+            seed: 42,
+            clock_hz: 100_000_000,
+        }
+    }
+}
+
+/// One measured cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct E2eRow {
+    /// Worker threads used.
+    pub threads: usize,
+    /// Aggregated batch report (model/design/latency/cycles inside).
+    pub report: BatchReport,
+}
+
+/// Sweep outcome.
+#[derive(Debug, Clone)]
+pub struct E2eSummary {
+    /// One row per (model, design, thread-count).
+    pub rows: Vec<E2eRow>,
+    /// Aggregate host inferences/sec with one worker.
+    pub agg_single: f64,
+    /// Aggregate host inferences/sec with `threads` workers.
+    pub agg_multi: f64,
+    /// Worker count of the multi-threaded side (resolved).
+    pub multi_threads: usize,
+}
+
+impl E2eSummary {
+    /// Multi-thread over single-thread aggregate throughput ratio.
+    pub fn scaling(&self) -> f64 {
+        if self.agg_single <= 0.0 {
+            return 0.0;
+        }
+        self.agg_multi / self.agg_single
+    }
+
+    /// Geometric-mean per-cell throughput ratio (threads=N vs threads=1).
+    pub fn geomean_scaling(&self) -> f64 {
+        let ratios: Vec<f64> = self
+            .rows
+            .chunks(2)
+            .filter(|pair| pair.len() == 2)
+            .map(|pair| {
+                let single = pair[0].report.host_throughput();
+                let multi = pair[1].report.host_throughput();
+                if single > 0.0 {
+                    multi / single
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        geomean(&ratios)
+    }
+}
+
+/// Run the sweep: for each (model, design), one batch at threads = 1 and
+/// one at threads = N, sharing a prepared-model cache that is warmed
+/// before timing so both sides measure pure batch execution.
+pub fn run_e2e(cfg: &E2eConfig) -> Result<E2eSummary> {
+    let cache = Arc::new(PreparedCache::new());
+    let single = BatchEngine::with_cache(
+        BatchOptions { threads: 1, clock_hz: cfg.clock_hz, verify: false },
+        Arc::clone(&cache),
+    );
+    let multi = BatchEngine::with_cache(
+        BatchOptions { threads: cfg.threads, clock_hz: cfg.clock_hz, verify: false },
+        Arc::clone(&cache),
+    );
+
+    let specs: Vec<BatchSpec> = cfg
+        .models
+        .iter()
+        .flat_map(|m| {
+            cfg.designs.iter().map(move |&d| BatchSpec {
+                x_us: cfg.x_us,
+                x_ss: cfg.x_ss,
+                scale: cfg.scale,
+                ..BatchSpec::new(m, d)
+            })
+        })
+        .collect();
+
+    // Warm the shared cache (the paper's offline pre-processing) so the
+    // timed passes compare execution, not preparation.
+    for spec in &specs {
+        single.prepared(spec)?;
+    }
+
+    let mut rows = Vec::with_capacity(specs.len() * 2);
+    let (mut done_single, mut wall_single) = (0u64, 0.0f64);
+    let (mut done_multi, mut wall_multi) = (0u64, 0.0f64);
+    for (i, spec) in specs.iter().enumerate() {
+        let reqs = BatchEngine::gen_requests(&spec.model, cfg.batch, cfg.seed + i as u64)?;
+        let a = single.run_batch(spec, reqs.clone())?;
+        done_single += a.completed;
+        wall_single += a.wall_seconds;
+        rows.push(E2eRow { threads: 1, report: a });
+        let b = multi.run_batch(spec, reqs)?;
+        done_multi += b.completed;
+        wall_multi += b.wall_seconds;
+        rows.push(E2eRow { threads: multi.workers(), report: b });
+    }
+    Ok(E2eSummary {
+        rows,
+        agg_single: if wall_single > 0.0 { done_single as f64 / wall_single } else { 0.0 },
+        agg_multi: if wall_multi > 0.0 { done_multi as f64 / wall_multi } else { 0.0 },
+        multi_threads: multi.workers(),
+    })
+}
+
+/// Render the sweep as an aligned table plus the scaling summary.
+pub fn render(cfg: &E2eConfig, summary: &E2eSummary) -> String {
+    use crate::analysis::report::{f2, Table};
+    let mut t = Table::new(
+        &format!(
+            "e2e batched throughput (batch={}, scale={}, x_us={}, x_ss={})",
+            cfg.batch, cfg.scale, cfg.x_us, cfg.x_ss
+        ),
+        &[
+            "model",
+            "design",
+            "threads",
+            "host wall s",
+            "host inf/s",
+            "sim inf/s",
+            "p50 ms",
+            "p99 ms",
+            "stall %",
+        ],
+    );
+    for row in &summary.rows {
+        let r = &row.report;
+        let stall_pct = if r.total_cycles > 0 {
+            100.0 * r.cfu_stalls as f64 / r.total_cycles as f64
+        } else {
+            0.0
+        };
+        t.row(&[
+            r.model.clone(),
+            r.design.name().to_string(),
+            row.threads.to_string(),
+            format!("{:.4}", r.wall_seconds),
+            f2(r.host_throughput()),
+            f2(r.sim_throughput(cfg.clock_hz)),
+            format!("{:.3}", r.p50 * 1e3),
+            format!("{:.3}", r.p99 * 1e3),
+            f2(stall_pct),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "aggregate host throughput: {} inf/s @1 thread vs {} inf/s @{} threads — {}x scaling (geomean per-cell {}x)\n",
+        f2(summary.agg_single),
+        f2(summary.agg_multi),
+        summary.multi_threads,
+        f2(summary.scaling()),
+        f2(summary.geomean_scaling()),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_models_by_designs_by_threads() {
+        // Tiny sweep: 2 models × 2 designs × 2 thread counts.
+        let cfg = E2eConfig {
+            models: vec!["dscnn".into(), "resnet56".into()],
+            designs: vec![DesignKind::BaselineSimd, DesignKind::Csa],
+            batch: 2,
+            threads: 2,
+            scale: 0.07,
+            ..Default::default()
+        };
+        let summary = run_e2e(&cfg).unwrap();
+        assert_eq!(summary.rows.len(), 2 * 2 * 2);
+        for row in &summary.rows {
+            assert_eq!(row.report.completed, 2);
+            assert!(row.report.cache_hit, "cache was pre-warmed");
+            assert!(row.report.total_cycles > 0);
+        }
+        let rendered = render(&cfg, &summary);
+        assert!(rendered.contains("dscnn"));
+        assert!(rendered.contains("CSA"));
+        assert!(rendered.contains("aggregate host throughput"));
+    }
+}

@@ -36,6 +36,15 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Throughput implied by the mean iteration time when each iteration
+    /// processes `items_per_iter` items (e.g. inferences per batch).
+    pub fn items_per_sec(&self, items_per_iter: usize) -> f64 {
+        if self.mean_s <= 0.0 {
+            return 0.0;
+        }
+        items_per_iter as f64 / self.mean_s
+    }
+
     /// Render one line, auto-scaling units.
     pub fn render(&self) -> String {
         fn scale(s: f64) -> String {
@@ -107,5 +116,22 @@ mod tests {
     fn render_contains_label() {
         let r = bench_fn("my-label", &BenchConfig { warmup: 0, iters: 1 }, || {});
         assert!(r.render().contains("my-label"));
+    }
+
+    #[test]
+    fn items_per_sec_scales_with_batch() {
+        let r = BenchResult {
+            label: "t".into(),
+            mean_s: 0.5,
+            stddev_s: 0.0,
+            median_s: 0.5,
+            min_s: 0.5,
+            iters: 1,
+        };
+        assert!((r.items_per_sec(8) - 16.0).abs() < 1e-12);
+        assert_eq!(
+            BenchResult { mean_s: 0.0, ..r }.items_per_sec(8),
+            0.0
+        );
     }
 }

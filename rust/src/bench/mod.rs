@@ -5,7 +5,12 @@
 //! [`crate::util::stats`]. Wall-clock timing is for *harness* performance
 //! (the L3 perf pass); the paper's metrics are simulated clock cycles,
 //! which are deterministic and need no statistical treatment.
+//!
+//! [`e2e`] hosts the batched end-to-end throughput sweep shared by the
+//! `bench-e2e` CLI subcommand and `benches/e2e_throughput.rs`.
 
+pub mod e2e;
 pub mod harness;
 
+pub use e2e::{run_e2e, E2eConfig, E2eSummary};
 pub use harness::{bench_fn, BenchConfig, BenchResult};

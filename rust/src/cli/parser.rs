@@ -250,6 +250,17 @@ impl ParsedArgs {
     pub fn get_flag(&self, name: &str) -> Result<bool> {
         Ok(self.get(name)? == "true")
     }
+
+    /// Comma-separated list value, trimmed, empty entries dropped
+    /// (`--models "a, b,"` → `["a", "b"]`; empty value → empty list).
+    pub fn get_list(&self, name: &str) -> Result<Vec<String>> {
+        Ok(self
+            .get(name)?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect())
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +339,17 @@ mod tests {
         let c = Command::new("t", "t").arg(ArgSpec::opt("k", "v", "h"));
         let p = c.parse(&toks(&["a", "--k", "x", "b"])).unwrap();
         assert_eq!(p.positionals, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn list_values_split_and_trim() {
+        let c = Command::new("t", "t").arg(ArgSpec::opt("designs", "sssa,ussa", "list"));
+        let p = c.parse(&toks(&[])).unwrap();
+        assert_eq!(p.get_list("designs").unwrap(), vec!["sssa", "ussa"]);
+        let p = c.parse(&toks(&["--designs", " csa , simd ,"])).unwrap();
+        assert_eq!(p.get_list("designs").unwrap(), vec!["csa", "simd"]);
+        let p = c.parse(&toks(&["--designs", ""])).unwrap();
+        assert!(p.get_list("designs").unwrap().is_empty());
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! Engine v2: batched multi-design inference over the cycle simulator.
+//!
+//! One [`BatchEngine`] owns a worker pool and a prepared-model cache and
+//! executes *batches* of inference requests for any (model, design,
+//! sparsity) configuration:
+//!
+//! - the prepared model (built + pruned + lookahead-encoded weights) is
+//!   cached across batches keyed by [`crate::simulator::ModelKey`], so a
+//!   serving loop pays the paper's offline pre-processing once;
+//! - the requests of one batch are scheduled across the
+//!   [`super::scheduler::JobPool`] workers (chunked to amortize channel
+//!   overhead), each worker driving the shared
+//!   [`crate::simulator::ExecBackend`];
+//! - results aggregate into a [`BatchReport`]: total/CFU cycles, CFU
+//!   stall cycles, memory traffic, and simulated-latency mean/p50/p99 via
+//!   [`crate::util::stats`].
+//!
+//! This is the substrate the CLI `serve`/`bench-e2e` commands and the
+//! end-to-end throughput bench build on.
+
+use super::scheduler::JobPool;
+use crate::error::Result;
+use crate::isa::DesignKind;
+use crate::models::builder::{apply_sparsity, random_input, ModelConfig};
+use crate::models::zoo::{build_model, input_shape};
+use crate::simulator::{verified_backend_for, ExecBackend, ModelKey, PreparedCache, PreparedModel};
+use crate::tensor::quant::QuantParams;
+use crate::tensor::QTensor;
+use crate::util::stats::{OnlineStats, Percentiles};
+use crate::util::Pcg32;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One batchable workload: which prepared model to run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchSpec {
+    /// Model zoo identifier.
+    pub model: String,
+    /// Accelerator design.
+    pub design: DesignKind,
+    /// Unstructured sparsity within surviving blocks.
+    pub x_us: f64,
+    /// 4:4 block sparsity.
+    pub x_ss: f64,
+    /// Model width multiplier.
+    pub scale: f64,
+    /// Weight RNG seed (model construction).
+    pub weight_seed: u64,
+}
+
+impl BatchSpec {
+    /// Spec with the repo-default sparsity/scale/seed.
+    pub fn new(model: &str, design: DesignKind) -> Self {
+        BatchSpec {
+            model: model.to_string(),
+            design,
+            x_us: 0.5,
+            x_ss: 0.3,
+            scale: 0.125,
+            weight_seed: ModelConfig::default().seed,
+        }
+    }
+
+    fn key(&self) -> ModelKey {
+        ModelKey::new(
+            &self.model,
+            self.design,
+            self.x_us,
+            self.x_ss,
+            self.scale,
+            self.weight_seed,
+        )
+    }
+
+    fn model_config(&self) -> ModelConfig {
+        ModelConfig { scale: self.scale, seed: self.weight_seed, ..Default::default() }
+    }
+}
+
+/// Aggregated result of one batch.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    /// Model name.
+    pub model: String,
+    /// Design executed.
+    pub design: DesignKind,
+    /// Requests completed.
+    pub completed: u64,
+    /// Total simulated cycles over the batch.
+    pub total_cycles: u64,
+    /// CFU (MAC-unit) cycles over the batch.
+    pub cfu_cycles: u64,
+    /// CFU stall cycles (multi-cycle MAC waits) over the batch.
+    pub cfu_stalls: u64,
+    /// Bytes loaded by the simulated kernels over the batch.
+    pub loaded_bytes: u64,
+    /// Per-request simulated latency stats (seconds at the SoC clock).
+    pub latency: OnlineStats,
+    /// Per-request simulated latencies (seconds), in request order —
+    /// kept so percentiles stay exact when reports are merged.
+    pub latencies: Vec<f64>,
+    /// Median simulated latency (seconds).
+    pub p50: f64,
+    /// 99th-percentile simulated latency (seconds).
+    pub p99: f64,
+    /// Host wall-clock seconds for the batch.
+    pub wall_seconds: f64,
+    /// Whether the prepared model came from the cache.
+    pub cache_hit: bool,
+    /// Per-request predicted classes (argmax of the head).
+    pub predictions: Vec<usize>,
+}
+
+impl BatchReport {
+    /// Host-side throughput (inferences per wall second).
+    pub fn host_throughput(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.wall_seconds
+    }
+
+    /// Simulated single-core device throughput at a clock frequency
+    /// (inferences per simulated second).
+    pub fn sim_throughput(&self, clock_hz: u64) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 * clock_hz as f64 / self.total_cycles as f64
+    }
+
+    /// Fold another batch of the same spec into this report (used when a
+    /// request stream is served as several batches).
+    pub fn merge(&mut self, other: &BatchReport) {
+        self.absorb(other);
+        self.recompute_percentiles();
+    }
+
+    /// Accumulate everything except p50/p99 — the stream loop absorbs
+    /// many batches and recomputes percentiles once at the end, instead
+    /// of re-sorting the whole sample vector per batch.
+    fn absorb(&mut self, other: &BatchReport) {
+        self.completed += other.completed;
+        self.total_cycles += other.total_cycles;
+        self.cfu_cycles += other.cfu_cycles;
+        self.cfu_stalls += other.cfu_stalls;
+        self.loaded_bytes += other.loaded_bytes;
+        self.latency.merge(&other.latency);
+        self.latencies.extend_from_slice(&other.latencies);
+        self.wall_seconds += other.wall_seconds;
+        self.cache_hit &= other.cache_hit;
+        self.predictions.extend_from_slice(&other.predictions);
+    }
+
+    /// Recompute p50/p99 over the raw samples — exact, unlike merging
+    /// the summary percentile values.
+    fn recompute_percentiles(&mut self) {
+        let mut pcts = Percentiles::new();
+        for &s in &self.latencies {
+            pcts.push(s);
+        }
+        if pcts.count() > 0 {
+            self.p50 = pcts.percentile(50.0);
+            self.p99 = pcts.percentile(99.0);
+        }
+    }
+}
+
+/// Batch engine options.
+#[derive(Debug, Clone)]
+pub struct BatchOptions {
+    /// Worker threads (0 = available parallelism).
+    pub threads: usize,
+    /// SoC clock for simulated-latency conversion.
+    pub clock_hz: u64,
+    /// Verify every MAC layer against the golden reference ops.
+    pub verify: bool,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions { threads: 0, clock_hz: 100_000_000, verify: false }
+    }
+}
+
+/// Per-request measurement collected by the workers.
+struct ReqStat {
+    cycles: u64,
+    cfu_cycles: u64,
+    cfu_stalls: u64,
+    loaded_bytes: u64,
+    pred: usize,
+}
+
+/// The batched multi-design inference engine.
+pub struct BatchEngine {
+    pool: JobPool,
+    cache: Arc<PreparedCache>,
+    opts: BatchOptions,
+}
+
+impl BatchEngine {
+    /// Engine with a fresh cache.
+    pub fn new(opts: BatchOptions) -> Self {
+        BatchEngine { pool: JobPool::new(opts.threads), cache: Arc::new(PreparedCache::new()), opts }
+    }
+
+    /// Engine sharing an existing cache (e.g. one cache across several
+    /// thread-count configurations in a bench sweep).
+    pub fn with_cache(opts: BatchOptions, cache: Arc<PreparedCache>) -> Self {
+        BatchEngine { pool: JobPool::new(opts.threads), cache, opts }
+    }
+
+    /// Worker threads serving this engine.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// The prepared-model cache (inspection / sharing).
+    pub fn cache(&self) -> &Arc<PreparedCache> {
+        &self.cache
+    }
+
+    /// Synthesize a deterministic request batch for a model (quantized
+    /// random activations, as the serving examples use).
+    pub fn gen_requests(model: &str, n: usize, seed: u64) -> Result<Vec<QTensor>> {
+        let shape = input_shape(model)?;
+        let params = QuantParams::new(ModelConfig::default().act_scale, 0)?;
+        let mut rng = Pcg32::new(seed);
+        Ok((0..n).map(|_| random_input(shape.clone(), params, &mut rng)).collect())
+    }
+
+    /// Fetch (or build) the prepared model for a spec.
+    pub fn prepared(&self, spec: &BatchSpec) -> Result<(Arc<PreparedModel>, bool)> {
+        let backend = verified_backend_for(spec.design, self.opts.verify);
+        self.prepared_with(spec, backend.as_ref())
+    }
+
+    fn prepared_with(
+        &self,
+        spec: &BatchSpec,
+        backend: &dyn ExecBackend,
+    ) -> Result<(Arc<PreparedModel>, bool)> {
+        self.cache.get_or_prepare(&spec.key(), || {
+            let mut info = build_model(&spec.model, &spec.model_config())?;
+            apply_sparsity(&mut info.graph, spec.x_us, spec.x_ss);
+            backend.prepare(&info.graph)
+        })
+    }
+
+    /// Execute a batch of requests, scheduling them across the worker
+    /// pool, and aggregate the per-request reports.
+    pub fn run_batch(&self, spec: &BatchSpec, requests: Vec<QTensor>) -> Result<BatchReport> {
+        let t0 = Instant::now();
+        let backend: Arc<dyn ExecBackend> =
+            Arc::from(verified_backend_for(spec.design, self.opts.verify));
+        let (prepared, cache_hit) = self.prepared_with(spec, backend.as_ref())?;
+        let classes = prepared.classes;
+        let n = requests.len();
+        // Chunk so each job carries several requests: keeps channel
+        // overhead negligible while still spreading a batch over every
+        // worker.
+        let chunk = n.div_ceil(self.pool.workers() * 4).max(1);
+        let stats: Vec<Result<ReqStat>> = {
+            let prepared = Arc::clone(&prepared);
+            let backend = Arc::clone(&backend);
+            self.pool.map_chunked(requests, chunk, move |req| {
+                let report = backend.execute(&prepared, &req)?;
+                let pred = crate::nn::activation::argmax(&report.output, classes)?[0];
+                Ok(ReqStat {
+                    cycles: report.total_cycles,
+                    cfu_cycles: report.mac_cycles,
+                    cfu_stalls: report.cfu_stalls(),
+                    loaded_bytes: report.loaded_bytes(),
+                    pred,
+                })
+            })
+        };
+
+        let mut latency = OnlineStats::new();
+        let mut report = BatchReport {
+            model: spec.model.clone(),
+            design: spec.design,
+            completed: 0,
+            total_cycles: 0,
+            cfu_cycles: 0,
+            cfu_stalls: 0,
+            loaded_bytes: 0,
+            latency: OnlineStats::new(),
+            latencies: Vec::with_capacity(n),
+            p50: 0.0,
+            p99: 0.0,
+            wall_seconds: 0.0,
+            cache_hit,
+            predictions: Vec::with_capacity(n),
+        };
+        for s in stats {
+            let s = s?;
+            report.completed += 1;
+            report.total_cycles += s.cycles;
+            report.cfu_cycles += s.cfu_cycles;
+            report.cfu_stalls += s.cfu_stalls;
+            report.loaded_bytes += s.loaded_bytes;
+            let seconds = s.cycles as f64 / self.opts.clock_hz as f64;
+            latency.push(seconds);
+            report.latencies.push(seconds);
+            report.predictions.push(s.pred);
+        }
+        report.latency = latency;
+        report.recompute_percentiles();
+        report.wall_seconds = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Serve a request stream as consecutive batches of `batch` requests
+    /// (the CLI `serve --batch N` path); later batches hit the
+    /// prepared-model cache.
+    pub fn run_stream(
+        &self,
+        spec: &BatchSpec,
+        requests: Vec<QTensor>,
+        batch: usize,
+    ) -> Result<BatchReport> {
+        let batch = batch.max(1);
+        let mut merged: Option<BatchReport> = None;
+        let mut rest = requests;
+        while !rest.is_empty() {
+            let tail = rest.split_off(rest.len().min(batch));
+            let head = std::mem::replace(&mut rest, tail);
+            let r = self.run_batch(spec, head)?;
+            match &mut merged {
+                Some(m) => m.absorb(&r),
+                None => merged = Some(r),
+            }
+        }
+        let mut merged = merged
+            .ok_or_else(|| crate::error::Error::Coordinator("empty request stream".into()))?;
+        // Percentiles once over the whole stream, not once per batch.
+        merged.recompute_percentiles();
+        Ok(merged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(design: DesignKind) -> BatchSpec {
+        BatchSpec { scale: 0.07, ..BatchSpec::new("dscnn", design) }
+    }
+
+    #[test]
+    fn batch_matches_sequential_engine() {
+        let spec = tiny_spec(DesignKind::Csa);
+        let reqs = BatchEngine::gen_requests("dscnn", 4, 11).unwrap();
+        let engine = BatchEngine::new(BatchOptions { threads: 3, ..Default::default() });
+        let report = engine.run_batch(&spec, reqs.clone()).unwrap();
+        assert_eq!(report.completed, 4);
+
+        // Reference: run the same prepared model sequentially.
+        let (prepared, _) = engine.prepared(&spec).unwrap();
+        let backend = crate::simulator::backend_for(DesignKind::Csa);
+        let mut cycles = 0u64;
+        for r in &reqs {
+            cycles += backend.execute(&prepared, r).unwrap().total_cycles;
+        }
+        assert_eq!(report.total_cycles, cycles);
+        assert!(report.cfu_cycles > 0);
+        assert!(report.loaded_bytes > 0);
+        assert!(report.p50 > 0.0 && report.p99 >= report.p50);
+    }
+
+    #[test]
+    fn stream_reuses_cache_across_batches() {
+        let spec = tiny_spec(DesignKind::Sssa);
+        let reqs = BatchEngine::gen_requests("dscnn", 6, 12).unwrap();
+        let engine = BatchEngine::new(BatchOptions { threads: 2, ..Default::default() });
+        let report = engine.run_stream(&spec, reqs, 2).unwrap();
+        assert_eq!(report.completed, 6);
+        assert_eq!(report.predictions.len(), 6);
+        // 3 batches: 1 miss then 2 hits.
+        assert_eq!(engine.cache().misses(), 1);
+        assert_eq!(engine.cache().hits(), 2);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let spec = tiny_spec(DesignKind::Ussa);
+        let reqs = BatchEngine::gen_requests("dscnn", 5, 13).unwrap();
+        let one = BatchEngine::new(BatchOptions { threads: 1, ..Default::default() });
+        let four = BatchEngine::new(BatchOptions { threads: 4, ..Default::default() });
+        let a = one.run_batch(&spec, reqs.clone()).unwrap();
+        let b = four.run_batch(&spec, reqs).unwrap();
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.predictions, b.predictions);
+        assert_eq!(a.cfu_stalls, b.cfu_stalls);
+    }
+}

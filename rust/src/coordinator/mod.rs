@@ -1,17 +1,22 @@
 //! L3 coordinator: the system glue that owns process lifecycle, worker
 //! threads, experiment orchestration, and the request-serving loop.
 //!
-//! - [`scheduler`] — a generic work-stealing-free threaded job pool
-//!   (std threads + channels; no tokio offline),
+//! - [`scheduler`] — a generic threaded job pool (std threads + channels;
+//!   no tokio offline), with per-item and chunked parallel map,
+//! - [`batch`] — engine v2: batched multi-design inference with a
+//!   prepared-model cache and aggregated per-batch reports,
 //! - [`runner`] — experiment orchestration: build model → prune → prepare
-//!   per design → simulate batch → collect speedups,
+//!   per design → simulate the batch at (design × request) granularity →
+//!   collect speedups,
 //! - [`serve`] — a closed-loop inference server over the cycle simulator
 //!   with latency/throughput metrics (simulated clock + host wall clock).
 
+pub mod batch;
 pub mod runner;
 pub mod scheduler;
 pub mod serve;
 
+pub use batch::{BatchEngine, BatchOptions, BatchReport, BatchSpec};
 pub use runner::{run_experiment, DesignResult, ExperimentResult};
 pub use scheduler::JobPool;
 pub use serve::{ServeMetrics, ServeOptions, Server};

@@ -1,4 +1,11 @@
 //! Experiment orchestration.
+//!
+//! Engine v2: the runner drives every design through the
+//! [`crate::simulator::ExecBackend`] trait and fans work out at
+//! *(design × request)* granularity — preparation happens once per design
+//! in parallel, then each inference is an independent job, so a batch
+//! keeps every worker busy even when fewer designs than threads are
+//! requested.
 
 use super::scheduler::JobPool;
 use crate::config::experiment::ExperimentConfig;
@@ -6,7 +13,7 @@ use crate::error::{Error, Result};
 use crate::isa::DesignKind;
 use crate::models::builder::{apply_sparsity, random_input, ModelConfig};
 use crate::models::zoo::build_model;
-use crate::simulator::{SimEngine, SimReport};
+use crate::simulator::{verified_backend_for, ExecBackend, PreparedModel, SimReport};
 use crate::util::Pcg32;
 use std::sync::Arc;
 
@@ -42,7 +49,7 @@ pub struct ExperimentResult {
 
 /// Run an experiment: build + prune the model, simulate the batch on
 /// every requested design (plus the two baselines for speedup
-/// denominators), in parallel across designs.
+/// denominators), in parallel across (design × request) jobs.
 pub fn run_experiment(cfg: &ExperimentConfig, model_cfg: &ModelConfig) -> Result<ExperimentResult> {
     cfg.validate()?;
     let mut info = build_model(&cfg.model, model_cfg)?;
@@ -93,23 +100,47 @@ pub fn run_experiment(cfg: &ExperimentConfig, model_cfg: &ModelConfig) -> Result
     let inputs = Arc::new(inputs);
     let verify = cfg.sim.verify;
     let pool = JobPool::new(cfg.sim.threads);
-    let results: Vec<Result<(DesignKind, u64, u64, Vec<SimReport>)>> =
-        pool.map(designs.clone(), move |design| {
-            let engine = SimEngine::new(design).with_verify(verify);
-            let prepared = engine.prepare(&graph)?;
-            let mut reports = Vec::with_capacity(inputs.len());
-            for input in inputs.iter() {
-                reports.push(engine.run(&prepared, input)?);
-            }
-            let total: u64 = reports.iter().map(|r| r.total_cycles).sum();
-            let mac: u64 = reports.iter().map(|r| r.mac_cycles).sum();
-            Ok((design, total, mac, reports))
-        });
 
-    let mut collected = Vec::new();
-    for r in results {
-        collected.push(r?);
+    // Phase 1: prepare once per design, in parallel.
+    let backends: Vec<Arc<dyn ExecBackend>> = designs
+        .iter()
+        .map(|&d| Arc::from(verified_backend_for(d, verify)))
+        .collect();
+    let prep_results: Vec<Result<PreparedModel>> = {
+        let graph = Arc::clone(&graph);
+        pool.map(backends.clone(), move |backend| backend.prepare(&graph))
+    };
+    let mut prepared: Vec<Arc<PreparedModel>> = Vec::with_capacity(designs.len());
+    for p in prep_results {
+        prepared.push(Arc::new(p?));
     }
+
+    // Phase 2: fan out (design, request) pairs.
+    let batch = inputs.len();
+    let pairs: Vec<(usize, usize)> =
+        (0..designs.len()).flat_map(|d| (0..batch).map(move |r| (d, r))).collect();
+    let backends = Arc::new(backends);
+    let prepared_shared = Arc::new(prepared);
+    let run_results: Vec<Result<SimReport>> = {
+        let backends = Arc::clone(&backends);
+        let prepared = Arc::clone(&prepared_shared);
+        let inputs = Arc::clone(&inputs);
+        pool.map(pairs, move |(d, r)| backends[d].execute(&prepared[d], &inputs[r]))
+    };
+
+    // Regroup per design, in request order (map preserves order).
+    let mut collected: Vec<(DesignKind, u64, u64, Vec<SimReport>)> = Vec::new();
+    let mut it = run_results.into_iter();
+    for &design in &designs {
+        let mut reports = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            reports.push(it.next().expect("report per pair")?);
+        }
+        let total: u64 = reports.iter().map(|rep| rep.total_cycles).sum();
+        let mac: u64 = reports.iter().map(|rep| rep.mac_cycles).sum();
+        collected.push((design, total, mac, reports));
+    }
+
     let base_simd = collected
         .iter()
         .find(|(d, ..)| *d == DesignKind::BaselineSimd)
@@ -192,5 +223,28 @@ mod tests {
         // With no zero blocks SSSA ≈ baseline (identical per-block cost).
         assert!(s.speedup_vs_simd <= 1.05, "{}", s.speedup_vs_simd);
         assert!(s.speedup_vs_simd > 0.9, "{}", s.speedup_vs_simd);
+    }
+
+    #[test]
+    fn pair_fanout_keeps_report_order_per_design() {
+        // batch > 1 and several designs: reports must stay grouped by
+        // design in request order (identical to a sequential run).
+        let mut cfg = tiny_cfg(vec![DesignKind::Csa, DesignKind::Ussa], 0.5, 0.3);
+        cfg.batch = 3;
+        cfg.sim.threads = 4;
+        cfg.sim.verify = false;
+        let par = run_experiment(&cfg, &tiny_model()).unwrap();
+        cfg.sim.threads = 1;
+        let seq = run_experiment(&cfg, &tiny_model()).unwrap();
+        assert_eq!(par.designs.len(), seq.designs.len());
+        for (a, b) in par.designs.iter().zip(&seq.designs) {
+            assert_eq!(a.design, b.design);
+            assert_eq!(a.total_cycles, b.total_cycles);
+            assert_eq!(a.reports.len(), 3);
+            for (ra, rb) in a.reports.iter().zip(&b.reports) {
+                assert_eq!(ra.total_cycles, rb.total_cycles);
+                assert_eq!(ra.output.data(), rb.output.data());
+            }
+        }
     }
 }

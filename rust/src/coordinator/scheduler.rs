@@ -88,6 +88,43 @@ impl JobPool {
         }
         results.into_iter().map(|r| r.unwrap()).collect()
     }
+
+    /// [`JobPool::map`] with `chunk` items per submitted job: one channel
+    /// round-trip per chunk instead of per item, which matters when the
+    /// per-item work is small (e.g. tiny-model inferences in a large
+    /// batch). Results preserve input order.
+    pub fn map_chunked<T, R, F>(&self, items: Vec<T>, chunk: usize, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let chunk = chunk.max(1);
+        let mut chunks: Vec<Vec<T>> = Vec::new();
+        let mut rest = items;
+        while !rest.is_empty() {
+            let tail = rest.split_off(rest.len().min(chunk));
+            chunks.push(std::mem::replace(&mut rest, tail));
+        }
+        let n = chunks.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, Vec<R>)>();
+        for (i, chunk_items) in chunks.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let rs: Vec<R> = chunk_items.into_iter().map(|it| f(it)).collect();
+                let _ = rtx.send((i, rs));
+            });
+        }
+        drop(rtx);
+        let mut results: Vec<Option<Vec<R>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, rs) = rrx.recv().expect("worker result");
+            results[i] = Some(rs);
+        }
+        results.into_iter().flat_map(|r| r.unwrap()).collect()
+    }
 }
 
 impl Drop for JobPool {
@@ -141,5 +178,19 @@ mod tests {
     fn zero_threads_uses_available_parallelism() {
         let pool = JobPool::new(0);
         assert!(pool.workers() >= 1);
+    }
+
+    #[test]
+    fn map_chunked_matches_map() {
+        let pool = JobPool::new(3);
+        let items: Vec<usize> = (0..50).collect();
+        let a = pool.map(items.clone(), |x| x * 3 + 1);
+        for chunk in [1usize, 4, 7, 50, 100] {
+            let b = pool.map_chunked(items.clone(), chunk, |x| x * 3 + 1);
+            assert_eq!(a, b, "chunk={chunk}");
+        }
+        // Empty input: no jobs, empty output.
+        let e: Vec<usize> = pool.map_chunked(Vec::<usize>::new(), 8, |x| x);
+        assert!(e.is_empty());
     }
 }

@@ -5,12 +5,17 @@
 //! *simulated device time* (cycles at the SoC clock) and host wall time.
 //! Demonstrates that the rust coordinator owns the request path end to
 //! end — Python never appears here.
+//!
+//! Since engine v2 the server drives the design through the
+//! [`crate::simulator::ExecBackend`] trait (the same substrate as
+//! [`super::batch::BatchEngine`]), so swapping the execution backend
+//! never touches the serving loop.
 
 use super::scheduler::JobPool;
 use crate::error::Result;
 use crate::isa::DesignKind;
 use crate::nn::graph::Graph;
-use crate::simulator::{PreparedModel, SimEngine};
+use crate::simulator::{verified_backend_for, ExecBackend, PreparedModel};
 use crate::tensor::QTensor;
 use crate::util::stats::{OnlineStats, Percentiles};
 use std::sync::{Arc, Mutex};
@@ -46,22 +51,35 @@ pub struct ServeMetrics {
     pub wall_seconds: f64,
     /// Total simulated cycles.
     pub total_cycles: u64,
+    /// CFU stall cycles over the batch (multi-cycle MAC waits).
+    pub cfu_stalls: u64,
+    /// Bytes loaded by the simulated kernels over the batch.
+    pub loaded_bytes: u64,
 }
 
 impl ServeMetrics {
     /// Simulated device throughput (inferences/sec at the SoC clock),
     /// assuming sequential execution on the single-core SoC.
     pub fn sim_throughput(&self) -> f64 {
-        if self.total_cycles == 0 {
+        let mean = self.sim_latency.mean();
+        if mean <= 0.0 {
             return 0.0;
         }
-        self.completed as f64 / self.sim_latency.mean() / self.completed as f64
+        1.0 / mean
+    }
+
+    /// Host-side throughput (inferences per wall second).
+    pub fn host_throughput(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.wall_seconds
     }
 }
 
 /// An inference server bound to one design.
 pub struct Server {
-    engine: SimEngine,
+    backend: Arc<dyn ExecBackend>,
     prepared: Arc<PreparedModel>,
     pool: JobPool,
     clock_hz: u64,
@@ -70,32 +88,39 @@ pub struct Server {
 impl Server {
     /// Prepare a model for serving.
     pub fn new(graph: &Graph, design: DesignKind, opts: &ServeOptions) -> Result<Self> {
-        let engine = SimEngine::new(design).with_verify(opts.verify);
-        let prepared = Arc::new(engine.prepare(graph)?);
-        Ok(Server { engine, prepared, pool: JobPool::new(opts.threads), clock_hz: opts.clock_hz })
+        let backend: Arc<dyn ExecBackend> = Arc::from(verified_backend_for(design, opts.verify));
+        let prepared = Arc::new(backend.prepare(graph)?);
+        Ok(Server {
+            backend,
+            prepared,
+            pool: JobPool::new(opts.threads),
+            clock_hz: opts.clock_hz,
+        })
     }
 
     /// Design served.
     pub fn design(&self) -> DesignKind {
-        self.engine.design
+        self.backend.design()
     }
 
     /// Serve a batch of requests; returns per-request predicted classes
     /// and aggregate metrics.
     pub fn serve_batch(&self, requests: Vec<QTensor>) -> Result<(Vec<usize>, ServeMetrics)> {
         let t0 = Instant::now();
-        let engine = self.engine.clone();
+        let backend = Arc::clone(&self.backend);
         let prepared = Arc::clone(&self.prepared);
         let classes = self.prepared.classes;
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let clock = self.clock_hz;
         let m2 = Arc::clone(&metrics);
         let outputs: Vec<Result<usize>> = self.pool.map(requests, move |req| {
-            let report = engine.run(&prepared, &req)?;
+            let report = backend.execute(&prepared, &req)?;
             let pred = crate::nn::activation::argmax(&report.output, classes)?[0];
             let mut m = m2.lock().unwrap();
             m.completed += 1;
             m.total_cycles += report.total_cycles;
+            m.cfu_stalls += report.cfu_stalls();
+            m.loaded_bytes += report.loaded_bytes();
             let lat = report.seconds_at(clock);
             m.sim_latency.push(lat);
             m.sim_percentiles.push(lat);
@@ -141,8 +166,11 @@ mod tests {
         assert!(preds.iter().all(|&p| p < 12));
         assert_eq!(metrics.completed, 6);
         assert!(metrics.total_cycles > 0);
+        assert!(metrics.loaded_bytes > 0);
         assert!(metrics.sim_latency.mean() > 0.0);
         assert!(metrics.wall_seconds > 0.0);
+        assert!(metrics.sim_throughput() > 0.0);
+        assert!(metrics.host_throughput() > 0.0);
     }
 
     #[test]
@@ -159,6 +187,7 @@ mod tests {
         for design in [DesignKind::BaselineSimd, DesignKind::Ussa, DesignKind::Csa] {
             let server =
                 Server::new(&info.graph, design, &ServeOptions::default()).unwrap();
+            assert_eq!(server.design(), design);
             let (preds, _) = server.serve_batch(reqs.clone()).unwrap();
             all_preds.push(preds);
         }

@@ -1,51 +1,78 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror` in the offline
+//! build environment); the rendered messages are part of the CLI
+//! contract and are asserted by the end-to-end tests.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the sparse-riscv library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Tensor shape mismatch or invalid dimension.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Quantization parameter or range violation.
-    #[error("quantization error: {0}")]
     Quant(String),
 
     /// Lookahead encoding violation (e.g. weight outside INT7 range).
-    #[error("encoding error: {0}")]
     Encoding(String),
 
     /// Configuration parse or validation failure.
-    #[error("config error: {0}")]
     Config(String),
 
     /// CLI argument error.
-    #[error("cli error: {0}")]
     Cli(String),
 
     /// Model definition / graph construction error.
-    #[error("model error: {0}")]
     Model(String),
 
     /// Simulator invariant violation.
-    #[error("simulation error: {0}")]
     Sim(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator scheduling failure.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Quant(m) => write!(f, "quantization error: {m}"),
+            Error::Encoding(m) => write!(f, "encoding error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Cli(m) => write!(f, "cli error: {m}"),
+            Error::Model(m) => write!(f, "model error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla-client")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
@@ -54,3 +81,24 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_are_stable() {
+        assert_eq!(Error::Shape("x".into()).to_string(), "shape error: x");
+        assert_eq!(Error::Cli("bad flag".into()).to_string(), "cli error: bad flag");
+        assert_eq!(Error::Config("x_us".into()).to_string(), "config error: x_us");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&Error::Sim("s".into())).is_none());
+    }
+}

@@ -49,16 +49,18 @@ pub fn prepare_lanes(weights: &[i8], lane_len: usize, design: DesignKind) -> Res
     }
     let lanes = weights.len() / lane_len;
     let blocks_per_lane = lane_len / 4;
-    let (buf, clamped) = if design.uses_lookahead_encoding() {
+    // Prepare-path allocation: encode_lanes already copies, so the
+    // clamped buffer itself becomes `effective_weights` (no third copy —
+    // this runs once per cached prepared model, but large models encode
+    // hundreds of layers).
+    let (buf, clamped, effective_weights) = if design.uses_lookahead_encoding() {
         let mut ws = weights.to_vec();
         let clamped = clamp_slice_int7(&mut ws);
-        let effective = ws.clone();
         let enc = encode_lanes(&ws, lane_len)?;
-        (enc.encoded, (clamped, effective))
+        (enc.encoded, clamped, ws)
     } else {
-        (weights.to_vec(), (0, weights.to_vec()))
+        (weights.to_vec(), 0, weights.to_vec())
     };
-    let (clamped, effective_weights) = clamped;
     let words = buf
         .chunks(4)
         .map(|b| pack4_i8(&[b[0], b[1], b[2], b[3]]))

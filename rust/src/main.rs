@@ -2,13 +2,14 @@
 //! serve inference, estimate resources.
 
 use sparse_riscv::analysis::report::{f2, pct, Table};
+use sparse_riscv::bench::e2e::{render as render_e2e, run_e2e, E2eConfig};
 use sparse_riscv::cli::{ArgSpec, Command, ParsedArgs};
 use sparse_riscv::config::experiment::{ExperimentConfig, SimOptions};
+use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
 use sparse_riscv::coordinator::runner::run_experiment;
-use sparse_riscv::coordinator::serve::{ServeOptions, Server};
 use sparse_riscv::encoding::lookahead::encode_lanes;
 use sparse_riscv::isa::DesignKind;
-use sparse_riscv::models::builder::{apply_sparsity, random_input, ModelConfig};
+use sparse_riscv::models::builder::ModelConfig;
 use sparse_riscv::models::zoo::{build_model, model_names};
 use sparse_riscv::resources::fpga::{estimate_cfu, paper_increment, BASELINE_SOC};
 use sparse_riscv::sparsity::generator::gen_combined_sparse;
@@ -30,15 +31,31 @@ fn cli() -> Command {
                 .arg(ArgSpec::opt("config", "", "JSON experiment config file (overrides flags)")),
         )
         .subcommand(
-            Command::new("serve", "serve a batch of inference requests")
+            Command::new("serve", "serve a stream of inference requests in batches")
                 .arg(ArgSpec::opt("model", "dscnn", "model name"))
                 .arg(ArgSpec::opt("design", "csa", "accelerator design"))
                 .arg(ArgSpec::opt("requests", "16", "number of requests"))
+                .arg(ArgSpec::opt("batch", "8", "requests scheduled per batch"))
                 .arg(ArgSpec::opt("x-us", "0.5", "unstructured sparsity"))
                 .arg(ArgSpec::opt("x-ss", "0.3", "block sparsity"))
                 .arg(ArgSpec::opt("scale", "0.125", "model width multiplier"))
                 .arg(ArgSpec::opt("threads", "0", "worker threads"))
                 .arg(ArgSpec::opt("seed", "42", "rng seed")),
+        )
+        .subcommand(
+            Command::new("bench-e2e", "batched end-to-end throughput across the model zoo")
+                .arg(ArgSpec::opt(
+                    "models",
+                    "dscnn,resnet56,mobilenetv2,vgg16",
+                    "comma-separated zoo models",
+                ))
+                .arg(ArgSpec::opt("designs", "simd,sssa,ussa,csa", "comma-separated designs"))
+                .arg(ArgSpec::opt("batch", "8", "requests per batch"))
+                .arg(ArgSpec::opt("threads", "0", "multi-threaded side workers (0=auto)"))
+                .arg(ArgSpec::opt("scale", "0.1", "model width multiplier"))
+                .arg(ArgSpec::opt("x-us", "0.5", "unstructured sparsity"))
+                .arg(ArgSpec::opt("x-ss", "0.3", "block sparsity"))
+                .arg(ArgSpec::opt("seed", "42", "request rng seed")),
         )
         .subcommand(
             Command::new("encode", "demonstrate the lookahead encoding on synthetic weights")
@@ -113,41 +130,85 @@ fn cmd_experiment(args: &ParsedArgs) -> sparse_riscv::Result<()> {
 fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     let design = DesignKind::parse(args.get("design")?)
         .ok_or_else(|| sparse_riscv::Error::Cli("unknown design".into()))?;
-    let model_cfg = ModelConfig { scale: args.get_f64("scale")?, ..Default::default() };
-    let mut info = build_model(args.get("model")?, &model_cfg)?;
-    apply_sparsity(&mut info.graph, args.get_f64("x-us")?, args.get_f64("x-ss")?);
-    let server = Server::new(
-        &info.graph,
-        design,
-        &ServeOptions {
-            threads: args.get_usize("threads")?,
-            clock_hz: 100_000_000,
-            verify: false,
-        },
-    )?;
-    let mut rng = Pcg32::new(args.get_u64("seed")?);
-    let reqs: Vec<_> = (0..args.get_usize("requests")?)
-        .map(|_| random_input(info.input_shape.clone(), model_cfg.act_params(), &mut rng))
-        .collect();
-    let n = reqs.len();
-    let (preds, mut metrics) = server.serve_batch(reqs)?;
-    println!("served {n} requests on {design}");
+    let model = args.get("model")?.to_string();
+    let batch = args.get_usize("batch")?.max(1);
+    let spec = BatchSpec {
+        x_us: args.get_f64("x-us")?,
+        x_ss: args.get_f64("x-ss")?,
+        scale: args.get_f64("scale")?,
+        ..BatchSpec::new(&model, design)
+    };
+    let engine = BatchEngine::new(BatchOptions {
+        threads: args.get_usize("threads")?,
+        clock_hz: 100_000_000,
+        verify: false,
+    });
+    let n = args.get_usize("requests")?;
+    let reqs = BatchEngine::gen_requests(&model, n, args.get_u64("seed")?)?;
+    let report = engine.run_stream(&spec, reqs, batch)?;
+    println!(
+        "served {} requests on {design} in batches of {batch} across {} workers \
+         (prepared-model cache: {} build, {} hits)",
+        report.completed,
+        engine.workers(),
+        engine.cache().misses(),
+        engine.cache().hits(),
+    );
     println!(
         "simulated latency: mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms (at 100 MHz)",
-        metrics.sim_latency.mean() * 1e3,
-        metrics.sim_percentiles.percentile(50.0) * 1e3,
-        metrics.sim_percentiles.percentile(99.0) * 1e3,
+        report.latency.mean() * 1e3,
+        report.p50 * 1e3,
+        report.p99 * 1e3,
     );
     println!(
-        "total simulated cycles: {}   host wall: {:.3} s",
-        metrics.total_cycles, metrics.wall_seconds
+        "total simulated cycles: {}   cfu stalls: {}   loaded: {:.2} MB   host wall: {:.3} s",
+        report.total_cycles,
+        report.cfu_stalls,
+        report.loaded_bytes as f64 / 1e6,
+        report.wall_seconds
+    );
+    println!(
+        "throughput: host {} inf/s   simulated device {} inf/s",
+        f2(report.host_throughput()),
+        f2(report.sim_throughput(100_000_000)),
     );
     let hist: std::collections::BTreeMap<usize, usize> =
-        preds.iter().fold(Default::default(), |mut m, &p| {
+        report.predictions.iter().fold(Default::default(), |mut m, &p| {
             *m.entry(p).or_default() += 1;
             m
         });
     println!("prediction histogram: {hist:?}");
+    Ok(())
+}
+
+fn cmd_bench_e2e(args: &ParsedArgs) -> sparse_riscv::Result<()> {
+    let designs = args
+        .get_list("designs")?
+        .iter()
+        .map(|s| {
+            DesignKind::parse(s)
+                .ok_or_else(|| sparse_riscv::Error::Cli(format!("unknown design '{s}'")))
+        })
+        .collect::<sparse_riscv::Result<Vec<_>>>()?;
+    let cfg = E2eConfig {
+        models: args.get_list("models")?,
+        designs,
+        batch: args.get_usize("batch")?.max(1),
+        threads: args.get_usize("threads")?,
+        scale: args.get_f64("scale")?,
+        x_us: args.get_f64("x-us")?,
+        x_ss: args.get_f64("x-ss")?,
+        seed: args.get_u64("seed")?,
+        clock_hz: 100_000_000,
+    };
+    if cfg.models.is_empty() {
+        return Err(sparse_riscv::Error::Cli("at least one model required".into()));
+    }
+    if cfg.designs.is_empty() {
+        return Err(sparse_riscv::Error::Cli("at least one design required".into()));
+    }
+    let summary = run_e2e(&cfg)?;
+    print!("{}", render_e2e(&cfg, &summary));
     Ok(())
 }
 
@@ -240,6 +301,7 @@ fn main() {
     let result = match parsed.subcommand() {
         "experiment" => cmd_experiment(&parsed),
         "serve" => cmd_serve(&parsed),
+        "bench-e2e" => cmd_bench_e2e(&parsed),
         "encode" => cmd_encode(&parsed),
         "resources" => {
             cmd_resources();

@@ -22,6 +22,22 @@ pub fn model_names() -> [&'static str; 4] {
     ["vgg16", "resnet56", "mobilenetv2", "dscnn"]
 }
 
+/// Canonical input shape for a model name, without constructing the
+/// graph (the shape is scale-invariant; used by the batch engine to
+/// synthesize requests before any prepared model exists).
+pub fn input_shape(name: &str) -> Result<Shape> {
+    match name.to_ascii_lowercase().as_str() {
+        "vgg16" => Ok(vgg::input_shape()),
+        "resnet56" => Ok(resnet::input_shape()),
+        "mobilenetv2" => Ok(mobilenet::input_shape()),
+        "dscnn" => Ok(dscnn::input_shape()),
+        other => Err(Error::Model(format!(
+            "unknown model '{other}' (expected one of {:?})",
+            model_names()
+        ))),
+    }
+}
+
 /// Build a model by name.
 pub fn build_model(name: &str, cfg: &ModelConfig) -> Result<ModelInfo> {
     match name.to_ascii_lowercase().as_str() {

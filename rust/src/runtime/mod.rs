@@ -5,6 +5,8 @@
 //! time; [`pjrt`] loads that text through the `xla` crate
 //! (`HloModuleProto::from_text_file` → `XlaComputation` → PJRT CPU
 //! client) and executes it from Rust. Python never runs at request time.
+//! The real client requires the `xla-client` cargo feature; the default
+//! (offline) build substitutes an API-compatible stub.
 //!
 //! [`model_io`] imports the quantized weights exported by
 //! `python/compile/train.py` (JSON) and reconstructs the same network as

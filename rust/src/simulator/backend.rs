@@ -1,0 +1,234 @@
+//! Engine v2 substrate: the [`ExecBackend`] trait unifying the accelerator
+//! designs behind one execution interface, plus a concurrent
+//! prepared-model cache.
+//!
+//! The paper's flow prepares a model *once* per design (INT7 clamp +
+//! lookahead encode + word packing — "bitstream build time") and then
+//! serves many inferences against the prepared form. Engine v2 makes that
+//! explicit at the system level:
+//!
+//! - [`ExecBackend`] is the design-agnostic contract (`prepare` once,
+//!   `execute` many) that the batch engine, the experiment runner and the
+//!   server all drive. [`crate::simulator::SimEngine`] is the cycle-model
+//!   implementation; future backends (e.g. a host-native fast-math path
+//!   or an RTL co-simulation bridge) plug in here without touching the
+//!   coordinator.
+//! - [`PreparedCache`] memoizes prepared models keyed by
+//!   [`ModelKey`] — (model, design, sparsity config, scale, weight seed) —
+//!   so repeated batches, sweeps and multi-design comparisons pay the
+//!   (deterministic) build + encode cost once per configuration.
+
+use crate::error::Result;
+use crate::isa::DesignKind;
+use crate::nn::graph::Graph;
+use crate::simulator::{PreparedModel, SimEngine, SimReport};
+use crate::tensor::QTensor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A design-agnostic execution backend: prepare a model once, execute
+/// many inferences against the prepared form.
+pub trait ExecBackend: Send + Sync {
+    /// The accelerator design this backend simulates.
+    fn design(&self) -> DesignKind;
+
+    /// Offline preparation (weight packing / lookahead encoding). Not
+    /// charged to inference cycles.
+    fn prepare(&self, graph: &Graph) -> Result<PreparedModel>;
+
+    /// Run one inference against a prepared model.
+    fn execute(&self, model: &PreparedModel, input: &QTensor) -> Result<SimReport>;
+}
+
+impl ExecBackend for SimEngine {
+    fn design(&self) -> DesignKind {
+        self.design
+    }
+
+    fn prepare(&self, graph: &Graph) -> Result<PreparedModel> {
+        SimEngine::prepare(self, graph)
+    }
+
+    fn execute(&self, model: &PreparedModel, input: &QTensor) -> Result<SimReport> {
+        SimEngine::run(self, model, input)
+    }
+}
+
+/// Build the default (cycle-model) backend for a design.
+pub fn backend_for(design: DesignKind) -> Box<dyn ExecBackend> {
+    Box::new(SimEngine::new(design))
+}
+
+/// [`backend_for`] with bit-exact verification against the reference ops.
+pub fn verified_backend_for(design: DesignKind, verify: bool) -> Box<dyn ExecBackend> {
+    Box::new(SimEngine::new(design).with_verify(verify))
+}
+
+/// Cache key identifying one prepared model. Sparsity ratios and the
+/// width multiplier are keyed by their IEEE-754 bit patterns: model
+/// construction and magnitude pruning are fully deterministic in these
+/// parameters, so bit-equal inputs produce bit-equal prepared models.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelKey {
+    /// Model zoo identifier.
+    pub model: String,
+    /// Accelerator design the weights are packed for.
+    pub design: DesignKind,
+    /// `f64::to_bits` of the unstructured sparsity ratio.
+    pub x_us_bits: u64,
+    /// `f64::to_bits` of the 4:4 block sparsity ratio.
+    pub x_ss_bits: u64,
+    /// `f64::to_bits` of the width multiplier.
+    pub scale_bits: u64,
+    /// Weight RNG seed.
+    pub weight_seed: u64,
+}
+
+impl ModelKey {
+    /// Key a configuration.
+    pub fn new(
+        model: &str,
+        design: DesignKind,
+        x_us: f64,
+        x_ss: f64,
+        scale: f64,
+        weight_seed: u64,
+    ) -> Self {
+        ModelKey {
+            model: model.to_string(),
+            design,
+            x_us_bits: x_us.to_bits(),
+            x_ss_bits: x_ss.to_bits(),
+            scale_bits: scale.to_bits(),
+            weight_seed,
+        }
+    }
+}
+
+/// Thread-safe memoization of prepared models.
+///
+/// The build closure runs *outside* the lock so distinct configurations
+/// prepare concurrently on the worker pool; a lost race simply discards
+/// the duplicate (prepared models are deterministic, so either copy is
+/// correct).
+#[derive(Default)]
+pub struct PreparedCache {
+    map: Mutex<HashMap<ModelKey, Arc<PreparedModel>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PreparedCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        PreparedCache::default()
+    }
+
+    /// Look up `key`, building (and inserting) the prepared model on a
+    /// miss. Returns the shared model plus whether this call hit.
+    pub fn get_or_prepare<F>(&self, key: &ModelKey, build: F) -> Result<(Arc<PreparedModel>, bool)>
+    where
+        F: FnOnce() -> Result<PreparedModel>,
+    {
+        if let Some(found) = self.map.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((Arc::clone(found), true));
+        }
+        // Build without holding the lock (encoding a large model is the
+        // expensive part; concurrent misses on different keys must not
+        // serialize).
+        let built = Arc::new(build()?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        let entry = map.entry(key.clone()).or_insert_with(|| Arc::clone(&built));
+        Ok((Arc::clone(entry), false))
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (i.e. prepared-model builds) so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached prepared models.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached model (e.g. between sweeps over different
+    /// weight seeds).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builder::{apply_sparsity, ModelConfig};
+    use crate::models::zoo::build_model;
+
+    fn tiny_graph() -> Graph {
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let mut info = build_model("dscnn", &cfg).unwrap();
+        apply_sparsity(&mut info.graph, 0.5, 0.3);
+        info.graph
+    }
+
+    #[test]
+    fn backend_trait_matches_engine() {
+        let graph = tiny_graph();
+        let backend = backend_for(DesignKind::Csa);
+        assert_eq!(backend.design(), DesignKind::Csa);
+        let prepared = backend.prepare(&graph).unwrap();
+        let engine = SimEngine::new(DesignKind::Csa);
+        let direct = engine.prepare(&graph).unwrap();
+        let mut rng = crate::util::Pcg32::new(4);
+        let input = crate::models::builder::random_input(
+            crate::models::zoo::input_shape("dscnn").unwrap(),
+            crate::tensor::quant::QuantParams::new(0.05, 0).unwrap(),
+            &mut rng,
+        );
+        let a = backend.execute(&prepared, &input).unwrap();
+        let b = engine.run(&direct, &input).unwrap();
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.output.data(), b.output.data());
+    }
+
+    #[test]
+    fn cache_hits_after_first_prepare() {
+        let graph = tiny_graph();
+        let cache = PreparedCache::new();
+        let key = ModelKey::new("dscnn", DesignKind::Csa, 0.5, 0.3, 0.07, 0x5EED);
+        let backend = backend_for(DesignKind::Csa);
+        let (_, hit0) = cache.get_or_prepare(&key, || backend.prepare(&graph)).unwrap();
+        let (_, hit1) = cache.get_or_prepare(&key, || backend.prepare(&graph)).unwrap();
+        assert!(!hit0);
+        assert!(hit1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn distinct_designs_are_distinct_keys() {
+        let a = ModelKey::new("dscnn", DesignKind::Csa, 0.5, 0.3, 0.25, 1);
+        let b = ModelKey::new("dscnn", DesignKind::Ussa, 0.5, 0.3, 0.25, 1);
+        let c = ModelKey::new("dscnn", DesignKind::Csa, 0.5, 0.3, 0.25, 2);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, a.clone());
+    }
+}

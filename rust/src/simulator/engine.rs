@@ -50,6 +50,16 @@ impl SimReport {
     pub fn seconds_at(&self, clock_hz: u64) -> f64 {
         self.total_cycles as f64 / clock_hz as f64
     }
+
+    /// CFU stall cycles of this inference (multi-cycle MAC waits).
+    pub fn cfu_stalls(&self) -> u64 {
+        self.counter.cfu_stalls()
+    }
+
+    /// Bytes loaded by the simulated kernels.
+    pub fn loaded_bytes(&self) -> u64 {
+        self.counter.loaded_bytes()
+    }
 }
 
 /// A prepared layer: weights packed for the target design.

@@ -7,6 +7,12 @@
 //! accounting; cheap layers (pooling, ReLU, residual add) are charged
 //! per-element software costs identical across designs.
 
+//! Engine v2 ([`backend`]) layers a design-agnostic [`backend::ExecBackend`]
+//! trait and a prepared-model cache on top, so the coordinator can batch
+//! inferences across designs and models without re-preparing weights.
+
+pub mod backend;
 pub mod engine;
 
+pub use backend::{backend_for, verified_backend_for, ExecBackend, ModelKey, PreparedCache};
 pub use engine::{LayerStats, PreparedModel, SimEngine, SimReport};

@@ -1,54 +1,106 @@
-//! Minimal `log` facade backend (no `env_logger` offline).
+//! Minimal stderr logger (no `log`/`env_logger`/`once_cell` offline).
 //!
 //! Writes `LEVEL target: message` lines to stderr; level filtered by the
 //! `SPARSE_RISCV_LOG` environment variable (error|warn|info|debug|trace,
-//! default info).
+//! default info). The filter is latched on first use so logging is cheap
+//! and race-free across worker threads.
 
-use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::OnceCell;
+use std::sync::OnceLock;
 
-struct StderrLogger {
-    max: Level,
+/// Log severity, most severe first (derived `Ord`: `Error < Trace`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or surprising failures.
+    Error,
+    /// Suspicious but non-fatal conditions.
+    Warn,
+    /// High-level progress (default).
+    Info,
+    /// Detailed diagnostics.
+    Debug,
+    /// Firehose.
+    Trace,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.max
-    }
-
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            eprintln!("{:5} {}: {}", record.level(), record.target(), record.args());
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
     }
-
-    fn flush(&self) {}
 }
 
-static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+static MAX_LEVEL: OnceLock<Level> = OnceLock::new();
 
-/// Install the stderr logger. Idempotent; safe to call from every
-/// binary/test entry point.
-pub fn init() {
-    let level = match std::env::var("SPARSE_RISCV_LOG").as_deref() {
+fn level_from_env() -> Level {
+    match std::env::var("SPARSE_RISCV_LOG").as_deref() {
         Ok("error") => Level::Error,
         Ok("warn") => Level::Warn,
         Ok("debug") => Level::Debug,
         Ok("trace") => Level::Trace,
         _ => Level::Info,
-    };
-    let logger = LOGGER.get_or_init(|| StderrLogger { max: level });
-    // set_logger fails if already set — that's fine (tests call init many times).
-    let _ = log::set_logger(logger);
-    log::set_max_level(LevelFilter::Trace);
+    }
+}
+
+/// Install the stderr logger. Idempotent; safe to call from every
+/// binary/test entry point. (Without an explicit call, the first log
+/// statement latches the level lazily.)
+pub fn init() {
+    let _ = MAX_LEVEL.set(level_from_env());
+}
+
+/// Is a message at `level` currently emitted?
+pub fn enabled(level: Level) -> bool {
+    level <= *MAX_LEVEL.get_or_init(level_from_env)
+}
+
+/// Emit one log line (filtered by the latched level).
+pub fn log(level: Level, target: &str, msg: &str) {
+    if enabled(level) {
+        eprintln!("{:5} {}: {}", level.label(), target, msg);
+    }
+}
+
+/// `error`-level shortcut.
+pub fn error(target: &str, msg: &str) {
+    log(Level::Error, target, msg);
+}
+
+/// `warn`-level shortcut.
+pub fn warn(target: &str, msg: &str) {
+    log(Level::Warn, target, msg);
+}
+
+/// `info`-level shortcut.
+pub fn info(target: &str, msg: &str) {
+    log(Level::Info, target, msg);
+}
+
+/// `debug`-level shortcut.
+pub fn debug(target: &str, msg: &str) {
+    log(Level::Debug, target, msg);
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging smoke test");
+        init();
+        init();
+        info("logging", "smoke test");
+    }
+
+    #[test]
+    fn severity_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+        // Error is always emitted regardless of the latched filter.
+        assert!(enabled(Level::Error));
     }
 }

@@ -1,0 +1,143 @@
+//! Integration tests for engine v2: the batched multi-design inference
+//! path (ExecBackend + prepared-model cache + JobPool scheduling) across
+//! the model zoo.
+
+use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::models::zoo::model_names;
+use sparse_riscv::simulator::{backend_for, ModelKey, PreparedCache};
+
+fn tiny(model: &str, design: DesignKind) -> BatchSpec {
+    BatchSpec { scale: 0.07, ..BatchSpec::new(model, design) }
+}
+
+#[test]
+fn dscnn_batch8_under_every_design() {
+    // The acceptance floor: batch ≥ 8 scheduled across workers, for all
+    // four accelerator designs plus the sequential baseline, with
+    // identical predictions everywhere (INT7 weights ⇒ design-invariant
+    // arithmetic).
+    let engine = BatchEngine::new(BatchOptions { threads: 4, ..Default::default() });
+    let reqs = BatchEngine::gen_requests("dscnn", 8, 21).unwrap();
+    let mut all_preds = Vec::new();
+    for design in DesignKind::ALL {
+        let report = engine.run_batch(&tiny("dscnn", design), reqs.clone()).unwrap();
+        assert_eq!(report.completed, 8, "{design}");
+        assert_eq!(report.design, design);
+        assert!(report.total_cycles > 0);
+        assert!(report.cfu_cycles > 0 && report.cfu_cycles < report.total_cycles);
+        assert!(report.loaded_bytes > 0);
+        assert!(report.latency.count() == 8);
+        assert!(report.p50 > 0.0 && report.p99 >= report.p50);
+        all_preds.push(report.predictions);
+    }
+    for preds in &all_preds[1..] {
+        assert_eq!(preds, &all_preds[0], "predictions must be design-invariant");
+    }
+    // One prepared model per design, never rebuilt.
+    assert_eq!(engine.cache().misses(), DesignKind::ALL.len() as u64);
+    assert_eq!(engine.cache().len(), DesignKind::ALL.len());
+}
+
+#[test]
+fn sparser_models_cost_fewer_cycles_on_csa() {
+    let engine = BatchEngine::new(BatchOptions { threads: 2, ..Default::default() });
+    let reqs = BatchEngine::gen_requests("dscnn", 2, 22).unwrap();
+    let dense = BatchSpec { x_us: 0.0, x_ss: 0.0, ..tiny("dscnn", DesignKind::Csa) };
+    let sparse = BatchSpec { x_us: 0.7, x_ss: 0.5, ..tiny("dscnn", DesignKind::Csa) };
+    let d = engine.run_batch(&dense, reqs.clone()).unwrap();
+    let s = engine.run_batch(&sparse, reqs).unwrap();
+    assert!(
+        s.total_cycles < d.total_cycles,
+        "sparse {} vs dense {}",
+        s.total_cycles,
+        d.total_cycles
+    );
+    // Distinct sparsity configs are distinct cache entries.
+    assert_eq!(engine.cache().len(), 2);
+}
+
+#[test]
+fn every_zoo_model_runs_batched_on_csa() {
+    // Coverage across the whole zoo (kept to small batches: `cargo test`
+    // runs unoptimized, and mobilenetv2's 96×96 input dominates).
+    let engine = BatchEngine::new(BatchOptions { threads: 0, ..Default::default() });
+    for model in model_names() {
+        let batch = if model == "dscnn" { 4 } else { 1 };
+        let reqs = BatchEngine::gen_requests(model, batch, 23).unwrap();
+        let report = engine.run_batch(&tiny(model, DesignKind::Csa), reqs).unwrap();
+        assert_eq!(report.completed, batch as u64, "{model}");
+        assert!(report.total_cycles > 0, "{model}");
+        assert!(!report.cache_hit, "first batch must build {model}");
+    }
+    assert_eq!(engine.cache().misses(), model_names().len() as u64);
+}
+
+#[test]
+fn stream_totals_equal_one_big_batch() {
+    let spec = tiny("dscnn", DesignKind::Ussa);
+    let reqs = BatchEngine::gen_requests("dscnn", 7, 24).unwrap();
+    let engine = BatchEngine::new(BatchOptions { threads: 2, ..Default::default() });
+    let whole = engine.run_batch(&spec, reqs.clone()).unwrap();
+    let streamed = engine.run_stream(&spec, reqs, 3).unwrap();
+    assert_eq!(streamed.completed, whole.completed);
+    assert_eq!(streamed.total_cycles, whole.total_cycles);
+    assert_eq!(streamed.cfu_cycles, whole.cfu_cycles);
+    assert_eq!(streamed.predictions, whole.predictions);
+    assert!((streamed.latency.mean() - whole.latency.mean()).abs() < 1e-15);
+    // Percentiles recompute over the concatenated samples, so streaming
+    // must report exactly the same p50/p99 as one big batch.
+    assert_eq!(streamed.latencies.len(), whole.latencies.len());
+    assert_eq!(streamed.p50, whole.p50);
+    assert_eq!(streamed.p99, whole.p99);
+}
+
+#[test]
+fn shared_cache_across_engines() {
+    // The bench sweep shares one cache between a 1-thread and an N-thread
+    // engine; the second engine must hit every time.
+    let cache = std::sync::Arc::new(PreparedCache::new());
+    let spec = tiny("dscnn", DesignKind::Sssa);
+    let reqs = BatchEngine::gen_requests("dscnn", 3, 25).unwrap();
+    let a = BatchEngine::with_cache(
+        BatchOptions { threads: 1, ..Default::default() },
+        std::sync::Arc::clone(&cache),
+    );
+    let b = BatchEngine::with_cache(
+        BatchOptions { threads: 3, ..Default::default() },
+        std::sync::Arc::clone(&cache),
+    );
+    let ra = a.run_batch(&spec, reqs.clone()).unwrap();
+    let rb = b.run_batch(&spec, reqs).unwrap();
+    assert!(!ra.cache_hit);
+    assert!(rb.cache_hit);
+    assert_eq!(ra.total_cycles, rb.total_cycles);
+    assert_eq!(cache.misses(), 1);
+    assert_eq!(cache.hits(), 1);
+}
+
+#[test]
+fn backend_rejects_mismatched_prepared_model() {
+    // The ExecBackend contract: a model prepared for one design cannot be
+    // executed by another.
+    let cfg = sparse_riscv::models::builder::ModelConfig { scale: 0.07, ..Default::default() };
+    let info = sparse_riscv::models::zoo::build_model("dscnn", &cfg).unwrap();
+    let csa = backend_for(DesignKind::Csa);
+    let ussa = backend_for(DesignKind::Ussa);
+    let prepared = csa.prepare(&info.graph).unwrap();
+    let reqs = BatchEngine::gen_requests("dscnn", 1, 26).unwrap();
+    assert!(ussa.execute(&prepared, &reqs[0]).is_err());
+    assert!(csa.execute(&prepared, &reqs[0]).is_ok());
+}
+
+#[test]
+fn model_keys_discriminate_every_field() {
+    let base = ModelKey::new("dscnn", DesignKind::Csa, 0.5, 0.3, 0.125, 1);
+    assert_ne!(base, ModelKey::new("vgg16", DesignKind::Csa, 0.5, 0.3, 0.125, 1));
+    assert_ne!(base, ModelKey::new("dscnn", DesignKind::Sssa, 0.5, 0.3, 0.125, 1));
+    assert_ne!(base, ModelKey::new("dscnn", DesignKind::Csa, 0.6, 0.3, 0.125, 1));
+    assert_ne!(base, ModelKey::new("dscnn", DesignKind::Csa, 0.5, 0.4, 0.125, 1));
+    assert_ne!(base, ModelKey::new("dscnn", DesignKind::Csa, 0.5, 0.3, 0.25, 1));
+    assert_ne!(base, ModelKey::new("dscnn", DesignKind::Csa, 0.5, 0.3, 0.125, 2));
+    assert_eq!(base, ModelKey::new("dscnn", DesignKind::Csa, 0.5, 0.3, 0.125, 1));
+}

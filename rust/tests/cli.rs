@@ -19,7 +19,7 @@ fn run(args: &[&str]) -> (bool, String, String) {
 fn help_lists_subcommands() {
     let (ok, stdout, _) = run(&["--help"]);
     assert!(ok);
-    for sub in ["experiment", "serve", "encode", "resources", "models"] {
+    for sub in ["experiment", "serve", "bench-e2e", "encode", "resources", "models"] {
         assert!(stdout.contains(sub), "help missing '{sub}':\n{stdout}");
     }
 }
@@ -79,6 +79,33 @@ fn serve_reports_latency() {
     assert!(ok, "stderr: {stderr}");
     assert!(stdout.contains("simulated latency"), "{stdout}");
     assert!(stdout.contains("prediction histogram"), "{stdout}");
+}
+
+#[test]
+fn serve_streams_batches_through_the_cache() {
+    // 5 requests in batches of 2 ⇒ 3 batches: 1 prepared-model build,
+    // 2 cache hits — printed by the serve summary line.
+    let (ok, stdout, stderr) = run(&[
+        "serve", "--model", "dscnn", "--design", "csa", "--requests", "5", "--batch", "2",
+        "--threads", "2", "--scale", "0.07",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("batches of 2"), "{stdout}");
+    assert!(stdout.contains("1 build, 2 hits"), "{stdout}");
+    assert!(stdout.contains("throughput"), "{stdout}");
+}
+
+#[test]
+fn bench_e2e_reports_thread_scaling() {
+    let (ok, stdout, stderr) = run(&[
+        "bench-e2e", "--models", "dscnn", "--designs", "csa,simd", "--batch", "2", "--threads",
+        "2", "--scale", "0.07",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("e2e batched throughput"), "{stdout}");
+    assert!(stdout.contains("aggregate host throughput"), "{stdout}");
+    assert!(stdout.contains("CSA"), "{stdout}");
+    assert!(stdout.contains("baseline-simd"), "{stdout}");
 }
 
 #[test]

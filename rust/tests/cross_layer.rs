@@ -71,7 +71,15 @@ fn pjrt_artifact_matches_rust_integer_graph_bit_exactly() {
     let Some(dir) = artifacts_dir() else { return };
     let (graph, _) = import_graph_file(format!("{dir}/dscnn_int8.json")).unwrap();
     let ts = load_testset(&dir, "dscnn");
-    let rt = PjrtRuntime::cpu().unwrap();
+    // Artifacts come from the Python layer, so they can exist even in the
+    // default (stub) build — self-skip when the real client is absent.
+    let rt = match PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cross_layer: PJRT unavailable ({e}); skipping");
+            return;
+        }
+    };
     let loaded = rt.load_hlo_text(format!("{dir}/dscnn_int8.hlo.txt")).unwrap();
     let head_scale = match graph.layers.last().unwrap() {
         sparse_riscv::nn::graph::Layer::Fc(op) => op.output_params.scale,

@@ -1,0 +1,249 @@
+//! Differential tests pinning the CFU designs to the reference MAC:
+//! random INT8 operand streams through `cfu::{sssa,ussa,csa}` must match
+//! the baseline reference bit-for-bit, and the cycle-count contracts of
+//! Section III must hold (`ussa_vcmac` cycles = non-zero weights per
+//! block with a 1-cycle floor, the sequential baseline always 4, the
+//! parallel units always 1).
+
+use sparse_riscv::cfu::{build_cfu, AnyCfu, Cfu};
+use sparse_riscv::encoding::int7::clamp_int7;
+use sparse_riscv::encoding::lookahead::encode_last_bits;
+use sparse_riscv::encoding::pack::pack4_i8;
+use sparse_riscv::isa::{CfuOpcode, DesignKind};
+use sparse_riscv::util::proptest::{check, Config};
+use sparse_riscv::util::Pcg32;
+
+/// Reference MAC: `Σ w_i * (x_i + offset)` in i32 (the accumulator
+/// width), wrapping like the hardware.
+fn reference_mac(w: &[i8; 4], x: &[i8; 4], offset: i32) -> i32 {
+    let mut acc = 0i32;
+    for i in 0..4 {
+        acc = acc.wrapping_add((w[i] as i32).wrapping_mul(x[i] as i32 + offset));
+    }
+    acc
+}
+
+fn encoded_word(weights: [i8; 4], skip: u8) -> u32 {
+    let mut enc = weights;
+    encode_last_bits(&mut enc, skip).unwrap();
+    pack4_i8(&enc)
+}
+
+/// One random block: INT7 weights (the range every design can represent)
+/// with ~half the lanes zeroed, full INT8 inputs, an offset, a skip.
+fn gen_block(r: &mut Pcg32) -> Vec<i32> {
+    let mut v = Vec::with_capacity(10);
+    for _ in 0..4 {
+        v.push(if r.bernoulli(0.5) { 0 } else { r.range_i32(-64, 63) });
+    }
+    for _ in 0..4 {
+        v.push(r.range_i32(-128, 127));
+    }
+    v.push(r.range_i32(0, 255)); // input offset (TFLite zero-point shift)
+    v.push(r.range_i32(0, 15)); // skip counter
+    v
+}
+
+struct Case {
+    w: [i8; 4],
+    x: [i8; 4],
+    offset: i32,
+    skip: u8,
+}
+
+fn case_of(v: &[i32]) -> Option<Case> {
+    if v.len() < 10
+        || v[..4].iter().any(|w| !(-64..=63).contains(w))
+        || v[4..8].iter().any(|x| !(-128..=127).contains(x))
+        || !(0..=255).contains(&v[8])
+        || !(0..=15).contains(&v[9])
+    {
+        return None; // shrink candidate outside the generator's domain
+    }
+    Some(Case {
+        w: [v[0] as i8, v[1] as i8, v[2] as i8, v[3] as i8],
+        x: [v[4] as i8, v[5] as i8, v[6] as i8, v[7] as i8],
+        offset: v[8],
+        skip: v[9] as u8,
+    })
+}
+
+#[test]
+fn prop_all_designs_match_reference_mac() {
+    check(Config::default().cases(512).seed(0xD1F), gen_block, |v| {
+        let Some(c) = case_of(v) else { return true };
+        let expect = reference_mac(&c.w, &c.x, c.offset) as u32;
+        let plain = pack4_i8(&c.w);
+        let encoded = encoded_word(c.w, c.skip);
+        let x = pack4_i8(&c.x);
+        let cases: [(DesignKind, CfuOpcode, u32); 5] = [
+            (DesignKind::BaselineSimd, CfuOpcode::CfuSimdMac, plain),
+            (DesignKind::BaselineSequential, CfuOpcode::CfuSeqMac, plain),
+            (DesignKind::Sssa, CfuOpcode::SssaMac, encoded),
+            (DesignKind::Ussa, CfuOpcode::UssaVcMac, plain),
+            (DesignKind::Csa, CfuOpcode::CsaVcMac, encoded),
+        ];
+        cases.iter().all(|&(design, op, rs1)| {
+            let mut cfu = AnyCfu::new(design, c.offset);
+            cfu.execute(op, rs1, x).unwrap().rd == expect
+        })
+    });
+}
+
+#[test]
+fn prop_cycle_contracts_hold() {
+    check(Config::default().cases(512).seed(0xD2F), gen_block, |v| {
+        let Some(c) = case_of(v) else { return true };
+        let nz = c.w.iter().filter(|&&w| w != 0).count() as u32;
+        let plain = pack4_i8(&c.w);
+        let encoded = encoded_word(c.w, c.skip);
+        let x = pack4_i8(&c.x);
+        let cycles = |design, op, rs1| {
+            AnyCfu::new(design, c.offset).execute(op, rs1, x).unwrap().cycles
+        };
+        // Parallel units: always 1. Sequential baseline: always 4.
+        // Variable-cycle MACs: one cycle per non-zero weight, floored at
+        // 1 for an all-zero block (USSA); CSA counts *decoded* non-zeros
+        // so the embedded lookahead bits never inflate the count.
+        cycles(DesignKind::BaselineSimd, CfuOpcode::CfuSimdMac, plain) == 1
+            && cycles(DesignKind::BaselineSequential, CfuOpcode::CfuSeqMac, plain) == 4
+            && cycles(DesignKind::Sssa, CfuOpcode::SssaMac, encoded) == 1
+            && cycles(DesignKind::Ussa, CfuOpcode::UssaVcMac, plain) == nz.max(1)
+            && cycles(DesignKind::Csa, CfuOpcode::CsaVcMac, encoded) == nz.max(1)
+            && cycles(DesignKind::Sssa, CfuOpcode::SssaIncIndvar, encoded) == 1
+            && cycles(DesignKind::Csa, CfuOpcode::CsaIncIndvar, encoded) == 1
+    });
+}
+
+#[test]
+fn ussa_handles_full_int8_weight_range() {
+    // USSA consumes raw INT8 weights (no lookahead encoding), so the
+    // differential must also hold at the INT8 extremes SSSA/CSA cannot
+    // represent.
+    let mut rng = Pcg32::new(0xD3F);
+    for _ in 0..512 {
+        let w: [i8; 4] = std::array::from_fn(|_| rng.range_i32(-128, 127) as i8);
+        let x: [i8; 4] = std::array::from_fn(|_| rng.range_i32(-128, 127) as i8);
+        let offset = rng.range_i32(0, 255);
+        let mut ussa = build_cfu(DesignKind::Ussa, offset);
+        let mut base = build_cfu(DesignKind::BaselineSimd, offset);
+        let r = ussa.execute(CfuOpcode::UssaVcMac, pack4_i8(&w), pack4_i8(&x)).unwrap();
+        let b = base.execute(CfuOpcode::CfuSimdMac, pack4_i8(&w), pack4_i8(&x)).unwrap();
+        assert_eq!(r.rd, b.rd, "w={w:?} x={x:?} offset={offset}");
+        let nz = w.iter().filter(|&&wi| wi != 0).count() as u32;
+        assert_eq!(r.cycles, nz.max(1));
+    }
+}
+
+#[test]
+fn stream_accumulation_is_design_invariant() {
+    // A long operand stream (many blocks) accumulated block-by-block must
+    // land on the same i32 across every design — the multi-block analogue
+    // of the per-block differential, exercising wrap-around accumulation.
+    let mut rng = Pcg32::new(0xD4F);
+    let blocks = 96usize;
+    let ws: Vec<i8> = (0..blocks * 4)
+        .map(|_| {
+            if rng.bernoulli(0.6) {
+                0
+            } else {
+                clamp_int7(rng.range_i32(-64, 63) as i8)
+            }
+        })
+        .collect();
+    let xs: Vec<i8> = (0..blocks * 4).map(|_| rng.range_i32(-128, 127) as i8).collect();
+    let offset = 128;
+
+    let mut expect = 0i32;
+    for b in 0..blocks {
+        let w: [i8; 4] = ws[b * 4..b * 4 + 4].try_into().unwrap();
+        let x: [i8; 4] = xs[b * 4..b * 4 + 4].try_into().unwrap();
+        expect = expect.wrapping_add(reference_mac(&w, &x, offset));
+    }
+
+    let mut totals = Vec::new();
+    let mut cycle_totals = Vec::new();
+    for design in DesignKind::ALL {
+        let mut cfu = AnyCfu::new(design, offset);
+        let (op, encode) = match design {
+            DesignKind::BaselineSimd => (CfuOpcode::CfuSimdMac, false),
+            DesignKind::BaselineSequential => (CfuOpcode::CfuSeqMac, false),
+            DesignKind::Sssa => (CfuOpcode::SssaMac, true),
+            DesignKind::Ussa => (CfuOpcode::UssaVcMac, false),
+            DesignKind::Csa => (CfuOpcode::CsaVcMac, true),
+        };
+        let mut acc = 0i32;
+        let mut cycles = 0u64;
+        for b in 0..blocks {
+            let w: [i8; 4] = ws[b * 4..b * 4 + 4].try_into().unwrap();
+            let x: [i8; 4] = xs[b * 4..b * 4 + 4].try_into().unwrap();
+            let rs1 = if encode { encoded_word(w, 0) } else { pack4_i8(&w) };
+            let resp = cfu.execute(op, rs1, pack4_i8(&x)).unwrap();
+            acc = acc.wrapping_add(resp.rd as i32);
+            cycles += resp.cycles as u64;
+        }
+        totals.push(acc);
+        cycle_totals.push(cycles);
+    }
+    assert!(totals.iter().all(|&t| t == expect), "totals {totals:?} expect {expect}");
+
+    // Stream-level cycle invariants: USSA/CSA pay one cycle per non-zero
+    // weight plus one idle cycle per all-zero block; the baselines pay a
+    // fixed 1 or 4 per block.
+    let nnz = ws.iter().filter(|&&w| w != 0).count() as u64;
+    let zero_blocks =
+        (0..blocks).filter(|&b| ws[b * 4..b * 4 + 4].iter().all(|&w| w == 0)).count() as u64;
+    assert_eq!(cycle_totals[0], blocks as u64); // simd
+    assert_eq!(cycle_totals[1], 4 * blocks as u64); // sequential
+    assert_eq!(cycle_totals[2], blocks as u64); // sssa mac
+    assert_eq!(cycle_totals[3], nnz + zero_blocks); // ussa
+    assert_eq!(cycle_totals[4], nnz + zero_blocks); // csa
+}
+
+#[test]
+fn lookahead_walk_matches_dense_walk() {
+    // Drive the SSSA induction variable through a lane with real skip
+    // counters: the visited non-zero blocks must contribute exactly the
+    // dense reference sum (skipped blocks are all-zero by construction).
+    use sparse_riscv::encoding::lookahead::encode_lanes;
+    let mut rng = Pcg32::new(0xD5F);
+    for _ in 0..32 {
+        let blocks = 24usize;
+        let ws: Vec<i8> = (0..blocks * 4)
+            .map(|_| {
+                if rng.bernoulli(0.7) {
+                    0
+                } else {
+                    rng.range_i32(-64, 63) as i8
+                }
+            })
+            .collect();
+        let xs: Vec<i8> = (0..blocks * 4).map(|_| rng.range_i32(-128, 127) as i8).collect();
+        let enc = encode_lanes(&ws, ws.len()).unwrap();
+        let offset = 7;
+
+        let mut dense = 0i32;
+        for b in 0..blocks {
+            let w: [i8; 4] = ws[b * 4..b * 4 + 4].try_into().unwrap();
+            let x: [i8; 4] = xs[b * 4..b * 4 + 4].try_into().unwrap();
+            dense = dense.wrapping_add(reference_mac(&w, &x, offset));
+        }
+
+        let mut cfu = AnyCfu::new(DesignKind::Csa, offset);
+        let mut acc = 0i32;
+        let mut i = 0u32; // byte index driven by csa_inc_indvar
+        while (i as usize) < blocks * 4 {
+            let b = i as usize;
+            let wblock: [i8; 4] = enc.encoded[b..b + 4].try_into().unwrap();
+            let xblock: [i8; 4] = xs[b..b + 4].try_into().unwrap();
+            let rs1 = pack4_i8(&wblock);
+            let mac = cfu.execute(CfuOpcode::CsaVcMac, rs1, pack4_i8(&xblock)).unwrap();
+            acc = acc.wrapping_add(mac.rd as i32);
+            i = cfu.execute(CfuOpcode::CsaIncIndvar, rs1, i).unwrap().rd;
+            // The walk must always advance and stay block-aligned.
+            assert_eq!(i % 4, 0);
+            assert!(i as usize > b);
+        }
+        assert_eq!(acc, dense, "lookahead walk diverged from dense reference");
+    }
+}
