@@ -9,10 +9,11 @@
 //! # knobs: E2E_BATCH (default 32), E2E_SCALE (default 0.1), E2E_THREADS (0=auto)
 //! ```
 
-use sparse_riscv::bench::e2e::{render, run_e2e, E2eConfig};
+use sparse_riscv::bench::e2e::{render, run_e2e, to_records, E2eConfig};
 use sparse_riscv::bench::harness::{bench_fn, BenchConfig};
 use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
 use sparse_riscv::isa::DesignKind;
+use sparse_riscv::metrics::sink_and_report;
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -51,4 +52,10 @@ fn main() {
     );
     println!("{}", r.render());
     println!("  -> {:.1} inferences/sec on {} workers", r.items_per_sec(cfg.batch), engine.workers());
+
+    // Structured telemetry: the sweep's records plus the micro-bench
+    // wall numbers, folded into $BENCH_JSON when set.
+    let mut records = to_records(&cfg, &summary);
+    records.push(r.to_metric("micro/csa_dscnn_batch"));
+    sink_and_report("regenerate: BENCH_JSON=<path> cargo bench --bench e2e_throughput", &records);
 }

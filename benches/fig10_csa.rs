@@ -15,6 +15,7 @@ use sparse_riscv::analysis::speedup::csa_analytical_speedup;
 use sparse_riscv::config::experiment::{ExperimentConfig, SimOptions};
 use sparse_riscv::coordinator::runner::run_experiment;
 use sparse_riscv::isa::DesignKind;
+use sparse_riscv::metrics::{sink_and_report, MetricRecord};
 use sparse_riscv::models::builder::ModelConfig;
 use sparse_riscv::models::zoo::model_names;
 
@@ -55,6 +56,7 @@ fn main() {
             "analytical",
         ],
     );
+    let mut records = Vec::new();
     for model in model_names() {
         for (x_us, x_ss) in CONFIGS {
             let mk = |designs: Vec<DesignKind>| ExperimentConfig {
@@ -85,9 +87,21 @@ fn main() {
                 f2(mac_ratio(&res, base_mac)),
                 f2(csa_analytical_speedup(x_us, x_ss)),
             ]);
+            // The id carries the scale so a FIG10_SCALE=1.0 run creates
+            // new records instead of clobbering the committed series.
+            records.push(
+                MetricRecord::new(&format!("fig10/{model}/s{scale}/us{x_us}ss{x_ss}"))
+                    .context(model, "CSA", x_us, x_ss, scale, 1, 0)
+                    .with_value("speedup_vs_seq", csa.speedup_vs_seq)
+                    .with_value("speedup_vs_simd", csa.speedup_vs_simd)
+                    .with_value("speedup_mac", mac_ratio(&res, base_mac))
+                    .with_value("speedup_model", csa_analytical_speedup(x_us, x_ss))
+                    .with_value("cycles_csa", csa.total_cycles as f64),
+            );
         }
     }
     print!("{}", table.render());
+    sink_and_report("regenerate: BENCH_JSON=BENCH_figs.json cargo bench", &records);
     println!(
         "paper shape: CSA reaches 4–5× vs the sequential baseline at the\n\
          denser configs; simulated values include loop/requant overhead and\n\

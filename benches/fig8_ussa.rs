@@ -21,6 +21,7 @@ use sparse_riscv::bench::harness::{bench_fn, BenchConfig};
 use sparse_riscv::cpu::CostModel;
 use sparse_riscv::isa::DesignKind;
 use sparse_riscv::kernels::lane::{prepare_lanes, run_lane};
+use sparse_riscv::metrics::{sink_and_report, MetricRecord};
 use sparse_riscv::sparsity::generator::gen_unstructured_sparse;
 use sparse_riscv::util::Pcg32;
 
@@ -64,6 +65,7 @@ fn main() {
         &["x", "s_a (paper)", "s_o (paper)", "sim mac-only", "sim full-loop"],
     );
     let mut rng = Pcg32::new(0xF16_8);
+    let mut records = Vec::new();
     for i in 0..=19 {
         let x = i as f64 * 0.05;
         let ws = gen_unstructured_sparse(LANES * LANE_LEN, x, &mut rng);
@@ -73,13 +75,23 @@ fn main() {
         let ussa_mac = simulate(&ws, DesignKind::Ussa, &mac);
         let base_full = simulate(&ws, DesignKind::BaselineSequential, &full);
         let ussa_full = simulate(&ws, DesignKind::Ussa, &full);
+        let s_mac = base_mac as f64 / ussa_mac as f64;
+        let s_full = base_full as f64 / ussa_full as f64;
         table.row(&[
             f2(x),
             f2(ussa_speedup_analytical(x.min(0.9999))),
             f2(ussa_speedup_observed(x)),
-            f2(base_mac as f64 / ussa_mac as f64),
-            f2(base_full as f64 / ussa_full as f64),
+            f2(s_mac),
+            f2(s_full),
         ]);
+        records.push(
+            MetricRecord::new(&format!("fig8/x{:.2}", x))
+                .context("", "USSA", x, 0.0, 0.0, 0, 0)
+                .with_value("speedup_mac", s_mac)
+                .with_value("speedup_full", s_full)
+                .with_value("speedup_model_sa", ussa_speedup_analytical(x.min(0.9999)))
+                .with_value("speedup_model_so", ussa_speedup_observed(x)),
+        );
     }
     print!("{}", table.render());
 
@@ -90,4 +102,6 @@ fn main() {
         std::hint::black_box(simulate(&ws, DesignKind::Ussa, &CostModel::vexriscv()));
     });
     println!("{}", r.render());
+    records.push(r.to_metric("fig8/wall_lane_sweep"));
+    sink_and_report("regenerate: BENCH_JSON=BENCH_figs.json cargo bench", &records);
 }

@@ -16,6 +16,7 @@ use sparse_riscv::bench::harness::{bench_fn, BenchConfig};
 use sparse_riscv::cpu::CostModel;
 use sparse_riscv::isa::DesignKind;
 use sparse_riscv::kernels::PreparedConv;
+use sparse_riscv::metrics::{sink_and_report, MetricRecord};
 use sparse_riscv::nn::conv2d::{Conv2dOp, Padding};
 use sparse_riscv::sparsity::generator::gen_block_sparse;
 use sparse_riscv::tensor::quant::QuantParams;
@@ -64,6 +65,7 @@ fn main() {
         "Figure 9 — SSSA speedup vs 4:4 block sparsity x_ss (conv 3x3, 64ch)",
         &["x_ss", "s_a (paper)", "sim full-loop", "sim mac-only"],
     );
+    let mut records = Vec::new();
     for i in 0..=15 {
         let x_ss = i as f64 * 0.05;
         let op = conv_with_sparsity(x_ss, &mut rng);
@@ -73,12 +75,16 @@ fn main() {
         let sssa_full = cycles(&op, &input, DesignKind::Sssa, &full);
         let base_mac = cycles(&op, &input, DesignKind::BaselineSimd, &mac);
         let sssa_mac = cycles(&op, &input, DesignKind::Sssa, &mac);
-        table.row(&[
-            f2(x_ss),
-            f2(sssa_analytical_speedup(x_ss)),
-            f2(base_full as f64 / sssa_full as f64),
-            f2(base_mac as f64 / sssa_mac as f64),
-        ]);
+        let s_full = base_full as f64 / sssa_full as f64;
+        let s_mac = base_mac as f64 / sssa_mac as f64;
+        table.row(&[f2(x_ss), f2(sssa_analytical_speedup(x_ss)), f2(s_full), f2(s_mac)]);
+        records.push(
+            MetricRecord::new(&format!("fig9/x_ss{:.2}", x_ss))
+                .context("", "SSSA", 0.0, x_ss, 0.0, 0, 0)
+                .with_value("speedup_full", s_full)
+                .with_value("speedup_mac", s_mac)
+                .with_value("speedup_model_sa", sssa_analytical_speedup(x_ss)),
+        );
     }
     print!("{}", table.render());
     println!(
@@ -92,4 +98,6 @@ fn main() {
         std::hint::black_box(cycles(&op, &input, DesignKind::Sssa, &CostModel::vexriscv()));
     });
     println!("{}", r.render());
+    records.push(r.to_metric("fig9/wall_conv_layer"));
+    sink_and_report("regenerate: BENCH_JSON=BENCH_figs.json cargo bench", &records);
 }

@@ -14,6 +14,7 @@ use sparse_riscv::analysis::sota::{paper_our_rows, published_baselines};
 use sparse_riscv::config::experiment::{ExperimentConfig, SimOptions};
 use sparse_riscv::coordinator::runner::run_experiment;
 use sparse_riscv::isa::DesignKind;
+use sparse_riscv::metrics::{sink_and_report, MetricRecord};
 use sparse_riscv::models::builder::ModelConfig;
 
 fn measure_range(design: DesignKind, configs: &[(f64, f64)]) -> (f64, f64) {
@@ -93,4 +94,15 @@ fn main() {
         ]);
     }
     print!("{}", t.render());
+
+    let records: Vec<MetricRecord> = [("USSA", ussa), ("SSSA", sssa), ("CSA", csa)]
+        .iter()
+        .map(|(design, (lo, hi))| {
+            MetricRecord::new(&format!("table1/{}", design.to_lowercase()))
+                .context("vgg16", design, 0.0, 0.0, 0.25, 1, 0)
+                .with_value("speedup_lo", *lo)
+                .with_value("speedup_hi", *hi)
+        })
+        .collect();
+    sink_and_report("regenerate: BENCH_JSON=BENCH_figs.json cargo bench", &records);
 }

@@ -13,6 +13,7 @@
 use sparse_riscv::analysis::report::{pct, Table};
 use sparse_riscv::config::value::Value;
 use sparse_riscv::isa::DesignKind;
+use sparse_riscv::metrics::{sink_and_report, MetricRecord};
 use sparse_riscv::nn::activation::argmax;
 use sparse_riscv::runtime::model_io::import_graph_file;
 use sparse_riscv::simulator::SimEngine;
@@ -61,11 +62,20 @@ fn main() {
     );
     let limit = 96;
     let mut missing = false;
+    let mut records = Vec::new();
     for (model, label, p8, p7) in paper {
         let a8 = eval(model, "int8", DesignKind::BaselineSimd, limit);
         let a7 = eval(model, "int7", DesignKind::Csa, limit);
         if a8.is_none() || a7.is_none() {
             missing = true;
+        }
+        if let (Some(a8), Some(a7)) = (a8, a7) {
+            records.push(
+                MetricRecord::new(&format!("table2/{model}"))
+                    .context(model, "", 0.0, 0.0, 0.0, 0, 0)
+                    .with_value("accuracy_int8", a8)
+                    .with_value("accuracy_int7", a7),
+            );
         }
         t.row(&[
             label.to_string(),
@@ -76,6 +86,10 @@ fn main() {
         ]);
     }
     print!("{}", t.render());
+    // Only sink measured rows — absent artifacts must not erase or gate
+    // committed accuracy records (upsert semantics keep the rest).
+    let note = "regenerate: make artifacts && BENCH_JSON=BENCH_figs.json cargo bench";
+    sink_and_report(note, &records);
     if missing {
         println!("(some artifacts missing — run `make artifacts` first)");
     } else {

@@ -11,6 +11,7 @@
 
 use sparse_riscv::analysis::report::{pct, Table};
 use sparse_riscv::isa::DesignKind;
+use sparse_riscv::metrics::{sink_and_report, MetricRecord};
 use sparse_riscv::resources::fpga::{estimate_cfu, inventory, paper_increment, BASELINE_SOC};
 
 fn main() {
@@ -30,9 +31,17 @@ fn main() {
         ],
     );
     let paper_pct = [(DesignKind::Ussa, 0.0136), (DesignKind::Sssa, 0.0384), (DesignKind::Csa, 0.0439)];
+    let mut records = Vec::new();
     for (design, lut_pct_paper) in paper_pct {
         let est = estimate_cfu(design);
         let paper = paper_increment(design).unwrap();
+        records.push(
+            MetricRecord::new(&format!("table3/{}", design.name().to_lowercase()))
+                .context("", design.name(), 0.0, 0.0, 0.0, 0, 0)
+                .with_value("luts", est.luts as f64)
+                .with_value("ffs", est.ffs as f64)
+                .with_value("dsps", est.dsps as f64),
+        );
         t.row(&[
             design.name().to_string(),
             est.luts.to_string(),
@@ -59,4 +68,5 @@ fn main() {
         "\nbaseline SoC (w/o CFU): {} LUTs, {} FFs, {} BRAMs, {} DSPs (XC7A35T)",
         BASELINE_SOC.luts, BASELINE_SOC.ffs, BASELINE_SOC.brams, BASELINE_SOC.dsps
     );
+    sink_and_report("regenerate: BENCH_JSON=BENCH_figs.json cargo bench", &records);
 }

@@ -1,0 +1,22 @@
+"""Collection guards: self-skip suites whose toolchain is absent.
+
+Mirrors the cross-layer Rust tests (which skip when `make artifacts`
+outputs are missing): CI runs this suite without JAX installed, so the
+Pallas-kernel and model tests are skipped at collection time while the
+numpy-only encoding oracle tests always run.
+"""
+
+import importlib.util
+
+
+def _missing(module: str) -> bool:
+    return importlib.util.find_spec(module) is None
+
+
+collect_ignore = []
+if _missing("jax"):
+    collect_ignore += ["test_kernel.py", "test_model.py"]
+if _missing("hypothesis"):
+    collect_ignore += ["test_encoding.py", "test_kernel.py"]
+if _missing("numpy"):
+    collect_ignore += ["test_encoding.py", "test_kernel.py", "test_model.py"]

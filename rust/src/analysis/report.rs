@@ -75,6 +75,36 @@ impl Table {
     }
 }
 
+/// Format a metric value compactly: integral values print as integers
+/// (sharing [`crate::config::value::is_integral`] with the JSON
+/// serializer, so tables and the persisted JSON agree), fractional ones
+/// with 4 decimals.
+pub fn fmt_compact(x: f64) -> String {
+    if crate::config::value::is_integral(x) {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Render metric records as a long-form aligned table (record, metric,
+/// value, gate) — the human view of what `bench-e2e --json` persists.
+pub fn render_metric_records(title: &str, records: &[crate::metrics::MetricRecord]) -> String {
+    let mut t = Table::new(title, &["record", "metric", "value", "gate"]);
+    for rec in records {
+        for (name, v) in &rec.values {
+            let gated = crate::metrics::spec_for(name).gate;
+            t.row(&[
+                rec.id.clone(),
+                name.clone(),
+                fmt_compact(*v),
+                if gated { "yes" } else { "info" }.to_string(),
+            ]);
+        }
+    }
+    t.render()
+}
+
 /// Format a float with 2 decimals (speedups, ratios).
 pub fn f2(x: f64) -> String {
     format!("{x:.2}")
@@ -120,5 +150,17 @@ mod tests {
         assert_eq!(f2(1.23456), "1.23");
         assert_eq!(f3(0.5), "0.500");
         assert_eq!(pct(0.0384), "3.84%");
+    }
+
+    #[test]
+    fn metric_records_render_long_form() {
+        let rec = crate::metrics::MetricRecord::new("e2e/x")
+            .with_value("total_cycles", 42.0)
+            .with_value("wall_s", 0.5);
+        let s = render_metric_records("telemetry", &[rec]);
+        assert!(s.contains("e2e/x"), "{s}");
+        assert!(s.contains("total_cycles"), "{s}");
+        assert!(s.contains("info"), "{s}");
+        assert!(s.contains("yes"), "{s}");
     }
 }

@@ -9,6 +9,7 @@
 use crate::coordinator::batch::{BatchEngine, BatchOptions, BatchReport, BatchSpec};
 use crate::error::Result;
 use crate::isa::DesignKind;
+use crate::metrics::MetricRecord;
 use crate::simulator::PreparedCache;
 use crate::util::stats::geomean;
 use std::sync::Arc;
@@ -106,6 +107,46 @@ impl E2eSummary {
             .collect();
         geomean(&ratios)
     }
+}
+
+/// Convert a sweep into structured metric records — one per (model,
+/// design, thread-side) cell plus an aggregate record.
+///
+/// Rows come in (threads=1, threads=N) pairs; ids use the stable labels
+/// `t1`/`tN` instead of the resolved worker count, which varies by
+/// machine (cycle metrics are identical across thread counts by the
+/// engine's determinism contract, so both cells stay comparable
+/// everywhere).
+pub fn to_records(cfg: &E2eConfig, summary: &E2eSummary) -> Vec<MetricRecord> {
+    let mut records = Vec::with_capacity(summary.rows.len() + 1);
+    for pair in summary.rows.chunks(2) {
+        for (side, row) in pair.iter().enumerate() {
+            let label = if side == 0 { "t1" } else { "tN" };
+            let r = &row.report;
+            let spec = BatchSpec {
+                x_us: cfg.x_us,
+                x_ss: cfg.x_ss,
+                scale: cfg.scale,
+                ..BatchSpec::new(&r.model, r.design)
+            };
+            records.push(r.to_metric(
+                &format!("e2e/{}/{}/{label}", r.model, r.design.name()),
+                &spec,
+                cfg.batch as u64,
+                row.threads as u64,
+                cfg.clock_hz,
+            ));
+        }
+    }
+    records.push(
+        MetricRecord::new("e2e/aggregate")
+            .context("", "", cfg.x_us, cfg.x_ss, cfg.scale, cfg.batch as u64, 0)
+            .with_value("host_inf_s_t1", summary.agg_single)
+            .with_value("host_inf_s_tn", summary.agg_multi)
+            .with_value("host_scaling", summary.scaling())
+            .with_value("host_scaling_geomean", summary.geomean_scaling()),
+    );
+    records
 }
 
 /// Run the sweep: for each (model, design), one batch at threads = 1 and
@@ -240,5 +281,31 @@ mod tests {
         assert!(rendered.contains("dscnn"));
         assert!(rendered.contains("CSA"));
         assert!(rendered.contains("aggregate host throughput"));
+    }
+
+    #[test]
+    fn records_are_stable_across_thread_resolution() {
+        let cfg = E2eConfig {
+            models: vec!["dscnn".into()],
+            designs: vec![DesignKind::Csa],
+            batch: 2,
+            threads: 3,
+            scale: 0.07,
+            ..Default::default()
+        };
+        let summary = run_e2e(&cfg).unwrap();
+        let records = to_records(&cfg, &summary);
+        // 1 model × 1 design × 2 thread sides + 1 aggregate.
+        assert_eq!(records.len(), 3);
+        let t1 = records.iter().find(|r| r.id == "e2e/dscnn/CSA/t1").unwrap();
+        let tn = records.iter().find(|r| r.id == "e2e/dscnn/CSA/tN").unwrap();
+        // Cycle metrics are thread-invariant (determinism contract), so
+        // both sides of the pair carry identical gated values.
+        for m in ["total_cycles", "cfu_cycles", "cfu_stalls", "loaded_bytes", "p50_ms"] {
+            assert_eq!(t1.get(m), tn.get(m), "{m} differs across thread sides");
+        }
+        assert!(t1.get("total_cycles").unwrap() > 0.0);
+        let agg = records.iter().find(|r| r.id == "e2e/aggregate").unwrap();
+        assert!(agg.get("host_scaling").is_some());
     }
 }

@@ -1,5 +1,6 @@
 //! Wall-clock micro-benchmark runner.
 
+use crate::metrics::MetricRecord;
 use crate::util::stats::{OnlineStats, Percentiles};
 use std::time::Instant;
 
@@ -43,6 +44,18 @@ impl BenchResult {
             return 0.0;
         }
         items_per_iter as f64 / self.mean_s
+    }
+
+    /// Emit the wall-clock result as a structured metric record. All
+    /// values use the ungated `wall_*` namespace: host timing varies
+    /// across machines and must never gate CI, but persisting it gives
+    /// perf PRs a trend line.
+    pub fn to_metric(&self, id: &str) -> MetricRecord {
+        MetricRecord::new(id)
+            .with_value("wall_mean_ms", self.mean_s * 1e3)
+            .with_value("wall_median_ms", self.median_s * 1e3)
+            .with_value("wall_min_ms", self.min_s * 1e3)
+            .with_value("wall_stddev_ms", self.stddev_s * 1e3)
     }
 
     /// Render one line, auto-scaling units.
@@ -116,6 +129,20 @@ mod tests {
     fn render_contains_label() {
         let r = bench_fn("my-label", &BenchConfig { warmup: 0, iters: 1 }, || {});
         assert!(r.render().contains("my-label"));
+    }
+
+    #[test]
+    fn to_metric_uses_ungated_wall_namespace() {
+        let r = bench_fn("lbl", &BenchConfig { warmup: 0, iters: 2 }, || {});
+        let rec = r.to_metric("micro/lbl");
+        assert_eq!(rec.id, "micro/lbl");
+        for name in rec.values.keys() {
+            assert!(
+                !crate::metrics::spec_for(name).gate,
+                "wall metric '{name}' must not gate CI"
+            );
+        }
+        assert!(rec.get("wall_mean_ms").is_some());
     }
 
     #[test]

@@ -7,10 +7,13 @@
 //! which are deterministic and need no statistical treatment.
 //!
 //! [`e2e`] hosts the batched end-to-end throughput sweep shared by the
-//! `bench-e2e` CLI subcommand and `benches/e2e_throughput.rs`.
+//! `bench-e2e` CLI subcommand and `benches/e2e_throughput.rs`. Both the
+//! sweep and [`harness::BenchResult`] emit structured
+//! [`crate::metrics::MetricRecord`]s so every benchmark feeds the
+//! committed `BENCH_*.json` baselines (see [`crate::metrics`]).
 
 pub mod e2e;
 pub mod harness;
 
-pub use e2e::{run_e2e, E2eConfig, E2eSummary};
+pub use e2e::{run_e2e, to_records, E2eConfig, E2eSummary};
 pub use harness::{bench_fn, BenchConfig, BenchResult};

@@ -50,7 +50,7 @@ impl Value {
             Value::Null => out.push_str("null"),
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if is_integral(*n) {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -175,6 +175,14 @@ impl Value {
     pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
         Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+}
+
+/// True when an `f64` renders exactly as an `i64` — the one rule shared
+/// by the JSON serializer and the human-facing metric tables
+/// ([`crate::analysis::report::fmt_compact`]), so both always agree on
+/// how a number is displayed.
+pub fn is_integral(x: f64) -> bool {
+    x.fract() == 0.0 && x.abs() < 9e15
 }
 
 fn write_escaped(s: &str, out: &mut String) {

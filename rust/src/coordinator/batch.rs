@@ -21,6 +21,7 @@
 use super::scheduler::JobPool;
 use crate::error::Result;
 use crate::isa::DesignKind;
+use crate::metrics::MetricRecord;
 use crate::models::builder::{apply_sparsity, random_input, ModelConfig};
 use crate::models::zoo::{build_model, input_shape};
 use crate::simulator::{verified_backend_for, ExecBackend, ModelKey, PreparedCache, PreparedModel};
@@ -150,6 +151,39 @@ impl BatchReport {
         self.wall_seconds += other.wall_seconds;
         self.cache_hit &= other.cache_hit;
         self.predictions.extend_from_slice(&other.predictions);
+    }
+
+    /// Emit this report as a structured [`MetricRecord`] (the telemetry
+    /// layer every perf gate and trend dashboard reads). Deterministic
+    /// simulator counters gate CI; `wall_*`/`host_*` values ride along
+    /// as informational wall-clock metrics.
+    pub fn to_metric(
+        &self,
+        id: &str,
+        spec: &BatchSpec,
+        batch: u64,
+        threads: u64,
+        clock_hz: u64,
+    ) -> MetricRecord {
+        MetricRecord::new(id)
+            .context(
+                &self.model,
+                self.design.name(),
+                spec.x_us,
+                spec.x_ss,
+                spec.scale,
+                batch,
+                threads,
+            )
+            .with_value("total_cycles", self.total_cycles as f64)
+            .with_value("cfu_cycles", self.cfu_cycles as f64)
+            .with_value("cfu_stalls", self.cfu_stalls as f64)
+            .with_value("loaded_bytes", self.loaded_bytes as f64)
+            .with_value("p50_ms", self.p50 * 1e3)
+            .with_value("p99_ms", self.p99 * 1e3)
+            .with_value("sim_inf_s", self.sim_throughput(clock_hz))
+            .with_value("host_inf_s", self.host_throughput())
+            .with_value("wall_s", self.wall_seconds)
     }
 
     /// Recompute p50/p99 over the raw samples — exact, unlike merging
@@ -381,6 +415,24 @@ mod tests {
         // 3 batches: 1 miss then 2 hits.
         assert_eq!(engine.cache().misses(), 1);
         assert_eq!(engine.cache().hits(), 2);
+    }
+
+    #[test]
+    fn report_emits_metric_record() {
+        let spec = tiny_spec(DesignKind::Csa);
+        let reqs = BatchEngine::gen_requests("dscnn", 3, 21).unwrap();
+        let engine = BatchEngine::new(BatchOptions::default());
+        let report = engine.run_batch(&spec, reqs).unwrap();
+        let rec = report.to_metric("e2e/dscnn/CSA/t1", &spec, 3, 1, 100_000_000);
+        assert_eq!(rec.id, "e2e/dscnn/CSA/t1");
+        assert_eq!(rec.model, "dscnn");
+        assert_eq!(rec.design, "CSA");
+        assert_eq!(rec.get("total_cycles"), Some(report.total_cycles as f64));
+        assert!(rec.get("p99_ms").unwrap() >= rec.get("p50_ms").unwrap());
+        assert!(rec.get("host_inf_s").unwrap() > 0.0);
+        // Cycle metrics must be gated, wall metrics must not.
+        assert!(crate::metrics::spec_for("total_cycles").gate);
+        assert!(!crate::metrics::spec_for("wall_s").gate);
     }
 
     #[test]

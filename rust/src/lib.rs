@@ -22,6 +22,9 @@
 //! - analytical speedup models for Figures 8/9 ([`analysis`]),
 //! - an experiment coordinator with a threaded scheduler and a request
 //!   serving loop ([`coordinator`]),
+//! - structured perf telemetry: metric records, the committed
+//!   `BENCH_*.json` baseline store, and the CI regression diff engine
+//!   ([`metrics`]),
 //! - a PJRT runtime that loads JAX-lowered HLO text artifacts ([`runtime`]),
 //! - offline-friendly substrates: CLI parser ([`cli`]), config system
 //!   ([`config`]), bench harness ([`bench`]), PRNG/stats/property testing
@@ -41,6 +44,7 @@ pub mod encoding;
 pub mod error;
 pub mod isa;
 pub mod kernels;
+pub mod metrics;
 pub mod models;
 pub mod nn;
 pub mod resources;

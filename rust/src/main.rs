@@ -1,14 +1,15 @@
 //! `sparse-riscv` — leader binary: encode weights, run experiments,
 //! serve inference, estimate resources.
 
-use sparse_riscv::analysis::report::{f2, pct, Table};
-use sparse_riscv::bench::e2e::{render as render_e2e, run_e2e, E2eConfig};
+use sparse_riscv::analysis::report::{f2, pct, render_metric_records, Table};
+use sparse_riscv::bench::e2e::{render as render_e2e, run_e2e, to_records, E2eConfig};
 use sparse_riscv::cli::{ArgSpec, Command, ParsedArgs};
 use sparse_riscv::config::experiment::{ExperimentConfig, SimOptions};
 use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
 use sparse_riscv::coordinator::runner::run_experiment;
 use sparse_riscv::encoding::lookahead::encode_lanes;
 use sparse_riscv::isa::DesignKind;
+use sparse_riscv::metrics::{diff as metrics_diff, BaselineStore, Tolerances};
 use sparse_riscv::models::builder::ModelConfig;
 use sparse_riscv::models::zoo::{build_model, model_names};
 use sparse_riscv::resources::fpga::{estimate_cfu, paper_increment, BASELINE_SOC};
@@ -55,7 +56,20 @@ fn cli() -> Command {
                 .arg(ArgSpec::opt("scale", "0.1", "model width multiplier"))
                 .arg(ArgSpec::opt("x-us", "0.5", "unstructured sparsity"))
                 .arg(ArgSpec::opt("x-ss", "0.3", "block sparsity"))
-                .arg(ArgSpec::opt("seed", "42", "request rng seed")),
+                .arg(ArgSpec::opt("seed", "42", "request rng seed"))
+                .arg(ArgSpec::opt("json", "", "write fresh metric records to this store path"))
+                .arg(ArgSpec::opt("baseline", "", "committed BENCH_*.json store to diff against"))
+                .arg(ArgSpec::flag("check", "exit non-zero on regression beyond tolerance"))
+                .arg(ArgSpec::opt("tol-scale", "1.0", "tolerance multiplier (0 = exact match)")),
+        )
+        .subcommand(
+            Command::new("metrics", "inspect and diff BENCH_*.json metric stores")
+                .subcommand(
+                    Command::new("diff", "compare two stores: metrics diff <old> <new>")
+                        .arg(ArgSpec::opt("tol-scale", "1.0", "tolerance multiplier (0 = exact)"))
+                        .arg(ArgSpec::opt("json-verdict", "", "write machine verdict JSON here")),
+                )
+                .subcommand(Command::new("show", "print a store as a table: metrics show <path>")),
         )
         .subcommand(
             Command::new("encode", "demonstrate the lookahead encoding on synthetic weights")
@@ -209,6 +223,95 @@ fn cmd_bench_e2e(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     }
     let summary = run_e2e(&cfg)?;
     print!("{}", render_e2e(&cfg, &summary));
+
+    let records = to_records(&cfg, &summary);
+    let note = "regenerate: cargo run --release -- bench-e2e --json BENCH_e2e.json";
+    let json_path = args.get("json")?;
+    if !json_path.is_empty() {
+        BaselineStore::from_records(note, records.clone()).save(json_path)?;
+        println!("metrics: wrote {} record(s) to {json_path}", records.len());
+    }
+    let baseline_path = args.get("baseline")?;
+    if !baseline_path.is_empty() {
+        check_against_baseline(baseline_path, note, records, args)?;
+    }
+    Ok(())
+}
+
+/// Diff fresh records against the committed baseline store. An empty or
+/// absent baseline is a bootstrap placeholder: it is seeded from this
+/// run (exit 0) so the first release run on a toolchain machine arms
+/// the gate; thereafter regressions beyond tolerance exit non-zero when
+/// `--check` is set.
+fn check_against_baseline(
+    path: &str,
+    note: &str,
+    records: Vec<sparse_riscv::metrics::MetricRecord>,
+    args: &ParsedArgs,
+) -> sparse_riscv::Result<()> {
+    let baseline = if std::path::Path::new(path).exists() {
+        BaselineStore::load(path)?
+    } else {
+        BaselineStore::new(note)
+    };
+    if baseline.is_empty() {
+        let mut seeded = baseline;
+        seeded.note = note.to_string();
+        seeded.merge(records);
+        seeded.save(path)?;
+        println!(
+            "baseline '{path}' had no records (bootstrap) — seeded {} record(s) from this run; \
+             commit the file to arm the perf gate",
+            seeded.len()
+        );
+        return Ok(());
+    }
+    let fresh = BaselineStore::from_records(note, records);
+    let tol = Tolerances { scale: args.get_f64("tol-scale")? };
+    let report = metrics_diff(&baseline, &fresh, &tol);
+    print!("{}", report.render());
+    if args.get_flag("check")? && !report.passed() {
+        eprintln!(
+            "perf gate: regression vs '{path}' — if intentional, regenerate the baseline \
+             with `bench-e2e --json {path}` and commit it"
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+fn cmd_metrics_diff(args: &ParsedArgs) -> sparse_riscv::Result<()> {
+    let [old_path, new_path] = args.positionals.as_slice() else {
+        return Err(sparse_riscv::Error::Cli(
+            "usage: metrics diff <old.json> <new.json>".into(),
+        ));
+    };
+    let old = BaselineStore::load(old_path)?;
+    let new = BaselineStore::load(new_path)?;
+    let tol = Tolerances { scale: args.get_f64("tol-scale")? };
+    let report = metrics_diff(&old, &new, &tol);
+    print!("{}", report.render());
+    let verdict_path = args.get("json-verdict")?;
+    if !verdict_path.is_empty() {
+        std::fs::write(verdict_path, report.to_verdict_json())?;
+        println!("verdict written to {verdict_path}");
+    }
+    if !report.passed() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+fn cmd_metrics_show(args: &ParsedArgs) -> sparse_riscv::Result<()> {
+    let [path] = args.positionals.as_slice() else {
+        return Err(sparse_riscv::Error::Cli("usage: metrics show <store.json>".into()));
+    };
+    let store = BaselineStore::load(path)?;
+    let records: Vec<_> = store.records.values().cloned().collect();
+    print!("{}", render_metric_records(&format!("metric store {path}"), &records));
+    if !store.note.is_empty() {
+        println!("note: {}", store.note);
+    }
     Ok(())
 }
 
@@ -298,18 +401,23 @@ fn main() {
         println!("{help}");
         return;
     }
-    let result = match parsed.subcommand() {
-        "experiment" => cmd_experiment(&parsed),
-        "serve" => cmd_serve(&parsed),
-        "bench-e2e" => cmd_bench_e2e(&parsed),
-        "encode" => cmd_encode(&parsed),
-        "resources" => {
+    // Dispatch on the full command path so nested leaves (metrics
+    // diff/show) cannot collide with future top-level names.
+    let path: Vec<&str> = parsed.command_path.iter().map(|s| s.as_str()).collect();
+    let result = match path.as_slice() {
+        [_, "experiment"] => cmd_experiment(&parsed),
+        [_, "serve"] => cmd_serve(&parsed),
+        [_, "bench-e2e"] => cmd_bench_e2e(&parsed),
+        [_, "metrics", "diff"] => cmd_metrics_diff(&parsed),
+        [_, "metrics", "show"] => cmd_metrics_show(&parsed),
+        [_, "encode"] => cmd_encode(&parsed),
+        [_, "resources"] => {
             cmd_resources();
             Ok(())
         }
-        "models" => cmd_models(),
+        [_, "models"] => cmd_models(),
         other => {
-            eprintln!("unknown subcommand '{other}'");
+            eprintln!("unknown subcommand '{}'", other.last().copied().unwrap_or(""));
             std::process::exit(2);
         }
     };

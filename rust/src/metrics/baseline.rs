@@ -1,0 +1,293 @@
+//! The [`BaselineStore`]: a versioned collection of [`MetricRecord`]s
+//! persisted as `BENCH_*.json` at the repo root.
+//!
+//! Stores are committed to git and diffed across commits, so
+//! serialization is deterministic (sorted keys, stable float formatting
+//! via [`crate::config::value::Value`]) and pretty-printed for reviewable
+//! diffs. A store with no records is a *bootstrap* placeholder: checking
+//! against it seeds it from the fresh run instead of failing, so the
+//! first release run on a machine with the toolchain establishes the
+//! baseline (see `DESIGN.md`, "Perf telemetry").
+
+use super::record::MetricRecord;
+use crate::config::value::Value;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Current on-disk schema version.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// A persistent, diffable set of metric records keyed by record id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineStore {
+    /// Schema version (bumped on incompatible layout changes).
+    pub schema: i64,
+    /// Free-form provenance note — conventionally the regeneration
+    /// command, e.g. `cargo run --release -- bench-e2e --json BENCH_e2e.json`.
+    pub note: String,
+    /// Records keyed by [`MetricRecord::id`].
+    pub records: BTreeMap<String, MetricRecord>,
+}
+
+impl BaselineStore {
+    /// Empty store with a provenance note.
+    pub fn new(note: &str) -> Self {
+        BaselineStore { schema: SCHEMA_VERSION, note: note.to_string(), records: BTreeMap::new() }
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when the store holds no records (bootstrap placeholder).
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Insert or replace a record (keyed by its id).
+    pub fn insert(&mut self, rec: MetricRecord) {
+        self.records.insert(rec.id.clone(), rec);
+    }
+
+    /// Upsert a batch of records.
+    pub fn merge(&mut self, records: Vec<MetricRecord>) {
+        for r in records {
+            self.insert(r);
+        }
+    }
+
+    /// Look up a record by id.
+    pub fn get(&self, id: &str) -> Option<&MetricRecord> {
+        self.records.get(id)
+    }
+
+    /// Build a store holding the given records.
+    pub fn from_records(note: &str, records: Vec<MetricRecord>) -> Self {
+        let mut s = BaselineStore::new(note);
+        s.merge(records);
+        s
+    }
+
+    /// Serialize to a JSON value.
+    pub fn to_value(&self) -> Value {
+        let records = Value::Obj(
+            self.records.iter().map(|(k, r)| (k.clone(), r.to_value())).collect(),
+        );
+        Value::obj(vec![
+            ("schema", Value::Num(self.schema as f64)),
+            ("note", Value::Str(self.note.clone())),
+            ("records", records),
+        ])
+    }
+
+    /// Serialize to pretty-printed JSON (stable ordering, 2-space
+    /// indent) — the committed `BENCH_*.json` format.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        write_pretty(&self.to_value(), 0, &mut out);
+        out.push('\n');
+        out
+    }
+
+    /// Parse a store from JSON text.
+    pub fn from_json(src: &str) -> Result<Self> {
+        let v = Value::parse(src)?;
+        let schema = v.get("schema")?.as_i64()?;
+        if schema > SCHEMA_VERSION {
+            return Err(Error::Config(format!(
+                "baseline schema {schema} is newer than supported {SCHEMA_VERSION}"
+            )));
+        }
+        let note = match v.get_opt("note") {
+            Some(n) => n.as_str()?.to_string(),
+            None => String::new(),
+        };
+        let mut store = BaselineStore { schema, note, records: BTreeMap::new() };
+        match v.get_opt("records") {
+            Some(Value::Obj(m)) => {
+                for (key, rv) in m {
+                    let rec = MetricRecord::from_value(rv)?;
+                    if rec.id != *key {
+                        return Err(Error::Config(format!(
+                            "baseline record key '{key}' disagrees with record id '{}'",
+                            rec.id
+                        )));
+                    }
+                    store.records.insert(key.clone(), rec);
+                }
+            }
+            Some(other) => {
+                return Err(Error::Config(format!(
+                    "baseline 'records' must be an object, got {other:?}"
+                )));
+            }
+            None => {}
+        }
+        Ok(store)
+    }
+
+    /// Load a store from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let src = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!("cannot read baseline '{}': {e}", path.display()))
+        })?;
+        Self::from_json(&src)
+            .map_err(|e| Error::Config(format!("baseline '{}': {e}", path.display())))
+    }
+
+    /// Write the store to a file (creating parent directories).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// Load the store at `path` (or start a new one with `note`), upsert
+    /// `records`, and save it back. Used by the bench binaries to fold
+    /// their series into a shared `BENCH_figs.json`.
+    pub fn upsert_file(
+        path: impl AsRef<Path>,
+        note: &str,
+        records: Vec<MetricRecord>,
+    ) -> Result<Self> {
+        let path = path.as_ref();
+        let mut store = if path.exists() {
+            Self::load(path)?
+        } else {
+            BaselineStore::new(note)
+        };
+        store.merge(records);
+        store.save(path)?;
+        Ok(store)
+    }
+}
+
+/// Recursive pretty printer over [`Value`] (2-space indent). Scalars use
+/// the same formatting as the compact serializer, so pretty and compact
+/// forms parse to identical values.
+fn write_pretty(v: &Value, indent: usize, out: &mut String) {
+    match v {
+        Value::Arr(xs) if !xs.is_empty() => {
+            out.push_str("[\n");
+            for (i, x) in xs.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&"  ".repeat(indent + 1));
+                write_pretty(x, indent + 1, out);
+            }
+            out.push('\n');
+            out.push_str(&"  ".repeat(indent));
+            out.push(']');
+        }
+        Value::Obj(m) if !m.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, val)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&"  ".repeat(indent + 1));
+                out.push_str(&Value::Str(k.clone()).to_json());
+                out.push_str(": ");
+                write_pretty(val, indent + 1, out);
+            }
+            out.push('\n');
+            out.push_str(&"  ".repeat(indent));
+            out.push('}');
+        }
+        other => out.push_str(&other.to_json()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: &str, cycles: f64) -> MetricRecord {
+        MetricRecord::new(id)
+            .context("dscnn", "CSA", 0.5, 0.3, 0.1, 8, 1)
+            .with_value("total_cycles", cycles)
+    }
+
+    #[test]
+    fn store_json_roundtrip() {
+        let store = BaselineStore::from_records(
+            "regen: cargo run --release -- bench-e2e --json BENCH_e2e.json",
+            vec![rec("a", 100.0), rec("b", 200.0)],
+        );
+        let json = store.to_json();
+        let back = BaselineStore::from_json(&json).unwrap();
+        assert_eq!(back, store);
+        assert_eq!(back.get("b").unwrap().get("total_cycles"), Some(200.0));
+    }
+
+    #[test]
+    fn pretty_output_is_indented_and_parseable() {
+        let store = BaselineStore::from_records("n", vec![rec("a", 1.0)]);
+        let json = store.to_json();
+        assert!(json.contains("\n  \"records\""), "{json}");
+        assert!(json.ends_with('\n'));
+        assert_eq!(Value::parse(&json).unwrap(), store.to_value());
+    }
+
+    #[test]
+    fn empty_store_is_bootstrap() {
+        let store = BaselineStore::new("seed me");
+        assert!(store.is_empty());
+        let back = BaselineStore::from_json(&store.to_json()).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(back.note, "seed me");
+    }
+
+    #[test]
+    fn insert_upserts_by_id() {
+        let mut store = BaselineStore::new("");
+        store.insert(rec("a", 1.0));
+        store.insert(rec("a", 2.0));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get("a").unwrap().get("total_cycles"), Some(2.0));
+    }
+
+    #[test]
+    fn newer_schema_rejected() {
+        let json = r#"{"schema": 999, "note": "", "records": {}}"#;
+        assert!(BaselineStore::from_json(json).is_err());
+    }
+
+    #[test]
+    fn mismatched_record_key_rejected() {
+        let json = r#"{"schema":1,"records":{"a":{"id":"b","values":{}}}}"#;
+        assert!(BaselineStore::from_json(json).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_upsert() {
+        let dir = std::env::temp_dir().join(format!("srv-metrics-{}", std::process::id()));
+        let path = dir.join("store.json");
+        let store = BaselineStore::from_records("n", vec![rec("a", 1.0)]);
+        store.save(&path).unwrap();
+        let back = BaselineStore::load(&path).unwrap();
+        assert_eq!(back, store);
+        let merged =
+            BaselineStore::upsert_file(&path, "n", vec![rec("a", 5.0), rec("c", 3.0)]).unwrap();
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged.get("a").unwrap().get("total_cycles"), Some(5.0));
+        let reloaded = BaselineStore::load(&path).unwrap();
+        assert_eq!(reloaded, merged);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_missing_file_errors_with_path() {
+        let e = BaselineStore::load("/nonexistent/store.json").unwrap_err();
+        assert!(e.to_string().contains("nonexistent"), "{e}");
+    }
+}

@@ -1,0 +1,429 @@
+//! Baseline diff engine: compare a fresh run against a committed
+//! [`BaselineStore`] with per-metric tolerances.
+//!
+//! Only metrics the registry marks `gate` (deterministic simulator
+//! counters, figure speedups, resource estimates) can fail the verdict;
+//! wall-clock metrics are reported but informational. A *regression* is
+//! a change in the metric's worse direction that exceeds both the
+//! absolute floor and the relative tolerance — improvements beyond
+//! tolerance are surfaced (so stale baselines get refreshed) but pass.
+
+use super::baseline::BaselineStore;
+use super::record::{spec_for, Direction};
+use crate::analysis::report::{fmt_compact, Table};
+use crate::config::value::Value;
+
+/// Outcome of comparing one metric of one record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Bit-identical to the baseline.
+    Unchanged,
+    /// Changed, but within tolerance.
+    WithinTol,
+    /// Better than the baseline beyond tolerance.
+    Improved,
+    /// Worse than the baseline beyond tolerance (fails if gated).
+    Regressed,
+}
+
+impl Status {
+    /// Short label for tables / JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Status::Unchanged => "=",
+            Status::WithinTol => "~",
+            Status::Improved => "improved",
+            Status::Regressed => "REGRESSED",
+        }
+    }
+}
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    /// Record id the metric belongs to.
+    pub id: String,
+    /// Metric name.
+    pub metric: String,
+    /// Baseline value.
+    pub old: f64,
+    /// Fresh value.
+    pub new: f64,
+    /// Signed relative change `(new - old) / |old|` (0 when old is 0).
+    pub rel_change: f64,
+    /// Whether the metric gates the verdict.
+    pub gated: bool,
+    /// Comparison outcome.
+    pub status: Status,
+}
+
+/// Tolerance scaling for a diff run.
+#[derive(Debug, Clone, Copy)]
+pub struct Tolerances {
+    /// Multiplier applied to every registry tolerance (CLI `--tol-scale`;
+    /// 0 makes every gated metric exact-match).
+    pub scale: f64,
+}
+
+impl Default for Tolerances {
+    fn default() -> Self {
+        Tolerances { scale: 1.0 }
+    }
+}
+
+/// Full result of diffing two stores.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    /// Per-metric comparisons for records present in both stores.
+    pub deltas: Vec<MetricDelta>,
+    /// Record ids only in the fresh store (not gating: new coverage).
+    pub new_records: Vec<String>,
+    /// Record ids only in the baseline (gating: lost coverage).
+    pub missing_records: Vec<String>,
+    /// Metric names present in the baseline record but not the fresh one.
+    pub missing_metrics: Vec<(String, String)>,
+}
+
+impl DiffReport {
+    /// Gated regressions (what fails the verdict), plus lost coverage.
+    pub fn failures(&self) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .deltas
+            .iter()
+            .filter(|d| d.gated && d.status == Status::Regressed)
+            .map(|d| {
+                format!(
+                    "{} :: {} regressed {:+.2}% ({} -> {})",
+                    d.id,
+                    d.metric,
+                    d.rel_change * 100.0,
+                    fmt_compact(d.old),
+                    fmt_compact(d.new)
+                )
+            })
+            .collect();
+        for id in &self.missing_records {
+            out.push(format!("{id} :: record missing from the fresh run"));
+        }
+        for (id, m) in &self.missing_metrics {
+            let gated = spec_for(m).gate;
+            if gated {
+                out.push(format!("{id} :: gated metric '{m}' missing from the fresh run"));
+            }
+        }
+        out
+    }
+
+    /// True when no gated metric regressed and no baseline coverage was
+    /// lost.
+    pub fn passed(&self) -> bool {
+        self.failures().is_empty()
+    }
+
+    /// Count of metrics compared.
+    pub fn compared(&self) -> usize {
+        self.deltas.len()
+    }
+
+    /// Human-readable table: changed metrics first, identical ones
+    /// summarized in the footer.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "metrics diff (baseline -> fresh)",
+            &["record", "metric", "baseline", "fresh", "change", "gate", "status"],
+        );
+        let mut unchanged = 0usize;
+        for d in &self.deltas {
+            if d.status == Status::Unchanged {
+                unchanged += 1;
+                continue;
+            }
+            // Ungated metrics can't fail the verdict; soften their labels
+            // so wall-clock jitter doesn't read like a CI failure.
+            let status = match (d.gated, d.status) {
+                (false, Status::Regressed) => "worse (info)".to_string(),
+                (false, Status::Improved) => "better (info)".to_string(),
+                _ => d.status.label().to_string(),
+            };
+            t.row(&[
+                d.id.clone(),
+                d.metric.clone(),
+                fmt_compact(d.old),
+                fmt_compact(d.new),
+                format!("{:+.2}%", d.rel_change * 100.0),
+                if d.gated { "yes" } else { "info" }.to_string(),
+                status,
+            ]);
+        }
+        let mut out = if t.is_empty() {
+            format!("metrics diff: no changed metrics ({unchanged} identical)\n")
+        } else {
+            t.render()
+        };
+        if !t.is_empty() {
+            out.push_str(&format!("({unchanged} metrics identical, not shown)\n"));
+        }
+        for id in &self.new_records {
+            out.push_str(&format!("new record (not in baseline): {id}\n"));
+        }
+        for id in &self.missing_records {
+            out.push_str(&format!("MISSING record (in baseline, not in run): {id}\n"));
+        }
+        for (id, m) in &self.missing_metrics {
+            out.push_str(&format!("missing metric: {id} :: {m}\n"));
+        }
+        let verdict = if self.passed() { "PASS" } else { "FAIL" };
+        let regressed =
+            self.deltas.iter().filter(|d| d.gated && d.status == Status::Regressed).count();
+        let lost = self.failures().len() - regressed;
+        out.push_str(&format!(
+            "verdict: {verdict} ({} compared, {regressed} regressions, {lost} coverage losses)\n",
+            self.compared(),
+        ));
+        out
+    }
+
+    /// Machine-readable verdict JSON (for CI annotations / tooling).
+    pub fn to_verdict_json(&self) -> String {
+        let deltas: Vec<Value> = self
+            .deltas
+            .iter()
+            .filter(|d| d.status != Status::Unchanged)
+            .map(|d| {
+                Value::obj(vec![
+                    ("id", Value::Str(d.id.clone())),
+                    ("metric", Value::Str(d.metric.clone())),
+                    ("old", Value::Num(d.old)),
+                    ("new", Value::Num(d.new)),
+                    ("rel_change", Value::Num(d.rel_change)),
+                    ("gated", Value::Bool(d.gated)),
+                    ("status", Value::Str(d.status.label().to_string())),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("passed", Value::Bool(self.passed())),
+            ("compared", Value::Num(self.compared() as f64)),
+            (
+                "failures",
+                Value::Arr(self.failures().into_iter().map(Value::Str).collect()),
+            ),
+            ("changed", Value::Arr(deltas)),
+            (
+                "new_records",
+                Value::Arr(self.new_records.iter().cloned().map(Value::Str).collect()),
+            ),
+        ])
+        .to_json()
+    }
+}
+
+/// Compare one metric value against its baseline under the registry
+/// spec scaled by `tol`.
+pub fn compare_metric(name: &str, old: f64, new: f64, tol: &Tolerances) -> (Status, bool) {
+    let spec = spec_for(name);
+    if new == old {
+        return (Status::Unchanged, spec.gate);
+    }
+    // Positive `worse` means the change moved in the metric's bad
+    // direction.
+    let worse = match spec.better {
+        Direction::LowerIsBetter => new - old,
+        Direction::HigherIsBetter => old - new,
+    };
+    let rel = if old.abs() > f64::EPSILON { worse.abs() / old.abs() } else { f64::INFINITY };
+    // Both tolerance terms scale, so `--tol-scale 0` really is an exact
+    // match for gated metrics (the absolute floor shrinks with it).
+    let beyond = worse.abs() > spec.abs_floor * tol.scale && rel > spec.rel_tol * tol.scale;
+    let status = match (worse > 0.0, beyond) {
+        (_, false) => Status::WithinTol,
+        (true, true) => Status::Regressed,
+        (false, true) => Status::Improved,
+    };
+    (status, spec.gate)
+}
+
+/// Diff a fresh store against a baseline.
+pub fn diff(baseline: &BaselineStore, fresh: &BaselineStore, tol: &Tolerances) -> DiffReport {
+    let mut report = DiffReport {
+        deltas: Vec::new(),
+        new_records: Vec::new(),
+        missing_records: Vec::new(),
+        missing_metrics: Vec::new(),
+    };
+    for (id, old_rec) in &baseline.records {
+        let Some(new_rec) = fresh.get(id) else {
+            report.missing_records.push(id.clone());
+            continue;
+        };
+        for (metric, &old) in &old_rec.values {
+            let Some(new) = new_rec.get(metric) else {
+                report.missing_metrics.push((id.clone(), metric.clone()));
+                continue;
+            };
+            let (status, gated) = compare_metric(metric, old, new, tol);
+            let rel_change = if old.abs() > f64::EPSILON { (new - old) / old.abs() } else { 0.0 };
+            report.deltas.push(MetricDelta {
+                id: id.clone(),
+                metric: metric.clone(),
+                old,
+                new,
+                rel_change,
+                gated,
+                status,
+            });
+        }
+    }
+    for id in fresh.records.keys() {
+        if baseline.get(id).is_none() {
+            report.new_records.push(id.clone());
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::record::MetricRecord;
+
+    fn store(pairs: &[(&str, &str, f64)]) -> BaselineStore {
+        let mut s = BaselineStore::new("t");
+        for &(id, metric, v) in pairs {
+            let rec = match s.records.remove(id) {
+                Some(r) => r.with_value(metric, v),
+                None => MetricRecord::new(id).with_value(metric, v),
+            };
+            s.insert(rec);
+        }
+        s
+    }
+
+    #[test]
+    fn exact_equal_is_unchanged_and_passes() {
+        let a = store(&[("r", "total_cycles", 1000.0)]);
+        let d = diff(&a, &a.clone(), &Tolerances::default());
+        assert_eq!(d.deltas.len(), 1);
+        assert_eq!(d.deltas[0].status, Status::Unchanged);
+        assert!(d.passed());
+    }
+
+    #[test]
+    fn just_inside_tolerance_passes() {
+        // total_cycles: rel_tol 0.02, abs_floor 16. +1.9% on 10_000 is
+        // inside; +190 also clears the floor, so the floor isn't the
+        // deciding term.
+        let a = store(&[("r", "total_cycles", 10_000.0)]);
+        let b = store(&[("r", "total_cycles", 10_190.0)]);
+        let d = diff(&a, &b, &Tolerances::default());
+        assert_eq!(d.deltas[0].status, Status::WithinTol);
+        assert!(d.passed());
+    }
+
+    #[test]
+    fn just_outside_tolerance_fails() {
+        // +2.1% on 10_000 cycles: beyond rel_tol 0.02 and abs_floor 16.
+        let a = store(&[("r", "total_cycles", 10_000.0)]);
+        let b = store(&[("r", "total_cycles", 10_210.0)]);
+        let d = diff(&a, &b, &Tolerances::default());
+        assert_eq!(d.deltas[0].status, Status::Regressed);
+        assert!(!d.passed());
+        assert_eq!(d.failures().len(), 1);
+        assert!(d.failures()[0].contains("total_cycles"), "{:?}", d.failures());
+    }
+
+    #[test]
+    fn abs_floor_shields_tiny_counts() {
+        // cfu_stalls: rel_tol 0.05, abs_floor 64. 10 -> 20 is +100%
+        // relative but only +10 absolute — inside the floor, passes.
+        let a = store(&[("r", "cfu_stalls", 10.0)]);
+        let b = store(&[("r", "cfu_stalls", 20.0)]);
+        let d = diff(&a, &b, &Tolerances::default());
+        assert_eq!(d.deltas[0].status, Status::WithinTol);
+        assert!(d.passed());
+    }
+
+    #[test]
+    fn improvement_beyond_tolerance_passes_but_is_flagged() {
+        let a = store(&[("r", "total_cycles", 10_000.0)]);
+        let b = store(&[("r", "total_cycles", 8_000.0)]);
+        let d = diff(&a, &b, &Tolerances::default());
+        assert_eq!(d.deltas[0].status, Status::Improved);
+        assert!(d.passed());
+        assert!(d.render().contains("improved"));
+    }
+
+    #[test]
+    fn direction_respected_for_higher_is_better() {
+        // speedup_*: higher is better — a drop fails, a gain passes.
+        let a = store(&[("r", "speedup_csa", 5.0)]);
+        let drop = store(&[("r", "speedup_csa", 4.0)]);
+        let gain = store(&[("r", "speedup_csa", 6.0)]);
+        assert!(!diff(&a, &drop, &Tolerances::default()).passed());
+        let d = diff(&a, &gain, &Tolerances::default());
+        assert_eq!(d.deltas[0].status, Status::Improved);
+        assert!(d.passed());
+    }
+
+    #[test]
+    fn wall_metrics_never_fail() {
+        let a = store(&[("r", "wall_mean_ms", 10.0), ("r", "host_inf_s", 100.0)]);
+        let b = store(&[("r", "wall_mean_ms", 500.0), ("r", "host_inf_s", 1.0)]);
+        let d = diff(&a, &b, &Tolerances::default());
+        assert!(d.passed());
+        assert!(d.deltas.iter().all(|x| !x.gated));
+    }
+
+    #[test]
+    fn missing_record_fails_new_record_passes() {
+        let a = store(&[("gone", "total_cycles", 1.0)]);
+        let b = store(&[("added", "total_cycles", 1.0)]);
+        let d = diff(&a, &b, &Tolerances::default());
+        assert_eq!(d.missing_records, vec!["gone".to_string()]);
+        assert_eq!(d.new_records, vec!["added".to_string()]);
+        assert!(!d.passed());
+        let d2 = diff(&BaselineStore::new(""), &b, &Tolerances::default());
+        assert!(d2.passed(), "new coverage alone must not fail");
+    }
+
+    #[test]
+    fn missing_gated_metric_fails_missing_info_metric_passes() {
+        let a = store(&[("r", "total_cycles", 1.0), ("r", "wall_mean_ms", 2.0)]);
+        let only_wall = store(&[("r", "wall_mean_ms", 2.0)]);
+        let d = diff(&a, &only_wall, &Tolerances::default());
+        assert!(!d.passed());
+        let only_cycles = store(&[("r", "total_cycles", 1.0)]);
+        let d = diff(&a, &only_cycles, &Tolerances::default());
+        assert!(d.passed(), "losing an info metric must not fail");
+    }
+
+    #[test]
+    fn tol_scale_zero_makes_gated_exact() {
+        let a = store(&[("r", "total_cycles", 10_000.0)]);
+        let b = store(&[("r", "total_cycles", 10_017.0)]);
+        assert!(diff(&a, &b, &Tolerances::default()).passed());
+        // scale 0: any delta beyond the absolute floor regresses.
+        assert!(!diff(&a, &b, &Tolerances { scale: 0.0 }).passed());
+    }
+
+    #[test]
+    fn verdict_json_parses_and_reports_failure() {
+        let a = store(&[("r", "total_cycles", 10_000.0)]);
+        let b = store(&[("r", "total_cycles", 20_000.0)]);
+        let d = diff(&a, &b, &Tolerances::default());
+        let v = Value::parse(&d.to_verdict_json()).unwrap();
+        assert!(!v.get("passed").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("failures").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn render_mentions_regression_and_verdict() {
+        let a = store(&[("r", "total_cycles", 10_000.0)]);
+        let b = store(&[("r", "total_cycles", 20_000.0)]);
+        let out = diff(&a, &b, &Tolerances::default()).render();
+        assert!(out.contains("REGRESSED"), "{out}");
+        assert!(out.contains("verdict: FAIL"), "{out}");
+        let clean = diff(&a, &a.clone(), &Tolerances::default()).render();
+        assert!(clean.contains("verdict: PASS"), "{clean}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Structured performance telemetry: metric records, the committed
+//! baseline store, and the regression diff engine.
+//!
+//! This is the load-bearing reporting layer for every perf-sensitive
+//! path in the repo:
+//!
+//! - [`record::MetricRecord`] — one measured configuration (model,
+//!   design, sparsity point, batch/threads) with named metric values;
+//!   the registry ([`record::METRIC_SPECS`]) classifies each metric as
+//!   deterministic-and-gated (simulated cycles, CFU stalls, bytes,
+//!   p50/p99 simulated latency, figure speedups) or informational
+//!   wall-clock (`wall_*`, `host_*`);
+//! - [`baseline::BaselineStore`] — reads/writes `BENCH_e2e.json` /
+//!   `BENCH_figs.json` at the repo root (pretty, deterministic JSON so
+//!   committed baselines diff cleanly);
+//! - [`diff`] — compares a fresh run against the committed baseline
+//!   with per-metric tolerances and produces a human table plus a
+//!   machine verdict (`sparse-riscv metrics diff`, `bench-e2e --check`).
+//!
+//! Bench binaries fold their series into a store via
+//! [`sink_records_env`]: set `BENCH_JSON=BENCH_figs.json` and run
+//! `cargo bench` to (re)generate the figure baselines deliberately.
+
+pub mod baseline;
+pub mod diff;
+pub mod record;
+
+pub use baseline::{BaselineStore, SCHEMA_VERSION};
+pub use diff::{diff, DiffReport, MetricDelta, Status, Tolerances};
+pub use record::{spec_for, Direction, MetricRecord, MetricSpec, METRIC_SPECS};
+
+use crate::error::Result;
+
+/// Environment variable naming the store the bench binaries write into.
+pub const BENCH_JSON_ENV: &str = "BENCH_JSON";
+
+/// Upsert `records` into the store named by the `BENCH_JSON` environment
+/// variable, if set. Returns the path written, or `None` when the
+/// variable is unset (print-only run). Used at the end of every
+/// `benches/*.rs` target so one `BENCH_JSON=BENCH_figs.json cargo bench`
+/// sweep regenerates the committed figure baseline.
+pub fn sink_records_env(note: &str, records: &[MetricRecord]) -> Result<Option<String>> {
+    let Ok(path) = std::env::var(BENCH_JSON_ENV) else {
+        return Ok(None);
+    };
+    if path.is_empty() {
+        return Ok(None);
+    }
+    BaselineStore::upsert_file(&path, note, records.to_vec())?;
+    Ok(Some(path))
+}
+
+/// Convenience for bench mains: sink records and print a one-line
+/// confirmation (or nothing when `BENCH_JSON` is unset). Panics on I/O
+/// failure — bench binaries have no error channel beyond exit status.
+pub fn sink_and_report(note: &str, records: &[MetricRecord]) {
+    match sink_records_env(note, records) {
+        Ok(Some(path)) => {
+            println!("metrics: wrote {} record(s) into {path}", records.len());
+        }
+        Ok(None) => {}
+        Err(e) => panic!("metrics sink failed: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_is_noop_without_env() {
+        // The test harness does not set BENCH_JSON; guard against a
+        // polluted environment before asserting the no-op.
+        if std::env::var(BENCH_JSON_ENV).is_ok() {
+            return;
+        }
+        let recs = vec![MetricRecord::new("x").with_value("total_cycles", 1.0)];
+        assert!(sink_records_env("n", &recs).unwrap().is_none());
+    }
+}

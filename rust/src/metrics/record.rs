@@ -1,0 +1,409 @@
+//! The [`MetricRecord`] schema and the metric registry.
+//!
+//! A record is one measured configuration — (model, design, sparsity
+//! point, batch/threads) — plus a flat map of named metric values.
+//! Metric *names* carry semantics through the registry
+//! ([`METRIC_SPECS`]): direction (lower/higher is better), whether the
+//! metric is deterministic and therefore CI-gated, and its regression
+//! tolerance. Wall-clock metrics (`wall_*`, `host_*`) are recorded for
+//! trend tracking but never gate, because CI machines are noisy;
+//! simulated cycle counts are exact for a fixed seed and gate tightly.
+
+use crate::config::value::Value;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Which direction of change is an improvement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Smaller values are better (cycles, latency, bytes).
+    LowerIsBetter,
+    /// Larger values are better (speedups, throughput, accuracy).
+    HigherIsBetter,
+}
+
+/// Registry entry describing one metric name (or name prefix).
+#[derive(Debug, Clone, Copy)]
+pub struct MetricSpec {
+    /// Metric name, or prefix when `prefix` is set.
+    pub name: &'static str,
+    /// Match by prefix instead of exact name.
+    pub prefix: bool,
+    /// Improvement direction.
+    pub better: Direction,
+    /// Deterministic metric: regressions beyond tolerance gate CI.
+    pub gate: bool,
+    /// Relative regression tolerance (fraction of the baseline value).
+    pub rel_tol: f64,
+    /// Absolute slack: deltas at or below this never count as
+    /// regressions (guards tiny counts against relative-tolerance noise).
+    pub abs_floor: f64,
+}
+
+/// The metric registry. Exact names first, then prefixes; unknown names
+/// fall back to an ungated spec so future metrics are forward-compatible.
+pub const METRIC_SPECS: &[MetricSpec] = &[
+    // Deterministic simulator counters (exact for a fixed seed).
+    MetricSpec {
+        name: "total_cycles",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.02,
+        abs_floor: 16.0,
+    },
+    MetricSpec {
+        name: "cfu_cycles",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.02,
+        abs_floor: 16.0,
+    },
+    MetricSpec {
+        name: "cfu_stalls",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.05,
+        abs_floor: 64.0,
+    },
+    MetricSpec {
+        name: "loaded_bytes",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.02,
+        abs_floor: 64.0,
+    },
+    // Simulated latency percentiles are derived from cycle counts at a
+    // fixed clock — deterministic, gated.
+    MetricSpec {
+        name: "p50_ms",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.05,
+        abs_floor: 1e-4,
+    },
+    MetricSpec {
+        name: "p99_ms",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.05,
+        abs_floor: 1e-4,
+    },
+    // Simulated device throughput: deterministic (derived from gated
+    // cycle counts) but deliberately informational — gating it would
+    // double-fail every total_cycles regression.
+    MetricSpec {
+        name: "sim_inf_s",
+        prefix: false,
+        better: Direction::HigherIsBetter,
+        gate: false,
+        rel_tol: 0.02,
+        abs_floor: 0.0,
+    },
+    // Figure/table series: cycle-ratio speedups and sparsity ratios.
+    MetricSpec {
+        name: "speedup",
+        prefix: true,
+        better: Direction::HigherIsBetter,
+        gate: true,
+        rel_tol: 0.05,
+        abs_floor: 0.02,
+    },
+    MetricSpec {
+        name: "cycles",
+        prefix: true,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.02,
+        abs_floor: 16.0,
+    },
+    MetricSpec {
+        name: "visited_ratio",
+        prefix: true,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.05,
+        abs_floor: 0.01,
+    },
+    MetricSpec {
+        name: "accuracy",
+        prefix: true,
+        better: Direction::HigherIsBetter,
+        gate: true,
+        rel_tol: 0.02,
+        abs_floor: 0.005,
+    },
+    // FPGA resource estimates (structural, deterministic).
+    MetricSpec {
+        name: "luts",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.01,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "ffs",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.01,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "dsps",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: true,
+        rel_tol: 0.0,
+        abs_floor: 0.0,
+    },
+    // Host wall-clock: informational only, never gated. The generous
+    // tolerance keeps run-to-run jitter out of the diff table; only
+    // swings beyond it get flagged (still non-fatal).
+    MetricSpec {
+        name: "wall_",
+        prefix: true,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 0.0,
+    },
+    MetricSpec {
+        name: "host_",
+        prefix: true,
+        better: Direction::HigherIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 0.0,
+    },
+];
+
+/// Ungated fallback for names the registry does not know.
+pub const UNKNOWN_METRIC: MetricSpec = MetricSpec {
+    name: "",
+    prefix: false,
+    better: Direction::LowerIsBetter,
+    gate: false,
+    rel_tol: 0.0,
+    abs_floor: 0.0,
+};
+
+/// Look up the spec for a metric name: exact match wins, then the first
+/// matching prefix, then the ungated fallback.
+pub fn spec_for(name: &str) -> MetricSpec {
+    for s in METRIC_SPECS {
+        if !s.prefix && s.name == name {
+            return *s;
+        }
+    }
+    for s in METRIC_SPECS {
+        if s.prefix && name.starts_with(s.name) {
+            return *s;
+        }
+    }
+    UNKNOWN_METRIC
+}
+
+/// One measured configuration with its named metric values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricRecord {
+    /// Unique key within a store, e.g. `"e2e/dscnn/CSA/t1"`.
+    pub id: String,
+    /// Model zoo identifier (empty for non-model benches).
+    pub model: String,
+    /// Accelerator design name (empty when not design-specific).
+    pub design: String,
+    /// Unstructured sparsity within surviving blocks.
+    pub x_us: f64,
+    /// 4:4 block sparsity.
+    pub x_ss: f64,
+    /// Model width multiplier.
+    pub scale: f64,
+    /// Requests per batch (0 when not batched).
+    pub batch: u64,
+    /// Worker threads (0 = auto / not applicable).
+    pub threads: u64,
+    /// Metric name → value.
+    pub values: BTreeMap<String, f64>,
+}
+
+impl MetricRecord {
+    /// Empty record with an id.
+    pub fn new(id: &str) -> Self {
+        MetricRecord {
+            id: id.to_string(),
+            model: String::new(),
+            design: String::new(),
+            x_us: 0.0,
+            x_ss: 0.0,
+            scale: 0.0,
+            batch: 0,
+            threads: 0,
+            values: BTreeMap::new(),
+        }
+    }
+
+    /// Builder: set the workload context.
+    #[allow(clippy::too_many_arguments)]
+    pub fn context(
+        mut self,
+        model: &str,
+        design: &str,
+        x_us: f64,
+        x_ss: f64,
+        scale: f64,
+        batch: u64,
+        threads: u64,
+    ) -> Self {
+        self.model = model.to_string();
+        self.design = design.to_string();
+        self.x_us = x_us;
+        self.x_ss = x_ss;
+        self.scale = scale;
+        self.batch = batch;
+        self.threads = threads;
+        self
+    }
+
+    /// Builder: add a metric value.
+    pub fn with_value(mut self, name: &str, v: f64) -> Self {
+        self.set(name, v);
+        self
+    }
+
+    /// Add or overwrite a metric value.
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.values.insert(name.to_string(), v);
+    }
+
+    /// Read a metric value.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.values.get(name).copied()
+    }
+
+    /// Serialize to a JSON value.
+    pub fn to_value(&self) -> Value {
+        let values = Value::Obj(
+            self.values.iter().map(|(k, v)| (k.clone(), Value::Num(*v))).collect(),
+        );
+        Value::obj(vec![
+            ("id", Value::Str(self.id.clone())),
+            ("model", Value::Str(self.model.clone())),
+            ("design", Value::Str(self.design.clone())),
+            ("x_us", Value::Num(self.x_us)),
+            ("x_ss", Value::Num(self.x_ss)),
+            ("scale", Value::Num(self.scale)),
+            ("batch", Value::Num(self.batch as f64)),
+            ("threads", Value::Num(self.threads as f64)),
+            ("values", values),
+        ])
+    }
+
+    /// Deserialize from a JSON value. Context fields other than `id`
+    /// default when absent, so hand-trimmed baselines stay loadable.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let id = v.get("id")?.as_str()?.to_string();
+        let mut rec = MetricRecord::new(&id);
+        if let Some(m) = v.get_opt("model") {
+            rec.model = m.as_str()?.to_string();
+        }
+        if let Some(d) = v.get_opt("design") {
+            rec.design = d.as_str()?.to_string();
+        }
+        if let Some(x) = v.get_opt("x_us") {
+            rec.x_us = x.as_f64()?;
+        }
+        if let Some(x) = v.get_opt("x_ss") {
+            rec.x_ss = x.as_f64()?;
+        }
+        if let Some(x) = v.get_opt("scale") {
+            rec.scale = x.as_f64()?;
+        }
+        if let Some(x) = v.get_opt("batch") {
+            rec.batch = x.as_i64()?.max(0) as u64;
+        }
+        if let Some(x) = v.get_opt("threads") {
+            rec.threads = x.as_i64()?.max(0) as u64;
+        }
+        match v.get_opt("values") {
+            Some(Value::Obj(m)) => {
+                for (k, val) in m {
+                    rec.values.insert(k.clone(), val.as_f64()?);
+                }
+            }
+            Some(other) => {
+                return Err(Error::Config(format!(
+                    "record '{id}': 'values' must be an object, got {other:?}"
+                )));
+            }
+            None => {}
+        }
+        Ok(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_exact_beats_prefix() {
+        // "total_cycles" must hit the exact entry, not the "cycles" prefix
+        // (which would only match names *starting with* "cycles" anyway).
+        let s = spec_for("total_cycles");
+        assert_eq!(s.name, "total_cycles");
+        assert!(s.gate);
+        let s = spec_for("cycles_full_loop");
+        assert_eq!(s.name, "cycles");
+        assert!(s.prefix);
+    }
+
+    #[test]
+    fn registry_wall_and_host_are_ungated() {
+        assert!(!spec_for("wall_mean_ms").gate);
+        assert!(!spec_for("host_inf_s").gate);
+        assert_eq!(spec_for("host_inf_s").better, Direction::HigherIsBetter);
+    }
+
+    #[test]
+    fn registry_unknown_falls_back_ungated() {
+        let s = spec_for("completely_new_metric");
+        assert!(!s.gate);
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let rec = MetricRecord::new("e2e/dscnn/CSA/t1")
+            .context("dscnn", "CSA", 0.5, 0.3, 0.1, 8, 1)
+            .with_value("total_cycles", 123456.0)
+            .with_value("p50_ms", 1.25)
+            .with_value("host_inf_s", 42.5);
+        let json = rec.to_value().to_json();
+        let back = MetricRecord::from_value(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.get("total_cycles"), Some(123456.0));
+    }
+
+    #[test]
+    fn record_from_minimal_json() {
+        let v = Value::parse(r#"{"id":"x","values":{"speedup_csa":4.9}}"#).unwrap();
+        let rec = MetricRecord::from_value(&v).unwrap();
+        assert_eq!(rec.id, "x");
+        assert_eq!(rec.model, "");
+        assert_eq!(rec.get("speedup_csa"), Some(4.9));
+    }
+
+    #[test]
+    fn record_rejects_bad_values_shape() {
+        let v = Value::parse(r#"{"id":"x","values":[1,2]}"#).unwrap();
+        assert!(MetricRecord::from_value(&v).is_err());
+        let v = Value::parse(r#"{"values":{}}"#).unwrap();
+        assert!(MetricRecord::from_value(&v).is_err());
+    }
+}

@@ -19,7 +19,7 @@ fn run(args: &[&str]) -> (bool, String, String) {
 fn help_lists_subcommands() {
     let (ok, stdout, _) = run(&["--help"]);
     assert!(ok);
-    for sub in ["experiment", "serve", "bench-e2e", "encode", "resources", "models"] {
+    for sub in ["experiment", "serve", "bench-e2e", "metrics", "encode", "resources", "models"] {
         assert!(stdout.contains(sub), "help missing '{sub}':\n{stdout}");
     }
 }
@@ -106,6 +106,149 @@ fn bench_e2e_reports_thread_scaling() {
     assert!(stdout.contains("aggregate host throughput"), "{stdout}");
     assert!(stdout.contains("CSA"), "{stdout}");
     assert!(stdout.contains("baseline-simd"), "{stdout}");
+}
+
+fn run_with_exit(args: &[&str]) -> (Option<i32>, String, String) {
+    let out = bin().args(args).output().expect("spawn binary");
+    (
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparse-riscv-cli-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Tiny deterministic bench-e2e invocation shared by the gate tests.
+fn bench_args<'a>(extra: &[&'a str]) -> Vec<&'a str> {
+    let mut v = vec![
+        "bench-e2e", "--models", "dscnn", "--designs", "csa", "--batch", "2", "--threads", "2",
+        "--scale", "0.07",
+    ];
+    v.extend_from_slice(extra);
+    v
+}
+
+#[test]
+fn bench_e2e_json_writes_a_loadable_store() {
+    let dir = tmpdir("json");
+    let path = dir.join("fresh.json");
+    let path_s = path.to_str().unwrap();
+    let (ok, stdout, stderr) = run(&bench_args(&["--json", path_s]));
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("metrics: wrote"), "{stdout}");
+    let src = std::fs::read_to_string(&path).unwrap();
+    assert!(src.contains("e2e/dscnn/CSA/t1"), "{src}");
+    assert!(src.contains("total_cycles"), "{src}");
+
+    // `metrics show` renders the store.
+    let (code, stdout, stderr) = run_with_exit(&["metrics", "show", path_s]);
+    assert_eq!(code, Some(0), "stderr: {stderr}");
+    assert!(stdout.contains("e2e/dscnn/CSA/t1"), "{stdout}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_e2e_check_seeds_then_passes_then_fails_on_perturbation() {
+    let dir = tmpdir("gate");
+    let base = dir.join("BENCH_e2e.json");
+    let base_s = base.to_str().unwrap();
+
+    // 1. Missing baseline: --check bootstraps it and exits 0.
+    let (code, stdout, stderr) = run_with_exit(&bench_args(&["--baseline", base_s, "--check"]));
+    assert_eq!(code, Some(0), "stderr: {stderr}");
+    assert!(stdout.contains("bootstrap"), "{stdout}");
+    assert!(base.exists());
+
+    // 2. Clean tree: identical run passes the gate.
+    let (code, stdout, stderr) = run_with_exit(&bench_args(&["--baseline", base_s, "--check"]));
+    assert_eq!(code, Some(0), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("verdict: PASS"), "{stdout}");
+
+    // 3. Perturb a cycle metric beyond tolerance: the gate trips.
+    let src = std::fs::read_to_string(&base).unwrap();
+    let perturbed = {
+        // Halve the committed total_cycles values so the fresh run looks
+        // like a >2% cycle regression.
+        let needle = "\"total_cycles\": ";
+        let mut out = String::new();
+        let mut rest = src.as_str();
+        while let Some(pos) = rest.find(needle) {
+            let (head, tail) = rest.split_at(pos + needle.len());
+            out.push_str(head);
+            let end = tail.find([',', '\n', '}']).unwrap();
+            let val: f64 = tail[..end].trim().parse().unwrap();
+            out.push_str(&format!("{}", (val / 2.0) as i64));
+            rest = &tail[end..];
+        }
+        out.push_str(rest);
+        out
+    };
+    assert_ne!(perturbed, src, "perturbation must change the file");
+    std::fs::write(&base, &perturbed).unwrap();
+    let (code, stdout, stderr) = run_with_exit(&bench_args(&["--baseline", base_s, "--check"]));
+    assert_eq!(code, Some(1), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("REGRESSED"), "{stdout}");
+    assert!(stderr.contains("perf gate"), "{stderr}");
+
+    // 4. Without --check the regression is reported but not fatal.
+    let (code, stdout, _) = run_with_exit(&bench_args(&["--baseline", base_s]));
+    assert_eq!(code, Some(0), "{stdout}");
+    assert!(stdout.contains("verdict: FAIL"), "{stdout}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn metrics_diff_exit_codes_and_verdict() {
+    let dir = tmpdir("diff");
+    let old = dir.join("old.json");
+    let new = dir.join("new.json");
+    std::fs::write(
+        &old,
+        r#"{"schema":1,"note":"","records":{"r":{"id":"r","values":{"total_cycles":1000}}}}"#,
+    )
+    .unwrap();
+    std::fs::write(
+        &new,
+        r#"{"schema":1,"note":"","records":{"r":{"id":"r","values":{"total_cycles":1000}}}}"#,
+    )
+    .unwrap();
+    let (code, stdout, stderr) =
+        run_with_exit(&["metrics", "diff", old.to_str().unwrap(), new.to_str().unwrap()]);
+    assert_eq!(code, Some(0), "stderr: {stderr}");
+    assert!(stdout.contains("verdict: PASS"), "{stdout}");
+
+    std::fs::write(
+        &new,
+        r#"{"schema":1,"note":"","records":{"r":{"id":"r","values":{"total_cycles":2000}}}}"#,
+    )
+    .unwrap();
+    let verdict = dir.join("verdict.json");
+    let (code, stdout, _) = run_with_exit(&[
+        "metrics",
+        "diff",
+        old.to_str().unwrap(),
+        new.to_str().unwrap(),
+        "--json-verdict",
+        verdict.to_str().unwrap(),
+    ]);
+    assert_eq!(code, Some(1), "{stdout}");
+    assert!(stdout.contains("REGRESSED"), "{stdout}");
+    let v = std::fs::read_to_string(&verdict).unwrap();
+    assert!(v.contains("\"passed\":false"), "{v}");
+
+    // Usage errors: wrong arity and missing files exit non-zero.
+    let (code, _, stderr) = run_with_exit(&["metrics", "diff", "only-one.json"]);
+    assert_eq!(code, Some(1));
+    assert!(stderr.contains("usage"), "{stderr}");
+    let (code, _, stderr) = run_with_exit(&["metrics", "diff", "a.json", "b.json"]);
+    assert_eq!(code, Some(1));
+    assert!(stderr.contains("a.json"), "{stderr}");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
