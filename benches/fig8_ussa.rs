@@ -40,16 +40,7 @@ fn simulate(weights: &[i8], design: DesignKind, model: &CostModel) -> u64 {
             prep.lane_words(lane),
             |j| {
                 let p = j * 4;
-                (
-                    sparse_riscv::encoding::pack::pack4_i8(&[
-                        xs[p],
-                        xs[p + 1],
-                        xs[p + 2],
-                        xs[p + 3],
-                    ]),
-                    1,
-                    0,
-                )
+                (sparse_riscv::encoding::pack::pack4_le(&xs[p..p + 4]), 1, 0)
             },
             0,
             &mut counter,

@@ -155,11 +155,11 @@ pub fn to_records(cfg: &E2eConfig, summary: &E2eSummary) -> Vec<MetricRecord> {
 pub fn run_e2e(cfg: &E2eConfig) -> Result<E2eSummary> {
     let cache = Arc::new(PreparedCache::new());
     let single = BatchEngine::with_cache(
-        BatchOptions { threads: 1, clock_hz: cfg.clock_hz, verify: false },
+        BatchOptions { threads: 1, clock_hz: cfg.clock_hz, ..Default::default() },
         Arc::clone(&cache),
     );
     let multi = BatchEngine::with_cache(
-        BatchOptions { threads: cfg.threads, clock_hz: cfg.clock_hz, verify: false },
+        BatchOptions { threads: cfg.threads, clock_hz: cfg.clock_hz, ..Default::default() },
         Arc::clone(&cache),
     );
 
@@ -305,6 +305,10 @@ mod tests {
             assert_eq!(t1.get(m), tn.get(m), "{m} differs across thread sides");
         }
         assert!(t1.get("total_cycles").unwrap() > 0.0);
+        // The serve-path host throughput rides along as an informational
+        // metric so compiled-path speedups show up in baseline diffs.
+        assert!(t1.get("host_infer_per_s").unwrap() > 0.0);
+        assert!(!crate::metrics::spec_for("host_infer_per_s").gate);
         let agg = records.iter().find(|r| r.id == "e2e/aggregate").unwrap();
         assert!(agg.get("host_scaling").is_some());
     }

@@ -13,6 +13,20 @@ use crate::encoding::pack::unpack4_i8;
 use crate::error::{Error, Result};
 use crate::isa::{CfuOpcode, DesignKind};
 
+/// Cycles of one `cfu_simd_mac`: always 1, sparsity-blind. Exposed so the
+/// prepare-time lane-schedule compiler can charge per-word cycles without
+/// instantiating the unit.
+#[inline]
+pub const fn simd_mac_cycles() -> u32 {
+    1
+}
+
+/// Cycles of one `cfu_seq_mac`: always 4 (single multiplier, four lanes).
+#[inline]
+pub const fn seq_mac_cycles() -> u32 {
+    4
+}
+
 /// Parallel SIMD MAC: 1 cycle per block (4 DSP multipliers).
 #[derive(Debug, Clone)]
 pub struct BaselineSimdMac {

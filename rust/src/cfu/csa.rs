@@ -18,6 +18,15 @@ use crate::encoding::pack::unpack4_i8;
 use crate::error::{Error, Result};
 use crate::isa::{CfuOpcode, DesignKind};
 
+/// Cycles one `csa_vcmac` takes for a packed *encoded* weight word: one
+/// per non-zero decoded weight, floored at 1 — the lookahead bits never
+/// inflate the count. Pure function of the word (prepare-time schedule
+/// compiler oracle).
+#[inline]
+pub fn vcmac_cycles(rs1: u32) -> u32 {
+    mac_cycles(case_signal(&decode_weights(rs1)))
+}
+
 /// The CSA CFU.
 #[derive(Debug, Clone)]
 pub struct CsaCfu {
@@ -82,6 +91,24 @@ mod tests {
         let r = cfu.execute(CfuOpcode::CsaVcMac, rs1, x).unwrap();
         assert_eq!(r.cycles, 1);
         assert_eq!(r.rd as i32, 5);
+    }
+
+    #[test]
+    fn vcmac_cycles_fn_matches_executed_unit() {
+        let mut rng = Pcg32::new(0xACD);
+        let mut cfu = CsaCfu::new(0);
+        for _ in 0..256 {
+            let w: [i8; 4] = std::array::from_fn(|_| {
+                if rng.bernoulli(0.5) {
+                    0
+                } else {
+                    rng.range_i32(-64, 63) as i8
+                }
+            });
+            let rs1 = encoded_word(w, rng.range_i32(0, 15) as u8);
+            let r = cfu.execute(CfuOpcode::CsaVcMac, rs1, 0).unwrap();
+            assert_eq!(vcmac_cycles(rs1), r.cycles, "w={w:?}");
+        }
     }
 
     #[test]

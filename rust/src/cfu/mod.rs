@@ -123,6 +123,20 @@ pub(crate) fn dot4(weights: [i8; 4], inputs: [i8; 4], input_offset: i32) -> i32 
     acc
 }
 
+/// [`dot4`] over packed operand words — the single multiply every MAC
+/// design reduces to once its weights are decoded (zero weights
+/// contribute `0 * (x + off) = 0`, so the variable-cycle units' lane
+/// compaction never changes the value). The compiled lane schedules run
+/// their inner loop through this.
+#[inline]
+pub(crate) fn dot4_words(w_word: u32, x_word: u32, input_offset: i32) -> i32 {
+    dot4(
+        crate::encoding::pack::unpack4_i8(w_word),
+        crate::encoding::pack::unpack4_i8(x_word),
+        input_offset,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -13,6 +13,15 @@ use crate::encoding::pack::unpack4_i8;
 use crate::error::{Error, Result};
 use crate::isa::{CfuOpcode, DesignKind};
 
+/// Cycles one `ussa_vcmac` takes for a packed weight word: one per
+/// non-zero weight, floored at 1 for an all-zero block. Pure function of
+/// the word — the prepare-time lane-schedule compiler charges stalls from
+/// this without executing the unit.
+#[inline]
+pub fn vcmac_cycles(rs1: u32) -> u32 {
+    mac_cycles(case_signal(&unpack4_i8(rs1)))
+}
+
 /// The USSA CFU.
 #[derive(Debug, Clone)]
 pub struct UssaCfu {
@@ -75,6 +84,24 @@ mod tests {
         for (w, expect_cycles) in cases {
             let r = cfu.execute(CfuOpcode::UssaVcMac, pack4_i8(&w), x).unwrap();
             assert_eq!(r.cycles, expect_cycles, "weights {w:?}");
+        }
+    }
+
+    #[test]
+    fn vcmac_cycles_fn_matches_executed_unit() {
+        let mut rng = Pcg32::new(0xACC);
+        let mut cfu = UssaCfu::new(0);
+        for _ in 0..256 {
+            let w: [i8; 4] = std::array::from_fn(|_| {
+                if rng.bernoulli(0.5) {
+                    0
+                } else {
+                    rng.range_i32(-128, 127) as i8
+                }
+            });
+            let rs1 = pack4_i8(&w);
+            let r = cfu.execute(CfuOpcode::UssaVcMac, rs1, 0).unwrap();
+            assert_eq!(vcmac_cycles(rs1), r.cycles, "w={w:?}");
         }
     }
 

@@ -21,10 +21,11 @@
 use super::scheduler::JobPool;
 use crate::error::Result;
 use crate::isa::DesignKind;
+use crate::kernels::ExecMode;
 use crate::metrics::MetricRecord;
 use crate::models::builder::{apply_sparsity, random_input, ModelConfig};
 use crate::models::zoo::{build_model, input_shape};
-use crate::simulator::{verified_backend_for, ExecBackend, ModelKey, PreparedCache, PreparedModel};
+use crate::simulator::{backend_with_mode, ExecBackend, ModelKey, PreparedCache, PreparedModel};
 use crate::tensor::quant::QuantParams;
 use crate::tensor::QTensor;
 use crate::util::stats::{OnlineStats, Percentiles};
@@ -108,6 +109,12 @@ pub struct BatchReport {
     pub wall_seconds: f64,
     /// Whether the prepared model came from the cache.
     pub cache_hit: bool,
+    /// Cumulative prepared-model cache hits at report time.
+    pub cache_hits: u64,
+    /// Cumulative prepared-model cache misses (builds) at report time.
+    pub cache_misses: u64,
+    /// Cumulative prepared-model LRU evictions at report time.
+    pub cache_evictions: u64,
     /// Per-request predicted classes (argmax of the head).
     pub predictions: Vec<usize>,
 }
@@ -150,6 +157,10 @@ impl BatchReport {
         self.latencies.extend_from_slice(&other.latencies);
         self.wall_seconds += other.wall_seconds;
         self.cache_hit &= other.cache_hit;
+        // Cache counters are cumulative snapshots — keep the latest.
+        self.cache_hits = self.cache_hits.max(other.cache_hits);
+        self.cache_misses = self.cache_misses.max(other.cache_misses);
+        self.cache_evictions = self.cache_evictions.max(other.cache_evictions);
         self.predictions.extend_from_slice(&other.predictions);
     }
 
@@ -182,7 +193,10 @@ impl BatchReport {
             .with_value("p50_ms", self.p50 * 1e3)
             .with_value("p99_ms", self.p99 * 1e3)
             .with_value("sim_inf_s", self.sim_throughput(clock_hz))
-            .with_value("host_inf_s", self.host_throughput())
+            // Informational serve-path throughput (host_ prefix → never
+            // gated): makes compiled-path host speedups visible in
+            // baseline diffs.
+            .with_value("host_infer_per_s", self.host_throughput())
             .with_value("wall_s", self.wall_seconds)
     }
 
@@ -209,11 +223,23 @@ pub struct BatchOptions {
     pub clock_hz: u64,
     /// Verify every MAC layer against the golden reference ops.
     pub verify: bool,
+    /// Lane execution path: compiled schedules (default) or the
+    /// interpreted CFU oracle.
+    pub exec_mode: ExecMode,
+    /// LRU capacity of the prepared-model cache (ignored when an
+    /// external cache is shared via [`BatchEngine::with_cache`]).
+    pub cache_capacity: usize,
 }
 
 impl Default for BatchOptions {
     fn default() -> Self {
-        BatchOptions { threads: 0, clock_hz: 100_000_000, verify: false }
+        BatchOptions {
+            threads: 0,
+            clock_hz: 100_000_000,
+            verify: false,
+            exec_mode: ExecMode::Compiled,
+            cache_capacity: PreparedCache::DEFAULT_CAPACITY,
+        }
     }
 }
 
@@ -234,9 +260,10 @@ pub struct BatchEngine {
 }
 
 impl BatchEngine {
-    /// Engine with a fresh cache.
+    /// Engine with a fresh cache (LRU-bounded by `opts.cache_capacity`).
     pub fn new(opts: BatchOptions) -> Self {
-        BatchEngine { pool: JobPool::new(opts.threads), cache: Arc::new(PreparedCache::new()), opts }
+        let cache = Arc::new(PreparedCache::with_capacity(opts.cache_capacity));
+        BatchEngine { pool: JobPool::new(opts.threads), cache, opts }
     }
 
     /// Engine sharing an existing cache (e.g. one cache across several
@@ -264,9 +291,14 @@ impl BatchEngine {
         Ok((0..n).map(|_| random_input(shape.clone(), params, &mut rng)).collect())
     }
 
+    /// Build the execution backend for a spec under this engine's options.
+    fn backend(&self, design: DesignKind) -> Box<dyn ExecBackend> {
+        backend_with_mode(design, self.opts.verify, self.opts.exec_mode)
+    }
+
     /// Fetch (or build) the prepared model for a spec.
     pub fn prepared(&self, spec: &BatchSpec) -> Result<(Arc<PreparedModel>, bool)> {
-        let backend = verified_backend_for(spec.design, self.opts.verify);
+        let backend = self.backend(spec.design);
         self.prepared_with(spec, backend.as_ref())
     }
 
@@ -286,8 +318,7 @@ impl BatchEngine {
     /// pool, and aggregate the per-request reports.
     pub fn run_batch(&self, spec: &BatchSpec, requests: Vec<QTensor>) -> Result<BatchReport> {
         let t0 = Instant::now();
-        let backend: Arc<dyn ExecBackend> =
-            Arc::from(verified_backend_for(spec.design, self.opts.verify));
+        let backend: Arc<dyn ExecBackend> = Arc::from(self.backend(spec.design));
         let (prepared, cache_hit) = self.prepared_with(spec, backend.as_ref())?;
         let classes = prepared.classes;
         let n = requests.len();
@@ -326,6 +357,9 @@ impl BatchEngine {
             p99: 0.0,
             wall_seconds: 0.0,
             cache_hit,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            cache_evictions: self.cache.evictions(),
             predictions: Vec::with_capacity(n),
         };
         for s in stats {
@@ -429,10 +463,63 @@ mod tests {
         assert_eq!(rec.design, "CSA");
         assert_eq!(rec.get("total_cycles"), Some(report.total_cycles as f64));
         assert!(rec.get("p99_ms").unwrap() >= rec.get("p50_ms").unwrap());
-        assert!(rec.get("host_inf_s").unwrap() > 0.0);
+        assert!(rec.get("host_infer_per_s").unwrap() > 0.0);
         // Cycle metrics must be gated, wall metrics must not.
         assert!(crate::metrics::spec_for("total_cycles").gate);
         assert!(!crate::metrics::spec_for("wall_s").gate);
+        assert!(!crate::metrics::spec_for("host_infer_per_s").gate);
+    }
+
+    #[test]
+    fn interpreted_engine_matches_compiled_engine() {
+        // The full batched path under the interpreted oracle must land on
+        // the same cycles, stalls and predictions as the compiled default.
+        let spec = tiny_spec(DesignKind::Csa);
+        let reqs = BatchEngine::gen_requests("dscnn", 3, 31).unwrap();
+        let compiled = BatchEngine::new(BatchOptions::default());
+        let oracle = BatchEngine::new(BatchOptions {
+            exec_mode: ExecMode::Interpreted,
+            ..Default::default()
+        });
+        let a = compiled.run_batch(&spec, reqs.clone()).unwrap();
+        let b = oracle.run_batch(&spec, reqs).unwrap();
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.cfu_cycles, b.cfu_cycles);
+        assert_eq!(a.cfu_stalls, b.cfu_stalls);
+        assert_eq!(a.loaded_bytes, b.loaded_bytes);
+        assert_eq!(a.predictions, b.predictions);
+    }
+
+    #[test]
+    fn report_carries_cache_counters() {
+        let spec = tiny_spec(DesignKind::Sssa);
+        let reqs = BatchEngine::gen_requests("dscnn", 4, 32).unwrap();
+        let engine = BatchEngine::new(BatchOptions::default());
+        let streamed = engine.run_stream(&spec, reqs, 2).unwrap();
+        // 2 batches: 1 build then 1 hit, no evictions at default capacity.
+        assert_eq!(streamed.cache_misses, 1);
+        assert_eq!(streamed.cache_hits, 1);
+        assert_eq!(streamed.cache_evictions, 0);
+    }
+
+    #[test]
+    fn tiny_cache_capacity_evicts_and_still_serves() {
+        let reqs = BatchEngine::gen_requests("dscnn", 1, 33).unwrap();
+        let engine =
+            BatchEngine::new(BatchOptions { cache_capacity: 1, ..Default::default() });
+        let a = engine.run_batch(&tiny_spec(DesignKind::Csa), reqs.clone()).unwrap();
+        let b = engine.run_batch(&tiny_spec(DesignKind::Ussa), reqs.clone()).unwrap();
+        let c = engine.run_batch(&tiny_spec(DesignKind::Csa), reqs).unwrap();
+        assert_eq!(a.completed + b.completed + c.completed, 3);
+        // Capacity 1: the USSA build evicted CSA, the CSA re-run evicted
+        // USSA — every batch was a build, two were evictions.
+        assert_eq!(engine.cache().misses(), 3);
+        assert_eq!(engine.cache().evictions(), 2);
+        assert_eq!(c.cache_evictions, 2);
+        assert_eq!(engine.cache().len(), 1);
+        // Correctness is unaffected by eviction (same prepared weights).
+        assert_eq!(a.total_cycles, c.total_cycles);
+        assert_eq!(a.predictions, c.predictions);
     }
 
     #[test]

@@ -18,6 +18,31 @@ pub enum InstrClass {
     Cfu,
 }
 
+/// Precomputed instruction counts for a whole lane (or any other
+/// code region), flushed to a [`CycleCounter`] in one call.
+///
+/// The counts are *cost-model independent* — cycle conversion happens at
+/// flush time via [`CycleCounter::charge`] — so a charge compiled once at
+/// prepare time replays identically under any [`CostModel`] (vexriscv,
+/// mac-only, custom).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BulkCharge {
+    /// Integer ALU instructions.
+    pub alu: u64,
+    /// Word loads.
+    pub loads: u64,
+    /// Word stores.
+    pub stores: u64,
+    /// Taken branches.
+    pub branches_taken: u64,
+    /// Not-taken branches.
+    pub branches_not_taken: u64,
+    /// CFU instructions issued.
+    pub cfu_issues: u64,
+    /// Total CFU stall cycles (multi-cycle response waits).
+    pub cfu_stalls: u64,
+}
+
 /// Accumulates cycles and instruction counts for one simulated kernel run.
 #[derive(Debug, Clone)]
 pub struct CycleCounter {
@@ -161,6 +186,21 @@ impl CycleCounter {
         self.stored_bytes += stores * 4;
     }
 
+    /// Flush a precomputed [`BulkCharge`] (the compiled-lane-schedule
+    /// flush path; totals identical to charging each instruction).
+    #[inline]
+    pub fn charge(&mut self, c: &BulkCharge) {
+        self.charge_bulk(
+            c.alu,
+            c.loads,
+            c.stores,
+            c.branches_taken,
+            c.branches_not_taken,
+            c.cfu_issues,
+            c.cfu_stalls,
+        );
+    }
+
     /// Merge another counter (parallel layer simulation).
     pub fn merge(&mut self, other: &CycleCounter) {
         self.cycles += other.cycles;
@@ -251,6 +291,27 @@ mod tests {
         assert_eq!(a.cfu_stalls(), b.cfu_stalls());
         assert_eq!(a.loaded_bytes(), b.loaded_bytes());
         assert_eq!(a.stored_bytes(), b.stored_bytes());
+    }
+
+    #[test]
+    fn bulk_charge_struct_equals_charge_bulk() {
+        let c = BulkCharge {
+            alu: 7,
+            loads: 3,
+            stores: 2,
+            branches_taken: 2,
+            branches_not_taken: 1,
+            cfu_issues: 2,
+            cfu_stalls: 2,
+        };
+        let mut a = CycleCounter::new(CostModel::vexriscv());
+        a.charge(&c);
+        let mut b = CycleCounter::new(CostModel::vexriscv());
+        b.charge_bulk(7, 3, 2, 2, 1, 2, 2);
+        assert_eq!(a.cycles(), b.cycles());
+        assert_eq!(a.total_instrs(), b.total_instrs());
+        assert_eq!(a.cfu_cycles(), b.cfu_cycles());
+        assert_eq!(a.loaded_bytes(), b.loaded_bytes());
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub mod cost_model;
 pub mod counter;
 
 pub use cost_model::CostModel;
-pub use counter::{CycleCounter, InstrClass};
+pub use counter::{BulkCharge, CycleCounter, InstrClass};

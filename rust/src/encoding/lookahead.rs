@@ -121,6 +121,21 @@ pub fn visited_blocks_with_max(row: &[i8], max_skip: u8) -> usize {
     visited
 }
 
+/// The block indices the SSSA/CSA while-loop actually visits in `row`
+/// (4-bit skip field) — the walk the compiled lane schedules materialize
+/// at prepare time. Computed from the *decoded* weights, so it is the
+/// software-side oracle for the hardware walk over packed skip bits.
+pub fn visited_indices(row: &[i8]) -> Vec<usize> {
+    let nblocks = row.len() / BLOCK;
+    let mut out = Vec::new();
+    let mut b = 0usize;
+    while b < nblocks {
+        out.push(b);
+        b += 1 + skip_of_block(row, b) as usize;
+    }
+    out
+}
+
 /// Result of encoding a weight tensor: encoded bytes plus bookkeeping.
 #[derive(Debug, Clone)]
 pub struct EncodedLanes {
@@ -321,6 +336,25 @@ mod tests {
         // decoded zero block is still zero ⇒ MAC contributes nothing
         let dec = decode_lanes(&enc.encoded);
         assert_eq!(&dec[0..8], &[0i8; 8]);
+    }
+
+    #[test]
+    fn visited_indices_match_walk_count() {
+        // blocks: [nz] [z] [z] [nz] [z] — walk: 0 (skip 2) → 3 (skip 1) → end
+        let row: Vec<i8> = [
+            [1i8, 0, 0, 0],
+            [0, 0, 0, 0],
+            [0, 0, 0, 0],
+            [2, 0, 0, 0],
+            [0, 0, 0, 0],
+        ]
+        .concat();
+        assert_eq!(visited_indices(&row), vec![0, 3]);
+        assert_eq!(visited_indices(&row).len(), visited_blocks_with_max(&row, MAX_SKIP_BLOCKS));
+        // leading zero blocks are themselves visited
+        let row2: Vec<i8> =
+            [[0i8, 0, 0, 0], [0, 0, 0, 0], [1, 0, 0, 0], [2, 0, 0, 0]].concat();
+        assert_eq!(visited_indices(&row2), vec![0, 2, 3]);
     }
 
     #[test]

@@ -11,6 +11,19 @@ pub fn pack4_i8(lanes: &[i8; 4]) -> u32 {
     u32::from_le_bytes([lanes[0] as u8, lanes[1] as u8, lanes[2] as u8, lanes[3] as u8])
 }
 
+/// Pack a 4-byte slice into a u32 (lane i → byte i). The slice form costs
+/// one bounds check at the call site instead of the four indexed loads of
+/// `pack4_i8(&[x[p], x[p+1], x[p+2], x[p+3]])` — the kernels' inner loops
+/// pack every input word through this.
+///
+/// Panics if `lanes.len() != 4` (kernel lane lengths are multiples of 4
+/// by construction).
+#[inline]
+pub fn pack4_le(lanes: &[i8]) -> u32 {
+    let arr: [i8; 4] = lanes.try_into().expect("pack4_le needs exactly 4 bytes");
+    pack4_i8(&arr)
+}
+
 /// Unpack a u32 into four i8 lanes.
 #[inline]
 pub fn unpack4_i8(word: u32) -> [i8; 4] {
@@ -55,6 +68,21 @@ mod tests {
             assert_eq!(pack4_u32_skip_bits(word), skip);
             assert_eq!(pack4_u32_skip_bits(word), decode_skip(&block));
         }
+    }
+
+    #[test]
+    fn pack4_le_matches_pack4_i8() {
+        let xs: Vec<i8> = vec![-1, 0, 63, -64, 17, -128, 127, 5];
+        for p in 0..=4 {
+            let arr: [i8; 4] = xs[p..p + 4].try_into().unwrap();
+            assert_eq!(pack4_le(&xs[p..p + 4]), pack4_i8(&arr));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn pack4_le_rejects_short_slices() {
+        pack4_le(&[1i8, 2, 3]);
     }
 
     #[test]

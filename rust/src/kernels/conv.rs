@@ -1,14 +1,40 @@
 //! CFU-accelerated convolution kernel (normal + depthwise).
 
-use super::lane::{prepare_lanes, run_lane, PreparedLanes};
-use super::KernelRun;
+use super::lane::{
+    prepare_lanes, run_lane, run_lane_compiled, PreparedLanes, INPUT_COST_DENSE, INPUT_COST_GATHER,
+};
+use super::{ExecMode, KernelRun};
 use crate::cfu::AnyCfu;
 use crate::cpu::{CostModel, CycleCounter};
-use crate::encoding::pack::pack4_i8;
+use crate::encoding::pack::{pack4_i8, pack4_le};
 use crate::error::{Error, Result};
 use crate::isa::DesignKind;
 use crate::nn::conv2d::Conv2dOp;
 use crate::tensor::{QTensor, Shape};
+
+/// Gather one depthwise input word from precomputed tap base indices:
+/// `tap_base[t] + oc` is the byte for tap `t`, or the input zero point
+/// when the tap is padding (`tap_base[t] < 0`). Padded tail lanes beyond
+/// `taps` also supply the zero point.
+#[inline]
+fn dw_gather_word(
+    x: &[i8],
+    tap_base: &[i64],
+    taps: usize,
+    oc: usize,
+    input_zp: i8,
+    j: usize,
+) -> u32 {
+    let mut lanes4 = [input_zp; 4];
+    let t0 = j * 4;
+    let end = (t0 + 4).min(taps);
+    for (k, &tb) in tap_base[t0..end].iter().enumerate() {
+        if tb >= 0 {
+            lanes4[k] = x[tb as usize + oc];
+        }
+    }
+    pack4_i8(&lanes4)
+}
 
 /// A conv layer prepared for one accelerator design: weights packed (and
 /// for SSSA/CSA lookahead-encoded) per lane.
@@ -95,8 +121,32 @@ impl PreparedConv {
         &self.op
     }
 
-    /// Run the kernel over an NHWC input under a CPU cost model.
+    /// Run the kernel over an NHWC input under a CPU cost model, through
+    /// the compiled lane schedules (the default execution path).
     pub fn run(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
+        self.run_with_mode(input, model, ExecMode::Compiled)
+    }
+
+    /// Run under an explicit [`ExecMode`] — `Interpreted` is the
+    /// per-instruction CFU oracle the compiled path is differentially
+    /// tested against (bit-identical outputs and cycle totals).
+    pub fn run_with_mode(
+        &self,
+        input: &QTensor,
+        model: &CostModel,
+        mode: ExecMode,
+    ) -> Result<KernelRun> {
+        match mode {
+            ExecMode::Compiled => self.run_compiled(input, model),
+            ExecMode::Interpreted => self.run_interpreted(input, model),
+        }
+    }
+
+    /// Validate the input shape and resolve the output geometry.
+    fn check_geometry(
+        &self,
+        input: &QTensor,
+    ) -> Result<(usize, usize, usize, usize, usize, i64, i64)> {
         let op = &self.op;
         let ishape = input.shape();
         if ishape.rank() != 4 || ishape.c() != op.in_c {
@@ -107,18 +157,191 @@ impl PreparedConv {
         }
         let (n, in_h, in_w) = (ishape.n(), ishape.h(), ishape.w());
         let (out_h, out_w, pad_h, pad_w) = op.geometry(in_h, in_w);
+        Ok((n, in_h, in_w, out_h, out_w, pad_h, pad_w))
+    }
+
+    /// Precompute the oc-invariant gather base index of every depthwise
+    /// tap for one output position: `tap_base[t] + oc` is the input byte
+    /// of tap `t` (via the prepare-time `dw_taps` lookup), or `-1` when
+    /// the tap falls in padding. Fully out-of-bounds kernel rows are
+    /// marked wholesale before the lane runs (the depthwise analogue of
+    /// the normal-conv `oob_h` early-continue) — host-side work only;
+    /// the modelled gather charges are untouched.
+    fn fill_dw_tap_bases(
+        &self,
+        tap_base: &mut [i64],
+        b: usize,
+        oh: usize,
+        ow: usize,
+        geom: (usize, usize, i64, i64),
+    ) {
+        let op = &self.op;
+        let (in_h, in_w, pad_h, pad_w) = geom;
+        let base_h = (oh * op.stride) as i64 - pad_h;
+        let base_w = (ow * op.stride) as i64 - pad_w;
+        for kh in 0..op.kh {
+            let ih = base_h + kh as i64;
+            let row = kh * op.kw;
+            if ih < 0 || ih >= in_h as i64 {
+                tap_base[row..row + op.kw].fill(-1);
+                continue;
+            }
+            let row_base = (b * in_h + ih as usize) * in_w;
+            for (t, slot) in tap_base[row..row + op.kw].iter_mut().enumerate() {
+                let (_, kw) = self.dw_taps[row + t];
+                let iw = base_w + kw as i64;
+                *slot = if iw < 0 || iw >= in_w as i64 {
+                    -1
+                } else {
+                    ((row_base + iw as usize) * op.in_c) as i64
+                };
+            }
+        }
+    }
+
+    /// Table-driven execution: per-lane compiled schedules plus
+    /// packed-input reuse (each valid input window word is packed once
+    /// per output position and shared across all `out_c` lanes).
+    fn run_compiled(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
+        let op = &self.op;
+        let (n, in_h, in_w, out_h, out_w, pad_h, pad_w) = self.check_geometry(input)?;
+        let mut out =
+            QTensor::zeros(Shape::nhwc(n, out_h, out_w, op.out_c), op.output_params);
+        let mut counter = CycleCounter::new(model.clone());
+        let x = input.data();
+        let input_zp = op.input_params.zero_point.clamp(-128, 127) as i8;
+        let input_offset = op.input_offset();
+        let out_data = out.data_mut();
+        let mut out_idx = 0usize;
+        if op.depthwise {
+            let taps = op.kh * op.kw;
+            let mut tap_base = vec![-1i64; taps];
+            for b in 0..n {
+                for oh in 0..out_h {
+                    for ow in 0..out_w {
+                        self.fill_dw_tap_bases(&mut tap_base, b, oh, ow, (in_h, in_w, pad_h, pad_w));
+                        for oc in 0..op.out_c {
+                            let acc = run_lane_compiled(
+                                self.lanes.lane_schedule(oc),
+                                input_offset,
+                                INPUT_COST_GATHER,
+                                |j| dw_gather_word(x, &tap_base, taps, oc, input_zp, j),
+                                op.bias[oc],
+                                &mut counter,
+                            );
+                            // acc-init + requantize ALU, bias load, store —
+                            // identical to the interpreted path's flush.
+                            counter.charge_bulk(7, 1, 1, 0, 0, 0, 0);
+                            out_data[out_idx] = op.requant.apply(acc);
+                            out_idx += 1;
+                        }
+                    }
+                }
+            }
+        } else {
+            let nb = op.in_c / 4;
+            let kk = op.kh * op.kw;
+            let mut win_words = vec![0u32; kk * nb];
+            let mut row_ok = vec![false; op.kh];
+            let mut tap_ok = vec![false; kk];
+            for b in 0..n {
+                for oh in 0..out_h {
+                    for ow in 0..out_w {
+                        // Pack the input window once; every oc reuses it
+                        // (the interpreted oracle re-packs per oc).
+                        for kh in 0..op.kh {
+                            let ih = (oh * op.stride + kh) as i64 - pad_h;
+                            let ok_h = ih >= 0 && ih < in_h as i64;
+                            row_ok[kh] = ok_h;
+                            if !ok_h {
+                                continue;
+                            }
+                            for kw in 0..op.kw {
+                                let t = kh * op.kw + kw;
+                                let iw = (ow * op.stride + kw) as i64 - pad_w;
+                                let ok_w = iw >= 0 && iw < in_w as i64;
+                                tap_ok[t] = ok_w;
+                                if !ok_w {
+                                    continue;
+                                }
+                                let base =
+                                    ((b * in_h + ih as usize) * in_w + iw as usize) * op.in_c;
+                                let dst = &mut win_words[t * nb..(t + 1) * nb];
+                                for (j, w) in dst.iter_mut().enumerate() {
+                                    *w = pack4_le(&x[base + j * 4..base + j * 4 + 4]);
+                                }
+                            }
+                        }
+                        for oc in 0..op.out_c {
+                            // Modelled charges identical to the
+                            // interpreted loop: acc init, per-row and
+                            // per-tap bounds tests, lane setup, requant.
+                            let mut alu = 1u64;
+                            let mut taken = 0u64;
+                            let mut not_taken = 0u64;
+                            let mut acc = op.bias[oc];
+                            for kh in 0..op.kh {
+                                alu += 1;
+                                if !row_ok[kh] {
+                                    taken += 1;
+                                    continue;
+                                }
+                                not_taken += 1;
+                                for kw in 0..op.kw {
+                                    let t = kh * op.kw + kw;
+                                    alu += 1;
+                                    if !tap_ok[t] {
+                                        taken += 1;
+                                        continue;
+                                    }
+                                    not_taken += 1;
+                                    alu += 2;
+                                    let lane_idx = (oc * op.kh + kh) * op.kw + kw;
+                                    let words = &win_words[t * nb..(t + 1) * nb];
+                                    acc = run_lane_compiled(
+                                        self.lanes.lane_schedule(lane_idx),
+                                        input_offset,
+                                        INPUT_COST_DENSE,
+                                        |j| words[j],
+                                        acc,
+                                        &mut counter,
+                                    );
+                                }
+                            }
+                            alu += 6;
+                            counter.charge_bulk(alu, 1, 1, taken, not_taken, 0, 0);
+                            out_data[out_idx] = op.requant.apply(acc);
+                            out_idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(KernelRun { output: out, counter })
+    }
+
+    /// The interpreted oracle: every MAC/`inc_indvar` dispatched through
+    /// the CFU functional models.
+    fn run_interpreted(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
+        let op = &self.op;
+        let (n, in_h, in_w, out_h, out_w, pad_h, pad_w) = self.check_geometry(input)?;
         let mut out =
             QTensor::zeros(Shape::nhwc(n, out_h, out_w, op.out_c), op.output_params);
         let mut counter = CycleCounter::new(model.clone());
         let mut cfu = AnyCfu::new(self.design, op.input_offset());
         let x = input.data();
         let input_zp = op.input_params.zero_point.clamp(-128, 127) as i8;
+        let taps = op.kh * op.kw;
+        let mut tap_base = vec![-1i64; taps];
 
         let out_data = out.data_mut();
         let mut out_idx = 0usize;
         for b in 0..n {
             for oh in 0..out_h {
                 for ow in 0..out_w {
+                    if op.depthwise {
+                        self.fill_dw_tap_bases(&mut tap_base, b, oh, ow, (in_h, in_w, pad_h, pad_w));
+                    }
                     for oc in 0..op.out_c {
                         // Per-output-position software charges accumulated
                         // locally, flushed once (§Perf): bias load + move,
@@ -132,8 +355,8 @@ impl PreparedConv {
                                 &mut cfu,
                                 &mut counter,
                                 x,
-                                (b, oh, ow, oc),
-                                (in_h, in_w, pad_h, pad_w),
+                                &tap_base,
+                                oc,
                                 input_zp,
                                 acc,
                             )?;
@@ -169,16 +392,7 @@ impl PreparedConv {
                                         self.lanes.lane_words(lane_idx),
                                         |j| {
                                             let p = base + j * 4;
-                                            (
-                                                pack4_i8(&[
-                                                    x[p],
-                                                    x[p + 1],
-                                                    x[p + 2],
-                                                    x[p + 3],
-                                                ]),
-                                                1,
-                                                0,
-                                            )
+                                            (pack4_le(&x[p..p + 4]), 1, 0)
                                         },
                                         acc,
                                         &mut counter,
@@ -198,47 +412,27 @@ impl PreparedConv {
         Ok(KernelRun { output: out, counter })
     }
 
-    /// Depthwise inner loop: the lane is the channel's padded tap list;
-    /// input words are gathered (4 byte loads + 3 packing ALU ops per
-    /// block), with padding positions supplying the input zero point.
+    /// Depthwise inner loop (interpreted): the lane is the channel's
+    /// padded tap list; input words are gathered through the precomputed
+    /// tap bases (4 byte loads + 3 packing ALU ops per block), with
+    /// padding positions supplying the input zero point.
     #[allow(clippy::too_many_arguments)]
     fn run_depthwise_lane(
         &self,
         cfu: &mut AnyCfu,
         counter: &mut CycleCounter,
         x: &[i8],
-        pos: (usize, usize, usize, usize),
-        geom: (usize, usize, i64, i64),
+        tap_base: &[i64],
+        oc: usize,
         input_zp: i8,
         acc: i32,
     ) -> Result<i32> {
-        let op = &self.op;
-        let (b, oh, ow, oc) = pos;
-        let (in_h, in_w, pad_h, pad_w) = geom;
-        let taps = op.kh * op.kw;
-        let base_h = (oh * op.stride) as i64 - pad_h;
-        let base_w = (ow * op.stride) as i64 - pad_w;
-        let dw_taps = &self.dw_taps;
+        let taps = self.op.kh * self.op.kw;
         run_lane(
             self.design,
             cfu,
             self.lanes.lane_words(oc),
-            |j| {
-                let mut lanes4 = [input_zp; 4];
-                let t0 = j * 4;
-                let end = (t0 + 4).min(taps);
-                for t in t0..end {
-                    let (kh, kw) = dw_taps[t];
-                    let ih = base_h + kh as i64;
-                    let iw = base_w + kw as i64;
-                    if ih >= 0 && ih < in_h as i64 && iw >= 0 && iw < in_w as i64 {
-                        lanes4[t - t0] =
-                            x[((b * in_h + ih as usize) * in_w + iw as usize) * op.in_c + oc];
-                    }
-                }
-                // gather: 4 byte loads + 3 packing ops
-                (pack4_i8(&lanes4), 4, 3)
-            },
+            |j| (dw_gather_word(x, tap_base, taps, oc, input_zp, j), 4, 3),
             acc,
             counter,
         )
@@ -337,6 +531,49 @@ mod tests {
             let reference = prep.reference_op().forward_ref(&input).unwrap();
             assert_eq!(run.output.data(), reference.data(), "{design}");
         }
+    }
+
+    #[test]
+    fn compiled_equals_interpreted_outputs_and_cycles() {
+        // Normal conv with Same padding, strided Valid, and depthwise
+        // with a padded tail (9 taps → 12-lane): compiled schedules must
+        // match the interpreted CFU oracle on outputs AND every counter.
+        let cases = [
+            (random_conv(31, 8, 8, 3, 1, Padding::Same, false, 0.5), random_input(32, 6, 6, 8)),
+            (
+                random_conv(33, 4, 12, 3, 2, Padding::Valid, false, 0.6),
+                random_input(34, 9, 9, 12),
+            ),
+            (random_conv(35, 8, 8, 3, 1, Padding::Same, true, 0.4), random_input(36, 5, 5, 8)),
+        ];
+        for (op, input) in &cases {
+            for design in DesignKind::ALL {
+                let prep = PreparedConv::new(op, design).unwrap();
+                let model = CostModel::vexriscv();
+                let c = prep.run_with_mode(input, &model, ExecMode::Compiled).unwrap();
+                let i = prep.run_with_mode(input, &model, ExecMode::Interpreted).unwrap();
+                let tag = format!("{design} depthwise={}", op.depthwise);
+                assert_eq!(c.output.data(), i.output.data(), "{tag}: outputs");
+                assert_eq!(c.counter.cycles(), i.counter.cycles(), "{tag}: cycles");
+                assert_eq!(c.counter.total_instrs(), i.counter.total_instrs(), "{tag}: instrs");
+                assert_eq!(c.counter.cfu_cycles(), i.counter.cfu_cycles(), "{tag}: cfu");
+                assert_eq!(c.counter.cfu_stalls(), i.counter.cfu_stalls(), "{tag}: stalls");
+                assert_eq!(c.counter.loaded_bytes(), i.counter.loaded_bytes(), "{tag}: loads");
+                assert_eq!(c.counter.stored_bytes(), i.counter.stored_bytes(), "{tag}: stores");
+            }
+        }
+    }
+
+    #[test]
+    fn default_run_is_compiled() {
+        let op = random_conv(37, 4, 8, 3, 1, Padding::Same, false, 0.3);
+        let input = random_input(38, 5, 5, 8);
+        let prep = PreparedConv::new(&op, DesignKind::Csa).unwrap();
+        let model = CostModel::vexriscv();
+        let a = prep.run(&input, &model).unwrap();
+        let b = prep.run_with_mode(&input, &model, ExecMode::Compiled).unwrap();
+        assert_eq!(a.output.data(), b.output.data());
+        assert_eq!(a.counter.cycles(), b.counter.cycles());
     }
 
     #[test]

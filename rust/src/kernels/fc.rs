@@ -1,10 +1,10 @@
 //! CFU-accelerated fully-connected kernel.
 
-use super::lane::{prepare_lanes, run_lane, PreparedLanes};
-use super::KernelRun;
+use super::lane::{prepare_lanes, run_lane, run_lane_compiled, PreparedLanes, INPUT_COST_DENSE};
+use super::{ExecMode, KernelRun};
 use crate::cfu::AnyCfu;
 use crate::cpu::{CostModel, CycleCounter};
-use crate::encoding::pack::pack4_i8;
+use crate::encoding::pack::pack4_le;
 use crate::error::{Error, Result};
 use crate::isa::DesignKind;
 use crate::nn::fully_connected::FullyConnectedOp;
@@ -41,8 +41,19 @@ impl PreparedFc {
         &self.op
     }
 
-    /// Run over a batch of flattened inputs.
+    /// Run over a batch of flattened inputs through the compiled lane
+    /// schedules (the default execution path).
     pub fn run(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
+        self.run_with_mode(input, model, ExecMode::Compiled)
+    }
+
+    /// Run under an explicit [`ExecMode`].
+    pub fn run_with_mode(
+        &self,
+        input: &QTensor,
+        model: &CostModel,
+        mode: ExecMode,
+    ) -> Result<KernelRun> {
         let op = &self.op;
         let numel = input.shape().numel();
         if numel % op.in_n != 0 {
@@ -55,28 +66,61 @@ impl PreparedFc {
         let x = input.data();
         let mut out = QTensor::zeros(Shape::d2(batch, op.out_n), op.output_params);
         let mut counter = CycleCounter::new(model.clone());
-        let mut cfu = AnyCfu::new(self.design, op.input_offset());
-        for b in 0..batch {
-            let xrow = &x[b * op.in_n..(b + 1) * op.in_n];
-            for o in 0..op.out_n {
-                counter.load_words(1); // bias
-                counter.alu(1);
-                let mut acc = op.bias[o];
-                counter.alu(2); // lane base setup
-                acc = run_lane(
-                    self.design,
-                    &mut cfu,
-                    self.lanes.lane_words(o),
-                    |j| {
-                        let p = j * 4;
-                        (pack4_i8(&[xrow[p], xrow[p + 1], xrow[p + 2], xrow[p + 3]]), 1, 0)
-                    },
-                    acc,
-                    &mut counter,
-                )?;
-                counter.alu(6); // requantize
-                counter.store_words(1);
-                out.set(&[b, o], op.requant.apply(acc));
+        match mode {
+            ExecMode::Compiled => {
+                let input_offset = op.input_offset();
+                // Packed-input reuse: the shared input row is packed once
+                // and read by every output neuron's lane (the interpreted
+                // oracle re-packs it out_n times).
+                let mut xwords = vec![0u32; op.in_n / 4];
+                for b in 0..batch {
+                    let xrow = &x[b * op.in_n..(b + 1) * op.in_n];
+                    for (j, w) in xwords.iter_mut().enumerate() {
+                        *w = pack4_le(&xrow[j * 4..j * 4 + 4]);
+                    }
+                    for o in 0..op.out_n {
+                        counter.load_words(1); // bias
+                        counter.alu(1);
+                        counter.alu(2); // lane base setup
+                        let acc = run_lane_compiled(
+                            self.lanes.lane_schedule(o),
+                            input_offset,
+                            INPUT_COST_DENSE,
+                            |j| xwords[j],
+                            op.bias[o],
+                            &mut counter,
+                        );
+                        counter.alu(6); // requantize
+                        counter.store_words(1);
+                        out.set(&[b, o], op.requant.apply(acc));
+                    }
+                }
+            }
+            ExecMode::Interpreted => {
+                let mut cfu = AnyCfu::new(self.design, op.input_offset());
+                for b in 0..batch {
+                    let xrow = &x[b * op.in_n..(b + 1) * op.in_n];
+                    for o in 0..op.out_n {
+                        counter.load_words(1); // bias
+                        counter.alu(1);
+                        let mut acc = op.bias[o];
+                        counter.alu(2); // lane base setup
+                        acc = run_lane(
+                            self.design,
+                            &mut cfu,
+                            self.lanes.lane_words(o),
+                            |j| {
+                                let p = j * 4;
+                                (pack4_le(&xrow[p..p + 4]), 1, 0)
+                            },
+                            acc,
+                            &mut counter,
+                        )?;
+                        counter.alu(6); // requantize
+                        counter.store_words(1);
+                        out.set(&[b, o], op.requant.apply(acc));
+                    }
+                }
             }
         }
         Ok(KernelRun { output: out, counter })
@@ -127,6 +171,26 @@ mod tests {
             let run = prep.run(&input, &CostModel::vexriscv()).unwrap();
             let reference = prep.reference_op().forward_ref(&input).unwrap();
             assert_eq!(run.output.data(), reference.data(), "{design}");
+        }
+    }
+
+    #[test]
+    fn compiled_equals_interpreted_outputs_and_cycles() {
+        let op = random_fc(27, 12, 64, 0.6);
+        let mut rng = Pcg32::new(28);
+        let data: Vec<i8> = (0..3 * 64).map(|_| rng.range_i32(-128, 127) as i8).collect();
+        let input =
+            QTensor::new(Shape::d2(3, 64), data, QuantParams::new(0.1, 4).unwrap()).unwrap();
+        for design in DesignKind::ALL {
+            let prep = PreparedFc::new(&op, design).unwrap();
+            let model = CostModel::vexriscv();
+            let c = prep.run_with_mode(&input, &model, ExecMode::Compiled).unwrap();
+            let i = prep.run_with_mode(&input, &model, ExecMode::Interpreted).unwrap();
+            assert_eq!(c.output.data(), i.output.data(), "{design}: outputs");
+            assert_eq!(c.counter.cycles(), i.counter.cycles(), "{design}: cycles");
+            assert_eq!(c.counter.total_instrs(), i.counter.total_instrs(), "{design}: instrs");
+            assert_eq!(c.counter.cfu_stalls(), i.counter.cfu_stalls(), "{design}: stalls");
+            assert_eq!(c.counter.loaded_bytes(), i.counter.loaded_bytes(), "{design}: loads");
         }
     }
 

@@ -5,14 +5,70 @@
 //! input features for fc). Weights are pre-packed into the 32-bit words
 //! the CFU consumes — for SSSA/CSA after lookahead encoding (the paper's
 //! build-time pre-processing of Algorithm 1).
+//!
+//! ## Compiled lane schedules
+//!
+//! The paper's premise is that the sparsity schedule is known at build
+//! time — so the simulator compiles it at prepare time instead of
+//! re-discovering it per inference. For every lane, [`prepare_lanes`]
+//! materializes a [`LaneSchedule`]: the visited-block list (the SSSA/CSA
+//! lookahead walk, or every block for the baselines/USSA) with the
+//! weights pre-decoded per visited block, plus a [`BulkCharge`] holding
+//! the lane's total instruction counts (ALU/loads/branches/CFU
+//! issues+stalls — all pure functions of the packed weights).
+//! [`run_lane_compiled`] is then a tight dot-product loop over the
+//! precomputed pairs and a single counter flush: no per-block CFU enum
+//! dispatch, no `Result` plumbing, bit-identical outputs *and* cycle
+//! totals to the interpreted [`run_lane`] oracle (asserted by the
+//! differential tier).
 
-use crate::cfu::AnyCfu;
-use crate::cpu::CycleCounter;
+use crate::cfu::{dot4_words, AnyCfu};
+use crate::cpu::{BulkCharge, CycleCounter};
 use crate::encoding::int7::clamp_slice_int7;
 use crate::encoding::lookahead::encode_lanes;
-use crate::encoding::pack::pack4_i8;
+use crate::encoding::pack::{pack4_i8, pack4_le, pack4_u32_skip_bits};
 use crate::error::{Error, Result};
 use crate::isa::{CfuOpcode, DesignKind};
+
+/// The compiled execution schedule of one lane: what the inner loop will
+/// do, decided entirely at prepare time from the packed weights.
+#[derive(Debug, Clone)]
+pub struct LaneSchedule {
+    /// `(block_idx, w_word)` per *visited* block, in walk order. For
+    /// SSSA/CSA the walk follows the lookahead skip bits and `w_word`
+    /// holds the already-decoded INT7 weights; for the baselines/USSA
+    /// every block is visited and `w_word` is the raw packed word.
+    pub visited: Vec<(u32, u32)>,
+    /// Total instruction counts of the lane's modelled loop shape,
+    /// excluding the call-site-dependent input materialization (see
+    /// [`InputCost`]). Flushing this through
+    /// [`CycleCounter::charge_bulk`] reproduces the interpreted loop's
+    /// charges exactly under any cost model.
+    pub charge: BulkCharge,
+}
+
+impl LaneSchedule {
+    /// Blocks the compiled loop visits.
+    pub fn visited_blocks(&self) -> usize {
+        self.visited.len()
+    }
+}
+
+/// Per-visited-block input materialization cost: the loads/ALU ops the
+/// modelled loop spends producing one packed input word (on top of the
+/// weight-word load already in [`LaneSchedule::charge`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InputCost {
+    /// Loads per block.
+    pub loads: u64,
+    /// Extra ALU ops per block.
+    pub alus: u64,
+}
+
+/// Contiguous NHWC channels: one `lw x` per block.
+pub const INPUT_COST_DENSE: InputCost = InputCost { loads: 1, alus: 0 };
+/// Depthwise spatial gather: 4 byte loads + 3 packing ops per block.
+pub const INPUT_COST_GATHER: InputCost = InputCost { loads: 4, alus: 3 };
 
 /// Weights of one layer, packed per-lane into CFU operand words.
 #[derive(Debug, Clone)]
@@ -31,6 +87,10 @@ pub struct PreparedLanes {
     /// Weights actually used for compute (post-clamp) — lets callers
     /// verify against a reference op run with identical weights.
     pub effective_weights: Vec<i8>,
+    /// Compiled per-lane schedules (visited blocks + bulk charges) — the
+    /// default execution path; the interpreted CFU walk stays as the
+    /// differential oracle.
+    pub schedules: Vec<LaneSchedule>,
 }
 
 /// Pack a weight buffer of `lanes × lane_len` into CFU words for a design.
@@ -61,9 +121,9 @@ pub fn prepare_lanes(weights: &[i8], lane_len: usize, design: DesignKind) -> Res
     } else {
         (weights.to_vec(), 0, weights.to_vec())
     };
-    let words = buf
-        .chunks(4)
-        .map(|b| pack4_i8(&[b[0], b[1], b[2], b[3]]))
+    let words: Vec<u32> = buf.chunks(4).map(pack4_le).collect();
+    let schedules = (0..lanes)
+        .map(|l| compile_lane(design, &words[l * blocks_per_lane..(l + 1) * blocks_per_lane]))
         .collect();
     Ok(PreparedLanes {
         words,
@@ -72,7 +132,71 @@ pub fn prepare_lanes(weights: &[i8], lane_len: usize, design: DesignKind) -> Res
         design,
         clamped,
         effective_weights,
+        schedules,
     })
+}
+
+/// Compile one lane's schedule from its packed words: the visited-block
+/// walk, the per-visited-block decoded weight word, and the lane's total
+/// instruction charges. Everything here is a pure function of the packed
+/// weights — exactly the information Algorithm 1 bakes into the weight
+/// stream offline.
+fn compile_lane(design: DesignKind, words: &[u32]) -> LaneSchedule {
+    let nblocks = words.len();
+    let mut visited: Vec<(u32, u32)> = Vec::with_capacity(nblocks);
+    let mut cfu_stalls = 0u64;
+    match design {
+        DesignKind::BaselineSimd | DesignKind::BaselineSequential | DesignKind::Ussa => {
+            for (j, &w) in words.iter().enumerate() {
+                let mac_cycles = match design {
+                    DesignKind::BaselineSimd => crate::cfu::baseline::simd_mac_cycles(),
+                    DesignKind::BaselineSequential => crate::cfu::baseline::seq_mac_cycles(),
+                    _ => crate::cfu::ussa::vcmac_cycles(w),
+                };
+                cfu_stalls += (mac_cycles as u64).saturating_sub(1);
+                visited.push((j as u32, w));
+            }
+        }
+        DesignKind::Sssa | DesignKind::Csa => {
+            // The lookahead walk of Listings 2/3, driven by the same skip
+            // bits the inc_indvar datapath reads. sssa_mac is 1 cycle
+            // (no stall); csa_vcmac stalls per non-zero decoded weight.
+            let mut j = 0usize;
+            while j < nblocks {
+                let w = words[j];
+                if design == DesignKind::Csa {
+                    cfu_stalls += (crate::cfu::csa::vcmac_cycles(w) as u64).saturating_sub(1);
+                }
+                // Store the decoded weights: the run loop multiplies
+                // without per-block shift work, and `inc_indvar` never
+                // stalls (1 cycle), so no extra charge.
+                visited.push((j as u32, pack4_i8(&crate::cfu::sssa::decode_weights(w))));
+                j += 1 + pack4_u32_skip_bits(w) as usize;
+            }
+        }
+    }
+    // Loop-shape charges per visited block (see the module docs of
+    // [`crate::kernels`]): the `for` shape spends 4 ALU + 1 CFU, the
+    // `while` shape 3 ALU + 2 CFU; both load the weight word and branch
+    // once (taken except on lane exit — at least one block is always
+    // visited, so exactly one not-taken branch per lane).
+    let n = visited.len() as u64;
+    let (alu_per_block, issues_per_block) = match design {
+        DesignKind::Sssa | DesignKind::Csa => (3u64, 2u64),
+        _ => (4u64, 1u64),
+    };
+    LaneSchedule {
+        charge: BulkCharge {
+            alu: n * alu_per_block,
+            loads: n,
+            stores: 0,
+            branches_taken: n - 1,
+            branches_not_taken: 1,
+            cfu_issues: n * issues_per_block,
+            cfu_stalls,
+        },
+        visited,
+    }
 }
 
 impl PreparedLanes {
@@ -81,6 +205,12 @@ impl PreparedLanes {
     pub fn lane_words(&self, lane: usize) -> &[u32] {
         let b = self.blocks_per_lane;
         &self.words[lane * b..(lane + 1) * b]
+    }
+
+    /// Compiled schedule of one lane.
+    #[inline]
+    pub fn lane_schedule(&self, lane: usize) -> &LaneSchedule {
+        &self.schedules[lane]
     }
 }
 
@@ -178,6 +308,45 @@ where
     Ok(acc)
 }
 
+/// Execute one lane through its compiled [`LaneSchedule`] — the default
+/// execution path.
+///
+/// `input_word(j)` supplies the packed input word for block `j`; its
+/// modelled cost is the uniform per-block `input_cost` (dense `lw` or
+/// depthwise gather), added to the schedule's precomputed charge at the
+/// single flush. The accumulation is the same wrapping INT7/INT8 dot
+/// product every CFU MAC reduces to, so outputs and cycle totals are
+/// bit-identical to [`run_lane`] (differential tier).
+#[inline]
+pub fn run_lane_compiled<F>(
+    schedule: &LaneSchedule,
+    input_offset: i32,
+    input_cost: InputCost,
+    mut input_word: F,
+    acc: i32,
+    counter: &mut CycleCounter,
+) -> i32
+where
+    F: FnMut(usize) -> u32,
+{
+    let mut acc = acc;
+    for &(j, w_word) in &schedule.visited {
+        acc = acc.wrapping_add(dot4_words(w_word, input_word(j as usize), input_offset));
+    }
+    let n = schedule.visited.len() as u64;
+    let c = &schedule.charge;
+    counter.charge_bulk(
+        c.alu + n * input_cost.alus,
+        c.loads + n * input_cost.loads,
+        c.stores,
+        c.branches_taken,
+        c.branches_not_taken,
+        c.cfu_issues,
+        c.cfu_stalls,
+    );
+    acc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,9 +356,26 @@ mod tests {
 
     /// Dense input word supplier: contiguous channels, 1 load, 0 extra alu.
     fn dense_input(xs: Vec<i8>) -> impl FnMut(usize) -> (u32, u64, u64) {
-        move |j| {
-            let b = &xs[j * 4..j * 4 + 4];
-            (pack4_i8(&[b[0], b[1], b[2], b[3]]), 1, 0)
+        move |j| (pack4_le(&xs[j * 4..j * 4 + 4]), 1, 0)
+    }
+
+    /// Assert two counters agree on every observable total.
+    fn assert_counters_equal(a: &CycleCounter, b: &CycleCounter, ctx: &str) {
+        use crate::cpu::InstrClass;
+        assert_eq!(a.cycles(), b.cycles(), "{ctx}: cycles");
+        assert_eq!(a.total_instrs(), b.total_instrs(), "{ctx}: instrs");
+        assert_eq!(a.cfu_cycles(), b.cfu_cycles(), "{ctx}: cfu cycles");
+        assert_eq!(a.cfu_stalls(), b.cfu_stalls(), "{ctx}: cfu stalls");
+        assert_eq!(a.loaded_bytes(), b.loaded_bytes(), "{ctx}: loaded bytes");
+        assert_eq!(a.stored_bytes(), b.stored_bytes(), "{ctx}: stored bytes");
+        for class in [
+            InstrClass::Alu,
+            InstrClass::Load,
+            InstrClass::Store,
+            InstrClass::Branch,
+            InstrClass::Cfu,
+        ] {
+            assert_eq!(a.instr_count(class), b.instr_count(class), "{ctx}: {class:?}");
         }
     }
 
@@ -283,6 +469,136 @@ mod tests {
         }
         // dense: 4 cycles MAC per block; sparse: 1 cycle per block
         assert_eq!(cycles[0] - cycles[1], 4 * 3); // 3 stall cycles fewer per block
+    }
+
+    #[test]
+    fn compiled_matches_interpreted_every_design() {
+        // Random sparse lanes (including INT7-clamp candidates at ±64+):
+        // the compiled schedule must reproduce the interpreted walk's
+        // accumulator AND every counter total, per design and cost model.
+        let mut rng = crate::util::Pcg32::new(0xC0DE);
+        for trial in 0..24 {
+            let blocks = 1 + rng.below(12) as usize;
+            let lane_len = blocks * 4;
+            let ws: Vec<i8> = (0..lane_len)
+                .map(|_| {
+                    if rng.bernoulli(0.6) {
+                        0
+                    } else {
+                        rng.range_i32(-128, 127) as i8
+                    }
+                })
+                .collect();
+            let xs: Vec<i8> = (0..lane_len).map(|_| rng.range_i32(-128, 127) as i8).collect();
+            let offset = rng.range_i32(0, 255);
+            for design in DesignKind::ALL {
+                for model in [CostModel::vexriscv(), CostModel::mac_only()] {
+                    let prep = prepare_lanes(&ws, lane_len, design).unwrap();
+                    let mut cfu = AnyCfu::new(design, offset);
+                    let mut c_int = CycleCounter::new(model.clone());
+                    let a_int = run_lane(
+                        design,
+                        &mut cfu,
+                        prep.lane_words(0),
+                        dense_input(xs.clone()),
+                        7,
+                        &mut c_int,
+                    )
+                    .unwrap();
+                    let mut c_cmp = CycleCounter::new(model.clone());
+                    let a_cmp = run_lane_compiled(
+                        prep.lane_schedule(0),
+                        offset,
+                        INPUT_COST_DENSE,
+                        |j| pack4_le(&xs[j * 4..j * 4 + 4]),
+                        7,
+                        &mut c_cmp,
+                    );
+                    assert_eq!(a_int, a_cmp, "trial {trial} {design}: accumulator");
+                    assert_counters_equal(&c_int, &c_cmp, &format!("trial {trial} {design}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_all_zero_lane_every_design() {
+        let ws = vec![0i8; 16];
+        let xs: Vec<i8> = (0..16).map(|i| (i * 5 - 30) as i8).collect();
+        for design in DesignKind::ALL {
+            let prep = prepare_lanes(&ws, 16, design).unwrap();
+            let mut cfu = AnyCfu::new(design, 128);
+            let mut c_int = CycleCounter::new(CostModel::vexriscv());
+            let a_int = run_lane(
+                design,
+                &mut cfu,
+                prep.lane_words(0),
+                dense_input(xs.clone()),
+                3,
+                &mut c_int,
+            )
+            .unwrap();
+            let mut c_cmp = CycleCounter::new(CostModel::vexriscv());
+            let a_cmp = run_lane_compiled(
+                prep.lane_schedule(0),
+                128,
+                INPUT_COST_DENSE,
+                |j| pack4_le(&xs[j * 4..j * 4 + 4]),
+                3,
+                &mut c_cmp,
+            );
+            assert_eq!(a_int, 3, "{design}: all-zero lane must leave acc unchanged");
+            assert_eq!(a_int, a_cmp, "{design}");
+            assert_counters_equal(&c_int, &c_cmp, &format!("all-zero {design}"));
+            // SSSA/CSA visit only the leading zero block of the lane.
+            if design.uses_lookahead_encoding() {
+                assert_eq!(prep.lane_schedule(0).visited_blocks(), 1, "{design}");
+            } else {
+                assert_eq!(prep.lane_schedule(0).visited_blocks(), 4, "{design}");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_walk_matches_software_oracle() {
+        // The compiled walk (driven by packed skip bits) must equal the
+        // software-side visited_indices oracle over the clamped weights.
+        let mut rng = crate::util::Pcg32::new(0x5C4ED);
+        for _ in 0..16 {
+            let blocks = 2 + rng.below(20) as usize;
+            let ws: Vec<i8> = (0..blocks * 4)
+                .map(|_| {
+                    if rng.bernoulli(0.7) {
+                        0
+                    } else {
+                        rng.range_i32(-64, 63) as i8
+                    }
+                })
+                .collect();
+            for design in [DesignKind::Sssa, DesignKind::Csa] {
+                let prep = prepare_lanes(&ws, ws.len(), design).unwrap();
+                let expect = crate::encoding::lookahead::visited_indices(&prep.effective_weights);
+                let s = prep.lane_schedule(0);
+                let got: Vec<usize> = s.visited.iter().map(|&(j, _)| j as usize).collect();
+                assert_eq!(got, expect, "{design}");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_charge_counts_are_exact() {
+        // Hand-check one lane: [nz][z][z][nz] under CSA.
+        let ws: Vec<i8> = [[1i8, 0, 2, 0], [0; 4], [0; 4], [0, 3, 0, 0]].concat();
+        let prep = prepare_lanes(&ws, 16, DesignKind::Csa).unwrap();
+        let s = prep.lane_schedule(0);
+        assert_eq!(s.visited_blocks(), 2); // block 0 (skip 2) → block 3
+        let c = &s.charge;
+        assert_eq!(c.alu, 2 * 3);
+        assert_eq!(c.loads, 2);
+        assert_eq!(c.branches_taken, 1);
+        assert_eq!(c.branches_not_taken, 1);
+        assert_eq!(c.cfu_issues, 2 * 2); // vcmac + inc_indvar per visited block
+        assert_eq!(c.cfu_stalls, 1); // block 0 has 2 nz (1 stall), block 3 has 1 nz (0)
     }
 
     #[test]

@@ -20,6 +20,21 @@
 //! visited block costs the same CPU overhead in both shapes; the savings
 //! come from visiting fewer blocks (SSSA) and/or fewer MAC stall cycles
 //! (USSA/CSA).
+//!
+//! ## Execution modes
+//!
+//! Both loop shapes above are pure functions of the packed weights, so
+//! since the compiled-schedule change the kernels run them two ways:
+//!
+//! - [`ExecMode::Compiled`] (default) — [`lane::run_lane_compiled`] over
+//!   the [`lane::LaneSchedule`]s materialized at prepare time: a plain
+//!   dot-product loop plus one bulk counter flush per lane;
+//! - [`ExecMode::Interpreted`] — [`lane::run_lane`] dispatching every
+//!   MAC/`inc_indvar` through the CFU functional models, kept as the
+//!   differential oracle.
+//!
+//! Outputs and cycle totals are bit-identical between the modes
+//! (asserted across designs × models by the differential tier).
 
 pub mod conv;
 pub mod fc;
@@ -27,10 +42,32 @@ pub mod lane;
 
 pub use conv::PreparedConv;
 pub use fc::PreparedFc;
-pub use lane::{prepare_lanes, run_lane, PreparedLanes};
+pub use lane::{prepare_lanes, run_lane, run_lane_compiled, LaneSchedule, PreparedLanes};
 
 use crate::cpu::CycleCounter;
 use crate::tensor::QTensor;
+
+/// How the kernels execute their MAC lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Table-driven execution over prepare-time [`LaneSchedule`]s (the
+    /// default host path).
+    #[default]
+    Compiled,
+    /// Per-instruction CFU dispatch — the reference oracle the compiled
+    /// path is differentially tested against.
+    Interpreted,
+}
+
+impl ExecMode {
+    /// Short name for logs and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Compiled => "compiled",
+            ExecMode::Interpreted => "interpreted",
+        }
+    }
+}
 
 /// Output of one kernel invocation.
 #[derive(Debug, Clone)]

@@ -9,6 +9,7 @@ use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
 use sparse_riscv::coordinator::runner::run_experiment;
 use sparse_riscv::encoding::lookahead::encode_lanes;
 use sparse_riscv::isa::DesignKind;
+use sparse_riscv::kernels::ExecMode;
 use sparse_riscv::metrics::{diff as metrics_diff, BaselineStore, Tolerances};
 use sparse_riscv::models::builder::ModelConfig;
 use sparse_riscv::models::zoo::{build_model, model_names};
@@ -41,7 +42,16 @@ fn cli() -> Command {
                 .arg(ArgSpec::opt("x-ss", "0.3", "block sparsity"))
                 .arg(ArgSpec::opt("scale", "0.125", "model width multiplier"))
                 .arg(ArgSpec::opt("threads", "0", "worker threads"))
-                .arg(ArgSpec::opt("seed", "42", "rng seed")),
+                .arg(ArgSpec::opt("seed", "42", "rng seed"))
+                .arg(ArgSpec::opt(
+                    "cache-cap",
+                    "64",
+                    "LRU capacity of the prepared-model cache",
+                ))
+                .arg(ArgSpec::flag(
+                    "interpreted",
+                    "force the interpreted CFU oracle instead of compiled lane schedules",
+                )),
         )
         .subcommand(
             Command::new("bench-e2e", "batched end-to-end throughput across the model zoo")
@@ -152,21 +162,31 @@ fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
         scale: args.get_f64("scale")?,
         ..BatchSpec::new(&model, design)
     };
+    let exec_mode = if args.get_flag("interpreted")? {
+        ExecMode::Interpreted
+    } else {
+        ExecMode::Compiled
+    };
     let engine = BatchEngine::new(BatchOptions {
         threads: args.get_usize("threads")?,
         clock_hz: 100_000_000,
         verify: false,
+        exec_mode,
+        cache_capacity: args.get_usize("cache-cap")?,
     });
     let n = args.get_usize("requests")?;
     let reqs = BatchEngine::gen_requests(&model, n, args.get_u64("seed")?)?;
     let report = engine.run_stream(&spec, reqs, batch)?;
     println!(
-        "served {} requests on {design} in batches of {batch} across {} workers \
-         (prepared-model cache: {} build, {} hits)",
+        "served {} requests on {design} ({} lanes) in batches of {batch} across {} workers \
+         (prepared-model cache: {} builds, {} hits, {} evictions, cap {})",
         report.completed,
+        exec_mode.name(),
         engine.workers(),
-        engine.cache().misses(),
-        engine.cache().hits(),
+        report.cache_misses,
+        report.cache_hits,
+        report.cache_evictions,
+        engine.cache().capacity(),
     );
     println!(
         "simulated latency: mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms (at 100 MHz)",

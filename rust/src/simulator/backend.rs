@@ -20,9 +20,11 @@
 
 use crate::error::Result;
 use crate::isa::DesignKind;
+use crate::kernels::ExecMode;
 use crate::nn::graph::Graph;
 use crate::simulator::{PreparedModel, SimEngine, SimReport};
 use crate::tensor::QTensor;
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -63,6 +65,21 @@ pub fn backend_for(design: DesignKind) -> Box<dyn ExecBackend> {
 /// [`backend_for`] with bit-exact verification against the reference ops.
 pub fn verified_backend_for(design: DesignKind, verify: bool) -> Box<dyn ExecBackend> {
     Box::new(SimEngine::new(design).with_verify(verify))
+}
+
+/// Backend with explicit verification and lane execution mode.
+pub fn backend_with_mode(
+    design: DesignKind,
+    verify: bool,
+    mode: ExecMode,
+) -> Box<dyn ExecBackend> {
+    Box::new(SimEngine::new(design).with_verify(verify).with_exec_mode(mode))
+}
+
+/// The interpreted-oracle backend: per-instruction CFU dispatch — the
+/// reference the compiled default path is differentially tested against.
+pub fn oracle_backend_for(design: DesignKind) -> Box<dyn ExecBackend> {
+    backend_with_mode(design, false, ExecMode::Interpreted)
 }
 
 /// Cache key identifying one prepared model. Sparsity ratios and the
@@ -106,23 +123,62 @@ impl ModelKey {
     }
 }
 
-/// Thread-safe memoization of prepared models.
+/// One cached prepared model plus its recency stamp.
+struct CacheEntry {
+    model: Arc<PreparedModel>,
+    last_used: u64,
+}
+
+/// Map + logical clock behind the cache mutex.
+struct CacheInner {
+    map: HashMap<ModelKey, CacheEntry>,
+    tick: u64,
+}
+
+/// Thread-safe, LRU-bounded memoization of prepared models.
 ///
 /// The build closure runs *outside* the lock so distinct configurations
 /// prepare concurrently on the worker pool; a lost race simply discards
 /// the duplicate (prepared models are deterministic, so either copy is
 /// correct).
-#[derive(Default)]
+///
+/// The cache is bounded: once more than `capacity` models are resident,
+/// the least-recently-used entries are evicted, so a long-running serve
+/// session sweeping many (model, design, sparsity) configurations cannot
+/// grow memory without limit. The default capacity is generous — the
+/// whole zoo × every design × a few sparsity points fits untouched.
 pub struct PreparedCache {
-    map: Mutex<HashMap<ModelKey, Arc<PreparedModel>>>,
+    inner: Mutex<CacheInner>,
+    capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for PreparedCache {
+    fn default() -> Self {
+        PreparedCache::with_capacity(Self::DEFAULT_CAPACITY)
+    }
 }
 
 impl PreparedCache {
-    /// Empty cache.
+    /// Default LRU capacity (prepared models).
+    pub const DEFAULT_CAPACITY: usize = 64;
+
+    /// Empty cache with the default capacity.
     pub fn new() -> Self {
         PreparedCache::default()
+    }
+
+    /// Empty cache bounded to `capacity` prepared models (floored at 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        PreparedCache {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
     }
 
     /// Look up `key`, building (and inserting) the prepared model on a
@@ -131,18 +187,52 @@ impl PreparedCache {
     where
         F: FnOnce() -> Result<PreparedModel>,
     {
-        if let Some(found) = self.map.lock().unwrap().get(key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok((Arc::clone(found), true));
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(key) {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((Arc::clone(&e.model), true));
+            }
         }
         // Build without holding the lock (encoding a large model is the
         // expensive part; concurrent misses on different keys must not
         // serialize).
         let built = Arc::new(build()?);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.map.lock().unwrap();
-        let entry = map.entry(key.clone()).or_insert_with(|| Arc::clone(&built));
-        Ok((Arc::clone(entry), false))
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let model = match inner.map.entry(key.clone()) {
+            Entry::Occupied(mut e) => {
+                e.get_mut().last_used = tick;
+                Arc::clone(&e.get().model)
+            }
+            Entry::Vacant(v) => {
+                Arc::clone(&v.insert(CacheEntry { model: built, last_used: tick }).model)
+            }
+        };
+        // Evict least-recently-used entries beyond capacity. O(n) scan —
+        // the capacity is small and misses are rare by design. The entry
+        // just inserted carries the newest stamp, so it is never the one
+        // evicted.
+        while inner.map.len() > self.capacity {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    inner.map.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+        Ok((model, false))
     }
 
     /// Cache hits so far.
@@ -155,9 +245,19 @@ impl PreparedCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// LRU evictions so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Maximum number of resident prepared models.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Number of cached prepared models.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     /// True when nothing is cached.
@@ -168,7 +268,7 @@ impl PreparedCache {
     /// Drop every cached model (e.g. between sweeps over different
     /// weight seeds).
     pub fn clear(&self) {
-        self.map.lock().unwrap().clear();
+        self.inner.lock().unwrap().map.clear();
     }
 }
 
@@ -220,6 +320,53 @@ mod tests {
         assert_eq!(cache.len(), 1);
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let graph = tiny_graph();
+        let backend = backend_for(DesignKind::Csa);
+        let cache = PreparedCache::with_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+        let key = |seed: u64| ModelKey::new("dscnn", DesignKind::Csa, 0.5, 0.3, 0.07, seed);
+        cache.get_or_prepare(&key(1), || backend.prepare(&graph)).unwrap();
+        cache.get_or_prepare(&key(2), || backend.prepare(&graph)).unwrap();
+        // Touch key 1 so key 2 becomes the LRU victim.
+        let (_, hit) = cache.get_or_prepare(&key(1), || backend.prepare(&graph)).unwrap();
+        assert!(hit);
+        cache.get_or_prepare(&key(3), || backend.prepare(&graph)).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        // Key 1 survived; key 2 was evicted and must rebuild.
+        let (_, hit1) = cache.get_or_prepare(&key(1), || backend.prepare(&graph)).unwrap();
+        assert!(hit1, "recently-used entry must survive eviction");
+        let (_, hit2) = cache.get_or_prepare(&key(2), || backend.prepare(&graph)).unwrap();
+        assert!(!hit2, "LRU entry must have been evicted");
+    }
+
+    #[test]
+    fn capacity_floors_at_one() {
+        let cache = PreparedCache::with_capacity(0);
+        assert_eq!(cache.capacity(), 1);
+    }
+
+    #[test]
+    fn oracle_backend_matches_compiled_default() {
+        let graph = tiny_graph();
+        let compiled = backend_for(DesignKind::Ussa);
+        let oracle = oracle_backend_for(DesignKind::Ussa);
+        let prepared = compiled.prepare(&graph).unwrap();
+        let mut rng = crate::util::Pcg32::new(7);
+        let input = crate::models::builder::random_input(
+            crate::models::zoo::input_shape("dscnn").unwrap(),
+            crate::tensor::quant::QuantParams::new(0.05, 0).unwrap(),
+            &mut rng,
+        );
+        let a = compiled.execute(&prepared, &input).unwrap();
+        let b = oracle.execute(&prepared, &input).unwrap();
+        assert_eq!(a.output.data(), b.output.data());
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.cfu_stalls(), b.cfu_stalls());
     }
 
     #[test]

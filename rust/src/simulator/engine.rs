@@ -3,7 +3,7 @@
 use crate::cpu::{CostModel, CycleCounter};
 use crate::error::{Error, Result};
 use crate::isa::DesignKind;
-use crate::kernels::{PreparedConv, PreparedFc};
+use crate::kernels::{ExecMode, PreparedConv, PreparedFc};
 use crate::nn::activation::{add, relu};
 use crate::nn::graph::{Graph, Layer};
 use crate::nn::pooling::{avg_pool2d, global_avg_pool, max_pool2d};
@@ -88,7 +88,8 @@ pub struct PreparedModel {
     pub clamped_weights: usize,
 }
 
-/// Simulation engine: design + CPU cost model + verification toggle.
+/// Simulation engine: design + CPU cost model + verification toggle +
+/// lane execution mode.
 #[derive(Debug, Clone)]
 pub struct SimEngine {
     /// Accelerator design.
@@ -97,12 +98,20 @@ pub struct SimEngine {
     pub cost_model: CostModel,
     /// Verify every MAC layer output against the golden nn op.
     pub verify: bool,
+    /// Lane execution path: compiled schedules (default) or the
+    /// interpreted CFU oracle.
+    pub exec_mode: ExecMode,
 }
 
 impl SimEngine {
-    /// Engine with the VexRiscv cost model.
+    /// Engine with the VexRiscv cost model (compiled execution).
     pub fn new(design: DesignKind) -> Self {
-        SimEngine { design, cost_model: CostModel::vexriscv(), verify: false }
+        SimEngine {
+            design,
+            cost_model: CostModel::vexriscv(),
+            verify: false,
+            exec_mode: ExecMode::Compiled,
+        }
     }
 
     /// Enable bit-exact verification against the reference ops.
@@ -114,6 +123,13 @@ impl SimEngine {
     /// Use a custom cost model (e.g. [`CostModel::mac_only`]).
     pub fn with_cost_model(mut self, m: CostModel) -> Self {
         self.cost_model = m;
+        self
+    }
+
+    /// Force a lane execution mode (e.g. the interpreted oracle for
+    /// differential runs).
+    pub fn with_exec_mode(mut self, mode: ExecMode) -> Self {
+        self.exec_mode = mode;
         self
     }
 
@@ -216,7 +232,7 @@ impl SimEngine {
     ) -> Result<(QTensor, Option<(String, CycleCounter, f64)>)> {
         Ok(match layer {
             PreparedLayer::Conv(p) => {
-                let run = p.run(&cur, &self.cost_model)?;
+                let run = p.run_with_mode(&cur, &self.cost_model, self.exec_mode)?;
                 if self.verify {
                     let reference = p.reference_op().forward_ref(&cur)?;
                     if reference.data() != run.output.data() {
@@ -230,7 +246,7 @@ impl SimEngine {
                 (run.output, Some((format!("conv:{}", p.op.name), run.counter, sparsity)))
             }
             PreparedLayer::Fc(p) => {
-                let run = p.run(&cur, &self.cost_model)?;
+                let run = p.run_with_mode(&cur, &self.cost_model, self.exec_mode)?;
                 if self.verify {
                     let reference = p.reference_op().forward_ref(&cur)?;
                     if reference.data() != run.output.data() {
@@ -279,7 +295,7 @@ impl SimEngine {
             PreparedLayer::Shortcut { conv, slot } => {
                 match conv {
                     Some(p) => {
-                        let run = p.run(&cur, &self.cost_model)?;
+                        let run = p.run_with_mode(&cur, &self.cost_model, self.exec_mode)?;
                         if self.verify {
                             let reference = p.reference_op().forward_ref(&cur)?;
                             if reference.data() != run.output.data() {
@@ -339,6 +355,28 @@ mod tests {
             let report = engine.run(&prepared, &input).unwrap();
             assert!(report.total_cycles > 0, "{design}");
             assert_eq!(report.output.shape().numel(), 12);
+        }
+    }
+
+    #[test]
+    fn compiled_equals_interpreted_oracle_full_model() {
+        // Whole-model differential: the default compiled path must match
+        // the interpreted CFU oracle bit-for-bit on outputs AND on every
+        // aggregate counter, for every design.
+        let (graph, input) = dscnn_setup(0.5, 0.3);
+        for design in DesignKind::ALL {
+            let compiled = SimEngine::new(design);
+            assert_eq!(compiled.exec_mode, ExecMode::Compiled, "compiled must be the default");
+            let oracle = SimEngine::new(design).with_exec_mode(ExecMode::Interpreted);
+            let prepared = compiled.prepare(&graph).unwrap();
+            let a = compiled.run(&prepared, &input).unwrap();
+            let b = oracle.run(&prepared, &input).unwrap();
+            assert_eq!(a.output.data(), b.output.data(), "{design}: outputs");
+            assert_eq!(a.total_cycles, b.total_cycles, "{design}: cycles");
+            assert_eq!(a.mac_cycles, b.mac_cycles, "{design}: mac cycles");
+            assert_eq!(a.cfu_stalls(), b.cfu_stalls(), "{design}: stalls");
+            assert_eq!(a.loaded_bytes(), b.loaded_bytes(), "{design}: loaded bytes");
+            assert_eq!(a.counter.total_instrs(), b.counter.total_instrs(), "{design}: instrs");
         }
     }
 

@@ -14,5 +14,8 @@
 pub mod backend;
 pub mod engine;
 
-pub use backend::{backend_for, verified_backend_for, ExecBackend, ModelKey, PreparedCache};
+pub use backend::{
+    backend_for, backend_with_mode, oracle_backend_for, verified_backend_for, ExecBackend,
+    ModelKey, PreparedCache,
+};
 pub use engine::{LayerStats, PreparedModel, SimEngine, SimReport};

@@ -84,15 +84,60 @@ fn serve_reports_latency() {
 #[test]
 fn serve_streams_batches_through_the_cache() {
     // 5 requests in batches of 2 ⇒ 3 batches: 1 prepared-model build,
-    // 2 cache hits — printed by the serve summary line.
+    // 2 cache hits, no evictions — printed by the serve summary line.
     let (ok, stdout, stderr) = run(&[
         "serve", "--model", "dscnn", "--design", "csa", "--requests", "5", "--batch", "2",
         "--threads", "2", "--scale", "0.07",
     ]);
     assert!(ok, "stderr: {stderr}");
     assert!(stdout.contains("batches of 2"), "{stdout}");
-    assert!(stdout.contains("1 build, 2 hits"), "{stdout}");
+    assert!(stdout.contains("compiled lanes"), "{stdout}");
+    assert!(stdout.contains("1 builds, 2 hits, 0 evictions"), "{stdout}");
     assert!(stdout.contains("throughput"), "{stdout}");
+}
+
+/// Tiny deterministic serve invocation shared by the exec-mode tests.
+fn serve_args<'a>(extra: &[&'a str]) -> Vec<&'a str> {
+    let mut v = vec![
+        "serve", "--model", "dscnn", "--design", "csa", "--requests", "3", "--scale", "0.07",
+    ];
+    v.extend_from_slice(extra);
+    v
+}
+
+#[test]
+fn serve_interpreted_oracle_matches_compiled_cycles() {
+    // --interpreted forces the per-instruction CFU oracle; the simulated
+    // cycle totals must be identical to the compiled default.
+    let (ok_c, stdout_c, stderr_c) = run(&serve_args(&[]));
+    assert!(ok_c, "stderr: {stderr_c}");
+    let (ok_i, stdout_i, stderr_i) = run(&serve_args(&["--interpreted"]));
+    assert!(ok_i, "stderr: {stderr_i}");
+    assert!(stdout_i.contains("interpreted lanes"), "{stdout_i}");
+    let cycles = |s: &str| {
+        s.lines()
+            .find(|l| l.contains("total simulated cycles"))
+            .map(str::to_string)
+            .expect("cycles line")
+    };
+    let line_c = cycles(&stdout_c);
+    let line_i = cycles(&stdout_i);
+    let total = |l: &str| {
+        l.split_whitespace()
+            .find_map(|tok| tok.parse::<u64>().ok())
+            .expect("cycle total")
+    };
+    assert_eq!(total(&line_c), total(&line_i), "compiled: {line_c}\ninterpreted: {line_i}");
+}
+
+#[test]
+fn serve_cache_cap_bounds_the_prepared_cache() {
+    let (ok, stdout, stderr) = run(&[
+        "serve", "--model", "dscnn", "--design", "csa", "--requests", "2", "--cache-cap", "3",
+        "--scale", "0.07",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("cap 3"), "{stdout}");
 }
 
 #[test]

@@ -4,6 +4,12 @@
 //! Section III must hold (`ussa_vcmac` cycles = non-zero weights per
 //! block with a 1-cycle floor, the sequential baseline always 4, the
 //! parallel units always 1).
+//!
+//! Since the compiled-lane-schedule change this tier also pins the
+//! table-driven default execution path against the interpreted CFU
+//! oracle: bit-identical outputs AND cycle totals across every design ×
+//! zoo model, including all-zero lanes, depthwise padded tails and
+//! INT7-clamp edge values.
 
 use sparse_riscv::cfu::{build_cfu, AnyCfu, Cfu};
 use sparse_riscv::encoding::int7::clamp_int7;
@@ -245,5 +251,208 @@ fn lookahead_walk_matches_dense_walk() {
             assert!(i as usize > b);
         }
         assert_eq!(acc, dense, "lookahead walk diverged from dense reference");
+    }
+}
+
+/// Kernel-level differential: random INT8 weight/input streams through
+/// `PreparedConv`/`PreparedFc` under both execution modes, for every
+/// design — outputs and every counter total must agree.
+#[test]
+fn compiled_kernels_match_interpreted_on_random_int8_streams() {
+    use sparse_riscv::cpu::CostModel;
+    use sparse_riscv::kernels::{ExecMode, PreparedConv, PreparedFc};
+    use sparse_riscv::nn::conv2d::{Conv2dOp, Padding};
+    use sparse_riscv::nn::fully_connected::FullyConnectedOp;
+    use sparse_riscv::tensor::quant::QuantParams;
+    use sparse_riscv::tensor::{QTensor, Shape};
+
+    let mut rng = Pcg32::new(0xD7F);
+    let qp = |s: f32, z: i32| QuantParams::new(s, z).unwrap();
+    // Full INT8 range on purpose: SSSA/CSA must clamp ±65..±128 to INT7
+    // at prepare time and both modes must agree on the clamped result.
+    let wgen = |n: usize, sparsity: f64, rng: &mut Pcg32| -> Vec<i8> {
+        (0..n)
+            .map(|_| {
+                if rng.bernoulli(sparsity) {
+                    0
+                } else {
+                    rng.range_i32(-128, 127) as i8
+                }
+            })
+            .collect()
+    };
+
+    // Depthwise 3×3 (9 taps → padded 12-lane tail) over 8 channels.
+    let dw_weights = wgen(8 * 9, 0.5, &mut rng);
+    let dw_bias: Vec<i32> = (0..8).map(|_| rng.range_i32(-300, 300)).collect();
+    let dw = Conv2dOp::new(
+        "dw",
+        dw_weights,
+        dw_bias,
+        8,
+        8,
+        3,
+        3,
+        1,
+        Padding::Same,
+        true,
+        qp(0.05, -3),
+        0.02,
+        qp(0.08, 5),
+        true,
+    )
+    .unwrap();
+    // Normal 3×3 conv with Same padding over 8 channels.
+    let nc_weights = wgen(4 * 3 * 3 * 8, 0.6, &mut rng);
+    let nc_bias: Vec<i32> = (0..4).map(|_| rng.range_i32(-300, 300)).collect();
+    let nc = Conv2dOp::new(
+        "nc",
+        nc_weights,
+        nc_bias,
+        4,
+        8,
+        3,
+        3,
+        1,
+        Padding::Same,
+        false,
+        qp(0.05, -3),
+        0.02,
+        qp(0.08, 5),
+        true,
+    )
+    .unwrap();
+    let conv_input = {
+        let data: Vec<i8> = (0..5 * 5 * 8).map(|_| rng.range_i32(-128, 127) as i8).collect();
+        QTensor::new(Shape::nhwc(1, 5, 5, 8), data, qp(0.05, -3)).unwrap()
+    };
+
+    let fc_weights = wgen(10 * 32, 0.55, &mut rng);
+    let fc_bias: Vec<i32> = (0..10).map(|_| rng.range_i32(-200, 200)).collect();
+    let fc = FullyConnectedOp::new(
+        "fc",
+        fc_weights,
+        fc_bias,
+        10,
+        32,
+        qp(0.1, 4),
+        0.05,
+        qp(0.2, -6),
+        false,
+    )
+    .unwrap();
+    let fc_input = {
+        let data: Vec<i8> = (0..2 * 32).map(|_| rng.range_i32(-128, 127) as i8).collect();
+        QTensor::new(Shape::d2(2, 32), data, qp(0.1, 4)).unwrap()
+    };
+
+    let model = CostModel::vexriscv();
+    for design in DesignKind::ALL {
+        for op in [&dw, &nc] {
+            let prep = PreparedConv::new(op, design).unwrap();
+            let c = prep.run_with_mode(&conv_input, &model, ExecMode::Compiled).unwrap();
+            let i = prep.run_with_mode(&conv_input, &model, ExecMode::Interpreted).unwrap();
+            let tag = format!("{design}/{}", op.name);
+            assert_eq!(c.output.data(), i.output.data(), "{tag}: outputs");
+            assert_eq!(c.counter.cycles(), i.counter.cycles(), "{tag}: cycles");
+            assert_eq!(c.counter.total_instrs(), i.counter.total_instrs(), "{tag}: instrs");
+            assert_eq!(c.counter.cfu_cycles(), i.counter.cfu_cycles(), "{tag}: cfu");
+            assert_eq!(c.counter.cfu_stalls(), i.counter.cfu_stalls(), "{tag}: stalls");
+            assert_eq!(c.counter.loaded_bytes(), i.counter.loaded_bytes(), "{tag}: loads");
+        }
+        let prep = PreparedFc::new(&fc, design).unwrap();
+        let c = prep.run_with_mode(&fc_input, &model, ExecMode::Compiled).unwrap();
+        let i = prep.run_with_mode(&fc_input, &model, ExecMode::Interpreted).unwrap();
+        assert_eq!(c.output.data(), i.output.data(), "{design}/fc: outputs");
+        assert_eq!(c.counter.cycles(), i.counter.cycles(), "{design}/fc: cycles");
+        assert_eq!(c.counter.cfu_stalls(), i.counter.cfu_stalls(), "{design}/fc: stalls");
+    }
+}
+
+/// INT7-clamp edge values, all-zero blocks and a trailing zero block in
+/// one lane: the compiled schedule must agree with the interpreted walk
+/// on accumulator and charges for every design.
+#[test]
+fn compiled_lane_handles_clamp_edges_and_zero_blocks() {
+    use sparse_riscv::cfu::AnyCfu;
+    use sparse_riscv::cpu::{CostModel, CycleCounter};
+    use sparse_riscv::encoding::pack::pack4_le;
+    use sparse_riscv::kernels::lane::{
+        prepare_lanes, run_lane, run_lane_compiled, INPUT_COST_DENSE,
+    };
+
+    let ws: Vec<i8> = vec![
+        127, -128, 64, -65, // INT8 extremes: clamped to INT7 for SSSA/CSA
+        0, 0, 0, 0, // interior all-zero block
+        63, -64, 1, -1, // exact INT7 extremes (never clamped)
+        0, 0, 0, 0, // trailing all-zero block
+    ];
+    let xs: Vec<i8> = (0..16).map(|i| (i as i8).wrapping_mul(17)).collect();
+    for design in DesignKind::ALL {
+        let prep = prepare_lanes(&ws, 16, design).unwrap();
+        let mut cfu = AnyCfu::new(design, 128);
+        let mut ci = CycleCounter::new(CostModel::vexriscv());
+        let ai = run_lane(
+            design,
+            &mut cfu,
+            prep.lane_words(0),
+            |j| (pack4_le(&xs[j * 4..j * 4 + 4]), 1, 0),
+            0,
+            &mut ci,
+        )
+        .unwrap();
+        let mut cc = CycleCounter::new(CostModel::vexriscv());
+        let ac = run_lane_compiled(
+            prep.lane_schedule(0),
+            128,
+            INPUT_COST_DENSE,
+            |j| pack4_le(&xs[j * 4..j * 4 + 4]),
+            0,
+            &mut cc,
+        );
+        assert_eq!(ai, ac, "{design}: accumulator");
+        assert_eq!(ci.cycles(), cc.cycles(), "{design}: cycles");
+        assert_eq!(ci.total_instrs(), cc.total_instrs(), "{design}: instrs");
+        assert_eq!(ci.cfu_stalls(), cc.cfu_stalls(), "{design}: stalls");
+        assert_eq!(ci.loaded_bytes(), cc.loaded_bytes(), "{design}: loads");
+    }
+}
+
+/// Whole-zoo differential: every model × every design, compiled default
+/// vs interpreted oracle — the acceptance bar for the table-driven path.
+#[test]
+fn compiled_matches_oracle_across_designs_and_zoo_models() {
+    use sparse_riscv::kernels::ExecMode;
+    use sparse_riscv::models::builder::{apply_sparsity, random_input, ModelConfig};
+    use sparse_riscv::models::zoo::{build_model, model_names};
+    use sparse_riscv::simulator::SimEngine;
+
+    for model in model_names() {
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let mut info = build_model(model, &cfg).unwrap();
+        apply_sparsity(&mut info.graph, 0.5, 0.3);
+        let mut rng = Pcg32::new(0xD8F);
+        // Smaller input for the big-image model to keep CI fast (the
+        // same trick the integration tier uses).
+        let shape = if model == "mobilenetv2" {
+            sparse_riscv::tensor::Shape::nhwc(1, 32, 32, 4)
+        } else {
+            info.input_shape.clone()
+        };
+        let input = random_input(shape, cfg.act_params(), &mut rng);
+        for design in DesignKind::ALL {
+            let compiled = SimEngine::new(design);
+            let oracle = SimEngine::new(design).with_exec_mode(ExecMode::Interpreted);
+            let prepared = compiled.prepare(&info.graph).unwrap();
+            let a = compiled.run(&prepared, &input).unwrap();
+            let b = oracle.run(&prepared, &input).unwrap();
+            let tag = format!("{model}/{design}");
+            assert_eq!(a.output.data(), b.output.data(), "{tag}: outputs");
+            assert_eq!(a.total_cycles, b.total_cycles, "{tag}: cycles");
+            assert_eq!(a.mac_cycles, b.mac_cycles, "{tag}: mac cycles");
+            assert_eq!(a.cfu_stalls(), b.cfu_stalls(), "{tag}: stalls");
+            assert_eq!(a.loaded_bytes(), b.loaded_bytes(), "{tag}: loaded bytes");
+            assert_eq!(a.counter.total_instrs(), b.counter.total_instrs(), "{tag}: instrs");
+        }
     }
 }

@@ -1,0 +1,58 @@
+//! Small e2e sweep smoke test.
+//!
+//! Runs the same `bench::e2e` sweep the CLI `bench-e2e` command and the
+//! throughput bench share, on a small model subset. CI runs this tier
+//! additionally under `cargo test --release` so the compiled
+//! lane-schedule path is exercised under optimizations (debug and
+//! release must agree on every deterministic counter — the cycle model
+//! is integer arithmetic only).
+
+use sparse_riscv::bench::e2e::{run_e2e, to_records, E2eConfig};
+use sparse_riscv::isa::DesignKind;
+
+fn small_cfg() -> E2eConfig {
+    E2eConfig {
+        models: vec!["dscnn".into()],
+        designs: vec![DesignKind::BaselineSimd, DesignKind::Csa],
+        batch: 4,
+        threads: 2,
+        scale: 0.07,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn e2e_small_sweep_completes_and_emits_records() {
+    let cfg = small_cfg();
+    let summary = run_e2e(&cfg).unwrap();
+    // 1 model × 2 designs × 2 thread sides.
+    assert_eq!(summary.rows.len(), 4);
+    for row in &summary.rows {
+        assert_eq!(row.report.completed, cfg.batch as u64);
+        assert!(row.report.total_cycles > 0);
+        assert!(row.report.cache_hit, "sweep pre-warms the prepared cache");
+    }
+    let records = to_records(&cfg, &summary);
+    // 4 cells + 1 aggregate.
+    assert_eq!(records.len(), 5);
+    let t1 = records.iter().find(|r| r.id == "e2e/dscnn/CSA/t1").unwrap();
+    assert!(t1.get("total_cycles").unwrap() > 0.0);
+    // The informational serve-path throughput rides along in every cell.
+    assert!(t1.get("host_infer_per_s").is_some());
+}
+
+#[test]
+fn e2e_sweep_cycles_are_run_invariant() {
+    // Two independent sweeps of the same config must report identical
+    // deterministic counters (the property the perf gate relies on).
+    let cfg = small_cfg();
+    let a = run_e2e(&cfg).unwrap();
+    let b = run_e2e(&cfg).unwrap();
+    assert_eq!(a.rows.len(), b.rows.len());
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.report.total_cycles, rb.report.total_cycles);
+        assert_eq!(ra.report.cfu_cycles, rb.report.cfu_cycles);
+        assert_eq!(ra.report.cfu_stalls, rb.report.cfu_stalls);
+        assert_eq!(ra.report.predictions, rb.report.predictions);
+    }
+}

@@ -180,3 +180,31 @@ fn prop_pack_words_roundtrip_encoded_blocks() {
         },
     );
 }
+
+#[test]
+fn prop_compiled_schedule_walk_equals_lookahead_walk() {
+    // The prepare-time compiled schedule (driven by packed skip bits)
+    // must visit exactly the blocks the software-side Algorithm 1 walk
+    // visits, and never skip a non-zero block.
+    use sparse_riscv::encoding::lookahead::visited_indices;
+    use sparse_riscv::isa::DesignKind;
+    use sparse_riscv::kernels::lane::prepare_lanes;
+
+    check(Config::default().cases(96).seed(0xE7), gen_lane, |lane| {
+        let mut ws = to_i8(lane);
+        if ws.is_empty() || ws.len() % BLOCK != 0 {
+            return true; // shrink candidate with an invalid lane length
+        }
+        clamp_slice_int7(&mut ws);
+        let expect = visited_indices(&ws);
+        [DesignKind::Sssa, DesignKind::Csa].into_iter().all(|design| {
+            let prep = prepare_lanes(&ws, ws.len(), design).unwrap();
+            let got: Vec<usize> =
+                prep.lane_schedule(0).visited.iter().map(|&(j, _)| j as usize).collect();
+            let covers_nonzero = (0..ws.len() / BLOCK).all(|b| {
+                got.contains(&b) || block_is_zero(&ws[b * BLOCK..(b + 1) * BLOCK])
+            });
+            got == expect && covers_nonzero
+        })
+    });
+}
