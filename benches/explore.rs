@@ -1,0 +1,53 @@
+//! Design-space-explorer sweep: explored-vs-best-uniform speedup per
+//! zoo model on the canonical mixed-sparsity workload (per-layer
+//! sparsity plan + INT8 stem/head).
+//!
+//! ```bash
+//! cargo bench --bench explore
+//! BENCH_JSON=BENCH_figs.json cargo bench --bench explore
+//! ```
+
+use sparse_riscv::analysis::report::{f2, Table};
+use sparse_riscv::bench::explore::{explore_mixed, to_record, HIDDEN_SPARSITY};
+use sparse_riscv::metrics::sink_and_report;
+use sparse_riscv::models::zoo::model_names;
+
+fn main() {
+    let scale = 0.1;
+    let mut t = Table::new(
+        "explorer sweep (mixed per-layer sparsity, INT8 stem/head, lossless)",
+        &[
+            "model",
+            "best assignment",
+            "explored cycles",
+            "best uniform",
+            "uniform cycles",
+            "speedup",
+            "frontier",
+            "+LUTs",
+            "+DSPs",
+        ],
+    );
+    let mut records = Vec::new();
+    for model in model_names() {
+        let result = explore_mixed(model, scale).expect("explore");
+        t.row(&[
+            model.to_string(),
+            result.best.assignment.label(),
+            result.best.total_cycles.to_string(),
+            result.best_uniform.assignment.label(),
+            result.best_uniform.total_cycles.to_string(),
+            f2(result.speedup_vs_uniform()),
+            result.frontier.len().to_string(),
+            result.best.resources.luts.to_string(),
+            result.best.resources.dsps.to_string(),
+        ]);
+        assert!(
+            result.speedup_vs_uniform() >= 1.0,
+            "{model}: explored assignment must never lose to uniform"
+        );
+        records.push(to_record(model, scale, HIDDEN_SPARSITY, &result));
+    }
+    print!("{}", t.render());
+    sink_and_report("regenerate: BENCH_JSON=BENCH_figs.json cargo bench --bench explore", &records);
+}

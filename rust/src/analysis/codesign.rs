@@ -1,0 +1,143 @@
+//! FPGA resource model for per-layer co-design (the cost axis of the
+//! explorer's Pareto frontier).
+//!
+//! The paper's Table III reports each CFU's LUT/FF/DSP *increment* over
+//! the baseline VexRiscv + LiteX SoC. A heterogeneous
+//! [`DesignAssignment`](crate::isa::DesignAssignment) must instantiate
+//! every design it uses in the combined CFU build (the `funct3` design
+//! selector of Section III-B1 lets them coexist), so its resource cost
+//! is the sum of the distinct designs' increments — a slightly
+//! conservative union (shared operand registers are counted per design)
+//! that preserves the orderings Table III establishes.
+//!
+//! Published numbers are used where the paper reports them (USSA, SSSA,
+//! CSA); the structural estimator of [`crate::resources::fpga`] fills in
+//! the rest (the sequential baseline, and the SIMD baseline whose MAC is
+//! already part of the baseline SoC, i.e. a zero increment).
+//!
+//! ```
+//! use sparse_riscv::analysis::codesign::{assignment_cost, design_cost};
+//! use sparse_riscv::isa::{DesignAssignment, DesignKind};
+//!
+//! // Table III: the CSA CFU adds 108 LUTs and 2 DSPs.
+//! assert_eq!(design_cost(DesignKind::Csa).luts, 108);
+//! assert_eq!(design_cost(DesignKind::Csa).dsps, 2);
+//! // The SIMD baseline is free — its MAC ships with the baseline SoC.
+//! assert_eq!(design_cost(DesignKind::BaselineSimd).luts, 0);
+//! // A mixed assignment pays for every design it uses.
+//! let mixed = DesignAssignment::per_layer(vec![
+//!     DesignKind::Sssa,
+//!     DesignKind::BaselineSimd,
+//! ]);
+//! let cost = assignment_cost(&mixed);
+//! assert_eq!(cost.luts, design_cost(DesignKind::Sssa).luts);
+//! ```
+
+use crate::isa::{DesignAssignment, DesignKind};
+use crate::resources::fpga::{estimate_cfu, paper_increment, ResourceUsage};
+
+/// LUT/FF/DSP increment of one design's CFU over the baseline SoC:
+/// the paper's Table III where published, the structural estimate
+/// ([`estimate_cfu`]) otherwise.
+pub fn design_cost(design: DesignKind) -> ResourceUsage {
+    paper_increment(design).unwrap_or_else(|| estimate_cfu(design))
+}
+
+/// Resource cost of instantiating every design in `designs` in one
+/// combined CFU build (duplicates are counted once; callers normally
+/// pass [`DesignAssignment::designs_used`]).
+pub fn designs_cost(designs: &[DesignKind]) -> ResourceUsage {
+    DesignKind::ALL
+        .into_iter()
+        .filter(|d| designs.contains(d))
+        .fold(ResourceUsage::default(), |acc, d| acc.add(&design_cost(d)))
+}
+
+/// Resource cost of a (possibly heterogeneous) per-layer assignment.
+pub fn assignment_cost(assignment: &DesignAssignment) -> ResourceUsage {
+    designs_cost(&assignment.designs_used())
+}
+
+/// Does `cost` fit within `budget` in every dimension? (BRAM included
+/// for completeness; all CFUs use none.)
+pub fn within_budget(cost: &ResourceUsage, budget: &ResourceUsage) -> bool {
+    cost.luts <= budget.luts
+        && cost.ffs <= budget.ffs
+        && cost.brams <= budget.brams
+        && cost.dsps <= budget.dsps
+}
+
+/// Parse a CLI budget spec like `"luts=100,ffs=200,dsps=2"`. Omitted
+/// dimensions default to unlimited (`u32::MAX`); an empty string is a
+/// fully-unlimited budget.
+pub fn parse_budget(spec: &str) -> Option<ResourceUsage> {
+    let mut budget = ResourceUsage {
+        luts: u32::MAX,
+        ffs: u32::MAX,
+        brams: u32::MAX,
+        dsps: u32::MAX,
+    };
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (key, value) = part.split_once('=')?;
+        let value: u32 = value.trim().parse().ok()?;
+        match key.trim().to_ascii_lowercase().as_str() {
+            "luts" | "lut" => budget.luts = value,
+            "ffs" | "ff" => budget.ffs = value,
+            "brams" | "bram" => budget.brams = value,
+            "dsps" | "dsp" => budget.dsps = value,
+            _ => return None,
+        }
+    }
+    Some(budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_increments_take_precedence() {
+        // Table III values, verbatim.
+        assert_eq!(design_cost(DesignKind::Ussa).luts, 34);
+        assert_eq!(design_cost(DesignKind::Sssa).luts, 95);
+        assert_eq!(design_cost(DesignKind::Csa).dsps, 2);
+        // Baselines fall back to the structural estimate.
+        assert_eq!(design_cost(DesignKind::BaselineSimd), ResourceUsage::default());
+        assert!(design_cost(DesignKind::BaselineSequential).dsps >= 1);
+    }
+
+    #[test]
+    fn assignment_cost_sums_distinct_designs_once() {
+        let a = DesignAssignment::per_layer(vec![
+            DesignKind::Sssa,
+            DesignKind::Ussa,
+            DesignKind::Sssa,
+            DesignKind::BaselineSimd,
+        ]);
+        let cost = assignment_cost(&a);
+        let expect = design_cost(DesignKind::Sssa).add(&design_cost(DesignKind::Ussa));
+        assert_eq!(cost, expect);
+        // Uniform SIMD is free; uniform CSA is Table III's increment.
+        assert_eq!(
+            assignment_cost(&DesignAssignment::Uniform(DesignKind::BaselineSimd)),
+            ResourceUsage::default()
+        );
+        assert_eq!(
+            assignment_cost(&DesignAssignment::Uniform(DesignKind::Csa)).luts,
+            108
+        );
+    }
+
+    #[test]
+    fn budget_parse_and_check() {
+        let b = parse_budget("luts=100, dsps=1").unwrap();
+        assert_eq!(b.luts, 100);
+        assert_eq!(b.dsps, 1);
+        assert_eq!(b.ffs, u32::MAX);
+        assert!(within_budget(&design_cost(DesignKind::Ussa), &b));
+        assert!(!within_budget(&design_cost(DesignKind::Csa), &b)); // 2 DSPs
+        assert!(parse_budget("").is_some());
+        assert!(parse_budget("bogus=3").is_none());
+        assert!(parse_budget("luts=abc").is_none());
+    }
+}

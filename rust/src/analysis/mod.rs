@@ -2,9 +2,12 @@
 //!
 //! [`speedup`] implements the closed-form cycle/speedup models of
 //! Sections IV-D and IV-E (Figures 8 and 9); [`sota`] encodes the
-//! state-of-the-art comparison of Table I; [`report`] renders aligned
-//! text tables/series for the bench harness output.
+//! state-of-the-art comparison of Table I; [`codesign`] prices per-layer
+//! design assignments against Table III's FPGA resource increments (the
+//! cost axis of the explorer's Pareto frontier); [`report`] renders
+//! aligned text tables/series for the bench harness output.
 
+pub mod codesign;
 pub mod energy;
 pub mod report;
 pub mod sota;

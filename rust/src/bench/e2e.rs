@@ -127,10 +127,10 @@ pub fn to_records(cfg: &E2eConfig, summary: &E2eSummary) -> Vec<MetricRecord> {
                 x_us: cfg.x_us,
                 x_ss: cfg.x_ss,
                 scale: cfg.scale,
-                ..BatchSpec::new(&r.model, r.design)
+                ..BatchSpec::assigned(&r.model, r.assignment.clone())
             };
             records.push(r.to_metric(
-                &format!("e2e/{}/{}/{label}", r.model, r.design.name()),
+                &format!("e2e/{}/{}/{label}", r.model, r.design_label()),
                 &spec,
                 cfg.batch as u64,
                 row.threads as u64,
@@ -233,7 +233,7 @@ pub fn render(cfg: &E2eConfig, summary: &E2eSummary) -> String {
         };
         t.row(&[
             r.model.clone(),
-            r.design.name().to_string(),
+            r.design_label(),
             row.threads.to_string(),
             format!("{:.4}", r.wall_seconds),
             f2(r.host_throughput()),

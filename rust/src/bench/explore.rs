@@ -1,0 +1,113 @@
+//! Explorer sweep: explored-vs-best-uniform speedup per zoo model on a
+//! canonical mixed-sparsity workload.
+//!
+//! Shared by the `bench-e2e` subcommand (which appends these records to
+//! the `BENCH_e2e.json` sink) and `benches/explore.rs`, so the perf
+//! gates can track the explorer's wins once baselines are seeded. The
+//! metrics are informational (`explore_*` in the registry): the
+//! heterogeneous-vs-uniform gap is a *capability* number, gated later
+//! when a baseline deliberately commits it.
+
+use crate::error::Result;
+use crate::explorer::{explore, profile_graph, Exploration, ExplorerOptions};
+use crate::metrics::MetricRecord;
+use crate::models::builder::{
+    apply_sparsity_plan, widen_weights_to_int8, ModelConfig,
+};
+use crate::models::zoo::build_model;
+use crate::nn::graph::Graph;
+use crate::tensor::Shape;
+
+/// Per-layer sparsity of the scenario's hidden layers (block-heavy, the
+/// SSSA-friendly side of the mix) — also the `(x_us, x_ss)` context the
+/// metric records carry, since a per-layer plan has no single ratio.
+pub const HIDDEN_SPARSITY: (f64, f64) = (0.5, 0.5);
+/// Per-layer sparsity of the widened stem/head layers (unstructured
+/// only, no skippable blocks).
+pub const EDGE_SPARSITY: (f64, f64) = (0.4, 0.0);
+
+/// Build the canonical mixed co-design workload for one zoo model:
+/// hidden layers get [`HIDDEN_SPARSITY`], the stem and classifier head
+/// get [`EDGE_SPARSITY`] and are widened to full INT8 range (so
+/// lossless deployments must keep a baseline design there — the
+/// realistic mixed-range case the explorer exists for). Deterministic
+/// in (model, scale).
+pub fn mixed_scenario(model: &str, scale: f64) -> Result<(Graph, Shape)> {
+    let cfg = ModelConfig { scale, ..Default::default() };
+    let mut info = build_model(model, &cfg)?;
+    let n = info.graph.mac_layers();
+    let widened = if n > 1 { vec![0, n - 1] } else { vec![0] };
+    let plan: Vec<(f64, f64)> = (0..n)
+        .map(|i| if widened.contains(&i) { EDGE_SPARSITY } else { HIDDEN_SPARSITY })
+        .collect();
+    apply_sparsity_plan(&mut info.graph, &plan);
+    widen_weights_to_int8(&mut info.graph, &widened);
+    Ok((info.graph, info.input_shape))
+}
+
+/// Explore one model's mixed scenario (lossless, unbudgeted, all
+/// candidate designs).
+pub fn explore_mixed(model: &str, scale: f64) -> Result<Exploration> {
+    let (graph, input_shape) = mixed_scenario(model, scale)?;
+    let opts = ExplorerOptions::default();
+    let table = profile_graph(&graph, &input_shape, &opts.candidates, &opts.cost_model)?;
+    explore(&table, &opts)
+}
+
+/// Convert one exploration into its informational metric record
+/// (`explore/<model>`). `(x_us, x_ss)` is the caller's representative
+/// sparsity context — the canonical sweep passes [`HIDDEN_SPARSITY`],
+/// the `explore` CLI its actual plan's leading entry.
+pub fn to_record(
+    model: &str,
+    scale: f64,
+    (x_us, x_ss): (f64, f64),
+    result: &Exploration,
+) -> MetricRecord {
+    MetricRecord::new(&format!("explore/{model}"))
+        .context(model, &result.best.assignment.label(), x_us, x_ss, scale, 0, 0)
+        .with_value("explore_best_cycles", result.best.total_cycles as f64)
+        .with_value("explore_uniform_cycles", result.best_uniform.total_cycles as f64)
+        .with_value("explore_speedup", result.speedup_vs_uniform())
+        .with_value("explore_frontier_size", result.frontier.len() as f64)
+        .with_value("explore_luts", result.best.resources.luts as f64)
+        .with_value("explore_dsps", result.best.resources.dsps as f64)
+}
+
+/// Run the sweep over several models, returning one record per model.
+pub fn run_explore_bench(models: &[String], scale: f64) -> Result<Vec<MetricRecord>> {
+    let mut records = Vec::with_capacity(models.len());
+    for model in models {
+        let result = explore_mixed(model, scale)?;
+        records.push(to_record(model, scale, HIDDEN_SPARSITY, &result));
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_scenario_yields_strict_heterogeneous_win() {
+        let result = explore_mixed("dscnn", 0.07).unwrap();
+        assert!(result.speedup_vs_uniform() > 1.0, "{}", result.speedup_vs_uniform());
+        assert!(!result.best.assignment.is_uniform());
+        let rec = to_record("dscnn", 0.07, HIDDEN_SPARSITY, &result);
+        assert_eq!(rec.id, "explore/dscnn");
+        assert!(rec.get("explore_speedup").unwrap() > 1.0);
+        assert!(rec.get("explore_best_cycles").unwrap() > 0.0);
+        assert!(rec.get("explore_frontier_size").unwrap() >= 1.0);
+        // Informational: explorer records never gate until a baseline
+        // deliberately commits them.
+        assert!(!crate::metrics::spec_for("explore_best_cycles").gate);
+        assert!(!crate::metrics::spec_for("explore_speedup").gate);
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let a = run_explore_bench(&["dscnn".to_string()], 0.07).unwrap();
+        let b = run_explore_bench(&["dscnn".to_string()], 0.07).unwrap();
+        assert_eq!(a, b);
+    }
+}

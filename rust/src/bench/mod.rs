@@ -7,13 +7,17 @@
 //! which are deterministic and need no statistical treatment.
 //!
 //! [`e2e`] hosts the batched end-to-end throughput sweep shared by the
-//! `bench-e2e` CLI subcommand and `benches/e2e_throughput.rs`. Both the
-//! sweep and [`harness::BenchResult`] emit structured
+//! `bench-e2e` CLI subcommand and `benches/e2e_throughput.rs`, and
+//! [`explore`] the design-space-explorer sweep (explored-vs-uniform
+//! speedup on a canonical mixed-sparsity workload). Both the sweeps and
+//! [`harness::BenchResult`] emit structured
 //! [`crate::metrics::MetricRecord`]s so every benchmark feeds the
 //! committed `BENCH_*.json` baselines (see [`crate::metrics`]).
 
 pub mod e2e;
+pub mod explore;
 pub mod harness;
 
 pub use e2e::{run_e2e, to_records, E2eConfig, E2eSummary};
+pub use explore::{explore_mixed, mixed_scenario, run_explore_bench};
 pub use harness::{bench_fn, BenchConfig, BenchResult};

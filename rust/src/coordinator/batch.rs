@@ -1,8 +1,8 @@
 //! Engine v2: batched multi-design inference over the cycle simulator.
 //!
 //! One [`BatchEngine`] owns a worker pool and a prepared-model cache and
-//! executes *batches* of inference requests for any (model, design,
-//! sparsity) configuration:
+//! executes *batches* of inference requests for any (model, per-layer
+//! design assignment, sparsity) configuration:
 //!
 //! - the prepared model (built + pruned + lookahead-encoded weights) is
 //!   cached across batches keyed by [`crate::simulator::ModelKey`], so a
@@ -20,12 +20,14 @@
 
 use super::scheduler::JobPool;
 use crate::error::Result;
-use crate::isa::DesignKind;
+use crate::isa::{DesignAssignment, DesignKind};
 use crate::kernels::ExecMode;
 use crate::metrics::MetricRecord;
 use crate::models::builder::{apply_sparsity, random_input, ModelConfig};
 use crate::models::zoo::{build_model, input_shape};
-use crate::simulator::{backend_with_mode, ExecBackend, ModelKey, PreparedCache, PreparedModel};
+use crate::simulator::{
+    assigned_backend_with_mode, ExecBackend, ModelKey, PreparedCache, PreparedModel,
+};
 use crate::tensor::quant::QuantParams;
 use crate::tensor::QTensor;
 use crate::util::stats::{OnlineStats, Percentiles};
@@ -38,8 +40,9 @@ use std::time::Instant;
 pub struct BatchSpec {
     /// Model zoo identifier.
     pub model: String,
-    /// Accelerator design.
-    pub design: DesignKind,
+    /// Per-layer accelerator assignment (uniform for one model-wide
+    /// design).
+    pub assignment: DesignAssignment,
     /// Unstructured sparsity within surviving blocks.
     pub x_us: f64,
     /// 4:4 block sparsity.
@@ -51,11 +54,17 @@ pub struct BatchSpec {
 }
 
 impl BatchSpec {
-    /// Spec with the repo-default sparsity/scale/seed.
+    /// Uniform-design spec with the repo-default sparsity/scale/seed.
     pub fn new(model: &str, design: DesignKind) -> Self {
+        BatchSpec::assigned(model, DesignAssignment::Uniform(design))
+    }
+
+    /// Per-layer assignment spec (e.g. the explorer's argmin) with the
+    /// repo-default sparsity/scale/seed.
+    pub fn assigned(model: &str, assignment: DesignAssignment) -> Self {
         BatchSpec {
             model: model.to_string(),
-            design,
+            assignment,
             x_us: 0.5,
             x_ss: 0.3,
             scale: 0.125,
@@ -64,9 +73,9 @@ impl BatchSpec {
     }
 
     fn key(&self) -> ModelKey {
-        ModelKey::new(
+        ModelKey::assigned(
             &self.model,
-            self.design,
+            self.assignment.clone(),
             self.x_us,
             self.x_ss,
             self.scale,
@@ -84,8 +93,8 @@ impl BatchSpec {
 pub struct BatchReport {
     /// Model name.
     pub model: String,
-    /// Design executed.
-    pub design: DesignKind,
+    /// Per-layer design assignment executed.
+    pub assignment: DesignAssignment,
     /// Requests completed.
     pub completed: u64,
     /// Total simulated cycles over the batch.
@@ -120,6 +129,12 @@ pub struct BatchReport {
 }
 
 impl BatchReport {
+    /// Compact assignment label for tables and metric records (the
+    /// design name when uniform).
+    pub fn design_label(&self) -> String {
+        self.assignment.label()
+    }
+
     /// Host-side throughput (inferences per wall second).
     pub fn host_throughput(&self) -> f64 {
         if self.wall_seconds <= 0.0 {
@@ -179,7 +194,7 @@ impl BatchReport {
         MetricRecord::new(id)
             .context(
                 &self.model,
-                self.design.name(),
+                &self.design_label(),
                 spec.x_us,
                 spec.x_ss,
                 spec.scale,
@@ -292,13 +307,13 @@ impl BatchEngine {
     }
 
     /// Build the execution backend for a spec under this engine's options.
-    fn backend(&self, design: DesignKind) -> Box<dyn ExecBackend> {
-        backend_with_mode(design, self.opts.verify, self.opts.exec_mode)
+    fn backend(&self, assignment: &DesignAssignment) -> Box<dyn ExecBackend> {
+        assigned_backend_with_mode(assignment, self.opts.verify, self.opts.exec_mode)
     }
 
     /// Fetch (or build) the prepared model for a spec.
     pub fn prepared(&self, spec: &BatchSpec) -> Result<(Arc<PreparedModel>, bool)> {
-        let backend = self.backend(spec.design);
+        let backend = self.backend(&spec.assignment);
         self.prepared_with(spec, backend.as_ref())
     }
 
@@ -318,7 +333,7 @@ impl BatchEngine {
     /// pool, and aggregate the per-request reports.
     pub fn run_batch(&self, spec: &BatchSpec, requests: Vec<QTensor>) -> Result<BatchReport> {
         let t0 = Instant::now();
-        let backend: Arc<dyn ExecBackend> = Arc::from(self.backend(spec.design));
+        let backend: Arc<dyn ExecBackend> = Arc::from(self.backend(&spec.assignment));
         let (prepared, cache_hit) = self.prepared_with(spec, backend.as_ref())?;
         let classes = prepared.classes;
         let n = requests.len();
@@ -345,7 +360,7 @@ impl BatchEngine {
         let mut latency = OnlineStats::new();
         let mut report = BatchReport {
             model: spec.model.clone(),
-            design: spec.design,
+            assignment: spec.assignment.clone(),
             completed: 0,
             total_cycles: 0,
             cfu_cycles: 0,
@@ -520,6 +535,31 @@ mod tests {
         // Correctness is unaffected by eviction (same prepared weights).
         assert_eq!(a.total_cycles, c.total_cycles);
         assert_eq!(a.predictions, c.predictions);
+    }
+
+    #[test]
+    fn heterogeneous_spec_runs_and_matches_direct_engine() {
+        let assignment =
+            DesignAssignment::per_layer(vec![DesignKind::Sssa, DesignKind::BaselineSimd]);
+        let spec = BatchSpec { scale: 0.07, ..BatchSpec::assigned("dscnn", assignment.clone()) };
+        let reqs = BatchEngine::gen_requests("dscnn", 3, 41).unwrap();
+        let engine = BatchEngine::new(BatchOptions::default());
+        let report = engine.run_batch(&spec, reqs.clone()).unwrap();
+        assert_eq!(report.completed, 3);
+        assert_eq!(report.design_label(), "hetero:sb");
+        // Agreement with the heterogeneous engine driven directly.
+        let (prepared, _) = engine.prepared(&spec).unwrap();
+        let backend =
+            assigned_backend_with_mode(&assignment, false, ExecMode::Compiled);
+        let mut cycles = 0u64;
+        for r in &reqs {
+            cycles += backend.execute(&prepared, r).unwrap().total_cycles;
+        }
+        assert_eq!(report.total_cycles, cycles);
+        // A uniform spec afterwards must not alias the heterogeneous key.
+        let uni = BatchSpec { scale: 0.07, ..BatchSpec::new("dscnn", DesignKind::Sssa) };
+        engine.run_batch(&uni, reqs).unwrap();
+        assert_eq!(engine.cache().misses(), 2);
     }
 
     #[test]

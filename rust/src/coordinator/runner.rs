@@ -57,21 +57,13 @@ pub fn run_experiment(cfg: &ExperimentConfig, model_cfg: &ModelConfig) -> Result
 
     // Measure achieved sparsity over all MAC layers.
     let (mut zeros, mut total, mut zero_blocks, mut blocks) = (0usize, 0usize, 0usize, 0usize);
-    for layer in &info.graph.layers {
-        let ws: Option<&[i8]> = match layer {
-            crate::nn::graph::Layer::Conv(op) => Some(&op.weights),
-            crate::nn::graph::Layer::Fc(op) => Some(&op.weights),
-            crate::nn::graph::Layer::Shortcut { conv: Some(op), .. } => Some(&op.weights),
-            _ => None,
-        };
-        if let Some(ws) = ws {
-            zeros += ws.iter().filter(|&&w| w == 0).count();
-            total += ws.len();
-            for b in ws.chunks(4) {
-                blocks += 1;
-                if b.iter().all(|&w| w == 0) {
-                    zero_blocks += 1;
-                }
+    for ws in info.graph.mac_weights() {
+        zeros += ws.iter().filter(|&&w| w == 0).count();
+        total += ws.len();
+        for b in ws.chunks(4) {
+            blocks += 1;
+            if b.iter().all(|&w| w == 0) {
+                zero_blocks += 1;
             }
         }
     }

@@ -13,9 +13,9 @@
 
 use super::scheduler::JobPool;
 use crate::error::Result;
-use crate::isa::DesignKind;
+use crate::isa::{DesignAssignment, DesignKind};
 use crate::nn::graph::Graph;
-use crate::simulator::{verified_backend_for, ExecBackend, PreparedModel};
+use crate::simulator::{assigned_backend_with_mode, ExecBackend, PreparedModel};
 use crate::tensor::QTensor;
 use crate::util::stats::{OnlineStats, Percentiles};
 use std::sync::{Arc, Mutex};
@@ -77,7 +77,7 @@ impl ServeMetrics {
     }
 }
 
-/// An inference server bound to one design.
+/// An inference server bound to one design assignment.
 pub struct Server {
     backend: Arc<dyn ExecBackend>,
     prepared: Arc<PreparedModel>,
@@ -86,9 +86,24 @@ pub struct Server {
 }
 
 impl Server {
-    /// Prepare a model for serving.
+    /// Prepare a model for serving on one uniform design.
     pub fn new(graph: &Graph, design: DesignKind, opts: &ServeOptions) -> Result<Self> {
-        let backend: Arc<dyn ExecBackend> = Arc::from(verified_backend_for(design, opts.verify));
+        Server::new_assigned(graph, &DesignAssignment::Uniform(design), opts)
+    }
+
+    /// Prepare a model for serving on a (possibly heterogeneous)
+    /// per-layer assignment — e.g. the explorer's argmin fed straight
+    /// into the serving loop.
+    pub fn new_assigned(
+        graph: &Graph,
+        assignment: &DesignAssignment,
+        opts: &ServeOptions,
+    ) -> Result<Self> {
+        let backend: Arc<dyn ExecBackend> = Arc::from(assigned_backend_with_mode(
+            assignment,
+            opts.verify,
+            crate::kernels::ExecMode::Compiled,
+        ));
         let prepared = Arc::new(backend.prepare(graph)?);
         Ok(Server {
             backend,
@@ -98,9 +113,9 @@ impl Server {
         })
     }
 
-    /// Design served.
-    pub fn design(&self) -> DesignKind {
-        self.backend.design()
+    /// Assignment served (uniform for the single-design constructor).
+    pub fn assignment(&self) -> DesignAssignment {
+        self.backend.assignment()
     }
 
     /// Serve a batch of requests; returns per-request predicted classes
@@ -187,11 +202,40 @@ mod tests {
         for design in [DesignKind::BaselineSimd, DesignKind::Ussa, DesignKind::Csa] {
             let server =
                 Server::new(&info.graph, design, &ServeOptions::default()).unwrap();
-            assert_eq!(server.design(), design);
+            assert_eq!(server.assignment(), DesignAssignment::Uniform(design));
             let (preds, _) = server.serve_batch(reqs.clone()).unwrap();
             all_preds.push(preds);
         }
         assert_eq!(all_preds[0], all_preds[1]);
         assert_eq!(all_preds[0], all_preds[2]);
+    }
+
+    #[test]
+    fn heterogeneous_server_serves_verified() {
+        // A per-layer assignment drives the same serving loop, with
+        // bit-exact verification on, and predicts identically to a
+        // uniform server (INT7 weights ⇒ design-invariant outputs).
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let mut info = build_model("dscnn", &cfg).unwrap();
+        apply_sparsity(&mut info.graph, 0.5, 0.3);
+        let assignment =
+            DesignAssignment::per_layer(vec![DesignKind::Sssa, DesignKind::BaselineSimd]);
+        let server = Server::new_assigned(
+            &info.graph,
+            &assignment,
+            &ServeOptions { verify: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(server.assignment(), assignment);
+        let mut rng = Pcg32::new(8);
+        let reqs: Vec<QTensor> = (0..4)
+            .map(|_| random_input(info.input_shape.clone(), cfg.act_params(), &mut rng))
+            .collect();
+        let (preds, metrics) = server.serve_batch(reqs.clone()).unwrap();
+        assert_eq!(preds.len(), 4);
+        assert!(metrics.total_cycles > 0);
+        let uniform = Server::new(&info.graph, DesignKind::Sssa, &ServeOptions::default()).unwrap();
+        let (uni_preds, _) = uniform.serve_batch(reqs).unwrap();
+        assert_eq!(preds, uni_preds);
     }
 }

@@ -25,6 +25,15 @@ pub struct CostModel {
 
 impl CostModel {
     /// VexRiscv five-stage defaults (CFU Playground configuration).
+    ///
+    /// ```
+    /// use sparse_riscv::cpu::CostModel;
+    ///
+    /// let m = CostModel::vexriscv();
+    /// assert_eq!(m.alu, 1);
+    /// assert_eq!(m.branch_taken, 3); // taken branches flush the front-end
+    /// assert_eq!(m.cfu_issue, 1);    // CFU stalls are charged separately
+    /// ```
     pub fn vexriscv() -> Self {
         CostModel {
             alu: 1,

@@ -12,6 +12,24 @@
 //! - [`int7`] — INT7 range checks and clamping,
 //! - [`lookahead`] — encode (Alg 1 & 2), decode, and verification,
 //! - [`pack`] — 4×i8 ↔ u32 register-word packing (byte i ↔ bits 8i+7..8i).
+//!
+//! Encode → decode roundtrip of one lane (a non-zero block, two zero
+//! blocks to skip, a non-zero block):
+//!
+//! ```
+//! use sparse_riscv::encoding::lookahead::{decode_skip, encode_lanes};
+//! use sparse_riscv::encoding::pack::{pack4_le, pack4_u32_skip_bits};
+//!
+//! let ws: Vec<i8> = [[1i8, 2, 3, 4], [0; 4], [0; 4], [5, 6, 7, 8]].concat();
+//! let enc = encode_lanes(&ws, 16).unwrap();
+//! assert_eq!(enc.total_blocks, 4);
+//! assert_eq!(enc.zero_blocks, 2);
+//! // Block 0's lookahead bits say "skip the next 2 blocks" — readable
+//! // from the software decoder and from the packed-word hardware path.
+//! let b0: [i8; 4] = enc.encoded[0..4].try_into().unwrap();
+//! assert_eq!(decode_skip(&b0), 2);
+//! assert_eq!(pack4_u32_skip_bits(pack4_le(&enc.encoded[0..4])), 2);
+//! ```
 
 pub mod int7;
 pub mod lookahead;

@@ -1,0 +1,208 @@
+//! Per-layer cost profiling: one uniform simulation per candidate
+//! design yields the full (layer × design) cycle matrix.
+//!
+//! Cycle counts in this simulator are pure functions of the prepared
+//! weights and the layer geometry — activation *values* never change a
+//! schedule (the differential tier pins this). One inference per
+//! candidate design over a zeros input therefore measures the exact
+//! per-layer cycle cost of every (layer, design) pair, and the cost of
+//! any heterogeneous assignment is the design-independent overhead plus
+//! the sum of its per-layer picks (asserted in
+//! `rust/tests/explorer.rs`).
+
+use crate::cpu::CostModel;
+use crate::error::{Error, Result};
+use crate::isa::{DesignAssignment, DesignKind};
+use crate::nn::graph::Graph;
+use crate::simulator::SimEngine;
+use crate::tensor::quant::QuantParams;
+use crate::tensor::{QTensor, Shape};
+
+/// Cycle and fidelity profile of one MAC layer.
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    /// Layer label as the simulator reports it (`conv:…`, `fc:…`,
+    /// `proj:…`).
+    pub label: String,
+    /// Simulated cycles of this layer under each candidate design
+    /// (indexed like [`CostTable::candidates`]).
+    pub cycles: Vec<u64>,
+    /// Weights outside the INT7 dynamic range — non-zero means the
+    /// SSSA/CSA lookahead designs would clamp (lossy) on this layer.
+    pub int8_weights: usize,
+    /// Element sparsity of the layer's weights.
+    pub sparsity: f64,
+}
+
+/// The (layer × design) cycle matrix of one pruned model, plus the
+/// design-independent overhead (pooling, activation, residual layers).
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    /// Model name (from the graph).
+    pub model: String,
+    /// Candidate designs, in column order.
+    pub candidates: Vec<DesignKind>,
+    /// One row per MAC layer, in graph order.
+    pub layers: Vec<LayerCost>,
+    /// Cycles spent outside MAC layers — identical across designs.
+    pub overhead_cycles: u64,
+}
+
+impl CostTable {
+    /// Exact total cycles of an assignment over this table: overhead
+    /// plus each MAC layer's cycles under its assigned design. Errors
+    /// if the assignment uses a design that is not a candidate column.
+    pub fn total_for(&self, assignment: &DesignAssignment) -> Result<u64> {
+        let mut total = self.overhead_cycles;
+        for (l, layer) in self.layers.iter().enumerate() {
+            let d = assignment.design_for(l);
+            let ci = self
+                .candidates
+                .iter()
+                .position(|&c| c == d)
+                .ok_or_else(|| Error::Cli(format!("design {d} not among the candidates")))?;
+            total += layer.cycles[ci];
+        }
+        Ok(total)
+    }
+}
+
+/// Is this a MAC-layer stat row of a [`crate::simulator::SimReport`]?
+fn is_mac_label(label: &str) -> bool {
+    label.starts_with("conv:") || label.starts_with("fc:") || label.starts_with("proj")
+}
+
+/// Profile a pruned graph: one uniform simulation per candidate design,
+/// decomposed into the per-layer cycle matrix.
+pub fn profile_graph(
+    graph: &Graph,
+    input_shape: &Shape,
+    candidates: &[DesignKind],
+    cost_model: &CostModel,
+) -> Result<CostTable> {
+    if candidates.is_empty() {
+        return Err(Error::Cli("explorer needs at least one candidate design".into()));
+    }
+    let mut unique = Vec::new();
+    for &d in candidates {
+        if !unique.contains(&d) {
+            unique.push(d);
+        }
+    }
+    let candidates = unique;
+    // Cycle counts are activation-independent, so a zeros input profiles
+    // every layer exactly.
+    let input = QTensor::zeros(input_shape.clone(), QuantParams::new(1.0, 0)?);
+    let weights = graph.mac_weights();
+    let mut layers: Vec<LayerCost> = weights
+        .iter()
+        .map(|ws| LayerCost {
+            label: String::new(),
+            cycles: vec![0u64; candidates.len()],
+            int8_weights: ws.iter().filter(|&&w| !crate::encoding::int7::is_int7(w)).count(),
+            sparsity: crate::sparsity::stats::element_sparsity(ws),
+        })
+        .collect();
+    let mut overhead: Option<u64> = None;
+    for (ci, &design) in candidates.iter().enumerate() {
+        let engine = SimEngine::new(design).with_cost_model(cost_model.clone());
+        let prepared = engine.prepare(graph)?;
+        let report = engine.run(&prepared, &input)?;
+        let mac_stats: Vec<_> =
+            report.layers.iter().filter(|s| is_mac_label(&s.label)).collect();
+        if mac_stats.len() != layers.len() {
+            return Err(Error::Sim(format!(
+                "profile: {} MAC stat rows for {} MAC layers",
+                mac_stats.len(),
+                layers.len()
+            )));
+        }
+        let mac_sum: u64 = mac_stats.iter().map(|s| s.cycles).sum();
+        let this_overhead = report.total_cycles - mac_sum;
+        match overhead {
+            None => overhead = Some(this_overhead),
+            Some(prev) if prev != this_overhead => {
+                return Err(Error::Sim(format!(
+                    "profile: non-MAC overhead differs across designs ({prev} vs {this_overhead})"
+                )));
+            }
+            _ => {}
+        }
+        for (l, stat) in mac_stats.iter().enumerate() {
+            layers[l].cycles[ci] = stat.cycles;
+            if ci == 0 {
+                layers[l].label = stat.label.clone();
+            } else if layers[l].label != stat.label {
+                return Err(Error::Sim(format!(
+                    "profile: layer order diverged ({} vs {})",
+                    layers[l].label, stat.label
+                )));
+            }
+        }
+    }
+    Ok(CostTable {
+        model: graph.name.clone(),
+        candidates,
+        layers,
+        overhead_cycles: overhead.unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builder::{apply_sparsity, ModelConfig};
+    use crate::models::zoo::build_model;
+
+    #[test]
+    fn table_decomposes_uniform_totals_exactly() {
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let mut info = build_model("dscnn", &cfg).unwrap();
+        apply_sparsity(&mut info.graph, 0.5, 0.3);
+        let table = profile_graph(
+            &info.graph,
+            &info.input_shape,
+            &DesignKind::ALL,
+            &CostModel::vexriscv(),
+        )
+        .unwrap();
+        assert_eq!(table.layers.len(), info.graph.mac_layers());
+        // total_for(Uniform(d)) must reproduce the engine's total.
+        let input = QTensor::zeros(info.input_shape.clone(), QuantParams::new(1.0, 0).unwrap());
+        for &d in &table.candidates {
+            let engine = SimEngine::new(d);
+            let prepared = engine.prepare(&info.graph).unwrap();
+            let report = engine.run(&prepared, &input).unwrap();
+            let predicted = table.total_for(&DesignAssignment::Uniform(d)).unwrap();
+            assert_eq!(predicted, report.total_cycles, "{d}");
+        }
+        // SSSA exploits the block sparsity: strictly fewer cycles than
+        // the SIMD baseline on this pruned model.
+        let sssa = table.total_for(&DesignAssignment::Uniform(DesignKind::Sssa)).unwrap();
+        let simd =
+            table.total_for(&DesignAssignment::Uniform(DesignKind::BaselineSimd)).unwrap();
+        assert!(sssa < simd, "sssa {sssa} !< simd {simd}");
+    }
+
+    #[test]
+    fn duplicate_candidates_are_deduped_and_unknown_design_rejected() {
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let info = build_model("dscnn", &cfg).unwrap();
+        let table = profile_graph(
+            &info.graph,
+            &info.input_shape,
+            &[DesignKind::Csa, DesignKind::Csa],
+            &CostModel::vexriscv(),
+        )
+        .unwrap();
+        assert_eq!(table.candidates, vec![DesignKind::Csa]);
+        assert!(table.total_for(&DesignAssignment::Uniform(DesignKind::Ussa)).is_err());
+        assert!(profile_graph(
+            &info.graph,
+            &info.input_shape,
+            &[],
+            &CostModel::vexriscv()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,506 @@
+//! Design-space explorer: per-layer hardware/software co-design.
+//!
+//! The paper evaluates four accelerator designs *uniformly* over each
+//! model, but its central claim — co-design — cuts finer: the best
+//! design depends on each layer's sparsity structure and weight range.
+//! Block-sparse layers favour SSSA's lookahead skipping; layers whose
+//! weights need the full INT8 dynamic range cannot use the INT7
+//! lookahead designs without clamping (Section III-B), so a lossless
+//! deployment must fall back to a baseline there; and every design that
+//! an assignment uses costs FPGA resources (Table III). Daghero et al.
+//! (PAPERS.md) show per-layer kernel selection is where the real
+//! speedup lives — this module automates it:
+//!
+//! 1. [`profile_graph`] measures the exact (layer × design) cycle
+//!    matrix — one uniform simulation per candidate, decomposed from
+//!    the simulator's per-layer stats (cycle counts are
+//!    activation-independent, so one inference suffices);
+//! 2. [`explore`] searches the assignment space. Per-layer costs are
+//!    independent, so the per-layer lower bound of a design subset is
+//!    *tight* — the `k^L` assignment space collapses to at most
+//!    `2^k − 1` subset optima, each found by a per-layer argmin.
+//!    Over-budget and layer-infeasible subsets are skipped before their
+//!    optimum is computed; subsets whose (cheap, tight) bound is already
+//!    dominated by an explored point are dropped before materializing a
+//!    frontier point;
+//! 3. the result is a Pareto frontier of (total cycles, LUT/FF/DSP
+//!    increment) plus the cycle-argmin assignment and the best
+//!    *uniform* design for comparison.
+//!
+//! The chosen [`DesignAssignment`] feeds straight into the
+//! heterogeneous execution stack (`SimEngine::for_assignment`,
+//! `BatchSpec::assigned`, `serve --assignment`).
+//!
+//! ```
+//! use sparse_riscv::explorer::{explore, profile_graph, ExplorerOptions};
+//! use sparse_riscv::models::builder::{apply_sparsity, ModelConfig};
+//! use sparse_riscv::models::zoo::build_model;
+//!
+//! // A toy DSCNN with combined sparsity, explored over all designs.
+//! let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+//! let mut info = build_model("dscnn", &cfg).unwrap();
+//! apply_sparsity(&mut info.graph, 0.5, 0.4);
+//! let opts = ExplorerOptions::default();
+//! let table = profile_graph(
+//!     &info.graph,
+//!     &info.input_shape,
+//!     &opts.candidates,
+//!     &opts.cost_model,
+//! )
+//! .unwrap();
+//! let result = explore(&table, &opts).unwrap();
+//! assert!(!result.frontier.is_empty());
+//! // The explored optimum is never worse than the best uniform design.
+//! assert!(result.best.total_cycles <= result.best_uniform.total_cycles);
+//! ```
+
+pub mod cost;
+pub mod pareto;
+
+pub use cost::{profile_graph, CostTable, LayerCost};
+pub use pareto::{pareto_filter, ParetoPoint};
+
+use crate::analysis::codesign::{assignment_cost, design_cost, designs_cost, within_budget};
+use crate::analysis::report::{f2, pct, Table};
+use crate::cpu::CostModel;
+use crate::error::{Error, Result};
+use crate::isa::{DesignAssignment, DesignKind};
+use crate::resources::fpga::ResourceUsage;
+
+/// Explorer configuration.
+#[derive(Debug, Clone)]
+pub struct ExplorerOptions {
+    /// Candidate designs (columns of the cost matrix).
+    pub candidates: Vec<DesignKind>,
+    /// Lossless mode (default): designs that would clamp a layer's
+    /// weights to INT7 are infeasible *on that layer*, so the chosen
+    /// assignment stays bit-exact against the INT8 reference model.
+    pub lossless: bool,
+    /// Optional LUT/FF/DSP budget for the combined CFU build.
+    pub budget: Option<ResourceUsage>,
+    /// CPU cost model used for profiling.
+    pub cost_model: CostModel,
+}
+
+impl Default for ExplorerOptions {
+    fn default() -> Self {
+        ExplorerOptions {
+            candidates: DesignKind::ALL.to_vec(),
+            lossless: true,
+            budget: None,
+            cost_model: CostModel::vexriscv(),
+        }
+    }
+}
+
+/// Is `design` usable on `layer` under the fidelity constraint?
+fn layer_feasible(layer: &LayerCost, design: DesignKind, lossless: bool) -> bool {
+    !(lossless && design.uses_lookahead_encoding() && layer.int8_weights > 0)
+}
+
+/// Outcome of one exploration.
+#[derive(Debug, Clone)]
+pub struct Exploration {
+    /// The profiled cost matrix the search ran on.
+    pub table: CostTable,
+    /// Non-dominated (cycles, resources) points, ascending cycles.
+    pub frontier: Vec<ParetoPoint>,
+    /// Cycle-argmin assignment within the budget.
+    pub best: ParetoPoint,
+    /// Best feasible *uniform* design within the budget — the paper's
+    /// model-wide baseline the heterogeneous assignment is measured
+    /// against.
+    pub best_uniform: ParetoPoint,
+    /// Every feasible uniform design within the budget.
+    pub uniforms: Vec<ParetoPoint>,
+    /// Design subsets that contributed a candidate point.
+    pub subsets_evaluated: usize,
+    /// Design subsets discarded: over budget or layer-infeasible
+    /// (skipped before their optimum is computed), or bound-dominated
+    /// by an already-explored point (dropped before materializing a
+    /// frontier point — the argmin pass itself is O(layers × subset)
+    /// either way).
+    pub subsets_pruned: usize,
+}
+
+impl Exploration {
+    /// Cycles of the best uniform design over the explored optimum
+    /// (≥ 1; > 1 means heterogeneous execution strictly wins).
+    pub fn speedup_vs_uniform(&self) -> f64 {
+        self.best_uniform.total_cycles as f64 / self.best.total_cycles as f64
+    }
+
+    /// Render the per-layer matrix and the frontier as aligned tables.
+    pub fn render(&self) -> String {
+        let mut headers: Vec<String> = vec!["layer".into(), "sparsity".into(), "int8-w".into()];
+        headers.extend(self.table.candidates.iter().map(|d| d.name().to_string()));
+        headers.push("best".into());
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!("per-layer cycles ({})", self.table.model),
+            &header_refs,
+        );
+        for (l, layer) in self.table.layers.iter().enumerate() {
+            let mut row = vec![
+                layer.label.clone(),
+                pct(layer.sparsity),
+                layer.int8_weights.to_string(),
+            ];
+            row.extend(layer.cycles.iter().map(|c| c.to_string()));
+            row.push(self.best.assignment.design_for(l).name().to_string());
+            t.row(&row);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "non-MAC overhead: {} cycles   subsets evaluated {} / pruned {}\n\n",
+            self.table.overhead_cycles, self.subsets_evaluated, self.subsets_pruned
+        ));
+
+        let mut f = Table::new(
+            "Pareto frontier (cycles vs FPGA resource increment)",
+            &["assignment", "cycles", "speedup", "LUTs", "FFs", "DSPs"],
+        );
+        for p in &self.frontier {
+            f.row(&[
+                p.assignment.label(),
+                p.total_cycles.to_string(),
+                f2(self.best_uniform.total_cycles as f64 / p.total_cycles as f64),
+                p.resources.luts.to_string(),
+                p.resources.ffs.to_string(),
+                p.resources.dsps.to_string(),
+            ]);
+        }
+        out.push_str(&f.render());
+        out.push_str(&format!(
+            "best assignment: {} ({} cycles, +{} LUTs, +{} DSPs)\n  spec: {}\n",
+            self.best.assignment.label(),
+            self.best.total_cycles,
+            self.best.resources.luts,
+            self.best.resources.dsps,
+            self.best.assignment.spec(),
+        ));
+        out.push_str(&format!(
+            "best uniform:    {} ({} cycles) — explored speedup {}x\n",
+            self.best_uniform.assignment.label(),
+            self.best_uniform.total_cycles,
+            f2(self.speedup_vs_uniform()),
+        ));
+        out
+    }
+}
+
+/// Resource-cheapness ordering key used for deterministic tie-breaks
+/// (prefer the design costing fewer DSPs, then LUTs, then FFs).
+fn cheapness(d: DesignKind) -> (u32, u32, u32) {
+    let c = design_cost(d);
+    (c.dsps, c.luts, c.ffs)
+}
+
+/// Search the assignment space of a profiled model.
+///
+/// Because per-layer costs are independent, each design subset's
+/// per-layer lower bound is tight and achieved by the per-layer argmin,
+/// so the search is exact with at most `2^candidates − 1` evaluations.
+/// Subsets over the budget or with an infeasible layer are skipped
+/// before their optimum is computed; subsets whose bound is dominated
+/// by an already-explored point are dropped without materializing a
+/// point (their argmin re-appears under the smaller subset of designs
+/// it actually uses).
+pub fn explore(table: &CostTable, opts: &ExplorerOptions) -> Result<Exploration> {
+    let k = table.candidates.len();
+    if k == 0 || k > 16 {
+        return Err(Error::Cli(format!("explorer supports 1..=16 candidate designs, got {k}")));
+    }
+    let feasible: Vec<Vec<bool>> = table
+        .layers
+        .iter()
+        .map(|layer| {
+            table
+                .candidates
+                .iter()
+                .map(|&d| layer_feasible(layer, d, opts.lossless))
+                .collect()
+        })
+        .collect();
+    for (l, row) in feasible.iter().enumerate() {
+        if !row.iter().any(|&f| f) {
+            return Err(Error::Cli(format!(
+                "layer '{}' has no feasible candidate design (INT8 weights exclude the \
+                 lookahead designs — add a baseline candidate or allow lossy clamping)",
+                table.layers[l].label
+            )));
+        }
+    }
+    // Candidate indices ordered cheapest-first so per-layer cycle ties
+    // resolve to the design costing the least resources.
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by_key(|&ci| (cheapness(table.candidates[ci]), ci));
+
+    let mut points: Vec<ParetoPoint> = Vec::new();
+    let mut uniforms: Vec<ParetoPoint> = Vec::new();
+    let mut evaluated = 0usize;
+    let mut pruned = 0usize;
+
+    // The subset's exact optimum (its tight per-layer lower bound), or
+    // None when some layer has no feasible member.
+    let optimum = |members: &[usize]| -> Option<(u64, Vec<usize>)> {
+        let mut choice = Vec::with_capacity(table.layers.len());
+        let mut bound = table.overhead_cycles;
+        for (l, layer) in table.layers.iter().enumerate() {
+            let mut best: Option<(u64, usize)> = None;
+            for &ci in members {
+                if feasible[l][ci] {
+                    let c = layer.cycles[ci];
+                    let improves = match best {
+                        Some((bc, _)) => c < bc,
+                        None => true,
+                    };
+                    if improves {
+                        best = Some((c, ci));
+                    }
+                }
+            }
+            let (c, ci) = best?;
+            bound += c;
+            choice.push(ci);
+        }
+        Some((bound, choice))
+    };
+
+    // Uniform pass first: the paper's model-wide baselines, recorded
+    // exactly (never bound-pruned) so the explored-vs-uniform speedup is
+    // measured against the true best uniform design.
+    for &ci in &order {
+        let d = table.candidates[ci];
+        let cost = design_cost(d);
+        if opts.budget.as_ref().is_some_and(|b| !within_budget(&cost, b)) {
+            pruned += 1;
+            continue;
+        }
+        if !(0..table.layers.len()).all(|l| feasible[l][ci]) {
+            pruned += 1;
+            continue;
+        }
+        let total = table.total_for(&DesignAssignment::Uniform(d))?;
+        let point = ParetoPoint {
+            assignment: DesignAssignment::Uniform(d),
+            total_cycles: total,
+            resources: cost,
+        };
+        evaluated += 1;
+        uniforms.push(point.clone());
+        points.push(point);
+    }
+    if uniforms.is_empty() {
+        return Err(Error::Cli(
+            "no uniform design is feasible within the budget — widen the budget or add a \
+             baseline candidate"
+                .into(),
+        ));
+    }
+
+    // Multi-design subsets (≥ 2 members).
+    for mask in 1u32..(1u32 << k) {
+        if mask.count_ones() < 2 {
+            continue;
+        }
+        let members: Vec<usize> =
+            order.iter().copied().filter(|&ci| mask & (1 << ci) != 0).collect();
+        let subset: Vec<DesignKind> = members.iter().map(|&ci| table.candidates[ci]).collect();
+        let subset_cost = designs_cost(&subset);
+        if opts.budget.as_ref().is_some_and(|b| !within_budget(&subset_cost, b)) {
+            pruned += 1;
+            continue;
+        }
+        let Some((bound, choice)) = optimum(&members) else {
+            pruned += 1;
+            continue;
+        };
+        // Per-layer lower-bound prune: a point at least as fast and no
+        // more expensive already exists, so this subset's optimum is
+        // dominated (its argmin over fewer designs appears under the
+        // smaller subset's own mask).
+        if points
+            .iter()
+            .any(|p| p.total_cycles <= bound && within_budget(&p.resources, &subset_cost))
+        {
+            pruned += 1;
+            continue;
+        }
+        evaluated += 1;
+        let assignment = DesignAssignment::per_layer(
+            choice.iter().map(|&ci| table.candidates[ci]).collect(),
+        );
+        let resources = assignment_cost(&assignment);
+        if !points.iter().any(|p| p.assignment == assignment) {
+            points.push(ParetoPoint { assignment, total_cycles: bound, resources });
+        }
+    }
+
+    let min_point = |pts: &[ParetoPoint]| -> ParetoPoint {
+        pts.iter()
+            .min_by_key(|p| {
+                (p.total_cycles, p.resources.dsps, p.resources.luts, p.resources.ffs)
+            })
+            .expect("non-empty point set")
+            .clone()
+    };
+    let best = min_point(&points);
+    let best_uniform = min_point(&uniforms);
+    Ok(Exploration {
+        table: table.clone(),
+        frontier: pareto_filter(&points),
+        best,
+        best_uniform,
+        uniforms,
+        subsets_evaluated: evaluated,
+        subsets_pruned: pruned,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builder::{
+        apply_sparsity, apply_sparsity_plan, widen_weights_to_int8, ModelConfig,
+    };
+    use crate::models::zoo::build_model;
+
+    fn profiled(x_us: f64, x_ss: f64) -> CostTable {
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let mut info = build_model("dscnn", &cfg).unwrap();
+        apply_sparsity(&mut info.graph, x_us, x_ss);
+        profile_graph(
+            &info.graph,
+            &info.input_shape,
+            &DesignKind::ALL,
+            &CostModel::vexriscv(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn uniform_int7_model_is_won_by_sssa() {
+        // All-INT7 weights: SSSA is feasible everywhere and per-block
+        // cost-equal to the SIMD baseline while visiting fewer blocks,
+        // so the explored optimum is the uniform SSSA assignment.
+        let table = profiled(0.5, 0.4);
+        let result = explore(&table, &ExplorerOptions::default()).unwrap();
+        assert_eq!(
+            result.best.assignment,
+            DesignAssignment::Uniform(DesignKind::Sssa)
+        );
+        assert_eq!(result.best.total_cycles, result.best_uniform.total_cycles);
+        assert!((result.speedup_vs_uniform() - 1.0).abs() < 1e-12);
+        assert!(result.subsets_pruned > 0, "supersets of the optimum must be bound-pruned");
+        // The frontier trades resources for cycles: its cheapest point
+        // is the free SIMD baseline, its fastest is SSSA.
+        let cheapest = result.frontier.iter().min_by_key(|p| p.resources.luts).unwrap();
+        assert_eq!(cheapest.resources.luts, 0);
+        assert_eq!(result.frontier[0].total_cycles, result.best.total_cycles);
+    }
+
+    #[test]
+    fn budget_excludes_expensive_designs() {
+        let table = profiled(0.5, 0.4);
+        // 0 extra DSPs: only the SIMD baseline fits (every CFU adds ≥1).
+        let opts = ExplorerOptions {
+            budget: Some(ResourceUsage {
+                luts: u32::MAX,
+                ffs: u32::MAX,
+                brams: u32::MAX,
+                dsps: 0,
+            }),
+            ..Default::default()
+        };
+        let result = explore(&table, &opts).unwrap();
+        assert_eq!(
+            result.best.assignment,
+            DesignAssignment::Uniform(DesignKind::BaselineSimd)
+        );
+        assert_eq!(result.frontier.len(), 1);
+    }
+
+    #[test]
+    fn int8_layers_force_heterogeneous_strict_win() {
+        // Mixed per-layer sparsity + INT8 stem/head: lossless mode bars
+        // the lookahead designs from the widened layers, so the best
+        // uniform design is the SIMD baseline while the explorer mixes
+        // SSSA onto the block-sparse INT7 layers — a strict cycle win.
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let mut info = build_model("dscnn", &cfg).unwrap();
+        let n = info.graph.mac_layers();
+        let plan: Vec<(f64, f64)> = (0..n)
+            .map(|i| if i == 0 || i == n - 1 { (0.4, 0.0) } else { (0.5, 0.5) })
+            .collect();
+        apply_sparsity_plan(&mut info.graph, &plan);
+        widen_weights_to_int8(&mut info.graph, &[0, n - 1]);
+        let table = profile_graph(
+            &info.graph,
+            &info.input_shape,
+            &DesignKind::ALL,
+            &CostModel::vexriscv(),
+        )
+        .unwrap();
+        assert!(table.layers[0].int8_weights > 0);
+        let result = explore(&table, &ExplorerOptions::default()).unwrap();
+        assert!(!result.best.assignment.is_uniform());
+        assert_eq!(
+            result.best_uniform.assignment,
+            DesignAssignment::Uniform(DesignKind::BaselineSimd)
+        );
+        assert!(
+            result.best.total_cycles < result.best_uniform.total_cycles,
+            "hetero {} !< uniform {}",
+            result.best.total_cycles,
+            result.best_uniform.total_cycles
+        );
+        assert!(result.speedup_vs_uniform() > 1.0);
+        // Widened layers run the free SIMD baseline; at least one sparse
+        // INT7 layer runs a lookahead design.
+        assert_eq!(result.best.assignment.design_for(0), DesignKind::BaselineSimd);
+        assert_eq!(result.best.assignment.design_for(n - 1), DesignKind::BaselineSimd);
+        assert!(result
+            .best
+            .assignment
+            .expand(n)
+            .iter()
+            .any(|d| d.uses_lookahead_encoding()));
+        // Lossy mode lifts the constraint and returns to uniform SSSA.
+        let lossy = explore(
+            &table,
+            &ExplorerOptions { lossless: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(lossy.best.total_cycles <= result.best.total_cycles);
+        assert_eq!(lossy.best.assignment, DesignAssignment::Uniform(DesignKind::Sssa));
+        // Rendering covers both tables.
+        let rendered = result.render();
+        assert!(rendered.contains("per-layer cycles"));
+        assert!(rendered.contains("Pareto frontier"));
+        assert!(rendered.contains("best assignment: hetero:"));
+    }
+
+    #[test]
+    fn lookahead_only_candidates_fail_cleanly_on_int8_layers() {
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let mut info = build_model("dscnn", &cfg).unwrap();
+        apply_sparsity(&mut info.graph, 0.4, 0.3);
+        widen_weights_to_int8(&mut info.graph, &[0]);
+        let table = profile_graph(
+            &info.graph,
+            &info.input_shape,
+            &[DesignKind::Sssa, DesignKind::Csa],
+            &CostModel::vexriscv(),
+        )
+        .unwrap();
+        let err = explore(&table, &ExplorerOptions::default());
+        assert!(err.is_err());
+        // Lossy mode accepts the clamping and succeeds.
+        let ok = explore(
+            &table,
+            &ExplorerOptions { lossless: false, ..Default::default() },
+        );
+        assert!(ok.is_ok());
+    }
+}

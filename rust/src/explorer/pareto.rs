@@ -1,0 +1,95 @@
+//! Pareto frontier over (cycles, FPGA resources).
+//!
+//! A candidate assignment is kept only if no other point is at least as
+//! good in *every* dimension — simulated cycles, LUTs, FFs and DSPs —
+//! and strictly better in one. This is the trade-off Zhu et al. weigh
+//! for structured-sparse CNN accelerators (PAPERS.md): more CFU logic
+//! buys fewer cycles, and the right point depends on the device budget.
+
+use crate::isa::DesignAssignment;
+use crate::resources::fpga::ResourceUsage;
+
+/// One explored point: an assignment with its exact cycle total and
+/// FPGA resource increment.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    /// The per-layer assignment (canonicalized — uniform when all
+    /// layers agree).
+    pub assignment: DesignAssignment,
+    /// Total simulated cycles of one inference under the assignment.
+    pub total_cycles: u64,
+    /// LUT/FF/DSP increment of the combined CFU build (see
+    /// [`crate::analysis::codesign`]).
+    pub resources: ResourceUsage,
+}
+
+impl ParetoPoint {
+    /// The comparison vector: (cycles, LUTs, FFs, DSPs).
+    fn key(&self) -> (u64, u32, u32, u32) {
+        (self.total_cycles, self.resources.luts, self.resources.ffs, self.resources.dsps)
+    }
+
+    /// Weak dominance in every dimension plus strict in at least one.
+    pub fn dominates(&self, other: &ParetoPoint) -> bool {
+        let (c0, l0, f0, d0) = self.key();
+        let (c1, l1, f1, d1) = other.key();
+        let le = c0 <= c1 && l0 <= l1 && f0 <= f1 && d0 <= d1;
+        le && (c0 < c1 || l0 < l1 || f0 < f1 || d0 < d1)
+    }
+}
+
+/// Keep the non-dominated points, sorted by ascending cycles (resources
+/// break ties); exact duplicates in all four dimensions collapse to the
+/// first occurrence.
+pub fn pareto_filter(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut kept: Vec<ParetoPoint> = Vec::new();
+    for p in points {
+        if points.iter().any(|q| q.dominates(p)) {
+            continue;
+        }
+        if kept.iter().any(|q| q.key() == p.key()) {
+            continue;
+        }
+        kept.push(p.clone());
+    }
+    kept.sort_by_key(|p| p.key());
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::DesignKind;
+
+    fn point(cycles: u64, luts: u32, dsps: u32) -> ParetoPoint {
+        ParetoPoint {
+            assignment: DesignAssignment::Uniform(DesignKind::BaselineSimd),
+            total_cycles: cycles,
+            resources: ResourceUsage { luts, ffs: 0, brams: 0, dsps },
+        }
+    }
+
+    #[test]
+    fn dominated_points_are_dropped() {
+        let pts = vec![
+            point(100, 0, 0),  // cheap but slow
+            point(50, 95, 1),  // fast but costly
+            point(60, 100, 1), // dominated by the 50-cycle point
+            point(100, 10, 0), // dominated by the first point
+        ];
+        let frontier = pareto_filter(&pts);
+        assert_eq!(frontier.len(), 2);
+        assert_eq!(frontier[0].total_cycles, 50);
+        assert_eq!(frontier[1].total_cycles, 100);
+        assert_eq!(frontier[1].resources.luts, 0);
+    }
+
+    #[test]
+    fn incomparable_points_both_survive_and_duplicates_collapse() {
+        let pts = vec![point(100, 0, 0), point(50, 95, 1), point(50, 95, 1)];
+        let frontier = pareto_filter(&pts);
+        assert_eq!(frontier.len(), 2);
+        assert!(!frontier[0].dominates(&frontier[1]));
+        assert!(!frontier[1].dominates(&frontier[0]));
+    }
+}

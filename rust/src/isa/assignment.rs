@@ -1,0 +1,264 @@
+//! Per-layer accelerator assignment — the co-design unit of the
+//! explorer.
+//!
+//! The paper evaluates each accelerator ([`DesignKind`]) uniformly over
+//! a whole model, but the best design depends on each layer's sparsity
+//! *structure*: block-sparse layers favour SSSA's lookahead skipping,
+//! while layers whose weights need the full INT8 dynamic range cannot
+//! use the INT7 lookahead designs at all without clamping. A
+//! [`DesignAssignment`] captures that choice as a per-MAC-layer design
+//! vector, and the whole execution stack (prepare → simulate → batch →
+//! serve) is generic over it.
+//!
+//! ```
+//! use sparse_riscv::isa::{DesignAssignment, DesignKind};
+//!
+//! // A uniform assignment behaves exactly like the plain design.
+//! let uniform = DesignAssignment::parse("csa").unwrap();
+//! assert_eq!(uniform.uniform_design(), Some(DesignKind::Csa));
+//!
+//! // A per-layer assignment cycles over the model's MAC layers.
+//! let hetero = DesignAssignment::parse("sssa,simd").unwrap();
+//! assert_eq!(hetero.design_for(0), DesignKind::Sssa);
+//! assert_eq!(hetero.design_for(1), DesignKind::BaselineSimd);
+//! assert_eq!(hetero.design_for(2), DesignKind::Sssa);
+//! assert_eq!(hetero.label(), "hetero:sb");
+//! ```
+
+use super::cfu_ops::DesignKind;
+
+/// Which accelerator design each MAC layer of a model runs on.
+///
+/// `Uniform` is the paper's original model-wide choice; `PerLayer` holds
+/// one design per MAC layer (convolutions, fully-connected layers and
+/// projection shortcuts, in graph order). A `PerLayer` vector shorter
+/// than the model's MAC-layer count is *cycled* — `design_for(i)` reads
+/// entry `i % len` — so compact specs like `"sssa,simd"` apply to any
+/// model.
+///
+/// Equality/hashing are structural, and [`DesignAssignment::per_layer`]
+/// canonicalizes an all-equal vector to `Uniform`, so a prepared-model
+/// cache keyed by assignment never aliases two different weight
+/// preparations (see `simulator::ModelKey`). Note the converse sharp
+/// edge of cycling: `[s, b]` and its expansion `[s, b, s, b]` execute
+/// identically on a 4-MAC-layer model but are *distinct* values — they
+/// key separate (bit-identical) cache entries and do not satisfy the
+/// engine's prepared-for check interchangeably. Pick one spelling per
+/// model; [`DesignAssignment::expand`] produces the explicit form.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum DesignAssignment {
+    /// One design for every MAC layer.
+    Uniform(DesignKind),
+    /// One design per MAC layer, cycled when shorter than the model.
+    ///
+    /// Prefer constructing through [`DesignAssignment::per_layer`] (or
+    /// [`DesignAssignment::parse`]): building this variant directly
+    /// skips canonicalization, so an all-equal vector compares unequal
+    /// to its `Uniform` spelling and keys a duplicate (bit-identical)
+    /// cache entry. An empty vector degrades to the SIMD baseline in
+    /// [`DesignAssignment::design_for`].
+    PerLayer(Vec<DesignKind>),
+}
+
+impl DesignAssignment {
+    /// Uniform assignment.
+    pub fn uniform(design: DesignKind) -> Self {
+        DesignAssignment::Uniform(design)
+    }
+
+    /// Per-layer assignment. An empty vector or an all-equal vector
+    /// canonicalizes to the equivalent `Uniform` form (empty falls back
+    /// to the SIMD baseline), so structurally-identical assignments
+    /// compare and hash equal.
+    pub fn per_layer(designs: Vec<DesignKind>) -> Self {
+        match designs.first() {
+            None => DesignAssignment::Uniform(DesignKind::BaselineSimd),
+            Some(&d0) if designs.iter().all(|&d| d == d0) => DesignAssignment::Uniform(d0),
+            _ => DesignAssignment::PerLayer(designs),
+        }
+    }
+
+    /// Design of MAC layer `mac_idx` (per-layer vectors are cycled; a
+    /// directly-constructed empty vector degrades to the SIMD baseline,
+    /// matching [`DesignAssignment::per_layer`]'s canonicalization).
+    pub fn design_for(&self, mac_idx: usize) -> DesignKind {
+        match self {
+            DesignAssignment::Uniform(d) => *d,
+            DesignAssignment::PerLayer(v) if v.is_empty() => DesignKind::BaselineSimd,
+            DesignAssignment::PerLayer(v) => v[mac_idx % v.len()],
+        }
+    }
+
+    /// The single design when uniform, `None` when heterogeneous.
+    pub fn uniform_design(&self) -> Option<DesignKind> {
+        match self {
+            DesignAssignment::Uniform(d) => Some(*d),
+            DesignAssignment::PerLayer(_) => None,
+        }
+    }
+
+    /// True for the uniform (model-wide) form.
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, DesignAssignment::Uniform(_))
+    }
+
+    /// The per-layer design vector expanded to `mac_layers` entries.
+    pub fn expand(&self, mac_layers: usize) -> Vec<DesignKind> {
+        (0..mac_layers).map(|i| self.design_for(i)).collect()
+    }
+
+    /// Distinct designs the assignment uses, in [`DesignKind::ALL`]
+    /// order — the CFU inventory an FPGA build of this assignment must
+    /// instantiate (see `analysis::codesign`).
+    pub fn designs_used(&self) -> Vec<DesignKind> {
+        DesignKind::ALL
+            .into_iter()
+            .filter(|d| match self {
+                DesignAssignment::Uniform(u) => u == d,
+                DesignAssignment::PerLayer(v) => v.contains(d),
+            })
+            .collect()
+    }
+
+    /// Compact label for reports and metric records: the design name
+    /// when uniform, `hetero:` plus one [`DesignKind::code`] letter per
+    /// layer otherwise (e.g. `hetero:sbc`).
+    pub fn label(&self) -> String {
+        match self {
+            DesignAssignment::Uniform(d) => d.name().to_string(),
+            DesignAssignment::PerLayer(v) => {
+                let codes: String = v.iter().map(|d| d.code()).collect();
+                format!("hetero:{codes}")
+            }
+        }
+    }
+
+    /// Round-trippable spec string accepted by [`DesignAssignment::parse`]
+    /// (a comma-separated design-name list, or one name when uniform) —
+    /// what `explore` prints for pasting into `serve --assignment`.
+    pub fn spec(&self) -> String {
+        match self {
+            DesignAssignment::Uniform(d) => d.name().to_string(),
+            DesignAssignment::PerLayer(v) => {
+                v.iter().map(|d| d.name()).collect::<Vec<_>>().join(",")
+            }
+        }
+    }
+
+    /// Parse from a CLI/config string: a single design name (uniform), a
+    /// comma-separated per-layer name list, or a `hetero:<codes>` label
+    /// as printed by [`DesignAssignment::label`]. Case-insensitive, like
+    /// [`DesignKind::parse`].
+    pub fn parse(s: &str) -> Option<Self> {
+        let lower = s.trim().to_ascii_lowercase();
+        let s = lower.as_str();
+        if let Some(codes) = s.strip_prefix("hetero:") {
+            let v: Option<Vec<DesignKind>> =
+                codes.trim().chars().map(DesignKind::from_code).collect();
+            return v.filter(|v| !v.is_empty()).map(DesignAssignment::per_layer);
+        }
+        if s.contains(',') {
+            let v: Option<Vec<DesignKind>> =
+                s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(DesignKind::parse).collect();
+            return v.filter(|v| !v.is_empty()).map(DesignAssignment::per_layer);
+        }
+        DesignKind::parse(s).map(DesignAssignment::Uniform)
+    }
+}
+
+impl From<DesignKind> for DesignAssignment {
+    fn from(d: DesignKind) -> Self {
+        DesignAssignment::Uniform(d)
+    }
+}
+
+impl std::fmt::Display for DesignAssignment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_roundtrip() {
+        for d in DesignKind::ALL {
+            let a = DesignAssignment::uniform(d);
+            assert!(a.is_uniform());
+            assert_eq!(a.uniform_design(), Some(d));
+            assert_eq!(a.design_for(0), d);
+            assert_eq!(a.design_for(17), d);
+            assert_eq!(DesignAssignment::parse(&a.spec()), Some(a.clone()));
+            assert_eq!(DesignAssignment::parse(&a.label()), Some(a));
+        }
+    }
+
+    #[test]
+    fn per_layer_cycles_and_roundtrips() {
+        let a = DesignAssignment::per_layer(vec![
+            DesignKind::Sssa,
+            DesignKind::BaselineSimd,
+            DesignKind::Csa,
+        ]);
+        assert!(!a.is_uniform());
+        assert_eq!(a.uniform_design(), None);
+        assert_eq!(a.design_for(0), DesignKind::Sssa);
+        assert_eq!(a.design_for(2), DesignKind::Csa);
+        assert_eq!(a.design_for(3), DesignKind::Sssa); // cycled
+        assert_eq!(a.expand(4).len(), 4);
+        assert_eq!(a.label(), "hetero:sbc");
+        assert_eq!(DesignAssignment::parse(&a.spec()), Some(a.clone()));
+        assert_eq!(DesignAssignment::parse(&a.label()), Some(a));
+    }
+
+    #[test]
+    fn all_equal_canonicalizes_to_uniform() {
+        let a = DesignAssignment::per_layer(vec![DesignKind::Csa; 3]);
+        assert_eq!(a, DesignAssignment::Uniform(DesignKind::Csa));
+        // parse() goes through per_layer, so the comma form canonicalizes
+        // too — "csa,csa" and "csa" are the same cache key.
+        assert_eq!(DesignAssignment::parse("csa,csa"), Some(a));
+        // Case-insensitive everywhere, including hetero codes.
+        assert_eq!(
+            DesignAssignment::parse("HETERO:SB"),
+            DesignAssignment::parse("hetero:sb")
+        );
+        assert_eq!(
+            DesignAssignment::parse("SSSA,SIMD"),
+            DesignAssignment::parse("sssa,simd")
+        );
+        assert_eq!(DesignAssignment::parse(""), None);
+        assert_eq!(DesignAssignment::parse("bogus"), None);
+        assert_eq!(DesignAssignment::parse("sssa,bogus"), None);
+    }
+
+    #[test]
+    fn assignments_differing_in_one_layer_are_unequal() {
+        let a = DesignAssignment::per_layer(vec![DesignKind::Sssa, DesignKind::Ussa]);
+        let b = DesignAssignment::per_layer(vec![DesignKind::Sssa, DesignKind::Csa]);
+        assert_ne!(a, b);
+        use std::collections::HashSet;
+        let set: HashSet<DesignAssignment> = [a.clone(), b.clone(), a.clone()].into();
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn designs_used_dedups_in_all_order() {
+        let a = DesignAssignment::per_layer(vec![
+            DesignKind::Csa,
+            DesignKind::BaselineSimd,
+            DesignKind::Csa,
+            DesignKind::Sssa,
+        ]);
+        assert_eq!(
+            a.designs_used(),
+            vec![DesignKind::BaselineSimd, DesignKind::Sssa, DesignKind::Csa]
+        );
+        assert_eq!(
+            DesignAssignment::uniform(DesignKind::Ussa).designs_used(),
+            vec![DesignKind::Ussa]
+        );
+    }
+}

@@ -46,6 +46,23 @@ impl DesignKind {
         }
     }
 
+    /// One-letter code for compact per-layer assignment labels
+    /// (`hetero:sbc…` — see [`crate::isa::DesignAssignment::label`]).
+    pub fn code(&self) -> char {
+        match self {
+            DesignKind::BaselineSimd => 'b',
+            DesignKind::BaselineSequential => 'q',
+            DesignKind::Sssa => 's',
+            DesignKind::Ussa => 'u',
+            DesignKind::Csa => 'c',
+        }
+    }
+
+    /// Inverse of [`DesignKind::code`].
+    pub fn from_code(c: char) -> Option<DesignKind> {
+        DesignKind::ALL.into_iter().find(|d| d.code() == c)
+    }
+
     /// Does the design consume lookahead-encoded (INT7) weights?
     pub fn uses_lookahead_encoding(&self) -> bool {
         matches!(self, DesignKind::Sssa | DesignKind::Csa)

@@ -5,9 +5,14 @@
 //! opcode`. [`rtype`] implements bit-exact encode/decode of that format,
 //! and [`cfu_ops`] defines the concrete instruction assignments used by
 //! the four CFU designs (baseline SIMD MAC, SSSA, USSA, CSA).
+//! [`assignment`] lifts [`DesignKind`] to a per-MAC-layer
+//! [`DesignAssignment`] — the unit the co-design explorer optimizes and
+//! the heterogeneous execution path consumes.
 
+pub mod assignment;
 pub mod cfu_ops;
 pub mod rtype;
 
+pub use assignment::DesignAssignment;
 pub use cfu_ops::{CfuOpcode, DesignKind};
 pub use rtype::{RType, CUSTOM0_OPCODE};

@@ -24,7 +24,7 @@
 //! ## Execution modes
 //!
 //! Both loop shapes above are pure functions of the packed weights, so
-//! since the compiled-schedule change the kernels run them two ways:
+//! the kernels run them two ways:
 //!
 //! - [`ExecMode::Compiled`] (default) — [`lane::run_lane_compiled`] over
 //!   the [`lane::LaneSchedule`]s materialized at prepare time: a plain

@@ -17,9 +17,14 @@
 //!   ([`sparsity`]),
 //! - TFLite-style INT8 quantized tensor and NN ops ([`tensor`], [`nn`]),
 //! - the paper's four evaluation models ([`models`]) and a layer-by-layer
-//!   cycle simulator ([`simulator`]),
+//!   cycle simulator ([`simulator`]), generic over per-layer
+//!   [`isa::DesignAssignment`]s (heterogeneous execution),
+//! - a design-space explorer that turns per-layer sparsity stats, the
+//!   cycle model and the FPGA resource model into a Pareto frontier and
+//!   an argmin per-layer assignment ([`explorer`]),
 //! - an FPGA resource estimator reproducing Table III ([`resources`]),
-//! - analytical speedup models for Figures 8/9 ([`analysis`]),
+//! - analytical speedup models for Figures 8/9 and the co-design
+//!   resource pricing ([`analysis`]),
 //! - an experiment coordinator with a threaded scheduler and a request
 //!   serving loop ([`coordinator`]),
 //! - structured perf telemetry: metric records, the committed
@@ -30,8 +35,11 @@
 //!   ([`config`]), bench harness ([`bench`]), PRNG/stats/property testing
 //!   ([`util`]).
 //!
-//! See `DESIGN.md` for the hardware-substitution rationale and the
-//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `README.md` for the quickstart and CLI tour, `DESIGN.md` for the
+//! hardware-substitution rationale and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod bench;
@@ -42,6 +50,7 @@ pub mod coordinator;
 pub mod cpu;
 pub mod encoding;
 pub mod error;
+pub mod explorer;
 pub mod isa;
 pub mod kernels;
 pub mod metrics;

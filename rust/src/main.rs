@@ -1,17 +1,23 @@
 //! `sparse-riscv` — leader binary: encode weights, run experiments,
 //! serve inference, estimate resources.
 
+use sparse_riscv::analysis::codesign::{design_cost, parse_budget, within_budget};
 use sparse_riscv::analysis::report::{f2, pct, render_metric_records, Table};
 use sparse_riscv::bench::e2e::{render as render_e2e, run_e2e, to_records, E2eConfig};
+use sparse_riscv::bench::explore::{run_explore_bench, to_record as explore_record};
 use sparse_riscv::cli::{ArgSpec, Command, ParsedArgs};
 use sparse_riscv::config::experiment::{ExperimentConfig, SimOptions};
 use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
 use sparse_riscv::coordinator::runner::run_experiment;
+use sparse_riscv::coordinator::serve::{Server, ServeOptions};
 use sparse_riscv::encoding::lookahead::encode_lanes;
-use sparse_riscv::isa::DesignKind;
+use sparse_riscv::explorer::{explore, profile_graph, ExplorerOptions};
+use sparse_riscv::isa::{DesignAssignment, DesignKind};
 use sparse_riscv::kernels::ExecMode;
 use sparse_riscv::metrics::{diff as metrics_diff, BaselineStore, Tolerances};
-use sparse_riscv::models::builder::ModelConfig;
+use sparse_riscv::models::builder::{
+    apply_sparsity_plan, random_input, widen_weights_to_int8, ModelConfig,
+};
 use sparse_riscv::models::zoo::{build_model, model_names};
 use sparse_riscv::resources::fpga::{estimate_cfu, paper_increment, BASELINE_SOC};
 use sparse_riscv::sparsity::generator::gen_combined_sparse;
@@ -48,10 +54,50 @@ fn cli() -> Command {
                     "64",
                     "LRU capacity of the prepared-model cache",
                 ))
+                .arg(ArgSpec::opt(
+                    "assignment",
+                    "",
+                    "per-layer design assignment ('sssa,simd,…' or 'hetero:sb…'; overrides --design)",
+                ))
                 .arg(ArgSpec::flag(
                     "interpreted",
                     "force the interpreted CFU oracle instead of compiled lane schedules",
                 )),
+        )
+        .subcommand(
+            Command::new("explore", "per-layer co-design: Pareto frontier + argmin assignment")
+                .arg(ArgSpec::opt("model", "dscnn", "model (vgg16|resnet56|mobilenetv2|dscnn)"))
+                .arg(ArgSpec::opt("designs", "simd,seq,sssa,ussa,csa", "candidate designs"))
+                .arg(ArgSpec::opt(
+                    "sparsity",
+                    "",
+                    "per-layer sparsity plan 'x_us:x_ss,…' (cycled over MAC layers; overrides --x-us/--x-ss)",
+                ))
+                .arg(ArgSpec::opt("x-us", "0.5", "uniform unstructured sparsity"))
+                .arg(ArgSpec::opt("x-ss", "0.3", "uniform 4:4 block sparsity"))
+                .arg(ArgSpec::opt(
+                    "int8-layers",
+                    "",
+                    "MAC-layer indices widened to the full INT8 weight range",
+                ))
+                .arg(ArgSpec::opt("scale", "0.125", "model width multiplier"))
+                .arg(ArgSpec::opt(
+                    "budget",
+                    "",
+                    "FPGA resource budget, e.g. 'luts=100,ffs=200,dsps=1'",
+                ))
+                .arg(ArgSpec::flag(
+                    "lossy",
+                    "allow INT7 clamping on INT8-range layers (drop the fidelity constraint)",
+                ))
+                .arg(ArgSpec::opt("json", "", "write explorer metric records to this store path"))
+                .arg(ArgSpec::flag(
+                    "apply",
+                    "serve a request batch with the chosen assignment vs the best uniform design",
+                ))
+                .arg(ArgSpec::opt("requests", "8", "requests served by --apply"))
+                .arg(ArgSpec::opt("threads", "0", "worker threads for --apply"))
+                .arg(ArgSpec::opt("seed", "42", "request rng seed for --apply")),
         )
         .subcommand(
             Command::new("bench-e2e", "batched end-to-end throughput across the model zoo")
@@ -154,13 +200,25 @@ fn cmd_experiment(args: &ParsedArgs) -> sparse_riscv::Result<()> {
 fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     let design = DesignKind::parse(args.get("design")?)
         .ok_or_else(|| sparse_riscv::Error::Cli("unknown design".into()))?;
+    let assignment = {
+        let spec = args.get("assignment")?;
+        if spec.is_empty() {
+            DesignAssignment::Uniform(design)
+        } else {
+            DesignAssignment::parse(spec).ok_or_else(|| {
+                sparse_riscv::Error::Cli(format!(
+                    "bad --assignment '{spec}' (want 'sssa,simd,…' or 'hetero:sb…')"
+                ))
+            })?
+        }
+    };
     let model = args.get("model")?.to_string();
     let batch = args.get_usize("batch")?.max(1);
     let spec = BatchSpec {
         x_us: args.get_f64("x-us")?,
         x_ss: args.get_f64("x-ss")?,
         scale: args.get_f64("scale")?,
-        ..BatchSpec::new(&model, design)
+        ..BatchSpec::assigned(&model, assignment)
     };
     let exec_mode = if args.get_flag("interpreted")? {
         ExecMode::Interpreted
@@ -178,9 +236,10 @@ fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     let reqs = BatchEngine::gen_requests(&model, n, args.get_u64("seed")?)?;
     let report = engine.run_stream(&spec, reqs, batch)?;
     println!(
-        "served {} requests on {design} ({} lanes) in batches of {batch} across {} workers \
+        "served {} requests on {} ({} lanes) in batches of {batch} across {} workers \
          (prepared-model cache: {} builds, {} hits, {} evictions, cap {})",
         report.completed,
+        report.design_label(),
         exec_mode.name(),
         engine.workers(),
         report.cache_misses,
@@ -215,6 +274,165 @@ fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     Ok(())
 }
 
+/// Parse a per-layer sparsity plan: `"0.5:0.4,0.3:0.0"` → one
+/// `(x_us, x_ss)` entry per comma-separated token. Fractions must lie
+/// in `[0, 1]` (the pruning library asserts the same range).
+fn parse_sparsity_plan(s: &str) -> Result<Vec<(f64, f64)>, String> {
+    let in_range = |name: &str, v: f64, tok: &str| -> Result<f64, String> {
+        if (0.0..=1.0).contains(&v) {
+            Ok(v)
+        } else {
+            Err(format!("{name} {v} in '{tok}' out of range [0, 1]"))
+        }
+    };
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|tok| {
+            let (us, ss) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("bad sparsity entry '{tok}' (want x_us:x_ss)"))?;
+            let us: f64 =
+                us.trim().parse().map_err(|e| format!("bad x_us in '{tok}': {e}"))?;
+            let ss: f64 =
+                ss.trim().parse().map_err(|e| format!("bad x_ss in '{tok}': {e}"))?;
+            Ok((in_range("x_us", us, tok)?, in_range("x_ss", ss, tok)?))
+        })
+        .collect()
+}
+
+fn cmd_explore(args: &ParsedArgs) -> sparse_riscv::Result<()> {
+    let model = args.get("model")?.to_string();
+    let scale = args.get_f64("scale")?;
+
+    // Pure string parsing first, so malformed flags error before any
+    // model is built or pruned.
+    let plan_spec = args.get("sparsity")?;
+    let plan: Vec<(f64, f64)> = if plan_spec.is_empty() {
+        parse_sparsity_plan(&format!("{}:{}", args.get("x-us")?, args.get("x-ss")?))
+            .map_err(sparse_riscv::Error::Cli)?
+    } else {
+        parse_sparsity_plan(plan_spec).map_err(sparse_riscv::Error::Cli)?
+    };
+    if plan.is_empty() {
+        return Err(sparse_riscv::Error::Cli("--sparsity parsed to an empty plan".into()));
+    }
+    let int8_indices: Vec<usize> = {
+        let spec = args.get("int8-layers")?;
+        if spec.is_empty() {
+            Vec::new()
+        } else {
+            spec.split(',')
+                .map(|t| t.trim().parse::<usize>())
+                .collect::<Result<_, _>>()
+                .map_err(|e| {
+                    sparse_riscv::Error::Cli(format!("--int8-layers expects MAC indices: {e}"))
+                })?
+        }
+    };
+    let candidates = parse_designs(args.get("designs")?).map_err(sparse_riscv::Error::Cli)?;
+    let budget_spec = args.get("budget")?;
+    let budget = if budget_spec.is_empty() {
+        None
+    } else {
+        Some(parse_budget(budget_spec).ok_or_else(|| {
+            sparse_riscv::Error::Cli(format!(
+                "bad --budget '{budget_spec}' (want e.g. 'luts=100,dsps=1')"
+            ))
+        })?)
+    };
+    // A design over budget on its own can never appear in any subset
+    // (subset costs are sums), so drop it before paying a full profiling
+    // inference for it.
+    let candidates: Vec<DesignKind> = match &budget {
+        Some(b) => {
+            candidates.into_iter().filter(|&d| within_budget(&design_cost(d), b)).collect()
+        }
+        None => candidates,
+    };
+    if candidates.is_empty() {
+        return Err(sparse_riscv::Error::Cli(format!(
+            "no candidate design fits --budget '{budget_spec}'"
+        )));
+    }
+
+    let cfg = ModelConfig { scale, ..Default::default() };
+    let mut info = build_model(&model, &cfg)?;
+    let mac_layers = info.graph.mac_layers();
+    apply_sparsity_plan(&mut info.graph, &plan);
+    if let Some(&bad) = int8_indices.iter().find(|&&i| i >= mac_layers) {
+        return Err(sparse_riscv::Error::Cli(format!(
+            "--int8-layers index {bad} out of range ({model} has {mac_layers} MAC layers)"
+        )));
+    }
+    widen_weights_to_int8(&mut info.graph, &int8_indices);
+    let opts = ExplorerOptions {
+        candidates,
+        lossless: !args.get_flag("lossy")?,
+        budget,
+        ..Default::default()
+    };
+    println!(
+        "explore: model={model} scale={scale} mac-layers={mac_layers} lossless={} \
+         plan-entries={}",
+        opts.lossless,
+        plan.len()
+    );
+    let table = profile_graph(&info.graph, &info.input_shape, &opts.candidates, &opts.cost_model)?;
+    let result = explore(&table, &opts)?;
+    print!("{}", result.render());
+
+    let json_path = args.get("json")?;
+    if !json_path.is_empty() {
+        // The record's sparsity context is the plan's leading entry —
+        // the representative ratio of this actual CLI configuration.
+        // Upsert (not overwrite): pointing --json at a shared store like
+        // BENCH_e2e.json must never drop the other records in it — and
+        // the id carries a `-cli` marker so an ad-hoc configuration can
+        // never shadow the canonical `explore/<model>` sweep record.
+        let mut rec = explore_record(&model, scale, plan[0], &result);
+        rec.id = format!("explore-cli/{model}");
+        let records = vec![rec];
+        BaselineStore::upsert_file(
+            json_path,
+            "regenerate: cargo run --release -- explore --json <path>",
+            records.clone(),
+        )?;
+        println!("metrics: upserted {} record(s) into {json_path}", records.len());
+    }
+
+    if args.get_flag("apply")? {
+        // Feed the chosen assignment straight into the serving loop and
+        // compare against the best uniform design on the same requests.
+        let serve_opts = ServeOptions {
+            threads: args.get_usize("threads")?,
+            clock_hz: 100_000_000,
+            verify: true,
+        };
+        let mut rng = Pcg32::new(args.get_u64("seed")?);
+        let n = args.get_usize("requests")?.max(1);
+        let reqs: Vec<_> = (0..n)
+            .map(|_| random_input(info.input_shape.clone(), cfg.act_params(), &mut rng))
+            .collect();
+        let best = Server::new_assigned(&info.graph, &result.best.assignment, &serve_opts)?;
+        let (_, mut chosen) = best.serve_batch(reqs.clone())?;
+        let uniform =
+            Server::new_assigned(&info.graph, &result.best_uniform.assignment, &serve_opts)?;
+        let (_, baseline) = uniform.serve_batch(reqs)?;
+        println!(
+            "apply: served {n} verified requests — {} cycles on {} vs {} cycles on {} \
+             ({}x, p50 {:.3} ms)",
+            chosen.total_cycles,
+            result.best.assignment.label(),
+            baseline.total_cycles,
+            result.best_uniform.assignment.label(),
+            f2(baseline.total_cycles as f64 / chosen.total_cycles.max(1) as f64),
+            chosen.sim_percentiles.percentile(50.0) * 1e3,
+        );
+    }
+    Ok(())
+}
+
 fn cmd_bench_e2e(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     let designs = args
         .get_list("designs")?
@@ -244,7 +462,27 @@ fn cmd_bench_e2e(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     let summary = run_e2e(&cfg)?;
     print!("{}", render_e2e(&cfg, &summary));
 
-    let records = to_records(&cfg, &summary);
+    let mut records = to_records(&cfg, &summary);
+    // Informational explorer records ride along in the same sink so the
+    // perf gates can track explored-vs-uniform speedups once seeded. A
+    // failure here degrades to a warning for this run's own output; note
+    // that once a committed baseline contains explore/<model> records,
+    // omitting them still trips the diff's lost-coverage rule — which is
+    // deliberate: seeded coverage must not silently shrink.
+    match run_explore_bench(&cfg.models, cfg.scale) {
+        Ok(explore_records) => {
+            for rec in &explore_records {
+                println!(
+                    "explore: {} best={} speedup={}x (informational)",
+                    rec.model,
+                    rec.design,
+                    f2(rec.get("explore_speedup").unwrap_or(1.0)),
+                );
+            }
+            records.extend(explore_records);
+        }
+        Err(e) => eprintln!("warning: explorer sweep skipped ({e})"),
+    }
     let note = "regenerate: cargo run --release -- bench-e2e --json BENCH_e2e.json";
     let json_path = args.get("json")?;
     if !json_path.is_empty() {
@@ -427,6 +665,7 @@ fn main() {
     let result = match path.as_slice() {
         [_, "experiment"] => cmd_experiment(&parsed),
         [_, "serve"] => cmd_serve(&parsed),
+        [_, "explore"] => cmd_explore(&parsed),
         [_, "bench-e2e"] => cmd_bench_e2e(&parsed),
         [_, "metrics", "diff"] => cmd_metrics_diff(&parsed),
         [_, "metrics", "show"] => cmd_metrics_show(&parsed),

@@ -163,6 +163,34 @@ pub const METRIC_SPECS: &[MetricSpec] = &[
         rel_tol: 0.0,
         abs_floor: 0.0,
     },
+    // Explorer sweep: deterministic but deliberately informational —
+    // the explored-vs-uniform gap becomes gated when a baseline
+    // deliberately commits it (the speedup direction is higher-better,
+    // the cycle/size/resource values lower-better).
+    MetricSpec {
+        name: "explore_speedup",
+        prefix: false,
+        better: Direction::HigherIsBetter,
+        gate: false,
+        rel_tol: 0.05,
+        abs_floor: 0.01,
+    },
+    MetricSpec {
+        name: "explore_frontier_size",
+        prefix: false,
+        better: Direction::HigherIsBetter,
+        gate: false,
+        rel_tol: 0.0,
+        abs_floor: 0.0,
+    },
+    MetricSpec {
+        name: "explore_",
+        prefix: true,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.02,
+        abs_floor: 1.0,
+    },
     // Host wall-clock: informational only, never gated. The generous
     // tolerance keeps run-to-run jitter out of the diff table; only
     // swings beyond it get flagged (still non-fatal).

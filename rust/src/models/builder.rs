@@ -246,39 +246,101 @@ impl GraphBuilder {
     }
 }
 
+/// Prune one layer's weights in place if it is a MAC layer; returns
+/// whether it was one. Shared by the uniform and per-layer sparsity
+/// entry points.
+fn prune_mac_layer(layer: &mut Layer, x_us: f64, x_ss: f64) -> bool {
+    match layer {
+        Layer::Conv(op) => {
+            let lane = op.lane_len();
+            if op.depthwise {
+                // depthwise lanes are kh*kw (may not be %4); prune at
+                // element granularity only.
+                let n = op.weights.len();
+                let padded_lane = lane.div_ceil(4) * 4;
+                let mut padded = vec![0i8; (n / lane) * padded_lane];
+                for (i, chunk) in op.weights.chunks(lane).enumerate() {
+                    padded[i * padded_lane..i * padded_lane + lane].copy_from_slice(chunk);
+                }
+                prune_combined(&mut padded, padded_lane, x_ss, x_us);
+                for (i, chunk) in op.weights.chunks_mut(lane).enumerate() {
+                    chunk.copy_from_slice(&padded[i * padded_lane..i * padded_lane + lane]);
+                }
+            } else {
+                prune_combined(&mut op.weights, lane, x_ss, x_us);
+            }
+            true
+        }
+        Layer::Fc(op) => {
+            prune_combined(&mut op.weights, op.in_n, x_ss, x_us);
+            true
+        }
+        Layer::Shortcut { conv: Some(op), .. } => {
+            let lane = op.lane_len();
+            prune_combined(&mut op.weights, lane, x_ss, x_us);
+            true
+        }
+        _ => false,
+    }
+}
+
 /// Apply combined sparsity to every MAC layer of a graph in place
 /// (Figure 10's (x_us, x_ss) parameterization: x_ss of blocks zeroed,
 /// then x_us unstructured zeros within surviving blocks).
 pub fn apply_sparsity(graph: &mut Graph, x_us: f64, x_ss: f64) {
     for layer in &mut graph.layers {
-        match layer {
-            Layer::Conv(op) => {
-                let lane = op.lane_len();
-                if op.depthwise {
-                    // depthwise lanes are kh*kw (may not be %4); prune at
-                    // element granularity only.
-                    let n = op.weights.len();
-                    let padded_lane = lane.div_ceil(4) * 4;
-                    let mut padded = vec![0i8; (n / lane) * padded_lane];
-                    for (i, chunk) in op.weights.chunks(lane).enumerate() {
-                        padded[i * padded_lane..i * padded_lane + lane].copy_from_slice(chunk);
-                    }
-                    prune_combined(&mut padded, padded_lane, x_ss, x_us);
-                    for (i, chunk) in op.weights.chunks_mut(lane).enumerate() {
-                        chunk.copy_from_slice(&padded[i * padded_lane..i * padded_lane + lane]);
-                    }
-                } else {
-                    prune_combined(&mut op.weights, lane, x_ss, x_us);
-                }
-            }
-            Layer::Fc(op) => {
-                prune_combined(&mut op.weights, op.in_n, x_ss, x_us);
-            }
-            Layer::Shortcut { conv: Some(op), .. } => {
-                let lane = op.lane_len();
-                prune_combined(&mut op.weights, lane, x_ss, x_us);
-            }
-            _ => {}
+        prune_mac_layer(layer, x_us, x_ss);
+    }
+}
+
+/// Apply a *per-layer* sparsity plan: MAC layer `i` (graph order —
+/// convolutions, fully-connected layers, projection shortcuts) is
+/// pruned to `plan[i % plan.len()] = (x_us, x_ss)`. The plan is cycled
+/// when shorter than the model, mirroring
+/// [`crate::isa::DesignAssignment::design_for`], so compact specs apply
+/// to any model. A no-op on an empty plan.
+///
+/// Mixed plans are the workload the co-design explorer
+/// ([`crate::explorer`]) exists for: real pruned networks do not share
+/// one sparsity structure across layers.
+pub fn apply_sparsity_plan(graph: &mut Graph, plan: &[(f64, f64)]) {
+    if plan.is_empty() {
+        return;
+    }
+    let mut mac_idx = 0usize;
+    for layer in &mut graph.layers {
+        let (x_us, x_ss) = plan[mac_idx % plan.len()];
+        if prune_mac_layer(layer, x_us, x_ss) {
+            mac_idx += 1;
+        }
+    }
+}
+
+/// Push the listed MAC layers' non-zero weights outside the INT7
+/// dynamic range (saturating ±64 shift: `w → w ± 64`), leaving zero
+/// weights — and therefore every sparsity pattern, lookahead skip chain
+/// and per-design cycle count — untouched.
+///
+/// This models layers whose quantized weights genuinely need the full
+/// INT8 range (typically stems and classifier heads, which calibrate to
+/// wider per-layer scales). On such layers the SSSA/CSA lookahead
+/// designs must clamp to INT7 (the paper's Section III-B dynamic-range
+/// restriction) and stop being bit-exact — the fidelity constraint the
+/// explorer's lossless mode enforces. Indices outside the model's
+/// MAC-layer count are ignored.
+pub fn widen_weights_to_int8(graph: &mut Graph, mac_indices: &[usize]) {
+    let widen = |ws: &mut [i8]| {
+        for w in ws {
+            *w = match (*w as i32).signum() {
+                1 => ((*w as i32) + 64).min(127) as i8,
+                -1 => ((*w as i32) - 64).max(-128) as i8,
+                _ => 0,
+            };
+        }
+    };
+    for (mac_idx, ws) in graph.mac_weights_mut().into_iter().enumerate() {
+        if mac_indices.contains(&mac_idx) {
+            widen(ws.as_mut_slice());
         }
     }
 }
@@ -317,6 +379,75 @@ mod tests {
         let input = random_input(Shape::nhwc(1, 8, 8, 4), cfg.act_params(), &mut rng);
         let out = g.forward_ref(&input).unwrap();
         assert_eq!(out.shape().dims(), &[1, 10]);
+    }
+
+    #[test]
+    fn per_layer_plan_prunes_each_mac_layer_differently() {
+        let cfg = ModelConfig::default();
+        let mut b = GraphBuilder::new(&cfg);
+        b.conv("c1", 16, 16, 3, 1, Padding::Same, true).unwrap();
+        b.conv("c2", 16, 16, 3, 1, Padding::Same, true).unwrap();
+        let mut g = b.finish("t", 16);
+        apply_sparsity_plan(&mut g, &[(0.0, 0.6), (0.0, 0.0)]);
+        let blocks: Vec<f64> = g
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Conv(op) => Some(
+                    crate::sparsity::stats::SparsityProfile::measure(&op.weights, op.in_c).block,
+                ),
+                _ => None,
+            })
+            .collect();
+        assert!((blocks[0] - 0.6).abs() < 0.05, "layer 0 block {}", blocks[0]);
+        assert!(blocks[1] < 0.05, "layer 1 block {}", blocks[1]);
+        // Empty plan is a no-op.
+        let before: Vec<i8> = match &g.layers[0] {
+            Layer::Conv(op) => op.weights.clone(),
+            _ => unreachable!(),
+        };
+        apply_sparsity_plan(&mut g, &[]);
+        match &g.layers[0] {
+            Layer::Conv(op) => assert_eq!(op.weights, before),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn widen_weights_preserves_sparsity_pattern() {
+        let cfg = ModelConfig::default();
+        let mut b = GraphBuilder::new(&cfg);
+        b.conv("c1", 8, 8, 3, 1, Padding::Same, true).unwrap();
+        b.fc("head", 8, 32, false).unwrap();
+        let mut g = b.finish("t", 8);
+        apply_sparsity(&mut g, 0.5, 0.2);
+        let zeros = |g: &Graph, i: usize| -> Vec<bool> {
+            match &g.layers[i] {
+                Layer::Conv(op) => op.weights.iter().map(|&w| w == 0).collect(),
+                Layer::Fc(op) => op.weights.iter().map(|&w| w == 0).collect(),
+                _ => unreachable!(),
+            }
+        };
+        let conv_zero_pattern = zeros(&g, 0);
+        widen_weights_to_int8(&mut g, &[0]);
+        assert_eq!(zeros(&g, 0), conv_zero_pattern, "zero pattern must survive widening");
+        // Widened layer: every non-zero weight is outside INT7 range.
+        match &g.layers[0] {
+            Layer::Conv(op) => {
+                assert!(op.weights.iter().any(|&w| w != 0));
+                for &w in &op.weights {
+                    assert!(w == 0 || !crate::encoding::int7::is_int7(w), "{w}");
+                }
+            }
+            _ => unreachable!(),
+        }
+        // Untouched layer (index 1) stays INT7.
+        match &g.layers[1] {
+            Layer::Fc(op) => {
+                assert!(op.weights.iter().all(|&w| crate::encoding::int7::is_int7(w)));
+            }
+            _ => unreachable!(),
+        }
     }
 
     #[test]

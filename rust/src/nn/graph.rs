@@ -117,15 +117,36 @@ impl Graph {
 
     /// Total MAC-layer weights.
     pub fn total_weights(&self) -> usize {
+        self.mac_weights().iter().map(|ws| ws.len()).sum()
+    }
+
+    /// Weight slices of the MAC layers, in the canonical graph order
+    /// every per-layer consumer indexes by (the simulator's `mac_idx`
+    /// walk, sparsity plans, the explorer's cost matrix).
+    pub fn mac_weights(&self) -> Vec<&[i8]> {
         self.layers
             .iter()
-            .map(|l| match l {
-                Layer::Conv(op) => op.weights.len(),
-                Layer::Fc(op) => op.weights.len(),
-                Layer::Shortcut { conv: Some(op), .. } => op.weights.len(),
-                _ => 0,
+            .filter_map(|l| match l {
+                Layer::Conv(op) => Some(op.weights.as_slice()),
+                Layer::Fc(op) => Some(op.weights.as_slice()),
+                Layer::Shortcut { conv: Some(op), .. } => Some(op.weights.as_slice()),
+                _ => None,
             })
-            .sum()
+            .collect()
+    }
+
+    /// Mutable counterpart of [`Graph::mac_weights`] — same layers, same
+    /// order.
+    pub fn mac_weights_mut(&mut self) -> Vec<&mut Vec<i8>> {
+        self.layers
+            .iter_mut()
+            .filter_map(|l| match l {
+                Layer::Conv(op) => Some(&mut op.weights),
+                Layer::Fc(op) => Some(&mut op.weights),
+                Layer::Shortcut { conv: Some(op), .. } => Some(&mut op.weights),
+                _ => None,
+            })
+            .collect()
     }
 
     /// Golden forward pass.

@@ -14,12 +14,15 @@
 //!   or an RTL co-simulation bridge) plug in here without touching the
 //!   coordinator.
 //! - [`PreparedCache`] memoizes prepared models keyed by
-//!   [`ModelKey`] — (model, design, sparsity config, scale, weight seed) —
-//!   so repeated batches, sweeps and multi-design comparisons pay the
-//!   (deterministic) build + encode cost once per configuration.
+//!   [`ModelKey`] — (model, per-layer design assignment, sparsity
+//!   config, scale, weight seed) — so repeated batches, sweeps and
+//!   multi-design comparisons pay the (deterministic) build + encode
+//!   cost once per configuration. Heterogeneous assignments key by the
+//!   full per-layer vector, so two assignments differing in one layer
+//!   never alias.
 
 use crate::error::Result;
-use crate::isa::DesignKind;
+use crate::isa::{DesignAssignment, DesignKind};
 use crate::kernels::ExecMode;
 use crate::nn::graph::Graph;
 use crate::simulator::{PreparedModel, SimEngine, SimReport};
@@ -32,8 +35,9 @@ use std::sync::{Arc, Mutex};
 /// A design-agnostic execution backend: prepare a model once, execute
 /// many inferences against the prepared form.
 pub trait ExecBackend: Send + Sync {
-    /// The accelerator design this backend simulates.
-    fn design(&self) -> DesignKind;
+    /// The per-layer design assignment this backend simulates (uniform
+    /// for the paper's model-wide designs).
+    fn assignment(&self) -> DesignAssignment;
 
     /// Offline preparation (weight packing / lookahead encoding). Not
     /// charged to inference cycles.
@@ -44,8 +48,8 @@ pub trait ExecBackend: Send + Sync {
 }
 
 impl ExecBackend for SimEngine {
-    fn design(&self) -> DesignKind {
-        self.design
+    fn assignment(&self) -> DesignAssignment {
+        self.assignment.clone()
     }
 
     fn prepare(&self, graph: &Graph) -> Result<PreparedModel> {
@@ -57,7 +61,7 @@ impl ExecBackend for SimEngine {
     }
 }
 
-/// Build the default (cycle-model) backend for a design.
+/// Build the default (cycle-model) backend for a uniform design.
 pub fn backend_for(design: DesignKind) -> Box<dyn ExecBackend> {
     Box::new(SimEngine::new(design))
 }
@@ -73,7 +77,21 @@ pub fn backend_with_mode(
     verify: bool,
     mode: ExecMode,
 ) -> Box<dyn ExecBackend> {
-    Box::new(SimEngine::new(design).with_verify(verify).with_exec_mode(mode))
+    assigned_backend_with_mode(&DesignAssignment::Uniform(design), verify, mode)
+}
+
+/// Backend executing a (possibly heterogeneous) per-layer assignment
+/// with explicit verification and lane execution mode.
+pub fn assigned_backend_with_mode(
+    assignment: &DesignAssignment,
+    verify: bool,
+    mode: ExecMode,
+) -> Box<dyn ExecBackend> {
+    Box::new(
+        SimEngine::for_assignment(assignment.clone())
+            .with_verify(verify)
+            .with_exec_mode(mode),
+    )
 }
 
 /// The interpreted-oracle backend: per-instruction CFU dispatch — the
@@ -86,12 +104,17 @@ pub fn oracle_backend_for(design: DesignKind) -> Box<dyn ExecBackend> {
 /// width multiplier are keyed by their IEEE-754 bit patterns: model
 /// construction and magnitude pruning are fully deterministic in these
 /// parameters, so bit-equal inputs produce bit-equal prepared models.
+///
+/// The design component is the full per-layer [`DesignAssignment`]
+/// (structural equality/hashing): two assignments differing in even one
+/// layer are distinct keys, while `Uniform(d)` and an all-`d` per-layer
+/// vector canonicalize to the same key (identical prepared weights).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ModelKey {
     /// Model zoo identifier.
     pub model: String,
-    /// Accelerator design the weights are packed for.
-    pub design: DesignKind,
+    /// Per-layer assignment the weights are packed for.
+    pub assignment: DesignAssignment,
     /// `f64::to_bits` of the unstructured sparsity ratio.
     pub x_us_bits: u64,
     /// `f64::to_bits` of the 4:4 block sparsity ratio.
@@ -103,7 +126,7 @@ pub struct ModelKey {
 }
 
 impl ModelKey {
-    /// Key a configuration.
+    /// Key a uniform-design configuration.
     pub fn new(
         model: &str,
         design: DesignKind,
@@ -112,9 +135,21 @@ impl ModelKey {
         scale: f64,
         weight_seed: u64,
     ) -> Self {
+        ModelKey::assigned(model, DesignAssignment::Uniform(design), x_us, x_ss, scale, weight_seed)
+    }
+
+    /// Key a per-layer assignment configuration.
+    pub fn assigned(
+        model: &str,
+        assignment: DesignAssignment,
+        x_us: f64,
+        x_ss: f64,
+        scale: f64,
+        weight_seed: u64,
+    ) -> Self {
         ModelKey {
             model: model.to_string(),
-            design,
+            assignment,
             x_us_bits: x_us.to_bits(),
             x_ss_bits: x_ss.to_bits(),
             scale_bits: scale.to_bits(),
@@ -289,7 +324,7 @@ mod tests {
     fn backend_trait_matches_engine() {
         let graph = tiny_graph();
         let backend = backend_for(DesignKind::Csa);
-        assert_eq!(backend.design(), DesignKind::Csa);
+        assert_eq!(backend.assignment(), DesignAssignment::Uniform(DesignKind::Csa));
         let prepared = backend.prepare(&graph).unwrap();
         let engine = SimEngine::new(DesignKind::Csa);
         let direct = engine.prepare(&graph).unwrap();
@@ -377,5 +412,86 @@ mod tests {
         assert_ne!(a, b);
         assert_ne!(a, c);
         assert_eq!(a, a.clone());
+    }
+
+    #[test]
+    fn heterogeneous_assignments_do_not_alias_keys() {
+        // Two assignments differing in exactly one layer must be
+        // distinct keys; a uniform assignment and its all-equal
+        // per-layer spelling must be the *same* key (identical prepared
+        // weights — cache sharing is correct, not aliasing).
+        let key = |a: DesignAssignment| ModelKey::assigned("dscnn", a, 0.5, 0.3, 0.25, 1);
+        let ab = key(DesignAssignment::per_layer(vec![DesignKind::Sssa, DesignKind::Ussa]));
+        let ac = key(DesignAssignment::per_layer(vec![DesignKind::Sssa, DesignKind::Csa]));
+        assert_ne!(ab, ac);
+        let uniform = key(DesignAssignment::Uniform(DesignKind::Csa));
+        let spelled = key(DesignAssignment::per_layer(vec![DesignKind::Csa, DesignKind::Csa]));
+        assert_eq!(uniform, spelled);
+        assert_ne!(uniform, ac);
+    }
+
+    #[test]
+    fn cache_separates_heterogeneous_assignments_and_lru_counts_stay_exact() {
+        // One-layer-different assignments build separately (no alias) and
+        // the LRU hit/miss/evict counters stay correct under eviction
+        // pressure from heterogeneous keys.
+        let graph = tiny_graph();
+        let cache = PreparedCache::with_capacity(2);
+        let a1 = DesignAssignment::per_layer(vec![DesignKind::Sssa, DesignKind::BaselineSimd]);
+        let a2 = DesignAssignment::per_layer(vec![DesignKind::Sssa, DesignKind::Csa]);
+        let key = |a: &DesignAssignment| {
+            ModelKey::assigned("dscnn", a.clone(), 0.5, 0.3, 0.07, 0x5EED)
+        };
+        let build = |a: &DesignAssignment| {
+            let backend = assigned_backend_with_mode(a, false, ExecMode::Compiled);
+            backend.prepare(&graph)
+        };
+        let (m1, hit1) = cache.get_or_prepare(&key(&a1), || build(&a1)).unwrap();
+        let (m2, hit2) = cache.get_or_prepare(&key(&a2), || build(&a2)).unwrap();
+        assert!(!hit1 && !hit2);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(m1.assignment, a1);
+        assert_eq!(m2.assignment, a2);
+        // Same keys hit; counters advance exactly.
+        let (_, h) = cache.get_or_prepare(&key(&a1), || build(&a1)).unwrap();
+        assert!(h);
+        assert_eq!(cache.hits(), 1);
+        // A third assignment evicts the LRU entry (a2) at capacity 2.
+        let a3 = DesignAssignment::Uniform(DesignKind::Ussa);
+        cache.get_or_prepare(&key(&a3), || build(&a3)).unwrap();
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len(), 2);
+        let (_, h1) = cache.get_or_prepare(&key(&a1), || build(&a1)).unwrap();
+        assert!(h1, "recently-used heterogeneous entry survives");
+        let (_, h2) = cache.get_or_prepare(&key(&a2), || build(&a2)).unwrap();
+        assert!(!h2, "LRU heterogeneous entry was evicted");
+        assert_eq!(cache.misses(), 4);
+    }
+
+    #[test]
+    fn heterogeneous_backend_executes_per_layer_designs() {
+        let graph = tiny_graph();
+        let n = graph.mac_layers();
+        let designs: Vec<DesignKind> = (0..n)
+            .map(|i| if i % 2 == 0 { DesignKind::Csa } else { DesignKind::BaselineSimd })
+            .collect();
+        let assignment = DesignAssignment::per_layer(designs);
+        let backend = assigned_backend_with_mode(&assignment, true, ExecMode::Compiled);
+        assert_eq!(backend.assignment(), assignment);
+        let prepared = backend.prepare(&graph).unwrap();
+        let mut rng = crate::util::Pcg32::new(11);
+        let input = crate::models::builder::random_input(
+            crate::models::zoo::input_shape("dscnn").unwrap(),
+            crate::tensor::quant::QuantParams::new(0.05, 0).unwrap(),
+            &mut rng,
+        );
+        let report = backend.execute(&prepared, &input).unwrap();
+        assert!(report.total_cycles > 0);
+        assert_eq!(report.assignment, assignment);
+        // The heterogeneous oracle agrees bit-for-bit.
+        let oracle = assigned_backend_with_mode(&assignment, false, ExecMode::Interpreted);
+        let o = oracle.execute(&prepared, &input).unwrap();
+        assert_eq!(o.output.data(), report.output.data());
+        assert_eq!(o.total_cycles, report.total_cycles);
     }
 }

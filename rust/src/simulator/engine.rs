@@ -2,7 +2,7 @@
 
 use crate::cpu::{CostModel, CycleCounter};
 use crate::error::{Error, Result};
-use crate::isa::DesignKind;
+use crate::isa::{DesignAssignment, DesignKind};
 use crate::kernels::{ExecMode, PreparedConv, PreparedFc};
 use crate::nn::activation::{add, relu};
 use crate::nn::graph::{Graph, Layer};
@@ -31,8 +31,9 @@ pub struct LayerStats {
 pub struct SimReport {
     /// Model name.
     pub model: String,
-    /// Design simulated.
-    pub design: DesignKind,
+    /// Per-layer design assignment simulated (uniform for the paper's
+    /// model-wide designs).
+    pub assignment: DesignAssignment,
     /// Total cycles across all layers.
     pub total_cycles: u64,
     /// Total CFU (MAC-unit) cycles.
@@ -49,6 +50,11 @@ impl SimReport {
     /// Wall time at a clock frequency.
     pub fn seconds_at(&self, clock_hz: u64) -> f64 {
         self.total_cycles as f64 / clock_hz as f64
+    }
+
+    /// Compact assignment label for reports (design name when uniform).
+    pub fn design_label(&self) -> String {
+        self.assignment.label()
     }
 
     /// CFU stall cycles of this inference (multi-cycle MAC waits).
@@ -75,12 +81,13 @@ enum PreparedLayer {
     ResidualAdd { slot: usize, out_params: crate::tensor::quant::QuantParams },
 }
 
-/// A model prepared for one design (weights packed/encoded once).
+/// A model prepared for one design assignment (weights packed/encoded
+/// once, each MAC layer for its assigned design).
 pub struct PreparedModel {
     /// Model name.
     pub name: String,
-    /// Design the model is prepared for.
-    pub design: DesignKind,
+    /// Assignment the model is prepared for.
+    pub assignment: DesignAssignment,
     layers: Vec<PreparedLayer>,
     /// Number of output classes.
     pub classes: usize,
@@ -88,12 +95,13 @@ pub struct PreparedModel {
     pub clamped_weights: usize,
 }
 
-/// Simulation engine: design + CPU cost model + verification toggle +
-/// lane execution mode.
+/// Simulation engine: per-layer design assignment + CPU cost model +
+/// verification toggle + lane execution mode.
 #[derive(Debug, Clone)]
 pub struct SimEngine {
-    /// Accelerator design.
-    pub design: DesignKind,
+    /// Per-layer accelerator assignment (uniform for the paper's
+    /// model-wide designs).
+    pub assignment: DesignAssignment,
     /// CPU instruction cost model.
     pub cost_model: CostModel,
     /// Verify every MAC layer output against the golden nn op.
@@ -104,10 +112,16 @@ pub struct SimEngine {
 }
 
 impl SimEngine {
-    /// Engine with the VexRiscv cost model (compiled execution).
+    /// Engine with the VexRiscv cost model (compiled execution) running
+    /// one design on every MAC layer.
     pub fn new(design: DesignKind) -> Self {
+        SimEngine::for_assignment(DesignAssignment::Uniform(design))
+    }
+
+    /// Engine executing a (possibly heterogeneous) per-layer assignment.
+    pub fn for_assignment(assignment: DesignAssignment) -> Self {
         SimEngine {
-            design,
+            assignment,
             cost_model: CostModel::vexriscv(),
             verify: false,
             exec_mode: ExecMode::Compiled,
@@ -134,20 +148,27 @@ impl SimEngine {
     }
 
     /// Prepare a graph: pack (and for SSSA/CSA lookahead-encode) every
-    /// MAC layer's weights. This is the paper's offline pre-processing —
-    /// it is *not* charged to inference cycles.
+    /// MAC layer's weights for its assigned design. This is the paper's
+    /// offline pre-processing — it is *not* charged to inference cycles.
+    ///
+    /// MAC layers (convolutions, fully-connected layers, projection
+    /// shortcuts) are indexed in graph order; layer `i` is packed for
+    /// `self.assignment.design_for(i)`.
     pub fn prepare(&self, graph: &Graph) -> Result<PreparedModel> {
         let mut layers = Vec::with_capacity(graph.layers.len());
         let mut clamped = 0usize;
+        let mut mac_idx = 0usize;
         for layer in &graph.layers {
             layers.push(match layer {
                 Layer::Conv(op) => {
-                    let p = PreparedConv::new(op, self.design)?;
+                    let p = PreparedConv::new(op, self.assignment.design_for(mac_idx))?;
+                    mac_idx += 1;
                     clamped += p.lanes.clamped;
                     PreparedLayer::Conv(p)
                 }
                 Layer::Fc(op) => {
-                    let p = PreparedFc::new(op, self.design)?;
+                    let p = PreparedFc::new(op, self.assignment.design_for(mac_idx))?;
+                    mac_idx += 1;
                     clamped += p.lanes.clamped;
                     PreparedLayer::Fc(p)
                 }
@@ -163,7 +184,9 @@ impl SimEngine {
                 Layer::Shortcut { conv, slot } => PreparedLayer::Shortcut {
                     conv: match conv {
                         Some(op) => {
-                            let p = PreparedConv::new(op, self.design)?;
+                            let p =
+                                PreparedConv::new(op, self.assignment.design_for(mac_idx))?;
+                            mac_idx += 1;
                             clamped += p.lanes.clamped;
                             Some(p)
                         }
@@ -178,7 +201,7 @@ impl SimEngine {
         }
         Ok(PreparedModel {
             name: graph.name.clone(),
-            design: self.design,
+            assignment: self.assignment.clone(),
             layers,
             classes: graph.classes,
             clamped_weights: clamped,
@@ -187,10 +210,10 @@ impl SimEngine {
 
     /// Simulate one inference.
     pub fn run(&self, model: &PreparedModel, input: &QTensor) -> Result<SimReport> {
-        if model.design != self.design {
+        if model.assignment != self.assignment {
             return Err(Error::Sim(format!(
                 "model prepared for {} but engine is {}",
-                model.design, self.design
+                model.assignment, self.assignment
             )));
         }
         let mut cur = input.clone();
@@ -214,7 +237,7 @@ impl SimEngine {
         }
         Ok(SimReport {
             model: model.name.clone(),
-            design: self.design,
+            assignment: self.assignment.clone(),
             total_cycles: total.cycles(),
             mac_cycles: total.cfu_cycles(),
             layers: stats,
@@ -417,6 +440,70 @@ mod tests {
         let prepared = e1.prepare(&graph).unwrap();
         let e2 = SimEngine::new(DesignKind::Ussa);
         assert!(e2.run(&prepared, &input).is_err());
+    }
+
+    #[test]
+    fn assignment_mismatch_rejected() {
+        use crate::isa::DesignAssignment;
+        let (graph, input) = dscnn_setup(0.2, 0.2);
+        let a = DesignAssignment::per_layer(vec![DesignKind::Sssa, DesignKind::Csa]);
+        let prepared = SimEngine::for_assignment(a).prepare(&graph).unwrap();
+        let other =
+            SimEngine::for_assignment(DesignAssignment::per_layer(vec![
+                DesignKind::Sssa,
+                DesignKind::Ussa,
+            ]));
+        assert!(other.run(&prepared, &input).is_err());
+    }
+
+    #[test]
+    fn heterogeneous_matches_uniform_per_layer() {
+        use crate::isa::DesignAssignment;
+        // Alternate SSSA / baseline-simd across MAC layers: every MAC
+        // layer's cycle total must equal the same layer under the
+        // uniform engine of its assigned design, outputs stay bit-exact
+        // (verify), and the compiled path must match the interpreted
+        // oracle under the heterogeneous assignment too.
+        let (graph, input) = dscnn_setup(0.5, 0.3);
+        let n = graph.mac_layers();
+        let designs: Vec<DesignKind> = (0..n)
+            .map(|i| if i % 2 == 0 { DesignKind::Sssa } else { DesignKind::BaselineSimd })
+            .collect();
+        let assignment = DesignAssignment::per_layer(designs.clone());
+        let engine = SimEngine::for_assignment(assignment.clone()).with_verify(true);
+        let prepared = engine.prepare(&graph).unwrap();
+        let report = engine.run(&prepared, &input).unwrap();
+        assert_eq!(report.assignment, assignment);
+
+        let mac_stats = |r: &SimReport| -> Vec<(String, u64)> {
+            r.layers
+                .iter()
+                .filter(|l| {
+                    l.label.starts_with("conv")
+                        || l.label.starts_with("fc")
+                        || l.label.starts_with("proj")
+                })
+                .map(|l| (l.label.clone(), l.cycles))
+                .collect()
+        };
+        let hetero = mac_stats(&report);
+        assert_eq!(hetero.len(), n);
+        for d in [DesignKind::Sssa, DesignKind::BaselineSimd] {
+            let e = SimEngine::new(d);
+            let p = e.prepare(&graph).unwrap();
+            let uni = mac_stats(&e.run(&p, &input).unwrap());
+            for (i, (h, u)) in hetero.iter().zip(&uni).enumerate() {
+                assert_eq!(h.0, u.0, "layer order must match");
+                if designs[i] == d {
+                    assert_eq!(h.1, u.1, "layer {i} under {d}");
+                }
+            }
+        }
+
+        let oracle = SimEngine::for_assignment(assignment).with_exec_mode(ExecMode::Interpreted);
+        let o = oracle.run(&prepared, &input).unwrap();
+        assert_eq!(o.output.data(), report.output.data());
+        assert_eq!(o.total_cycles, report.total_cycles);
     }
 
     #[test]

@@ -10,12 +10,16 @@
 //! Engine v2 ([`backend`]) layers a design-agnostic [`backend::ExecBackend`]
 //! trait and a prepared-model cache on top, so the coordinator can batch
 //! inferences across designs and models without re-preparing weights.
+//! Both layers are generic over a per-layer
+//! [`crate::isa::DesignAssignment`]: one inference can run SSSA on
+//! block-sparse conv layers and the SIMD baseline on layers that need
+//! full INT8 weights (the co-design the [`crate::explorer`] automates).
 
 pub mod backend;
 pub mod engine;
 
 pub use backend::{
-    backend_for, backend_with_mode, oracle_backend_for, verified_backend_for, ExecBackend,
-    ModelKey, PreparedCache,
+    assigned_backend_with_mode, backend_for, backend_with_mode, oracle_backend_for,
+    verified_backend_for, ExecBackend, ModelKey, PreparedCache,
 };
 pub use engine::{LayerStats, PreparedModel, SimEngine, SimReport};

@@ -23,7 +23,7 @@ fn dscnn_batch8_under_every_design() {
     for design in DesignKind::ALL {
         let report = engine.run_batch(&tiny("dscnn", design), reqs.clone()).unwrap();
         assert_eq!(report.completed, 8, "{design}");
-        assert_eq!(report.design, design);
+        assert_eq!(report.design_label(), design.name());
         assert!(report.total_cycles > 0);
         assert!(report.cfu_cycles > 0 && report.cfu_cycles < report.total_cycles);
         assert!(report.loaded_bytes > 0);

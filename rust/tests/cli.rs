@@ -19,7 +19,9 @@ fn run(args: &[&str]) -> (bool, String, String) {
 fn help_lists_subcommands() {
     let (ok, stdout, _) = run(&["--help"]);
     assert!(ok);
-    for sub in ["experiment", "serve", "bench-e2e", "metrics", "encode", "resources", "models"] {
+    for sub in
+        ["experiment", "serve", "explore", "bench-e2e", "metrics", "encode", "resources", "models"]
+    {
         assert!(stdout.contains(sub), "help missing '{sub}':\n{stdout}");
     }
 }
@@ -141,6 +143,78 @@ fn serve_cache_cap_bounds_the_prepared_cache() {
 }
 
 #[test]
+fn serve_accepts_per_layer_assignment() {
+    let (ok, stdout, stderr) = run(&[
+        "serve", "--model", "dscnn", "--assignment", "sssa,simd", "--requests", "2", "--scale",
+        "0.07",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("hetero:sb"), "{stdout}");
+    assert!(stdout.contains("simulated latency"), "{stdout}");
+    // Bad assignments fail cleanly before any work.
+    let (ok, _, stderr) = run(&["serve", "--model", "dscnn", "--assignment", "bogus"]);
+    assert!(!ok);
+    assert!(stderr.contains("assignment"), "{stderr}");
+}
+
+#[test]
+fn explore_help_and_frontier_table() {
+    let (ok, stdout, _) = run(&["explore", "--help"]);
+    assert!(ok);
+    for opt in ["--model", "--budget", "--sparsity", "--int8-layers", "--lossy", "--apply"] {
+        assert!(stdout.contains(opt), "help missing '{opt}':\n{stdout}");
+    }
+
+    // Mixed per-layer sparsity + an INT8 stem: the frontier renders and
+    // the argmin assignment is heterogeneous.
+    let (ok, stdout, stderr) = run(&[
+        "explore", "--model", "dscnn", "--scale", "0.07", "--sparsity", "0.4:0.0,0.5:0.5",
+        "--int8-layers", "0",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("per-layer cycles"), "{stdout}");
+    assert!(stdout.contains("Pareto frontier"), "{stdout}");
+    assert!(stdout.contains("best assignment: hetero:"), "{stdout}");
+    assert!(stdout.contains("best uniform"), "{stdout}");
+}
+
+#[test]
+fn explore_rejects_bad_sparsity_and_layer_indices() {
+    let (ok, _, stderr) =
+        run(&["explore", "--model", "dscnn", "--sparsity", "1.5:0.0", "--scale", "0.07"]);
+    assert!(!ok);
+    assert!(stderr.contains("x_us"), "{stderr}");
+    let (ok, _, stderr) =
+        run(&["explore", "--model", "dscnn", "--int8-layers", "99", "--scale", "0.07"]);
+    assert!(!ok);
+    assert!(stderr.contains("out of range"), "{stderr}");
+}
+
+#[test]
+fn explore_budget_restricts_designs() {
+    // A zero-DSP budget leaves only the SIMD baseline (every CFU adds
+    // at least one DSP slice).
+    let (ok, stdout, stderr) =
+        run(&["explore", "--model", "dscnn", "--scale", "0.07", "--budget", "dsps=0"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("best assignment: baseline-simd"), "{stdout}");
+    // Malformed budgets fail cleanly.
+    let (ok, _, stderr) = run(&["explore", "--model", "dscnn", "--budget", "bogus=1"]);
+    assert!(!ok);
+    assert!(stderr.contains("budget"), "{stderr}");
+}
+
+#[test]
+fn explore_apply_feeds_assignment_into_serving() {
+    let (ok, stdout, stderr) = run(&[
+        "explore", "--model", "dscnn", "--scale", "0.07", "--sparsity", "0.4:0.0,0.5:0.5",
+        "--int8-layers", "0", "--apply", "--requests", "2",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("apply: served 2 verified requests"), "{stdout}");
+}
+
+#[test]
 fn bench_e2e_reports_thread_scaling() {
     let (ok, stdout, stderr) = run(&[
         "bench-e2e", "--models", "dscnn", "--designs", "csa,simd", "--batch", "2", "--threads",
@@ -189,6 +263,10 @@ fn bench_e2e_json_writes_a_loadable_store() {
     let src = std::fs::read_to_string(&path).unwrap();
     assert!(src.contains("e2e/dscnn/CSA/t1"), "{src}");
     assert!(src.contains("total_cycles"), "{src}");
+    // Explorer records ride along in the same sink (informational).
+    assert!(src.contains("explore/dscnn"), "{src}");
+    assert!(src.contains("explore_best_cycles"), "{src}");
+    assert!(src.contains("explore_frontier_size"), "{src}");
 
     // `metrics show` renders the store.
     let (code, stdout, stderr) = run_with_exit(&["metrics", "show", path_s]);

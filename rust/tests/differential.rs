@@ -5,11 +5,11 @@
 //! block with a 1-cycle floor, the sequential baseline always 4, the
 //! parallel units always 1).
 //!
-//! Since the compiled-lane-schedule change this tier also pins the
-//! table-driven default execution path against the interpreted CFU
-//! oracle: bit-identical outputs AND cycle totals across every design ×
-//! zoo model, including all-zero lanes, depthwise padded tails and
-//! INT7-clamp edge values.
+//! This tier also pins the table-driven default execution path
+//! (compiled lane schedules) against the interpreted CFU oracle:
+//! bit-identical outputs AND cycle totals across every design × zoo
+//! model — including all-zero lanes, depthwise padded tails, INT7-clamp
+//! edge values, and heterogeneous per-layer assignments.
 
 use sparse_riscv::cfu::{build_cfu, AnyCfu, Cfu};
 use sparse_riscv::encoding::int7::clamp_int7;
@@ -454,5 +454,46 @@ fn compiled_matches_oracle_across_designs_and_zoo_models() {
             assert_eq!(a.loaded_bytes(), b.loaded_bytes(), "{tag}: loaded bytes");
             assert_eq!(a.counter.total_instrs(), b.counter.total_instrs(), "{tag}: instrs");
         }
+    }
+}
+
+/// Heterogeneous differential: a per-layer assignment cycling through
+/// every design must stay bit-identical — outputs AND per-layer cycle
+/// totals — between the compiled default and the interpreted oracle.
+#[test]
+fn heterogeneous_assignment_matches_interpreted_oracle_per_layer() {
+    use sparse_riscv::isa::DesignAssignment;
+    use sparse_riscv::kernels::ExecMode;
+    use sparse_riscv::models::builder::{apply_sparsity, random_input, ModelConfig};
+    use sparse_riscv::models::zoo::build_model;
+    use sparse_riscv::simulator::SimEngine;
+
+    let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+    let mut info = build_model("dscnn", &cfg).unwrap();
+    apply_sparsity(&mut info.graph, 0.5, 0.3);
+    let n = info.graph.mac_layers();
+    let designs: Vec<DesignKind> =
+        (0..n).map(|i| DesignKind::ALL[i % DesignKind::ALL.len()]).collect();
+    let assignment = DesignAssignment::per_layer(designs);
+    let compiled = SimEngine::for_assignment(assignment.clone());
+    let oracle =
+        SimEngine::for_assignment(assignment.clone()).with_exec_mode(ExecMode::Interpreted);
+    let prepared = compiled.prepare(&info.graph).unwrap();
+    let mut rng = Pcg32::new(77);
+    let input = random_input(info.input_shape.clone(), cfg.act_params(), &mut rng);
+    let a = compiled.run(&prepared, &input).unwrap();
+    let b = oracle.run(&prepared, &input).unwrap();
+    assert_eq!(a.assignment, assignment);
+    assert_eq!(a.output.data(), b.output.data(), "outputs");
+    assert_eq!(a.total_cycles, b.total_cycles, "cycles");
+    assert_eq!(a.mac_cycles, b.mac_cycles, "mac cycles");
+    assert_eq!(a.cfu_stalls(), b.cfu_stalls(), "stalls");
+    assert_eq!(a.loaded_bytes(), b.loaded_bytes(), "loaded bytes");
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(la.label, lb.label);
+        assert_eq!(la.cycles, lb.cycles, "layer {}", la.label);
+        assert_eq!(la.cfu_cycles, lb.cfu_cycles, "layer {}", la.label);
+        assert_eq!(la.instrs, lb.instrs, "layer {}", la.label);
     }
 }

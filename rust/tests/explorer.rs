@@ -1,0 +1,92 @@
+//! Explorer acceptance tier: on a zoo model with mixed per-layer
+//! sparsity (block-heavy hidden layers, unstructured-only INT8 stem and
+//! head), the explorer's per-layer assignment yields strictly fewer
+//! total simulated cycles than the best feasible uniform design; its
+//! predicted totals are exact against the heterogeneous engine; and
+//! heterogeneous execution is bit-identical — outputs and per-layer
+//! cycle totals — to the interpreted CFU oracle and to the INT8
+//! reference model (losslessness).
+
+use sparse_riscv::bench::explore::{explore_mixed, mixed_scenario};
+use sparse_riscv::isa::{DesignAssignment, DesignKind};
+use sparse_riscv::kernels::ExecMode;
+use sparse_riscv::models::builder::random_input;
+use sparse_riscv::simulator::SimEngine;
+use sparse_riscv::tensor::quant::QuantParams;
+use sparse_riscv::util::Pcg32;
+
+#[test]
+fn explored_assignment_strictly_beats_best_uniform_and_stays_bit_exact() {
+    let scale = 0.07;
+    let result = explore_mixed("dscnn", scale).unwrap();
+
+    // Strict co-design win: heterogeneous < best uniform in total cycles.
+    assert!(
+        result.best.total_cycles < result.best_uniform.total_cycles,
+        "hetero {} !< uniform {}",
+        result.best.total_cycles,
+        result.best_uniform.total_cycles
+    );
+    assert!(!result.best.assignment.is_uniform());
+    assert_eq!(
+        result.best_uniform.assignment,
+        DesignAssignment::Uniform(DesignKind::BaselineSimd),
+        "INT8 stem/head bar the lookahead designs, so the SIMD baseline is the best uniform"
+    );
+
+    // The explorer's predicted totals are exact: the heterogeneous
+    // engine lands on the same cycle count on a real input.
+    let (graph, input_shape) = mixed_scenario("dscnn", scale).unwrap();
+    let engine = SimEngine::for_assignment(result.best.assignment.clone()).with_verify(true);
+    let prepared = engine.prepare(&graph).unwrap();
+    let mut rng = Pcg32::new(3);
+    let input = random_input(input_shape, QuantParams::new(0.05, 0).unwrap(), &mut rng);
+    let hetero = engine.run(&prepared, &input).unwrap();
+    assert_eq!(hetero.total_cycles, result.best.total_cycles);
+
+    // The best uniform's prediction is exact too, and strictly slower.
+    let uni_engine = SimEngine::for_assignment(result.best_uniform.assignment.clone());
+    let uni_prepared = uni_engine.prepare(&graph).unwrap();
+    let uniform = uni_engine.run(&uni_prepared, &input).unwrap();
+    assert_eq!(uniform.total_cycles, result.best_uniform.total_cycles);
+    assert!(hetero.total_cycles < uniform.total_cycles);
+
+    // Heterogeneous execution is bit-identical to the interpreted
+    // oracle: outputs AND per-layer cycle totals.
+    let oracle = SimEngine::for_assignment(result.best.assignment.clone())
+        .with_exec_mode(ExecMode::Interpreted);
+    let o = oracle.run(&prepared, &input).unwrap();
+    assert_eq!(o.output.data(), hetero.output.data());
+    assert_eq!(o.total_cycles, hetero.total_cycles);
+    assert_eq!(o.layers.len(), hetero.layers.len());
+    for (a, b) in hetero.layers.iter().zip(&o.layers) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.cycles, b.cycles, "layer {}", a.label);
+        assert_eq!(a.cfu_cycles, b.cfu_cycles, "layer {}", a.label);
+    }
+
+    // Lossless: the chosen assignment never clamps, so the output equals
+    // the INT8 reference model bit-for-bit.
+    assert_eq!(prepared.clamped_weights, 0);
+    let reference = graph.forward_ref(&input).unwrap();
+    assert_eq!(hetero.output.data(), reference.data());
+}
+
+#[test]
+fn frontier_spans_the_resource_cycle_tradeoff() {
+    let result = explore_mixed("dscnn", 0.07).unwrap();
+    // The frontier holds ≥ 2 points: the free SIMD-baseline end and the
+    // fast heterogeneous end.
+    assert!(result.frontier.len() >= 2, "frontier: {}", result.frontier.len());
+    let fastest = &result.frontier[0];
+    let cheapest = result.frontier.iter().min_by_key(|p| p.resources.luts).unwrap();
+    assert_eq!(fastest.total_cycles, result.best.total_cycles);
+    assert_eq!(cheapest.resources.luts, 0);
+    assert!(cheapest.total_cycles > fastest.total_cycles);
+    // Frontier is sorted by cycles and strictly non-dominated.
+    for pair in result.frontier.windows(2) {
+        assert!(pair[0].total_cycles <= pair[1].total_cycles);
+        assert!(!pair[0].dominates(&pair[1]), "frontier holds a dominated point");
+        assert!(!pair[1].dominates(&pair[0]), "frontier holds a dominated point");
+    }
+}
