@@ -1,0 +1,176 @@
+//! Host wall-clock throughput of the lane execution paths: the
+//! batch-amortized schedule arena (default) vs the per-lane compiled
+//! walk vs the interpreted CFU oracle, plus the arena path with
+//! intra-layer lane tiling, across input batch sizes {1, 8, 64} and
+//! designs.
+//!
+//! Simulated cycle totals are asserted identical across the paths on
+//! every cell (the differential contract); what this bench measures is
+//! *host* speed — `host_infer_per_s` and wall milliseconds per batch —
+//! sunk as informational `host_*`/`wall_*` records via `$BENCH_JSON`.
+//! The acceptance expectation is that the arena-batched path beats the
+//! per-lane compiled path at batch ≥ 8 (reported, and warned about if a
+//! loaded machine says otherwise — wall clock never hard-fails).
+//!
+//! ```bash
+//! cargo bench --bench host_throughput
+//! # knobs: HOST_MODELS (default dscnn,resnet56), HOST_SCALE (0.1),
+//! #        HOST_ITERS (5), HOST_TILE_THREADS (0=auto)
+//! ```
+
+use sparse_riscv::bench::harness::{bench_fn, BenchConfig};
+use sparse_riscv::coordinator::TilePool;
+use sparse_riscv::isa::DesignKind;
+use sparse_riscv::kernels::ExecMode;
+use sparse_riscv::metrics::{sink_and_report, MetricRecord};
+use sparse_riscv::models::builder::{apply_sparsity, random_input, ModelConfig};
+use sparse_riscv::models::zoo::{build_model, input_shape};
+use sparse_riscv::simulator::SimEngine;
+use sparse_riscv::tensor::quant::QuantParams;
+use sparse_riscv::tensor::Shape;
+use sparse_riscv::util::Pcg32;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+const X_US: f64 = 0.5;
+const X_SS: f64 = 0.3;
+
+fn main() {
+    let models: Vec<String> = std::env::var("HOST_MODELS")
+        .unwrap_or_else(|_| "dscnn,resnet56".to_string())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let scale = env_or("HOST_SCALE", 0.1f64);
+    let iters = env_or("HOST_ITERS", 5usize).max(1);
+    let tile_threads = env_or("HOST_TILE_THREADS", 0usize);
+    let designs = [DesignKind::BaselineSimd, DesignKind::Sssa, DesignKind::Csa];
+    let batches = [1usize, 8, 64];
+
+    let tile_pool = TilePool::new(tile_threads);
+    let mut records: Vec<MetricRecord> = Vec::new();
+    // (model, design, batch) -> host inf/s of (compiled, batched).
+    let mut improvement_cells: Vec<(String, usize, f64, f64)> = Vec::new();
+
+    for model in &models {
+        let cfg = ModelConfig { scale, ..Default::default() };
+        let mut info = match build_model(model, &cfg) {
+            Ok(i) => i,
+            Err(e) => {
+                eprintln!("skipping {model}: {e}");
+                continue;
+            }
+        };
+        apply_sparsity(&mut info.graph, X_US, X_SS);
+        let base_shape = input_shape(model).expect("input shape");
+        for design in designs {
+            let reference = SimEngine::new(design);
+            let prepared = reference.prepare(&info.graph).expect("prepare");
+            for &batch in &batches {
+                let shape = Shape::nhwc(batch, base_shape.h(), base_shape.w(), base_shape.c());
+                let mut rng = Pcg32::new(0x4057 + batch as u64);
+                let input = random_input(
+                    shape,
+                    QuantParams::new(cfg.act_scale, 0).expect("qp"),
+                    &mut rng,
+                );
+
+                // The differential contract, re-checked in bench context:
+                // every path lands on identical simulated totals.
+                let engines = [
+                    ("interpreted", SimEngine::new(design).with_exec_mode(ExecMode::Interpreted)),
+                    ("compiled", SimEngine::new(design).with_exec_mode(ExecMode::Compiled)),
+                    ("batched", SimEngine::new(design)),
+                    ("batched_tiled", SimEngine::new(design).with_tiling(Some(tile_pool.clone()))),
+                ];
+                let golden = reference.run(&prepared, &input).expect("run");
+                let mut cell: Vec<(String, f64, f64)> = Vec::new();
+                for (mode_name, engine) in &engines {
+                    let check = engine.run(&prepared, &input).expect("run");
+                    assert_eq!(
+                        check.total_cycles, golden.total_cycles,
+                        "{model}/{design}/b{batch}/{mode_name}: cycle totals must be \
+                         invariant across execution paths"
+                    );
+                    assert_eq!(
+                        check.output.data(),
+                        golden.output.data(),
+                        "{model}/{design}/b{batch}/{mode_name}: outputs must be bit-identical"
+                    );
+                    let label = format!("{model}/{design}/b{batch}/{mode_name}");
+                    let r = bench_fn(&label, &BenchConfig { warmup: 1, iters }, || {
+                        std::hint::black_box(engine.run(&prepared, &input).unwrap());
+                    });
+                    println!("{}", r.render());
+                    let inf_s = r.items_per_sec(batch);
+                    records.push(
+                        MetricRecord::new(&format!("host/{label}"))
+                            .context(
+                                model,
+                                design.name(),
+                                X_US,
+                                X_SS,
+                                scale,
+                                batch as u64,
+                                if *mode_name == "batched_tiled" {
+                                    tile_pool.workers() as u64
+                                } else {
+                                    1
+                                },
+                            )
+                            .with_value("host_infer_per_s", inf_s)
+                            .with_value("wall_mean_ms", r.mean_s * 1e3)
+                            .with_value("wall_min_ms", r.min_s * 1e3),
+                    );
+                    cell.push((mode_name.to_string(), inf_s, r.mean_s));
+                }
+                let find = |name: &str| {
+                    cell.iter()
+                        .find(|(n, _, _)| n.as_str() == name)
+                        .map(|&(_, inf, _)| inf)
+                        .unwrap_or(0.0)
+                };
+                improvement_cells.push((
+                    format!("{model}/{design}"),
+                    batch,
+                    find("compiled"),
+                    find("batched"),
+                ));
+            }
+        }
+    }
+
+    // Acceptance expectation: the arena-batched path improves host
+    // throughput over the per-lane compiled walk once schedule decode is
+    // amortized (batch ≥ 8). Informational: warn, never abort — wall
+    // clock on shared machines is not a safe hard invariant.
+    let mut wins = 0usize;
+    let mut cells = 0usize;
+    for (tag, batch, compiled, batched) in &improvement_cells {
+        if *batch < 8 {
+            continue;
+        }
+        cells += 1;
+        if batched > compiled {
+            wins += 1;
+        } else {
+            eprintln!(
+                "warning: {tag} b{batch}: batched {batched:.1} inf/s did not beat \
+                 per-lane compiled {compiled:.1} inf/s (loaded machine?)"
+            );
+        }
+    }
+    println!(
+        "arena-batched beats per-lane compiled on {wins}/{cells} cells at batch >= 8 \
+         (tile pool: {} workers)",
+        tile_pool.workers()
+    );
+
+    sink_and_report(
+        "regenerate: BENCH_JSON=<path> cargo bench --bench host_throughput",
+        &records,
+    );
+}

@@ -18,7 +18,7 @@
 //! This is the substrate the CLI `serve`/`bench-e2e` commands and the
 //! end-to-end throughput bench build on.
 
-use super::scheduler::JobPool;
+use super::scheduler::{JobPool, TilePool};
 use crate::error::Result;
 use crate::isa::{DesignAssignment, DesignKind};
 use crate::kernels::ExecMode;
@@ -26,7 +26,7 @@ use crate::metrics::MetricRecord;
 use crate::models::builder::{apply_sparsity, random_input, ModelConfig};
 use crate::models::zoo::{build_model, input_shape};
 use crate::simulator::{
-    assigned_backend_with_mode, ExecBackend, ModelKey, PreparedCache, PreparedModel,
+    assigned_backend_tiled, ExecBackend, ModelKey, PreparedCache, PreparedModel,
 };
 use crate::tensor::quant::QuantParams;
 use crate::tensor::QTensor;
@@ -238,12 +238,19 @@ pub struct BatchOptions {
     pub clock_hz: u64,
     /// Verify every MAC layer against the golden reference ops.
     pub verify: bool,
-    /// Lane execution path: compiled schedules (default) or the
-    /// interpreted CFU oracle.
+    /// Lane execution path: batch-amortized arena execution (default),
+    /// the per-lane compiled walk, or the interpreted CFU oracle.
     pub exec_mode: ExecMode,
     /// LRU capacity of the prepared-model cache (ignored when an
     /// external cache is shared via [`BatchEngine::with_cache`]).
     pub cache_capacity: usize,
+    /// Intra-layer tile workers: `> 1` splits every MAC layer's lane
+    /// dimension of each single inference across a dedicated tile pool
+    /// (so one large request uses all cores, not just cross-request
+    /// parallelism); `0`/`1` disables tiling. The tile pool is separate
+    /// from the request pool — sharing one pool for both levels could
+    /// deadlock with every request worker waiting on tile jobs.
+    pub tile_threads: usize,
 }
 
 impl Default for BatchOptions {
@@ -252,8 +259,9 @@ impl Default for BatchOptions {
             threads: 0,
             clock_hz: 100_000_000,
             verify: false,
-            exec_mode: ExecMode::Compiled,
+            exec_mode: ExecMode::default(),
             cache_capacity: PreparedCache::DEFAULT_CAPACITY,
+            tile_threads: 0,
         }
     }
 }
@@ -270,6 +278,9 @@ struct ReqStat {
 /// The batched multi-design inference engine.
 pub struct BatchEngine {
     pool: JobPool,
+    /// Dedicated pool for intra-layer lane tiling (separate from the
+    /// request pool to rule out cross-level deadlock).
+    tiling: Option<TilePool>,
     cache: Arc<PreparedCache>,
     opts: BatchOptions,
 }
@@ -278,18 +289,24 @@ impl BatchEngine {
     /// Engine with a fresh cache (LRU-bounded by `opts.cache_capacity`).
     pub fn new(opts: BatchOptions) -> Self {
         let cache = Arc::new(PreparedCache::with_capacity(opts.cache_capacity));
-        BatchEngine { pool: JobPool::new(opts.threads), cache, opts }
+        BatchEngine::with_cache(opts, cache)
     }
 
     /// Engine sharing an existing cache (e.g. one cache across several
     /// thread-count configurations in a bench sweep).
     pub fn with_cache(opts: BatchOptions, cache: Arc<PreparedCache>) -> Self {
-        BatchEngine { pool: JobPool::new(opts.threads), cache, opts }
+        let tiling = (opts.tile_threads > 1).then(|| TilePool::new(opts.tile_threads));
+        BatchEngine { pool: JobPool::new(opts.threads), tiling, cache, opts }
     }
 
     /// Worker threads serving this engine.
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Intra-layer tile workers (0 when tiling is disabled).
+    pub fn tile_workers(&self) -> usize {
+        self.tiling.as_ref().map_or(0, TilePool::workers)
     }
 
     /// The prepared-model cache (inspection / sharing).
@@ -308,7 +325,12 @@ impl BatchEngine {
 
     /// Build the execution backend for a spec under this engine's options.
     fn backend(&self, assignment: &DesignAssignment) -> Box<dyn ExecBackend> {
-        assigned_backend_with_mode(assignment, self.opts.verify, self.opts.exec_mode)
+        assigned_backend_tiled(
+            assignment,
+            self.opts.verify,
+            self.opts.exec_mode,
+            self.tiling.clone(),
+        )
     }
 
     /// Fetch (or build) the prepared model for a spec.
@@ -486,23 +508,49 @@ mod tests {
     }
 
     #[test]
-    fn interpreted_engine_matches_compiled_engine() {
-        // The full batched path under the interpreted oracle must land on
-        // the same cycles, stalls and predictions as the compiled default.
+    fn every_exec_mode_matches_batched_default_engine() {
+        // The full engine path under the per-lane compiled mode and the
+        // interpreted oracle must land on the same cycles, stalls and
+        // predictions as the batch-amortized default.
         let spec = tiny_spec(DesignKind::Csa);
         let reqs = BatchEngine::gen_requests("dscnn", 3, 31).unwrap();
-        let compiled = BatchEngine::new(BatchOptions::default());
-        let oracle = BatchEngine::new(BatchOptions {
-            exec_mode: ExecMode::Interpreted,
-            ..Default::default()
-        });
-        let a = compiled.run_batch(&spec, reqs.clone()).unwrap();
-        let b = oracle.run_batch(&spec, reqs).unwrap();
-        assert_eq!(a.total_cycles, b.total_cycles);
-        assert_eq!(a.cfu_cycles, b.cfu_cycles);
-        assert_eq!(a.cfu_stalls, b.cfu_stalls);
-        assert_eq!(a.loaded_bytes, b.loaded_bytes);
-        assert_eq!(a.predictions, b.predictions);
+        let batched = BatchEngine::new(BatchOptions::default());
+        let a = batched.run_batch(&spec, reqs.clone()).unwrap();
+        for mode in [ExecMode::Compiled, ExecMode::Interpreted] {
+            let other = BatchEngine::new(BatchOptions { exec_mode: mode, ..Default::default() });
+            let b = other.run_batch(&spec, reqs.clone()).unwrap();
+            assert_eq!(a.total_cycles, b.total_cycles, "{}", mode.name());
+            assert_eq!(a.cfu_cycles, b.cfu_cycles, "{}", mode.name());
+            assert_eq!(a.cfu_stalls, b.cfu_stalls, "{}", mode.name());
+            assert_eq!(a.loaded_bytes, b.loaded_bytes, "{}", mode.name());
+            assert_eq!(a.predictions, b.predictions, "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn intra_layer_tiling_invariant_and_composes_with_request_threads() {
+        // tile_threads must change neither outputs nor any simulated
+        // counter, at any (request-threads × tile-threads) combination.
+        let spec = tiny_spec(DesignKind::Csa);
+        let reqs = BatchEngine::gen_requests("dscnn", 4, 51).unwrap();
+        let base = BatchEngine::new(BatchOptions { threads: 1, ..Default::default() });
+        assert_eq!(base.tile_workers(), 0, "tiling off by default");
+        let a = base.run_batch(&spec, reqs.clone()).unwrap();
+        for (threads, tile_threads) in [(1usize, 3usize), (2, 2), (3, 4)] {
+            let engine = BatchEngine::new(BatchOptions {
+                threads,
+                tile_threads,
+                ..Default::default()
+            });
+            assert_eq!(engine.tile_workers(), tile_threads);
+            let b = engine.run_batch(&spec, reqs.clone()).unwrap();
+            let tag = format!("threads={threads} tiles={tile_threads}");
+            assert_eq!(a.total_cycles, b.total_cycles, "{tag}: cycles");
+            assert_eq!(a.cfu_cycles, b.cfu_cycles, "{tag}: cfu");
+            assert_eq!(a.cfu_stalls, b.cfu_stalls, "{tag}: stalls");
+            assert_eq!(a.loaded_bytes, b.loaded_bytes, "{tag}: bytes");
+            assert_eq!(a.predictions, b.predictions, "{tag}: predictions");
+        }
     }
 
     #[test]
@@ -550,7 +598,7 @@ mod tests {
         // Agreement with the heterogeneous engine driven directly.
         let (prepared, _) = engine.prepared(&spec).unwrap();
         let backend =
-            assigned_backend_with_mode(&assignment, false, ExecMode::Compiled);
+            crate::simulator::assigned_backend_with_mode(&assignment, false, ExecMode::Compiled);
         let mut cycles = 0u64;
         for r in &reqs {
             cycles += backend.execute(&prepared, r).unwrap().total_cycles;

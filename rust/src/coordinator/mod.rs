@@ -2,7 +2,9 @@
 //! threads, experiment orchestration, and the request-serving loop.
 //!
 //! - [`scheduler`] — a generic threaded job pool (std threads + channels;
-//!   no tokio offline), with per-item and chunked parallel map,
+//!   no tokio offline), with per-item, chunked and scoped (borrowing)
+//!   parallel map plus the [`scheduler::TilePool`] handle used for
+//!   intra-layer lane tiling,
 //! - [`batch`] — engine v2: batched multi-design inference with a
 //!   prepared-model cache and aggregated per-batch reports,
 //! - [`runner`] — experiment orchestration: build model → prune → prepare
@@ -18,5 +20,5 @@ pub mod serve;
 
 pub use batch::{BatchEngine, BatchOptions, BatchReport, BatchSpec};
 pub use runner::{run_experiment, DesignResult, ExperimentResult};
-pub use scheduler::JobPool;
+pub use scheduler::{JobPool, TilePool};
 pub use serve::{ServeMetrics, ServeOptions, Server};

@@ -2,9 +2,11 @@
 //!
 //! A fixed pool of std threads consuming boxed jobs from a shared
 //! channel; results are returned in submission order. This is the
-//! parallel substrate for the experiment runner (designs × batches) and
-//! the benchmark sweeps.
+//! parallel substrate for the experiment runner (designs × batches), the
+//! benchmark sweeps, and — via [`JobPool::scoped_map`] /
+//! [`TilePool`] — the intra-layer lane tiling of a single inference.
 
+use std::fmt;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -38,7 +40,20 @@ impl JobPool {
                             guard.recv()
                         };
                         match job {
-                            Ok(job) => job(),
+                            // Contain panicking jobs: an unwinding job
+                            // would otherwise kill this worker, stranding
+                            // queued jobs (their result senders keep the
+                            // channel open, so a scoped_map caller would
+                            // hang instead of reaching its abort path)
+                            // and shrinking the pool for the rest of the
+                            // process. The caller still observes the
+                            // missing result (map panics, scoped_map
+                            // aborts) — only the pool stays healthy.
+                            Ok(job) => {
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                            }
                             Err(_) => break, // channel closed: shut down
                         }
                     })
@@ -125,6 +140,118 @@ impl JobPool {
         }
         results.into_iter().flat_map(|r| r.unwrap()).collect()
     }
+
+    /// [`JobPool::map`] over items and a closure that may **borrow from
+    /// the caller's stack** — the substrate for intra-layer tiling,
+    /// where each tile job reads the layer's prepared weights and input
+    /// activations by reference instead of `Arc`-wrapping every layer
+    /// input.
+    ///
+    /// The call does not return until every submitted job has finished
+    /// (all results are received below), which is what makes handing
+    /// non-`'static` borrows to the pool's worker threads sound; the
+    /// lifetime is erased only for the window this function provably
+    /// outlives. If a job panics on a worker, its result can never
+    /// arrive and the borrows it holds can no longer be proven dead, so
+    /// the process aborts rather than risk the caller unwinding while a
+    /// worker still references its stack (mirroring `std::thread::scope`
+    /// semantics, where a panicked scope job also tears down the scope).
+    pub fn scoped_map<'s, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 's,
+        R: Send + 's,
+        F: Fn(T) -> R + Send + Sync + 's,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            let job: Box<dyn FnOnce() + Send + 's> = Box::new(move || {
+                let r = f(item);
+                // Release this job's share of the closure (and with it
+                // every `'s` borrow the job still holds) BEFORE
+                // signalling completion: once the caller has received
+                // all n results, no worker can still be between send and
+                // drop while referencing caller-borrowed data. The
+                // result `r` itself is moved into the channel and owned
+                // by the caller before scoped_map returns.
+                drop(f);
+                let _ = rtx.send((i, r));
+            });
+            // SAFETY: the job's borrows live for 's, and this function
+            // blocks until every job has sent its result (or aborts the
+            // process if one cannot), so no worker can touch the
+            // borrowed data after scoped_map returns. The transmute only
+            // erases the lifetime parameter of an otherwise identical
+            // fat pointer.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 's>, Job>(job)
+            };
+            self.tx
+                .as_ref()
+                .expect("pool already shut down")
+                .send(job)
+                .expect("worker pool hung up");
+        }
+        drop(rtx);
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut received = 0usize;
+        while received < n {
+            match rrx.recv() {
+                Ok((i, r)) => {
+                    results[i] = Some(r);
+                    received += 1;
+                }
+                // A tile job panicked on a worker: its borrows into our
+                // caller's frame cannot be proven released, so unwinding
+                // from here would be unsound. Fail hard instead.
+                Err(_) => {
+                    eprintln!("scoped_map: worker died before completing a scoped job; aborting");
+                    std::process::abort();
+                }
+            }
+        }
+        results.into_iter().map(|r| r.unwrap()).collect()
+    }
+}
+
+/// Cloneable, `Debug`-able handle to a [`JobPool`] dedicated to
+/// intra-layer lane tiling. Kept separate from any request-level pool:
+/// tile jobs are submitted from inside request jobs and block on their
+/// completion, so sharing one pool for both levels could deadlock with
+/// every worker waiting on tile jobs that have no worker left to run
+/// them.
+#[derive(Clone)]
+pub struct TilePool {
+    pool: Arc<JobPool>,
+}
+
+impl TilePool {
+    /// Pool with `threads` tile workers (0 = available parallelism).
+    pub fn new(threads: usize) -> Self {
+        TilePool { pool: Arc::new(JobPool::new(threads)) }
+    }
+
+    /// Number of tile workers (the natural tile count).
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// The underlying pool (for [`JobPool::scoped_map`]).
+    pub fn pool(&self) -> &JobPool {
+        &self.pool
+    }
+}
+
+impl fmt::Debug for TilePool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TilePool({} workers)", self.workers())
+    }
 }
 
 impl Drop for JobPool {
@@ -178,6 +305,36 @@ mod tests {
     fn zero_threads_uses_available_parallelism() {
         let pool = JobPool::new(0);
         assert!(pool.workers() >= 1);
+    }
+
+    #[test]
+    fn scoped_map_borrows_caller_stack() {
+        let pool = JobPool::new(3);
+        // Borrowed, non-'static input data: the whole point of the API.
+        let base: Vec<u64> = (0..40).collect();
+        let slice: &[u64] = &base;
+        let out = pool.scoped_map((0..base.len()).collect::<Vec<usize>>(), |i| slice[i] * 2);
+        assert_eq!(out, base.iter().map(|x| x * 2).collect::<Vec<u64>>());
+        // Empty input: no jobs, empty output.
+        let e: Vec<u64> = pool.scoped_map(Vec::<usize>::new(), |i| slice[i]);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_under_contention() {
+        let pool = JobPool::new(4);
+        let data: Vec<usize> = (0..200).collect();
+        let out = pool.scoped_map(data.clone(), |x| x * x);
+        assert_eq!(out, data.iter().map(|x| x * x).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn tile_pool_reports_workers() {
+        let tp = TilePool::new(2);
+        assert_eq!(tp.workers(), 2);
+        assert_eq!(format!("{tp:?}"), "TilePool(2 workers)");
+        let tp2 = tp.clone();
+        assert_eq!(tp2.workers(), 2);
     }
 
     #[test]

@@ -102,7 +102,7 @@ impl Server {
         let backend: Arc<dyn ExecBackend> = Arc::from(assigned_backend_with_mode(
             assignment,
             opts.verify,
-            crate::kernels::ExecMode::Compiled,
+            crate::kernels::ExecMode::default(),
         ));
         let prepared = Arc::new(backend.prepare(graph)?);
         Ok(Server {

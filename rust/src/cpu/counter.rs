@@ -201,7 +201,29 @@ impl CycleCounter {
         );
     }
 
-    /// Merge another counter (parallel layer simulation).
+    /// Flush a [`BulkCharge`] `times` over: the batch-amortized charge
+    /// path. Every counter field is a linear function of the charge
+    /// counts, so one scaled flush lands on exactly the totals `times`
+    /// individual [`CycleCounter::charge`] calls would — the invariant
+    /// that keeps loop-interchanged (batched) execution cycle-identical
+    /// to the row-major walk (asserted below and by the differential
+    /// tier).
+    #[inline]
+    pub fn charge_scaled(&mut self, c: &BulkCharge, times: u64) {
+        self.charge_bulk(
+            c.alu * times,
+            c.loads * times,
+            c.stores * times,
+            c.branches_taken * times,
+            c.branches_not_taken * times,
+            c.cfu_issues * times,
+            c.cfu_stalls * times,
+        );
+    }
+
+    /// Merge another counter (parallel layer/tile simulation): every
+    /// observable total is summed, so merging per-tile counters in tile
+    /// order reproduces the single-counter totals exactly.
     pub fn merge(&mut self, other: &CycleCounter) {
         self.cycles += other.cycles;
         for i in 0..self.instrs.len() {
@@ -312,6 +334,33 @@ mod tests {
         assert_eq!(a.total_instrs(), b.total_instrs());
         assert_eq!(a.cfu_cycles(), b.cfu_cycles());
         assert_eq!(a.loaded_bytes(), b.loaded_bytes());
+    }
+
+    #[test]
+    fn charge_scaled_equals_repeated_charges() {
+        let c = BulkCharge {
+            alu: 5,
+            loads: 4,
+            stores: 1,
+            branches_taken: 3,
+            branches_not_taken: 1,
+            cfu_issues: 6,
+            cfu_stalls: 9,
+        };
+        for model in [CostModel::vexriscv(), CostModel::mac_only()] {
+            let mut a = CycleCounter::new(model.clone());
+            for _ in 0..7 {
+                a.charge(&c);
+            }
+            let mut b = CycleCounter::new(model);
+            b.charge_scaled(&c, 7);
+            assert_eq!(a.cycles(), b.cycles());
+            assert_eq!(a.total_instrs(), b.total_instrs());
+            assert_eq!(a.cfu_cycles(), b.cfu_cycles());
+            assert_eq!(a.cfu_stalls(), b.cfu_stalls());
+            assert_eq!(a.loaded_bytes(), b.loaded_bytes());
+            assert_eq!(a.stored_bytes(), b.stored_bytes());
+        }
     }
 
     #[test]

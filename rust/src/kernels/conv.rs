@@ -1,10 +1,12 @@
 //! CFU-accelerated convolution kernel (normal + depthwise).
 
 use super::lane::{
-    prepare_lanes, run_lane, run_lane_compiled, PreparedLanes, INPUT_COST_DENSE, INPUT_COST_GATHER,
+    prepare_lanes, run_lane, run_lane_batched, run_lane_compiled, PreparedLanes,
+    INPUT_COST_DENSE, INPUT_COST_GATHER,
 };
-use super::{ExecMode, KernelRun};
+use super::{tile_ranges, ExecMode, KernelRun};
 use crate::cfu::AnyCfu;
+use crate::coordinator::scheduler::JobPool;
 use crate::cpu::{CostModel, CycleCounter};
 use crate::encoding::pack::{pack4_i8, pack4_le};
 use crate::error::{Error, Result};
@@ -70,8 +72,7 @@ impl PreparedConv {
                 }
             }
             let lanes = prepare_lanes(&padded, lane_len, design)?;
-            let dw_taps =
-                (0..taps).map(|t| (t / op.kw, t % op.kw)).collect();
+            let dw_taps = (0..taps).map(|t| (t / op.kw, t % op.kw)).collect();
             Ok(PreparedConv {
                 op: Self::with_effective(op, &lanes, lane_len),
                 design,
@@ -122,14 +123,16 @@ impl PreparedConv {
     }
 
     /// Run the kernel over an NHWC input under a CPU cost model, through
-    /// the compiled lane schedules (the default execution path).
+    /// the schedule arena's batch-amortized path (the default execution
+    /// mode).
     pub fn run(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
-        self.run_with_mode(input, model, ExecMode::Compiled)
+        self.run_with_mode(input, model, ExecMode::default())
     }
 
     /// Run under an explicit [`ExecMode`] — `Interpreted` is the
-    /// per-instruction CFU oracle the compiled path is differentially
-    /// tested against (bit-identical outputs and cycle totals).
+    /// per-instruction CFU oracle the compiled and batched paths are
+    /// differentially tested against (bit-identical outputs and cycle
+    /// totals).
     pub fn run_with_mode(
         &self,
         input: &QTensor,
@@ -137,6 +140,7 @@ impl PreparedConv {
         mode: ExecMode,
     ) -> Result<KernelRun> {
         match mode {
+            ExecMode::Batched => self.run_batched(input, model),
             ExecMode::Compiled => self.run_compiled(input, model),
             ExecMode::Interpreted => self.run_interpreted(input, model),
         }
@@ -199,9 +203,233 @@ impl PreparedConv {
         }
     }
 
-    /// Table-driven execution: per-lane compiled schedules plus
-    /// packed-input reuse (each valid input window word is packed once
-    /// per output position and shared across all `out_c` lanes).
+    /// Batch-amortized execution over a contiguous `ocs` range of output
+    /// channels (the lane-tiling dimension): for every output position
+    /// the input window is packed once per image, then each output
+    /// channel's lane slices are walked once with **all images streamed
+    /// against each visited block** ([`run_lane_batched`]). `out` is a
+    /// `positions × ocs.len()` buffer (for the full range it *is* the
+    /// NHWC output layout).
+    ///
+    /// Cycle accounting is exact: the per-(image, channel) bookkeeping —
+    /// accumulator init, bounds tests, lane setup, requantize, bias load
+    /// and store — depends only on the output position, so it is charged
+    /// in one scaled bulk flush; lane charges flush scaled by the image
+    /// count inside [`run_lane_batched`].
+    fn run_lanes_batched(
+        &self,
+        x: &[i8],
+        geom: (usize, usize, usize, usize, usize, i64, i64),
+        ocs: std::ops::Range<usize>,
+        out: &mut [i8],
+        counter: &mut CycleCounter,
+    ) {
+        let op = &self.op;
+        let (n, in_h, in_w, out_h, out_w, pad_h, pad_w) = geom;
+        let width = ocs.len();
+        let input_offset = op.input_offset();
+        let per = (n * width) as u64;
+        let mut accs = vec![0i32; n];
+        if op.depthwise {
+            let taps = op.kh * op.kw;
+            let input_zp = op.input_params.zero_point.clamp(-128, 127) as i8;
+            let mut tap_base = vec![-1i64; n * taps];
+            for oh in 0..out_h {
+                for ow in 0..out_w {
+                    for b in 0..n {
+                        self.fill_dw_tap_bases(
+                            &mut tap_base[b * taps..(b + 1) * taps],
+                            b,
+                            oh,
+                            ow,
+                            (in_h, in_w, pad_h, pad_w),
+                        );
+                    }
+                    // acc-init + requantize ALU, bias load, store per
+                    // (image, channel) — identical to the row-major flush.
+                    counter.charge_bulk(per * 7, per, per, 0, 0, 0, 0);
+                    for oc in ocs.clone() {
+                        accs.fill(op.bias[oc]);
+                        run_lane_batched(
+                            self.lanes.lane_schedule(oc),
+                            input_offset,
+                            INPUT_COST_GATHER,
+                            |b, j| {
+                                dw_gather_word(
+                                    x,
+                                    &tap_base[b * taps..(b + 1) * taps],
+                                    taps,
+                                    oc,
+                                    input_zp,
+                                    j,
+                                )
+                            },
+                            &mut accs,
+                            counter,
+                        );
+                        let col = oc - ocs.start;
+                        for (b, &acc) in accs.iter().enumerate() {
+                            let p = (b * out_h + oh) * out_w + ow;
+                            out[p * width + col] = op.requant.apply(acc);
+                        }
+                    }
+                }
+            }
+        } else {
+            let nb = op.in_c / 4;
+            let kk = op.kh * op.kw;
+            let mut win_words = vec![0u32; n * kk * nb];
+            let mut row_ok = vec![false; op.kh];
+            let mut tap_ok = vec![false; kk];
+            let mut valid: Vec<(usize, usize, usize)> = Vec::with_capacity(kk);
+            for oh in 0..out_h {
+                for ow in 0..out_w {
+                    // Window validity is batch-invariant; the packed
+                    // words are per image, packed once and reused by
+                    // every output channel (the interpreted oracle
+                    // re-packs per oc).
+                    for kh in 0..op.kh {
+                        let ih = (oh * op.stride + kh) as i64 - pad_h;
+                        let ok_h = ih >= 0 && ih < in_h as i64;
+                        row_ok[kh] = ok_h;
+                        if !ok_h {
+                            continue;
+                        }
+                        for kw in 0..op.kw {
+                            let t = kh * op.kw + kw;
+                            let iw = (ow * op.stride + kw) as i64 - pad_w;
+                            let ok_w = iw >= 0 && iw < in_w as i64;
+                            tap_ok[t] = ok_w;
+                            if !ok_w {
+                                continue;
+                            }
+                            for b in 0..n {
+                                let base =
+                                    ((b * in_h + ih as usize) * in_w + iw as usize) * op.in_c;
+                                let dst = &mut win_words[(b * kk + t) * nb..(b * kk + t + 1) * nb];
+                                for (j, w) in dst.iter_mut().enumerate() {
+                                    *w = pack4_le(&x[base + j * 4..base + j * 4 + 4]);
+                                }
+                            }
+                        }
+                    }
+                    // Per-(image, channel) bookkeeping — identical
+                    // pattern to the interpreted loop, batch- and
+                    // channel-invariant, so computed once per position:
+                    // acc init, per-row and per-tap bounds tests, lane
+                    // setup, requantize.
+                    valid.clear();
+                    let mut alu_pp = 1u64;
+                    let mut taken_pp = 0u64;
+                    let mut nt_pp = 0u64;
+                    for kh in 0..op.kh {
+                        alu_pp += 1;
+                        if !row_ok[kh] {
+                            taken_pp += 1;
+                            continue;
+                        }
+                        nt_pp += 1;
+                        for kw in 0..op.kw {
+                            let t = kh * op.kw + kw;
+                            alu_pp += 1;
+                            if !tap_ok[t] {
+                                taken_pp += 1;
+                                continue;
+                            }
+                            nt_pp += 1;
+                            alu_pp += 2; // lane base setup
+                            valid.push((kh, kw, t));
+                        }
+                    }
+                    alu_pp += 6; // requantize
+                    counter.charge_bulk(per * alu_pp, per, per, per * taken_pp, per * nt_pp, 0, 0);
+                    for oc in ocs.clone() {
+                        accs.fill(op.bias[oc]);
+                        for &(kh, kw, t) in &valid {
+                            let lane_idx = (oc * op.kh + kh) * op.kw + kw;
+                            run_lane_batched(
+                                self.lanes.lane_schedule(lane_idx),
+                                input_offset,
+                                INPUT_COST_DENSE,
+                                |b, j| win_words[(b * kk + t) * nb + j],
+                                &mut accs,
+                                counter,
+                            );
+                        }
+                        let col = oc - ocs.start;
+                        for (b, &acc) in accs.iter().enumerate() {
+                            let p = (b * out_h + oh) * out_w + ow;
+                            out[p * width + col] = op.requant.apply(acc);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The default batch-amortized path over the full channel range.
+    fn run_batched(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
+        let op = &self.op;
+        let geom = self.check_geometry(input)?;
+        let (n, _, _, out_h, out_w, _, _) = geom;
+        let mut out = QTensor::zeros(Shape::nhwc(n, out_h, out_w, op.out_c), op.output_params);
+        let mut counter = CycleCounter::new(model.clone());
+        self.run_lanes_batched(input.data(), geom, 0..op.out_c, out.data_mut(), &mut counter);
+        Ok(KernelRun { output: out, counter })
+    }
+
+    /// Batched execution with the output-channel (lane) dimension tiled
+    /// across a worker pool: each tile runs the batch-amortized loop
+    /// over its contiguous channel range with its own [`CycleCounter`]
+    /// into a tile-local buffer; tiles merge *deterministically in tile
+    /// order*, so outputs and every counter total are invariant in the
+    /// tile/thread count (asserted by the differential tier).
+    ///
+    /// Host-side trade-off: the per-position window packing (and
+    /// depthwise tap-base fill) is channel-independent, so each tile
+    /// repeats it for its own range — tiling pays off when the per-lane
+    /// MAC work (`out_c × lane length`) dominates that setup, which is
+    /// the case for the compute-heavy layers tiling targets. Layers
+    /// where packing dominates (tiny `out_c`, large spatial extent)
+    /// gain little; simulated cycles are unaffected either way.
+    pub fn run_tiled(
+        &self,
+        input: &QTensor,
+        model: &CostModel,
+        pool: &JobPool,
+        tiles: usize,
+    ) -> Result<KernelRun> {
+        let op = &self.op;
+        let geom = self.check_geometry(input)?;
+        let (n, _, _, out_h, out_w, _, _) = geom;
+        let positions = n * out_h * out_w;
+        let x = input.data();
+        let ranges = tile_ranges(op.out_c, tiles);
+        let parts: Vec<(Vec<i8>, CycleCounter)> = pool.scoped_map(ranges.clone(), |r| {
+            let mut counter = CycleCounter::new(model.clone());
+            let mut buf = vec![0i8; positions * r.len()];
+            self.run_lanes_batched(x, geom, r, &mut buf, &mut counter);
+            (buf, counter)
+        });
+        let mut out = QTensor::zeros(Shape::nhwc(n, out_h, out_w, op.out_c), op.output_params);
+        let mut counter = CycleCounter::new(model.clone());
+        let out_data = out.data_mut();
+        for (range, (buf, c)) in ranges.into_iter().zip(parts.iter()) {
+            counter.merge(c);
+            let width = range.len();
+            for p in 0..positions {
+                out_data[(p * op.out_c + range.start)..(p * op.out_c + range.end)]
+                    .copy_from_slice(&buf[p * width..(p + 1) * width]);
+            }
+        }
+        Ok(KernelRun { output: out, counter })
+    }
+
+    /// Table-driven row-major execution: per-lane compiled schedules
+    /// plus packed-input reuse (each valid input window word is packed
+    /// once per output position and shared across all `out_c` lanes).
+    /// Kept as the pre-interchange comparison point for the batched
+    /// default.
     fn run_compiled(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
         let op = &self.op;
         let (n, in_h, in_w, out_h, out_w, pad_h, pad_w) = self.check_geometry(input)?;
@@ -491,10 +719,25 @@ mod tests {
         .unwrap()
     }
 
-    fn random_input(seed: u64, h: usize, w: usize, c: usize) -> QTensor {
+    fn random_input_n(seed: u64, n: usize, h: usize, w: usize, c: usize) -> QTensor {
         let mut rng = Pcg32::new(seed);
-        let data: Vec<i8> = (0..h * w * c).map(|_| rng.range_i32(-128, 127) as i8).collect();
-        QTensor::new(Shape::nhwc(1, h, w, c), data, qp(0.05, -3)).unwrap()
+        let data: Vec<i8> =
+            (0..n * h * w * c).map(|_| rng.range_i32(-128, 127) as i8).collect();
+        QTensor::new(Shape::nhwc(n, h, w, c), data, qp(0.05, -3)).unwrap()
+    }
+
+    fn random_input(seed: u64, h: usize, w: usize, c: usize) -> QTensor {
+        random_input_n(seed, 1, h, w, c)
+    }
+
+    fn assert_runs_identical(a: &KernelRun, b: &KernelRun, tag: &str) {
+        assert_eq!(a.output.data(), b.output.data(), "{tag}: outputs");
+        assert_eq!(a.counter.cycles(), b.counter.cycles(), "{tag}: cycles");
+        assert_eq!(a.counter.total_instrs(), b.counter.total_instrs(), "{tag}: instrs");
+        assert_eq!(a.counter.cfu_cycles(), b.counter.cfu_cycles(), "{tag}: cfu");
+        assert_eq!(a.counter.cfu_stalls(), b.counter.cfu_stalls(), "{tag}: stalls");
+        assert_eq!(a.counter.loaded_bytes(), b.counter.loaded_bytes(), "{tag}: loads");
+        assert_eq!(a.counter.stored_bytes(), b.counter.stored_bytes(), "{tag}: stores");
     }
 
     #[test]
@@ -534,44 +777,73 @@ mod tests {
     }
 
     #[test]
-    fn compiled_equals_interpreted_outputs_and_cycles() {
+    fn all_modes_equal_outputs_and_cycles() {
         // Normal conv with Same padding, strided Valid, and depthwise
-        // with a padded tail (9 taps → 12-lane): compiled schedules must
-        // match the interpreted CFU oracle on outputs AND every counter.
+        // with a padded tail (9 taps → 12-lane), at image batch sizes 1
+        // and 3: the batched default and the per-lane compiled path must
+        // both match the interpreted CFU oracle on outputs AND every
+        // counter.
         let cases = [
-            (random_conv(31, 8, 8, 3, 1, Padding::Same, false, 0.5), random_input(32, 6, 6, 8)),
+            (
+                random_conv(31, 8, 8, 3, 1, Padding::Same, false, 0.5),
+                random_input_n(32, 3, 6, 6, 8),
+            ),
             (
                 random_conv(33, 4, 12, 3, 2, Padding::Valid, false, 0.6),
-                random_input(34, 9, 9, 12),
+                random_input_n(34, 1, 9, 9, 12),
             ),
-            (random_conv(35, 8, 8, 3, 1, Padding::Same, true, 0.4), random_input(36, 5, 5, 8)),
+            (
+                random_conv(35, 8, 8, 3, 1, Padding::Same, true, 0.4),
+                random_input_n(36, 3, 5, 5, 8),
+            ),
         ];
         for (op, input) in &cases {
             for design in DesignKind::ALL {
                 let prep = PreparedConv::new(op, design).unwrap();
                 let model = CostModel::vexriscv();
+                let b = prep.run_with_mode(input, &model, ExecMode::Batched).unwrap();
                 let c = prep.run_with_mode(input, &model, ExecMode::Compiled).unwrap();
                 let i = prep.run_with_mode(input, &model, ExecMode::Interpreted).unwrap();
                 let tag = format!("{design} depthwise={}", op.depthwise);
-                assert_eq!(c.output.data(), i.output.data(), "{tag}: outputs");
-                assert_eq!(c.counter.cycles(), i.counter.cycles(), "{tag}: cycles");
-                assert_eq!(c.counter.total_instrs(), i.counter.total_instrs(), "{tag}: instrs");
-                assert_eq!(c.counter.cfu_cycles(), i.counter.cfu_cycles(), "{tag}: cfu");
-                assert_eq!(c.counter.cfu_stalls(), i.counter.cfu_stalls(), "{tag}: stalls");
-                assert_eq!(c.counter.loaded_bytes(), i.counter.loaded_bytes(), "{tag}: loads");
-                assert_eq!(c.counter.stored_bytes(), i.counter.stored_bytes(), "{tag}: stores");
+                assert_runs_identical(&b, &c, &format!("{tag} batched-vs-compiled"));
+                assert_runs_identical(&b, &i, &format!("{tag} batched-vs-oracle"));
             }
         }
     }
 
     #[test]
-    fn default_run_is_compiled() {
+    fn tiled_equals_batched_any_tile_count() {
+        let cases = [
+            random_conv(41, 8, 8, 3, 1, Padding::Same, false, 0.5),
+            random_conv(43, 8, 8, 3, 1, Padding::Same, true, 0.4),
+        ];
+        let input = random_input_n(42, 2, 5, 5, 8);
+        let model = CostModel::vexriscv();
+        for op in &cases {
+            for design in [DesignKind::Csa, DesignKind::BaselineSimd] {
+                let prep = PreparedConv::new(op, design).unwrap();
+                let base = prep.run_with_mode(&input, &model, ExecMode::Batched).unwrap();
+                for tiles in [1usize, 3, 8, 16] {
+                    let pool = JobPool::new(2);
+                    let t = prep.run_tiled(&input, &model, &pool, tiles).unwrap();
+                    assert_runs_identical(
+                        &base,
+                        &t,
+                        &format!("{design} dw={} tiles={tiles}", op.depthwise),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_run_is_batched() {
         let op = random_conv(37, 4, 8, 3, 1, Padding::Same, false, 0.3);
         let input = random_input(38, 5, 5, 8);
         let prep = PreparedConv::new(&op, DesignKind::Csa).unwrap();
         let model = CostModel::vexriscv();
         let a = prep.run(&input, &model).unwrap();
-        let b = prep.run_with_mode(&input, &model, ExecMode::Compiled).unwrap();
+        let b = prep.run_with_mode(&input, &model, ExecMode::Batched).unwrap();
         assert_eq!(a.output.data(), b.output.data());
         assert_eq!(a.counter.cycles(), b.counter.cycles());
     }

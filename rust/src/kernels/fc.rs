@@ -1,8 +1,11 @@
 //! CFU-accelerated fully-connected kernel.
 
-use super::lane::{prepare_lanes, run_lane, run_lane_compiled, PreparedLanes, INPUT_COST_DENSE};
-use super::{ExecMode, KernelRun};
+use super::lane::{
+    prepare_lanes, run_lane, run_lane_batched, run_lane_compiled, PreparedLanes, INPUT_COST_DENSE,
+};
+use super::{tile_ranges, ExecMode, KernelRun};
 use crate::cfu::AnyCfu;
+use crate::coordinator::scheduler::JobPool;
 use crate::cpu::{CostModel, CycleCounter};
 use crate::encoding::pack::pack4_le;
 use crate::error::{Error, Result};
@@ -41,10 +44,83 @@ impl PreparedFc {
         &self.op
     }
 
-    /// Run over a batch of flattened inputs through the compiled lane
-    /// schedules (the default execution path).
+    /// Validate the flattened input and return the row count.
+    fn check_batch(&self, input: &QTensor) -> Result<usize> {
+        let numel = input.shape().numel();
+        if numel % self.op.in_n != 0 {
+            return Err(Error::Shape(format!(
+                "{}: input numel {numel} not divisible by in_n {}",
+                self.op.name, self.op.in_n
+            )));
+        }
+        Ok(numel / self.op.in_n)
+    }
+
+    /// Pack every input row into CFU operand words once: `batch × nb`
+    /// words, row-major. Both the batched path and every lane of the
+    /// per-lane compiled path read from this shared packing.
+    fn pack_rows(&self, x: &[i8], batch: usize) -> Vec<u32> {
+        let in_n = self.op.in_n;
+        let nb = in_n / 4;
+        let mut xwords = vec![0u32; batch * nb];
+        for b in 0..batch {
+            let xrow = &x[b * in_n..(b + 1) * in_n];
+            for (j, w) in xwords[b * nb..(b + 1) * nb].iter_mut().enumerate() {
+                *w = pack4_le(&xrow[j * 4..j * 4 + 4]);
+            }
+        }
+        xwords
+    }
+
+    /// Batch-amortized execution of a contiguous range of output lanes:
+    /// each lane's arena slice is walked once, streaming every packed
+    /// input row against each visited block. `out` is a `batch ×
+    /// lanes.len()` row-major tile buffer (for the full range it *is*
+    /// the output tensor's layout).
+    ///
+    /// Per-(row, output) bookkeeping — bias load, accumulator init, lane
+    /// base setup, requantize, store — is charged in one scaled bulk
+    /// flush, identical in total to the interpreted loop's per-output
+    /// charges.
+    fn run_lanes_batched(
+        &self,
+        xwords: &[u32],
+        batch: usize,
+        lanes: std::ops::Range<usize>,
+        out: &mut [i8],
+        counter: &mut CycleCounter,
+    ) {
+        let op = &self.op;
+        let nb = op.in_n / 4;
+        let width = lanes.len();
+        let input_offset = op.input_offset();
+        // 1 bias load + 9 ALU (init 1, lane setup 2, requantize 6) + 1
+        // store per (row, output) — the same totals the row-major paths
+        // charge piecewise.
+        let per = (batch * width) as u64;
+        counter.charge_bulk(per * 9, per, per, 0, 0, 0, 0);
+        let mut accs = vec![0i32; batch];
+        for o in lanes.clone() {
+            accs.fill(op.bias[o]);
+            run_lane_batched(
+                self.lanes.lane_schedule(o),
+                input_offset,
+                INPUT_COST_DENSE,
+                |b, j| xwords[b * nb + j],
+                &mut accs,
+                counter,
+            );
+            let col = o - lanes.start;
+            for (b, &acc) in accs.iter().enumerate() {
+                out[b * width + col] = op.requant.apply(acc);
+            }
+        }
+    }
+
+    /// Run over a batch of flattened inputs through the schedule arena's
+    /// batch-amortized path (the default execution mode).
     pub fn run(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
-        self.run_with_mode(input, model, ExecMode::Compiled)
+        self.run_with_mode(input, model, ExecMode::default())
     }
 
     /// Run under an explicit [`ExecMode`].
@@ -55,33 +131,33 @@ impl PreparedFc {
         mode: ExecMode,
     ) -> Result<KernelRun> {
         let op = &self.op;
-        let numel = input.shape().numel();
-        if numel % op.in_n != 0 {
-            return Err(Error::Shape(format!(
-                "{}: input numel {numel} not divisible by in_n {}",
-                op.name, op.in_n
-            )));
-        }
-        let batch = numel / op.in_n;
+        let batch = self.check_batch(input)?;
         let x = input.data();
         let mut out = QTensor::zeros(Shape::d2(batch, op.out_n), op.output_params);
         let mut counter = CycleCounter::new(model.clone());
         match mode {
+            ExecMode::Batched => {
+                let xwords = self.pack_rows(x, batch);
+                self.run_lanes_batched(&xwords, batch, 0..op.out_n, out.data_mut(), &mut counter);
+            }
             ExecMode::Compiled => {
                 let input_offset = op.input_offset();
                 // Packed-input reuse: the shared input row is packed once
                 // and read by every output neuron's lane (the interpreted
                 // oracle re-packs it out_n times).
                 let mut xwords = vec![0u32; op.in_n / 4];
+                let out_data = out.data_mut();
                 for b in 0..batch {
                     let xrow = &x[b * op.in_n..(b + 1) * op.in_n];
                     for (j, w) in xwords.iter_mut().enumerate() {
                         *w = pack4_le(&xrow[j * 4..j * 4 + 4]);
                     }
-                    for o in 0..op.out_n {
+                    // Direct row-slice writes: no per-element multi-dim
+                    // index math in the hot loop.
+                    let orow = &mut out_data[b * op.out_n..(b + 1) * op.out_n];
+                    for (o, slot) in orow.iter_mut().enumerate() {
                         counter.load_words(1); // bias
-                        counter.alu(1);
-                        counter.alu(2); // lane base setup
+                        counter.alu(3); // acc init + lane base setup
                         let acc = run_lane_compiled(
                             self.lanes.lane_schedule(o),
                             input_offset,
@@ -92,15 +168,17 @@ impl PreparedFc {
                         );
                         counter.alu(6); // requantize
                         counter.store_words(1);
-                        out.set(&[b, o], op.requant.apply(acc));
+                        *slot = op.requant.apply(acc);
                     }
                 }
             }
             ExecMode::Interpreted => {
                 let mut cfu = AnyCfu::new(self.design, op.input_offset());
+                let out_data = out.data_mut();
                 for b in 0..batch {
                     let xrow = &x[b * op.in_n..(b + 1) * op.in_n];
-                    for o in 0..op.out_n {
+                    let orow = &mut out_data[b * op.out_n..(b + 1) * op.out_n];
+                    for (o, slot) in orow.iter_mut().enumerate() {
                         counter.load_words(1); // bias
                         counter.alu(1);
                         let mut acc = op.bias[o];
@@ -118,9 +196,48 @@ impl PreparedFc {
                         )?;
                         counter.alu(6); // requantize
                         counter.store_words(1);
-                        out.set(&[b, o], op.requant.apply(acc));
+                        *slot = op.requant.apply(acc);
                     }
                 }
+            }
+        }
+        Ok(KernelRun { output: out, counter })
+    }
+
+    /// Batched execution with the output-lane dimension tiled across a
+    /// worker pool: each tile runs the batch-amortized loop over its
+    /// contiguous lane range with its own [`CycleCounter`],
+    /// writing a tile-local buffer; tiles are then merged
+    /// *deterministically in tile order*, so outputs and every counter
+    /// total are invariant in the tile/thread count (asserted by the
+    /// differential tier).
+    pub fn run_tiled(
+        &self,
+        input: &QTensor,
+        model: &CostModel,
+        pool: &JobPool,
+        tiles: usize,
+    ) -> Result<KernelRun> {
+        let op = &self.op;
+        let batch = self.check_batch(input)?;
+        let x = input.data();
+        let xwords = self.pack_rows(x, batch);
+        let ranges = tile_ranges(op.out_n, tiles);
+        let parts: Vec<(Vec<i8>, CycleCounter)> = pool.scoped_map(ranges.clone(), |r| {
+            let mut counter = CycleCounter::new(model.clone());
+            let mut buf = vec![0i8; batch * r.len()];
+            self.run_lanes_batched(&xwords, batch, r, &mut buf, &mut counter);
+            (buf, counter)
+        });
+        let mut out = QTensor::zeros(Shape::d2(batch, op.out_n), op.output_params);
+        let mut counter = CycleCounter::new(model.clone());
+        let out_data = out.data_mut();
+        for (range, (buf, c)) in ranges.into_iter().zip(parts.iter()) {
+            counter.merge(c);
+            let width = range.len();
+            for b in 0..batch {
+                out_data[(b * op.out_n + range.start)..(b * op.out_n + range.end)]
+                    .copy_from_slice(&buf[b * width..(b + 1) * width]);
             }
         }
         Ok(KernelRun { output: out, counter })
@@ -159,13 +276,27 @@ mod tests {
         .unwrap()
     }
 
+    fn random_batch_input(seed: u64, batch: usize, in_n: usize) -> QTensor {
+        let mut rng = Pcg32::new(seed);
+        let data: Vec<i8> =
+            (0..batch * in_n).map(|_| rng.range_i32(-128, 127) as i8).collect();
+        QTensor::new(Shape::d2(batch, in_n), data, QuantParams::new(0.1, 4).unwrap()).unwrap()
+    }
+
+    fn assert_runs_identical(a: &KernelRun, b: &KernelRun, tag: &str) {
+        assert_eq!(a.output.data(), b.output.data(), "{tag}: outputs");
+        assert_eq!(a.counter.cycles(), b.counter.cycles(), "{tag}: cycles");
+        assert_eq!(a.counter.total_instrs(), b.counter.total_instrs(), "{tag}: instrs");
+        assert_eq!(a.counter.cfu_cycles(), b.counter.cfu_cycles(), "{tag}: cfu cycles");
+        assert_eq!(a.counter.cfu_stalls(), b.counter.cfu_stalls(), "{tag}: stalls");
+        assert_eq!(a.counter.loaded_bytes(), b.counter.loaded_bytes(), "{tag}: loads");
+        assert_eq!(a.counter.stored_bytes(), b.counter.stored_bytes(), "{tag}: stores");
+    }
+
     #[test]
     fn kernel_matches_reference_all_designs() {
         let op = random_fc(21, 10, 64, 0.55);
-        let mut rng = Pcg32::new(22);
-        let data: Vec<i8> = (0..2 * 64).map(|_| rng.range_i32(-128, 127) as i8).collect();
-        let input =
-            QTensor::new(Shape::d2(2, 64), data, QuantParams::new(0.1, 4).unwrap()).unwrap();
+        let input = random_batch_input(22, 2, 64);
         for design in DesignKind::ALL {
             let prep = PreparedFc::new(&op, design).unwrap();
             let run = prep.run(&input, &CostModel::vexriscv()).unwrap();
@@ -175,22 +306,38 @@ mod tests {
     }
 
     #[test]
-    fn compiled_equals_interpreted_outputs_and_cycles() {
+    fn all_modes_equal_outputs_and_cycles() {
+        // Batched (default), per-lane compiled and the interpreted
+        // oracle must agree bit-for-bit on outputs and every counter
+        // total — including batch 1 and odd batch sizes.
         let op = random_fc(27, 12, 64, 0.6);
-        let mut rng = Pcg32::new(28);
-        let data: Vec<i8> = (0..3 * 64).map(|_| rng.range_i32(-128, 127) as i8).collect();
-        let input =
-            QTensor::new(Shape::d2(3, 64), data, QuantParams::new(0.1, 4).unwrap()).unwrap();
+        for &batch in &[1usize, 3, 8] {
+            let input = random_batch_input(28 + batch as u64, batch, 64);
+            for design in DesignKind::ALL {
+                let prep = PreparedFc::new(&op, design).unwrap();
+                let model = CostModel::vexriscv();
+                let b = prep.run_with_mode(&input, &model, ExecMode::Batched).unwrap();
+                let c = prep.run_with_mode(&input, &model, ExecMode::Compiled).unwrap();
+                let i = prep.run_with_mode(&input, &model, ExecMode::Interpreted).unwrap();
+                assert_runs_identical(&b, &c, &format!("{design} b{batch} batched-vs-compiled"));
+                assert_runs_identical(&b, &i, &format!("{design} b{batch} batched-vs-oracle"));
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_equals_batched_any_tile_count() {
+        let op = random_fc(29, 13, 64, 0.5);
+        let input = random_batch_input(30, 5, 64);
+        let model = CostModel::vexriscv();
         for design in DesignKind::ALL {
             let prep = PreparedFc::new(&op, design).unwrap();
-            let model = CostModel::vexriscv();
-            let c = prep.run_with_mode(&input, &model, ExecMode::Compiled).unwrap();
-            let i = prep.run_with_mode(&input, &model, ExecMode::Interpreted).unwrap();
-            assert_eq!(c.output.data(), i.output.data(), "{design}: outputs");
-            assert_eq!(c.counter.cycles(), i.counter.cycles(), "{design}: cycles");
-            assert_eq!(c.counter.total_instrs(), i.counter.total_instrs(), "{design}: instrs");
-            assert_eq!(c.counter.cfu_stalls(), i.counter.cfu_stalls(), "{design}: stalls");
-            assert_eq!(c.counter.loaded_bytes(), i.counter.loaded_bytes(), "{design}: loads");
+            let base = prep.run_with_mode(&input, &model, ExecMode::Batched).unwrap();
+            for tiles in [1usize, 2, 4, 32] {
+                let pool = JobPool::new(3);
+                let t = prep.run_tiled(&input, &model, &pool, tiles).unwrap();
+                assert_runs_identical(&base, &t, &format!("{design} tiles={tiles}"));
+            }
         }
     }
 

@@ -6,21 +6,37 @@
 //! the CFU consumes — for SSSA/CSA after lookahead encoding (the paper's
 //! build-time pre-processing of Algorithm 1).
 //!
-//! ## Compiled lane schedules
+//! ## The schedule arena
 //!
 //! The paper's premise is that the sparsity schedule is known at build
 //! time — so the simulator compiles it at prepare time instead of
-//! re-discovering it per inference. For every lane, [`prepare_lanes`]
-//! materializes a [`LaneSchedule`]: the visited-block list (the SSSA/CSA
-//! lookahead walk, or every block for the baselines/USSA) with the
-//! weights pre-decoded per visited block, plus a [`BulkCharge`] holding
-//! the lane's total instruction counts (ALU/loads/branches/CFU
-//! issues+stalls — all pure functions of the packed weights).
-//! [`run_lane_compiled`] is then a tight dot-product loop over the
-//! precomputed pairs and a single counter flush: no per-block CFU enum
-//! dispatch, no `Result` plumbing, bit-identical outputs *and* cycle
-//! totals to the interpreted [`run_lane`] oracle (asserted by the
-//! differential tier).
+//! re-discovering it per inference. [`prepare_lanes`] materializes one
+//! [`ScheduleArena`] per layer: a single flat CSR-style buffer of
+//! `(block_idx, w_word)` pairs covering every lane's visited-block walk
+//! (the SSSA/CSA lookahead walk, or every block for the baselines/USSA,
+//! with the weights pre-decoded per visited block), a lane-offset table
+//! into that buffer, and a parallel [`BulkCharge`] table holding each
+//! lane's total instruction counts (ALU/loads/branches/CFU
+//! issues+stalls — all pure functions of the packed weights). There is no
+//! per-lane heap allocation: [`PreparedLanes::lane_schedule`] hands out a
+//! borrowed [`LaneScheduleRef`] view, and iterating lanes is a linear
+//! scan of one contiguous allocation.
+//!
+//! ## Execution paths over the arena
+//!
+//! - [`run_lane_compiled`] walks one lane's slice for one input row — a
+//!   tight dot-product loop and a single counter flush;
+//! - [`run_lane_batched`] interchanges the loops: it walks the lane's
+//!   slice **once** and streams every packed input row of a batch
+//!   against each visited block, amortizing schedule decode and weight
+//!   reads across the batch. Cycle accounting stays exact because the
+//!   lane's [`BulkCharge`] is flushed scaled by the row count
+//!   ([`CycleCounter::charge_scaled`] — all counter totals are linear in
+//!   the charge counts).
+//!
+//! Both are bit-identical in outputs *and* cycle totals to the
+//! interpreted [`run_lane`] CFU oracle (asserted by the differential
+//! tier).
 
 use crate::cfu::{dot4_words, AnyCfu};
 use crate::cpu::{BulkCharge, CycleCounter};
@@ -30,24 +46,73 @@ use crate::encoding::pack::{pack4_i8, pack4_le, pack4_u32_skip_bits};
 use crate::error::{Error, Result};
 use crate::isa::{CfuOpcode, DesignKind};
 
-/// The compiled execution schedule of one lane: what the inner loop will
-/// do, decided entirely at prepare time from the packed weights.
+/// Flat CSR storage of every lane's compiled schedule: what each lane's
+/// inner loop will do, decided entirely at prepare time from the packed
+/// weights, stored in one contiguous allocation instead of one `Vec` per
+/// lane.
 #[derive(Debug, Clone)]
-pub struct LaneSchedule {
-    /// `(block_idx, w_word)` per *visited* block, in walk order. For
-    /// SSSA/CSA the walk follows the lookahead skip bits and `w_word`
-    /// holds the already-decoded INT7 weights; for the baselines/USSA
-    /// every block is visited and `w_word` is the raw packed word.
-    pub visited: Vec<(u32, u32)>,
-    /// Total instruction counts of the lane's modelled loop shape,
+pub struct ScheduleArena {
+    /// Interleaved `(block_idx, w_word)` per *visited* block, all lanes
+    /// back to back in lane order. For SSSA/CSA the walk follows the
+    /// lookahead skip bits and `w_word` holds the already-decoded INT7
+    /// weights; for the baselines/USSA every block is visited and
+    /// `w_word` is the raw packed word.
+    visited: Vec<(u32, u32)>,
+    /// CSR offsets into `visited`: lane `l` owns
+    /// `visited[offsets[l]..offsets[l + 1]]`. Length `lanes + 1`.
+    offsets: Vec<u32>,
+    /// Per-lane total instruction counts of the modelled loop shape,
     /// excluding the call-site-dependent input materialization (see
-    /// [`InputCost`]). Flushing this through
-    /// [`CycleCounter::charge_bulk`] reproduces the interpreted loop's
-    /// charges exactly under any cost model.
-    pub charge: BulkCharge,
+    /// [`InputCost`]). Parallel to the lane dimension.
+    charges: Vec<BulkCharge>,
 }
 
-impl LaneSchedule {
+impl ScheduleArena {
+    /// Arena with room reserved for `lanes` lanes of up to
+    /// `blocks_per_lane` visited blocks each.
+    fn with_capacity(lanes: usize, blocks_per_lane: usize) -> Self {
+        let mut offsets = Vec::with_capacity(lanes + 1);
+        offsets.push(0);
+        ScheduleArena {
+            visited: Vec::with_capacity(lanes * blocks_per_lane),
+            offsets,
+            charges: Vec::with_capacity(lanes),
+        }
+    }
+
+    /// Number of lanes compiled into the arena.
+    pub fn lanes(&self) -> usize {
+        self.charges.len()
+    }
+
+    /// Total visited blocks across every lane (the arena's flat length).
+    pub fn total_visited(&self) -> usize {
+        self.visited.len()
+    }
+
+    /// Borrowed schedule view of one lane.
+    #[inline]
+    pub fn lane(&self, lane: usize) -> LaneScheduleRef<'_> {
+        let lo = self.offsets[lane] as usize;
+        let hi = self.offsets[lane + 1] as usize;
+        LaneScheduleRef { visited: &self.visited[lo..hi], charge: &self.charges[lane] }
+    }
+}
+
+/// Borrowed view of one lane's compiled schedule inside the
+/// [`ScheduleArena`] — the visited-block slice plus the lane's bulk
+/// charge. `Copy`, so call sites pass it by value.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneScheduleRef<'a> {
+    /// `(block_idx, w_word)` per visited block, in walk order.
+    pub visited: &'a [(u32, u32)],
+    /// Total instruction counts of the lane's modelled loop shape.
+    /// Flushing this through [`CycleCounter::charge`] reproduces the
+    /// interpreted loop's charges exactly under any cost model.
+    pub charge: &'a BulkCharge,
+}
+
+impl LaneScheduleRef<'_> {
     /// Blocks the compiled loop visits.
     pub fn visited_blocks(&self) -> usize {
         self.visited.len()
@@ -56,7 +121,7 @@ impl LaneSchedule {
 
 /// Per-visited-block input materialization cost: the loads/ALU ops the
 /// modelled loop spends producing one packed input word (on top of the
-/// weight-word load already in [`LaneSchedule::charge`]).
+/// weight-word load already in the lane's [`BulkCharge`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InputCost {
     /// Loads per block.
@@ -87,10 +152,10 @@ pub struct PreparedLanes {
     /// Weights actually used for compute (post-clamp) — lets callers
     /// verify against a reference op run with identical weights.
     pub effective_weights: Vec<i8>,
-    /// Compiled per-lane schedules (visited blocks + bulk charges) — the
-    /// default execution path; the interpreted CFU walk stays as the
-    /// differential oracle.
-    pub schedules: Vec<LaneSchedule>,
+    /// Flat compiled schedules of every lane (visited blocks + bulk
+    /// charges in CSR form) — the default execution path; the
+    /// interpreted CFU walk stays as the differential oracle.
+    pub arena: ScheduleArena,
 }
 
 /// Pack a weight buffer of `lanes × lane_len` into CFU words for a design.
@@ -122,9 +187,10 @@ pub fn prepare_lanes(weights: &[i8], lane_len: usize, design: DesignKind) -> Res
         (weights.to_vec(), 0, weights.to_vec())
     };
     let words: Vec<u32> = buf.chunks(4).map(pack4_le).collect();
-    let schedules = (0..lanes)
-        .map(|l| compile_lane(design, &words[l * blocks_per_lane..(l + 1) * blocks_per_lane]))
-        .collect();
+    let mut arena = ScheduleArena::with_capacity(lanes, blocks_per_lane);
+    for lane_words in words.chunks_exact(blocks_per_lane) {
+        compile_lane_into(design, lane_words, &mut arena);
+    }
     Ok(PreparedLanes {
         words,
         blocks_per_lane,
@@ -132,18 +198,18 @@ pub fn prepare_lanes(weights: &[i8], lane_len: usize, design: DesignKind) -> Res
         design,
         clamped,
         effective_weights,
-        schedules,
+        arena,
     })
 }
 
-/// Compile one lane's schedule from its packed words: the visited-block
-/// walk, the per-visited-block decoded weight word, and the lane's total
-/// instruction charges. Everything here is a pure function of the packed
-/// weights — exactly the information Algorithm 1 bakes into the weight
-/// stream offline.
-fn compile_lane(design: DesignKind, words: &[u32]) -> LaneSchedule {
+/// Compile one lane's schedule from its packed words straight into the
+/// arena: the visited-block walk, the per-visited-block decoded weight
+/// word, and the lane's total instruction charges. Everything here is a
+/// pure function of the packed weights — exactly the information
+/// Algorithm 1 bakes into the weight stream offline.
+fn compile_lane_into(design: DesignKind, words: &[u32], arena: &mut ScheduleArena) {
     let nblocks = words.len();
-    let mut visited: Vec<(u32, u32)> = Vec::with_capacity(nblocks);
+    let start = arena.visited.len();
     let mut cfu_stalls = 0u64;
     match design {
         DesignKind::BaselineSimd | DesignKind::BaselineSequential | DesignKind::Ussa => {
@@ -154,7 +220,7 @@ fn compile_lane(design: DesignKind, words: &[u32]) -> LaneSchedule {
                     _ => crate::cfu::ussa::vcmac_cycles(w),
                 };
                 cfu_stalls += (mac_cycles as u64).saturating_sub(1);
-                visited.push((j as u32, w));
+                arena.visited.push((j as u32, w));
             }
         }
         DesignKind::Sssa | DesignKind::Csa => {
@@ -170,7 +236,7 @@ fn compile_lane(design: DesignKind, words: &[u32]) -> LaneSchedule {
                 // Store the decoded weights: the run loop multiplies
                 // without per-block shift work, and `inc_indvar` never
                 // stalls (1 cycle), so no extra charge.
-                visited.push((j as u32, pack4_i8(&crate::cfu::sssa::decode_weights(w))));
+                arena.visited.push((j as u32, pack4_i8(&crate::cfu::sssa::decode_weights(w))));
                 j += 1 + pack4_u32_skip_bits(w) as usize;
             }
         }
@@ -180,23 +246,21 @@ fn compile_lane(design: DesignKind, words: &[u32]) -> LaneSchedule {
     // `while` shape 3 ALU + 2 CFU; both load the weight word and branch
     // once (taken except on lane exit — at least one block is always
     // visited, so exactly one not-taken branch per lane).
-    let n = visited.len() as u64;
+    let n = (arena.visited.len() - start) as u64;
     let (alu_per_block, issues_per_block) = match design {
         DesignKind::Sssa | DesignKind::Csa => (3u64, 2u64),
         _ => (4u64, 1u64),
     };
-    LaneSchedule {
-        charge: BulkCharge {
-            alu: n * alu_per_block,
-            loads: n,
-            stores: 0,
-            branches_taken: n - 1,
-            branches_not_taken: 1,
-            cfu_issues: n * issues_per_block,
-            cfu_stalls,
-        },
-        visited,
-    }
+    arena.charges.push(BulkCharge {
+        alu: n * alu_per_block,
+        loads: n,
+        stores: 0,
+        branches_taken: n - 1,
+        branches_not_taken: 1,
+        cfu_issues: n * issues_per_block,
+        cfu_stalls,
+    });
+    arena.offsets.push(arena.visited.len() as u32);
 }
 
 impl PreparedLanes {
@@ -207,10 +271,10 @@ impl PreparedLanes {
         &self.words[lane * b..(lane + 1) * b]
     }
 
-    /// Compiled schedule of one lane.
+    /// Borrowed compiled schedule of one lane (a view into the arena).
     #[inline]
-    pub fn lane_schedule(&self, lane: usize) -> &LaneSchedule {
-        &self.schedules[lane]
+    pub fn lane_schedule(&self, lane: usize) -> LaneScheduleRef<'_> {
+        self.arena.lane(lane)
     }
 }
 
@@ -308,8 +372,8 @@ where
     Ok(acc)
 }
 
-/// Execute one lane through its compiled [`LaneSchedule`] — the default
-/// execution path.
+/// Execute one lane through its compiled schedule for a single input
+/// row.
 ///
 /// `input_word(j)` supplies the packed input word for block `j`; its
 /// modelled cost is the uniform per-block `input_cost` (dense `lw` or
@@ -319,7 +383,7 @@ where
 /// bit-identical to [`run_lane`] (differential tier).
 #[inline]
 pub fn run_lane_compiled<F>(
-    schedule: &LaneSchedule,
+    schedule: LaneScheduleRef<'_>,
     input_offset: i32,
     input_cost: InputCost,
     mut input_word: F,
@@ -330,11 +394,11 @@ where
     F: FnMut(usize) -> u32,
 {
     let mut acc = acc;
-    for &(j, w_word) in &schedule.visited {
+    for &(j, w_word) in schedule.visited {
         acc = acc.wrapping_add(dot4_words(w_word, input_word(j as usize), input_offset));
     }
     let n = schedule.visited.len() as u64;
-    let c = &schedule.charge;
+    let c = schedule.charge;
     counter.charge_bulk(
         c.alu + n * input_cost.alus,
         c.loads + n * input_cost.loads,
@@ -345,6 +409,48 @@ where
         c.cfu_stalls,
     );
     acc
+}
+
+/// Execute one lane's compiled schedule against **all rows of a batch**
+/// at once — the loop-interchanged arena path.
+///
+/// Where [`run_lane_compiled`] re-walks the schedule per input row, this
+/// walks the lane's arena slice once and streams every row's packed
+/// input word (`input_word(row, j)`) against each visited block, so
+/// schedule decode and weight-word reads are amortized across the batch
+/// on the host. `accs` carries one accumulator per row (pre-seeded with
+/// the bias) and is updated in place.
+///
+/// Cycle accounting stays exact: the lane's [`BulkCharge`] plus the
+/// per-block input cost is flushed scaled by `accs.len()`
+/// ([`CycleCounter::charge_scaled`]) — every counter total is linear in
+/// the charge counts, so the interchange cannot change simulated cycles,
+/// instruction counts, stalls or byte traffic (differential tier).
+#[inline]
+pub fn run_lane_batched<F>(
+    schedule: LaneScheduleRef<'_>,
+    input_offset: i32,
+    input_cost: InputCost,
+    mut input_word: F,
+    accs: &mut [i32],
+    counter: &mut CycleCounter,
+) where
+    F: FnMut(usize, usize) -> u32,
+{
+    for &(j, w_word) in schedule.visited {
+        let j = j as usize;
+        for (row, acc) in accs.iter_mut().enumerate() {
+            *acc = acc.wrapping_add(dot4_words(w_word, input_word(row, j), input_offset));
+        }
+    }
+    let n = schedule.visited.len() as u64;
+    let c = schedule.charge;
+    let per_row = BulkCharge {
+        alu: c.alu + n * input_cost.alus,
+        loads: c.loads + n * input_cost.loads,
+        ..*c
+    };
+    counter.charge_scaled(&per_row, accs.len() as u64);
 }
 
 #[cfg(test)]
@@ -522,6 +628,106 @@ mod tests {
     }
 
     #[test]
+    fn batched_matches_compiled_per_row_exactly() {
+        // The loop-interchanged batched walk must land on the same
+        // accumulators AND the same counter totals as running the
+        // compiled path row by row, for every design, batch size
+        // (including 1 and odd sizes) and cost model.
+        let mut rng = crate::util::Pcg32::new(0xBA7C);
+        for trial in 0..12 {
+            let blocks = 1 + rng.below(8) as usize;
+            let lane_len = blocks * 4;
+            let ws: Vec<i8> = (0..lane_len)
+                .map(|_| {
+                    if rng.bernoulli(0.55) {
+                        0
+                    } else {
+                        rng.range_i32(-64, 63) as i8
+                    }
+                })
+                .collect();
+            let offset = rng.range_i32(0, 255);
+            for &batch in &[1usize, 2, 5, 8] {
+                let rows: Vec<Vec<i8>> = (0..batch)
+                    .map(|_| {
+                        (0..lane_len).map(|_| rng.range_i32(-128, 127) as i8).collect()
+                    })
+                    .collect();
+                for design in DesignKind::ALL {
+                    for model in [CostModel::vexriscv(), CostModel::mac_only()] {
+                        let prep = prepare_lanes(&ws, lane_len, design).unwrap();
+                        let mut c_row = CycleCounter::new(model.clone());
+                        let per_row: Vec<i32> = rows
+                            .iter()
+                            .map(|xs| {
+                                run_lane_compiled(
+                                    prep.lane_schedule(0),
+                                    offset,
+                                    INPUT_COST_GATHER,
+                                    |j| pack4_le(&xs[j * 4..j * 4 + 4]),
+                                    11,
+                                    &mut c_row,
+                                )
+                            })
+                            .collect();
+                        let mut c_bat = CycleCounter::new(model.clone());
+                        let mut accs = vec![11i32; batch];
+                        run_lane_batched(
+                            prep.lane_schedule(0),
+                            offset,
+                            INPUT_COST_GATHER,
+                            |row, j| pack4_le(&rows[row][j * 4..j * 4 + 4]),
+                            &mut accs,
+                            &mut c_bat,
+                        );
+                        assert_eq!(accs, per_row, "trial {trial} {design} b{batch}: accs");
+                        assert_counters_equal(
+                            &c_row,
+                            &c_bat,
+                            &format!("trial {trial} {design} b{batch}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_is_flat_and_csr_offsets_cover_every_lane() {
+        // Multi-lane buffer: the arena must hold every lane's walk back
+        // to back, with offsets slicing out exactly the per-lane
+        // schedules (compared against single-lane preparations).
+        let mut rng = crate::util::Pcg32::new(0xA2E7A);
+        let lane_len = 16usize;
+        let lanes = 6usize;
+        let ws: Vec<i8> = (0..lanes * lane_len)
+            .map(|_| {
+                if rng.bernoulli(0.6) {
+                    0
+                } else {
+                    rng.range_i32(-64, 63) as i8
+                }
+            })
+            .collect();
+        for design in DesignKind::ALL {
+            let prep = prepare_lanes(&ws, lane_len, design).unwrap();
+            assert_eq!(prep.arena.lanes(), lanes, "{design}");
+            let mut total = 0usize;
+            for l in 0..lanes {
+                let solo =
+                    prepare_lanes(&ws[l * lane_len..(l + 1) * lane_len], lane_len, design)
+                        .unwrap();
+                let a = prep.lane_schedule(l);
+                let b = solo.lane_schedule(0);
+                assert_eq!(a.visited, b.visited, "{design} lane {l}: visited");
+                assert_eq!(a.charge, b.charge, "{design} lane {l}: charge");
+                total += a.visited_blocks();
+            }
+            assert_eq!(prep.arena.total_visited(), total, "{design}: flat length");
+        }
+    }
+
+    #[test]
     fn compiled_all_zero_lane_every_design() {
         let ws = vec![0i8; 16];
         let xs: Vec<i8> = (0..16).map(|i| (i * 5 - 30) as i8).collect();
@@ -550,6 +756,18 @@ mod tests {
             assert_eq!(a_int, 3, "{design}: all-zero lane must leave acc unchanged");
             assert_eq!(a_int, a_cmp, "{design}");
             assert_counters_equal(&c_int, &c_cmp, &format!("all-zero {design}"));
+            // The batched walk agrees too, at any batch size.
+            let mut c_bat = CycleCounter::new(CostModel::vexriscv());
+            let mut accs = vec![3i32; 3];
+            run_lane_batched(
+                prep.lane_schedule(0),
+                128,
+                INPUT_COST_DENSE,
+                |_, j| pack4_le(&xs[j * 4..j * 4 + 4]),
+                &mut accs,
+                &mut c_bat,
+            );
+            assert_eq!(accs, vec![3; 3], "{design}: batched all-zero accs");
             // SSSA/CSA visit only the leading zero block of the lane.
             if design.uses_lookahead_encoding() {
                 assert_eq!(prep.lane_schedule(0).visited_blocks(), 1, "{design}");
@@ -592,7 +810,7 @@ mod tests {
         let prep = prepare_lanes(&ws, 16, DesignKind::Csa).unwrap();
         let s = prep.lane_schedule(0);
         assert_eq!(s.visited_blocks(), 2); // block 0 (skip 2) → block 3
-        let c = &s.charge;
+        let c = s.charge;
         assert_eq!(c.alu, 2 * 3);
         assert_eq!(c.loads, 2);
         assert_eq!(c.branches_taken, 1);

@@ -23,18 +23,31 @@
 //!
 //! ## Execution modes
 //!
-//! Both loop shapes above are pure functions of the packed weights, so
-//! the kernels run them two ways:
+//! The loop shapes above are pure functions of the packed weights, so
+//! the kernels run them three ways over the same prepare-time
+//! [`lane::ScheduleArena`]:
 //!
-//! - [`ExecMode::Compiled`] (default) — [`lane::run_lane_compiled`] over
-//!   the [`lane::LaneSchedule`]s materialized at prepare time: a plain
-//!   dot-product loop plus one bulk counter flush per lane;
+//! - [`ExecMode::Batched`] (default) — [`lane::run_lane_batched`]
+//!   interchanges the loops: each lane's arena slice is walked once and
+//!   every input row of the batch is streamed against each visited
+//!   block, amortizing schedule decode and weight reads across the
+//!   batch. With intra-layer tiling enabled (see
+//!   [`crate::simulator::SimEngine`]) the lane dimension additionally
+//!   splits across worker threads, one [`crate::cpu::CycleCounter`] per
+//!   tile, merged deterministically in tile order.
+//! - [`ExecMode::Compiled`] — [`lane::run_lane_compiled`] re-walks each
+//!   lane's schedule per input row (the pre-interchange host path, kept
+//!   as a bench/differential comparison point);
 //! - [`ExecMode::Interpreted`] — [`lane::run_lane`] dispatching every
 //!   MAC/`inc_indvar` through the CFU functional models, kept as the
 //!   differential oracle.
 //!
-//! Outputs and cycle totals are bit-identical between the modes
-//! (asserted across designs × models by the differential tier).
+//! Outputs and cycle totals are bit-identical between all modes
+//! (asserted across designs × models × batch sizes × tile counts by the
+//! differential tier): the cycle model charges per-lane
+//! [`crate::cpu::BulkCharge`]s whose conversion to counter totals is
+//! linear, so loop interchange and lane tiling cannot change any
+//! simulated metric.
 
 pub mod conv;
 pub mod fc;
@@ -42,7 +55,10 @@ pub mod lane;
 
 pub use conv::PreparedConv;
 pub use fc::PreparedFc;
-pub use lane::{prepare_lanes, run_lane, run_lane_compiled, LaneSchedule, PreparedLanes};
+pub use lane::{
+    prepare_lanes, run_lane, run_lane_batched, run_lane_compiled, LaneScheduleRef, PreparedLanes,
+    ScheduleArena,
+};
 
 use crate::cpu::CycleCounter;
 use crate::tensor::QTensor;
@@ -50,12 +66,16 @@ use crate::tensor::QTensor;
 /// How the kernels execute their MAC lanes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecMode {
-    /// Table-driven execution over prepare-time [`LaneSchedule`]s (the
-    /// default host path).
+    /// Batch-amortized execution over the prepare-time schedule arena:
+    /// each lane's visited slice is walked once per layer with every
+    /// input row streamed against it (the default host path).
     #[default]
+    Batched,
+    /// Per-lane, row-major table-driven execution over the same arena —
+    /// the pre-interchange compiled path, kept as a comparison point.
     Compiled,
     /// Per-instruction CFU dispatch — the reference oracle the compiled
-    /// path is differentially tested against.
+    /// and batched paths are differentially tested against.
     Interpreted,
 }
 
@@ -63,6 +83,7 @@ impl ExecMode {
     /// Short name for logs and reports.
     pub fn name(&self) -> &'static str {
         match self {
+            ExecMode::Batched => "batched",
             ExecMode::Compiled => "compiled",
             ExecMode::Interpreted => "interpreted",
         }
@@ -76,4 +97,45 @@ pub struct KernelRun {
     pub output: QTensor,
     /// Cycle/instruction accounting for the whole layer.
     pub counter: CycleCounter,
+}
+
+/// Split `n` lanes into at most `tiles` contiguous near-equal ranges
+/// (the intra-layer tiling grid). The split depends only on `(n,
+/// tiles)`, so a given tile count always produces the same deterministic
+/// partition.
+pub fn tile_ranges(n: usize, tiles: usize) -> Vec<std::ops::Range<usize>> {
+    let tiles = tiles.clamp(1, n.max(1));
+    let base = n / tiles;
+    let extra = n % tiles;
+    let mut out = Vec::with_capacity(tiles);
+    let mut start = 0usize;
+    for t in 0..tiles {
+        let len = base + usize::from(t < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tile_ranges;
+
+    #[test]
+    fn tile_ranges_cover_exactly_once() {
+        for n in [1usize, 2, 7, 16, 33] {
+            for tiles in [1usize, 2, 3, 8, 64] {
+                let ranges = tile_ranges(n, tiles);
+                assert!(ranges.len() <= tiles.max(1));
+                assert_eq!(ranges.first().unwrap().start, 0);
+                assert_eq!(ranges.last().unwrap().end, n);
+                for pair in ranges.windows(2) {
+                    assert_eq!(pair[0].end, pair[1].start, "contiguous n={n} tiles={tiles}");
+                    assert!(!pair[0].is_empty());
+                }
+                let total: usize = ranges.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+            }
+        }
+    }
 }

@@ -59,6 +59,15 @@ fn cli() -> Command {
                     "",
                     "per-layer design assignment ('sssa,simd,…' or 'hetero:sb…'; overrides --design)",
                 ))
+                .arg(ArgSpec::opt(
+                    "tile-threads",
+                    "0",
+                    "intra-layer tile workers (>1 splits each inference's lanes across cores)",
+                ))
+                .arg(ArgSpec::flag(
+                    "per-lane",
+                    "force the per-lane compiled walk instead of batch-amortized execution",
+                ))
                 .arg(ArgSpec::flag(
                     "interpreted",
                     "force the interpreted CFU oracle instead of compiled lane schedules",
@@ -222,8 +231,10 @@ fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     };
     let exec_mode = if args.get_flag("interpreted")? {
         ExecMode::Interpreted
-    } else {
+    } else if args.get_flag("per-lane")? {
         ExecMode::Compiled
+    } else {
+        ExecMode::default()
     };
     let engine = BatchEngine::new(BatchOptions {
         threads: args.get_usize("threads")?,
@@ -231,17 +242,19 @@ fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
         verify: false,
         exec_mode,
         cache_capacity: args.get_usize("cache-cap")?,
+        tile_threads: args.get_usize("tile-threads")?,
     });
     let n = args.get_usize("requests")?;
     let reqs = BatchEngine::gen_requests(&model, n, args.get_u64("seed")?)?;
     let report = engine.run_stream(&spec, reqs, batch)?;
     println!(
         "served {} requests on {} ({} lanes) in batches of {batch} across {} workers \
-         (prepared-model cache: {} builds, {} hits, {} evictions, cap {})",
+         + {} tile workers (prepared-model cache: {} builds, {} hits, {} evictions, cap {})",
         report.completed,
         report.design_label(),
         exec_mode.name(),
         engine.workers(),
+        engine.tile_workers(),
         report.cache_misses,
         report.cache_hits,
         report.cache_evictions,

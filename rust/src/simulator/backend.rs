@@ -87,10 +87,25 @@ pub fn assigned_backend_with_mode(
     verify: bool,
     mode: ExecMode,
 ) -> Box<dyn ExecBackend> {
+    assigned_backend_tiled(assignment, verify, mode, None)
+}
+
+/// [`assigned_backend_with_mode`] with optional intra-layer lane tiling:
+/// when a [`crate::coordinator::TilePool`] is supplied (and the mode is
+/// the batched default), every MAC layer of a single inference splits
+/// its lane dimension across the pool's workers — outputs and cycle
+/// totals are invariant in the tile count.
+pub fn assigned_backend_tiled(
+    assignment: &DesignAssignment,
+    verify: bool,
+    mode: ExecMode,
+    tiling: Option<crate::coordinator::scheduler::TilePool>,
+) -> Box<dyn ExecBackend> {
     Box::new(
         SimEngine::for_assignment(assignment.clone())
             .with_verify(verify)
-            .with_exec_mode(mode),
+            .with_exec_mode(mode)
+            .with_tiling(tiling),
     )
 }
 

@@ -1,5 +1,6 @@
 //! The simulation engine.
 
+use crate::coordinator::scheduler::TilePool;
 use crate::cpu::{CostModel, CycleCounter};
 use crate::error::{Error, Result};
 use crate::isa::{DesignAssignment, DesignKind};
@@ -106,14 +107,21 @@ pub struct SimEngine {
     pub cost_model: CostModel,
     /// Verify every MAC layer output against the golden nn op.
     pub verify: bool,
-    /// Lane execution path: compiled schedules (default) or the
-    /// interpreted CFU oracle.
+    /// Lane execution path: batch-amortized arena execution (default),
+    /// the per-lane compiled walk, or the interpreted CFU oracle.
     pub exec_mode: ExecMode,
+    /// Optional intra-layer tiling: when set (and the mode is the
+    /// batched default), every MAC layer's lane dimension is split
+    /// across this pool's workers, one [`CycleCounter`] per tile,
+    /// merged deterministically in tile order — a *single* inference
+    /// uses all cores. Outputs and every cycle total are invariant in
+    /// the tile count (differential tier).
+    pub tiling: Option<TilePool>,
 }
 
 impl SimEngine {
-    /// Engine with the VexRiscv cost model (compiled execution) running
-    /// one design on every MAC layer.
+    /// Engine with the VexRiscv cost model (batched arena execution)
+    /// running one design on every MAC layer.
     pub fn new(design: DesignKind) -> Self {
         SimEngine::for_assignment(DesignAssignment::Uniform(design))
     }
@@ -124,7 +132,8 @@ impl SimEngine {
             assignment,
             cost_model: CostModel::vexriscv(),
             verify: false,
-            exec_mode: ExecMode::Compiled,
+            exec_mode: ExecMode::default(),
+            tiling: None,
         }
     }
 
@@ -145,6 +154,34 @@ impl SimEngine {
     pub fn with_exec_mode(mut self, mode: ExecMode) -> Self {
         self.exec_mode = mode;
         self
+    }
+
+    /// Enable intra-layer lane tiling across a worker pool (applies to
+    /// the batched default mode; the per-lane and interpreted modes stay
+    /// single-threaded reference paths).
+    pub fn with_tiling(mut self, tiling: Option<TilePool>) -> Self {
+        self.tiling = tiling;
+        self
+    }
+
+    /// Run one MAC kernel under this engine's mode and tiling config.
+    fn run_conv(&self, p: &PreparedConv, input: &QTensor) -> Result<crate::kernels::KernelRun> {
+        match (&self.tiling, self.exec_mode) {
+            (Some(tp), ExecMode::Batched) if tp.workers() > 1 => {
+                p.run_tiled(input, &self.cost_model, tp.pool(), tp.workers())
+            }
+            _ => p.run_with_mode(input, &self.cost_model, self.exec_mode),
+        }
+    }
+
+    /// [`SimEngine::run_conv`] for dense layers.
+    fn run_fc(&self, p: &PreparedFc, input: &QTensor) -> Result<crate::kernels::KernelRun> {
+        match (&self.tiling, self.exec_mode) {
+            (Some(tp), ExecMode::Batched) if tp.workers() > 1 => {
+                p.run_tiled(input, &self.cost_model, tp.pool(), tp.workers())
+            }
+            _ => p.run_with_mode(input, &self.cost_model, self.exec_mode),
+        }
     }
 
     /// Prepare a graph: pack (and for SSSA/CSA lookahead-encode) every
@@ -255,7 +292,7 @@ impl SimEngine {
     ) -> Result<(QTensor, Option<(String, CycleCounter, f64)>)> {
         Ok(match layer {
             PreparedLayer::Conv(p) => {
-                let run = p.run_with_mode(&cur, &self.cost_model, self.exec_mode)?;
+                let run = self.run_conv(p, &cur)?;
                 if self.verify {
                     let reference = p.reference_op().forward_ref(&cur)?;
                     if reference.data() != run.output.data() {
@@ -269,7 +306,7 @@ impl SimEngine {
                 (run.output, Some((format!("conv:{}", p.op.name), run.counter, sparsity)))
             }
             PreparedLayer::Fc(p) => {
-                let run = p.run_with_mode(&cur, &self.cost_model, self.exec_mode)?;
+                let run = self.run_fc(p, &cur)?;
                 if self.verify {
                     let reference = p.reference_op().forward_ref(&cur)?;
                     if reference.data() != run.output.data() {
@@ -318,7 +355,7 @@ impl SimEngine {
             PreparedLayer::Shortcut { conv, slot } => {
                 match conv {
                     Some(p) => {
-                        let run = p.run_with_mode(&cur, &self.cost_model, self.exec_mode)?;
+                        let run = self.run_conv(p, &cur)?;
                         if self.verify {
                             let reference = p.reference_op().forward_ref(&cur)?;
                             if reference.data() != run.output.data() {
@@ -382,24 +419,64 @@ mod tests {
     }
 
     #[test]
-    fn compiled_equals_interpreted_oracle_full_model() {
-        // Whole-model differential: the default compiled path must match
-        // the interpreted CFU oracle bit-for-bit on outputs AND on every
-        // aggregate counter, for every design.
+    fn batched_default_equals_interpreted_oracle_full_model() {
+        // Whole-model differential: the default batched path and the
+        // per-lane compiled path must match the interpreted CFU oracle
+        // bit-for-bit on outputs AND on every aggregate counter, for
+        // every design.
         let (graph, input) = dscnn_setup(0.5, 0.3);
         for design in DesignKind::ALL {
-            let compiled = SimEngine::new(design);
-            assert_eq!(compiled.exec_mode, ExecMode::Compiled, "compiled must be the default");
+            let batched = SimEngine::new(design);
+            assert_eq!(batched.exec_mode, ExecMode::Batched, "batched must be the default");
+            let compiled = SimEngine::new(design).with_exec_mode(ExecMode::Compiled);
             let oracle = SimEngine::new(design).with_exec_mode(ExecMode::Interpreted);
-            let prepared = compiled.prepare(&graph).unwrap();
-            let a = compiled.run(&prepared, &input).unwrap();
-            let b = oracle.run(&prepared, &input).unwrap();
-            assert_eq!(a.output.data(), b.output.data(), "{design}: outputs");
-            assert_eq!(a.total_cycles, b.total_cycles, "{design}: cycles");
-            assert_eq!(a.mac_cycles, b.mac_cycles, "{design}: mac cycles");
-            assert_eq!(a.cfu_stalls(), b.cfu_stalls(), "{design}: stalls");
-            assert_eq!(a.loaded_bytes(), b.loaded_bytes(), "{design}: loaded bytes");
-            assert_eq!(a.counter.total_instrs(), b.counter.total_instrs(), "{design}: instrs");
+            let prepared = batched.prepare(&graph).unwrap();
+            let a = batched.run(&prepared, &input).unwrap();
+            for (tag, engine) in [("compiled", compiled), ("oracle", oracle)] {
+                let b = engine.run(&prepared, &input).unwrap();
+                assert_eq!(a.output.data(), b.output.data(), "{design}/{tag}: outputs");
+                assert_eq!(a.total_cycles, b.total_cycles, "{design}/{tag}: cycles");
+                assert_eq!(a.mac_cycles, b.mac_cycles, "{design}/{tag}: mac cycles");
+                assert_eq!(a.cfu_stalls(), b.cfu_stalls(), "{design}/{tag}: stalls");
+                assert_eq!(a.loaded_bytes(), b.loaded_bytes(), "{design}/{tag}: loaded bytes");
+                assert_eq!(
+                    a.counter.total_instrs(),
+                    b.counter.total_instrs(),
+                    "{design}/{tag}: instrs"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_inference_invariant_in_thread_count() {
+        // Intra-layer tiling must not change outputs, cycle totals or
+        // any other counter: 1-thread tiling, N-thread tiling and the
+        // untiled engine all agree bit-for-bit on a full model.
+        use crate::coordinator::scheduler::TilePool;
+        let (graph, input) = dscnn_setup(0.5, 0.3);
+        for design in [DesignKind::Csa, DesignKind::Sssa, DesignKind::BaselineSimd] {
+            let untiled = SimEngine::new(design);
+            let prepared = untiled.prepare(&graph).unwrap();
+            let base = untiled.run(&prepared, &input).unwrap();
+            for threads in [1usize, 2, 5] {
+                let tiled = SimEngine::new(design).with_tiling(Some(TilePool::new(threads)));
+                let r = tiled.run(&prepared, &input).unwrap();
+                assert_eq!(r.output.data(), base.output.data(), "{design} t{threads}: outputs");
+                assert_eq!(r.total_cycles, base.total_cycles, "{design} t{threads}: cycles");
+                assert_eq!(r.mac_cycles, base.mac_cycles, "{design} t{threads}: mac");
+                assert_eq!(r.cfu_stalls(), base.cfu_stalls(), "{design} t{threads}: stalls");
+                assert_eq!(
+                    r.counter.total_instrs(),
+                    base.counter.total_instrs(),
+                    "{design} t{threads}: instrs"
+                );
+                assert_eq!(
+                    r.loaded_bytes(),
+                    base.loaded_bytes(),
+                    "{design} t{threads}: loaded bytes"
+                );
+            }
         }
     }
 

@@ -93,7 +93,7 @@ fn serve_streams_batches_through_the_cache() {
     ]);
     assert!(ok, "stderr: {stderr}");
     assert!(stdout.contains("batches of 2"), "{stdout}");
-    assert!(stdout.contains("compiled lanes"), "{stdout}");
+    assert!(stdout.contains("batched lanes"), "{stdout}");
     assert!(stdout.contains("1 builds, 2 hits, 0 evictions"), "{stdout}");
     assert!(stdout.contains("throughput"), "{stdout}");
 }
@@ -108,28 +108,44 @@ fn serve_args<'a>(extra: &[&'a str]) -> Vec<&'a str> {
 }
 
 #[test]
-fn serve_interpreted_oracle_matches_compiled_cycles() {
-    // --interpreted forces the per-instruction CFU oracle; the simulated
-    // cycle totals must be identical to the compiled default.
-    let (ok_c, stdout_c, stderr_c) = run(&serve_args(&[]));
-    assert!(ok_c, "stderr: {stderr_c}");
-    let (ok_i, stdout_i, stderr_i) = run(&serve_args(&["--interpreted"]));
-    assert!(ok_i, "stderr: {stderr_i}");
-    assert!(stdout_i.contains("interpreted lanes"), "{stdout_i}");
+fn serve_exec_modes_and_tiling_agree_on_cycles() {
+    // The batched default, --per-lane, --interpreted and --tile-threads
+    // must all land on identical simulated cycle totals (only host speed
+    // may differ).
     let cycles = |s: &str| {
         s.lines()
             .find(|l| l.contains("total simulated cycles"))
             .map(str::to_string)
             .expect("cycles line")
     };
-    let line_c = cycles(&stdout_c);
-    let line_i = cycles(&stdout_i);
     let total = |l: &str| {
         l.split_whitespace()
             .find_map(|tok| tok.parse::<u64>().ok())
             .expect("cycle total")
     };
-    assert_eq!(total(&line_c), total(&line_i), "compiled: {line_c}\ninterpreted: {line_i}");
+    let (ok_b, stdout_b, stderr_b) = run(&serve_args(&[]));
+    assert!(ok_b, "stderr: {stderr_b}");
+    assert!(stdout_b.contains("batched lanes"), "{stdout_b}");
+    let golden = total(&cycles(&stdout_b));
+    for extra in [
+        vec!["--interpreted"],
+        vec!["--per-lane"],
+        vec!["--tile-threads", "3"],
+    ] {
+        let (ok, stdout, stderr) = run(&serve_args(&extra));
+        assert!(ok, "{extra:?} stderr: {stderr}");
+        assert_eq!(
+            total(&cycles(&stdout)),
+            golden,
+            "{extra:?}: cycle totals must be mode- and tile-invariant\n{stdout}"
+        );
+    }
+    let (_, stdout_i, _) = run(&serve_args(&["--interpreted"]));
+    assert!(stdout_i.contains("interpreted lanes"), "{stdout_i}");
+    let (_, stdout_p, _) = run(&serve_args(&["--per-lane"]));
+    assert!(stdout_p.contains("compiled lanes"), "{stdout_p}");
+    let (_, stdout_t, _) = run(&serve_args(&["--tile-threads", "3"]));
+    assert!(stdout_t.contains("3 tile workers"), "{stdout_t}");
 }
 
 #[test]
