@@ -1,15 +1,17 @@
 //! Host wall-clock throughput of the lane execution paths: the
 //! batch-amortized schedule arena (default) vs the per-lane compiled
 //! walk vs the interpreted CFU oracle, plus the arena path with
-//! intra-layer lane tiling, across input batch sizes {1, 8, 64} and
-//! designs.
+//! intra-layer lane tiling and with each host multiply kernel
+//! (scalar oracle loop, portable SWAR, auto-resolved SIMD), across
+//! input batch sizes {1, 8, 64} and designs.
 //!
 //! Simulated cycle totals are asserted identical across the paths on
 //! every cell (the differential contract); what this bench measures is
 //! *host* speed — `host_infer_per_s` and wall milliseconds per batch —
 //! sunk as informational `host_*`/`wall_*` records via `$BENCH_JSON`.
-//! The acceptance expectation is that the arena-batched path beats the
-//! per-lane compiled path at batch ≥ 8 (reported, and warned about if a
+//! The acceptance expectations are that the arena-batched path beats
+//! the per-lane compiled path and that the SWAR/SIMD kernels beat the
+//! scalar loop, both at batch ≥ 8 (reported, and warned about if a
 //! loaded machine says otherwise — wall clock never hard-fails).
 //!
 //! ```bash
@@ -21,7 +23,7 @@
 use sparse_riscv::bench::harness::{bench_fn, BenchConfig};
 use sparse_riscv::coordinator::TilePool;
 use sparse_riscv::isa::DesignKind;
-use sparse_riscv::kernels::ExecMode;
+use sparse_riscv::kernels::{ExecMode, HostKernel};
 use sparse_riscv::metrics::{sink_and_report, MetricRecord};
 use sparse_riscv::models::builder::{apply_sparsity, random_input, ModelConfig};
 use sparse_riscv::models::zoo::{build_model, input_shape};
@@ -51,9 +53,19 @@ fn main() {
     let batches = [1usize, 8, 64];
 
     let tile_pool = TilePool::new(tile_threads);
+    // The concrete kernel `Auto` resolves to on this host (honours the
+    // SPARSE_RISCV_HOST_KERNEL override, so CI's forced runs label
+    // their records accordingly).
+    let auto_kernel = HostKernel::Auto.resolve();
+    // Most capable native kernel on this host (available_kernels is
+    // ordered scalar < swar < native SIMD).
+    let best_kernel =
+        HostKernel::available_kernels().into_iter().last().unwrap_or(HostKernel::Swar);
     let mut records: Vec<MetricRecord> = Vec::new();
     // (model, design, batch) -> host inf/s of (compiled, batched).
     let mut improvement_cells: Vec<(String, usize, f64, f64)> = Vec::new();
+    // (model, design, batch) -> host inf/s of (scalar, swar) batched.
+    let mut kernel_cells: Vec<(String, usize, f64, f64)> = Vec::new();
 
     for model in &models {
         let cfg = ModelConfig { scale, ..Default::default() };
@@ -79,13 +91,44 @@ fn main() {
                 );
 
                 // The differential contract, re-checked in bench context:
-                // every path lands on identical simulated totals.
-                let engines = [
-                    ("interpreted", SimEngine::new(design).with_exec_mode(ExecMode::Interpreted)),
-                    ("compiled", SimEngine::new(design).with_exec_mode(ExecMode::Compiled)),
-                    ("batched", SimEngine::new(design)),
-                    ("batched_tiled", SimEngine::new(design).with_tiling(Some(tile_pool.clone()))),
+                // every path lands on identical simulated totals. The
+                // default `batched` row is labelled with the kernel Auto
+                // resolves to; the forced-kernel rows isolate the host
+                // multiply routines against the scalar oracle loop.
+                let mut engines = vec![
+                    (
+                        "interpreted".to_string(),
+                        SimEngine::new(design).with_exec_mode(ExecMode::Interpreted),
+                    ),
+                    (
+                        "compiled".to_string(),
+                        SimEngine::new(design).with_exec_mode(ExecMode::Compiled),
+                    ),
+                    (format!("batched[{auto_kernel}]"), SimEngine::new(design)),
+                    (
+                        "batched_scalar".to_string(),
+                        SimEngine::new(design).with_host_kernel(HostKernel::Scalar),
+                    ),
+                    (
+                        "batched_swar".to_string(),
+                        SimEngine::new(design).with_host_kernel(HostKernel::Swar),
+                    ),
+                    (
+                        "batched_tiled".to_string(),
+                        SimEngine::new(design).with_tiling(Some(tile_pool.clone())),
+                    ),
                 ];
+                // A dedicated row for the native SIMD kernel when Auto
+                // would not already cover it (e.g. forced scalar/swar).
+                if best_kernel != auto_kernel
+                    && best_kernel != HostKernel::Swar
+                    && best_kernel != HostKernel::Scalar
+                {
+                    engines.push((
+                        format!("batched_{best_kernel}"),
+                        SimEngine::new(design).with_host_kernel(best_kernel),
+                    ));
+                }
                 let golden = reference.run(&prepared, &input).expect("run");
                 let mut cell: Vec<(String, f64, f64)> = Vec::new();
                 for (mode_name, engine) in &engines {
@@ -115,7 +158,7 @@ fn main() {
                                 X_SS,
                                 scale,
                                 batch as u64,
-                                if *mode_name == "batched_tiled" {
+                                if mode_name == "batched_tiled" {
                                     tile_pool.workers() as u64
                                 } else {
                                     1
@@ -137,7 +180,13 @@ fn main() {
                     format!("{model}/{design}"),
                     batch,
                     find("compiled"),
-                    find("batched"),
+                    find(&format!("batched[{auto_kernel}]")),
+                ));
+                kernel_cells.push((
+                    format!("{model}/{design}"),
+                    batch,
+                    find("batched_scalar"),
+                    find("batched_swar"),
                 ));
             }
         }
@@ -167,6 +216,30 @@ fn main() {
         "arena-batched beats per-lane compiled on {wins}/{cells} cells at batch >= 8 \
          (tile pool: {} workers)",
         tile_pool.workers()
+    );
+
+    // Second acceptance expectation: the SWAR multiply kernel beats the
+    // scalar oracle loop once the batch fills its row chunks (batch ≥ 8).
+    // Informational for the same reason as above.
+    let mut kernel_wins = 0usize;
+    let mut kernel_total = 0usize;
+    for (tag, batch, scalar, swar) in &kernel_cells {
+        if *batch < 8 {
+            continue;
+        }
+        kernel_total += 1;
+        if swar > scalar {
+            kernel_wins += 1;
+        } else {
+            eprintln!(
+                "warning: {tag} b{batch}: SWAR {swar:.1} inf/s did not beat scalar \
+                 {scalar:.1} inf/s (loaded machine?)"
+            );
+        }
+    }
+    println!(
+        "SWAR host kernel beats the scalar loop on {kernel_wins}/{kernel_total} cells at \
+         batch >= 8 (auto resolves to: {auto_kernel})"
     );
 
     sink_and_report(

@@ -1,0 +1,253 @@
+//! Host-side multi-row dot kernels for the batched lane walk.
+//!
+//! The batched execution path ([`crate::kernels::lane::run_lane_batched`])
+//! streams B packed input rows against each visited `(j, w_word)` block.
+//! The scalar loop calls [`super::dot4_words`] once per row — four i8
+//! multiplies each. The kernels here compute the same per-row dot for a
+//! whole slice of rows per call, amortizing the weight-word decode and
+//! (for the SIMD variants) multiplying several operand lanes per
+//! instruction. All of them are bit-identical to the scalar oracle: the
+//! per-block contribution `Σ w_i * (x_i + off)` has magnitude ≤ 4 · 128 ·
+//! 382 < 2^18, so every intermediate is exact in i32 and only the
+//! cross-block accumulation wraps — which all paths perform with
+//! `wrapping_add` on the same i32 accumulator.
+//!
+//! None of this touches simulated time: cycle totals come from
+//! prepare-time [`crate::cpu::BulkCharge`]s, so the host kernel choice is
+//! cycle-invariant by construction (pinned by the differential tier).
+
+use crate::encoding::pack::unpack4_i8;
+
+/// Scalar reference: one [`super::dot4_words`] per row — the host-side
+/// oracle the SWAR/SIMD variants are differentially pinned against.
+#[inline]
+pub(crate) fn dot4_rows_scalar(w_word: u32, input_offset: i32, xs: &[u32], accs: &mut [i32]) {
+    for (acc, &x) in accs.iter_mut().zip(xs) {
+        *acc = acc.wrapping_add(super::dot4_words(w_word, x, input_offset));
+    }
+}
+
+/// Byte-wise `+128` bias: flipping the sign bit of each i8 lane maps it
+/// to the unsigned value `v + 128` in [0, 255].
+const BIAS: u32 = 0x8080_8080;
+
+/// Per-block SWAR precomputation, amortized over all rows of a batch.
+///
+/// Layout: the four biased weight bytes `a_i = w_i + 128` sit in two u64s
+/// with 32-bit fields (`a0 | a1 << 32` and `a2 | a3 << 32`). One u64
+/// multiply against the *swapped* biased input fields (`u1 | u0 << 32`)
+/// yields `a0*u1` in the low field and `a0*u0 + a1*u1` in the high field
+/// — exact, because each product ≤ 255² < 2^32 never carries across the
+/// field boundary and the `a1*u0 * 2^64` term wraps off the top. Two such
+/// multiplies replace four scalar ones per row.
+///
+/// Sign handling (the "bias trick"): with `a = w + 128`, `u = x + 128`,
+/// `Σ a_i u_i = Σ w_i x_i + 128 Σ w + 128 Σ u`, so
+/// `Σ w_i (x_i + off) = Σ a_i u_i − 128 Σ u + Σ w · (off − 128)`.
+/// The last term is the per-block constant `kw` below.
+struct SwarBlock {
+    /// Biased weight lanes 0, 1 in 32-bit fields.
+    a01: u64,
+    /// Biased weight lanes 2, 3 in 32-bit fields.
+    a23: u64,
+    /// `Σ w_i · (input_offset − 128)`.
+    kw: i32,
+}
+
+impl SwarBlock {
+    #[inline]
+    fn new(w_word: u32, input_offset: i32) -> SwarBlock {
+        let [w0, w1, w2, w3] = unpack4_i8(w_word);
+        let a = w_word ^ BIAS;
+        let a0 = (a & 0xff) as u64;
+        let a1 = ((a >> 8) & 0xff) as u64;
+        let a2 = ((a >> 16) & 0xff) as u64;
+        let a3 = (a >> 24) as u64;
+        let wsum = w0 as i32 + w1 as i32 + w2 as i32 + w3 as i32;
+        SwarBlock {
+            a01: a0 | (a1 << 32),
+            a23: a2 | (a3 << 32),
+            kw: wsum.wrapping_mul(input_offset.wrapping_sub(128)),
+        }
+    }
+
+    #[inline]
+    fn dot(&self, x_word: u32) -> i32 {
+        let u = x_word ^ BIAS;
+        let u0 = (u & 0xff) as u64;
+        let u1 = ((u >> 8) & 0xff) as u64;
+        let u2 = ((u >> 16) & 0xff) as u64;
+        let u3 = (u >> 24) as u64;
+        let s01 = self.a01.wrapping_mul(u1 | (u0 << 32)) >> 32;
+        let s23 = self.a23.wrapping_mul(u3 | (u2 << 32)) >> 32;
+        // Each field sum ≤ 2 · 255² = 130050, the pair ≤ 260100: exact
+        // in i32, as is 128 · Σu ≤ 130560.
+        let s_au = (s01 + s23) as i32;
+        let sum_u = (u0 + u1 + u2 + u3) as i32;
+        s_au.wrapping_sub(sum_u.wrapping_mul(128)).wrapping_add(self.kw)
+    }
+}
+
+/// Portable u64-SWAR kernel: two 32-bit-field multiplies per row instead
+/// of four scalar ones, available on every target.
+#[inline]
+pub(crate) fn dot4_rows_swar(w_word: u32, input_offset: i32, xs: &[u32], accs: &mut [i32]) {
+    let blk = SwarBlock::new(w_word, input_offset);
+    for (acc, &x) in accs.iter_mut().zip(xs) {
+        *acc = acc.wrapping_add(blk.dot(x));
+    }
+}
+
+/// SSE2 kernel: two rows per `pmaddwd`.
+///
+/// The weight word is broadcast to both 4-lane halves of an 8×i16 vector
+/// (sign-extended SSE2-only via interleave + arithmetic shift — no
+/// `pmovsxbw` before SSE4.1); each iteration packs two rows' input words
+/// into the other operand and one `_mm_madd_epi16` produces the four
+/// pairwise i16×i16 sums, horizontally added to the two per-row dots.
+/// `pmaddwd`'s only saturation case (both products = (−32768)²) cannot
+/// occur with i8-range operands, so the result is exact.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn dot4_rows_sse2(w_word: u32, input_offset: i32, xs: &[u32], accs: &mut [i32]) {
+    // SAFETY: SSE2 is part of the x86_64 baseline ISA, so the
+    // `target_feature(enable = "sse2")` function below is always callable
+    // on this target (and `HostKernel::available` re-checks at run time).
+    unsafe { dot4_rows_sse2_impl(w_word, input_offset, xs, accs) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn dot4_rows_sse2_impl(w_word: u32, input_offset: i32, xs: &[u32], accs: &mut [i32]) {
+    use std::arch::x86_64::*;
+    let [w0, w1, w2, w3] = unpack4_i8(w_word);
+    let kw = (w0 as i32 + w1 as i32 + w2 as i32 + w3 as i32).wrapping_mul(input_offset);
+    // [w0..w3, w0..w3] as i16: duplicate the word, interleave each byte
+    // with itself and shift the high copy out arithmetically.
+    let w_pair = (w_word as u64 | ((w_word as u64) << 32)) as i64;
+    let wv = _mm_set_epi64x(0, w_pair);
+    let w16 = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(wv, wv));
+    let pairs_n = xs.len() / 2;
+    for p in 0..pairs_n {
+        let x_pair = (xs[2 * p] as u64 | ((xs[2 * p + 1] as u64) << 32)) as i64;
+        let xv = _mm_set_epi64x(0, x_pair);
+        let x16 = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(xv, xv));
+        // [r0p01, r0p23, r1p01, r1p23] → swap adjacent lanes and add.
+        let partial = _mm_madd_epi16(w16, x16);
+        let sums = _mm_add_epi32(partial, _mm_shuffle_epi32::<0b10_11_00_01>(partial));
+        let r0 = _mm_cvtsi128_si32(sums);
+        let r1 = _mm_cvtsi128_si32(_mm_shuffle_epi32::<0b10_10_10_10>(sums));
+        accs[2 * p] = accs[2 * p].wrapping_add(r0.wrapping_add(kw));
+        accs[2 * p + 1] = accs[2 * p + 1].wrapping_add(r1.wrapping_add(kw));
+    }
+    if xs.len() % 2 == 1 {
+        let last = xs.len() - 1;
+        accs[last] = accs[last].wrapping_add(super::dot4_words(w_word, xs[last], input_offset));
+    }
+}
+
+/// NEON kernel: two rows per `smull` (`vmull_s8`) — eight i8×i8 products
+/// widened to i16 at once, pairwise-added twice down to the two per-row
+/// dots. NEON (ASIMD) is part of the aarch64 baseline ISA.
+#[cfg(target_arch = "aarch64")]
+pub(crate) fn dot4_rows_neon(w_word: u32, input_offset: i32, xs: &[u32], accs: &mut [i32]) {
+    // SAFETY: NEON is mandatory on aarch64, so the intrinsics below are
+    // always available on this target.
+    unsafe {
+        use std::arch::aarch64::*;
+        let [w0, w1, w2, w3] = unpack4_i8(w_word);
+        let kw = (w0 as i32 + w1 as i32 + w2 as i32 + w3 as i32).wrapping_mul(input_offset);
+        let w8 = vcreate_s8(w_word as u64 | ((w_word as u64) << 32));
+        let pairs_n = xs.len() / 2;
+        for p in 0..pairs_n {
+            let x8 = vcreate_s8(xs[2 * p] as u64 | ((xs[2 * p + 1] as u64) << 32));
+            let prod = vmull_s8(w8, x8); // 8 × i16, exact
+            let pairs = vpaddlq_s16(prod); // [r0p01, r0p23, r1p01, r1p23]
+            let sums = vpaddq_s32(pairs, pairs); // [r0, r1, r0, r1]
+            let r0 = vgetq_lane_s32::<0>(sums);
+            let r1 = vgetq_lane_s32::<1>(sums);
+            accs[2 * p] = accs[2 * p].wrapping_add(r0.wrapping_add(kw));
+            accs[2 * p + 1] = accs[2 * p + 1].wrapping_add(r1.wrapping_add(kw));
+        }
+        if xs.len() % 2 == 1 {
+            let last = xs.len() - 1;
+            accs[last] =
+                accs[last].wrapping_add(super::dot4_words(w_word, xs[last], input_offset));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    /// Every kernel this target can run, as (name, fn) pairs.
+    #[allow(unused_mut)] // no push on targets without a SIMD variant
+    fn kernels() -> Vec<(&'static str, fn(u32, i32, &[u32], &mut [i32]))> {
+        let mut ks: Vec<(&'static str, fn(u32, i32, &[u32], &mut [i32]))> =
+            vec![("scalar", dot4_rows_scalar), ("swar", dot4_rows_swar)];
+        #[cfg(target_arch = "x86_64")]
+        ks.push(("sse2", dot4_rows_sse2));
+        #[cfg(target_arch = "aarch64")]
+        ks.push(("neon", dot4_rows_neon));
+        ks
+    }
+
+    #[test]
+    fn all_kernels_match_scalar_on_random_rows() {
+        let mut rng = Pcg32::new(0x5A4D);
+        for round in 0..256 {
+            let w_word = rng.next_u32();
+            let off = rng.range_i32(0, 255);
+            let rows = (round % 7) + 1; // covers odd tails and row 1
+            let xs: Vec<u32> = (0..rows).map(|_| rng.next_u32()).collect();
+            let seed_accs: Vec<i32> = (0..rows).map(|_| rng.range_i32(-1000, 1000)).collect();
+            let mut expect = seed_accs.clone();
+            dot4_rows_scalar(w_word, off, &xs, &mut expect);
+            for (name, f) in kernels() {
+                let mut got = seed_accs.clone();
+                f(w_word, off, &xs, &mut got);
+                assert_eq!(got, expect, "{name}: w={w_word:#010x} off={off}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_agree_on_extreme_operands() {
+        // i8 extremes, all-zero weights, max offset: the corners where a
+        // sign-extension or bias slip would show first.
+        let words = [
+            0x8080_8080u32, // all −128
+            0x7f7f_7f7fu32, // all +127
+            0x0000_0000u32, // all zero
+            0x80ff_017fu32, // mixed extremes
+        ];
+        for &w in &words {
+            for &x in &words {
+                for off in [0, 1, 128, 255] {
+                    let xs = [x; 5];
+                    let mut expect = [0i32; 5];
+                    dot4_rows_scalar(w, off, &xs, &mut expect);
+                    for (name, f) in kernels() {
+                        let mut got = [0i32; 5];
+                        f(w, off, &xs, &mut got);
+                        assert_eq!(got, expect, "{name}: w={w:#010x} x={x:#010x} off={off}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_wrap_with_the_accumulator() {
+        // Near-overflow accumulators must wrap identically everywhere.
+        let xs = [0xdead_beefu32, 0x0102_0304, 0x8081_7f00];
+        for (name, f) in kernels() {
+            let mut a = [i32::MAX - 7, i32::MIN + 3, 0];
+            let mut b = a;
+            dot4_rows_scalar(0x7f80_2a15, 200, &xs, &mut a);
+            f(0x7f80_2a15, 200, &xs, &mut b);
+            assert_eq!(a, b, "{name}");
+        }
+    }
+}

@@ -20,6 +20,7 @@
 pub mod baseline;
 pub mod case_logic;
 pub mod csa;
+pub(crate) mod hostdot;
 pub mod int4;
 pub mod sssa;
 pub mod ussa;

@@ -21,12 +21,12 @@
 use super::scheduler::{JobPool, TilePool};
 use crate::error::Result;
 use crate::isa::{DesignAssignment, DesignKind};
-use crate::kernels::ExecMode;
+use crate::kernels::{ExecMode, HostKernel};
 use crate::metrics::MetricRecord;
 use crate::models::builder::{apply_sparsity, random_input, ModelConfig};
 use crate::models::zoo::{build_model, input_shape};
 use crate::simulator::{
-    assigned_backend_tiled, ExecBackend, ModelKey, PreparedCache, PreparedModel,
+    assigned_backend_full, ExecBackend, ModelKey, PreparedCache, PreparedModel,
 };
 use crate::tensor::quant::QuantParams;
 use crate::tensor::QTensor;
@@ -251,6 +251,10 @@ pub struct BatchOptions {
     /// from the request pool — sharing one pool for both levels could
     /// deadlock with every request worker waiting on tile jobs.
     pub tile_threads: usize,
+    /// Host-side multiply kernel for the batched path ([`HostKernel`]):
+    /// `Auto` picks the fastest available SWAR/SIMD routine. Outputs and
+    /// simulated counters are invariant in this choice.
+    pub host_kernel: HostKernel,
 }
 
 impl Default for BatchOptions {
@@ -262,6 +266,7 @@ impl Default for BatchOptions {
             exec_mode: ExecMode::default(),
             cache_capacity: PreparedCache::DEFAULT_CAPACITY,
             tile_threads: 0,
+            host_kernel: HostKernel::Auto,
         }
     }
 }
@@ -325,11 +330,12 @@ impl BatchEngine {
 
     /// Build the execution backend for a spec under this engine's options.
     fn backend(&self, assignment: &DesignAssignment) -> Box<dyn ExecBackend> {
-        assigned_backend_tiled(
+        assigned_backend_full(
             assignment,
             self.opts.verify,
             self.opts.exec_mode,
             self.tiling.clone(),
+            self.opts.host_kernel,
         )
     }
 
@@ -407,8 +413,14 @@ impl BatchEngine {
             report.cfu_stalls += s.cfu_stalls;
             report.loaded_bytes += s.loaded_bytes;
             let seconds = s.cycles as f64 / self.opts.clock_hz as f64;
-            latency.push(seconds);
-            report.latencies.push(seconds);
+            // A non-finite sample (clock_hz 0, counter overflow) would
+            // poison every percentile downstream — keep the invariant
+            // that `latencies` holds only finite values.
+            debug_assert!(seconds.is_finite(), "non-finite latency sample: {seconds}");
+            if seconds.is_finite() {
+                latency.push(seconds);
+                report.latencies.push(seconds);
+            }
             report.predictions.push(s.pred);
         }
         report.latency = latency;
@@ -550,6 +562,27 @@ mod tests {
             assert_eq!(a.cfu_stalls, b.cfu_stalls, "{tag}: stalls");
             assert_eq!(a.loaded_bytes, b.loaded_bytes, "{tag}: bytes");
             assert_eq!(a.predictions, b.predictions, "{tag}: predictions");
+        }
+    }
+
+    #[test]
+    fn forced_host_kernels_match_default_engine() {
+        // The engine under every available host kernel (and the scalar
+        // oracle) must produce the same cycles, stalls and predictions as
+        // the Auto default.
+        let spec = tiny_spec(DesignKind::Csa);
+        let reqs = BatchEngine::gen_requests("dscnn", 3, 61).unwrap();
+        let auto = BatchEngine::new(BatchOptions::default());
+        let a = auto.run_batch(&spec, reqs.clone()).unwrap();
+        for kernel in HostKernel::available_kernels() {
+            let forced =
+                BatchEngine::new(BatchOptions { host_kernel: kernel, ..Default::default() });
+            let b = forced.run_batch(&spec, reqs.clone()).unwrap();
+            assert_eq!(a.total_cycles, b.total_cycles, "{kernel}: cycles");
+            assert_eq!(a.cfu_cycles, b.cfu_cycles, "{kernel}: cfu");
+            assert_eq!(a.cfu_stalls, b.cfu_stalls, "{kernel}: stalls");
+            assert_eq!(a.loaded_bytes, b.loaded_bytes, "{kernel}: bytes");
+            assert_eq!(a.predictions, b.predictions, "{kernel}: predictions");
         }
     }
 

@@ -14,8 +14,9 @@
 use super::scheduler::JobPool;
 use crate::error::Result;
 use crate::isa::{DesignAssignment, DesignKind};
+use crate::kernels::HostKernel;
 use crate::nn::graph::Graph;
-use crate::simulator::{assigned_backend_with_mode, ExecBackend, PreparedModel};
+use crate::simulator::{assigned_backend_full, ExecBackend, PreparedModel};
 use crate::tensor::QTensor;
 use crate::util::stats::{OnlineStats, Percentiles};
 use std::sync::{Arc, Mutex};
@@ -30,11 +31,20 @@ pub struct ServeOptions {
     pub clock_hz: u64,
     /// Verify outputs against the reference ops.
     pub verify: bool,
+    /// Host-side multiply kernel for the batched path ([`HostKernel`]):
+    /// `Auto` picks the fastest available SWAR/SIMD routine. Predictions
+    /// and simulated cycles are invariant in this choice.
+    pub host_kernel: HostKernel,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { threads: 0, clock_hz: 100_000_000, verify: false }
+        ServeOptions {
+            threads: 0,
+            clock_hz: 100_000_000,
+            verify: false,
+            host_kernel: HostKernel::Auto,
+        }
     }
 }
 
@@ -99,10 +109,12 @@ impl Server {
         assignment: &DesignAssignment,
         opts: &ServeOptions,
     ) -> Result<Self> {
-        let backend: Arc<dyn ExecBackend> = Arc::from(assigned_backend_with_mode(
+        let backend: Arc<dyn ExecBackend> = Arc::from(assigned_backend_full(
             assignment,
             opts.verify,
             crate::kernels::ExecMode::default(),
+            None,
+            opts.host_kernel,
         ));
         let prepared = Arc::new(backend.prepare(graph)?);
         Ok(Server {
@@ -169,7 +181,7 @@ mod tests {
         let server = Server::new(
             &info.graph,
             DesignKind::Csa,
-            &ServeOptions { threads: 2, clock_hz: 100_000_000, verify: false },
+            &ServeOptions { threads: 2, ..Default::default() },
         )
         .unwrap();
         let mut rng = Pcg32::new(5);

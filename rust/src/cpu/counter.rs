@@ -2,6 +2,7 @@
 
 use super::cost_model::CostModel;
 use crate::cfu::CfuResponse;
+use crate::error::{Error, Result};
 
 /// Instruction classes tracked by the counter.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -208,17 +209,27 @@ impl CycleCounter {
     /// that keeps loop-interchanged (batched) execution cycle-identical
     /// to the row-major walk (asserted below and by the differential
     /// tier).
+    ///
+    /// The count × row multiplications are checked: an absurdly large
+    /// batch surfaces [`Error::Sim`] instead of silently wrapping the
+    /// counter totals the perf gates compare.
     #[inline]
-    pub fn charge_scaled(&mut self, c: &BulkCharge, times: u64) {
+    pub fn charge_scaled(&mut self, c: &BulkCharge, times: u64) -> Result<()> {
+        let scale = |n: u64| {
+            n.checked_mul(times).ok_or_else(|| {
+                Error::Sim(format!("bulk charge count {n} x {times} rows overflows u64"))
+            })
+        };
         self.charge_bulk(
-            c.alu * times,
-            c.loads * times,
-            c.stores * times,
-            c.branches_taken * times,
-            c.branches_not_taken * times,
-            c.cfu_issues * times,
-            c.cfu_stalls * times,
+            scale(c.alu)?,
+            scale(c.loads)?,
+            scale(c.stores)?,
+            scale(c.branches_taken)?,
+            scale(c.branches_not_taken)?,
+            scale(c.cfu_issues)?,
+            scale(c.cfu_stalls)?,
         );
+        Ok(())
     }
 
     /// Merge another counter (parallel layer/tile simulation): every
@@ -353,7 +364,7 @@ mod tests {
                 a.charge(&c);
             }
             let mut b = CycleCounter::new(model);
-            b.charge_scaled(&c, 7);
+            b.charge_scaled(&c, 7).unwrap();
             assert_eq!(a.cycles(), b.cycles());
             assert_eq!(a.total_instrs(), b.total_instrs());
             assert_eq!(a.cfu_cycles(), b.cfu_cycles());
@@ -361,6 +372,23 @@ mod tests {
             assert_eq!(a.loaded_bytes(), b.loaded_bytes());
             assert_eq!(a.stored_bytes(), b.stored_bytes());
         }
+    }
+
+    #[test]
+    fn charge_scaled_overflow_is_an_error_not_a_wrap() {
+        let c = BulkCharge { alu: u64::MAX / 2, ..Default::default() };
+        let mut a = CycleCounter::new(CostModel::vexriscv());
+        // In range: exactly representable.
+        a.charge_scaled(&c, 2).unwrap();
+        // One more row would wrap the ALU count — must surface Error::Sim
+        // instead of silently corrupting the totals.
+        let mut b = CycleCounter::new(CostModel::vexriscv());
+        let err = b.charge_scaled(&c, 3).unwrap_err();
+        assert!(err.to_string().starts_with("simulation error:"), "{err}");
+        assert!(err.to_string().contains("overflows"), "{err}");
+        // The failed flush must not have partially charged anything.
+        assert_eq!(b.cycles(), 0);
+        assert_eq!(b.total_instrs(), 0);
     }
 
     #[test]

@@ -4,7 +4,7 @@ use super::lane::{
     prepare_lanes, run_lane, run_lane_batched, run_lane_compiled, PreparedLanes,
     INPUT_COST_DENSE, INPUT_COST_GATHER,
 };
-use super::{tile_ranges, ExecMode, KernelRun};
+use super::{tile_ranges_weighted, ExecMode, HostKernel, KernelRun};
 use crate::cfu::AnyCfu;
 use crate::coordinator::scheduler::JobPool;
 use crate::cpu::{CostModel, CycleCounter};
@@ -139,8 +139,21 @@ impl PreparedConv {
         model: &CostModel,
         mode: ExecMode,
     ) -> Result<KernelRun> {
+        self.run_with_kernel(input, model, mode, HostKernel::Auto)
+    }
+
+    /// Run under an explicit [`ExecMode`] and [`HostKernel`]. The kernel
+    /// only affects the batched path's host throughput; outputs and every
+    /// simulated counter total are identical across kernels.
+    pub fn run_with_kernel(
+        &self,
+        input: &QTensor,
+        model: &CostModel,
+        mode: ExecMode,
+        kernel: HostKernel,
+    ) -> Result<KernelRun> {
         match mode {
-            ExecMode::Batched => self.run_batched(input, model),
+            ExecMode::Batched => self.run_batched(input, model, kernel),
             ExecMode::Compiled => self.run_compiled(input, model),
             ExecMode::Interpreted => self.run_interpreted(input, model),
         }
@@ -221,9 +234,10 @@ impl PreparedConv {
         x: &[i8],
         geom: (usize, usize, usize, usize, usize, i64, i64),
         ocs: std::ops::Range<usize>,
+        kernel: HostKernel,
         out: &mut [i8],
         counter: &mut CycleCounter,
-    ) {
+    ) -> Result<()> {
         let op = &self.op;
         let (n, in_h, in_w, out_h, out_w, pad_h, pad_w) = geom;
         let width = ocs.len();
@@ -254,6 +268,7 @@ impl PreparedConv {
                             self.lanes.lane_schedule(oc),
                             input_offset,
                             INPUT_COST_GATHER,
+                            kernel,
                             |b, j| {
                                 dw_gather_word(
                                     x,
@@ -266,7 +281,7 @@ impl PreparedConv {
                             },
                             &mut accs,
                             counter,
-                        );
+                        )?;
                         let col = oc - ocs.start;
                         for (b, &acc) in accs.iter().enumerate() {
                             let p = (b * out_h + oh) * out_w + ow;
@@ -351,10 +366,11 @@ impl PreparedConv {
                                 self.lanes.lane_schedule(lane_idx),
                                 input_offset,
                                 INPUT_COST_DENSE,
+                                kernel,
                                 |b, j| win_words[(b * kk + t) * nb + j],
                                 &mut accs,
                                 counter,
-                            );
+                            )?;
                         }
                         let col = oc - ocs.start;
                         for (b, &acc) in accs.iter().enumerate() {
@@ -365,16 +381,48 @@ impl PreparedConv {
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Per-channel tiling weight: a channel's host work is the total
+    /// visited-block length of its lanes (all `kh*kw` tap lanes for
+    /// normal conv, the single padded tap lane for depthwise).
+    fn channel_weights(&self) -> Vec<u64> {
+        let op = &self.op;
+        (0..op.out_c)
+            .map(|oc| {
+                if op.depthwise {
+                    self.lanes.lane_schedule(oc).visited_blocks() as u64
+                } else {
+                    let kk = op.kh * op.kw;
+                    (0..kk)
+                        .map(|t| self.lanes.lane_schedule(oc * kk + t).visited_blocks() as u64)
+                        .sum()
+                }
+            })
+            .collect()
     }
 
     /// The default batch-amortized path over the full channel range.
-    fn run_batched(&self, input: &QTensor, model: &CostModel) -> Result<KernelRun> {
+    fn run_batched(
+        &self,
+        input: &QTensor,
+        model: &CostModel,
+        kernel: HostKernel,
+    ) -> Result<KernelRun> {
         let op = &self.op;
         let geom = self.check_geometry(input)?;
         let (n, _, _, out_h, out_w, _, _) = geom;
         let mut out = QTensor::zeros(Shape::nhwc(n, out_h, out_w, op.out_c), op.output_params);
         let mut counter = CycleCounter::new(model.clone());
-        self.run_lanes_batched(input.data(), geom, 0..op.out_c, out.data_mut(), &mut counter);
+        self.run_lanes_batched(
+            input.data(),
+            geom,
+            0..op.out_c,
+            kernel,
+            out.data_mut(),
+            &mut counter,
+        )?;
         Ok(KernelRun { output: out, counter })
     }
 
@@ -399,23 +447,42 @@ impl PreparedConv {
         pool: &JobPool,
         tiles: usize,
     ) -> Result<KernelRun> {
+        self.run_tiled_kernel(input, model, pool, tiles, HostKernel::Auto)
+    }
+
+    /// [`run_tiled`](Self::run_tiled) with an explicit [`HostKernel`].
+    ///
+    /// Tile boundaries balance *work*, not channel count: channels are
+    /// split by cumulative visited-block length ([`tile_ranges_weighted`],
+    /// summed over each channel's tap lanes), so a few dense filters
+    /// cannot serialize a tile while the sparse ones idle.
+    pub fn run_tiled_kernel(
+        &self,
+        input: &QTensor,
+        model: &CostModel,
+        pool: &JobPool,
+        tiles: usize,
+        kernel: HostKernel,
+    ) -> Result<KernelRun> {
         let op = &self.op;
         let geom = self.check_geometry(input)?;
         let (n, _, _, out_h, out_w, _, _) = geom;
         let positions = n * out_h * out_w;
         let x = input.data();
-        let ranges = tile_ranges(op.out_c, tiles);
-        let parts: Vec<(Vec<i8>, CycleCounter)> = pool.scoped_map(ranges.clone(), |r| {
-            let mut counter = CycleCounter::new(model.clone());
-            let mut buf = vec![0i8; positions * r.len()];
-            self.run_lanes_batched(x, geom, r, &mut buf, &mut counter);
-            (buf, counter)
-        });
+        let ranges = tile_ranges_weighted(&self.channel_weights(), tiles);
+        let parts: Vec<Result<(Vec<i8>, CycleCounter)>> =
+            pool.scoped_map(ranges.clone(), |r| {
+                let mut counter = CycleCounter::new(model.clone());
+                let mut buf = vec![0i8; positions * r.len()];
+                self.run_lanes_batched(x, geom, r, kernel, &mut buf, &mut counter)?;
+                Ok((buf, counter))
+            });
         let mut out = QTensor::zeros(Shape::nhwc(n, out_h, out_w, op.out_c), op.output_params);
         let mut counter = CycleCounter::new(model.clone());
         let out_data = out.data_mut();
-        for (range, (buf, c)) in ranges.into_iter().zip(parts.iter()) {
-            counter.merge(c);
+        for (range, part) in ranges.into_iter().zip(parts) {
+            let (buf, c) = part?;
+            counter.merge(&c);
             let width = range.len();
             for p in 0..positions {
                 out_data[(p * op.out_c + range.start)..(p * op.out_c + range.end)]
@@ -832,6 +899,63 @@ mod tests {
                         &format!("{design} dw={} tiles={tiles}", op.depthwise),
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn every_host_kernel_matches_the_scalar_oracle() {
+        // Normal + depthwise conv, multi-image batch: SWAR and any
+        // available SIMD kernel must be bit-identical to the scalar
+        // batched loop on outputs and every counter total.
+        let cases = [
+            random_conv(51, 8, 8, 3, 1, Padding::Same, false, 0.5),
+            random_conv(53, 8, 8, 3, 1, Padding::Same, true, 0.4),
+        ];
+        let input = random_input_n(52, 3, 5, 5, 8);
+        let model = CostModel::vexriscv();
+        for op in &cases {
+            for design in [DesignKind::Csa, DesignKind::BaselineSimd] {
+                let prep = PreparedConv::new(op, design).unwrap();
+                let scalar = prep
+                    .run_with_kernel(&input, &model, ExecMode::Batched, HostKernel::Scalar)
+                    .unwrap();
+                for kernel in HostKernel::available_kernels() {
+                    let run =
+                        prep.run_with_kernel(&input, &model, ExecMode::Batched, kernel).unwrap();
+                    assert_runs_identical(
+                        &scalar,
+                        &run,
+                        &format!("{design} dw={} {kernel}", op.depthwise),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_tiles_than_channels_never_dispatches_empty_work() {
+        // Regression: out_c=1 with many requested tiles used to create
+        // empty channel ranges; now a single tile runs and outputs match.
+        let cases = [
+            random_conv(55, 1, 8, 3, 1, Padding::Same, false, 0.4),
+            random_conv(57, 1, 1, 3, 1, Padding::Same, true, 0.3),
+        ];
+        let input_norm = random_input_n(56, 2, 5, 5, 8);
+        let input_dw = random_input_n(58, 2, 5, 5, 1);
+        let model = CostModel::vexriscv();
+        for op in &cases {
+            let input = if op.depthwise { &input_dw } else { &input_norm };
+            let prep = PreparedConv::new(op, DesignKind::Csa).unwrap();
+            let base = prep.run_with_mode(input, &model, ExecMode::Batched).unwrap();
+            for tiles in [2usize, 8] {
+                let pool = JobPool::new(2);
+                let t = prep.run_tiled(input, &model, &pool, tiles).unwrap();
+                assert_runs_identical(
+                    &base,
+                    &t,
+                    &format!("out_c=1 dw={} tiles={tiles}", op.depthwise),
+                );
             }
         }
     }

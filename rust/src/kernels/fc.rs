@@ -3,7 +3,7 @@
 use super::lane::{
     prepare_lanes, run_lane, run_lane_batched, run_lane_compiled, PreparedLanes, INPUT_COST_DENSE,
 };
-use super::{tile_ranges, ExecMode, KernelRun};
+use super::{tile_ranges_weighted, ExecMode, HostKernel, KernelRun};
 use crate::cfu::AnyCfu;
 use crate::coordinator::scheduler::JobPool;
 use crate::cpu::{CostModel, CycleCounter};
@@ -87,9 +87,10 @@ impl PreparedFc {
         xwords: &[u32],
         batch: usize,
         lanes: std::ops::Range<usize>,
+        kernel: HostKernel,
         out: &mut [i8],
         counter: &mut CycleCounter,
-    ) {
+    ) -> Result<()> {
         let op = &self.op;
         let nb = op.in_n / 4;
         let width = lanes.len();
@@ -106,15 +107,17 @@ impl PreparedFc {
                 self.lanes.lane_schedule(o),
                 input_offset,
                 INPUT_COST_DENSE,
+                kernel,
                 |b, j| xwords[b * nb + j],
                 &mut accs,
                 counter,
-            );
+            )?;
             let col = o - lanes.start;
             for (b, &acc) in accs.iter().enumerate() {
                 out[b * width + col] = op.requant.apply(acc);
             }
         }
+        Ok(())
     }
 
     /// Run over a batch of flattened inputs through the schedule arena's
@@ -123,12 +126,26 @@ impl PreparedFc {
         self.run_with_mode(input, model, ExecMode::default())
     }
 
-    /// Run under an explicit [`ExecMode`].
+    /// Run under an explicit [`ExecMode`] with the default (`Auto`) host
+    /// kernel.
     pub fn run_with_mode(
         &self,
         input: &QTensor,
         model: &CostModel,
         mode: ExecMode,
+    ) -> Result<KernelRun> {
+        self.run_with_kernel(input, model, mode, HostKernel::Auto)
+    }
+
+    /// Run under an explicit [`ExecMode`] and [`HostKernel`]. The kernel
+    /// only affects the batched path's host throughput; outputs and every
+    /// simulated counter total are identical across kernels.
+    pub fn run_with_kernel(
+        &self,
+        input: &QTensor,
+        model: &CostModel,
+        mode: ExecMode,
+        kernel: HostKernel,
     ) -> Result<KernelRun> {
         let op = &self.op;
         let batch = self.check_batch(input)?;
@@ -138,7 +155,14 @@ impl PreparedFc {
         match mode {
             ExecMode::Batched => {
                 let xwords = self.pack_rows(x, batch);
-                self.run_lanes_batched(&xwords, batch, 0..op.out_n, out.data_mut(), &mut counter);
+                self.run_lanes_batched(
+                    &xwords,
+                    batch,
+                    0..op.out_n,
+                    kernel,
+                    out.data_mut(),
+                    &mut counter,
+                )?;
             }
             ExecMode::Compiled => {
                 let input_offset = op.input_offset();
@@ -218,22 +242,44 @@ impl PreparedFc {
         pool: &JobPool,
         tiles: usize,
     ) -> Result<KernelRun> {
+        self.run_tiled_kernel(input, model, pool, tiles, HostKernel::Auto)
+    }
+
+    /// [`run_tiled`](Self::run_tiled) with an explicit [`HostKernel`].
+    ///
+    /// Tile boundaries balance *work*, not lane count: lanes are split by
+    /// cumulative visited-block length ([`tile_ranges_weighted`]), so a
+    /// few dense output neurons cannot serialize a tile while the sparse
+    /// ones idle. The merge stays in tile order — outputs and counter
+    /// totals are invariant in the tile/thread count and in the weighting.
+    pub fn run_tiled_kernel(
+        &self,
+        input: &QTensor,
+        model: &CostModel,
+        pool: &JobPool,
+        tiles: usize,
+        kernel: HostKernel,
+    ) -> Result<KernelRun> {
         let op = &self.op;
         let batch = self.check_batch(input)?;
         let x = input.data();
         let xwords = self.pack_rows(x, batch);
-        let ranges = tile_ranges(op.out_n, tiles);
-        let parts: Vec<(Vec<i8>, CycleCounter)> = pool.scoped_map(ranges.clone(), |r| {
-            let mut counter = CycleCounter::new(model.clone());
-            let mut buf = vec![0i8; batch * r.len()];
-            self.run_lanes_batched(&xwords, batch, r, &mut buf, &mut counter);
-            (buf, counter)
-        });
+        let weights: Vec<u64> =
+            (0..op.out_n).map(|o| self.lanes.lane_schedule(o).visited_blocks() as u64).collect();
+        let ranges = tile_ranges_weighted(&weights, tiles);
+        let parts: Vec<Result<(Vec<i8>, CycleCounter)>> =
+            pool.scoped_map(ranges.clone(), |r| {
+                let mut counter = CycleCounter::new(model.clone());
+                let mut buf = vec![0i8; batch * r.len()];
+                self.run_lanes_batched(&xwords, batch, r, kernel, &mut buf, &mut counter)?;
+                Ok((buf, counter))
+            });
         let mut out = QTensor::zeros(Shape::d2(batch, op.out_n), op.output_params);
         let mut counter = CycleCounter::new(model.clone());
         let out_data = out.data_mut();
-        for (range, (buf, c)) in ranges.into_iter().zip(parts.iter()) {
-            counter.merge(c);
+        for (range, part) in ranges.into_iter().zip(parts) {
+            let (buf, c) = part?;
+            counter.merge(&c);
             let width = range.len();
             for b in 0..batch {
                 out_data[(b * op.out_n + range.start)..(b * op.out_n + range.end)]
@@ -337,6 +383,69 @@ mod tests {
                 let pool = JobPool::new(3);
                 let t = prep.run_tiled(&input, &model, &pool, tiles).unwrap();
                 assert_runs_identical(&base, &t, &format!("{design} tiles={tiles}"));
+            }
+        }
+    }
+
+    #[test]
+    fn every_host_kernel_matches_the_scalar_oracle() {
+        // SWAR and (where available) SIMD host kernels must be
+        // bit-identical to the scalar batched loop — outputs AND every
+        // counter total — at batch sizes around the SIMD pair width.
+        let op = random_fc(41, 11, 64, 0.5);
+        let model = CostModel::vexriscv();
+        for &batch in &[1usize, 3, 8] {
+            let input = random_batch_input(42 + batch as u64, batch, 64);
+            for design in DesignKind::ALL {
+                let prep = PreparedFc::new(&op, design).unwrap();
+                let scalar = prep
+                    .run_with_kernel(&input, &model, ExecMode::Batched, HostKernel::Scalar)
+                    .unwrap();
+                for kernel in HostKernel::available_kernels() {
+                    let run =
+                        prep.run_with_kernel(&input, &model, ExecMode::Batched, kernel).unwrap();
+                    assert_runs_identical(&scalar, &run, &format!("{design} b{batch} {kernel}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_tiles_than_lanes_never_dispatches_empty_work() {
+        // Regression: out_n=1 with many requested tiles used to create
+        // empty lane ranges; now a single tile runs and outputs match.
+        let op = random_fc(43, 1, 32, 0.4);
+        let input = random_batch_input(44, 3, 32);
+        let model = CostModel::vexriscv();
+        for design in [DesignKind::BaselineSimd, DesignKind::Csa] {
+            let prep = PreparedFc::new(&op, design).unwrap();
+            let base = prep.run_with_mode(&input, &model, ExecMode::Batched).unwrap();
+            for tiles in [2usize, 8] {
+                let pool = JobPool::new(2);
+                let t = prep.run_tiled(&input, &model, &pool, tiles).unwrap();
+                assert_runs_identical(&base, &t, &format!("{design} out_n=1 tiles={tiles}"));
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_tiling_matches_batched_on_skewed_sparsity() {
+        // Half the output neurons fully dense, half fully zero: the
+        // weighted split must still cover every lane exactly once and
+        // reproduce the batched totals bit-for-bit.
+        let mut op = random_fc(45, 12, 64, 0.0);
+        for o in 6..12 {
+            op.weights[o * 64..(o + 1) * 64].fill(0);
+        }
+        let input = random_batch_input(46, 4, 64);
+        let model = CostModel::vexriscv();
+        for design in [DesignKind::Sssa, DesignKind::Csa] {
+            let prep = PreparedFc::new(&op, design).unwrap();
+            let base = prep.run_with_mode(&input, &model, ExecMode::Batched).unwrap();
+            for tiles in [2usize, 3, 4] {
+                let pool = JobPool::new(3);
+                let t = prep.run_tiled(&input, &model, &pool, tiles).unwrap();
+                assert_runs_identical(&base, &t, &format!("{design} skew tiles={tiles}"));
             }
         }
     }

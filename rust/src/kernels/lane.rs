@@ -38,6 +38,7 @@
 //! interpreted [`run_lane`] CFU oracle (asserted by the differential
 //! tier).
 
+use super::HostKernel;
 use crate::cfu::{dot4_words, AnyCfu};
 use crate::cpu::{BulkCharge, CycleCounter};
 use crate::encoding::int7::clamp_slice_int7;
@@ -189,7 +190,7 @@ pub fn prepare_lanes(weights: &[i8], lane_len: usize, design: DesignKind) -> Res
     let words: Vec<u32> = buf.chunks(4).map(pack4_le).collect();
     let mut arena = ScheduleArena::with_capacity(lanes, blocks_per_lane);
     for lane_words in words.chunks_exact(blocks_per_lane) {
-        compile_lane_into(design, lane_words, &mut arena);
+        compile_lane_into(design, lane_words, &mut arena)?;
     }
     Ok(PreparedLanes {
         words,
@@ -207,7 +208,11 @@ pub fn prepare_lanes(weights: &[i8], lane_len: usize, design: DesignKind) -> Res
 /// word, and the lane's total instruction charges. Everything here is a
 /// pure function of the packed weights — exactly the information
 /// Algorithm 1 bakes into the weight stream offline.
-fn compile_lane_into(design: DesignKind, words: &[u32], arena: &mut ScheduleArena) {
+///
+/// Errors with [`Error::Encoding`] if the arena's visited-block count no
+/// longer fits the u32 CSR offset table (a silent `as u32` truncation
+/// here would make later lanes alias earlier schedules).
+fn compile_lane_into(design: DesignKind, words: &[u32], arena: &mut ScheduleArena) -> Result<()> {
     let nblocks = words.len();
     let start = arena.visited.len();
     let mut cfu_stalls = 0u64;
@@ -260,7 +265,14 @@ fn compile_lane_into(design: DesignKind, words: &[u32], arena: &mut ScheduleAren
         cfu_issues: n * issues_per_block,
         cfu_stalls,
     });
-    arena.offsets.push(arena.visited.len() as u32);
+    let end = u32::try_from(arena.visited.len()).map_err(|_| {
+        Error::Encoding(format!(
+            "schedule arena overflow: {} visited blocks exceed the u32 CSR offset range",
+            arena.visited.len()
+        ))
+    })?;
+    arena.offsets.push(end);
+    Ok(())
 }
 
 impl PreparedLanes {
@@ -426,21 +438,58 @@ where
 /// ([`CycleCounter::charge_scaled`]) — every counter total is linear in
 /// the charge counts, so the interchange cannot change simulated cycles,
 /// instruction counts, stalls or byte traffic (differential tier).
+///
+/// `kernel` picks the host-side multiply routine ([`HostKernel`]):
+/// `Scalar` is the per-word oracle loop; the SWAR/SIMD kernels compute
+/// several rows per step with bit-identical wrapping-i32 results (see
+/// [`crate::cfu::hostdot`]). The kernel choice only changes *host*
+/// throughput — the scaled charge above is independent of it, so
+/// simulated cycles cannot drift.
+///
+/// Errors if the scaled charge flush overflows u64
+/// ([`CycleCounter::charge_scaled`]).
 #[inline]
 pub fn run_lane_batched<F>(
     schedule: LaneScheduleRef<'_>,
     input_offset: i32,
     input_cost: InputCost,
+    kernel: HostKernel,
     mut input_word: F,
     accs: &mut [i32],
     counter: &mut CycleCounter,
-) where
+) -> Result<()>
+where
     F: FnMut(usize, usize) -> u32,
 {
-    for &(j, w_word) in schedule.visited {
-        let j = j as usize;
-        for (row, acc) in accs.iter_mut().enumerate() {
-            *acc = acc.wrapping_add(dot4_words(w_word, input_word(row, j), input_offset));
+    match kernel.resolve() {
+        HostKernel::Scalar => {
+            for &(j, w_word) in schedule.visited {
+                let j = j as usize;
+                for (row, acc) in accs.iter_mut().enumerate() {
+                    *acc = acc.wrapping_add(dot4_words(w_word, input_word(row, j), input_offset));
+                }
+            }
+        }
+        resolved => {
+            // Multi-row path: materialize each block's input words into a
+            // fixed-size scratch chunk and hand whole row slices to the
+            // SWAR/SIMD kernel. The chunk lives on the stack (no per-call
+            // allocation) and bounds the scratch footprint for big batches.
+            let rows_fn = resolved.rows_fn();
+            const ROW_CHUNK: usize = 64;
+            let mut xbuf = [0u32; ROW_CHUNK];
+            for &(j, w_word) in schedule.visited {
+                let j = j as usize;
+                let mut start = 0usize;
+                while start < accs.len() {
+                    let len = (accs.len() - start).min(ROW_CHUNK);
+                    for (slot, row) in xbuf[..len].iter_mut().zip(start..start + len) {
+                        *slot = input_word(row, j);
+                    }
+                    rows_fn(w_word, input_offset, &xbuf[..len], &mut accs[start..start + len]);
+                    start += len;
+                }
+            }
         }
     }
     let n = schedule.visited.len() as u64;
@@ -450,7 +499,7 @@ pub fn run_lane_batched<F>(
         loads: c.loads + n * input_cost.loads,
         ..*c
     };
-    counter.charge_scaled(&per_row, accs.len() as u64);
+    counter.charge_scaled(&per_row, accs.len() as u64)
 }
 
 #[cfg(test)]
@@ -647,7 +696,8 @@ mod tests {
                 })
                 .collect();
             let offset = rng.range_i32(0, 255);
-            for &batch in &[1usize, 2, 5, 8] {
+            // 67 crosses the SIMD kernels' 64-row chunk boundary.
+            for &batch in &[1usize, 2, 5, 8, 67] {
                 let rows: Vec<Vec<i8>> = (0..batch)
                     .map(|_| {
                         (0..lane_len).map(|_| rng.range_i32(-128, 127) as i8).collect()
@@ -670,22 +720,32 @@ mod tests {
                                 )
                             })
                             .collect();
-                        let mut c_bat = CycleCounter::new(model.clone());
-                        let mut accs = vec![11i32; batch];
-                        run_lane_batched(
-                            prep.lane_schedule(0),
-                            offset,
-                            INPUT_COST_GATHER,
-                            |row, j| pack4_le(&rows[row][j * 4..j * 4 + 4]),
-                            &mut accs,
-                            &mut c_bat,
-                        );
-                        assert_eq!(accs, per_row, "trial {trial} {design} b{batch}: accs");
-                        assert_counters_equal(
-                            &c_row,
-                            &c_bat,
-                            &format!("trial {trial} {design} b{batch}"),
-                        );
+                        // Every available host kernel must reproduce the
+                        // per-row walk bit-exactly — accumulators AND
+                        // counter totals.
+                        for kernel in HostKernel::available_kernels() {
+                            let mut c_bat = CycleCounter::new(model.clone());
+                            let mut accs = vec![11i32; batch];
+                            run_lane_batched(
+                                prep.lane_schedule(0),
+                                offset,
+                                INPUT_COST_GATHER,
+                                kernel,
+                                |row, j| pack4_le(&rows[row][j * 4..j * 4 + 4]),
+                                &mut accs,
+                                &mut c_bat,
+                            )
+                            .unwrap();
+                            assert_eq!(
+                                accs, per_row,
+                                "trial {trial} {design} b{batch} {kernel}: accs"
+                            );
+                            assert_counters_equal(
+                                &c_row,
+                                &c_bat,
+                                &format!("trial {trial} {design} b{batch} {kernel}"),
+                            );
+                        }
                     }
                 }
             }
@@ -763,10 +823,12 @@ mod tests {
                 prep.lane_schedule(0),
                 128,
                 INPUT_COST_DENSE,
+                HostKernel::Scalar,
                 |_, j| pack4_le(&xs[j * 4..j * 4 + 4]),
                 &mut accs,
                 &mut c_bat,
-            );
+            )
+            .unwrap();
             assert_eq!(accs, vec![3; 3], "{design}: batched all-zero accs");
             // SSSA/CSA visit only the leading zero block of the lane.
             if design.uses_lookahead_encoding() {

@@ -99,12 +99,167 @@ pub struct KernelRun {
     pub counter: CycleCounter,
 }
 
+/// Env var overriding how [`HostKernel::Auto`] resolves
+/// (`scalar`/`swar`/`sse2`/`neon`). CI forces both code paths through
+/// it; explicit kernel choices ignore it, so kernel-sweep tests stay
+/// deterministic under a forced environment.
+pub const HOST_KERNEL_ENV: &str = "SPARSE_RISCV_HOST_KERNEL";
+
+/// Host-side arithmetic kernel for the batched lane walk.
+///
+/// Selects how [`lane::run_lane_batched`] multiplies each visited packed
+/// weight word against the batch's packed input rows. Purely a *host
+/// throughput* choice: simulated cycles come from prepare-time
+/// [`crate::cpu::BulkCharge`]s, so every variant is cycle-invariant and
+/// bit-identical in outputs (pinned by the differential tier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum HostKernel {
+    /// Resolve at run time: the [`HOST_KERNEL_ENV`] override when set to
+    /// an available kernel, else the best available SIMD/SWAR kernel.
+    #[default]
+    Auto,
+    /// The per-row scalar loop — the host-side oracle the other kernels
+    /// are differentially pinned against.
+    Scalar,
+    /// Portable u64-SWAR kernel (two 32-bit-field multiplies per row).
+    Swar,
+    /// SSE2 `pmaddwd` kernel, two rows per multiply (x86-64 only).
+    Sse2,
+    /// NEON `smull` kernel, two rows per multiply (aarch64 only).
+    Neon,
+}
+
+impl HostKernel {
+    /// Every selectable kernel, including ones this host may not support.
+    pub const ALL: [HostKernel; 5] = [
+        HostKernel::Auto,
+        HostKernel::Scalar,
+        HostKernel::Swar,
+        HostKernel::Sse2,
+        HostKernel::Neon,
+    ];
+
+    /// Parse a CLI/env name (`auto`/`scalar`/`swar`/`sse2`/`neon`).
+    pub fn parse(s: &str) -> Option<HostKernel> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(HostKernel::Auto),
+            "scalar" => Some(HostKernel::Scalar),
+            "swar" => Some(HostKernel::Swar),
+            "sse2" => Some(HostKernel::Sse2),
+            "neon" => Some(HostKernel::Neon),
+            _ => None,
+        }
+    }
+
+    /// Short name for flags, labels and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            HostKernel::Auto => "auto",
+            HostKernel::Scalar => "scalar",
+            HostKernel::Swar => "swar",
+            HostKernel::Sse2 => "sse2",
+            HostKernel::Neon => "neon",
+        }
+    }
+
+    /// Whether this host can run the kernel. `Auto`, `Scalar` and `Swar`
+    /// always can; the `std::arch` variants answer per target, with SSE2
+    /// re-confirmed by runtime feature detection.
+    pub fn available(self) -> bool {
+        match self {
+            HostKernel::Auto | HostKernel::Scalar | HostKernel::Swar => true,
+            HostKernel::Sse2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("sse2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            // NEON (ASIMD) is part of the aarch64 baseline ISA.
+            HostKernel::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// Total resolution to a concrete, available kernel: `Auto` takes
+    /// the cached [`HOST_KERNEL_ENV`] override when it names an
+    /// available kernel, else the best available (SIMD over SWAR); an
+    /// explicitly requested kernel this host cannot run degrades to the
+    /// portable SWAR path (the CLI rejects that case up front with a
+    /// clear error instead).
+    pub fn resolve(self) -> HostKernel {
+        match self {
+            HostKernel::Auto => env_override().unwrap_or_else(best_available),
+            k if k.available() => k,
+            _ => HostKernel::Swar,
+        }
+    }
+
+    /// The concrete kernels this host can run (for differential sweeps).
+    pub fn available_kernels() -> Vec<HostKernel> {
+        [HostKernel::Scalar, HostKernel::Swar, HostKernel::Sse2, HostKernel::Neon]
+            .into_iter()
+            .filter(|k| k.available())
+            .collect()
+    }
+
+    /// The multi-row dot kernel to run per visited block (`Auto` and
+    /// unavailable variants fall back to the portable SWAR kernel; the
+    /// scalar path is dispatched separately in `run_lane_batched`).
+    pub(crate) fn rows_fn(self) -> fn(u32, i32, &[u32], &mut [i32]) {
+        match self {
+            HostKernel::Scalar => crate::cfu::hostdot::dot4_rows_scalar,
+            HostKernel::Swar => crate::cfu::hostdot::dot4_rows_swar,
+            #[cfg(target_arch = "x86_64")]
+            HostKernel::Sse2 => crate::cfu::hostdot::dot4_rows_sse2,
+            #[cfg(target_arch = "aarch64")]
+            HostKernel::Neon => crate::cfu::hostdot::dot4_rows_neon,
+            _ => crate::cfu::hostdot::dot4_rows_swar,
+        }
+    }
+}
+
+impl std::fmt::Display for HostKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Cached [`HOST_KERNEL_ENV`] parse (checked once per process). `auto`
+/// and unavailable kernels are ignored rather than erroring: the
+/// override is a CI forcing knob, not a correctness input.
+fn env_override() -> Option<HostKernel> {
+    static OVERRIDE: std::sync::OnceLock<Option<HostKernel>> = std::sync::OnceLock::new();
+    *OVERRIDE.get_or_init(|| {
+        std::env::var(HOST_KERNEL_ENV)
+            .ok()
+            .and_then(|v| HostKernel::parse(&v))
+            .filter(|k| *k != HostKernel::Auto && k.available())
+    })
+}
+
+fn best_available() -> HostKernel {
+    if HostKernel::Sse2.available() {
+        HostKernel::Sse2
+    } else if HostKernel::Neon.available() {
+        HostKernel::Neon
+    } else {
+        HostKernel::Swar
+    }
+}
+
 /// Split `n` lanes into at most `tiles` contiguous near-equal ranges
 /// (the intra-layer tiling grid). The split depends only on `(n,
 /// tiles)`, so a given tile count always produces the same deterministic
-/// partition.
+/// partition. Every returned range is non-empty (`n = 0` yields no
+/// tiles), so empty tiles are never dispatched as scoped jobs.
 pub fn tile_ranges(n: usize, tiles: usize) -> Vec<std::ops::Range<usize>> {
-    let tiles = tiles.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    let tiles = tiles.clamp(1, n);
     let base = n / tiles;
     let extra = n % tiles;
     let mut out = Vec::with_capacity(tiles);
@@ -114,12 +269,58 @@ pub fn tile_ranges(n: usize, tiles: usize) -> Vec<std::ops::Range<usize>> {
         out.push(start..start + len);
         start += len;
     }
+    debug_assert_eq!(out.last().map_or(0, |r| r.end), n, "tiles must cover all lanes");
+    out
+}
+
+/// Split `weights.len()` lanes into at most `tiles` contiguous ranges of
+/// near-equal *cumulative weight* (here: per-lane visited-block counts
+/// from the [`lane::ScheduleArena`]). A count-based split serializes a
+/// layer whose dense lanes cluster in one tile; cutting at cumulative
+/// weight quantiles keeps tile work balanced under skewed sparsity.
+/// Deterministic in `(weights, tiles)`; every range is non-empty and the
+/// ranges cover `0..weights.len()` exactly. All-zero weights (or a
+/// single tile) fall back to the count split.
+pub fn tile_ranges_weighted(weights: &[u64], tiles: usize) -> Vec<std::ops::Range<usize>> {
+    let n = weights.len();
+    let total: u64 = weights.iter().sum();
+    let tiles = tiles.clamp(1, n.max(1));
+    if n == 0 || total == 0 || tiles == 1 {
+        return tile_ranges(n, tiles);
+    }
+    // prefix[i] = total weight of lanes [0, i).
+    let mut prefix = Vec::with_capacity(n + 1);
+    let mut acc = 0u64;
+    prefix.push(0u64);
+    for &w in weights {
+        acc += w;
+        prefix.push(acc);
+    }
+    let mut out = Vec::with_capacity(tiles);
+    let mut start = 0usize;
+    for k in 1..=tiles {
+        let end = if k == tiles {
+            n
+        } else {
+            // Cut where the cumulative weight crosses the k-th quantile,
+            // clamped so this tile takes at least one lane and leaves at
+            // least one for each remaining tile (`start` stays strictly
+            // below `n - (tiles - k)` by induction, so the clamp bounds
+            // are always ordered).
+            let target = (total as u128 * k as u128 / tiles as u128) as u64;
+            let cut = prefix.partition_point(|&p| p < target);
+            cut.clamp(start + 1, n - (tiles - k))
+        };
+        out.push(start..end);
+        start = end;
+    }
+    debug_assert_eq!(out.last().map_or(0, |r| r.end), n, "tiles must cover all lanes");
     out
 }
 
 #[cfg(test)]
 mod tests {
-    use super::tile_ranges;
+    use super::{tile_ranges, tile_ranges_weighted, HostKernel};
 
     #[test]
     fn tile_ranges_cover_exactly_once() {
@@ -137,5 +338,91 @@ mod tests {
                 assert_eq!(total, n);
             }
         }
+    }
+
+    #[test]
+    fn tile_ranges_never_dispatch_empty_tiles() {
+        // More tiles than lanes: one tile per lane, never an empty range.
+        for n in [1usize, 2, 5] {
+            for tiles in [n + 1, 4 * n, 64] {
+                let ranges = tile_ranges(n, tiles);
+                assert_eq!(ranges.len(), n, "n={n} tiles={tiles}");
+                assert!(ranges.iter().all(|r| r.len() == 1));
+            }
+        }
+        // Zero lanes: no jobs at all rather than a dispatched 0..0 tile.
+        assert!(tile_ranges(0, 4).is_empty());
+    }
+
+    fn assert_partition(ranges: &[std::ops::Range<usize>], n: usize, tag: &str) {
+        assert_eq!(ranges.first().unwrap().start, 0, "{tag}");
+        assert_eq!(ranges.last().unwrap().end, n, "{tag}");
+        for pair in ranges.windows(2) {
+            assert_eq!(pair[0].end, pair[1].start, "{tag}: contiguous");
+        }
+        assert!(ranges.iter().all(|r| !r.is_empty()), "{tag}: non-empty");
+    }
+
+    #[test]
+    fn weighted_tiles_balance_skewed_weights() {
+        // One dense lane dominating a count split: the weighted split
+        // must isolate it instead of pairing it with half the layer.
+        let weights = [1000u64, 1, 1, 1, 1, 1, 1, 1];
+        let ranges = tile_ranges_weighted(&weights, 2);
+        assert_partition(&ranges, weights.len(), "skewed");
+        assert_eq!(ranges[0], 0..1, "dense lane gets its own tile");
+        assert_eq!(ranges[1], 1..8);
+
+        // Uniform weights degrade to the near-equal count split.
+        let uniform = [5u64; 12];
+        assert_eq!(tile_ranges_weighted(&uniform, 3), tile_ranges(12, 3));
+
+        // All-zero weights (a fully-pruned layer) fall back cleanly.
+        assert_eq!(tile_ranges_weighted(&[0u64; 7], 3), tile_ranges(7, 3));
+    }
+
+    #[test]
+    fn weighted_tiles_cover_exactly_once_on_random_weights() {
+        let mut rng = crate::util::Pcg32::new(0x71E5);
+        for n in [1usize, 2, 3, 9, 40] {
+            for tiles in [1usize, 2, 3, 8, 64] {
+                let weights: Vec<u64> =
+                    (0..n).map(|_| rng.below(50) as u64 * u64::from(rng.bernoulli(0.6))).collect();
+                let ranges = tile_ranges_weighted(&weights, tiles);
+                assert!(ranges.len() <= tiles.min(n).max(1));
+                assert_partition(&ranges, n, &format!("n={n} tiles={tiles}"));
+            }
+        }
+    }
+
+    #[test]
+    fn host_kernel_parse_name_roundtrip() {
+        for k in HostKernel::ALL {
+            assert_eq!(HostKernel::parse(k.name()), Some(k));
+            assert_eq!(k.to_string(), k.name());
+        }
+        assert_eq!(HostKernel::parse("SWAR"), Some(HostKernel::Swar));
+        assert_eq!(HostKernel::parse("avx512"), None);
+        assert_eq!(HostKernel::default(), HostKernel::Auto);
+    }
+
+    #[test]
+    fn host_kernel_resolution_is_total_and_available() {
+        for k in HostKernel::ALL {
+            let r = k.resolve();
+            assert_ne!(r, HostKernel::Auto, "{k} must resolve to a concrete kernel");
+            assert!(r.available(), "{k} resolved to unavailable {r}");
+            // Resolution is idempotent.
+            assert_eq!(r.resolve(), r);
+        }
+        // An explicitly chosen available kernel is honored verbatim.
+        for k in HostKernel::available_kernels() {
+            assert_eq!(k.resolve(), k);
+            assert_ne!(k, HostKernel::Auto);
+        }
+        // The portable kernels exist everywhere.
+        let avail = HostKernel::available_kernels();
+        assert!(avail.contains(&HostKernel::Scalar));
+        assert!(avail.contains(&HostKernel::Swar));
     }
 }

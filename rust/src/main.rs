@@ -13,7 +13,7 @@ use sparse_riscv::coordinator::serve::{Server, ServeOptions};
 use sparse_riscv::encoding::lookahead::encode_lanes;
 use sparse_riscv::explorer::{explore, profile_graph, ExplorerOptions};
 use sparse_riscv::isa::{DesignAssignment, DesignKind};
-use sparse_riscv::kernels::ExecMode;
+use sparse_riscv::kernels::{ExecMode, HostKernel};
 use sparse_riscv::metrics::{diff as metrics_diff, BaselineStore, Tolerances};
 use sparse_riscv::models::builder::{
     apply_sparsity_plan, random_input, widen_weights_to_int8, ModelConfig,
@@ -71,6 +71,11 @@ fn cli() -> Command {
                 .arg(ArgSpec::flag(
                     "interpreted",
                     "force the interpreted CFU oracle instead of compiled lane schedules",
+                ))
+                .arg(ArgSpec::opt(
+                    "host-kernel",
+                    "auto",
+                    "host multiply kernel for batched lanes (auto|scalar|swar|sse2|neon)",
                 )),
         )
         .subcommand(
@@ -155,6 +160,25 @@ fn parse_designs(s: &str) -> Result<Vec<DesignKind>, String> {
         .collect()
 }
 
+/// Parse `--host-kernel`, rejecting kernels this host cannot run with a
+/// message that names the ones it can.
+fn parse_host_kernel(s: &str) -> sparse_riscv::Result<HostKernel> {
+    let kernel = HostKernel::parse(s).ok_or_else(|| {
+        sparse_riscv::Error::Cli(format!(
+            "unknown --host-kernel '{s}' (want auto|scalar|swar|sse2|neon)"
+        ))
+    })?;
+    if !kernel.available() {
+        let available: Vec<&str> =
+            HostKernel::available_kernels().iter().map(|k| k.name()).collect();
+        return Err(sparse_riscv::Error::Cli(format!(
+            "--host-kernel {s} is not available on this host (available: auto, {})",
+            available.join(", ")
+        )));
+    }
+    Ok(kernel)
+}
+
 fn cmd_experiment(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     let cfg = {
         let path = args.get("config")?;
@@ -236,6 +260,7 @@ fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     } else {
         ExecMode::default()
     };
+    let host_kernel = parse_host_kernel(args.get("host-kernel")?)?;
     let engine = BatchEngine::new(BatchOptions {
         threads: args.get_usize("threads")?,
         clock_hz: 100_000_000,
@@ -243,16 +268,19 @@ fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
         exec_mode,
         cache_capacity: args.get_usize("cache-cap")?,
         tile_threads: args.get_usize("tile-threads")?,
+        host_kernel,
     });
     let n = args.get_usize("requests")?;
     let reqs = BatchEngine::gen_requests(&model, n, args.get_u64("seed")?)?;
     let report = engine.run_stream(&spec, reqs, batch)?;
     println!(
-        "served {} requests on {} ({} lanes) in batches of {batch} across {} workers \
-         + {} tile workers (prepared-model cache: {} builds, {} hits, {} evictions, cap {})",
+        "served {} requests on {} ({} lanes, {} host kernel) in batches of {batch} across \
+         {} workers + {} tile workers (prepared-model cache: {} builds, {} hits, {} \
+         evictions, cap {})",
         report.completed,
         report.design_label(),
         exec_mode.name(),
+        host_kernel.resolve().name(),
         engine.workers(),
         engine.tile_workers(),
         report.cache_misses,
@@ -421,6 +449,7 @@ fn cmd_explore(args: &ParsedArgs) -> sparse_riscv::Result<()> {
             threads: args.get_usize("threads")?,
             clock_hz: 100_000_000,
             verify: true,
+            host_kernel: HostKernel::Auto,
         };
         let mut rng = Pcg32::new(args.get_u64("seed")?);
         let n = args.get_usize("requests")?.max(1);

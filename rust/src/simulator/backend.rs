@@ -23,7 +23,7 @@
 
 use crate::error::Result;
 use crate::isa::{DesignAssignment, DesignKind};
-use crate::kernels::ExecMode;
+use crate::kernels::{ExecMode, HostKernel};
 use crate::nn::graph::Graph;
 use crate::simulator::{PreparedModel, SimEngine, SimReport};
 use crate::tensor::QTensor;
@@ -101,11 +101,26 @@ pub fn assigned_backend_tiled(
     mode: ExecMode,
     tiling: Option<crate::coordinator::scheduler::TilePool>,
 ) -> Box<dyn ExecBackend> {
+    assigned_backend_full(assignment, verify, mode, tiling, HostKernel::Auto)
+}
+
+/// The fully-explicit backend constructor: assignment, verification,
+/// lane execution mode, optional intra-layer tiling, and the host-side
+/// multiply kernel for the batched path ([`HostKernel`] — host
+/// throughput only; outputs and simulated cycles are invariant in it).
+pub fn assigned_backend_full(
+    assignment: &DesignAssignment,
+    verify: bool,
+    mode: ExecMode,
+    tiling: Option<crate::coordinator::scheduler::TilePool>,
+    host_kernel: HostKernel,
+) -> Box<dyn ExecBackend> {
     Box::new(
         SimEngine::for_assignment(assignment.clone())
             .with_verify(verify)
             .with_exec_mode(mode)
-            .with_tiling(tiling),
+            .with_tiling(tiling)
+            .with_host_kernel(host_kernel),
     )
 }
 

@@ -4,7 +4,7 @@ use crate::coordinator::scheduler::TilePool;
 use crate::cpu::{CostModel, CycleCounter};
 use crate::error::{Error, Result};
 use crate::isa::{DesignAssignment, DesignKind};
-use crate::kernels::{ExecMode, PreparedConv, PreparedFc};
+use crate::kernels::{ExecMode, HostKernel, PreparedConv, PreparedFc};
 use crate::nn::activation::{add, relu};
 use crate::nn::graph::{Graph, Layer};
 use crate::nn::pooling::{avg_pool2d, global_avg_pool, max_pool2d};
@@ -117,6 +117,11 @@ pub struct SimEngine {
     /// uses all cores. Outputs and every cycle total are invariant in
     /// the tile count (differential tier).
     pub tiling: Option<TilePool>,
+    /// Host-side multiply routine for the batched path ([`HostKernel`]):
+    /// `Auto` (default) picks the fastest available SWAR/SIMD kernel.
+    /// Outputs and simulated cycles are invariant in this choice
+    /// (differential tier) — it only changes host wall-clock.
+    pub host_kernel: HostKernel,
 }
 
 impl SimEngine {
@@ -134,6 +139,7 @@ impl SimEngine {
             verify: false,
             exec_mode: ExecMode::default(),
             tiling: None,
+            host_kernel: HostKernel::Auto,
         }
     }
 
@@ -164,23 +170,39 @@ impl SimEngine {
         self
     }
 
+    /// Force a host-side multiply kernel for the batched path (e.g.
+    /// `Scalar` as the oracle in differential runs, or an explicit SIMD
+    /// kernel in benches).
+    pub fn with_host_kernel(mut self, kernel: HostKernel) -> Self {
+        self.host_kernel = kernel;
+        self
+    }
+
     /// Run one MAC kernel under this engine's mode and tiling config.
     fn run_conv(&self, p: &PreparedConv, input: &QTensor) -> Result<crate::kernels::KernelRun> {
         match (&self.tiling, self.exec_mode) {
-            (Some(tp), ExecMode::Batched) if tp.workers() > 1 => {
-                p.run_tiled(input, &self.cost_model, tp.pool(), tp.workers())
-            }
-            _ => p.run_with_mode(input, &self.cost_model, self.exec_mode),
+            (Some(tp), ExecMode::Batched) if tp.workers() > 1 => p.run_tiled_kernel(
+                input,
+                &self.cost_model,
+                tp.pool(),
+                tp.workers(),
+                self.host_kernel,
+            ),
+            _ => p.run_with_kernel(input, &self.cost_model, self.exec_mode, self.host_kernel),
         }
     }
 
     /// [`SimEngine::run_conv`] for dense layers.
     fn run_fc(&self, p: &PreparedFc, input: &QTensor) -> Result<crate::kernels::KernelRun> {
         match (&self.tiling, self.exec_mode) {
-            (Some(tp), ExecMode::Batched) if tp.workers() > 1 => {
-                p.run_tiled(input, &self.cost_model, tp.pool(), tp.workers())
-            }
-            _ => p.run_with_mode(input, &self.cost_model, self.exec_mode),
+            (Some(tp), ExecMode::Batched) if tp.workers() > 1 => p.run_tiled_kernel(
+                input,
+                &self.cost_model,
+                tp.pool(),
+                tp.workers(),
+                self.host_kernel,
+            ),
+            _ => p.run_with_kernel(input, &self.cost_model, self.exec_mode, self.host_kernel),
         }
     }
 
@@ -475,6 +497,33 @@ mod tests {
                     r.loaded_bytes(),
                     base.loaded_bytes(),
                     "{design} t{threads}: loaded bytes"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn host_kernel_choice_never_changes_outputs_or_cycles() {
+        // Full-model invariance: every available SWAR/SIMD host kernel
+        // (and Auto) must match the scalar-kernel engine bit-for-bit on
+        // outputs and every aggregate counter.
+        let (graph, input) = dscnn_setup(0.5, 0.3);
+        for design in [DesignKind::Csa, DesignKind::BaselineSimd] {
+            let scalar = SimEngine::new(design).with_host_kernel(HostKernel::Scalar);
+            let prepared = scalar.prepare(&graph).unwrap();
+            let base = scalar.run(&prepared, &input).unwrap();
+            let mut kernels = HostKernel::available_kernels();
+            kernels.push(HostKernel::Auto);
+            for kernel in kernels {
+                let engine = SimEngine::new(design).with_host_kernel(kernel);
+                let r = engine.run(&prepared, &input).unwrap();
+                assert_eq!(r.output.data(), base.output.data(), "{design} {kernel}: outputs");
+                assert_eq!(r.total_cycles, base.total_cycles, "{design} {kernel}: cycles");
+                assert_eq!(r.mac_cycles, base.mac_cycles, "{design} {kernel}: mac");
+                assert_eq!(
+                    r.counter.total_instrs(),
+                    base.counter.total_instrs(),
+                    "{design} {kernel}: instrs"
                 );
             }
         }

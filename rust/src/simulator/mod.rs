@@ -19,7 +19,8 @@ pub mod backend;
 pub mod engine;
 
 pub use backend::{
-    assigned_backend_tiled, assigned_backend_with_mode, backend_for, backend_with_mode,
-    oracle_backend_for, verified_backend_for, ExecBackend, ModelKey, PreparedCache,
+    assigned_backend_full, assigned_backend_tiled, assigned_backend_with_mode, backend_for,
+    backend_with_mode, oracle_backend_for, verified_backend_for, ExecBackend, ModelKey,
+    PreparedCache,
 };
 pub use engine::{LayerStats, PreparedModel, SimEngine, SimReport};

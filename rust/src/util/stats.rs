@@ -125,7 +125,10 @@ impl Percentiles {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // `total_cmp` is a total order over every f64 (NaN sorts after
+            // +inf), so a stray non-finite sample can never panic the sort
+            // mid-serve; `partial_cmp(..).unwrap()` would.
+            self.xs.sort_by(f64::total_cmp);
             self.sorted = true;
         }
     }
@@ -222,6 +225,20 @@ mod tests {
         assert!((p.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((p.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!((p.percentile(99.0) - 99.01).abs() < 0.011);
+    }
+
+    #[test]
+    fn percentiles_survive_nan_samples() {
+        // A NaN sample must not panic the sort (the old
+        // `partial_cmp().unwrap()` did) and must sort deterministically
+        // to the top under `total_cmp`, leaving low percentiles exact.
+        let mut p = Percentiles::new();
+        for x in [3.0, f64::NAN, 1.0, 2.0] {
+            p.push(x);
+        }
+        assert_eq!(p.percentile(0.0), 1.0);
+        assert!((p.median() - 2.5).abs() < 1e-9);
+        assert!(p.percentile(100.0).is_nan());
     }
 
     #[test]

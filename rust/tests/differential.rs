@@ -13,6 +13,12 @@
 //! multi-image batches, all-zero lanes, depthwise padded tails,
 //! INT7-clamp edge values, 1-vs-N thread tiles, and heterogeneous
 //! per-layer assignments.
+//!
+//! A further tier sweeps the host-side SWAR/SIMD multiply kernels
+//! against the scalar oracle loop: every kernel this host can run must
+//! produce identical outputs AND identical simulated counters (the host
+//! kernel is a pure host-speed choice and must never leak into the
+//! simulated cycle accounting).
 
 use sparse_riscv::cfu::{build_cfu, AnyCfu, Cfu};
 use sparse_riscv::encoding::int7::clamp_int7;
@@ -547,6 +553,66 @@ fn all_zero_layer_matches_oracle_in_every_path() {
                 golden.counter.loaded_bytes(),
                 "{design}/{tag}: loaded bytes"
             );
+        }
+    }
+}
+
+/// Host-kernel differential: every SWAR/SIMD host kernel available on
+/// this machine must match the scalar oracle loop bit-for-bit — outputs
+/// AND every simulated counter total — across the zoo at small batches,
+/// and on dscnn at batches that exercise the kernels' 64-row chunking
+/// (8 and 64 images). `SPARSE_RISCV_HOST_KERNEL` only biases `Auto`
+/// resolution, so forcing a kernel here is env-independent.
+#[test]
+fn host_simd_kernels_match_scalar_oracle_across_zoo() {
+    use sparse_riscv::kernels::HostKernel;
+    use sparse_riscv::models::builder::{apply_sparsity, random_input, ModelConfig};
+    use sparse_riscv::models::zoo::{build_model, model_names};
+    use sparse_riscv::simulator::{SimEngine, SimReport};
+
+    fn assert_reports_identical(a: &SimReport, b: &SimReport, tag: &str) {
+        assert_eq!(a.output.data(), b.output.data(), "{tag}: outputs");
+        assert_eq!(a.total_cycles, b.total_cycles, "{tag}: cycles");
+        assert_eq!(a.mac_cycles, b.mac_cycles, "{tag}: mac cycles");
+        assert_eq!(a.cfu_stalls(), b.cfu_stalls(), "{tag}: stalls");
+        assert_eq!(a.loaded_bytes(), b.loaded_bytes(), "{tag}: loaded bytes");
+        assert_eq!(a.counter.total_instrs(), b.counter.total_instrs(), "{tag}: instrs");
+    }
+
+    let kernels: Vec<HostKernel> = HostKernel::available_kernels()
+        .into_iter()
+        .filter(|&k| k != HostKernel::Scalar)
+        .collect();
+    for model in model_names() {
+        let cfg = ModelConfig { scale: 0.07, ..Default::default() };
+        let mut info = build_model(model, &cfg).unwrap();
+        apply_sparsity(&mut info.graph, 0.5, 0.3);
+        let mut rng = Pcg32::new(0x51AD);
+        let base = if model == "mobilenetv2" {
+            sparse_riscv::tensor::Shape::nhwc(1, 32, 32, 4)
+        } else {
+            info.input_shape.clone()
+        };
+        // Batches 8 and 64 cross the SIMD kernels' 64-row chunk boundary;
+        // only the cheapest model pays for them so the sweep stays CI-fast.
+        let batches: &[usize] = if model == "dscnn" { &[1, 3, 8, 64] } else { &[1, 3] };
+        for design in DesignKind::ALL {
+            let scalar = SimEngine::new(design).with_host_kernel(HostKernel::Scalar);
+            let prepared = scalar.prepare(&info.graph).unwrap();
+            for &batch in batches {
+                let shape =
+                    sparse_riscv::tensor::Shape::nhwc(batch, base.h(), base.w(), base.c());
+                let input = random_input(shape, cfg.act_params(), &mut rng);
+                let golden = scalar.run(&prepared, &input).unwrap();
+                for &kernel in &kernels {
+                    let run = SimEngine::new(design)
+                        .with_host_kernel(kernel)
+                        .run(&prepared, &input)
+                        .unwrap();
+                    let tag = format!("{model}/{design}/b{batch}/{kernel}");
+                    assert_reports_identical(&run, &golden, &tag);
+                }
+            }
         }
     }
 }
