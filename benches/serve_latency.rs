@@ -1,0 +1,134 @@
+//! End-to-end serving latency over real loopback sockets: an in-process
+//! [`NetServer`] driven by the open-loop load generator, under a steady
+//! Poisson trace (continuous batching in its comfort zone) and a bursty
+//! overload trace against a deliberately small admission queue (the
+//! shedding path).
+//!
+//! Correctness is asserted hard on every cell — zero transport failures,
+//! zero malformed responses, client-side and server-side counters in
+//! exact agreement, accepted requests never lost. Wall-clock percentiles
+//! and shed/batch counters are informational `wall_*`/`host_*` records
+//! sunk via `$BENCH_JSON`.
+//!
+//! ```bash
+//! cargo bench --bench serve_latency
+//! # knobs: SERVE_REQUESTS (default 48), SERVE_RATE (400),
+//! #        SERVE_SCALE (0.1), SERVE_THREADS (2)
+//! ```
+
+use sparse_riscv::config::value::Value;
+use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions};
+use sparse_riscv::coordinator::loadgen::{self, Arrival, TraceConfig};
+use sparse_riscv::coordinator::net::{NetOptions, NetServer};
+use sparse_riscv::metrics::{sink_and_report, MetricRecord};
+use std::time::Duration;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let requests = env_or("SERVE_REQUESTS", 48usize).max(4);
+    let rate = env_or("SERVE_RATE", 400.0f64).max(1.0);
+    let scale = env_or("SERVE_SCALE", 0.1f64);
+    let threads = env_or("SERVE_THREADS", 2usize);
+    let timeout = Duration::from_secs(60);
+
+    let body = |seed: u64| {
+        Value::obj(vec![
+            ("model", Value::Str("dscnn".to_string())),
+            ("design", Value::Str("csa".to_string())),
+            ("scale", Value::Num(scale)),
+            ("seed", Value::Num(seed as f64)),
+        ])
+        .to_json()
+    };
+    let engine = || BatchEngine::new(BatchOptions { threads, ..Default::default() });
+    let mut records: Vec<MetricRecord> = Vec::new();
+
+    // ---- Poisson steady-state: continuous batching under open load ----
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        engine(),
+        NetOptions {
+            batch_max: 16,
+            batch_deadline: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.addr().to_string();
+    let trace = TraceConfig {
+        requests,
+        rate,
+        arrival: Arrival::Poisson,
+        burst: 1,
+        seed: 0xB0A7,
+    };
+    let bodies: Vec<String> = (0..requests).map(|i| body(1000 + i as u64)).collect();
+    let report = loadgen::run_trace(&addr, &trace, &bodies, timeout);
+    server.shutdown();
+    let stats = server.join();
+
+    assert_eq!(report.failed, 0, "poisson: transport failures: {}", report.failed);
+    assert_eq!(report.malformed, 0, "poisson: malformed responses");
+    assert_eq!(report.ok + report.shed, requests as u64, "poisson: lost answers");
+    assert_eq!(stats.completed, report.ok, "poisson: server/client ok disagreement");
+    assert_eq!(stats.shed, report.shed, "poisson: server/client shed disagreement");
+    assert_eq!(stats.accepted, stats.completed, "poisson: accepted requests lost");
+    println!(
+        "serve/poisson: {} ok, {} shed over {} batches (mean batch {:.2}) — client p50 \
+         {:.3} ms p99 {:.3} ms p99.9 {:.3} ms",
+        report.ok,
+        report.shed,
+        stats.batches,
+        stats.mean_batch_size(),
+        report.wall_p50_ms,
+        report.wall_p99_ms,
+        report.wall_p999_ms,
+    );
+    records.push(report.to_record("serve/poisson_client"));
+    records.push(stats.to_record("serve/poisson_server"));
+
+    // ---- Bursty overload: bounded queue must shed, never fail --------
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        engine(),
+        NetOptions {
+            batch_max: 8,
+            batch_deadline: Duration::from_millis(50),
+            queue_capacity: 8,
+            ..Default::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.addr().to_string();
+    let burst = (requests / 2).max(2);
+    let trace = TraceConfig {
+        requests,
+        rate,
+        arrival: Arrival::Burst,
+        burst,
+        seed: 0xB0A8,
+    };
+    let bodies: Vec<String> = (0..requests).map(|i| body(2000 + i as u64)).collect();
+    let report = loadgen::run_trace(&addr, &trace, &bodies, timeout);
+    server.shutdown();
+    let stats = server.join();
+
+    assert_eq!(report.failed, 0, "burst: overload must shed with 503, not error");
+    assert_eq!(report.malformed, 0, "burst: malformed responses");
+    assert_eq!(report.ok + report.shed, requests as u64, "burst: lost answers");
+    assert_eq!(stats.completed, report.ok, "burst: server/client ok disagreement");
+    assert_eq!(stats.shed, report.shed, "burst: server/client shed disagreement");
+    assert_eq!(stats.accepted, stats.completed, "burst: accepted requests lost");
+    println!(
+        "serve/burst (burst {burst}, queue 8): {} ok, {} shed, max queue depth {} — \
+         client p50 {:.3} ms p99 {:.3} ms",
+        report.ok, report.shed, stats.queue_depth_max, report.wall_p50_ms, report.wall_p99_ms,
+    );
+    records.push(report.to_record("serve/burst_client"));
+    records.push(stats.to_record("serve/burst_server"));
+
+    sink_and_report("regenerate: BENCH_JSON=<path> cargo bench --bench serve_latency", &records);
+}

@@ -126,6 +126,10 @@ pub struct BatchReport {
     pub cache_evictions: u64,
     /// Per-request predicted classes (argmax of the head).
     pub predictions: Vec<usize>,
+    /// Per-request simulated cycle counts, in request order — lets the
+    /// network serving layer answer each request with its own exact
+    /// cycle cost even though requests execute inside a shared batch.
+    pub request_cycles: Vec<u64>,
 }
 
 impl BatchReport {
@@ -177,6 +181,7 @@ impl BatchReport {
         self.cache_misses = self.cache_misses.max(other.cache_misses);
         self.cache_evictions = self.cache_evictions.max(other.cache_evictions);
         self.predictions.extend_from_slice(&other.predictions);
+        self.request_cycles.extend_from_slice(&other.request_cycles);
     }
 
     /// Emit this report as a structured [`MetricRecord`] (the telemetry
@@ -404,6 +409,7 @@ impl BatchEngine {
             cache_misses: self.cache.misses(),
             cache_evictions: self.cache.evictions(),
             predictions: Vec::with_capacity(n),
+            request_cycles: Vec::with_capacity(n),
         };
         for s in stats {
             let s = s?;
@@ -422,6 +428,7 @@ impl BatchEngine {
                 report.latencies.push(seconds);
             }
             report.predictions.push(s.pred);
+            report.request_cycles.push(s.cycles);
         }
         report.latency = latency;
         report.recompute_percentiles();
@@ -478,10 +485,13 @@ mod tests {
         let (prepared, _) = engine.prepared(&spec).unwrap();
         let backend = crate::simulator::backend_for(DesignKind::Csa);
         let mut cycles = 0u64;
-        for r in &reqs {
-            cycles += backend.execute(&prepared, r).unwrap().total_cycles;
+        for (r, &per_req) in reqs.iter().zip(&report.request_cycles) {
+            let direct = backend.execute(&prepared, r).unwrap().total_cycles;
+            assert_eq!(per_req, direct, "per-request cycles must match a direct run");
+            cycles += direct;
         }
         assert_eq!(report.total_cycles, cycles);
+        assert_eq!(report.request_cycles.len(), 4);
         assert!(report.cfu_cycles > 0);
         assert!(report.loaded_bytes > 0);
         assert!(report.p50 > 0.0 && report.p99 >= report.p50);

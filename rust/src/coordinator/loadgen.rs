@@ -1,0 +1,487 @@
+//! Open-loop load generator for the [`super::net`] serving front-end.
+//!
+//! Open-loop means arrival times are fixed *before* the run (drawn from
+//! a seeded [`Pcg32`]), so request timing never adapts to server
+//! latency — the honest way to measure overload behavior: a server
+//! that slows down under a 1000 req/s trace still receives 1000 req/s.
+//! Two arrival processes are provided:
+//!
+//! - [`Arrival::Poisson`] — exponential inter-arrival gaps at `rate`
+//!   requests/second (memoryless steady load);
+//! - [`Arrival::Burst`] — groups of `burst` simultaneous requests with
+//!   exponential gaps between groups at `rate / burst` bursts/second
+//!   (same mean rate, maximally bunched — the shedding stressor).
+//!
+//! Traces are deterministic for a `(requests, rate, arrival, burst,
+//! seed)` tuple, so CI failures replay exactly. The module doubles as
+//! the repo's minimal HTTP/1.1 *client* ([`http_request`] /
+//! [`parse_response`]), used by the loopback integration tier.
+
+use crate::config::value::Value;
+use crate::metrics::MetricRecord;
+use crate::util::stats::Percentiles;
+use crate::util::Pcg32;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Arrival process of an open-loop trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Exponential inter-arrival gaps (steady Poisson load).
+    Poisson,
+    /// Bursts of simultaneous requests with exponential gaps between
+    /// bursts (same mean rate, bunched).
+    Burst,
+}
+
+impl Arrival {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Arrival> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "poisson" => Some(Arrival::Poisson),
+            "burst" | "bursty" => Some(Arrival::Burst),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arrival::Poisson => "poisson",
+            Arrival::Burst => "burst",
+        }
+    }
+}
+
+/// One deterministic open-loop trace.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Total requests to send.
+    pub requests: usize,
+    /// Mean offered load in requests per second.
+    pub rate: f64,
+    /// Arrival process.
+    pub arrival: Arrival,
+    /// Burst size (only read for [`Arrival::Burst`]); normalized to at
+    /// least 1.
+    pub burst: usize,
+    /// Trace RNG seed.
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            requests: 64,
+            rate: 200.0,
+            arrival: Arrival::Poisson,
+            burst: 8,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// Exponential sample with mean `1/rate` (inverse-CDF of `U(0,1)`).
+fn exp_gap(rng: &mut Pcg32, rate: f64) -> Duration {
+    let u = rng.next_f64();
+    // `1 - u` keeps the argument in (0, 1] so `ln` stays finite; the
+    // clamp keeps gaps strictly positive and bounded.
+    let secs = (-(1.0 - u).ln() / rate.max(1e-9)).clamp(1e-9, 3600.0);
+    Duration::from_secs_f64(secs)
+}
+
+/// Precompute the arrival offset of every request from trace start.
+/// Deterministic in the config; offsets are non-decreasing.
+pub fn arrival_offsets(cfg: &TraceConfig) -> Vec<Duration> {
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut offsets = Vec::with_capacity(cfg.requests);
+    let mut t = Duration::ZERO;
+    match cfg.arrival {
+        Arrival::Poisson => {
+            for _ in 0..cfg.requests {
+                t += exp_gap(&mut rng, cfg.rate);
+                offsets.push(t);
+            }
+        }
+        Arrival::Burst => {
+            let burst = cfg.burst.max(1);
+            while offsets.len() < cfg.requests {
+                t += exp_gap(&mut rng, cfg.rate / burst as f64);
+                for _ in 0..burst.min(cfg.requests - offsets.len()) {
+                    offsets.push(t);
+                }
+            }
+        }
+    }
+    offsets
+}
+
+/// A parsed HTTP response (client side).
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    /// Status code.
+    pub code: u16,
+    /// Header fields in wire order (names lowercased).
+    pub headers: Vec<(String, String)>,
+    /// Response body.
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse raw response bytes (status line + headers + body to EOF).
+pub fn parse_response(raw: &[u8]) -> std::result::Result<HttpResponse, String> {
+    let header_end = super::net::find_subslice(raw, b"\r\n\r\n")
+        .ok_or_else(|| "response has no header terminator".to_string())?;
+    let head = std::str::from_utf8(&raw[..header_end])
+        .map_err(|_| "response header is not valid UTF-8".to_string())?;
+    let mut lines = head.split("\r\n");
+    let status = lines.next().unwrap_or("");
+    let mut parts = status.splitn(3, ' ');
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("bad status line '{status}'"));
+    }
+    let code: u16 = parts
+        .next()
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| format!("bad status code in '{status}'"))?;
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) =
+            line.split_once(':').ok_or_else(|| format!("bad header line '{line}'"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let body = String::from_utf8(raw[header_end + 4..].to_vec())
+        .map_err(|_| "response body is not valid UTF-8".to_string())?;
+    Ok(HttpResponse { code, headers, body })
+}
+
+/// One blocking HTTP/1.1 request over a fresh connection
+/// (`Connection: close`, body read to EOF). Errors are transport-level
+/// (connect/write/read); malformed responses come back from
+/// [`parse_response`].
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+) -> std::result::Result<HttpResponse, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream.set_read_timeout(Some(timeout)).map_err(|e| e.to_string())?;
+    stream.set_write_timeout(Some(timeout)).map_err(|e| e.to_string())?;
+    let _ = stream.set_nodelay(true);
+    let mut stream = stream;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).map_err(|e| format!("write: {e}"))?;
+    stream.write_all(body.as_bytes()).map_err(|e| format!("write: {e}"))?;
+    stream.flush().map_err(|e| format!("flush: {e}"))?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).map_err(|e| format!("read: {e}"))?;
+    parse_response(&raw)
+}
+
+/// How one trace response was classified.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Class {
+    Ok,
+    Shed,
+    Failed,
+    Malformed,
+}
+
+/// Classify a serving response: `200` with a JSON body carrying a
+/// prediction is `Ok`; `503` with JSON *and* `Retry-After` is a
+/// well-formed shed; anything else that reached us is malformed or a
+/// server failure.
+fn classify(resp: &HttpResponse) -> Class {
+    let json_ok = Value::parse(&resp.body).is_ok();
+    match resp.code {
+        200 => {
+            let has_pred = Value::parse(&resp.body)
+                .ok()
+                .is_some_and(|v| v.get_opt("prediction").is_some());
+            if has_pred {
+                Class::Ok
+            } else {
+                Class::Malformed
+            }
+        }
+        503 => {
+            if json_ok && resp.header("retry-after").is_some() {
+                Class::Shed
+            } else {
+                Class::Malformed
+            }
+        }
+        500 => Class::Failed,
+        _ => Class::Malformed,
+    }
+}
+
+/// Aggregated result of one trace replay.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    /// Requests sent (the full trace, open loop).
+    pub sent: u64,
+    /// `200` responses with a well-formed prediction body.
+    pub ok: u64,
+    /// Well-formed `503 + Retry-After` shed responses.
+    pub shed: u64,
+    /// Transport errors and `500`s.
+    pub failed: u64,
+    /// Responses that were not well-formed JSON with the expected
+    /// status semantics.
+    pub malformed: u64,
+    /// Client-observed median latency of `Ok` responses (ms).
+    pub wall_p50_ms: f64,
+    /// Client-observed p99 latency of `Ok` responses (ms).
+    pub wall_p99_ms: f64,
+    /// Client-observed p99.9 latency of `Ok` responses (ms).
+    pub wall_p999_ms: f64,
+}
+
+impl LoadReport {
+    /// Every response was either a good `200` or a well-formed shed.
+    pub fn well_formed(&self) -> bool {
+        self.malformed == 0 && self.failed == 0 && self.ok + self.shed == self.sent
+    }
+
+    /// Serialize for CLI output.
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("sent", Value::Num(self.sent as f64)),
+            ("ok", Value::Num(self.ok as f64)),
+            ("shed", Value::Num(self.shed as f64)),
+            ("failed", Value::Num(self.failed as f64)),
+            ("malformed", Value::Num(self.malformed as f64)),
+            ("well_formed", Value::Bool(self.well_formed())),
+            ("wall_p50_ms", Value::Num(self.wall_p50_ms)),
+            ("wall_p99_ms", Value::Num(self.wall_p99_ms)),
+            ("wall_p999_ms", Value::Num(self.wall_p999_ms)),
+        ])
+    }
+
+    /// Emit client-side counters as an informational [`MetricRecord`].
+    pub fn to_record(&self, id: &str) -> MetricRecord {
+        MetricRecord::new(id)
+            .with_value("wall_p50_ms", self.wall_p50_ms)
+            .with_value("wall_p99_ms", self.wall_p99_ms)
+            .with_value("wall_p999_ms", self.wall_p999_ms)
+            .with_value("host_ok", self.ok as f64)
+            .with_value("host_shed_total", self.shed as f64)
+            .with_value("host_failed", self.failed as f64)
+    }
+}
+
+/// Replay a trace against a server: request `i` fires at its precomputed
+/// offset (open loop) with body `bodies[i % bodies.len()]` (`{}` when
+/// `bodies` is empty). Blocks until every response (or timeout) is in.
+pub fn run_trace(
+    addr: &str,
+    trace: &TraceConfig,
+    bodies: &[String],
+    timeout: Duration,
+) -> LoadReport {
+    let offsets = arrival_offsets(trace);
+    let n = offsets.len();
+    let (tx, rx) = mpsc::channel::<(Class, f64)>();
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(n);
+    for (i, offset) in offsets.into_iter().enumerate() {
+        let body = if bodies.is_empty() {
+            "{}".to_string()
+        } else {
+            bodies[i % bodies.len()].clone()
+        };
+        let addr = addr.to_string();
+        let tx = tx.clone();
+        let handle = std::thread::Builder::new()
+            .name("loadgen".into())
+            .spawn(move || {
+                std::thread::sleep(offset.saturating_sub(start.elapsed()));
+                let t0 = Instant::now();
+                let class = match http_request(&addr, "POST", "/v1/infer", &body, timeout) {
+                    Ok(resp) => classify(&resp),
+                    Err(_) => Class::Failed,
+                };
+                let _ = tx.send((class, t0.elapsed().as_secs_f64() * 1e3));
+            });
+        match handle {
+            Ok(h) => handles.push(h),
+            Err(_) => {
+                // Spawn failure: count the request as failed client-side.
+                let _ = tx.send((Class::Failed, 0.0));
+            }
+        }
+    }
+    drop(tx);
+
+    let mut report = LoadReport { sent: n as u64, ..Default::default() };
+    let mut wall = Percentiles::new();
+    for (class, wall_ms) in rx {
+        match class {
+            Class::Ok => {
+                report.ok += 1;
+                wall.push(wall_ms);
+            }
+            Class::Shed => report.shed += 1,
+            Class::Failed => report.failed += 1,
+            Class::Malformed => report.malformed += 1,
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    if wall.count() > 0 {
+        report.wall_p50_ms = wall.percentile(50.0);
+        report.wall_p99_ms = wall.percentile(99.0);
+        report.wall_p999_ms = wall.percentile(99.9);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_offsets_are_deterministic_and_monotone() {
+        let cfg = TraceConfig { requests: 50, rate: 500.0, ..Default::default() };
+        let a = arrival_offsets(&cfg);
+        let b = arrival_offsets(&cfg);
+        assert_eq!(a, b, "same seed must replay the same trace");
+        assert_eq!(a.len(), 50);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "offsets must be non-decreasing");
+        assert!(a.iter().all(|d| *d > Duration::ZERO));
+        let c = arrival_offsets(&TraceConfig { seed: 99, ..cfg });
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_roughly_honored() {
+        let cfg = TraceConfig {
+            requests: 2000,
+            rate: 1000.0,
+            arrival: Arrival::Poisson,
+            ..Default::default()
+        };
+        let offsets = arrival_offsets(&cfg);
+        let span = offsets.last().unwrap().as_secs_f64();
+        let rate = cfg.requests as f64 / span;
+        assert!(
+            (rate - 1000.0).abs() < 150.0,
+            "empirical rate {rate:.0} too far from 1000"
+        );
+    }
+
+    #[test]
+    fn burst_offsets_bunch_into_groups() {
+        let cfg = TraceConfig {
+            requests: 20,
+            rate: 400.0,
+            arrival: Arrival::Burst,
+            burst: 5,
+            seed: 7,
+        };
+        let offsets = arrival_offsets(&cfg);
+        assert_eq!(offsets.len(), 20);
+        for group in offsets.chunks(5) {
+            assert!(
+                group.iter().all(|d| *d == group[0]),
+                "requests within a burst fire simultaneously"
+            );
+        }
+        assert!(offsets[0] < offsets[5], "bursts are separated by gaps");
+    }
+
+    #[test]
+    fn arrival_parse_names() {
+        assert_eq!(Arrival::parse("poisson"), Some(Arrival::Poisson));
+        assert_eq!(Arrival::parse("BURSTY"), Some(Arrival::Burst));
+        assert_eq!(Arrival::parse("uniform"), None);
+        assert_eq!(Arrival::Burst.name(), "burst");
+    }
+
+    #[test]
+    fn parse_response_roundtrip() {
+        let raw = b"HTTP/1.1 503 Service Unavailable\r\nContent-Type: application/json\r\n\
+                    Retry-After: 1\r\nContent-Length: 16\r\n\r\n{\"error\":\"full\"}";
+        let resp = parse_response(raw).unwrap();
+        assert_eq!(resp.code, 503);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.header("RETRY-AFTER"), Some("1"));
+        assert_eq!(resp.body, "{\"error\":\"full\"}");
+    }
+
+    #[test]
+    fn parse_response_rejects_garbage() {
+        assert!(parse_response(b"").is_err());
+        assert!(parse_response(b"not http at all\r\n\r\n").is_err());
+        assert!(parse_response(b"HTTP/1.1 twohundred OK\r\n\r\n").is_err());
+        assert!(parse_response(b"HTTP/1.1 200 OK\r\nbadheader\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn classification_covers_the_contract() {
+        let ok = HttpResponse {
+            code: 200,
+            headers: vec![],
+            body: "{\"prediction\":3}".to_string(),
+        };
+        assert_eq!(classify(&ok), Class::Ok);
+        let shed = HttpResponse {
+            code: 503,
+            headers: vec![("retry-after".to_string(), "1".to_string())],
+            body: "{\"error\":\"full\"}".to_string(),
+        };
+        assert_eq!(classify(&shed), Class::Shed);
+        // A 503 without Retry-After violates the shedding contract.
+        let bad_shed = HttpResponse { headers: vec![], ..shed.clone() };
+        assert_eq!(classify(&bad_shed), Class::Malformed);
+        // A 200 whose body is not the infer schema is malformed.
+        let bad_ok = HttpResponse { body: "hello".to_string(), ..ok.clone() };
+        assert_eq!(classify(&bad_ok), Class::Malformed);
+        let failed = HttpResponse { code: 500, ..ok };
+        assert_eq!(classify(&failed), Class::Failed);
+    }
+
+    #[test]
+    fn report_counters_and_record() {
+        let report = LoadReport {
+            sent: 10,
+            ok: 7,
+            shed: 3,
+            wall_p50_ms: 1.0,
+            wall_p99_ms: 2.0,
+            wall_p999_ms: 2.5,
+            ..Default::default()
+        };
+        assert!(report.well_formed());
+        let rec = report.to_record("loadgen/dscnn");
+        assert_eq!(rec.get("host_ok"), Some(7.0));
+        assert_eq!(rec.get("host_shed_total"), Some(3.0));
+        let lossy = LoadReport { failed: 1, ..report.clone() };
+        assert!(!lossy.well_formed());
+        let short = LoadReport { shed: 2, ..report };
+        assert!(!short.well_formed(), "ok + shed must account for every sent request");
+        let json = lossy.to_value().to_json();
+        assert!(Value::parse(&json).is_ok());
+    }
+}

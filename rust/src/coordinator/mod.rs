@@ -10,15 +10,27 @@
 //! - [`runner`] — experiment orchestration: build model → prune → prepare
 //!   per design → simulate the batch at (design × request) granularity →
 //!   collect speedups,
-//! - [`serve`] — a closed-loop inference server over the cycle simulator
-//!   with latency/throughput metrics (simulated clock + host wall clock).
+//! - [`serve`] — a closed-loop in-process inference server over the cycle
+//!   simulator with latency/throughput metrics (simulated clock + host
+//!   wall clock) — the *debug* serving path,
+//! - [`net`] — the *production* serving path: a dependency-free
+//!   TCP + HTTP/1.1 front-end with continuous batching (size/deadline
+//!   triggers), bounded admission queues with 503 + `Retry-After`
+//!   shedding, and graceful drain on shutdown,
+//! - [`loadgen`] — a deterministic open-loop load generator (Poisson and
+//!   bursty arrivals) plus the minimal HTTP client used to replay traces
+//!   against [`net::NetServer`].
 
 pub mod batch;
+pub mod loadgen;
+pub mod net;
 pub mod runner;
 pub mod scheduler;
 pub mod serve;
 
 pub use batch::{BatchEngine, BatchOptions, BatchReport, BatchSpec};
+pub use loadgen::{Arrival, LoadReport, TraceConfig};
+pub use net::{NetHandle, NetOptions, NetServer, NetStats};
 pub use runner::{run_experiment, DesignResult, ExperimentResult};
 pub use scheduler::{JobPool, TilePool};
 pub use serve::{ServeMetrics, ServeOptions, Server};

@@ -1,0 +1,1262 @@
+//! Production serving path: a dependency-free TCP + minimal HTTP/1.1
+//! JSON front-end over the [`BatchEngine`], with continuous batching and
+//! overload shedding.
+//!
+//! Where [`super::serve`] is the in-process debug loop (the "UART" of
+//! the debug-vs-production split), [`NetServer`] is the network front
+//! door:
+//!
+//! - a listener thread accepts concurrent connections (one handler
+//!   thread per connection, keep-alive + pipelining supported);
+//! - `POST /v1/infer` requests are admitted into a per-spec queue and
+//!   coalesced into dynamic batches by a dedicated batcher thread —
+//!   a batch fires when it reaches [`NetOptions::batch_max`] requests
+//!   *or* when the oldest queued request has waited
+//!   [`NetOptions::batch_deadline`] (continuous batching);
+//! - admission queues are bounded: beyond
+//!   [`NetOptions::queue_capacity`] the request is shed with
+//!   `503 + Retry-After` instead of building unbounded backlog;
+//! - shutdown (`POST /shutdown`, [`NetServer::shutdown`], or a
+//!   [`NetHandle`]) drains every in-flight and queued request before
+//!   the batcher threads exit — accepted requests are never lost.
+//!
+//! Simulated results are invariant in the network layer by
+//! construction: every request executes independently inside
+//! [`BatchEngine::run_batch`] and its cycle counts come from
+//! prepare-time schedules, so batch composition changes wall-clock
+//! behavior only. Wall-clock percentiles, queue depth, shed counts and
+//! the batch-size histogram are exported as informational
+//! `wall_*`/`host_*` metrics via [`NetStats::to_record`].
+
+use super::batch::{BatchEngine, BatchSpec};
+use crate::config::value::Value;
+use crate::error::Result;
+use crate::isa::{DesignAssignment, DesignKind};
+use crate::metrics::MetricRecord;
+use crate::models::builder::{random_input, ModelConfig};
+use crate::models::zoo::input_shape;
+use crate::tensor::quant::QuantParams;
+use crate::tensor::QTensor;
+use crate::util::logging;
+use crate::util::stats::Percentiles;
+use crate::util::Pcg32;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Network front-end options.
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Batch size that fires a batch immediately (the size trigger of
+    /// the continuous batcher). Normalized to at least 1.
+    pub batch_max: usize,
+    /// Maximum time the oldest queued request waits before its batch
+    /// fires regardless of size (the deadline trigger).
+    pub batch_deadline: Duration,
+    /// Bounded admission-queue depth per spec; requests beyond it are
+    /// shed with `503 + Retry-After`. Normalized to at least 1.
+    pub queue_capacity: usize,
+    /// Socket read timeout — a peer that stalls mid-request (slow
+    /// loris) gets `408` and the connection thread is reclaimed.
+    pub read_timeout: Duration,
+    /// End-to-end cap on one admitted request (queue wait + batch
+    /// execution); `500` on expiry so a stuck batcher cannot pin
+    /// connection threads forever.
+    pub request_timeout: Duration,
+    /// Maximum accepted request-body size in bytes (`413` beyond it).
+    pub max_body: usize,
+    /// Maximum accepted header-block size in bytes (`431` beyond it).
+    pub max_header: usize,
+    /// SoC clock for the `sim_ms` field of infer responses.
+    pub clock_hz: u64,
+    /// Value of the `Retry-After` header (seconds) on shed responses.
+    pub retry_after_s: u64,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions {
+            batch_max: 16,
+            batch_deadline: Duration::from_millis(5),
+            queue_capacity: 256,
+            read_timeout: Duration::from_secs(5),
+            request_timeout: Duration::from_secs(60),
+            max_body: 1 << 20,
+            max_header: 8192,
+            clock_hz: 100_000_000,
+            retry_after_s: 1,
+        }
+    }
+}
+
+/// Successful engine-side result for one admitted request.
+struct InferOk {
+    prediction: usize,
+    cycles: u64,
+    batch_size: usize,
+}
+
+/// Batcher → connection-thread response channel. `String` (not the
+/// crate error) so one engine failure clones across a whole batch.
+type RespTx = mpsc::Sender<std::result::Result<InferOk, String>>;
+
+/// One admitted request waiting in an admission queue.
+struct Pending {
+    input: QTensor,
+    resp: RespTx,
+    enqueued: Instant,
+}
+
+struct QueueInner {
+    pending: VecDeque<Pending>,
+}
+
+/// Per-spec admission queue with its batcher wakeup condvar.
+struct ModelQueue {
+    spec: BatchSpec,
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct StatsInner {
+    accepted: u64,
+    completed: u64,
+    failed: u64,
+    shed: u64,
+    rejected: u64,
+    batches: u64,
+    batch_hist: BTreeMap<u64, u64>,
+    queue_depth_max: u64,
+    wall: Percentiles,
+}
+
+struct Shared {
+    engine: BatchEngine,
+    opts: NetOptions,
+    queues: Mutex<HashMap<String, Arc<ModelQueue>>>,
+    batchers: Mutex<Vec<JoinHandle<()>>>,
+    stats: Mutex<StatsInner>,
+    shutdown: AtomicBool,
+}
+
+/// Counter snapshot of a running (or drained) [`NetServer`].
+#[derive(Debug, Clone)]
+pub struct NetStats {
+    /// Requests admitted into an admission queue.
+    pub accepted: u64,
+    /// Admitted requests answered `200`.
+    pub completed: u64,
+    /// Admitted requests answered `500` (engine error or timeout).
+    pub failed: u64,
+    /// Requests shed with `503` (queue full or shutting down).
+    pub shed: u64,
+    /// Frames rejected before admission (`4xx`/`501` parse failures).
+    pub rejected: u64,
+    /// Batches executed by the continuous batchers.
+    pub batches: u64,
+    /// Batch-size histogram: executed batch size → occurrence count.
+    pub batch_hist: BTreeMap<u64, u64>,
+    /// Deepest admission-queue depth observed at enqueue time.
+    pub queue_depth_max: u64,
+    /// Median end-to-end wall latency of completed requests (ms).
+    pub wall_p50_ms: f64,
+    /// 99th-percentile end-to-end wall latency (ms).
+    pub wall_p99_ms: f64,
+    /// 99.9th-percentile end-to-end wall latency (ms).
+    pub wall_p999_ms: f64,
+}
+
+impl NetStats {
+    /// Mean executed batch size (0 when no batch has run).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        let total: u64 = self.batch_hist.iter().map(|(size, count)| size * count).sum();
+        total as f64 / self.batches as f64
+    }
+
+    /// Serialize for the `GET /stats` endpoint and CLI summaries.
+    pub fn to_value(&self) -> Value {
+        let hist = Value::Obj(
+            self.batch_hist
+                .iter()
+                .map(|(k, v)| (k.to_string(), Value::Num(*v as f64)))
+                .collect(),
+        );
+        Value::obj(vec![
+            ("accepted", Value::Num(self.accepted as f64)),
+            ("completed", Value::Num(self.completed as f64)),
+            ("failed", Value::Num(self.failed as f64)),
+            ("shed", Value::Num(self.shed as f64)),
+            ("rejected", Value::Num(self.rejected as f64)),
+            ("batches", Value::Num(self.batches as f64)),
+            ("batch_hist", hist),
+            ("batch_mean", Value::Num(self.mean_batch_size())),
+            ("queue_depth_max", Value::Num(self.queue_depth_max as f64)),
+            ("wall_p50_ms", Value::Num(self.wall_p50_ms)),
+            ("wall_p99_ms", Value::Num(self.wall_p99_ms)),
+            ("wall_p999_ms", Value::Num(self.wall_p999_ms)),
+        ])
+    }
+
+    /// Emit the serving counters as an informational [`MetricRecord`]
+    /// (`wall_*`/`host_*` names — tracked in baselines, never gated).
+    pub fn to_record(&self, id: &str) -> MetricRecord {
+        MetricRecord::new(id)
+            .with_value("wall_p50_ms", self.wall_p50_ms)
+            .with_value("wall_p99_ms", self.wall_p99_ms)
+            .with_value("wall_p999_ms", self.wall_p999_ms)
+            .with_value("host_shed_total", self.shed as f64)
+            .with_value("host_queue_depth_max", self.queue_depth_max as f64)
+            .with_value("host_batch_mean", self.mean_batch_size())
+            .with_value("host_accepted", self.accepted as f64)
+            .with_value("host_completed", self.completed as f64)
+    }
+}
+
+/// Cloneable remote control for a running server (shutdown + stats from
+/// another thread, e.g. a CLI watchdog), without owning the listener.
+#[derive(Clone)]
+pub struct NetHandle {
+    shared: Arc<Shared>,
+}
+
+impl NetHandle {
+    /// Begin graceful shutdown (idempotent): stop accepting, drain
+    /// queued work, let `join` return.
+    pub fn shutdown(&self) {
+        begin_shutdown(&self.shared);
+    }
+
+    /// Current counter snapshot.
+    pub fn stats(&self) -> NetStats {
+        snapshot(&self.shared)
+    }
+}
+
+/// The TCP/HTTP serving front-end. See the module docs for the
+/// queue/batcher architecture.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (use port 0 for an ephemeral port) and start the
+    /// accept loop over `engine`.
+    pub fn bind(addr: &str, engine: BatchEngine, mut opts: NetOptions) -> Result<NetServer> {
+        opts.batch_max = opts.batch_max.max(1);
+        opts.queue_capacity = opts.queue_capacity.max(1);
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        // Non-blocking listener so the accept loop can poll the shutdown
+        // flag instead of parking in `accept` forever.
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            engine,
+            opts,
+            queues: Mutex::new(HashMap::new()),
+            batchers: Mutex::new(Vec::new()),
+            stats: Mutex::new(StatsInner::default()),
+            shutdown: AtomicBool::new(false),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("serve-net-accept".into())
+                .spawn(move || accept_loop(listener, shared))?
+        };
+        Ok(NetServer { shared, addr: local, accept: Some(accept) })
+    }
+
+    /// The bound local address (resolves an ephemeral port request).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Begin graceful shutdown (idempotent); `join` completes the drain.
+    pub fn shutdown(&self) {
+        begin_shutdown(&self.shared);
+    }
+
+    /// Cloneable control handle (shutdown + stats) for other threads.
+    pub fn handle(&self) -> NetHandle {
+        NetHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Current counter snapshot.
+    pub fn stats(&self) -> NetStats {
+        snapshot(&self.shared)
+    }
+
+    /// Block until shutdown has been requested and every queued request
+    /// has drained, then return the final counters. Request shutdown
+    /// first via [`NetServer::shutdown`], a [`NetHandle`], or
+    /// `POST /shutdown`.
+    pub fn join(mut self) -> NetStats {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let batchers: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.shared.batchers.lock().unwrap());
+        for h in batchers {
+            let _ = h.join();
+        }
+        snapshot(&self.shared)
+    }
+}
+
+fn begin_shutdown(shared: &Arc<Shared>) {
+    shared.shutdown.store(true, Ordering::SeqCst);
+    // Wake every batcher so the drain-then-exit path runs promptly.
+    for q in shared.queues.lock().unwrap().values() {
+        q.cv.notify_all();
+    }
+}
+
+fn snapshot(shared: &Arc<Shared>) -> NetStats {
+    let mut stats = shared.stats.lock().unwrap();
+    // An idle server reports 0.0 — `Value::Num(NaN)` would serialize as
+    // invalid JSON.
+    let (p50, p99, p999) = if stats.wall.count() == 0 {
+        (0.0, 0.0, 0.0)
+    } else {
+        (
+            stats.wall.percentile(50.0),
+            stats.wall.percentile(99.0),
+            stats.wall.percentile(99.9),
+        )
+    };
+    NetStats {
+        accepted: stats.accepted,
+        completed: stats.completed,
+        failed: stats.failed,
+        shed: stats.shed,
+        rejected: stats.rejected,
+        batches: stats.batches,
+        batch_hist: stats.batch_hist.clone(),
+        queue_depth_max: stats.queue_depth_max,
+        wall_p50_ms: p50,
+        wall_p99_ms: p99,
+        wall_p999_ms: p999,
+    }
+}
+
+// ---- listener + connection threads ------------------------------------
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let shared = Arc::clone(&shared);
+                match std::thread::Builder::new()
+                    .name("serve-net-conn".into())
+                    .spawn(move || handle_connection(stream, shared))
+                {
+                    Ok(h) => conns.push(h),
+                    Err(e) => logging::warn("net", &format!("connection spawn failed: {e}")),
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                logging::warn("net", &format!("accept failed: {e}"));
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+        // Reap finished handler threads so a long-lived server does not
+        // accumulate JoinHandles.
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: Arc<Shared>) {
+    // Accepted sockets can inherit the listener's non-blocking flag on
+    // some platforms; the handler wants blocking reads under a timeout.
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    if stream.set_read_timeout(Some(shared.opts.read_timeout)).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let mut out = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = FrameReader::new(stream);
+    loop {
+        match reader.read_frame(&shared.opts) {
+            Frame::Closed => break,
+            Frame::Fail(reply) => {
+                shared.stats.lock().unwrap().rejected += 1;
+                let _ = write_response(&mut out, &reply, false);
+                break;
+            }
+            Frame::Request(req) => {
+                let keep = req.keep_alive && !shared.shutdown.load(Ordering::SeqCst);
+                let reply = route(&req, &shared);
+                if write_response(&mut out, &reply, keep).is_err() || !keep {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = out.shutdown(Shutdown::Both);
+}
+
+// ---- minimal HTTP/1.1 framing -----------------------------------------
+
+/// One parsed HTTP request.
+struct HttpRequest {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+/// An HTTP response about to be written.
+struct Reply {
+    code: u16,
+    reason: &'static str,
+    body: String,
+    extra: Vec<(&'static str, String)>,
+}
+
+impl Reply {
+    fn json(code: u16, reason: &'static str, body: String) -> Reply {
+        Reply { code, reason, body, extra: Vec::new() }
+    }
+
+    fn error(code: u16, reason: &'static str, msg: &str) -> Reply {
+        let body = Value::obj(vec![("error", Value::Str(msg.to_string()))]).to_json();
+        Reply::json(code, reason, body)
+    }
+}
+
+/// Outcome of reading one frame off a connection.
+enum Frame {
+    /// A well-formed request.
+    Request(HttpRequest),
+    /// A malformed/oversized/timed-out frame: write this terminal
+    /// response and close (the connection offset is unrecoverable).
+    Fail(Reply),
+    /// Clean EOF between requests.
+    Closed,
+}
+
+/// Stateful request reader: buffers across reads so keep-alive and
+/// pipelined requests (several frames arriving in one segment) work.
+struct FrameReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+/// First index of `needle` in `haystack`.
+pub(crate) fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+impl<R: Read> FrameReader<R> {
+    fn new(inner: R) -> Self {
+        FrameReader { inner, buf: Vec::new(), pos: 0 }
+    }
+
+    fn fill(&mut self) -> std::io::Result<usize> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.inner.read(&mut chunk) {
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    return Ok(n);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Read and parse the next request. Every malformed input maps to a
+    /// `4xx`/`501` [`Frame::Fail`] — never a panic or an unbounded read.
+    fn read_frame(&mut self, opts: &NetOptions) -> Frame {
+        // Drop the bytes consumed by the previous frame; pipelined
+        // excess stays buffered.
+        self.buf.drain(..self.pos);
+        self.pos = 0;
+
+        // Accumulate until the header terminator.
+        let header_end = loop {
+            if let Some(i) = find_subslice(&self.buf, b"\r\n\r\n") {
+                break i;
+            }
+            if self.buf.len() > opts.max_header {
+                return Frame::Fail(Reply::error(
+                    431,
+                    "Request Header Fields Too Large",
+                    "header block exceeds the size limit",
+                ));
+            }
+            match self.fill() {
+                Ok(0) if self.buf.is_empty() => return Frame::Closed,
+                Ok(0) => {
+                    return Frame::Fail(Reply::error(
+                        400,
+                        "Bad Request",
+                        "connection closed mid-header",
+                    ));
+                }
+                Ok(_) => {}
+                Err(e) if is_timeout(&e) => {
+                    return Frame::Fail(Reply::error(
+                        408,
+                        "Request Timeout",
+                        "timed out reading the request header",
+                    ));
+                }
+                Err(_) => return Frame::Closed,
+            }
+        };
+
+        // Parse the header block into owned values (the borrow of `buf`
+        // ends with this block; the body read below extends it again).
+        let (method, path, keep_alive, content_length) = {
+            let head = match std::str::from_utf8(&self.buf[..header_end]) {
+                Ok(h) => h,
+                Err(_) => {
+                    return Frame::Fail(Reply::error(
+                        400,
+                        "Bad Request",
+                        "header block is not valid UTF-8",
+                    ));
+                }
+            };
+            let mut lines = head.split("\r\n");
+            let request_line = lines.next().unwrap_or("");
+            let mut parts = request_line.split(' ');
+            let (method, path, version) =
+                match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                    (Some(m), Some(p), Some(v), None) if !m.is_empty() && !p.is_empty() => {
+                        (m.to_string(), p.to_string(), v)
+                    }
+                    _ => {
+                        return Frame::Fail(Reply::error(
+                            400,
+                            "Bad Request",
+                            "malformed request line",
+                        ));
+                    }
+                };
+            if !version.starts_with("HTTP/1.") {
+                return Frame::Fail(Reply::error(
+                    400,
+                    "Bad Request",
+                    "unsupported HTTP version",
+                ));
+            }
+            if method != "GET" && method != "POST" {
+                return Frame::Fail(Reply::error(
+                    405,
+                    "Method Not Allowed",
+                    "only GET and POST are served",
+                ));
+            }
+            let mut keep_alive = true;
+            let mut content_length: Option<usize> = None;
+            let mut fields = 0usize;
+            for line in lines {
+                if line.is_empty() {
+                    continue;
+                }
+                fields += 1;
+                if fields > 100 {
+                    return Frame::Fail(Reply::error(
+                        431,
+                        "Request Header Fields Too Large",
+                        "too many header fields",
+                    ));
+                }
+                let Some((name, value)) = line.split_once(':') else {
+                    return Frame::Fail(Reply::error(
+                        400,
+                        "Bad Request",
+                        "malformed header field",
+                    ));
+                };
+                let name = name.trim().to_ascii_lowercase();
+                let value = value.trim();
+                match name.as_str() {
+                    "content-length" => {
+                        let Ok(n) = value.parse::<usize>() else {
+                            return Frame::Fail(Reply::error(
+                                400,
+                                "Bad Request",
+                                "unparseable Content-Length",
+                            ));
+                        };
+                        if content_length.is_some_and(|prev| prev != n) {
+                            return Frame::Fail(Reply::error(
+                                400,
+                                "Bad Request",
+                                "conflicting Content-Length fields",
+                            ));
+                        }
+                        content_length = Some(n);
+                    }
+                    "connection" => {
+                        if value.eq_ignore_ascii_case("close") {
+                            keep_alive = false;
+                        }
+                    }
+                    "transfer-encoding" => {
+                        return Frame::Fail(Reply::error(
+                            501,
+                            "Not Implemented",
+                            "Transfer-Encoding is not supported; send Content-Length",
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+            (method, path, keep_alive, content_length)
+        };
+
+        let body_len = match content_length {
+            Some(n) => n,
+            None if method == "POST" => {
+                return Frame::Fail(Reply::error(
+                    411,
+                    "Length Required",
+                    "POST requires Content-Length",
+                ));
+            }
+            None => 0,
+        };
+        if body_len > opts.max_body {
+            return Frame::Fail(Reply::error(
+                413,
+                "Payload Too Large",
+                "request body exceeds the size limit",
+            ));
+        }
+
+        let body_start = header_end + 4;
+        while self.buf.len() < body_start + body_len {
+            match self.fill() {
+                Ok(0) => {
+                    return Frame::Fail(Reply::error(
+                        400,
+                        "Bad Request",
+                        "connection closed mid-body",
+                    ));
+                }
+                Ok(_) => {}
+                Err(e) if is_timeout(&e) => {
+                    return Frame::Fail(Reply::error(
+                        408,
+                        "Request Timeout",
+                        "timed out reading the request body",
+                    ));
+                }
+                Err(_) => return Frame::Closed,
+            }
+        }
+        self.pos = body_start + body_len;
+        let body = self.buf[body_start..self.pos].to_vec();
+        Frame::Request(HttpRequest { method, path, keep_alive, body })
+    }
+}
+
+fn write_response<W: Write>(out: &mut W, reply: &Reply, keep_alive: bool) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
+        reply.code,
+        reply.reason,
+        reply.body.len()
+    );
+    for (name, value) in &reply.extra {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
+    out.write_all(head.as_bytes())?;
+    out.write_all(reply.body.as_bytes())?;
+    out.flush()
+}
+
+// ---- routing + admission ----------------------------------------------
+
+fn route(req: &HttpRequest, shared: &Arc<Shared>) -> Reply {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Reply::json(200, "OK", "{\"ok\":true}".to_string()),
+        ("GET", "/stats") => Reply::json(200, "OK", snapshot(shared).to_value().to_json()),
+        ("POST", "/shutdown") => {
+            begin_shutdown(shared);
+            Reply::json(200, "OK", "{\"ok\":true,\"draining\":true}".to_string())
+        }
+        ("POST", "/v1/infer") => infer(req, shared),
+        _ => Reply::error(404, "Not Found", "unknown route"),
+    }
+}
+
+/// Parse an infer-request body into a [`BatchSpec`] and its input
+/// tensor. The input is either an explicit `"input"` i8 array or a
+/// deterministic `"seed"` — the seed path generates exactly what
+/// [`BatchEngine::gen_requests`]`(model, 1, seed)` generates, so
+/// network-path results can be compared bit-for-bit against direct
+/// engine calls.
+fn parse_infer(v: &Value) -> std::result::Result<(BatchSpec, QTensor), String> {
+    let model = match v.get_opt("model") {
+        Some(m) => m.as_str().map_err(|e| e.to_string())?.to_string(),
+        None => "dscnn".to_string(),
+    };
+    let assignment = match (v.get_opt("assignment"), v.get_opt("design")) {
+        (Some(a), _) => {
+            let s = a.as_str().map_err(|e| e.to_string())?;
+            DesignAssignment::parse(s).ok_or_else(|| format!("unknown assignment '{s}'"))?
+        }
+        (None, Some(d)) => {
+            let s = d.as_str().map_err(|e| e.to_string())?;
+            DesignKind::parse(s)
+                .map(DesignAssignment::Uniform)
+                .ok_or_else(|| format!("unknown design '{s}'"))?
+        }
+        (None, None) => DesignAssignment::Uniform(DesignKind::Csa),
+    };
+    let mut spec = BatchSpec::assigned(&model, assignment);
+    if let Some(x) = v.get_opt("x_us") {
+        let x = x.as_f64().map_err(|e| e.to_string())?;
+        if !(0.0..=1.0).contains(&x) {
+            return Err(format!("x_us {x} outside [0, 1]"));
+        }
+        spec.x_us = x;
+    }
+    if let Some(x) = v.get_opt("x_ss") {
+        let x = x.as_f64().map_err(|e| e.to_string())?;
+        if !(0.0..=1.0).contains(&x) {
+            return Err(format!("x_ss {x} outside [0, 1]"));
+        }
+        spec.x_ss = x;
+    }
+    if let Some(x) = v.get_opt("scale") {
+        let x = x.as_f64().map_err(|e| e.to_string())?;
+        if !(x > 0.0 && x <= 1.0) {
+            return Err(format!("scale {x} outside (0, 1]"));
+        }
+        spec.scale = x;
+    }
+    if let Some(x) = v.get_opt("weight_seed") {
+        spec.weight_seed = x.as_i64().map_err(|e| e.to_string())?.max(0) as u64;
+    }
+    let shape = input_shape(&spec.model).map_err(|e| e.to_string())?;
+    let params = QuantParams::new(ModelConfig::default().act_scale, 0)
+        .map_err(|e| e.to_string())?;
+    let input = match v.get_opt("input") {
+        Some(arr) => {
+            let data = arr.as_i8_vec().map_err(|e| e.to_string())?;
+            QTensor::new(shape, data, params).map_err(|e| e.to_string())?
+        }
+        None => {
+            let seed = match v.get_opt("seed") {
+                Some(s) => s.as_i64().map_err(|e| e.to_string())?.max(0) as u64,
+                None => 0,
+            };
+            let mut rng = Pcg32::new(seed);
+            random_input(shape, params, &mut rng)
+        }
+    };
+    Ok((spec, input))
+}
+
+fn infer(req: &HttpRequest, shared: &Arc<Shared>) -> Reply {
+    let t0 = Instant::now();
+    let parsed = std::str::from_utf8(&req.body)
+        .map_err(|_| "request body is not valid UTF-8".to_string())
+        .and_then(|s| Value::parse(s).map_err(|e| e.to_string()))
+        .and_then(|v| parse_infer(&v));
+    let (spec, input) = match parsed {
+        Ok(p) => p,
+        Err(msg) => {
+            shared.stats.lock().unwrap().rejected += 1;
+            return Reply::error(400, "Bad Request", &msg);
+        }
+    };
+    let model = spec.model.clone();
+    let design_label = spec.assignment.label();
+    let queue = queue_for(shared, spec);
+    let (tx, rx) = mpsc::channel();
+
+    // Admission. The shutdown check must sit *under the queue lock*:
+    // the batcher exits only once shutdown is set AND the queue is
+    // empty, so an admission racing the flag could otherwise enqueue
+    // into a queue no batcher will ever drain again.
+    let depth = {
+        let mut inner = queue.inner.lock().unwrap();
+        if shared.shutdown.load(Ordering::SeqCst) {
+            drop(inner);
+            return shed_reply(shared, "server is shutting down");
+        }
+        if inner.pending.len() >= shared.opts.queue_capacity {
+            drop(inner);
+            return shed_reply(shared, "admission queue is full, retry later");
+        }
+        inner.pending.push_back(Pending { input, resp: tx, enqueued: t0 });
+        let depth = inner.pending.len() as u64;
+        queue.cv.notify_one();
+        depth
+    };
+    {
+        let mut stats = shared.stats.lock().unwrap();
+        stats.accepted += 1;
+        stats.queue_depth_max = stats.queue_depth_max.max(depth);
+    }
+
+    match rx.recv_timeout(shared.opts.request_timeout) {
+        Ok(Ok(ok)) => {
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            {
+                let mut stats = shared.stats.lock().unwrap();
+                stats.completed += 1;
+                stats.wall.push(wall_ms);
+            }
+            let sim_ms = ok.cycles as f64 / shared.opts.clock_hz as f64 * 1e3;
+            let body = Value::obj(vec![
+                ("model", Value::Str(model)),
+                ("design", Value::Str(design_label)),
+                ("prediction", Value::Num(ok.prediction as f64)),
+                ("cycles", Value::Num(ok.cycles as f64)),
+                ("sim_ms", Value::Num(sim_ms)),
+                ("batch", Value::Num(ok.batch_size as f64)),
+                ("wall_ms", Value::Num(wall_ms)),
+            ]);
+            Reply::json(200, "OK", body.to_json())
+        }
+        Ok(Err(msg)) => {
+            shared.stats.lock().unwrap().failed += 1;
+            Reply::error(500, "Internal Server Error", &msg)
+        }
+        Err(_) => {
+            shared.stats.lock().unwrap().failed += 1;
+            Reply::error(500, "Internal Server Error", "request timed out in the engine")
+        }
+    }
+}
+
+fn shed_reply(shared: &Arc<Shared>, msg: &str) -> Reply {
+    shared.stats.lock().unwrap().shed += 1;
+    let mut reply = Reply::error(503, "Service Unavailable", msg);
+    reply.extra.push(("Retry-After", shared.opts.retry_after_s.to_string()));
+    reply
+}
+
+/// Get or create the admission queue for a spec, lazily spawning its
+/// batcher thread on first use.
+fn queue_for(shared: &Arc<Shared>, spec: BatchSpec) -> Arc<ModelQueue> {
+    let key = format!(
+        "{}|{}|{}|{}|{}|{}",
+        spec.model,
+        spec.assignment.label(),
+        spec.x_us,
+        spec.x_ss,
+        spec.scale,
+        spec.weight_seed
+    );
+    let mut queues = shared.queues.lock().unwrap();
+    if let Some(q) = queues.get(&key) {
+        return Arc::clone(q);
+    }
+    let queue = Arc::new(ModelQueue {
+        spec,
+        inner: Mutex::new(QueueInner { pending: VecDeque::new() }),
+        cv: Condvar::new(),
+    });
+    queues.insert(key, Arc::clone(&queue));
+    let handle = {
+        let queue = Arc::clone(&queue);
+        let shared = Arc::clone(shared);
+        std::thread::Builder::new()
+            .name("serve-net-batcher".into())
+            .spawn(move || batcher_loop(queue, shared))
+    };
+    match handle {
+        // Lock order queues → batchers (the only nesting in the module).
+        Ok(h) => shared.batchers.lock().unwrap().push(h),
+        Err(e) => logging::warn("net", &format!("batcher spawn failed: {e}")),
+    }
+    queue
+}
+
+// ---- continuous batcher -----------------------------------------------
+
+fn batcher_loop(queue: Arc<ModelQueue>, shared: Arc<Shared>) {
+    loop {
+        let batch: Vec<Pending> = {
+            let mut inner = queue.inner.lock().unwrap();
+            // Wait for work. Exit only when shutdown is set AND the
+            // queue is empty — accepted requests always drain.
+            loop {
+                if !inner.pending.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) =
+                    queue.cv.wait_timeout(inner, Duration::from_millis(50)).unwrap();
+                inner = guard;
+            }
+            // Continuous batching: fire on the size threshold, on
+            // shutdown (drain what is there), or when the *oldest*
+            // queued request reaches the deadline.
+            loop {
+                if inner.pending.len() >= shared.opts.batch_max
+                    || shared.shutdown.load(Ordering::SeqCst)
+                {
+                    break;
+                }
+                let age = inner
+                    .pending
+                    .front()
+                    .map_or(Duration::ZERO, |p| p.enqueued.elapsed());
+                if age >= shared.opts.batch_deadline {
+                    break;
+                }
+                let (guard, _) = queue
+                    .cv
+                    .wait_timeout(inner, shared.opts.batch_deadline - age)
+                    .unwrap();
+                inner = guard;
+            }
+            let n = inner.pending.len().min(shared.opts.batch_max);
+            inner.pending.drain(..n).collect()
+        };
+        run_one_batch(&queue.spec, batch, &shared);
+    }
+}
+
+fn run_one_batch(spec: &BatchSpec, batch: Vec<Pending>, shared: &Arc<Shared>) {
+    let n = batch.len();
+    {
+        let mut stats = shared.stats.lock().unwrap();
+        stats.batches += 1;
+        *stats.batch_hist.entry(n as u64).or_insert(0) += 1;
+    }
+    let mut senders: Vec<RespTx> = Vec::with_capacity(n);
+    let mut inputs: Vec<QTensor> = Vec::with_capacity(n);
+    for p in batch {
+        senders.push(p.resp);
+        inputs.push(p.input);
+    }
+    match shared.engine.run_batch(spec, inputs) {
+        Ok(report) => {
+            for (i, tx) in senders.iter().enumerate() {
+                let ok = InferOk {
+                    prediction: report.predictions.get(i).copied().unwrap_or(0),
+                    cycles: report.request_cycles.get(i).copied().unwrap_or(0),
+                    batch_size: n,
+                };
+                // A send error means the connection thread gave up
+                // (client disconnect / request timeout) — drop it.
+                let _ = tx.send(Ok(ok));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for tx in &senders {
+                let _ = tx.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn opts() -> NetOptions {
+        NetOptions::default()
+    }
+
+    fn frame_of(raw: &[u8]) -> Frame {
+        FrameReader::new(Cursor::new(raw.to_vec())).read_frame(&opts())
+    }
+
+    fn fail_code(f: Frame) -> u16 {
+        match f {
+            Frame::Fail(r) => r.code,
+            Frame::Request(_) => panic!("expected Fail, got Request"),
+            Frame::Closed => panic!("expected Fail, got Closed"),
+        }
+    }
+
+    #[test]
+    fn parses_simple_get() {
+        let f = frame_of(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        match f {
+            Frame::Request(r) => {
+                assert_eq!(r.method, "GET");
+                assert_eq!(r.path, "/healthz");
+                assert!(r.keep_alive);
+                assert!(r.body.is_empty());
+            }
+            _ => panic!("expected Request"),
+        }
+    }
+
+    #[test]
+    fn parses_post_with_body_and_close() {
+        let raw = b"POST /v1/infer HTTP/1.1\r\nContent-Length: 8\r\nConnection: close\r\n\r\n{\"a\":1} ";
+        match frame_of(raw) {
+            Frame::Request(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.body, b"{\"a\":1} ");
+                assert!(!r.keep_alive);
+            }
+            _ => panic!("expected Request"),
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_parse_in_order() {
+        let raw =
+            b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /b HTTP/1.1\r\n\r\n".to_vec();
+        let mut reader = FrameReader::new(Cursor::new(raw));
+        match reader.read_frame(&opts()) {
+            Frame::Request(r) => {
+                assert_eq!(r.path, "/a");
+                assert_eq!(r.body, b"hi");
+            }
+            _ => panic!("expected first Request"),
+        }
+        match reader.read_frame(&opts()) {
+            Frame::Request(r) => {
+                assert_eq!(r.path, "/b");
+                assert!(r.body.is_empty());
+            }
+            _ => panic!("expected second Request"),
+        }
+        match reader.read_frame(&opts()) {
+            Frame::Closed => {}
+            _ => panic!("expected Closed at EOF"),
+        }
+    }
+
+    #[test]
+    fn empty_connection_is_clean_close() {
+        match frame_of(b"") {
+            Frame::Closed => {}
+            _ => panic!("expected Closed"),
+        }
+    }
+
+    #[test]
+    fn post_without_content_length_is_411() {
+        assert_eq!(fail_code(frame_of(b"POST /v1/infer HTTP/1.1\r\nHost: x\r\n\r\n")), 411);
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let raw = format!(
+            "POST /v1/infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            opts().max_body + 1
+        );
+        assert_eq!(fail_code(frame_of(raw.as_bytes())), 413);
+    }
+
+    #[test]
+    fn malformed_frames_are_4xx() {
+        // Bad request line (two tokens).
+        assert_eq!(fail_code(frame_of(b"GET /x\r\n\r\n")), 400);
+        // Bad version.
+        assert_eq!(fail_code(frame_of(b"GET /x SPDY/9\r\n\r\n")), 400);
+        // Unsupported method.
+        assert_eq!(fail_code(frame_of(b"DELETE /x HTTP/1.1\r\n\r\n")), 405);
+        // Header field without a colon.
+        assert_eq!(fail_code(frame_of(b"GET /x HTTP/1.1\r\nnocolon\r\n\r\n")), 400);
+        // Unparseable Content-Length.
+        assert_eq!(
+            fail_code(frame_of(b"POST /x HTTP/1.1\r\nContent-Length: two\r\n\r\n")),
+            400
+        );
+        // Conflicting duplicate Content-Length.
+        assert_eq!(
+            fail_code(frame_of(
+                b"POST /x HTTP/1.1\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\nx"
+            )),
+            400
+        );
+        // Chunked bodies are not implemented.
+        assert_eq!(
+            fail_code(frame_of(
+                b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"
+            )),
+            501
+        );
+    }
+
+    #[test]
+    fn truncated_header_and_body_are_400() {
+        assert_eq!(fail_code(frame_of(b"GET /x HTTP/1.1\r\nHost:")), 400);
+        assert_eq!(
+            fail_code(frame_of(b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort")),
+            400
+        );
+    }
+
+    #[test]
+    fn giant_header_is_431() {
+        let mut raw = b"GET /x HTTP/1.1\r\nX-Pad: ".to_vec();
+        let pad = vec![b'a'; opts().max_header + 16];
+        raw.extend_from_slice(&pad);
+        assert_eq!(fail_code(frame_of(&raw)), 431);
+    }
+
+    /// Reader that yields its prefix then stalls like a read timeout —
+    /// a slow-loris peer under `SO_RCVTIMEO`.
+    struct Stall {
+        data: Vec<u8>,
+        served: usize,
+    }
+
+    impl Read for Stall {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.served < self.data.len() {
+                let n = out.len().min(self.data.len() - self.served);
+                out[..n].copy_from_slice(&self.data[self.served..self.served + n]);
+                self.served += n;
+                Ok(n)
+            } else {
+                Err(ErrorKind::WouldBlock.into())
+            }
+        }
+    }
+
+    #[test]
+    fn slow_loris_times_out_with_408() {
+        // Stalls mid-header.
+        let r = FrameReader::new(Stall {
+            data: b"GET /x HTTP/1.1\r\nHost: slow".to_vec(),
+            served: 0,
+        })
+        .read_frame(&opts());
+        assert_eq!(fail_code(r), 408);
+        // Stalls mid-body.
+        let r = FrameReader::new(Stall {
+            data: b"POST /x HTTP/1.1\r\nContent-Length: 64\r\n\r\npartial".to_vec(),
+            served: 0,
+        })
+        .read_frame(&opts());
+        assert_eq!(fail_code(r), 408);
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out: Vec<u8> = Vec::new();
+        let mut reply = Reply::error(503, "Service Unavailable", "full");
+        reply.extra.push(("Retry-After", "1".to_string()));
+        write_response(&mut out, &reply, false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("{\"error\":\"full\"}"));
+        let cl = format!("Content-Length: {}\r\n", "{\"error\":\"full\"}".len());
+        assert!(text.contains(&cl));
+    }
+
+    #[test]
+    fn parse_infer_defaults_and_validation() {
+        let (spec, input) = parse_infer(&Value::parse("{}").unwrap()).unwrap();
+        assert_eq!(spec.model, "dscnn");
+        assert_eq!(spec.assignment, DesignAssignment::Uniform(DesignKind::Csa));
+        // Default seed path matches gen_requests(model, 1, 0) exactly.
+        let direct = BatchEngine::gen_requests("dscnn", 1, 0).unwrap();
+        assert_eq!(input.data(), direct[0].data());
+
+        let v = Value::parse(r#"{"model":"dscnn","design":"sssa","seed":7,"scale":0.1}"#)
+            .unwrap();
+        let (spec, input) = parse_infer(&v).unwrap();
+        assert_eq!(spec.assignment, DesignAssignment::Uniform(DesignKind::Sssa));
+        assert_eq!(spec.scale, 0.1);
+        let direct = BatchEngine::gen_requests("dscnn", 1, 7).unwrap();
+        assert_eq!(input.data(), direct[0].data());
+
+        for bad in [
+            r#"{"design":"warp9"}"#,
+            r#"{"x_us":1.5}"#,
+            r#"{"x_ss":-0.1}"#,
+            r#"{"scale":0.0}"#,
+            r#"{"model":"not-a-model"}"#,
+            r#"{"input":[1,2,3]}"#,
+            r#"{"input":[999]}"#,
+        ] {
+            assert!(parse_infer(&Value::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn stats_record_uses_informational_registry_entries() {
+        let stats = NetStats {
+            accepted: 10,
+            completed: 8,
+            failed: 0,
+            shed: 2,
+            rejected: 1,
+            batches: 3,
+            batch_hist: BTreeMap::from([(2, 2), (4, 1)]),
+            queue_depth_max: 5,
+            wall_p50_ms: 1.0,
+            wall_p99_ms: 2.0,
+            wall_p999_ms: 3.0,
+        };
+        assert!((stats.mean_batch_size() - 8.0 / 3.0).abs() < 1e-12);
+        let rec = stats.to_record("serve/net");
+        assert_eq!(rec.get("host_shed_total"), Some(2.0));
+        assert_eq!(rec.get("host_queue_depth_max"), Some(5.0));
+        assert!(rec.get("wall_p99_ms").is_some());
+        // Shed/queue-depth must be lower-is-better (the generic host_
+        // prefix direction would misread a shedding fix as a loss) and
+        // everything here must stay ungated.
+        for name in ["host_shed_total", "host_queue_depth_max"] {
+            let spec = crate::metrics::spec_for(name);
+            assert!(!spec.gate, "{name}");
+            assert_eq!(spec.better, crate::metrics::Direction::LowerIsBetter, "{name}");
+        }
+        assert!(!crate::metrics::spec_for("wall_p999_ms").gate);
+        assert!(!crate::metrics::spec_for("host_batch_mean").gate);
+        // /stats JSON stays parseable (no NaN leakage on idle servers).
+        let json = stats.to_value().to_json();
+        let back = Value::parse(&json).unwrap();
+        assert_eq!(back.get("batch_mean").unwrap().as_f64().unwrap(), stats.mean_batch_size());
+    }
+
+    #[test]
+    fn find_subslice_basics() {
+        assert_eq!(find_subslice(b"abcd\r\n\r\nef", b"\r\n\r\n"), Some(4));
+        assert_eq!(find_subslice(b"abcd", b"\r\n\r\n"), None);
+        assert_eq!(find_subslice(b"", b"\r\n\r\n"), None);
+    }
+}

@@ -25,8 +25,10 @@
 //! - an FPGA resource estimator reproducing Table III ([`resources`]),
 //! - analytical speedup models for Figures 8/9 and the co-design
 //!   resource pricing ([`analysis`]),
-//! - an experiment coordinator with a threaded scheduler and a request
-//!   serving loop ([`coordinator`]),
+//! - an experiment coordinator with a threaded scheduler, a request
+//!   serving loop, a dependency-free TCP/HTTP front-end with
+//!   continuous batching and overload shedding, and an open-loop load
+//!   generator ([`coordinator`]),
 //! - structured perf telemetry: metric records, the committed
 //!   `BENCH_*.json` baseline store, and the CI regression diff engine
 //!   ([`metrics`]),

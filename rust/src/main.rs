@@ -7,7 +7,10 @@ use sparse_riscv::bench::e2e::{render as render_e2e, run_e2e, to_records, E2eCon
 use sparse_riscv::bench::explore::{run_explore_bench, to_record as explore_record};
 use sparse_riscv::cli::{ArgSpec, Command, ParsedArgs};
 use sparse_riscv::config::experiment::{ExperimentConfig, SimOptions};
+use sparse_riscv::config::value::Value;
 use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
+use sparse_riscv::coordinator::loadgen::{self, Arrival, TraceConfig};
+use sparse_riscv::coordinator::net::{NetOptions, NetServer};
 use sparse_riscv::coordinator::runner::run_experiment;
 use sparse_riscv::coordinator::serve::{Server, ServeOptions};
 use sparse_riscv::encoding::lookahead::encode_lanes;
@@ -22,6 +25,7 @@ use sparse_riscv::models::zoo::{build_model, model_names};
 use sparse_riscv::resources::fpga::{estimate_cfu, paper_increment, BASELINE_SOC};
 use sparse_riscv::sparsity::generator::gen_combined_sparse;
 use sparse_riscv::util::Pcg32;
+use std::time::Duration;
 
 fn cli() -> Command {
     Command::new("sparse-riscv", "RISC-V sparse-DNN CFU co-design simulator")
@@ -77,6 +81,54 @@ fn cli() -> Command {
                     "auto",
                     "host multiply kernel for batched lanes (auto|scalar|swar|sse2|neon)",
                 )),
+        )
+        .subcommand(
+            Command::new("serve-tcp", "TCP/HTTP serving front-end with continuous batching")
+                .arg(ArgSpec::opt("addr", "127.0.0.1:0", "bind address (port 0 = ephemeral)"))
+                .arg(ArgSpec::opt("batch-max", "16", "batch size that fires immediately"))
+                .arg(ArgSpec::opt(
+                    "deadline-ms",
+                    "5",
+                    "max wait (ms) before a partial batch fires",
+                ))
+                .arg(ArgSpec::opt(
+                    "queue-cap",
+                    "256",
+                    "bounded queue depth; beyond it requests shed with 503",
+                ))
+                .arg(ArgSpec::opt("read-timeout-ms", "5000", "socket read timeout (ms)"))
+                .arg(ArgSpec::opt("max-body", "1048576", "max request body bytes"))
+                .arg(ArgSpec::opt("threads", "0", "engine worker threads (0=auto)"))
+                .arg(ArgSpec::opt("tile-threads", "0", "intra-layer tile workers"))
+                .arg(ArgSpec::opt("cache-cap", "64", "prepared-model LRU capacity"))
+                .arg(ArgSpec::opt(
+                    "host-kernel",
+                    "auto",
+                    "host multiply kernel (auto|scalar|swar|sse2|neon)",
+                ))
+                .arg(ArgSpec::opt(
+                    "max-seconds",
+                    "0",
+                    "auto-shutdown after this many seconds (0 = run until POST /shutdown)",
+                ))
+                .arg(ArgSpec::opt("json", "", "upsert serving metric records into this store")),
+        )
+        .subcommand(
+            Command::new("loadgen", "replay a deterministic open-loop trace against serve-tcp")
+                .arg(ArgSpec::opt("addr", "", "server address, e.g. 127.0.0.1:8080 (required)"))
+                .arg(ArgSpec::opt("requests", "64", "requests in the trace"))
+                .arg(ArgSpec::opt("rate", "200", "mean offered load (requests/s)"))
+                .arg(ArgSpec::opt("arrival", "poisson", "arrival process (poisson|burst)"))
+                .arg(ArgSpec::opt("burst", "8", "burst size for --arrival burst"))
+                .arg(ArgSpec::opt("seed", "7", "trace + request seed"))
+                .arg(ArgSpec::opt("model", "dscnn", "model requested"))
+                .arg(ArgSpec::opt("design", "csa", "accelerator design requested"))
+                .arg(ArgSpec::opt("x-us", "0.5", "unstructured sparsity"))
+                .arg(ArgSpec::opt("x-ss", "0.3", "block sparsity"))
+                .arg(ArgSpec::opt("scale", "0.125", "model width multiplier"))
+                .arg(ArgSpec::opt("timeout-ms", "30000", "per-request client timeout (ms)"))
+                .arg(ArgSpec::flag("shutdown", "POST /shutdown after the trace completes"))
+                .arg(ArgSpec::opt("json", "", "upsert client-side metric records here")),
         )
         .subcommand(
             Command::new("explore", "per-layer co-design: Pareto frontier + argmin assignment")
@@ -312,6 +364,151 @@ fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
             m
         });
     println!("prediction histogram: {hist:?}");
+    Ok(())
+}
+
+fn cmd_serve_tcp(args: &ParsedArgs) -> sparse_riscv::Result<()> {
+    use std::io::Write as _;
+    let host_kernel = parse_host_kernel(args.get("host-kernel")?)?;
+    let engine = BatchEngine::new(BatchOptions {
+        threads: args.get_usize("threads")?,
+        clock_hz: 100_000_000,
+        verify: false,
+        exec_mode: ExecMode::default(),
+        cache_capacity: args.get_usize("cache-cap")?,
+        tile_threads: args.get_usize("tile-threads")?,
+        host_kernel,
+    });
+    let opts = NetOptions {
+        batch_max: args.get_usize("batch-max")?,
+        batch_deadline: Duration::from_millis(args.get_u64("deadline-ms")?),
+        queue_capacity: args.get_usize("queue-cap")?,
+        read_timeout: Duration::from_millis(args.get_u64("read-timeout-ms")?.max(1)),
+        max_body: args.get_usize("max-body")?,
+        ..Default::default()
+    };
+    let server = NetServer::bind(args.get("addr")?, engine, opts)?;
+    // The exact line automation scrapes for the ephemeral port — flush
+    // so a piped stdout delivers it before the server blocks in join().
+    println!("serve-tcp: listening on {}", server.addr());
+    std::io::stdout().flush()?;
+    let max_seconds = args.get_u64("max-seconds")?;
+    if max_seconds > 0 {
+        let handle = server.handle();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_secs(max_seconds));
+            handle.shutdown();
+        });
+    }
+    let stats = server.join();
+    println!(
+        "serve-tcp: drained — accepted {} completed {} failed {} shed {} rejected {} \
+         over {} batches (mean batch {:.2}, max queue depth {})",
+        stats.accepted,
+        stats.completed,
+        stats.failed,
+        stats.shed,
+        stats.rejected,
+        stats.batches,
+        stats.mean_batch_size(),
+        stats.queue_depth_max,
+    );
+    println!(
+        "serve-tcp: wall latency p50 {:.3} ms  p99 {:.3} ms  p99.9 {:.3} ms",
+        stats.wall_p50_ms, stats.wall_p99_ms, stats.wall_p999_ms,
+    );
+    let note = "regenerate: cargo run --release -- serve-tcp (plus a loadgen trace)";
+    let rec = stats.to_record("serve/net");
+    if let Some(path) = sparse_riscv::metrics::sink_records_env(note, &[rec.clone()])? {
+        println!("metrics: wrote 1 record into {path}");
+    }
+    let json_path = args.get("json")?;
+    if !json_path.is_empty() {
+        BaselineStore::upsert_file(json_path, note, vec![rec])?;
+        println!("metrics: upserted 1 record into {json_path}");
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(args: &ParsedArgs) -> sparse_riscv::Result<()> {
+    let addr = args.get("addr")?.to_string();
+    if addr.is_empty() {
+        return Err(sparse_riscv::Error::Cli(
+            "--addr is required (e.g. 127.0.0.1:8080)".into(),
+        ));
+    }
+    let arrival = Arrival::parse(args.get("arrival")?).ok_or_else(|| {
+        sparse_riscv::Error::Cli(format!(
+            "bad --arrival '{}' (want poisson|burst)",
+            args.get("arrival").unwrap_or_default()
+        ))
+    })?;
+    let trace = TraceConfig {
+        requests: args.get_usize("requests")?,
+        rate: args.get_f64("rate")?,
+        arrival,
+        burst: args.get_usize("burst")?,
+        seed: args.get_u64("seed")?,
+    };
+    if trace.rate <= 0.0 {
+        return Err(sparse_riscv::Error::Cli("--rate must be positive".into()));
+    }
+    let model = args.get("model")?.to_string();
+    let design = args.get("design")?.to_string();
+    if DesignKind::parse(&design).is_none() {
+        return Err(sparse_riscv::Error::Cli(format!("unknown design '{design}'")));
+    }
+    let (x_us, x_ss) = (args.get_f64("x-us")?, args.get_f64("x-ss")?);
+    let scale = args.get_f64("scale")?;
+    // One body per request with a distinct deterministic input seed, so
+    // a replayed trace exercises the same inputs every run.
+    let bodies: Vec<String> = (0..trace.requests)
+        .map(|i| {
+            Value::obj(vec![
+                ("model", Value::Str(model.clone())),
+                ("design", Value::Str(design.clone())),
+                ("x_us", Value::Num(x_us)),
+                ("x_ss", Value::Num(x_ss)),
+                ("scale", Value::Num(scale)),
+                ("seed", Value::Num(trace.seed.wrapping_add(i as u64) as f64)),
+            ])
+            .to_json()
+        })
+        .collect();
+    let timeout = Duration::from_millis(args.get_u64("timeout-ms")?.max(1));
+    println!(
+        "loadgen: {} requests at {} req/s ({}, seed {}) against {addr}",
+        trace.requests,
+        trace.rate,
+        arrival.name(),
+        trace.seed,
+    );
+    let report = loadgen::run_trace(&addr, &trace, &bodies, timeout);
+    println!("loadgen: {}", report.to_value().to_json());
+    if args.get_flag("shutdown")? {
+        match loadgen::http_request(&addr, "POST", "/shutdown", "{}", timeout) {
+            Ok(resp) if resp.code == 200 => println!("loadgen: server draining"),
+            Ok(resp) => eprintln!("warning: shutdown returned HTTP {}", resp.code),
+            Err(e) => eprintln!("warning: shutdown request failed: {e}"),
+        }
+    }
+    let json_path = args.get("json")?;
+    if !json_path.is_empty() {
+        let rec = report.to_record(&format!("loadgen/{model}"));
+        BaselineStore::upsert_file(
+            json_path,
+            "regenerate: cargo run --release -- loadgen --json <path>",
+            vec![rec],
+        )?;
+        println!("metrics: upserted 1 record into {json_path}");
+    }
+    if !report.well_formed() {
+        eprintln!(
+            "loadgen: trace not clean — ok {} shed {} failed {} malformed {} of {} sent",
+            report.ok, report.shed, report.failed, report.malformed, report.sent
+        );
+        std::process::exit(1);
+    }
     Ok(())
 }
 
@@ -707,6 +904,8 @@ fn main() {
     let result = match path.as_slice() {
         [_, "experiment"] => cmd_experiment(&parsed),
         [_, "serve"] => cmd_serve(&parsed),
+        [_, "serve-tcp"] => cmd_serve_tcp(&parsed),
+        [_, "loadgen"] => cmd_loadgen(&parsed),
         [_, "explore"] => cmd_explore(&parsed),
         [_, "bench-e2e"] => cmd_bench_e2e(&parsed),
         [_, "metrics", "diff"] => cmd_metrics_diff(&parsed),

@@ -191,6 +191,42 @@ pub const METRIC_SPECS: &[MetricSpec] = &[
         rel_tol: 0.02,
         abs_floor: 1.0,
     },
+    // Network-serving counters: informational (wall-clock-dependent),
+    // with explicit directions — the generic `host_` prefix below is
+    // higher-is-better, which would misread a shedding or queue-depth
+    // improvement as a loss.
+    MetricSpec {
+        name: "host_shed_total",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_queue_depth_max",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_failed",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_batch_mean",
+        prefix: false,
+        better: Direction::HigherIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 0.5,
+    },
     // Host wall-clock: informational only, never gated. The generous
     // tolerance keeps run-to-run jitter out of the diff table; only
     // swings beyond it get flagged (still non-fatal).
@@ -397,6 +433,24 @@ mod tests {
         assert!(!spec_for("wall_mean_ms").gate);
         assert!(!spec_for("host_inf_s").gate);
         assert_eq!(spec_for("host_inf_s").better, Direction::HigherIsBetter);
+    }
+
+    #[test]
+    fn registry_serving_counters_override_host_prefix_direction() {
+        // Exact serving entries beat the higher-is-better host_ prefix:
+        // fewer sheds and shallower queues are improvements.
+        for name in ["host_shed_total", "host_queue_depth_max", "host_failed"] {
+            let s = spec_for(name);
+            assert_eq!(s.name, name, "{name} must hit its exact entry");
+            assert_eq!(s.better, Direction::LowerIsBetter, "{name}");
+            assert!(!s.gate, "{name} is wall-clock-driven, never gated");
+        }
+        let s = spec_for("host_batch_mean");
+        assert_eq!(s.better, Direction::HigherIsBetter);
+        assert!(!s.gate);
+        // Serving wall percentiles ride the wall_ prefix.
+        assert!(!spec_for("wall_p999_ms").gate);
+        assert_eq!(spec_for("wall_p999_ms").better, Direction::LowerIsBetter);
     }
 
     #[test]

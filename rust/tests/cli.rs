@@ -19,9 +19,18 @@ fn run(args: &[&str]) -> (bool, String, String) {
 fn help_lists_subcommands() {
     let (ok, stdout, _) = run(&["--help"]);
     assert!(ok);
-    for sub in
-        ["experiment", "serve", "explore", "bench-e2e", "metrics", "encode", "resources", "models"]
-    {
+    for sub in [
+        "experiment",
+        "serve",
+        "serve-tcp",
+        "loadgen",
+        "explore",
+        "bench-e2e",
+        "metrics",
+        "encode",
+        "resources",
+        "models",
+    ] {
         assert!(stdout.contains(sub), "help missing '{sub}':\n{stdout}");
     }
 }

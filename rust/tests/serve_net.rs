@@ -1,0 +1,291 @@
+//! Integration tests for the TCP/HTTP serving front-end: real loopback
+//! sockets, concurrent clients, continuous batching, overload shedding,
+//! and bit-identity against direct [`BatchEngine`] calls.
+
+use sparse_riscv::config::value::Value;
+use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
+use sparse_riscv::coordinator::loadgen::{self, Arrival, TraceConfig};
+use sparse_riscv::coordinator::net::{NetOptions, NetServer};
+use sparse_riscv::isa::DesignKind;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Width multiplier small enough that model prepare + inference stay
+/// fast in unoptimized test builds.
+const SCALE: f64 = 0.07;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+fn engine() -> BatchEngine {
+    BatchEngine::new(BatchOptions { threads: 2, ..Default::default() })
+}
+
+fn test_opts() -> NetOptions {
+    NetOptions {
+        batch_max: 8,
+        batch_deadline: Duration::from_millis(10),
+        queue_capacity: 64,
+        read_timeout: Duration::from_millis(400),
+        ..Default::default()
+    }
+}
+
+fn start_server(opts: NetOptions) -> NetServer {
+    NetServer::bind("127.0.0.1:0", engine(), opts).expect("bind ephemeral port")
+}
+
+/// Infer body for the deterministic seed path at the test scale.
+fn infer_body(seed: u64) -> String {
+    Value::obj(vec![
+        ("model", Value::Str("dscnn".to_string())),
+        ("design", Value::Str("csa".to_string())),
+        ("scale", Value::Num(SCALE)),
+        ("seed", Value::Num(seed as f64)),
+    ])
+    .to_json()
+}
+
+#[test]
+fn healthz_stats_and_graceful_shutdown() {
+    let server = start_server(test_opts());
+    let addr = server.addr().to_string();
+
+    let health = loadgen::http_request(&addr, "GET", "/healthz", "", TIMEOUT).unwrap();
+    assert_eq!(health.code, 200);
+    assert!(health.body.contains("\"ok\":true"), "body: {}", health.body);
+
+    let stats = loadgen::http_request(&addr, "GET", "/stats", "", TIMEOUT).unwrap();
+    assert_eq!(stats.code, 200);
+    let v = Value::parse(&stats.body).expect("stats is valid JSON");
+    assert_eq!(v.get("accepted").unwrap().as_f64().unwrap(), 0.0);
+
+    let bye = loadgen::http_request(&addr, "POST", "/shutdown", "{}", TIMEOUT).unwrap();
+    assert_eq!(bye.code, 200);
+    assert!(bye.body.contains("\"draining\":true"), "body: {}", bye.body);
+
+    // join() returns because /shutdown initiated the drain; a server
+    // that never got work reports all-zero counters.
+    let final_stats = server.join();
+    assert_eq!(final_stats.accepted, 0);
+    assert_eq!(final_stats.completed, 0);
+    assert_eq!(final_stats.shed, 0);
+
+    // The listener is gone after shutdown.
+    assert!(loadgen::http_request(&addr, "GET", "/healthz", "", TIMEOUT).is_err());
+}
+
+#[test]
+fn network_path_matches_direct_engine_bit_identically() {
+    let server = start_server(test_opts());
+    let addr = server.addr().to_string();
+    let seeds: Vec<u64> = (100..106).collect();
+
+    // Concurrent clients, one per seed, all answered from shared batches.
+    let mut handles = Vec::new();
+    for &seed in &seeds {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let resp =
+                loadgen::http_request(&addr, "POST", "/v1/infer", &infer_body(seed), TIMEOUT)
+                    .expect("infer request");
+            assert_eq!(resp.code, 200, "body: {}", resp.body);
+            let v = Value::parse(&resp.body).expect("infer response is valid JSON");
+            let prediction = v.get("prediction").unwrap().as_usize().unwrap();
+            let cycles = v.get("cycles").unwrap().as_f64().unwrap() as u64;
+            (prediction, cycles)
+        }));
+    }
+    let via_net: Vec<(usize, u64)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    server.shutdown();
+    let stats = server.join();
+    assert_eq!(stats.accepted, seeds.len() as u64);
+    assert_eq!(stats.completed, seeds.len() as u64);
+    assert_eq!(stats.failed + stats.shed + stats.rejected, 0);
+
+    // Direct engine runs, one request per seed: predictions AND
+    // per-request cycle counts must match exactly — batch composition on
+    // the network path must not perturb simulated results.
+    let direct_engine = engine();
+    let spec = BatchSpec { scale: SCALE, ..BatchSpec::new("dscnn", DesignKind::Csa) };
+    for (i, &seed) in seeds.iter().enumerate() {
+        let reqs = BatchEngine::gen_requests("dscnn", 1, seed).unwrap();
+        let report = direct_engine.run_batch(&spec, reqs).unwrap();
+        assert_eq!(
+            via_net[i],
+            (report.predictions[0], report.request_cycles[0]),
+            "seed {seed}: network result diverged from direct engine"
+        );
+    }
+}
+
+#[test]
+fn poisson_trace_batches_with_deadline_trigger() {
+    // Large size trigger + 40ms deadline: a ~800 req/s Poisson trace
+    // coalesces under the deadline trigger, so the server must execute
+    // fewer batches than requests (mean batch size > 1).
+    let server = start_server(NetOptions {
+        batch_max: 64,
+        batch_deadline: Duration::from_millis(40),
+        ..test_opts()
+    });
+    let addr = server.addr().to_string();
+
+    let n = 30;
+    let trace =
+        TraceConfig { requests: n, rate: 800.0, arrival: Arrival::Poisson, burst: 1, seed: 11 };
+    let bodies: Vec<String> = (0..n).map(|i| infer_body(200 + i as u64)).collect();
+    let report = loadgen::run_trace(&addr, &trace, &bodies, TIMEOUT);
+    assert!(report.well_formed(), "trace not clean: {}", report.to_value().to_json());
+    assert_eq!(report.ok, n as u64);
+
+    // The /stats endpoint must expose the same counters as the final
+    // snapshot while the server is still up.
+    let live = loadgen::http_request(&addr, "GET", "/stats", "", TIMEOUT).unwrap();
+    let v = Value::parse(&live.body).unwrap();
+    assert_eq!(v.get("completed").unwrap().as_usize().unwrap(), n);
+    assert!(v.get("batch_mean").unwrap().as_f64().unwrap() >= 1.0);
+
+    server.shutdown();
+    let stats = server.join();
+    assert_eq!(stats.completed, n as u64);
+    assert!(stats.batches >= 1 && stats.batches < n as u64, "batches = {}", stats.batches);
+    assert!(
+        stats.mean_batch_size() > 1.0,
+        "continuous batching never coalesced: mean {} over {} batches",
+        stats.mean_batch_size(),
+        stats.batches
+    );
+    let hist_total: u64 = stats.batch_hist.iter().map(|(size, count)| size * count).sum();
+    assert_eq!(hist_total, n as u64, "histogram must account for every request");
+    assert!(stats.wall_p99_ms >= stats.wall_p50_ms);
+}
+
+#[test]
+fn burst_sheds_beyond_watermark_without_losing_accepted_requests() {
+    // Tiny queue + long deadline: a simultaneous burst of 12 can admit
+    // at most queue_capacity before the first batch fires, so the rest
+    // must shed with 503 + Retry-After. The contract under overload:
+    // every request is answered (ok + shed == sent) and every *accepted*
+    // request completes.
+    let server = start_server(NetOptions {
+        batch_max: 8,
+        batch_deadline: Duration::from_millis(300),
+        queue_capacity: 3,
+        ..test_opts()
+    });
+    let addr = server.addr().to_string();
+
+    let n = 12;
+    let trace =
+        TraceConfig { requests: n, rate: 50.0, arrival: Arrival::Burst, burst: n, seed: 5 };
+    let bodies: Vec<String> = (0..n).map(|i| infer_body(300 + i as u64)).collect();
+    let report = loadgen::run_trace(&addr, &trace, &bodies, TIMEOUT);
+
+    assert_eq!(report.failed, 0, "overload must shed, not error");
+    assert_eq!(report.malformed, 0);
+    assert_eq!(report.ok + report.shed, n as u64, "every request gets an answer");
+    assert!(report.shed > 0, "queue of 3 cannot absorb a burst of {n}");
+
+    server.shutdown();
+    let stats = server.join();
+    assert_eq!(stats.completed, report.ok, "accepted requests are never lost");
+    assert_eq!(stats.accepted, stats.completed);
+    assert_eq!(stats.shed, report.shed);
+    assert!(stats.queue_depth_max <= 3, "bounded queue overflowed");
+}
+
+#[test]
+fn malformed_requests_get_4xx_over_the_wire() {
+    let server = start_server(test_opts());
+    let addr = server.addr().to_string();
+
+    // (raw frame, expected status) — each on a fresh connection; the
+    // server writes the terminal response and closes.
+    let cases: &[(&str, u16)] = &[
+        ("PUT /v1/infer HTTP/1.1\r\nContent-Length: 0\r\n\r\n", 405),
+        ("POST /v1/infer HTTP/1.1\r\n\r\n", 411),
+        ("POST /v1/infer HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n", 413),
+        ("POST /v1/infer HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+        ("total garbage\r\n\r\n", 400),
+        ("GET /nope HTTP/1.1\r\nConnection: close\r\n\r\n", 404),
+    ];
+    for (raw, want) in cases {
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.set_read_timeout(Some(TIMEOUT)).unwrap();
+        conn.write_all(raw.as_bytes()).unwrap();
+        let mut buf = Vec::new();
+        conn.read_to_end(&mut buf).unwrap();
+        let resp = loadgen::parse_response(&buf).expect("well-formed error response");
+        assert_eq!(resp.code, *want, "frame: {raw:?}");
+        Value::parse(&resp.body).expect("error body is valid JSON");
+    }
+
+    // An invalid body on the right route is rejected before admission.
+    let bad = loadgen::http_request(&addr, "POST", "/v1/infer", "{\"design\":\"nope\"}", TIMEOUT)
+        .unwrap();
+    assert_eq!(bad.code, 400);
+
+    server.shutdown();
+    let stats = server.join();
+    assert_eq!(stats.accepted, 0, "no malformed frame may reach a queue");
+    assert!(stats.rejected >= 6, "rejected = {}", stats.rejected);
+}
+
+#[test]
+fn slow_loris_partial_write_times_out_with_408() {
+    let server = start_server(test_opts());
+    let addr = server.addr().to_string();
+
+    // Write half a header and stall: the 400ms read timeout must
+    // reclaim the connection with 408 instead of pinning the thread.
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_read_timeout(Some(TIMEOUT)).unwrap();
+    conn.write_all(b"POST /v1/infer HTTP/1.1\r\nContent-").unwrap();
+    let mut buf = Vec::new();
+    conn.read_to_end(&mut buf).unwrap();
+    let resp = loadgen::parse_response(&buf).expect("timeout response");
+    assert_eq!(resp.code, 408);
+
+    // The server stays healthy for the next client.
+    let health = loadgen::http_request(&addr, "GET", "/healthz", "", TIMEOUT).unwrap();
+    assert_eq!(health.code, 200);
+
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn pipelined_keep_alive_requests_share_one_connection() {
+    let server = start_server(test_opts());
+    let addr = server.addr().to_string();
+
+    // Two infer requests written back-to-back in a single segment; the
+    // second asks to close. Both must be answered, in order.
+    let (b1, b2) = (infer_body(400), infer_body(401));
+    let raw = format!(
+        "POST /v1/infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n{b1}\
+         POST /v1/infer HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{b2}",
+        b1.len(),
+        b2.len()
+    );
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_read_timeout(Some(TIMEOUT)).unwrap();
+    conn.write_all(raw.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    conn.read_to_end(&mut buf).unwrap();
+
+    let text = String::from_utf8_lossy(&buf);
+    assert_eq!(
+        text.matches("HTTP/1.1 200 OK").count(),
+        2,
+        "expected two responses, got: {text}"
+    );
+    assert_eq!(text.matches("\"prediction\"").count(), 2);
+
+    server.shutdown();
+    let stats = server.join();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed + stats.shed + stats.rejected, 0);
+}
