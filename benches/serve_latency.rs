@@ -64,6 +64,7 @@ fn main() {
         arrival: Arrival::Poisson,
         burst: 1,
         seed: 0xB0A7,
+        retries: 0,
     };
     let bodies: Vec<String> = (0..requests).map(|i| body(1000 + i as u64)).collect();
     let report = loadgen::run_trace(&addr, &trace, &bodies, timeout);
@@ -110,6 +111,7 @@ fn main() {
         arrival: Arrival::Burst,
         burst,
         seed: 0xB0A8,
+        retries: 0,
     };
     let bodies: Vec<String> = (0..requests).map(|i| body(2000 + i as u64)).collect();
     let report = loadgen::run_trace(&addr, &trace, &bodies, timeout);

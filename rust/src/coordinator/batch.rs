@@ -18,8 +18,10 @@
 //! This is the substrate the CLI `serve`/`bench-e2e` commands and the
 //! end-to-end throughput bench build on.
 
+use super::lock_clean;
 use super::scheduler::{JobPool, TilePool};
 use crate::error::Result;
+use crate::faults::{FaultPlan, FaultSite};
 use crate::isa::{DesignAssignment, DesignKind};
 use crate::kernels::{ExecMode, HostKernel};
 use crate::metrics::MetricRecord;
@@ -32,7 +34,9 @@ use crate::tensor::quant::QuantParams;
 use crate::tensor::QTensor;
 use crate::util::stats::{OnlineStats, Percentiles};
 use crate::util::Pcg32;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// One batchable workload: which prepared model to run.
@@ -260,6 +264,10 @@ pub struct BatchOptions {
     /// `Auto` picks the fastest available SWAR/SIMD routine. Outputs and
     /// simulated counters are invariant in this choice.
     pub host_kernel: HostKernel,
+    /// Seeded fault-injection plan (chaos testing). `None` — the default
+    /// everywhere — makes every fault hook a no-op, so production and
+    /// differential-tier behavior is bit-identical to a plan-free build.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for BatchOptions {
@@ -272,6 +280,7 @@ impl Default for BatchOptions {
             cache_capacity: PreparedCache::DEFAULT_CAPACITY,
             tile_threads: 0,
             host_kernel: HostKernel::Auto,
+            faults: None,
         }
     }
 }
@@ -285,6 +294,12 @@ struct ReqStat {
     pred: usize,
 }
 
+/// Consecutive integrity strikes on one key before the engine stops
+/// re-preparing and pins the key to the interpreted-oracle backend
+/// (graceful degradation: slower, but the oracle path's simplicity is
+/// the bit-trustworthy reference).
+const DEGRADE_STRIKES: u32 = 2;
+
 /// The batched multi-design inference engine.
 pub struct BatchEngine {
     pool: JobPool,
@@ -293,6 +308,14 @@ pub struct BatchEngine {
     tiling: Option<TilePool>,
     cache: Arc<PreparedCache>,
     opts: BatchOptions,
+    /// Integrity strikes per model key; keys at [`DEGRADE_STRIKES`] run
+    /// on the interpreted-oracle backend from then on.
+    strikes: Mutex<HashMap<ModelKey, u32>>,
+    /// Batches executed in degraded (oracle-fallback) mode.
+    degraded_runs: AtomicU64,
+    /// Transient lane faults detected by redundant re-execution and
+    /// answered with the clean re-run. Shared with worker closures.
+    transient_corrected: Arc<AtomicU64>,
 }
 
 impl BatchEngine {
@@ -306,7 +329,15 @@ impl BatchEngine {
     /// thread-count configurations in a bench sweep).
     pub fn with_cache(opts: BatchOptions, cache: Arc<PreparedCache>) -> Self {
         let tiling = (opts.tile_threads > 1).then(|| TilePool::new(opts.tile_threads));
-        BatchEngine { pool: JobPool::new(opts.threads), tiling, cache, opts }
+        BatchEngine {
+            pool: JobPool::new(opts.threads),
+            tiling,
+            cache,
+            opts,
+            strikes: Mutex::new(HashMap::new()),
+            degraded_runs: AtomicU64::new(0),
+            transient_corrected: Arc::new(AtomicU64::new(0)),
+        }
     }
 
     /// Worker threads serving this engine.
@@ -322,6 +353,42 @@ impl BatchEngine {
     /// The prepared-model cache (inspection / sharing).
     pub fn cache(&self) -> &Arc<PreparedCache> {
         &self.cache
+    }
+
+    /// The fault-injection plan this engine consults, if any.
+    pub fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        self.opts.faults.as_ref()
+    }
+
+    /// Integrity-checksum failures detected on prepared-cache hits.
+    pub fn integrity_fails(&self) -> u64 {
+        self.cache.integrity_fails()
+    }
+
+    /// Batches executed in degraded (interpreted-oracle) mode.
+    pub fn degraded_runs(&self) -> u64 {
+        self.degraded_runs.load(Ordering::Relaxed)
+    }
+
+    /// Transient lane faults detected (by redundant re-execution) and
+    /// corrected so far.
+    pub fn transient_corrected(&self) -> u64 {
+        self.transient_corrected.load(Ordering::Relaxed)
+    }
+
+    /// Model keys currently pinned to the degraded oracle backend.
+    pub fn degraded_keys(&self) -> usize {
+        lock_clean(&self.strikes).values().filter(|&&s| s >= DEGRADE_STRIKES).count()
+    }
+
+    /// Record one integrity strike against a key.
+    fn note_integrity_strike(&self, key: &ModelKey) {
+        *lock_clean(&self.strikes).entry(key.clone()).or_insert(0) += 1;
+    }
+
+    /// Whether a key has struck out and runs on the oracle backend.
+    fn is_degraded(&self, key: &ModelKey) -> bool {
+        lock_clean(&self.strikes).get(key).is_some_and(|&s| s >= DEGRADE_STRIKES)
     }
 
     /// Synthesize a deterministic request batch for a model (quantized
@@ -364,10 +431,60 @@ impl BatchEngine {
 
     /// Execute a batch of requests, scheduling them across the worker
     /// pool, and aggregate the per-request reports.
+    ///
+    /// When a fault plan is installed, this is also where the memory SEU
+    /// and transient-compute fault sites live — and where the recovery
+    /// ladder engages: the prepared cache detects corrupted models via
+    /// the prepare-time checksum and transparently re-prepares; a key
+    /// that keeps striking out is pinned to the interpreted-oracle
+    /// backend (degraded but bit-trustworthy); transient lane faults are
+    /// detected by redundant re-execution and answered with the clean
+    /// re-run. With no plan every hook is a no-op.
     pub fn run_batch(&self, spec: &BatchSpec, requests: Vec<QTensor>) -> Result<BatchReport> {
         let t0 = Instant::now();
-        let backend: Arc<dyn ExecBackend> = Arc::from(self.backend(&spec.assignment));
-        let (prepared, cache_hit) = self.prepared_with(spec, backend.as_ref())?;
+        let key = spec.key();
+        // Chaos: flip bits in the *cached* prepared model before this
+        // batch looks it up, exactly like an SEU landing between batches.
+        // Best-effort by design — `corrupt_cached` only lands when no
+        // other batch still holds the model.
+        if let Some(plan) = &self.opts.faults {
+            if let Some(mut rng) = plan.decide(FaultSite::WeightFlip) {
+                self.cache.corrupt_cached(&key, |m| {
+                    m.corrupt_weight_bit(&mut rng);
+                });
+            }
+            if let Some(mut rng) = plan.decide(FaultSite::ArenaFlip) {
+                self.cache.corrupt_cached(&key, |m| {
+                    m.corrupt_arena_bit(&mut rng);
+                });
+            }
+        }
+        let build_backend: Arc<dyn ExecBackend> = Arc::from(self.backend(&spec.assignment));
+        let (prepared, lookup) = self.cache.get_or_prepare_checked(&key, || {
+            let mut info = build_model(&spec.model, &spec.model_config())?;
+            apply_sparsity(&mut info.graph, spec.x_us, spec.x_ss);
+            build_backend.prepare(&info.graph)
+        })?;
+        if lookup.integrity_evicted {
+            self.note_integrity_strike(&key);
+        }
+        let cache_hit = lookup.hit;
+        // Degradation ladder: a key with repeated integrity strikes runs
+        // on the interpreted CFU oracle from now on. Outputs and cycle
+        // totals are bit-identical to the default path (differential
+        // tier), so degradation costs host speed only.
+        let backend: Arc<dyn ExecBackend> = if self.is_degraded(&key) {
+            self.degraded_runs.fetch_add(1, Ordering::Relaxed);
+            Arc::from(assigned_backend_full(
+                &spec.assignment,
+                self.opts.verify,
+                ExecMode::Interpreted,
+                None,
+                self.opts.host_kernel,
+            ))
+        } else {
+            build_backend
+        };
         let classes = prepared.classes;
         let n = requests.len();
         // Chunk so each job carries several requests: keeps channel
@@ -377,8 +494,29 @@ impl BatchEngine {
         let stats: Vec<Result<ReqStat>> = {
             let prepared = Arc::clone(&prepared);
             let backend = Arc::clone(&backend);
+            let faults = self.opts.faults.clone();
+            let corrected = Arc::clone(&self.transient_corrected);
             self.pool.map_chunked(requests, chunk, move |req| {
-                let report = backend.execute(&prepared, &req)?;
+                let mut report = backend.execute(&prepared, &req)?;
+                if let Some(plan) = &faults {
+                    if let Some(mut rng) = plan.decide(FaultSite::LaneTransient) {
+                        // Transient compute fault: this run's output is
+                        // perturbed by one bit flip. Detection is real
+                        // temporal redundancy — re-execute (the simulator
+                        // is deterministic) and compare; on mismatch the
+                        // clean re-run answers the request.
+                        let mut faulty = report.output.data().to_vec();
+                        if !faulty.is_empty() {
+                            let i = rng.below(faulty.len() as u32) as usize;
+                            faulty[i] ^= 1 << rng.below(8) as u8;
+                        }
+                        let redo = backend.execute(&prepared, &req)?;
+                        if faulty.as_slice() != redo.output.data() {
+                            corrected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        report = redo;
+                    }
+                }
                 let pred = crate::nn::activation::argmax(&report.output, classes)?[0];
                 Ok(ReqStat {
                     cycles: report.total_cycles,
@@ -651,6 +789,85 @@ mod tests {
         let uni = BatchSpec { scale: 0.07, ..BatchSpec::new("dscnn", DesignKind::Sssa) };
         engine.run_batch(&uni, reqs).unwrap();
         assert_eq!(engine.cache().misses(), 2);
+    }
+
+    #[test]
+    fn zero_rate_fault_plan_changes_nothing() {
+        let spec = tiny_spec(DesignKind::Csa);
+        let reqs = BatchEngine::gen_requests("dscnn", 3, 77).unwrap();
+        let clean = BatchEngine::new(BatchOptions::default());
+        let a = clean.run_batch(&spec, reqs.clone()).unwrap();
+        let chaotic = BatchEngine::new(BatchOptions {
+            faults: Some(Arc::new(FaultPlan::disabled())),
+            ..Default::default()
+        });
+        let b = chaotic.run_batch(&spec, reqs).unwrap();
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.predictions, b.predictions);
+        assert_eq!(a.request_cycles, b.request_cycles);
+        assert_eq!(chaotic.fault_plan().unwrap().total_injected(), 0);
+        assert_eq!(chaotic.integrity_fails(), 0);
+        assert_eq!(chaotic.degraded_runs(), 0);
+        assert_eq!(chaotic.transient_corrected(), 0);
+    }
+
+    #[test]
+    fn transient_lane_faults_are_corrected_and_invisible_in_answers() {
+        let spec = tiny_spec(DesignKind::Csa);
+        let reqs = BatchEngine::gen_requests("dscnn", 4, 88).unwrap();
+        let clean = BatchEngine::new(BatchOptions::default());
+        let a = clean.run_batch(&spec, reqs.clone()).unwrap();
+        let plan = Arc::new(crate::faults::FaultPlan::new(
+            9,
+            crate::faults::FaultRates { lane_transient: 1.0, ..Default::default() },
+        ));
+        let chaotic = BatchEngine::new(BatchOptions {
+            threads: 2,
+            faults: Some(Arc::clone(&plan)),
+            ..Default::default()
+        });
+        let b = chaotic.run_batch(&spec, reqs).unwrap();
+        // Every request faulted; redundant re-execution detected each
+        // one and answered with the clean run — responses and cycle
+        // accounting are indistinguishable from the fault-free engine.
+        assert_eq!(plan.injected(FaultSite::LaneTransient), 4);
+        assert_eq!(chaotic.transient_corrected(), 4);
+        assert_eq!(a.predictions, b.predictions);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.request_cycles, b.request_cycles);
+    }
+
+    #[test]
+    fn repeated_corruption_degrades_key_to_oracle_with_clean_answers() {
+        let spec = tiny_spec(DesignKind::Csa);
+        let reqs = BatchEngine::gen_requests("dscnn", 2, 99).unwrap();
+        let engine = BatchEngine::new(BatchOptions::default());
+        let baseline = engine.run_batch(&spec, reqs.clone()).unwrap();
+        // Corrupt the cached model in place before each of the next two
+        // batches: each lookup detects the mismatch, evicts, re-prepares
+        // and strikes the key; at two strikes the key degrades.
+        let key = spec.key();
+        let mut rng = Pcg32::new(5);
+        for round in 0..2u32 {
+            assert!(
+                engine.cache().corrupt_cached(&key, |m| {
+                    assert!(m.corrupt_arena_bit(&mut rng));
+                }),
+                "round {round}: cache must hold the sole reference between batches"
+            );
+            let r = engine.run_batch(&spec, reqs.clone()).unwrap();
+            // Detection + re-prepare keeps every answer bit-identical.
+            assert_eq!(r.predictions, baseline.predictions, "round {round}");
+            assert_eq!(r.total_cycles, baseline.total_cycles, "round {round}");
+        }
+        assert_eq!(engine.integrity_fails(), 2);
+        assert_eq!(engine.degraded_keys(), 1);
+        // The degraded batch runs on the interpreted oracle — same bits.
+        let degraded = engine.run_batch(&spec, reqs).unwrap();
+        assert_eq!(engine.degraded_runs(), 1);
+        assert_eq!(degraded.predictions, baseline.predictions);
+        assert_eq!(degraded.total_cycles, baseline.total_cycles);
+        assert_eq!(degraded.request_cycles, baseline.request_cycles);
     }
 
     #[test]

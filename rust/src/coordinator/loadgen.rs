@@ -69,6 +69,12 @@ pub struct TraceConfig {
     pub burst: usize,
     /// Trace RNG seed.
     pub seed: u64,
+    /// Retries per request on a retryable outcome (transport error,
+    /// shed, `500`, malformed response) before the last outcome counts.
+    /// Each retry backs off with seeded jitter; a shed's `Retry-After`
+    /// is honored (capped). `0` — the default — preserves the strict
+    /// one-shot trace semantics.
+    pub retries: usize,
 }
 
 impl Default for TraceConfig {
@@ -79,6 +85,7 @@ impl Default for TraceConfig {
             arrival: Arrival::Poisson,
             burst: 8,
             seed: 0x10AD,
+            retries: 0,
         }
     }
 }
@@ -249,6 +256,9 @@ pub struct LoadReport {
     /// Responses that were not well-formed JSON with the expected
     /// status semantics.
     pub malformed: u64,
+    /// Retry attempts performed across all requests (0 unless
+    /// [`TraceConfig::retries`] is set and outcomes warranted them).
+    pub retried: u64,
     /// Client-observed median latency of `Ok` responses (ms).
     pub wall_p50_ms: f64,
     /// Client-observed p99 latency of `Ok` responses (ms).
@@ -271,6 +281,7 @@ impl LoadReport {
             ("shed", Value::Num(self.shed as f64)),
             ("failed", Value::Num(self.failed as f64)),
             ("malformed", Value::Num(self.malformed as f64)),
+            ("retried", Value::Num(self.retried as f64)),
             ("well_formed", Value::Bool(self.well_formed())),
             ("wall_p50_ms", Value::Num(self.wall_p50_ms)),
             ("wall_p99_ms", Value::Num(self.wall_p99_ms)),
@@ -287,12 +298,57 @@ impl LoadReport {
             .with_value("host_ok", self.ok as f64)
             .with_value("host_shed_total", self.shed as f64)
             .with_value("host_failed", self.failed as f64)
+            .with_value("host_retry_total", self.retried as f64)
+    }
+}
+
+/// Attempt one request up to `1 + retries` times, sleeping between
+/// attempts with seeded-jittered backoff. A shed's `Retry-After` is
+/// honored up to a 300 ms cap (so seeded chaos runs stay fast); other
+/// retryable outcomes (transport error, `500`, malformed) back off
+/// exponentially from 10 ms, capped at 200 ms. Returns the final
+/// attempt's class, its wall latency in ms, and the retries performed.
+fn request_with_retries(
+    addr: &str,
+    body: &str,
+    timeout: Duration,
+    retries: usize,
+    rng: &mut Pcg32,
+) -> (Class, f64, u64) {
+    let mut attempt = 0u64;
+    loop {
+        let t0 = Instant::now();
+        let outcome = http_request(addr, "POST", "/v1/infer", body, timeout);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let (class, retry_after_ms) = match &outcome {
+            Ok(resp) => {
+                let after = resp
+                    .header("retry-after")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .map(|secs| secs.saturating_mul(1000));
+                (classify(resp), after)
+            }
+            Err(_) => (Class::Failed, None),
+        };
+        if class == Class::Ok || attempt >= retries as u64 {
+            return (class, wall_ms, attempt);
+        }
+        attempt += 1;
+        let backoff = match retry_after_ms {
+            Some(ms) => ms.min(300),
+            None => (10u64 << (attempt - 1).min(5)).min(200),
+        };
+        std::thread::sleep(Duration::from_millis(backoff + u64::from(rng.below(10))));
     }
 }
 
 /// Replay a trace against a server: request `i` fires at its precomputed
 /// offset (open loop) with body `bodies[i % bodies.len()]` (`{}` when
 /// `bodies` is empty). Blocks until every response (or timeout) is in.
+/// With [`TraceConfig::retries`] set, each request retries retryable
+/// outcomes with jittered backoff before its final outcome counts —
+/// the arrival schedule itself never adapts (retries delay only their
+/// own request's resolution).
 pub fn run_trace(
     addr: &str,
     trace: &TraceConfig,
@@ -301,8 +357,11 @@ pub fn run_trace(
 ) -> LoadReport {
     let offsets = arrival_offsets(trace);
     let n = offsets.len();
-    let (tx, rx) = mpsc::channel::<(Class, f64)>();
+    let (tx, rx) = mpsc::channel::<(Class, f64, u64)>();
     let start = Instant::now();
+    // Backoff jitter stream, independent of the arrival stream so
+    // enabling retries never reshapes the offered trace.
+    let mut jitter_base = Pcg32::new(trace.seed ^ 0xBACC_0FF5);
     let mut handles = Vec::with_capacity(n);
     for (i, offset) in offsets.into_iter().enumerate() {
         let body = if bodies.is_empty() {
@@ -312,22 +371,20 @@ pub fn run_trace(
         };
         let addr = addr.to_string();
         let tx = tx.clone();
+        let retries = trace.retries;
+        let mut rng = jitter_base.fork(i as u64);
         let handle = std::thread::Builder::new()
             .name("loadgen".into())
             .spawn(move || {
                 std::thread::sleep(offset.saturating_sub(start.elapsed()));
-                let t0 = Instant::now();
-                let class = match http_request(&addr, "POST", "/v1/infer", &body, timeout) {
-                    Ok(resp) => classify(&resp),
-                    Err(_) => Class::Failed,
-                };
-                let _ = tx.send((class, t0.elapsed().as_secs_f64() * 1e3));
+                let out = request_with_retries(&addr, &body, timeout, retries, &mut rng);
+                let _ = tx.send(out);
             });
         match handle {
             Ok(h) => handles.push(h),
             Err(_) => {
                 // Spawn failure: count the request as failed client-side.
-                let _ = tx.send((Class::Failed, 0.0));
+                let _ = tx.send((Class::Failed, 0.0, 0));
             }
         }
     }
@@ -335,7 +392,8 @@ pub fn run_trace(
 
     let mut report = LoadReport { sent: n as u64, ..Default::default() };
     let mut wall = Percentiles::new();
-    for (class, wall_ms) in rx {
+    for (class, wall_ms, retried) in rx {
+        report.retried += retried;
         match class {
             Class::Ok => {
                 report.ok += 1;
@@ -399,6 +457,7 @@ mod tests {
             arrival: Arrival::Burst,
             burst: 5,
             seed: 7,
+            retries: 0,
         };
         let offsets = arrival_offsets(&cfg);
         assert_eq!(offsets.len(), 20);
@@ -477,6 +536,16 @@ mod tests {
         let rec = report.to_record("loadgen/dscnn");
         assert_eq!(rec.get("host_ok"), Some(7.0));
         assert_eq!(rec.get("host_shed_total"), Some(3.0));
+        assert_eq!(rec.get("host_retry_total"), Some(0.0));
+        // Retries are informational and lower-is-better in baselines.
+        let retry_spec = crate::metrics::spec_for("host_retry_total");
+        assert!(!retry_spec.gate);
+        assert_eq!(retry_spec.better, crate::metrics::Direction::LowerIsBetter);
+        // A report with retries stays well-formed: retries change how an
+        // outcome was reached, not what it was.
+        let retried = LoadReport { retried: 5, ..report.clone() };
+        assert!(retried.well_formed());
+        assert_eq!(retried.to_record("x").get("host_retry_total"), Some(5.0));
         let lossy = LoadReport { failed: 1, ..report.clone() };
         assert!(!lossy.well_formed());
         let short = LoadReport { shed: 2, ..report };

@@ -34,3 +34,17 @@ pub use net::{NetHandle, NetOptions, NetServer, NetStats};
 pub use runner::{run_experiment, DesignResult, ExperimentResult};
 pub use scheduler::{JobPool, TilePool};
 pub use serve::{ServeMetrics, ServeOptions, Server};
+
+/// Poison-recovering mutex lock: take the guard even when another
+/// thread panicked while holding it.
+///
+/// The coordinator's shared state (admission queues, stats, the
+/// degraded-key map) is only ever mutated through small, invariant-
+/// preserving critical sections, so data behind a poisoned mutex is
+/// still coherent — what must *not* happen is one panicked batcher
+/// turning every subsequent `.lock().unwrap()` into a cascading panic
+/// that wedges the whole server. Supervised recovery (batcher respawn,
+/// `catch_unwind` around batch execution) depends on this helper.
+pub fn lock_clean<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

@@ -27,10 +27,26 @@
 //! behavior only. Wall-clock percentiles, queue depth, shed counts and
 //! the batch-size histogram are exported as informational
 //! `wall_*`/`host_*` metrics via [`NetStats::to_record`].
+//!
+//! The layer is also built to *survive* faults, injected
+//! ([`crate::faults::FaultPlan`] via [`NetOptions::faults`]) or real:
+//! batcher threads run under a supervisor that respawns them with
+//! capped exponential backoff after a panic; batch execution is wrapped
+//! in `catch_unwind` so an engine panic becomes a `500` for the batch's
+//! waiters instead of a lost batch; every shared-state lock recovers
+//! from poisoning ([`super::lock_clean`]); the per-request
+//! [`NetOptions::request_timeout`] watchdog turns a hung batch into a
+//! `500` instead of a pinned connection thread; and `GET /healthz`
+//! reports `ok`/`degraded`/`draining` with the fault counters.
+//! Connection faults (drop/stall/truncate) apply only to the
+//! `POST /v1/infer` data path, so graceful drain is never broken by a
+//! chaos plan.
 
 use super::batch::{BatchEngine, BatchSpec};
+use super::lock_clean;
 use crate::config::value::Value;
 use crate::error::Result;
+use crate::faults::{FaultPlan, FaultSite};
 use crate::isa::{DesignAssignment, DesignKind};
 use crate::metrics::MetricRecord;
 use crate::models::builder::{random_input, ModelConfig};
@@ -43,6 +59,7 @@ use crate::util::Pcg32;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -75,6 +92,12 @@ pub struct NetOptions {
     pub clock_hz: u64,
     /// Value of the `Retry-After` header (seconds) on shed responses.
     pub retry_after_s: u64,
+    /// Seeded chaos plan for the network layer's own fault sites
+    /// (batcher panics, connection drop/stall/truncate). `None` — the
+    /// default — disables every site. Share the same plan with
+    /// [`super::BatchOptions::faults`] so one seed replays the whole
+    /// stack's fault schedule.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for NetOptions {
@@ -89,6 +112,7 @@ impl Default for NetOptions {
             max_header: 8192,
             clock_hz: 100_000_000,
             retry_after_s: 1,
+            faults: None,
         }
     }
 }
@@ -132,6 +156,7 @@ struct StatsInner {
     batches: u64,
     batch_hist: BTreeMap<u64, u64>,
     queue_depth_max: u64,
+    batcher_restarts: u64,
     wall: Percentiles,
 }
 
@@ -163,6 +188,17 @@ pub struct NetStats {
     pub batch_hist: BTreeMap<u64, u64>,
     /// Deepest admission-queue depth observed at enqueue time.
     pub queue_depth_max: u64,
+    /// Batcher threads respawned by the supervisor after a panic.
+    pub batcher_restarts: u64,
+    /// Prepared-model integrity-checksum failures detected (and healed
+    /// by eviction + re-prepare) on cache hits.
+    pub integrity_fails: u64,
+    /// Batches the engine executed in degraded (interpreted-oracle)
+    /// mode after repeated integrity strikes on a key.
+    pub degraded_runs: u64,
+    /// Transient lane faults detected by redundant re-execution and
+    /// answered with the clean re-run.
+    pub transient_corrected: u64,
     /// Median end-to-end wall latency of completed requests (ms).
     pub wall_p50_ms: f64,
     /// 99th-percentile end-to-end wall latency (ms).
@@ -199,6 +235,10 @@ impl NetStats {
             ("batch_hist", hist),
             ("batch_mean", Value::Num(self.mean_batch_size())),
             ("queue_depth_max", Value::Num(self.queue_depth_max as f64)),
+            ("batcher_restarts", Value::Num(self.batcher_restarts as f64)),
+            ("integrity_fails", Value::Num(self.integrity_fails as f64)),
+            ("degraded_runs", Value::Num(self.degraded_runs as f64)),
+            ("transient_corrected", Value::Num(self.transient_corrected as f64)),
             ("wall_p50_ms", Value::Num(self.wall_p50_ms)),
             ("wall_p99_ms", Value::Num(self.wall_p99_ms)),
             ("wall_p999_ms", Value::Num(self.wall_p999_ms)),
@@ -217,6 +257,9 @@ impl NetStats {
             .with_value("host_batch_mean", self.mean_batch_size())
             .with_value("host_accepted", self.accepted as f64)
             .with_value("host_completed", self.completed as f64)
+            .with_value("host_integrity_fail", self.integrity_fails as f64)
+            .with_value("host_degraded_total", self.degraded_runs as f64)
+            .with_value("host_batcher_restarts", self.batcher_restarts as f64)
     }
 }
 
@@ -305,7 +348,7 @@ impl NetServer {
             let _ = h.join();
         }
         let batchers: Vec<JoinHandle<()>> =
-            std::mem::take(&mut *self.shared.batchers.lock().unwrap());
+            std::mem::take(&mut *lock_clean(&self.shared.batchers));
         for h in batchers {
             let _ = h.join();
         }
@@ -316,13 +359,13 @@ impl NetServer {
 fn begin_shutdown(shared: &Arc<Shared>) {
     shared.shutdown.store(true, Ordering::SeqCst);
     // Wake every batcher so the drain-then-exit path runs promptly.
-    for q in shared.queues.lock().unwrap().values() {
+    for q in lock_clean(&shared.queues).values() {
         q.cv.notify_all();
     }
 }
 
 fn snapshot(shared: &Arc<Shared>) -> NetStats {
-    let mut stats = shared.stats.lock().unwrap();
+    let mut stats = lock_clean(&shared.stats);
     // An idle server reports 0.0 — `Value::Num(NaN)` would serialize as
     // invalid JSON.
     let (p50, p99, p999) = if stats.wall.count() == 0 {
@@ -343,6 +386,10 @@ fn snapshot(shared: &Arc<Shared>) -> NetStats {
         batches: stats.batches,
         batch_hist: stats.batch_hist.clone(),
         queue_depth_max: stats.queue_depth_max,
+        batcher_restarts: stats.batcher_restarts,
+        integrity_fails: shared.engine.integrity_fails(),
+        degraded_runs: shared.engine.degraded_runs(),
+        transient_corrected: shared.engine.transient_corrected(),
         wall_p50_ms: p50,
         wall_p99_ms: p99,
         wall_p999_ms: p999,
@@ -401,13 +448,44 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) {
         match reader.read_frame(&shared.opts) {
             Frame::Closed => break,
             Frame::Fail(reply) => {
-                shared.stats.lock().unwrap().rejected += 1;
+                lock_clean(&shared.stats).rejected += 1;
                 let _ = write_response(&mut out, &reply, false);
                 break;
             }
             Frame::Request(req) => {
                 let keep = req.keep_alive && !shared.shutdown.load(Ordering::SeqCst);
+                // Chaos: connection faults hit only the infer data path
+                // so control-plane traffic (/healthz, /stats, /shutdown)
+                // always works and graceful drain cannot be broken.
+                let fault = (req.method == "POST" && req.path == "/v1/infer")
+                    .then(|| shared.opts.faults.as_deref())
+                    .flatten();
+                if let Some(plan) = fault {
+                    if plan.decide(FaultSite::ConnDrop).is_some() {
+                        // Die before admission: the peer sees the
+                        // connection close without a response and
+                        // retries; nothing was accepted, nothing is
+                        // lost.
+                        break;
+                    }
+                }
                 let reply = route(&req, &shared);
+                if let Some(plan) = fault {
+                    if let Some(mut rng) = plan.decide(FaultSite::ConnStall) {
+                        // Bounded stall (5–45 ms): long enough to skew
+                        // tail latency, far below client timeouts.
+                        let ms = u64::from(rng.below(40)) + 5;
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                    if plan.decide(FaultSite::ConnTruncate).is_some() {
+                        // The request was served (counters moved); the
+                        // peer gets half a response and must retry.
+                        let bytes = render_response(&reply, false);
+                        let _ = out.write_all(&bytes[..bytes.len() / 2]);
+                        let _ = out.flush();
+                        break;
+                    }
+                }
                 if write_response(&mut out, &reply, keep).is_err() || !keep {
                     break;
                 }
@@ -683,7 +761,9 @@ impl<R: Read> FrameReader<R> {
     }
 }
 
-fn write_response<W: Write>(out: &mut W, reply: &Reply, keep_alive: bool) -> std::io::Result<()> {
+/// Serialize a response to its wire bytes (shared by the normal write
+/// path and the truncating connection-fault path).
+fn render_response(reply: &Reply, keep_alive: bool) -> Vec<u8> {
     let mut head = format!(
         "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
         reply.code,
@@ -701,8 +781,13 @@ fn write_response<W: Write>(out: &mut W, reply: &Reply, keep_alive: bool) -> std
     } else {
         "Connection: close\r\n\r\n"
     });
-    out.write_all(head.as_bytes())?;
-    out.write_all(reply.body.as_bytes())?;
+    let mut bytes = head.into_bytes();
+    bytes.extend_from_slice(reply.body.as_bytes());
+    bytes
+}
+
+fn write_response<W: Write>(out: &mut W, reply: &Reply, keep_alive: bool) -> std::io::Result<()> {
+    out.write_all(&render_response(reply, keep_alive))?;
     out.flush()
 }
 
@@ -710,7 +795,7 @@ fn write_response<W: Write>(out: &mut W, reply: &Reply, keep_alive: bool) -> std
 
 fn route(req: &HttpRequest, shared: &Arc<Shared>) -> Reply {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Reply::json(200, "OK", "{\"ok\":true}".to_string()),
+        ("GET", "/healthz") => Reply::json(200, "OK", healthz_body(shared)),
         ("GET", "/stats") => Reply::json(200, "OK", snapshot(shared).to_value().to_json()),
         ("POST", "/shutdown") => {
             begin_shutdown(shared);
@@ -719,6 +804,35 @@ fn route(req: &HttpRequest, shared: &Arc<Shared>) -> Reply {
         ("POST", "/v1/infer") => infer(req, shared),
         _ => Reply::error(404, "Not Found", "unknown route"),
     }
+}
+
+/// `GET /healthz` body: liveness (`ok` — the server answered at all)
+/// plus a recovery-state summary. `status` is `"draining"` once
+/// shutdown began, `"degraded"` while any model key is pinned to the
+/// oracle-fallback backend, `"ok"` otherwise; the counters expose the
+/// supervision machinery (integrity failures healed, degraded batches,
+/// batcher respawns, transient faults corrected, total injected
+/// faults).
+fn healthz_body(shared: &Arc<Shared>) -> String {
+    let status = if shared.shutdown.load(Ordering::SeqCst) {
+        "draining"
+    } else if shared.engine.degraded_keys() > 0 {
+        "degraded"
+    } else {
+        "ok"
+    };
+    let injected = shared.opts.faults.as_ref().map_or(0, |p| p.total_injected());
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("status", Value::Str(status.to_string())),
+        ("integrity_fails", Value::Num(shared.engine.integrity_fails() as f64)),
+        ("degraded_runs", Value::Num(shared.engine.degraded_runs() as f64)),
+        ("degraded_keys", Value::Num(shared.engine.degraded_keys() as f64)),
+        ("transient_corrected", Value::Num(shared.engine.transient_corrected() as f64)),
+        ("batcher_restarts", Value::Num(lock_clean(&shared.stats).batcher_restarts as f64)),
+        ("faults_injected", Value::Num(injected as f64)),
+    ])
+    .to_json()
 }
 
 /// Parse an infer-request body into a [`BatchSpec`] and its input
@@ -799,7 +913,7 @@ fn infer(req: &HttpRequest, shared: &Arc<Shared>) -> Reply {
     let (spec, input) = match parsed {
         Ok(p) => p,
         Err(msg) => {
-            shared.stats.lock().unwrap().rejected += 1;
+            lock_clean(&shared.stats).rejected += 1;
             return Reply::error(400, "Bad Request", &msg);
         }
     };
@@ -813,7 +927,7 @@ fn infer(req: &HttpRequest, shared: &Arc<Shared>) -> Reply {
     // empty, so an admission racing the flag could otherwise enqueue
     // into a queue no batcher will ever drain again.
     let depth = {
-        let mut inner = queue.inner.lock().unwrap();
+        let mut inner = lock_clean(&queue.inner);
         if shared.shutdown.load(Ordering::SeqCst) {
             drop(inner);
             return shed_reply(shared, "server is shutting down");
@@ -828,7 +942,7 @@ fn infer(req: &HttpRequest, shared: &Arc<Shared>) -> Reply {
         depth
     };
     {
-        let mut stats = shared.stats.lock().unwrap();
+        let mut stats = lock_clean(&shared.stats);
         stats.accepted += 1;
         stats.queue_depth_max = stats.queue_depth_max.max(depth);
     }
@@ -837,7 +951,7 @@ fn infer(req: &HttpRequest, shared: &Arc<Shared>) -> Reply {
         Ok(Ok(ok)) => {
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
             {
-                let mut stats = shared.stats.lock().unwrap();
+                let mut stats = lock_clean(&shared.stats);
                 stats.completed += 1;
                 stats.wall.push(wall_ms);
             }
@@ -854,18 +968,20 @@ fn infer(req: &HttpRequest, shared: &Arc<Shared>) -> Reply {
             Reply::json(200, "OK", body.to_json())
         }
         Ok(Err(msg)) => {
-            shared.stats.lock().unwrap().failed += 1;
+            lock_clean(&shared.stats).failed += 1;
             Reply::error(500, "Internal Server Error", &msg)
         }
+        // The per-request watchdog: a hung batch answers `500` after
+        // `request_timeout` instead of pinning this connection thread.
         Err(_) => {
-            shared.stats.lock().unwrap().failed += 1;
+            lock_clean(&shared.stats).failed += 1;
             Reply::error(500, "Internal Server Error", "request timed out in the engine")
         }
     }
 }
 
 fn shed_reply(shared: &Arc<Shared>, msg: &str) -> Reply {
-    shared.stats.lock().unwrap().shed += 1;
+    lock_clean(&shared.stats).shed += 1;
     let mut reply = Reply::error(503, "Service Unavailable", msg);
     reply.extra.push(("Retry-After", shared.opts.retry_after_s.to_string()));
     reply
@@ -883,7 +999,7 @@ fn queue_for(shared: &Arc<Shared>, spec: BatchSpec) -> Arc<ModelQueue> {
         spec.scale,
         spec.weight_seed
     );
-    let mut queues = shared.queues.lock().unwrap();
+    let mut queues = lock_clean(&shared.queues);
     if let Some(q) = queues.get(&key) {
         return Arc::clone(q);
     }
@@ -898,11 +1014,11 @@ fn queue_for(shared: &Arc<Shared>, spec: BatchSpec) -> Arc<ModelQueue> {
         let shared = Arc::clone(shared);
         std::thread::Builder::new()
             .name("serve-net-batcher".into())
-            .spawn(move || batcher_loop(queue, shared))
+            .spawn(move || supervise_batcher(queue, shared))
     };
     match handle {
         // Lock order queues → batchers (the only nesting in the module).
-        Ok(h) => shared.batchers.lock().unwrap().push(h),
+        Ok(h) => lock_clean(&shared.batchers).push(h),
         Err(e) => logging::warn("net", &format!("batcher spawn failed: {e}")),
     }
     queue
@@ -910,10 +1026,47 @@ fn queue_for(shared: &Arc<Shared>, spec: BatchSpec) -> Arc<ModelQueue> {
 
 // ---- continuous batcher -----------------------------------------------
 
-fn batcher_loop(queue: Arc<ModelQueue>, shared: Arc<Shared>) {
+/// Run one spec's batcher under supervision: a panicking batcher
+/// (injected fault or real bug) is respawned in place with capped
+/// exponential backoff instead of silently orphaning its admission
+/// queue — queued requests stay queued across the restart, so the
+/// accepted-is-never-lost invariant survives batcher crashes. A clean
+/// return (shutdown drain complete) ends supervision.
+fn supervise_batcher(queue: Arc<ModelQueue>, shared: Arc<Shared>) {
+    let mut backoff = Duration::from_millis(10);
     loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            batcher_loop(&queue, &shared);
+        }));
+        match run {
+            Ok(()) => return,
+            Err(_) => {
+                lock_clean(&shared.stats).batcher_restarts += 1;
+                logging::warn(
+                    "net",
+                    &format!("batcher for {} panicked; respawning", queue.spec.model),
+                );
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+fn batcher_loop(queue: &ModelQueue, shared: &Arc<Shared>) {
+    loop {
+        // Chaos: a batcher crash *before* the drain leaves every queued
+        // request in place for the respawned batcher. (Crashing after
+        // the drain would need request re-queueing to preserve the
+        // invariant; the engine-side panic path is covered separately by
+        // the `catch_unwind` in `run_one_batch`.)
+        if let Some(plan) = &shared.opts.faults {
+            if plan.decide(FaultSite::BatcherPanic).is_some() {
+                panic!("injected batcher fault (chaos plan)");
+            }
+        }
         let batch: Vec<Pending> = {
-            let mut inner = queue.inner.lock().unwrap();
+            let mut inner = lock_clean(&queue.inner);
             // Wait for work. Exit only when shutdown is set AND the
             // queue is empty — accepted requests always drain.
             loop {
@@ -923,8 +1076,14 @@ fn batcher_loop(queue: Arc<ModelQueue>, shared: Arc<Shared>) {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                let (guard, _) =
-                    queue.cv.wait_timeout(inner, Duration::from_millis(50)).unwrap();
+                // No deadline exists while the queue is empty — park on
+                // the condvar (woken by `infer`'s enqueue notify and
+                // `begin_shutdown`'s broadcast) with a long defensive
+                // timeout instead of a busy 50 ms tick.
+                let (guard, _) = queue
+                    .cv
+                    .wait_timeout(inner, Duration::from_secs(1))
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 inner = guard;
             }
             // Continuous batching: fire on the size threshold, on
@@ -946,20 +1105,20 @@ fn batcher_loop(queue: Arc<ModelQueue>, shared: Arc<Shared>) {
                 let (guard, _) = queue
                     .cv
                     .wait_timeout(inner, shared.opts.batch_deadline - age)
-                    .unwrap();
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 inner = guard;
             }
             let n = inner.pending.len().min(shared.opts.batch_max);
             inner.pending.drain(..n).collect()
         };
-        run_one_batch(&queue.spec, batch, &shared);
+        run_one_batch(&queue.spec, batch, shared);
     }
 }
 
 fn run_one_batch(spec: &BatchSpec, batch: Vec<Pending>, shared: &Arc<Shared>) {
     let n = batch.len();
     {
-        let mut stats = shared.stats.lock().unwrap();
+        let mut stats = lock_clean(&shared.stats);
         stats.batches += 1;
         *stats.batch_hist.entry(n as u64).or_insert(0) += 1;
     }
@@ -969,7 +1128,16 @@ fn run_one_batch(spec: &BatchSpec, batch: Vec<Pending>, shared: &Arc<Shared>) {
         senders.push(p.resp);
         inputs.push(p.input);
     }
-    match shared.engine.run_batch(spec, inputs) {
+    // `catch_unwind` so an engine panic (a worker job that panicked
+    // makes `run_batch` itself panic on the missing result) degrades to
+    // a `500` for every waiter in the batch — the requests were already
+    // drained from the queue, so losing them here would break the
+    // accepted-is-never-lost invariant.
+    let result = catch_unwind(AssertUnwindSafe(|| shared.engine.run_batch(spec, inputs)))
+        .unwrap_or_else(|_| {
+            Err(crate::error::Error::Coordinator("batch execution panicked".into()))
+        });
+    match result {
         Ok(report) => {
             for (i, tx) in senders.iter().enumerate() {
                 let ok = InferOk {
@@ -1228,6 +1396,10 @@ mod tests {
             batches: 3,
             batch_hist: BTreeMap::from([(2, 2), (4, 1)]),
             queue_depth_max: 5,
+            batcher_restarts: 1,
+            integrity_fails: 2,
+            degraded_runs: 3,
+            transient_corrected: 4,
             wall_p50_ms: 1.0,
             wall_p99_ms: 2.0,
             wall_p999_ms: 3.0,
@@ -1236,11 +1408,20 @@ mod tests {
         let rec = stats.to_record("serve/net");
         assert_eq!(rec.get("host_shed_total"), Some(2.0));
         assert_eq!(rec.get("host_queue_depth_max"), Some(5.0));
+        assert_eq!(rec.get("host_integrity_fail"), Some(2.0));
+        assert_eq!(rec.get("host_degraded_total"), Some(3.0));
+        assert_eq!(rec.get("host_batcher_restarts"), Some(1.0));
         assert!(rec.get("wall_p99_ms").is_some());
-        // Shed/queue-depth must be lower-is-better (the generic host_
-        // prefix direction would misread a shedding fix as a loss) and
-        // everything here must stay ungated.
-        for name in ["host_shed_total", "host_queue_depth_max"] {
+        // Shed/queue-depth/fault counters must be lower-is-better (the
+        // generic host_ prefix direction would misread a shedding or
+        // recovery fix as a loss) and everything here must stay ungated.
+        for name in [
+            "host_shed_total",
+            "host_queue_depth_max",
+            "host_integrity_fail",
+            "host_degraded_total",
+            "host_batcher_restarts",
+        ] {
             let spec = crate::metrics::spec_for(name);
             assert!(!spec.gate, "{name}");
             assert_eq!(spec.better, crate::metrics::Direction::LowerIsBetter, "{name}");

@@ -1,0 +1,357 @@
+//! Deterministic fault injection for chaos testing the serving stack.
+//!
+//! Edge deployments of the paper's accelerators face SEU bit flips in
+//! weight/configuration memories, transient compute faults, and flaky
+//! networks. This module provides a seeded, fully replayable
+//! [`FaultPlan`] that the batch engine and network front-end consult at
+//! well-defined *fault sites*: packed-weight and schedule-arena bit
+//! flips, transient per-lane compute faults, batcher-thread panics, and
+//! connection-level faults (drop, stall, truncate).
+//!
+//! ## Determinism contract
+//!
+//! The decision for the *n*-th event at a site is a pure function of
+//! `(plan seed, site tag, n)` — each site keeps its own atomic event
+//! counter and derives a fresh [`Pcg32`] stream per event, so a replay
+//! with the same seed and the same per-site event counts injects the
+//! identical fault schedule **regardless of thread interleaving**. The
+//! same PRNG discipline as [`crate::coordinator::loadgen`]'s seeded
+//! traces.
+//!
+//! ## Zero-cost when disabled
+//!
+//! Every site whose rate is `0.0` short-circuits before touching any
+//! counter or PRNG state, and the plan itself is threaded through the
+//! stack as `Option<Arc<FaultPlan>>` defaulting to `None` — with no plan
+//! (or a zero-rate plan) the serving path is bit-identical to a build
+//! without this module, which is what lets the differential and
+//! `serve_net` tiers run unchanged.
+
+use crate::util::Pcg32;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of distinct fault sites (length of [`FaultSite::ALL`]).
+const SITES: usize = 7;
+
+/// A place in the serving stack where the plan may inject a fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Flip one bit of a packed weight word in a cached prepared model.
+    WeightFlip,
+    /// Flip one bit of a `ScheduleArena` visited entry in a cached model.
+    ArenaFlip,
+    /// Transient compute fault: one request's lane outputs are perturbed
+    /// (detected by redundant re-execution in the batch engine).
+    LaneTransient,
+    /// Panic the batcher thread before it drains a batch.
+    BatcherPanic,
+    /// Close an inference connection without answering.
+    ConnDrop,
+    /// Stall an inference response by a bounded random delay.
+    ConnStall,
+    /// Truncate an inference response mid-body and close.
+    ConnTruncate,
+}
+
+impl FaultSite {
+    /// Every site, in counter-index order.
+    pub const ALL: [FaultSite; SITES] = [
+        FaultSite::WeightFlip,
+        FaultSite::ArenaFlip,
+        FaultSite::LaneTransient,
+        FaultSite::BatcherPanic,
+        FaultSite::ConnDrop,
+        FaultSite::ConnStall,
+        FaultSite::ConnTruncate,
+    ];
+
+    /// Stable human-readable name (used in logs and `/healthz`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::WeightFlip => "weight_flip",
+            FaultSite::ArenaFlip => "arena_flip",
+            FaultSite::LaneTransient => "lane_transient",
+            FaultSite::BatcherPanic => "batcher_panic",
+            FaultSite::ConnDrop => "conn_drop",
+            FaultSite::ConnStall => "conn_stall",
+            FaultSite::ConnTruncate => "conn_truncate",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::WeightFlip => 0,
+            FaultSite::ArenaFlip => 1,
+            FaultSite::LaneTransient => 2,
+            FaultSite::BatcherPanic => 3,
+            FaultSite::ConnDrop => 4,
+            FaultSite::ConnStall => 5,
+            FaultSite::ConnTruncate => 6,
+        }
+    }
+
+    /// Fixed per-site mixing constant so two sites with the same event
+    /// index never share a PRNG stream.
+    fn tag(self) -> u64 {
+        // Arbitrary odd constants; stability matters (replayability of a
+        // given seed across builds), not the values themselves.
+        const TAGS: [u64; SITES] = [
+            0x9E37_79B9_7F4A_7C15,
+            0xBF58_476D_1CE4_E5B9,
+            0x94D0_49BB_1331_11EB,
+            0xD6E8_FEB8_6659_FD93,
+            0xA076_1D64_78BD_642F,
+            0xE703_7ED1_A0B4_28DB,
+            0x8EBC_6AF0_9C88_C6E3,
+        ];
+        TAGS[self.index()]
+    }
+}
+
+/// Per-site injection probabilities in `[0, 1]`.
+///
+/// `Default` is all-zero (no faults), so `FaultRates { conn_drop: 0.1,
+/// ..Default::default() }` enables exactly one site.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultRates {
+    /// Rate for [`FaultSite::WeightFlip`].
+    pub weight_flip: f64,
+    /// Rate for [`FaultSite::ArenaFlip`].
+    pub arena_flip: f64,
+    /// Rate for [`FaultSite::LaneTransient`].
+    pub lane_transient: f64,
+    /// Rate for [`FaultSite::BatcherPanic`].
+    pub batcher_panic: f64,
+    /// Rate for [`FaultSite::ConnDrop`].
+    pub conn_drop: f64,
+    /// Rate for [`FaultSite::ConnStall`].
+    pub conn_stall: f64,
+    /// Rate for [`FaultSite::ConnTruncate`].
+    pub conn_truncate: f64,
+}
+
+impl FaultRates {
+    /// The rate configured for `site`.
+    pub fn rate(&self, site: FaultSite) -> f64 {
+        match site {
+            FaultSite::WeightFlip => self.weight_flip,
+            FaultSite::ArenaFlip => self.arena_flip,
+            FaultSite::LaneTransient => self.lane_transient,
+            FaultSite::BatcherPanic => self.batcher_panic,
+            FaultSite::ConnDrop => self.conn_drop,
+            FaultSite::ConnStall => self.conn_stall,
+            FaultSite::ConnTruncate => self.conn_truncate,
+        }
+    }
+
+    /// True when any site has a positive rate.
+    pub fn any(&self) -> bool {
+        FaultSite::ALL.iter().any(|&s| self.rate(s) > 0.0)
+    }
+}
+
+/// A seeded, replayable fault-injection schedule.
+///
+/// Shared as `Arc<FaultPlan>` between the batch engine and the network
+/// front-end so both draw from the same per-site event streams; all
+/// methods take `&self` and are thread-safe.
+pub struct FaultPlan {
+    seed: u64,
+    rates: FaultRates,
+    events: [AtomicU64; SITES],
+    injected: [AtomicU64; SITES],
+}
+
+impl FaultPlan {
+    /// A plan injecting faults at `rates`, deterministically from `seed`.
+    pub fn new(seed: u64, rates: FaultRates) -> Self {
+        FaultPlan {
+            seed,
+            rates,
+            events: Default::default(),
+            injected: Default::default(),
+        }
+    }
+
+    /// A plan that never fires (all rates zero).
+    pub fn disabled() -> Self {
+        FaultPlan::new(0, FaultRates::default())
+    }
+
+    /// The plan's seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The configured rates.
+    pub fn rates(&self) -> FaultRates {
+        self.rates
+    }
+
+    /// True when any site can ever fire.
+    pub fn enabled(&self) -> bool {
+        self.rates.any()
+    }
+
+    /// Record one event at `site` and decide whether it faults.
+    ///
+    /// Returns `Some(rng)` when the fault fires; the returned stream is
+    /// unique to `(seed, site, event index)` and should be used to draw
+    /// the fault's parameters (which bit to flip, how long to stall, …)
+    /// so those are replayable too. Zero-rate sites return `None`
+    /// without touching any shared state.
+    pub fn decide(&self, site: FaultSite) -> Option<Pcg32> {
+        let rate = self.rates.rate(site);
+        if rate <= 0.0 {
+            return None;
+        }
+        let n = self.events[site.index()].fetch_add(1, Ordering::Relaxed);
+        let mut rng = Pcg32::new(self.seed ^ site.tag()).fork(n);
+        if rng.bernoulli(rate) {
+            self.injected[site.index()].fetch_add(1, Ordering::Relaxed);
+            Some(rng)
+        } else {
+            None
+        }
+    }
+
+    /// Events recorded at `site` so far (fired or not).
+    pub fn events(&self, site: FaultSite) -> u64 {
+        self.events[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Faults actually injected at `site` so far.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total faults injected across all sites.
+    pub fn total_injected(&self) -> u64 {
+        FaultSite::ALL.iter().map(|&s| self.injected(s)).sum()
+    }
+}
+
+impl fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "FaultPlan {{ seed: {}, injected: [", self.seed)?;
+        for (i, site) in FaultSite::ALL.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}: {}", site.name(), self.injected(*site))?;
+        }
+        write!(f, "] }}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn all_rates(p: f64) -> FaultRates {
+        FaultRates {
+            weight_flip: p,
+            arena_flip: p,
+            lane_transient: p,
+            batcher_panic: p,
+            conn_drop: p,
+            conn_stall: p,
+            conn_truncate: p,
+        }
+    }
+
+    #[test]
+    fn zero_rate_site_never_counts_events() {
+        let plan = FaultPlan::disabled();
+        assert!(!plan.enabled());
+        for site in FaultSite::ALL {
+            for _ in 0..100 {
+                assert!(plan.decide(site).is_none());
+            }
+            assert_eq!(plan.events(site), 0, "{}", site.name());
+            assert_eq!(plan.injected(site), 0);
+        }
+        assert_eq!(plan.total_injected(), 0);
+    }
+
+    #[test]
+    fn rate_one_always_fires_with_unique_parameter_streams() {
+        let plan = FaultPlan::new(7, all_rates(1.0));
+        assert!(plan.enabled());
+        let mut a = plan.decide(FaultSite::ConnDrop).expect("fires");
+        let mut b = plan.decide(FaultSite::ConnDrop).expect("fires");
+        // Distinct events draw from distinct streams.
+        assert_ne!(
+            (a.next_u64(), a.next_u64()),
+            (b.next_u64(), b.next_u64())
+        );
+        assert_eq!(plan.events(FaultSite::ConnDrop), 2);
+        assert_eq!(plan.injected(FaultSite::ConnDrop), 2);
+    }
+
+    #[test]
+    fn same_seed_replays_the_identical_schedule() {
+        let a = FaultPlan::new(0xC0FFEE, all_rates(0.3));
+        let b = FaultPlan::new(0xC0FFEE, all_rates(0.3));
+        for site in FaultSite::ALL {
+            let da: Vec<bool> = (0..256).map(|_| a.decide(site).is_some()).collect();
+            let db: Vec<bool> = (0..256).map(|_| b.decide(site).is_some()).collect();
+            assert_eq!(da, db, "site {}", site.name());
+            assert!(da.iter().any(|&x| x), "rate 0.3 fired never at {}", site.name());
+            assert!(da.iter().any(|&x| !x), "rate 0.3 fired always at {}", site.name());
+        }
+        assert_eq!(a.total_injected(), b.total_injected());
+    }
+
+    #[test]
+    fn different_sites_use_independent_streams() {
+        let plan = FaultPlan::new(42, all_rates(0.5));
+        let d1: Vec<bool> =
+            (0..128).map(|_| plan.decide(FaultSite::WeightFlip).is_some()).collect();
+        let d2: Vec<bool> =
+            (0..128).map(|_| plan.decide(FaultSite::ArenaFlip).is_some()).collect();
+        assert_ne!(d1, d2, "site tags must decorrelate the schedules");
+    }
+
+    #[test]
+    fn injected_count_is_interleaving_independent() {
+        // The set of firing event indices is fixed by (seed, site), so
+        // however threads interleave, N total events inject the same
+        // number of faults a single thread would.
+        let site = FaultSite::BatcherPanic;
+        let rates = FaultRates { batcher_panic: 0.4, ..Default::default() };
+        let solo = FaultPlan::new(99, rates);
+        for _ in 0..400 {
+            solo.decide(site);
+        }
+        let expected = solo.injected(site);
+
+        let shared = Arc::new(FaultPlan::new(99, rates));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let p = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        p.decide(site);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(shared.events(site), 400);
+        assert_eq!(shared.injected(site), expected);
+    }
+
+    #[test]
+    fn debug_render_names_sites() {
+        let plan = FaultPlan::new(1, all_rates(1.0));
+        plan.decide(FaultSite::ConnStall);
+        let s = format!("{plan:?}");
+        assert!(s.contains("seed: 1"), "{s}");
+        assert!(s.contains("conn_stall: 1"), "{s}");
+    }
+}

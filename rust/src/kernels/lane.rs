@@ -98,6 +98,49 @@ impl ScheduleArena {
         let hi = self.offsets[lane + 1] as usize;
         LaneScheduleRef { visited: &self.visited[lo..hi], charge: &self.charges[lane] }
     }
+
+    /// FNV-1a checksum over the arena's CSR buffers (visited entries +
+    /// offset table). Cheap enough to verify on every prepared-cache
+    /// hit; any single bit flip in the schedule changes it.
+    pub fn checksum(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for &(b, w) in &self.visited {
+            h = fnv1a_u32(h, b);
+            h = fnv1a_u32(h, w);
+        }
+        for &o in &self.offsets {
+            h = fnv1a_u32(h, o);
+        }
+        h
+    }
+
+    /// Flip one bit of a visited entry's weight word — the
+    /// `ScheduleArena` fault model for SEU injection (chaos tier only;
+    /// the integrity checksum is what detects this in production).
+    /// No-op (returns `false`) when the arena is empty.
+    pub fn flip_visited_bit(&mut self, entry: usize, bit: u32) -> bool {
+        if self.visited.is_empty() {
+            return false;
+        }
+        let e = entry % self.visited.len();
+        self.visited[e].1 ^= 1 << (bit % 32);
+        true
+    }
+}
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold the 4 little-endian bytes of `v` into an FNV-1a state.
+#[inline]
+fn fnv1a_u32(mut h: u64, v: u32) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
 }
 
 /// Borrowed view of one lane's compiled schedule inside the
@@ -157,6 +200,40 @@ pub struct PreparedLanes {
     /// charges in CSR form) — the default execution path; the
     /// interpreted CFU walk stays as the differential oracle.
     pub arena: ScheduleArena,
+}
+
+impl PreparedLanes {
+    /// FNV-1a checksum over the layer's packed-weight and schedule
+    /// buffers: the raw packed words (what the interpreted oracle
+    /// reads), the post-clamp effective weights, and the compiled
+    /// [`ScheduleArena`] CSR buffers (what the batched/compiled paths
+    /// read). Computed once at prepare time and re-verified on every
+    /// prepared-cache hit.
+    pub fn checksum(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for &w in &self.words {
+            h = fnv1a_u32(h, w);
+        }
+        for &w in &self.effective_weights {
+            h ^= w as u8 as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        // Mix rather than concatenate: two layers whose buffers differ
+        // only in the words/arena split must not collide.
+        h ^ self.arena.checksum().rotate_left(17)
+    }
+
+    /// Flip one bit of a packed weight word — the weight-memory SEU
+    /// fault model (chaos tier only). No-op (returns `false`) when the
+    /// layer has no packed words.
+    pub fn flip_word_bit(&mut self, word: usize, bit: u32) -> bool {
+        if self.words.is_empty() {
+            return false;
+        }
+        let w = word % self.words.len();
+        self.words[w] ^= 1 << (bit % 32);
+        true
+    }
 }
 
 /// Pack a weight buffer of `lanes × lane_len` into CFU words for a design.

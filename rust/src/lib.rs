@@ -32,6 +32,10 @@
 //! - structured perf telemetry: metric records, the committed
 //!   `BENCH_*.json` baseline store, and the CI regression diff engine
 //!   ([`metrics`]),
+//! - deterministic fault injection + supervised recovery: seeded
+//!   replayable fault plans, prepared-schedule integrity checksums with
+//!   oracle-fallback degradation, and panic-isolated batcher
+//!   supervision ([`faults`]),
 //! - a PJRT runtime that loads JAX-lowered HLO text artifacts ([`runtime`]),
 //! - offline-friendly substrates: CLI parser ([`cli`]), config system
 //!   ([`config`]), bench harness ([`bench`]), PRNG/stats/property testing
@@ -53,6 +57,7 @@ pub mod cpu;
 pub mod encoding;
 pub mod error;
 pub mod explorer;
+pub mod faults;
 pub mod isa;
 pub mod kernels;
 pub mod metrics;

@@ -15,6 +15,7 @@ use sparse_riscv::coordinator::runner::run_experiment;
 use sparse_riscv::coordinator::serve::{Server, ServeOptions};
 use sparse_riscv::encoding::lookahead::encode_lanes;
 use sparse_riscv::explorer::{explore, profile_graph, ExplorerOptions};
+use sparse_riscv::faults::{FaultPlan, FaultRates};
 use sparse_riscv::isa::{DesignAssignment, DesignKind};
 use sparse_riscv::kernels::{ExecMode, HostKernel};
 use sparse_riscv::metrics::{diff as metrics_diff, BaselineStore, Tolerances};
@@ -111,6 +112,46 @@ fn cli() -> Command {
                     "0",
                     "auto-shutdown after this many seconds (0 = run until POST /shutdown)",
                 ))
+                .arg(ArgSpec::opt(
+                    "chaos-seed",
+                    "",
+                    "arm the deterministic fault-injection plan with this seed (empty = off)",
+                ))
+                .arg(ArgSpec::opt(
+                    "fault-weight-flip",
+                    "0",
+                    "per-batch probability of a packed-weight bit flip in the cached model",
+                ))
+                .arg(ArgSpec::opt(
+                    "fault-arena-flip",
+                    "0",
+                    "per-batch probability of a schedule-arena bit flip in the cached model",
+                ))
+                .arg(ArgSpec::opt(
+                    "fault-lane",
+                    "0",
+                    "per-request probability of a transient lane compute fault",
+                ))
+                .arg(ArgSpec::opt(
+                    "fault-panic",
+                    "0",
+                    "per-batch probability of an injected batcher-thread panic",
+                ))
+                .arg(ArgSpec::opt(
+                    "fault-conn-drop",
+                    "0",
+                    "per-infer probability of dropping the connection before admission",
+                ))
+                .arg(ArgSpec::opt(
+                    "fault-conn-stall",
+                    "0",
+                    "per-infer probability of stalling the response by 5-45 ms",
+                ))
+                .arg(ArgSpec::opt(
+                    "fault-conn-truncate",
+                    "0",
+                    "per-infer probability of truncating the response mid-write",
+                ))
                 .arg(ArgSpec::opt("json", "", "upsert serving metric records into this store")),
         )
         .subcommand(
@@ -127,6 +168,11 @@ fn cli() -> Command {
                 .arg(ArgSpec::opt("x-ss", "0.3", "block sparsity"))
                 .arg(ArgSpec::opt("scale", "0.125", "model width multiplier"))
                 .arg(ArgSpec::opt("timeout-ms", "30000", "per-request client timeout (ms)"))
+                .arg(ArgSpec::opt(
+                    "retries",
+                    "0",
+                    "retries per request with jittered backoff (a 503's Retry-After is honored)",
+                ))
                 .arg(ArgSpec::flag("shutdown", "POST /shutdown after the trace completes"))
                 .arg(ArgSpec::opt("json", "", "upsert client-side metric records here")),
         )
@@ -321,6 +367,7 @@ fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
         cache_capacity: args.get_usize("cache-cap")?,
         tile_threads: args.get_usize("tile-threads")?,
         host_kernel,
+        faults: None,
     });
     let n = args.get_usize("requests")?;
     let reqs = BatchEngine::gen_requests(&model, n, args.get_u64("seed")?)?;
@@ -367,9 +414,41 @@ fn cmd_serve(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     Ok(())
 }
 
+/// Build the serve-tcp chaos plan from CLI flags: a non-empty
+/// `--chaos-seed` arms it; the per-site `--fault-*` rates are
+/// probabilities in `[0, 1]`. With the same seed and rates the whole
+/// fault schedule replays identically.
+fn parse_fault_plan(args: &ParsedArgs) -> sparse_riscv::Result<Option<std::sync::Arc<FaultPlan>>> {
+    let seed_spec = args.get("chaos-seed")?;
+    if seed_spec.is_empty() {
+        return Ok(None);
+    }
+    let seed: u64 = seed_spec.parse().map_err(|e| {
+        sparse_riscv::Error::Cli(format!("bad --chaos-seed '{seed_spec}': {e}"))
+    })?;
+    let rate = |name: &str| -> sparse_riscv::Result<f64> {
+        let v = args.get_f64(name)?;
+        if !(0.0..=1.0).contains(&v) {
+            return Err(sparse_riscv::Error::Cli(format!("--{name} {v} outside [0, 1]")));
+        }
+        Ok(v)
+    };
+    let rates = FaultRates {
+        weight_flip: rate("fault-weight-flip")?,
+        arena_flip: rate("fault-arena-flip")?,
+        lane_transient: rate("fault-lane")?,
+        batcher_panic: rate("fault-panic")?,
+        conn_drop: rate("fault-conn-drop")?,
+        conn_stall: rate("fault-conn-stall")?,
+        conn_truncate: rate("fault-conn-truncate")?,
+    };
+    Ok(Some(std::sync::Arc::new(FaultPlan::new(seed, rates))))
+}
+
 fn cmd_serve_tcp(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     use std::io::Write as _;
     let host_kernel = parse_host_kernel(args.get("host-kernel")?)?;
+    let faults = parse_fault_plan(args)?;
     let engine = BatchEngine::new(BatchOptions {
         threads: args.get_usize("threads")?,
         clock_hz: 100_000_000,
@@ -378,6 +457,7 @@ fn cmd_serve_tcp(args: &ParsedArgs) -> sparse_riscv::Result<()> {
         cache_capacity: args.get_usize("cache-cap")?,
         tile_threads: args.get_usize("tile-threads")?,
         host_kernel,
+        faults: faults.clone(),
     });
     let opts = NetOptions {
         batch_max: args.get_usize("batch-max")?,
@@ -385,8 +465,12 @@ fn cmd_serve_tcp(args: &ParsedArgs) -> sparse_riscv::Result<()> {
         queue_capacity: args.get_usize("queue-cap")?,
         read_timeout: Duration::from_millis(args.get_u64("read-timeout-ms")?.max(1)),
         max_body: args.get_usize("max-body")?,
+        faults: faults.clone(),
         ..Default::default()
     };
+    if let Some(plan) = &faults {
+        println!("serve-tcp: chaos plan armed — {plan:?}");
+    }
     let server = NetServer::bind(args.get("addr")?, engine, opts)?;
     // The exact line automation scrapes for the ephemeral port — flush
     // so a piped stdout delivers it before the server blocks in join().
@@ -416,6 +500,15 @@ fn cmd_serve_tcp(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     println!(
         "serve-tcp: wall latency p50 {:.3} ms  p99 {:.3} ms  p99.9 {:.3} ms",
         stats.wall_p50_ms, stats.wall_p99_ms, stats.wall_p999_ms,
+    );
+    println!(
+        "serve-tcp: recovery — integrity_fails {} degraded_runs {} batcher_restarts {} \
+         transient_corrected {} faults_injected {}",
+        stats.integrity_fails,
+        stats.degraded_runs,
+        stats.batcher_restarts,
+        stats.transient_corrected,
+        faults.as_ref().map_or(0, |p| p.total_injected()),
     );
     let note = "regenerate: cargo run --release -- serve-tcp (plus a loadgen trace)";
     let rec = stats.to_record("serve/net");
@@ -449,6 +542,7 @@ fn cmd_loadgen(args: &ParsedArgs) -> sparse_riscv::Result<()> {
         arrival,
         burst: args.get_usize("burst")?,
         seed: args.get_u64("seed")?,
+        retries: args.get_usize("retries")?,
     };
     if trace.rate <= 0.0 {
         return Err(sparse_riscv::Error::Cli("--rate must be positive".into()));

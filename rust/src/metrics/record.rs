@@ -227,6 +227,42 @@ pub const METRIC_SPECS: &[MetricSpec] = &[
         rel_tol: 0.25,
         abs_floor: 0.5,
     },
+    // Fault-injection / supervised-recovery counters: informational
+    // (they track the chaos plan and the recovery machinery, not code
+    // quality), lower-is-better so a noisier chaos run reads as a
+    // regression in trend diffs rather than an improvement.
+    MetricSpec {
+        name: "host_integrity_fail",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_degraded_total",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_batcher_restarts",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_retry_total",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
     // Host wall-clock: informational only, never gated. The generous
     // tolerance keeps run-to-run jitter out of the diff table; only
     // swings beyond it get flagged (still non-fatal).
@@ -439,7 +475,15 @@ mod tests {
     fn registry_serving_counters_override_host_prefix_direction() {
         // Exact serving entries beat the higher-is-better host_ prefix:
         // fewer sheds and shallower queues are improvements.
-        for name in ["host_shed_total", "host_queue_depth_max", "host_failed"] {
+        for name in [
+            "host_shed_total",
+            "host_queue_depth_max",
+            "host_failed",
+            "host_integrity_fail",
+            "host_degraded_total",
+            "host_batcher_restarts",
+            "host_retry_total",
+        ] {
             let s = spec_for(name);
             assert_eq!(s.name, name, "{name} must hit its exact entry");
             assert_eq!(s.better, Direction::LowerIsBetter, "{name}");

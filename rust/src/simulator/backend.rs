@@ -218,6 +218,17 @@ pub struct PreparedCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    integrity_fails: AtomicU64,
+}
+
+/// Outcome of one [`PreparedCache::get_or_prepare_checked`] lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheLookup {
+    /// The returned model came straight from the cache.
+    pub hit: bool,
+    /// A cached model failed its integrity checksum during this lookup
+    /// and was evicted (the returned model is a fresh re-prepare).
+    pub integrity_evicted: bool,
 }
 
 impl Default for PreparedCache {
@@ -243,6 +254,7 @@ impl PreparedCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            integrity_fails: AtomicU64::new(0),
         }
     }
 
@@ -252,14 +264,44 @@ impl PreparedCache {
     where
         F: FnOnce() -> Result<PreparedModel>,
     {
+        let (model, lookup) = self.get_or_prepare_checked(key, build)?;
+        Ok((model, lookup.hit))
+    }
+
+    /// [`PreparedCache::get_or_prepare`] with the full lookup outcome:
+    /// every hit re-verifies the model's prepare-time integrity checksum
+    /// ([`PreparedModel::verify_integrity`]); a corrupted model is
+    /// evicted, counted in [`PreparedCache::integrity_fails`], and
+    /// transparently rebuilt — the caller never observes corrupted
+    /// schedule or weight buffers through the cache.
+    pub fn get_or_prepare_checked<F>(
+        &self,
+        key: &ModelKey,
+        build: F,
+    ) -> Result<(Arc<PreparedModel>, CacheLookup)>
+    where
+        F: FnOnce() -> Result<PreparedModel>,
+    {
+        let mut integrity_evicted = false;
         {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
             let tick = inner.tick;
             if let Some(e) = inner.map.get_mut(key) {
-                e.last_used = tick;
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Ok((Arc::clone(&e.model), true));
+                if e.model.verify_integrity() {
+                    e.last_used = tick;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((
+                        Arc::clone(&e.model),
+                        CacheLookup { hit: true, integrity_evicted: false },
+                    ));
+                }
+                // Checksum mismatch: the resident model was corrupted
+                // after preparation. Evict and fall through to a clean
+                // rebuild below.
+                inner.map.remove(key);
+                self.integrity_fails.fetch_add(1, Ordering::Relaxed);
+                integrity_evicted = true;
             }
         }
         // Build without holding the lock (encoding a large model is the
@@ -297,7 +339,26 @@ impl PreparedCache {
                 None => break,
             }
         }
-        Ok((model, false))
+        Ok((model, CacheLookup { hit: false, integrity_evicted }))
+    }
+
+    /// Mutate a cached prepared model **in place** (chaos-tier fault
+    /// injection only). Best-effort: succeeds only when the cache holds
+    /// the sole reference to the model (i.e. no batch is mid-execution
+    /// on it) — `Arc::get_mut` guarantees no reader can observe the
+    /// mutation mid-flight. Returns whether the mutation was applied.
+    pub fn corrupt_cached<F>(&self, key: &ModelKey, f: F) -> bool
+    where
+        F: FnOnce(&mut PreparedModel),
+    {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get_mut(key).and_then(|e| Arc::get_mut(&mut e.model)) {
+            Some(model) => {
+                f(model);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Cache hits so far.
@@ -313,6 +374,12 @@ impl PreparedCache {
     /// LRU evictions so far.
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Integrity-checksum failures detected on cache hits so far (each
+    /// one evicted a corrupted model and forced a clean re-prepare).
+    pub fn integrity_fails(&self) -> u64 {
+        self.integrity_fails.load(Ordering::Relaxed)
     }
 
     /// Maximum number of resident prepared models.
@@ -413,6 +480,48 @@ mod tests {
     fn capacity_floors_at_one() {
         let cache = PreparedCache::with_capacity(0);
         assert_eq!(cache.capacity(), 1);
+    }
+
+    #[test]
+    fn integrity_mismatch_on_hit_evicts_and_rebuilds() {
+        let graph = tiny_graph();
+        let cache = PreparedCache::new();
+        let backend = backend_for(DesignKind::Csa);
+        let key = ModelKey::new("dscnn", DesignKind::Csa, 0.5, 0.3, 0.07, 0x5EED);
+        let (clean, _) = cache.get_or_prepare(&key, || backend.prepare(&graph)).unwrap();
+        assert!(clean.verify_integrity());
+        // Corrupt the resident copy in place (sole reference required).
+        drop(clean);
+        let mut rng = crate::util::Pcg32::new(3);
+        assert!(cache.corrupt_cached(&key, |m| {
+            assert!(m.corrupt_arena_bit(&mut rng));
+        }));
+        // The next lookup detects the corruption, evicts, and rebuilds.
+        let (rebuilt, lookup) =
+            cache.get_or_prepare_checked(&key, || backend.prepare(&graph)).unwrap();
+        assert!(!lookup.hit);
+        assert!(lookup.integrity_evicted);
+        assert!(rebuilt.verify_integrity());
+        assert_eq!(cache.integrity_fails(), 1);
+        assert_eq!(cache.misses(), 2, "corruption forces a re-prepare");
+        // Clean entries keep hitting without integrity churn.
+        let (_, lookup2) =
+            cache.get_or_prepare_checked(&key, || backend.prepare(&graph)).unwrap();
+        assert!(lookup2.hit && !lookup2.integrity_evicted);
+        assert_eq!(cache.integrity_fails(), 1);
+    }
+
+    #[test]
+    fn corrupt_cached_fails_while_model_is_shared() {
+        let graph = tiny_graph();
+        let cache = PreparedCache::new();
+        let backend = backend_for(DesignKind::Ussa);
+        let key = ModelKey::new("dscnn", DesignKind::Ussa, 0.5, 0.3, 0.07, 1);
+        let (held, _) = cache.get_or_prepare(&key, || backend.prepare(&graph)).unwrap();
+        // While a batch holds the Arc, in-place corruption must refuse.
+        assert!(!cache.corrupt_cached(&key, |_| panic!("must not run")));
+        drop(held);
+        assert!(cache.corrupt_cached(&key, |_| {}));
     }
 
     #[test]

@@ -94,6 +94,92 @@ pub struct PreparedModel {
     pub classes: usize,
     /// INT8→INT7 clamped weight count (SSSA/CSA designs).
     pub clamped_weights: usize,
+    /// Integrity checksum of every MAC layer's packed-weight + schedule
+    /// buffers, taken at prepare time (see [`PreparedModel::verify_integrity`]).
+    checksum: u64,
+}
+
+impl PreparedModel {
+    /// Every MAC layer's packed lanes, in graph order.
+    fn mac_lanes(&self) -> Vec<&crate::kernels::PreparedLanes> {
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            match layer {
+                PreparedLayer::Conv(p) => out.push(&p.lanes),
+                PreparedLayer::Fc(p) => out.push(&p.lanes),
+                PreparedLayer::Shortcut { conv: Some(p), .. } => out.push(&p.lanes),
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Mutable view of every MAC layer's packed lanes (fault injection).
+    fn mac_lanes_mut(&mut self) -> Vec<&mut crate::kernels::PreparedLanes> {
+        let mut out = Vec::new();
+        for layer in &mut self.layers {
+            match layer {
+                PreparedLayer::Conv(p) => out.push(&mut p.lanes),
+                PreparedLayer::Fc(p) => out.push(&mut p.lanes),
+                PreparedLayer::Shortcut { conv: Some(p), .. } => out.push(&mut p.lanes),
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Recompute the model-wide integrity checksum: each MAC layer's
+    /// [`crate::kernels::PreparedLanes::checksum`] folded with its layer
+    /// index (so swapping two identical layers' buffers still changes
+    /// the digest).
+    pub fn integrity_checksum(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for (i, lanes) in self.mac_lanes().into_iter().enumerate() {
+            h ^= lanes.checksum().rotate_left((i as u32 % 63) + 1);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// The checksum stored at prepare time.
+    pub fn stored_checksum(&self) -> u64 {
+        self.checksum
+    }
+
+    /// Verify the packed-weight and schedule buffers against the
+    /// prepare-time checksum. `false` means the prepared model was
+    /// corrupted after preparation (e.g. an SEU bit flip) and must not
+    /// be trusted: the prepared cache evicts and re-prepares on this.
+    pub fn verify_integrity(&self) -> bool {
+        self.integrity_checksum() == self.checksum
+    }
+
+    /// Flip one bit in some MAC layer's packed weight words, chosen by
+    /// `rng` (the weight-memory SEU fault model; chaos tier only).
+    /// Returns `false` when the model has no packed words to corrupt.
+    pub fn corrupt_weight_bit(&mut self, rng: &mut crate::util::Pcg32) -> bool {
+        let mut lanes = self.mac_lanes_mut();
+        if lanes.is_empty() {
+            return false;
+        }
+        let l = rng.below(lanes.len() as u32) as usize;
+        let word = rng.next_u32() as usize;
+        let bit = rng.below(32);
+        lanes[l].flip_word_bit(word, bit)
+    }
+
+    /// Flip one bit in some MAC layer's compiled [`crate::kernels::ScheduleArena`]
+    /// (the configuration-memory SEU fault model; chaos tier only).
+    pub fn corrupt_arena_bit(&mut self, rng: &mut crate::util::Pcg32) -> bool {
+        let mut lanes = self.mac_lanes_mut();
+        if lanes.is_empty() {
+            return false;
+        }
+        let l = rng.below(lanes.len() as u32) as usize;
+        let entry = rng.next_u32() as usize;
+        let bit = rng.below(32);
+        lanes[l].arena.flip_visited_bit(entry, bit)
+    }
 }
 
 /// Simulation engine: per-layer design assignment + CPU cost model +
@@ -258,13 +344,16 @@ impl SimEngine {
                 }
             });
         }
-        Ok(PreparedModel {
+        let mut model = PreparedModel {
             name: graph.name.clone(),
             assignment: self.assignment.clone(),
             layers,
             classes: graph.classes,
             clamped_weights: clamped,
-        })
+            checksum: 0,
+        };
+        model.checksum = model.integrity_checksum();
+        Ok(model)
     }
 
     /// Simulate one inference.

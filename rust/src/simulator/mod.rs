@@ -20,7 +20,7 @@ pub mod engine;
 
 pub use backend::{
     assigned_backend_full, assigned_backend_tiled, assigned_backend_with_mode, backend_for,
-    backend_with_mode, oracle_backend_for, verified_backend_for, ExecBackend, ModelKey,
-    PreparedCache,
+    backend_with_mode, oracle_backend_for, verified_backend_for, CacheLookup, ExecBackend,
+    ModelKey, PreparedCache,
 };
 pub use engine::{LayerStats, PreparedModel, SimEngine, SimReport};

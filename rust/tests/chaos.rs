@@ -1,0 +1,240 @@
+//! Chaos tier: deterministic fault injection against the live serving
+//! stack. Four invariants from the robustness contract:
+//!
+//! 1. An **armed but zero-rate** fault plan changes nothing — responses
+//!    are bit-identical (predictions AND cycle counts) to a direct
+//!    [`BatchEngine`] with no plan, and every fault counter stays zero.
+//! 2. Under a **full chaos storm** (corruption + transients + batcher
+//!    panics + connection faults) no accepted request is ever lost:
+//!    `accepted == completed + failed` server-side, and a retrying
+//!    client ends with every request answered OK.
+//! 3. The server **always drains cleanly**: `join()` returns a coherent
+//!    final snapshot no matter what was injected.
+//! 4. **Persistent corruption degrades to the interpreted oracle** with
+//!    answers that stay bit-identical to the fault-free engine.
+
+use sparse_riscv::config::value::Value;
+use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
+use sparse_riscv::coordinator::loadgen::{self, Arrival, TraceConfig};
+use sparse_riscv::coordinator::net::{NetOptions, NetServer};
+use sparse_riscv::faults::{FaultPlan, FaultRates};
+use sparse_riscv::isa::DesignKind;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Width multiplier small enough that model prepare + inference stay
+/// fast in unoptimized test builds.
+const SCALE: f64 = 0.07;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+fn net_opts(plan: Option<Arc<FaultPlan>>) -> NetOptions {
+    NetOptions {
+        batch_max: 8,
+        batch_deadline: Duration::from_millis(10),
+        queue_capacity: 64,
+        read_timeout: Duration::from_millis(400),
+        faults: plan,
+        ..Default::default()
+    }
+}
+
+/// Server whose engine and network layer share one fault plan.
+fn start_chaos_server(plan: Option<Arc<FaultPlan>>) -> NetServer {
+    let engine = BatchEngine::new(BatchOptions {
+        threads: 2,
+        faults: plan.clone(),
+        ..Default::default()
+    });
+    NetServer::bind("127.0.0.1:0", engine, net_opts(plan)).expect("bind ephemeral port")
+}
+
+fn infer_body(seed: u64) -> String {
+    Value::obj(vec![
+        ("model", Value::Str("dscnn".to_string())),
+        ("design", Value::Str("csa".to_string())),
+        ("scale", Value::Num(SCALE)),
+        ("seed", Value::Num(seed as f64)),
+    ])
+    .to_json()
+}
+
+/// `(prediction, cycles)` for one seed from a fault-free direct engine.
+fn direct_reference(seeds: &[u64]) -> Vec<(usize, u64)> {
+    let engine = BatchEngine::new(BatchOptions { threads: 2, ..Default::default() });
+    let spec = BatchSpec { scale: SCALE, ..BatchSpec::new("dscnn", DesignKind::Csa) };
+    seeds
+        .iter()
+        .map(|&seed| {
+            let reqs = BatchEngine::gen_requests("dscnn", 1, seed).unwrap();
+            let report = engine.run_batch(&spec, reqs).unwrap();
+            (report.predictions[0], report.request_cycles[0])
+        })
+        .collect()
+}
+
+/// One blocking infer round-trip, parsed to `(prediction, cycles)`.
+fn infer_once(addr: &str, seed: u64) -> (usize, u64) {
+    let resp = loadgen::http_request(addr, "POST", "/v1/infer", &infer_body(seed), TIMEOUT)
+        .expect("infer request");
+    assert_eq!(resp.code, 200, "body: {}", resp.body);
+    let v = Value::parse(&resp.body).expect("infer response is valid JSON");
+    (
+        v.get("prediction").unwrap().as_usize().unwrap(),
+        v.get("cycles").unwrap().as_f64().unwrap() as u64,
+    )
+}
+
+#[test]
+fn armed_zero_rate_plan_is_bit_identical_and_silent() {
+    // Invariant 1 + 3: arming the chaos machinery with every rate at
+    // zero must be indistinguishable from not arming it at all.
+    let plan = Arc::new(FaultPlan::new(0xC4A05, FaultRates::default()));
+    let server = start_chaos_server(Some(plan.clone()));
+    let addr = server.addr().to_string();
+
+    let seeds: Vec<u64> = (700..706).collect();
+    let mut handles = Vec::new();
+    for &seed in &seeds {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || infer_once(&addr, seed)));
+    }
+    let via_net: Vec<(usize, u64)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    server.shutdown();
+    let stats = server.join();
+    assert_eq!(stats.accepted, seeds.len() as u64);
+    assert_eq!(stats.completed, seeds.len() as u64);
+    assert_eq!(stats.failed + stats.shed + stats.rejected, 0);
+    assert_eq!(stats.batcher_restarts, 0, "no panics may fire at rate zero");
+    assert_eq!(stats.integrity_fails, 0);
+    assert_eq!(stats.degraded_runs, 0);
+    assert_eq!(stats.transient_corrected, 0);
+    assert_eq!(plan.total_injected(), 0, "zero-rate plan must inject nothing");
+
+    let reference = direct_reference(&seeds);
+    for (i, &seed) in seeds.iter().enumerate() {
+        assert_eq!(
+            via_net[i], reference[i],
+            "seed {seed}: armed zero-rate plan perturbed the result"
+        );
+    }
+}
+
+#[test]
+fn chaos_storm_loses_no_accepted_request_and_drains_cleanly() {
+    // Invariant 2 + 3: every fault site firing at once. A client that
+    // retries transport-level failures must end with all requests OK,
+    // and the server's own ledger must balance.
+    let plan = Arc::new(FaultPlan::new(
+        0x57011,
+        FaultRates {
+            weight_flip: 0.5,
+            arena_flip: 0.5,
+            lane_transient: 0.2,
+            batcher_panic: 0.2,
+            conn_drop: 0.15,
+            conn_stall: 0.1,
+            conn_truncate: 0.15,
+        },
+    ));
+    let server = start_chaos_server(Some(plan.clone()));
+    let addr = server.addr().to_string();
+
+    let n = 32;
+    let trace = TraceConfig {
+        requests: n,
+        rate: 400.0,
+        arrival: Arrival::Poisson,
+        burst: 1,
+        seed: 0xC405,
+        retries: 10,
+    };
+    let bodies: Vec<String> = (0..n).map(|i| infer_body(900 + i as u64)).collect();
+    let report = loadgen::run_trace(&addr, &trace, &bodies, TIMEOUT);
+
+    assert_eq!(
+        report.ok,
+        n as u64,
+        "with retries every request must land: {}",
+        report.to_value().to_json()
+    );
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.malformed, 0);
+
+    server.shutdown();
+    let stats = server.join();
+    // The core ledger: whatever was admitted was answered. Connection
+    // faults fire before admission (drop) or after completion
+    // (truncate), so `completed` may exceed the client's `ok` count via
+    // retries — but nothing admitted ever vanishes.
+    assert_eq!(
+        stats.accepted,
+        stats.completed + stats.failed,
+        "accepted requests lost under chaos: {:?}",
+        stats
+    );
+    assert!(plan.total_injected() > 0, "storm rates must actually fire");
+}
+
+#[test]
+fn batcher_panics_respawn_without_losing_queued_requests() {
+    // Invariant 2 + 3, isolated to the supervisor: the batcher thread
+    // panics on roughly half its iterations (before draining its
+    // queue), so queued work survives each respawn and every request
+    // still completes.
+    let plan = Arc::new(FaultPlan::new(
+        0xBADC_0DE,
+        FaultRates { batcher_panic: 0.5, ..Default::default() },
+    ));
+    let server = start_chaos_server(Some(plan.clone()));
+    let addr = server.addr().to_string();
+
+    let seeds: Vec<u64> = (820..840).collect();
+    let via_net: Vec<(usize, u64)> = seeds.iter().map(|&s| infer_once(&addr, s)).collect();
+    assert_eq!(via_net, direct_reference(&seeds), "respawned batcher perturbed results");
+
+    server.shutdown();
+    let stats = server.join();
+    assert_eq!(stats.accepted, seeds.len() as u64);
+    assert_eq!(stats.completed, seeds.len() as u64);
+    assert_eq!(stats.failed, 0);
+    assert!(
+        stats.batcher_restarts >= 1,
+        "a 50% panic rate over {} sequential batches never fired",
+        seeds.len()
+    );
+}
+
+#[test]
+fn persistent_corruption_degrades_to_oracle_with_bit_identical_answers() {
+    // Invariant 4: corrupting the prepared cache before every batch
+    // walks the degradation ladder — detect + re-prepare, then pin the
+    // key to the interpreted oracle — while every answer (prediction
+    // AND cycle count) stays bit-identical to a fault-free engine.
+    let plan = Arc::new(FaultPlan::new(
+        0xDE9_12ADE,
+        FaultRates { weight_flip: 1.0, arena_flip: 1.0, ..Default::default() },
+    ));
+    let server = start_chaos_server(Some(plan.clone()));
+    let addr = server.addr().to_string();
+
+    let seeds: Vec<u64> = (640..648).collect();
+    let via_net: Vec<(usize, u64)> = seeds.iter().map(|&s| infer_once(&addr, s)).collect();
+    assert_eq!(via_net, direct_reference(&seeds), "degraded path diverged from oracle");
+
+    // /healthz must have noticed the degradation while serving.
+    let health = loadgen::http_request(&addr, "GET", "/healthz", "", TIMEOUT).unwrap();
+    assert_eq!(health.code, 200);
+    assert!(health.body.contains("\"status\":\"degraded\""), "body: {}", health.body);
+
+    server.shutdown();
+    let stats = server.join();
+    assert_eq!(stats.completed, seeds.len() as u64);
+    assert!(
+        stats.integrity_fails >= 2,
+        "per-batch corruption must trip the checksum at least twice: {:?}",
+        stats
+    );
+    assert!(stats.degraded_runs >= 1, "strikes never pinned the key to the oracle: {:?}", stats);
+}

@@ -133,8 +133,14 @@ fn poisson_trace_batches_with_deadline_trigger() {
     let addr = server.addr().to_string();
 
     let n = 30;
-    let trace =
-        TraceConfig { requests: n, rate: 800.0, arrival: Arrival::Poisson, burst: 1, seed: 11 };
+    let trace = TraceConfig {
+        requests: n,
+        rate: 800.0,
+        arrival: Arrival::Poisson,
+        burst: 1,
+        seed: 11,
+        retries: 0,
+    };
     let bodies: Vec<String> = (0..n).map(|i| infer_body(200 + i as u64)).collect();
     let report = loadgen::run_trace(&addr, &trace, &bodies, TIMEOUT);
     assert!(report.well_formed(), "trace not clean: {}", report.to_value().to_json());
@@ -178,8 +184,14 @@ fn burst_sheds_beyond_watermark_without_losing_accepted_requests() {
     let addr = server.addr().to_string();
 
     let n = 12;
-    let trace =
-        TraceConfig { requests: n, rate: 50.0, arrival: Arrival::Burst, burst: n, seed: 5 };
+    let trace = TraceConfig {
+        requests: n,
+        rate: 50.0,
+        arrival: Arrival::Burst,
+        burst: n,
+        seed: 5,
+        retries: 0,
+    };
     let bodies: Vec<String> = (0..n).map(|i| infer_body(300 + i as u64)).collect();
     let report = loadgen::run_trace(&addr, &trace, &bodies, TIMEOUT);
 
