@@ -35,9 +35,9 @@ fn simulate(weights: &[i8], design: DesignKind, model: &CostModel) -> u64 {
     let xs: Vec<i8> = (0..LANE_LEN).map(|i| (i % 251) as i8).collect();
     for lane in 0..prep.lanes {
         run_lane(
-            design,
+            &prep,
+            lane,
             &mut cfu,
-            prep.lane_words(lane),
             |j| {
                 let p = j * 4;
                 (sparse_riscv::encoding::pack::pack4_le(&xs[p..p + 4]), 1, 0)

@@ -12,7 +12,7 @@ use crate::error::Result;
 use crate::explorer::{explore, profile_graph, Exploration, ExplorerOptions};
 use crate::metrics::MetricRecord;
 use crate::models::builder::{
-    apply_sparsity_plan, widen_weights_to_int8, ModelConfig,
+    apply_prune_plan, apply_sparsity_plan, widen_weights_to_int8, LayerPrune, ModelConfig,
 };
 use crate::models::zoo::build_model;
 use crate::nn::graph::Graph;
@@ -27,11 +27,13 @@ pub const HIDDEN_SPARSITY: (f64, f64) = (0.5, 0.5);
 pub const EDGE_SPARSITY: (f64, f64) = (0.4, 0.0);
 
 /// Build the canonical mixed co-design workload for one zoo model:
-/// hidden layers get [`HIDDEN_SPARSITY`], the stem and classifier head
-/// get [`EDGE_SPARSITY`] and are widened to full INT8 range (so
-/// lossless deployments must keep a baseline design there — the
-/// realistic mixed-range case the explorer exists for). Deterministic
-/// in (model, scale).
+/// hidden layers get [`HIDDEN_SPARSITY`] and a 2:4 structure pass on
+/// top (block-sparse *and* N:M-compliant, so both the lookahead designs
+/// and NM-SSA are lossless-eligible there); the stem and classifier
+/// head get [`EDGE_SPARSITY`] only and are widened to full INT8 range
+/// (unstructured and wide, so lossless deployments must keep a baseline
+/// design there — the realistic mixed-range case the explorer exists
+/// for). Deterministic in (model, scale).
 pub fn mixed_scenario(model: &str, scale: f64) -> Result<(Graph, Shape)> {
     let cfg = ModelConfig { scale, ..Default::default() };
     let mut info = build_model(model, &cfg)?;
@@ -41,6 +43,19 @@ pub fn mixed_scenario(model: &str, scale: f64) -> Result<(Graph, Shape)> {
         .map(|i| if widened.contains(&i) { EDGE_SPARSITY } else { HIDDEN_SPARSITY })
         .collect();
     apply_sparsity_plan(&mut info.graph, &plan);
+    // 2:4 enforcement only zeroes surplus non-zeros inside surviving
+    // words, so the block/word skip structure above is unchanged — the
+    // hidden layers merely become NM-SSA-feasible under lossless mode.
+    let nm_plan: Vec<LayerPrune> = (0..n)
+        .map(|i| {
+            if widened.contains(&i) {
+                LayerPrune::Combined { x_us: 0.0, x_ss: 0.0 }
+            } else {
+                LayerPrune::Nm { n: 2, m: 4 }
+            }
+        })
+        .collect();
+    apply_prune_plan(&mut info.graph, &nm_plan)?;
     widen_weights_to_int8(&mut info.graph, &widened);
     Ok((info.graph, info.input_shape))
 }

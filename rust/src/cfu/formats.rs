@@ -1,0 +1,186 @@
+//! CFUs for the format-extension designs: NM-SSA, BSR, and BBS.
+//!
+//! The paper's four designs cover unstructured and lookahead-encoded
+//! sparsity; these three units model the other structured formats the
+//! literature deploys on the same CPU–CFU interface:
+//!
+//! - [`NmCfu`] — N:M semi-structured (2:4). `nm_mac` (`f0 = 0`) is a
+//!   plain 4-lane INT8 MAC over a group that prepare-time pruning has
+//!   already constrained to ≤ 2 non-zeros; `nm_lookahead` (`f0 = 1`)
+//!   is the fixed one-cycle group probe that reports whether the group
+//!   has any non-zero at all, letting the walk skip all-zero groups.
+//! - [`BsrCfu`] — 8×8 block-sparse. `bsr_mac` is a 4-lane INT8 MAC;
+//!   block skipping lives in the schedule (the occupancy bitmap is a
+//!   pack-time artefact, not a per-issue decision), so the unit itself
+//!   is fixed-cycle.
+//! - [`BbsCfu`] — bank-balanced. `bbs_mac` is a 4-lane INT8 MAC on a
+//!   word fetched from one of K weight banks; the bank imbalance cost
+//!   is charged by the walk (the busiest bank bounds the lane), not by
+//!   the multiplier itself.
+//!
+//! All three consume plain packed INT8 weights — none uses the
+//! lookahead encoding, so they impose no INT7 clamping.
+
+use super::{dot4, Cfu, CfuResponse};
+use crate::encoding::pack::unpack4_i8;
+use crate::error::{Error, Result};
+use crate::isa::{CfuOpcode, DesignKind};
+
+/// The `nm_lookahead` datapath: 1 iff the packed group has a non-zero.
+#[inline]
+pub fn nm_group_occupied(rs1: u32) -> u32 {
+    u32::from(rs1 != 0)
+}
+
+/// The NM-SSA CFU (2:4 semi-structured groups).
+#[derive(Debug, Clone)]
+pub struct NmCfu {
+    input_offset: i32,
+}
+
+impl NmCfu {
+    /// New unit.
+    pub fn new(input_offset: i32) -> Self {
+        NmCfu { input_offset }
+    }
+}
+
+impl Cfu for NmCfu {
+    fn design(&self) -> DesignKind {
+        DesignKind::NmSsa
+    }
+
+    fn execute(&mut self, op: CfuOpcode, rs1: u32, rs2: u32) -> Result<CfuResponse> {
+        match op {
+            CfuOpcode::NmMac => {
+                let w = unpack4_i8(rs1);
+                let x = unpack4_i8(rs2);
+                Ok(CfuResponse { rd: dot4(w, x, self.input_offset) as u32, cycles: 1 })
+            }
+            CfuOpcode::NmLookahead => {
+                Ok(CfuResponse { rd: nm_group_occupied(rs1), cycles: 1 })
+            }
+            other => {
+                Err(Error::Sim(format!("NM-SSA CFU cannot execute {}", other.mnemonic())))
+            }
+        }
+    }
+}
+
+/// The BSR CFU (8×8 block-sparse).
+#[derive(Debug, Clone)]
+pub struct BsrCfu {
+    input_offset: i32,
+}
+
+impl BsrCfu {
+    /// New unit.
+    pub fn new(input_offset: i32) -> Self {
+        BsrCfu { input_offset }
+    }
+}
+
+impl Cfu for BsrCfu {
+    fn design(&self) -> DesignKind {
+        DesignKind::Bsr
+    }
+
+    fn execute(&mut self, op: CfuOpcode, rs1: u32, rs2: u32) -> Result<CfuResponse> {
+        match op {
+            CfuOpcode::BsrMac => {
+                let w = unpack4_i8(rs1);
+                let x = unpack4_i8(rs2);
+                Ok(CfuResponse { rd: dot4(w, x, self.input_offset) as u32, cycles: 1 })
+            }
+            other => {
+                Err(Error::Sim(format!("BSR CFU cannot execute {}", other.mnemonic())))
+            }
+        }
+    }
+}
+
+/// The BBS CFU (bank-balanced sparsity).
+#[derive(Debug, Clone)]
+pub struct BbsCfu {
+    input_offset: i32,
+}
+
+impl BbsCfu {
+    /// New unit.
+    pub fn new(input_offset: i32) -> Self {
+        BbsCfu { input_offset }
+    }
+}
+
+impl Cfu for BbsCfu {
+    fn design(&self) -> DesignKind {
+        DesignKind::Bbs
+    }
+
+    fn execute(&mut self, op: CfuOpcode, rs1: u32, rs2: u32) -> Result<CfuResponse> {
+        match op {
+            CfuOpcode::BbsMac => {
+                let w = unpack4_i8(rs1);
+                let x = unpack4_i8(rs2);
+                Ok(CfuResponse { rd: dot4(w, x, self.input_offset) as u32, cycles: 1 })
+            }
+            other => {
+                Err(Error::Sim(format!("BBS CFU cannot execute {}", other.mnemonic())))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::pack::pack4_i8;
+
+    #[test]
+    fn nm_mac_matches_scalar_dot() {
+        let mut cfu = NmCfu::new(7);
+        let w = [-128i8, 0, 0, 127];
+        let x = [4i8, -5, 6, -7];
+        let r = cfu.execute(CfuOpcode::NmMac, pack4_i8(&w), pack4_i8(&x)).unwrap();
+        let expect: i32 = (0..4).map(|i| w[i] as i32 * (x[i] as i32 + 7)).sum();
+        assert_eq!(r.rd as i32, expect);
+        assert_eq!(r.cycles, 1);
+    }
+
+    #[test]
+    fn nm_lookahead_probes_group_occupancy() {
+        let mut cfu = NmCfu::new(0);
+        let zero = cfu.execute(CfuOpcode::NmLookahead, 0, 0).unwrap();
+        assert_eq!(zero.rd, 0);
+        assert_eq!(zero.cycles, 1);
+        let occupied = cfu
+            .execute(CfuOpcode::NmLookahead, pack4_i8(&[0, 0, -1, 0]), 0)
+            .unwrap();
+        assert_eq!(occupied.rd, 1);
+        assert_eq!(occupied.cycles, 1);
+    }
+
+    #[test]
+    fn bsr_and_bbs_macs_match_scalar_dot() {
+        let w = [9i8, -9, 0, 1];
+        let x = [-1i8, 2, -3, 4];
+        let expect: i32 = (0..4).map(|i| w[i] as i32 * (x[i] as i32 - 3)).sum();
+        let r = BsrCfu::new(-3)
+            .execute(CfuOpcode::BsrMac, pack4_i8(&w), pack4_i8(&x))
+            .unwrap();
+        assert_eq!(r.rd as i32, expect);
+        assert_eq!(r.cycles, 1);
+        let r = BbsCfu::new(-3)
+            .execute(CfuOpcode::BbsMac, pack4_i8(&w), pack4_i8(&x))
+            .unwrap();
+        assert_eq!(r.rd as i32, expect);
+        assert_eq!(r.cycles, 1);
+    }
+
+    #[test]
+    fn foreign_ops_rejected() {
+        assert!(NmCfu::new(0).execute(CfuOpcode::BsrMac, 0, 0).is_err());
+        assert!(BsrCfu::new(0).execute(CfuOpcode::NmMac, 0, 0).is_err());
+        assert!(BbsCfu::new(0).execute(CfuOpcode::CfuSimdMac, 0, 0).is_err());
+    }
+}

@@ -15,11 +15,15 @@
 //! - [`ussa`] — `ussa_vcmac`, the variable-cycle sequential MAC with
 //!   zero-compare case signals and alignment muxes (Fig 7),
 //! - [`csa`] — `csa_vcmac` (variable-cycle over decoded INT7 weights) +
-//!   `csa_inc_indvar`.
+//!   `csa_inc_indvar`,
+//! - [`formats`] — the format-extension units: `nm_mac`/`nm_lookahead`
+//!   (2:4 semi-structured), `bsr_mac` (8×8 block-sparse), `bbs_mac`
+//!   (bank-balanced).
 
 pub mod baseline;
 pub mod case_logic;
 pub mod csa;
+pub mod formats;
 pub(crate) mod hostdot;
 pub mod int4;
 pub mod sssa;
@@ -62,6 +66,9 @@ pub fn build_cfu(design: DesignKind, input_offset: i32) -> Box<dyn Cfu> {
         DesignKind::Sssa => Box::new(sssa::SssaCfu::new(input_offset)),
         DesignKind::Ussa => Box::new(ussa::UssaCfu::new(input_offset)),
         DesignKind::Csa => Box::new(csa::CsaCfu::new(input_offset)),
+        DesignKind::NmSsa => Box::new(formats::NmCfu::new(input_offset)),
+        DesignKind::Bsr => Box::new(formats::BsrCfu::new(input_offset)),
+        DesignKind::Bbs => Box::new(formats::BbsCfu::new(input_offset)),
     }
 }
 
@@ -82,6 +89,12 @@ pub enum AnyCfu {
     Ussa(ussa::UssaCfu),
     /// CSA.
     Csa(csa::CsaCfu),
+    /// NM-SSA (2:4 semi-structured).
+    NmSsa(formats::NmCfu),
+    /// BSR (8×8 block-sparse).
+    Bsr(formats::BsrCfu),
+    /// BBS (bank-balanced).
+    Bbs(formats::BbsCfu),
 }
 
 impl AnyCfu {
@@ -97,6 +110,9 @@ impl AnyCfu {
             DesignKind::Sssa => AnyCfu::Sssa(sssa::SssaCfu::new(input_offset)),
             DesignKind::Ussa => AnyCfu::Ussa(ussa::UssaCfu::new(input_offset)),
             DesignKind::Csa => AnyCfu::Csa(csa::CsaCfu::new(input_offset)),
+            DesignKind::NmSsa => AnyCfu::NmSsa(formats::NmCfu::new(input_offset)),
+            DesignKind::Bsr => AnyCfu::Bsr(formats::BsrCfu::new(input_offset)),
+            DesignKind::Bbs => AnyCfu::Bbs(formats::BbsCfu::new(input_offset)),
         }
     }
 
@@ -109,6 +125,9 @@ impl AnyCfu {
             AnyCfu::Sssa(c) => c.execute(op, rs1, rs2),
             AnyCfu::Ussa(c) => c.execute(op, rs1, rs2),
             AnyCfu::Csa(c) => c.execute(op, rs1, rs2),
+            AnyCfu::NmSsa(c) => c.execute(op, rs1, rs2),
+            AnyCfu::Bsr(c) => c.execute(op, rs1, rs2),
+            AnyCfu::Bbs(c) => c.execute(op, rs1, rs2),
         }
     }
 }
@@ -185,6 +204,9 @@ mod tests {
             (DesignKind::Sssa, CfuOpcode::SssaMac, pack4_i8(&enc)),
             (DesignKind::Ussa, CfuOpcode::UssaVcMac, pack4_i8(&w)),
             (DesignKind::Csa, CfuOpcode::CsaVcMac, pack4_i8(&enc)),
+            (DesignKind::NmSsa, CfuOpcode::NmMac, pack4_i8(&w)),
+            (DesignKind::Bsr, CfuOpcode::BsrMac, pack4_i8(&w)),
+            (DesignKind::Bbs, CfuOpcode::BbsMac, pack4_i8(&w)),
         ];
         for (design, op, rs1) in cases {
             let mut cfu = build_cfu(design, off);

@@ -13,7 +13,7 @@
 use crate::cpu::CostModel;
 use crate::error::{Error, Result};
 use crate::isa::{DesignAssignment, DesignKind};
-use crate::nn::graph::Graph;
+use crate::nn::graph::{Graph, Layer};
 use crate::simulator::SimEngine;
 use crate::tensor::quant::QuantParams;
 use crate::tensor::{QTensor, Shape};
@@ -30,8 +30,36 @@ pub struct LayerCost {
     /// Weights outside the INT7 dynamic range — non-zero means the
     /// SSSA/CSA lookahead designs would clamp (lossy) on this layer.
     pub int8_weights: usize,
+    /// Non-zero weights beyond the 2:4 budget, summed over the layer's
+    /// 4-weight groups — non-zero means NM-SSA's prepare-time structure
+    /// enforcement would zero weights (lossy) on this layer.
+    pub nm_excess: usize,
     /// Element sparsity of the layer's weights.
     pub sparsity: f64,
+}
+
+/// Non-zero weights beyond an N=2 budget per M=4 group (the amount
+/// NM-SSA enforcement would zero at prepare time), counted on the same
+/// lane-major, word-aligned layout `prepare_lanes` consumes. Depthwise
+/// lanes are `kh*kw` taps zero-padded to a word multiple before
+/// packing, so their 2:4 groups restart at every lane — chunking the
+/// raw buffer would let groups straddle lane boundaries and disagree
+/// with what enforcement actually zeroes.
+fn nm_excess_of(layer: &Layer) -> usize {
+    fn group_excess(ws: &[i8]) -> usize {
+        ws.chunks(4)
+            .map(|g| g.iter().filter(|&&w| w != 0).count().saturating_sub(2))
+            .sum()
+    }
+    match layer {
+        Layer::Conv(op) if op.depthwise => {
+            op.weights.chunks(op.kh * op.kw).map(group_excess).sum()
+        }
+        Layer::Conv(op) => group_excess(&op.weights),
+        Layer::Fc(op) => group_excess(&op.weights),
+        Layer::Shortcut { conv: Some(op), .. } => group_excess(&op.weights),
+        _ => 0,
+    }
 }
 
 /// The (layer × design) cycle matrix of one pruned model, plus the
@@ -94,12 +122,15 @@ pub fn profile_graph(
     // every layer exactly.
     let input = QTensor::zeros(input_shape.clone(), QuantParams::new(1.0, 0)?);
     let weights = graph.mac_weights();
+    let mac_ops: Vec<&Layer> = graph.layers.iter().filter(|l| l.is_mac_layer()).collect();
     let mut layers: Vec<LayerCost> = weights
         .iter()
-        .map(|ws| LayerCost {
+        .zip(&mac_ops)
+        .map(|(ws, layer)| LayerCost {
             label: String::new(),
             cycles: vec![0u64; candidates.len()],
             int8_weights: ws.iter().filter(|&&w| !crate::encoding::int7::is_int7(w)).count(),
+            nm_excess: nm_excess_of(layer),
             sparsity: crate::sparsity::stats::element_sparsity(ws),
         })
         .collect();

@@ -23,16 +23,32 @@ pub enum DesignKind {
     Ussa,
     /// Combined Sparsity Accelerator (Section III-D).
     Csa,
+    /// N:M semi-structured accelerator: at most 2 non-zeros per
+    /// 4-weight group (enforced at prepare time), with a fixed
+    /// per-group lookahead probe that skips all-zero groups.
+    NmSsa,
+    /// 8×8 block-sparse (BSR) accelerator: an occupancy bitmap over
+    /// 8-lane × 8-weight tiles lets the walk skip empty tiles
+    /// wholesale (ACCEL-v1-style block skipping).
+    Bsr,
+    /// Bank-balanced sparsity accelerator: non-zeros are spread across
+    /// K=4 word banks so the busiest bank bounds the lane's cycles
+    /// (MCBBS-style load balancing).
+    Bbs,
 }
 
 impl DesignKind {
-    /// All designs, in presentation order.
-    pub const ALL: [DesignKind; 5] = [
+    /// All designs, in presentation order (the paper's four families
+    /// first, then the format extensions).
+    pub const ALL: [DesignKind; 8] = [
         DesignKind::BaselineSimd,
         DesignKind::BaselineSequential,
         DesignKind::Sssa,
         DesignKind::Ussa,
         DesignKind::Csa,
+        DesignKind::NmSsa,
+        DesignKind::Bsr,
+        DesignKind::Bbs,
     ];
 
     /// Human-readable name as used in the paper.
@@ -43,6 +59,9 @@ impl DesignKind {
             DesignKind::Sssa => "SSSA",
             DesignKind::Ussa => "USSA",
             DesignKind::Csa => "CSA",
+            DesignKind::NmSsa => "NM-SSA",
+            DesignKind::Bsr => "BSR",
+            DesignKind::Bbs => "BBS",
         }
     }
 
@@ -55,6 +74,9 @@ impl DesignKind {
             DesignKind::Sssa => 's',
             DesignKind::Ussa => 'u',
             DesignKind::Csa => 'c',
+            DesignKind::NmSsa => 'n',
+            DesignKind::Bsr => 'r',
+            DesignKind::Bbs => 'k',
         }
     }
 
@@ -73,6 +95,15 @@ impl DesignKind {
         matches!(self, DesignKind::Ussa | DesignKind::Csa)
     }
 
+    /// Does preparing weights for this design *modify* them (beyond a
+    /// lossless re-encoding)? True only for [`DesignKind::NmSsa`],
+    /// which zeroes excess non-zeros to enforce the 2:4 group
+    /// constraint — its outputs are bit-exact against its own prepared
+    /// weights, but not against the original dense reference.
+    pub fn enforces_structure(&self) -> bool {
+        matches!(self, DesignKind::NmSsa)
+    }
+
     /// `funct3` value assigned to the design family.
     pub fn funct3(&self) -> u8 {
         match self {
@@ -81,6 +112,9 @@ impl DesignKind {
             DesignKind::Sssa => 2,
             DesignKind::Ussa => 3,
             DesignKind::Csa => 4,
+            DesignKind::NmSsa => 5,
+            DesignKind::Bsr => 6,
+            DesignKind::Bbs => 7,
         }
     }
 
@@ -92,6 +126,9 @@ impl DesignKind {
             "sssa" => Some(DesignKind::Sssa),
             "ussa" => Some(DesignKind::Ussa),
             "csa" => Some(DesignKind::Csa),
+            "nm-ssa" | "nmssa" | "nm" => Some(DesignKind::NmSsa),
+            "bsr" | "block" => Some(DesignKind::Bsr),
+            "bbs" | "bank" => Some(DesignKind::Bbs),
             _ => None,
         }
     }
@@ -121,6 +158,15 @@ pub enum CfuOpcode {
     CsaVcMac,
     /// `csa_inc_indvar` — same behaviour as `sssa_inc_indvar`.
     CsaIncIndvar,
+    /// `nm_mac` — 4×(INT8×INT8) MAC over a 2:4-enforced weight group.
+    NmMac,
+    /// `nm_lookahead` — fixed-cycle group probe: `rd = 1` iff the
+    /// weight group has any non-zero (the walk skips all-zero groups).
+    NmLookahead,
+    /// `bsr_mac` — 4×(INT8×INT8) MAC inside an occupied 8×8 block.
+    BsrMac,
+    /// `bbs_mac` — 4×(INT8×INT8) MAC on a bank-resident weight word.
+    BbsMac,
 }
 
 impl CfuOpcode {
@@ -134,6 +180,10 @@ impl CfuOpcode {
             CfuOpcode::UssaVcMac => "ussa_vcmac",
             CfuOpcode::CsaVcMac => "csa_vcmac",
             CfuOpcode::CsaIncIndvar => "csa_inc_indvar",
+            CfuOpcode::NmMac => "nm_mac",
+            CfuOpcode::NmLookahead => "nm_lookahead",
+            CfuOpcode::BsrMac => "bsr_mac",
+            CfuOpcode::BbsMac => "bbs_mac",
         }
     }
 
@@ -145,6 +195,9 @@ impl CfuOpcode {
             CfuOpcode::SssaMac | CfuOpcode::SssaIncIndvar => DesignKind::Sssa,
             CfuOpcode::UssaVcMac => DesignKind::Ussa,
             CfuOpcode::CsaVcMac | CfuOpcode::CsaIncIndvar => DesignKind::Csa,
+            CfuOpcode::NmMac | CfuOpcode::NmLookahead => DesignKind::NmSsa,
+            CfuOpcode::BsrMac => DesignKind::Bsr,
+            CfuOpcode::BbsMac => DesignKind::Bbs,
         }
     }
 
@@ -156,8 +209,13 @@ impl CfuOpcode {
             | CfuOpcode::CfuSeqMac
             | CfuOpcode::SssaMac
             | CfuOpcode::UssaVcMac
-            | CfuOpcode::CsaVcMac => 0b0000000,
-            CfuOpcode::SssaIncIndvar | CfuOpcode::CsaIncIndvar => 0b0000001,
+            | CfuOpcode::CsaVcMac
+            | CfuOpcode::NmMac
+            | CfuOpcode::BsrMac
+            | CfuOpcode::BbsMac => 0b0000000,
+            CfuOpcode::SssaIncIndvar | CfuOpcode::CsaIncIndvar | CfuOpcode::NmLookahead => {
+                0b0000001
+            }
         }
     }
 
@@ -181,6 +239,10 @@ impl CfuOpcode {
             (3, false) => Some(CfuOpcode::UssaVcMac),
             (4, false) => Some(CfuOpcode::CsaVcMac),
             (4, true) => Some(CfuOpcode::CsaIncIndvar),
+            (5, false) => Some(CfuOpcode::NmMac),
+            (5, true) => Some(CfuOpcode::NmLookahead),
+            (6, false) => Some(CfuOpcode::BsrMac),
+            (7, false) => Some(CfuOpcode::BbsMac),
             _ => None,
         }
     }
@@ -190,7 +252,7 @@ impl CfuOpcode {
 mod tests {
     use super::*;
 
-    const ALL_OPS: [CfuOpcode; 7] = [
+    const ALL_OPS: [CfuOpcode; 11] = [
         CfuOpcode::CfuSimdMac,
         CfuOpcode::CfuSeqMac,
         CfuOpcode::SssaMac,
@@ -198,6 +260,10 @@ mod tests {
         CfuOpcode::UssaVcMac,
         CfuOpcode::CsaVcMac,
         CfuOpcode::CsaIncIndvar,
+        CfuOpcode::NmMac,
+        CfuOpcode::NmLookahead,
+        CfuOpcode::BsrMac,
+        CfuOpcode::BbsMac,
     ];
 
     #[test]
@@ -214,6 +280,8 @@ mod tests {
         assert_eq!(CfuOpcode::SssaMac.funct7() & 1, 0);
         assert_eq!(CfuOpcode::CsaIncIndvar.funct7() & 1, 1);
         assert_eq!(CfuOpcode::CsaVcMac.funct7() & 1, 0);
+        assert_eq!(CfuOpcode::NmLookahead.funct7() & 1, 1);
+        assert_eq!(CfuOpcode::NmMac.funct7() & 1, 0);
     }
 
     #[test]
@@ -225,6 +293,15 @@ mod tests {
         assert!(DesignKind::Csa.variable_cycle_mac());
         assert!(!DesignKind::Sssa.variable_cycle_mac());
         assert!(!DesignKind::BaselineSimd.variable_cycle_mac());
+        // The format extensions consume plain INT8 words, not the
+        // lookahead encoding, and use fixed-cycle MACs.
+        for d in [DesignKind::NmSsa, DesignKind::Bsr, DesignKind::Bbs] {
+            assert!(!d.uses_lookahead_encoding(), "{d}");
+            assert!(!d.variable_cycle_mac(), "{d}");
+        }
+        assert!(DesignKind::NmSsa.enforces_structure());
+        assert!(!DesignKind::Bsr.enforces_structure());
+        assert!(!DesignKind::Bbs.enforces_structure());
     }
 
     #[test]
@@ -233,6 +310,19 @@ mod tests {
             assert_eq!(DesignKind::parse(d.name()), Some(d));
         }
         assert_eq!(DesignKind::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn design_code_roundtrip_and_unique() {
+        // `hetero:` labels and cache keys serialize designs by their
+        // one-letter code; a collision or a non-round-tripping letter
+        // would silently corrupt both.
+        let mut seen = std::collections::HashSet::new();
+        for d in DesignKind::ALL {
+            assert!(seen.insert(d.code()), "code letter collision for {d}");
+            assert_eq!(DesignKind::from_code(d.code()), Some(d), "{d}");
+        }
+        assert_eq!(DesignKind::from_code('z'), None);
     }
 
     #[test]

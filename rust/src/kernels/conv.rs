@@ -682,9 +682,9 @@ impl PreparedConv {
                                     // lane setup (base pointer arithmetic)
                                     alu += 2;
                                     acc = run_lane(
-                                        self.design,
+                                        &self.lanes,
+                                        lane_idx,
                                         &mut cfu,
-                                        self.lanes.lane_words(lane_idx),
                                         |j| {
                                             let p = base + j * 4;
                                             (pack4_le(&x[p..p + 4]), 1, 0)
@@ -724,9 +724,9 @@ impl PreparedConv {
     ) -> Result<i32> {
         let taps = self.op.kh * self.op.kw;
         run_lane(
-            self.design,
+            &self.lanes,
+            oc,
             cfu,
-            self.lanes.lane_words(oc),
             |j| (dw_gather_word(x, tap_base, taps, oc, input_zp, j), 4, 3),
             acc,
             counter,

@@ -208,9 +208,9 @@ impl PreparedFc {
                         let mut acc = op.bias[o];
                         counter.alu(2); // lane base setup
                         acc = run_lane(
-                            self.design,
+                            &self.lanes,
+                            o,
                             &mut cfu,
-                            self.lanes.lane_words(o),
                             |j| {
                                 let p = j * 4;
                                 (pack4_le(&xrow[p..p + 4]), 1, 0)

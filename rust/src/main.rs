@@ -20,7 +20,7 @@ use sparse_riscv::isa::{DesignAssignment, DesignKind};
 use sparse_riscv::kernels::{ExecMode, HostKernel};
 use sparse_riscv::metrics::{diff as metrics_diff, BaselineStore, Tolerances};
 use sparse_riscv::models::builder::{
-    apply_sparsity_plan, random_input, widen_weights_to_int8, ModelConfig,
+    apply_prune_plan, random_input, widen_weights_to_int8, LayerPrune, ModelConfig,
 };
 use sparse_riscv::models::zoo::{build_model, model_names};
 use sparse_riscv::resources::fpga::{estimate_cfu, paper_increment, BASELINE_SOC};
@@ -179,11 +179,18 @@ fn cli() -> Command {
         .subcommand(
             Command::new("explore", "per-layer co-design: Pareto frontier + argmin assignment")
                 .arg(ArgSpec::opt("model", "dscnn", "model (vgg16|resnet56|mobilenetv2|dscnn)"))
-                .arg(ArgSpec::opt("designs", "simd,seq,sssa,ussa,csa", "candidate designs"))
+                .arg(ArgSpec::opt(
+                    "designs",
+                    "simd,seq,sssa,ussa,csa,nm,bsr,bbs",
+                    "candidate designs",
+                ))
                 .arg(ArgSpec::opt(
                     "sparsity",
                     "",
-                    "per-layer sparsity plan 'x_us:x_ss,…' (cycled over MAC layers; overrides --x-us/--x-ss)",
+                    "per-layer prune plan: 'x_us:x_ss' (combined), 'nm[N:M]' (semi-structured, \
+                     default 2:4), 'bankT[:K]' (bank-balanced to sparsity T over K banks, \
+                     default 4), comma-separated and cycled over MAC layers; overrides \
+                     --x-us/--x-ss",
                 ))
                 .arg(ArgSpec::opt("x-us", "0.5", "uniform unstructured sparsity"))
                 .arg(ArgSpec::opt("x-ss", "0.3", "uniform 4:4 block sparsity"))
@@ -606,31 +613,63 @@ fn cmd_loadgen(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     Ok(())
 }
 
-/// Parse a per-layer sparsity plan: `"0.5:0.4,0.3:0.0"` → one
-/// `(x_us, x_ss)` entry per comma-separated token. Fractions must lie
-/// in `[0, 1]` (the pruning library asserts the same range).
-fn parse_sparsity_plan(s: &str) -> Result<Vec<(f64, f64)>, String> {
-    let in_range = |name: &str, v: f64, tok: &str| -> Result<f64, String> {
+/// Parse one `--sparsity` token into a prune recipe:
+/// `x_us:x_ss` (combined), `nm` / `nmN:M` (semi-structured, default
+/// 2:4), `bankT` / `bankT:K` (bank-balanced to element sparsity `T`
+/// over `K` banks, default 4).
+fn parse_prune_token(tok: &str) -> Result<LayerPrune, String> {
+    let in_range = |name: &str, v: f64| -> Result<f64, String> {
         if (0.0..=1.0).contains(&v) {
             Ok(v)
         } else {
             Err(format!("{name} {v} in '{tok}' out of range [0, 1]"))
         }
     };
-    s.split(',')
-        .map(str::trim)
-        .filter(|t| !t.is_empty())
-        .map(|tok| {
-            let (us, ss) = tok
-                .split_once(':')
-                .ok_or_else(|| format!("bad sparsity entry '{tok}' (want x_us:x_ss)"))?;
-            let us: f64 =
-                us.trim().parse().map_err(|e| format!("bad x_us in '{tok}': {e}"))?;
-            let ss: f64 =
-                ss.trim().parse().map_err(|e| format!("bad x_ss in '{tok}': {e}"))?;
-            Ok((in_range("x_us", us, tok)?, in_range("x_ss", ss, tok)?))
-        })
-        .collect()
+    if let Some(rest) = tok.strip_prefix("nm") {
+        if rest.is_empty() {
+            return Ok(LayerPrune::Nm { n: 2, m: 4 });
+        }
+        let (n, m) = rest
+            .split_once(':')
+            .ok_or_else(|| format!("bad N:M entry '{tok}' (want nmN:M, e.g. nm2:4)"))?;
+        let n: usize = n.trim().parse().map_err(|e| format!("bad N in '{tok}': {e}"))?;
+        let m: usize = m.trim().parse().map_err(|e| format!("bad M in '{tok}': {e}"))?;
+        if m == 0 || n > m {
+            return Err(format!("bad N:M entry '{tok}' (need 0 < M and N <= M)"));
+        }
+        return Ok(LayerPrune::Nm { n, m });
+    }
+    if let Some(rest) = tok.strip_prefix("bank") {
+        let (t, k) = match rest.split_once(':') {
+            Some((t, k)) => (t, Some(k)),
+            None => (rest, None),
+        };
+        let target: f64 =
+            t.trim().parse().map_err(|e| format!("bad bank target in '{tok}': {e}"))?;
+        let target = in_range("target", target)?;
+        let banks: usize = match k {
+            Some(k) => k.trim().parse().map_err(|e| format!("bad bank count in '{tok}': {e}"))?,
+            None => 4,
+        };
+        if banks == 0 {
+            return Err(format!("bad bank count in '{tok}' (need >= 1)"));
+        }
+        return Ok(LayerPrune::BankBalanced { target, banks });
+    }
+    let (us, ss) = tok.split_once(':').ok_or_else(|| {
+        format!("bad sparsity entry '{tok}' (want x_us:x_ss, nm[N:M], or bankT[:K])")
+    })?;
+    let us: f64 = us.trim().parse().map_err(|e| format!("bad x_us in '{tok}': {e}"))?;
+    let ss: f64 = ss.trim().parse().map_err(|e| format!("bad x_ss in '{tok}': {e}"))?;
+    Ok(LayerPrune::Combined { x_us: in_range("x_us", us)?, x_ss: in_range("x_ss", ss)? })
+}
+
+/// Parse a per-layer prune plan: `"0.5:0.4,nm,bank0.5:4"` → one
+/// [`LayerPrune`] entry per comma-separated token (cycled over MAC
+/// layers at apply time). Fractions must lie in `[0, 1]` (the pruning
+/// library asserts the same range).
+fn parse_prune_plan(s: &str) -> Result<Vec<LayerPrune>, String> {
+    s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(parse_prune_token).collect()
 }
 
 fn cmd_explore(args: &ParsedArgs) -> sparse_riscv::Result<()> {
@@ -640,11 +679,11 @@ fn cmd_explore(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     // Pure string parsing first, so malformed flags error before any
     // model is built or pruned.
     let plan_spec = args.get("sparsity")?;
-    let plan: Vec<(f64, f64)> = if plan_spec.is_empty() {
-        parse_sparsity_plan(&format!("{}:{}", args.get("x-us")?, args.get("x-ss")?))
+    let plan: Vec<LayerPrune> = if plan_spec.is_empty() {
+        parse_prune_plan(&format!("{}:{}", args.get("x-us")?, args.get("x-ss")?))
             .map_err(sparse_riscv::Error::Cli)?
     } else {
-        parse_sparsity_plan(plan_spec).map_err(sparse_riscv::Error::Cli)?
+        parse_prune_plan(plan_spec).map_err(sparse_riscv::Error::Cli)?
     };
     if plan.is_empty() {
         return Err(sparse_riscv::Error::Cli("--sparsity parsed to an empty plan".into()));
@@ -691,7 +730,7 @@ fn cmd_explore(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     let cfg = ModelConfig { scale, ..Default::default() };
     let mut info = build_model(&model, &cfg)?;
     let mac_layers = info.graph.mac_layers();
-    apply_sparsity_plan(&mut info.graph, &plan);
+    apply_prune_plan(&mut info.graph, &plan)?;
     if let Some(&bad) = int8_indices.iter().find(|&&i| i >= mac_layers) {
         return Err(sparse_riscv::Error::Cli(format!(
             "--int8-layers index {bad} out of range ({model} has {mac_layers} MAC layers)"
@@ -722,7 +761,7 @@ fn cmd_explore(args: &ParsedArgs) -> sparse_riscv::Result<()> {
         // BENCH_e2e.json must never drop the other records in it — and
         // the id carries a `-cli` marker so an ad-hoc configuration can
         // never shadow the canonical `explore/<model>` sweep record.
-        let mut rec = explore_record(&model, scale, plan[0], &result);
+        let mut rec = explore_record(&model, scale, plan[0].context_ratios(), &result);
         rec.id = format!("explore-cli/{model}");
         let records = vec![rec];
         BaselineStore::upsert_file(

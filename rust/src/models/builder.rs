@@ -1,6 +1,6 @@
 //! Shared model-construction helpers.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::nn::conv2d::{Conv2dOp, Padding};
 use crate::nn::fully_connected::FullyConnectedOp;
 use crate::nn::graph::{Graph, Layer};
@@ -246,10 +246,83 @@ impl GraphBuilder {
     }
 }
 
+/// One entry of a per-layer prune plan: how to sparsify a MAC layer's
+/// weights at model-build time (the `--sparsity` grammar of the CLI).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayerPrune {
+    /// Combined magnitude pruning (Figure 10): `x_ss` of 4:4 blocks
+    /// zeroed, then `x_us` unstructured zeros within survivors.
+    Combined {
+        /// Unstructured sparsity within surviving blocks.
+        x_us: f64,
+        /// 4:4 block sparsity.
+        x_ss: f64,
+    },
+    /// N:M semi-structured enforcement: keep the `n` largest-magnitude
+    /// weights of every `m` consecutive weights.
+    Nm {
+        /// Non-zeros kept per group.
+        n: usize,
+        /// Group width; must divide the layer's lane length.
+        m: usize,
+    },
+    /// Bank-balanced pruning: reach `target` element sparsity while
+    /// keeping the kept-weight count balanced across `banks` word banks.
+    BankBalanced {
+        /// Target element sparsity in `[0, 1]`.
+        target: f64,
+        /// Bank count (a word's bank is its index modulo `banks`).
+        banks: usize,
+    },
+}
+
+impl LayerPrune {
+    /// Representative `(x_us, x_ss)` ratios for metric/report contexts:
+    /// the element sparsity the recipe aims at, with block sparsity 0
+    /// for the structured formats.
+    pub fn context_ratios(&self) -> (f64, f64) {
+        match *self {
+            LayerPrune::Combined { x_us, x_ss } => (x_us, x_ss),
+            LayerPrune::Nm { n, m } => (1.0 - n as f64 / m as f64, 0.0),
+            LayerPrune::BankBalanced { target, .. } => (target, 0.0),
+        }
+    }
+}
+
+/// Apply one prune recipe to a flat weight buffer of `lane`-length
+/// rows, validating structured-recipe geometry against the layer.
+fn prune_ws(ws: &mut [i8], lane: usize, label: &str, prune: LayerPrune) -> Result<()> {
+    match prune {
+        LayerPrune::Combined { x_us, x_ss } => {
+            prune_combined(ws, lane, x_ss, x_us);
+            Ok(())
+        }
+        LayerPrune::Nm { n, m } => {
+            if m == 0 || n > m || lane % m != 0 {
+                return Err(Error::Cli(format!(
+                    "nm{n}:{m} does not fit layer '{label}' (lane length {lane})"
+                )));
+            }
+            crate::sparsity::prune_nm(ws, lane, n, m);
+            Ok(())
+        }
+        LayerPrune::BankBalanced { target, banks } => {
+            if banks == 0 || !(0.0..=1.0).contains(&target) {
+                return Err(Error::Cli(format!(
+                    "bank{target}:{banks} is not a valid bank-balanced recipe for layer \
+                     '{label}' (need banks >= 1 and target in [0, 1])"
+                )));
+            }
+            crate::sparsity::prune_bank_balanced(ws, lane, target, banks);
+            Ok(())
+        }
+    }
+}
+
 /// Prune one layer's weights in place if it is a MAC layer; returns
-/// whether it was one. Shared by the uniform and per-layer sparsity
-/// entry points.
-fn prune_mac_layer(layer: &mut Layer, x_us: f64, x_ss: f64) -> bool {
+/// whether it was one. Shared by the uniform, per-layer and
+/// format-aware sparsity entry points.
+fn prune_mac_layer_with(layer: &mut Layer, prune: LayerPrune) -> Result<bool> {
     match layer {
         Layer::Conv(op) => {
             let lane = op.lane_len();
@@ -262,26 +335,31 @@ fn prune_mac_layer(layer: &mut Layer, x_us: f64, x_ss: f64) -> bool {
                 for (i, chunk) in op.weights.chunks(lane).enumerate() {
                     padded[i * padded_lane..i * padded_lane + lane].copy_from_slice(chunk);
                 }
-                prune_combined(&mut padded, padded_lane, x_ss, x_us);
+                prune_ws(&mut padded, padded_lane, &op.name, prune)?;
                 for (i, chunk) in op.weights.chunks_mut(lane).enumerate() {
                     chunk.copy_from_slice(&padded[i * padded_lane..i * padded_lane + lane]);
                 }
             } else {
-                prune_combined(&mut op.weights, lane, x_ss, x_us);
+                prune_ws(&mut op.weights, lane, &op.name, prune)?;
             }
-            true
+            Ok(true)
         }
         Layer::Fc(op) => {
-            prune_combined(&mut op.weights, op.in_n, x_ss, x_us);
-            true
+            prune_ws(&mut op.weights, op.in_n, &op.name, prune)?;
+            Ok(true)
         }
         Layer::Shortcut { conv: Some(op), .. } => {
             let lane = op.lane_len();
-            prune_combined(&mut op.weights, lane, x_ss, x_us);
-            true
+            prune_ws(&mut op.weights, lane, &op.name, prune)?;
+            Ok(true)
         }
-        _ => false,
+        _ => Ok(false),
     }
+}
+
+fn prune_mac_layer(layer: &mut Layer, x_us: f64, x_ss: f64) -> bool {
+    prune_mac_layer_with(layer, LayerPrune::Combined { x_us, x_ss })
+        .expect("combined pruning is infallible")
 }
 
 /// Apply combined sparsity to every MAC layer of a graph in place
@@ -314,6 +392,25 @@ pub fn apply_sparsity_plan(graph: &mut Graph, plan: &[(f64, f64)]) {
             mac_idx += 1;
         }
     }
+}
+
+/// Apply a *per-layer* prune plan mixing combined, N:M and
+/// bank-balanced recipes — the format-aware superset of
+/// [`apply_sparsity_plan`], cycled over MAC layers the same way. Errors
+/// when a structured recipe does not fit a layer's lane geometry (e.g.
+/// an `m` that does not divide the lane length). A no-op on an empty
+/// plan.
+pub fn apply_prune_plan(graph: &mut Graph, plan: &[LayerPrune]) -> Result<()> {
+    if plan.is_empty() {
+        return Ok(());
+    }
+    let mut mac_idx = 0usize;
+    for layer in &mut graph.layers {
+        if prune_mac_layer_with(layer, plan[mac_idx % plan.len()])? {
+            mac_idx += 1;
+        }
+    }
+    Ok(())
 }
 
 /// Push the listed MAC layers' non-zero weights outside the INT7
@@ -448,6 +545,57 @@ mod tests {
             }
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn prune_plan_applies_formats_and_rejects_bad_geometry() {
+        let build = || {
+            let cfg = ModelConfig::default();
+            let mut b = GraphBuilder::new(&cfg);
+            b.conv("c1", 16, 16, 3, 1, Padding::Same, true).unwrap();
+            b.fc("fc", 16, 64, false).unwrap();
+            b.finish("t", 16)
+        };
+        // N:M on the conv, bank-balanced on the fc (plan cycled in MAC
+        // order).
+        let mut g = build();
+        apply_prune_plan(
+            &mut g,
+            &[LayerPrune::Nm { n: 1, m: 4 }, LayerPrune::BankBalanced { target: 0.5, banks: 4 }],
+        )
+        .unwrap();
+        for layer in &g.layers {
+            match layer {
+                Layer::Conv(op) => {
+                    for group in op.weights.chunks(4) {
+                        assert!(group.iter().filter(|&&w| w != 0).count() <= 1);
+                    }
+                }
+                Layer::Fc(op) => {
+                    for lane in op.weights.chunks(op.in_n) {
+                        let mut per_bank = [0usize; 4];
+                        for (i, &w) in lane.iter().enumerate() {
+                            if w != 0 {
+                                per_bank[(i / 4) % 4] += 1;
+                            }
+                        }
+                        let (min, max) =
+                            (per_bank.iter().min().unwrap(), per_bank.iter().max().unwrap());
+                        assert!(max - min <= 1, "banks {per_bank:?}");
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Context ratios summarize each recipe as an element sparsity.
+        assert_eq!(LayerPrune::Nm { n: 1, m: 4 }.context_ratios(), (0.75, 0.0));
+        assert_eq!(
+            LayerPrune::BankBalanced { target: 0.5, banks: 4 }.context_ratios(),
+            (0.5, 0.0)
+        );
+        // m = 5 cannot divide this shape's 144-weight conv lanes.
+        let mut g = build();
+        assert!(apply_prune_plan(&mut g, &[LayerPrune::Nm { n: 1, m: 5 }]).is_err());
     }
 
     #[test]

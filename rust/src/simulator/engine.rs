@@ -634,10 +634,12 @@ mod tests {
 
     #[test]
     fn outputs_identical_across_int7_designs() {
-        // All designs compute the same network when weights are INT7.
+        // All designs compute the same network when weights are INT7 —
+        // except NM-SSA, whose prepare-time 2:4 enforcement legitimately
+        // zeroes excess group members and so changes the function.
         let (graph, input) = dscnn_setup(0.5, 0.2);
         let mut outputs = Vec::new();
-        for design in DesignKind::ALL {
+        for design in DesignKind::ALL.into_iter().filter(|d| !d.enforces_structure()) {
             let engine = SimEngine::new(design);
             let prepared = engine.prepare(&graph).unwrap();
             assert_eq!(prepared.clamped_weights, 0, "builder weights are INT7 already");

@@ -1,12 +1,15 @@
-//! Pruning library: unstructured, 4:4 semi-structured (block), and
-//! combined sparsification of quantized weights, plus sparsity
-//! statistics and synthetic sparse-weight generators for the benchmark
-//! sweeps (Figures 8–10).
+//! Pruning library: unstructured, 4:4 semi-structured (block), N:M
+//! semi-structured, bank-balanced, and combined sparsification of
+//! quantized weights, plus sparsity statistics and synthetic
+//! sparse-weight generators for the benchmark sweeps (Figures 8–10).
 
 pub mod generator;
 pub mod prune;
 pub mod stats;
 
 pub use generator::{gen_block_sparse, gen_combined_sparse, gen_unstructured_sparse};
-pub use prune::{prune_blocks_magnitude, prune_unstructured_magnitude, PruneReport};
+pub use prune::{
+    prune_bank_balanced, prune_blocks_magnitude, prune_nm, prune_unstructured_magnitude,
+    PruneReport,
+};
 pub use stats::{block_sparsity, element_sparsity, SparsityProfile};

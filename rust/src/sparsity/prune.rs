@@ -1,11 +1,14 @@
-//! Magnitude pruning: unstructured (arbitrary zeros) and 4:4
-//! semi-structured (whole-block zeros), matching the sparsity structures
-//! of Figure 1(b)/(c).
+//! Magnitude pruning: unstructured (arbitrary zeros), 4:4
+//! semi-structured (whole-block zeros), N:M semi-structured (≤ N
+//! non-zeros per M-weight group), and bank-balanced (non-zeros spread
+//! evenly across K word banks), matching the sparsity structures of
+//! Figure 1(b)/(c) plus the format extensions.
 //!
 //! The paper applies iterative explainable-AI-ranked pruning offline; the
 //! accelerator only requires that the *resulting pattern* conforms
-//! (arbitrary zeros for USSA, all-zero 4-blocks for SSSA). Magnitude
-//! ranking produces the same patterns and is the standard proxy.
+//! (arbitrary zeros for USSA, all-zero 4-blocks for SSSA, ≤ N per group
+//! for NM-SSA, balanced banks for BBS). Magnitude ranking produces the
+//! same patterns and is the standard proxy.
 
 use super::stats::SparsityProfile;
 
@@ -90,6 +93,79 @@ pub fn prune_combined(
     prune_blocks_magnitude(ws, lane_len, block_target);
     let elem_target = block_target + intra_target * (1.0 - block_target);
     prune_unstructured_magnitude(ws, lane_len, elem_target)
+}
+
+/// N:M semi-structured magnitude pruning: in every group of `m`
+/// consecutive weights, keep the `n` largest-|w| weights (ties resolved
+/// toward the lowest index) and zero the rest. Deterministic. Groups
+/// never straddle lanes because `lane_len % m == 0` is required.
+///
+/// This is the prepare-time contract of [`crate::isa::DesignKind::NmSsa`]:
+/// a layer pruned with `prune_nm(_, _, 2, 4)` runs on NM-SSA without any
+/// further weight modification.
+pub fn prune_nm(ws: &mut [i8], lane_len: usize, n: usize, m: usize) -> PruneReport {
+    assert!(m > 0 && n <= m, "need 0 <= n <= m, m > 0");
+    assert!(lane_len > 0 && lane_len % m == 0);
+    assert_eq!(ws.len() % lane_len, 0);
+    let mut zeroed = 0usize;
+    for group in ws.chunks_mut(m) {
+        let mut idx: Vec<usize> = (0..m).collect();
+        idx.sort_by_key(|&i| (std::cmp::Reverse((group[i] as i32).abs()), i));
+        for &i in idx.iter().skip(n) {
+            if group[i] != 0 {
+                group[i] = 0;
+                zeroed += 1;
+            }
+        }
+    }
+    PruneReport { zeroed, profile: SparsityProfile::measure(ws, lane_len) }
+}
+
+/// Bank-balanced magnitude pruning (MCBBS-style): per lane, the kept
+/// non-zeros are distributed across `k` banks so the per-bank kept
+/// counts differ by at most one, with each bank keeping its
+/// largest-|w| members. A weight's bank is that of its containing
+/// 4-weight word: `bank = (index_in_lane / 4) % k` — the same banking
+/// the BBS walk charges its balanced-lane cycle bound against.
+///
+/// The overall element-sparsity target is `target` per lane (rounded to
+/// whole elements, split into per-bank quotas of `⌊keep/k⌋` or
+/// `⌈keep/k⌉`, the larger quotas going to the lowest bank indices).
+/// A bank holding fewer non-zeros than its quota keeps them all, so
+/// the max−min ≤ 1 balance invariant is guaranteed whenever every bank
+/// has at least its quota available (always true when pruning dense
+/// weights, the intended use).
+pub fn prune_bank_balanced(ws: &mut [i8], lane_len: usize, target: f64, k: usize) -> PruneReport {
+    assert!((0.0..=1.0).contains(&target), "target must be in [0,1]");
+    assert!(k > 0, "need at least one bank");
+    assert!(lane_len > 0 && lane_len % 4 == 0);
+    assert_eq!(ws.len() % lane_len, 0);
+    let want_zeros = (target * lane_len as f64).round() as usize;
+    let keep_total = lane_len - want_zeros;
+    let mut zeroed = 0usize;
+    for lane in ws.chunks_mut(lane_len) {
+        // Per-bank non-zero indices, largest |w| first (ties → lowest
+        // index), so truncating to the quota keeps the heaviest members.
+        let mut banks: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (i, &w) in lane.iter().enumerate() {
+            if w != 0 {
+                banks[(i / 4) % k].push(i);
+            }
+        }
+        for bank in &mut banks {
+            bank.sort_by_key(|&i| (std::cmp::Reverse((lane[i] as i32).abs()), i));
+        }
+        let base = keep_total / k;
+        let rem = keep_total % k;
+        for (b, bank) in banks.iter().enumerate() {
+            let quota = base + usize::from(b < rem);
+            for &i in bank.iter().skip(quota) {
+                lane[i] = 0;
+                zeroed += 1;
+            }
+        }
+    }
+    PruneReport { zeroed, profile: SparsityProfile::measure(ws, lane_len) }
 }
 
 #[cfg(test)]
@@ -178,5 +254,54 @@ mod tests {
         let rep = prune_unstructured_magnitude(&mut ws, 64, 1.0);
         assert!(ws.iter().all(|&w| w == 0));
         assert_eq!(rep.profile.element, 1.0);
+    }
+
+    #[test]
+    fn nm_keeps_largest_two_per_group() {
+        let mut ws = vec![1i8, -50, 2, 60, -1, 40, 3, -30];
+        let rep = prune_nm(&mut ws, 8, 2, 4);
+        assert_eq!(ws, vec![0, -50, 0, 60, 0, 40, 0, -30]);
+        assert_eq!(rep.zeroed, 4);
+    }
+
+    #[test]
+    fn nm_is_idempotent_and_tie_breaks_to_lowest_index() {
+        // Equal magnitudes: the two lowest indices survive.
+        let mut ws = vec![5i8, -5, 5, -5];
+        prune_nm(&mut ws, 4, 2, 4);
+        assert_eq!(ws, vec![5, -5, 0, 0]);
+        let before = ws.clone();
+        let rep = prune_nm(&mut ws, 4, 2, 4);
+        assert_eq!(ws, before);
+        assert_eq!(rep.zeroed, 0);
+    }
+
+    #[test]
+    fn bank_balanced_hits_target_with_balanced_banks() {
+        let lane_len = 64;
+        let k = 4;
+        let mut ws = random_weights(1024, 8);
+        let rep = prune_bank_balanced(&mut ws, lane_len, 0.5, k);
+        assert!((rep.profile.element - 0.5).abs() < 0.01, "got {}", rep.profile.element);
+        for lane in ws.chunks(lane_len) {
+            let mut counts = vec![0usize; k];
+            for (i, &w) in lane.iter().enumerate() {
+                if w != 0 {
+                    counts[(i / 4) % k] += 1;
+                }
+            }
+            let max = *counts.iter().max().unwrap();
+            let min = *counts.iter().min().unwrap();
+            assert!(max - min <= 1, "unbalanced banks: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn bank_balanced_target_zero_keeps_dense_lanes() {
+        let mut ws = random_weights(256, 9);
+        let orig = ws.clone();
+        let rep = prune_bank_balanced(&mut ws, 32, 0.0, 4);
+        assert_eq!(ws, orig);
+        assert_eq!(rep.zeroed, 0);
     }
 }

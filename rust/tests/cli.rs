@@ -216,6 +216,28 @@ fn explore_rejects_bad_sparsity_and_layer_indices() {
 }
 
 #[test]
+fn explore_accepts_format_sparsity_tokens() {
+    // `nm` (2:4 default) on even MAC layers, bank-balanced on odd ones:
+    // the run succeeds end to end and the cost matrix renders the
+    // format-design columns.
+    let (ok, stdout, stderr) = run(&[
+        "explore", "--model", "dscnn", "--scale", "0.07", "--sparsity", "nm,bank0.5:4",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("per-layer cycles"), "{stdout}");
+    assert!(stdout.contains("NM-SSA"), "{stdout}");
+    assert!(stdout.contains("BSR"), "{stdout}");
+    assert!(stdout.contains("BBS"), "{stdout}");
+    // Malformed format tokens fail cleanly.
+    let (ok, _, stderr) = run(&["explore", "--model", "dscnn", "--sparsity", "nm5:4"]);
+    assert!(!ok);
+    assert!(stderr.contains("nm5:4"), "{stderr}");
+    let (ok, _, stderr) = run(&["explore", "--model", "dscnn", "--sparsity", "bank2.0"]);
+    assert!(!ok);
+    assert!(stderr.contains("out of range"), "{stderr}");
+}
+
+#[test]
 fn explore_budget_restricts_designs() {
     // A zero-DSP budget leaves only the SIMD baseline (every CFU adds
     // at least one DSP slice).

@@ -1,9 +1,10 @@
 //! Differential tests pinning the CFU designs to the reference MAC:
-//! random INT8 operand streams through `cfu::{sssa,ussa,csa}` must match
-//! the baseline reference bit-for-bit, and the cycle-count contracts of
-//! Section III must hold (`ussa_vcmac` cycles = non-zero weights per
-//! block with a 1-cycle floor, the sequential baseline always 4, the
-//! parallel units always 1).
+//! random INT8 operand streams through `cfu::{sssa,ussa,csa,formats}`
+//! must match the baseline reference bit-for-bit, and the cycle-count
+//! contracts of Section III must hold (`ussa_vcmac` cycles = non-zero
+//! weights per block with a 1-cycle floor, the sequential baseline
+//! always 4, the parallel units — including the N:M/BSR/BBS format
+//! MACs — always 1).
 //!
 //! This tier also pins the table-driven execution paths over the
 //! prepare-time schedule arena — the batch-amortized default and the
@@ -91,12 +92,18 @@ fn prop_all_designs_match_reference_mac() {
         let plain = pack4_i8(&c.w);
         let encoded = encoded_word(c.w, c.skip);
         let x = pack4_i8(&c.x);
-        let cases: [(DesignKind, CfuOpcode, u32); 5] = [
+        let cases: [(DesignKind, CfuOpcode, u32); 8] = [
             (DesignKind::BaselineSimd, CfuOpcode::CfuSimdMac, plain),
             (DesignKind::BaselineSequential, CfuOpcode::CfuSeqMac, plain),
             (DesignKind::Sssa, CfuOpcode::SssaMac, encoded),
             (DesignKind::Ussa, CfuOpcode::UssaVcMac, plain),
             (DesignKind::Csa, CfuOpcode::CsaVcMac, encoded),
+            // The format designs consume plain packed words: N:M
+            // enforcement, block occupancy and bank balancing all happen
+            // at prepare time, never inside the MAC datapath.
+            (DesignKind::NmSsa, CfuOpcode::NmMac, plain),
+            (DesignKind::Bsr, CfuOpcode::BsrMac, plain),
+            (DesignKind::Bbs, CfuOpcode::BbsMac, plain),
         ];
         cases.iter().all(|&(design, op, rs1)| {
             let mut cfu = AnyCfu::new(design, c.offset);
@@ -186,6 +193,9 @@ fn stream_accumulation_is_design_invariant() {
             DesignKind::Sssa => (CfuOpcode::SssaMac, true),
             DesignKind::Ussa => (CfuOpcode::UssaVcMac, false),
             DesignKind::Csa => (CfuOpcode::CsaVcMac, true),
+            DesignKind::NmSsa => (CfuOpcode::NmMac, false),
+            DesignKind::Bsr => (CfuOpcode::BsrMac, false),
+            DesignKind::Bbs => (CfuOpcode::BbsMac, false),
         };
         let mut acc = 0i32;
         let mut cycles = 0u64;
@@ -213,6 +223,11 @@ fn stream_accumulation_is_design_invariant() {
     assert_eq!(cycle_totals[2], blocks as u64); // sssa mac
     assert_eq!(cycle_totals[3], nnz + zero_blocks); // ussa
     assert_eq!(cycle_totals[4], nnz + zero_blocks); // csa
+    // Format-design MACs are parallel dot-4 units (their sparsity wins
+    // come from the walk skipping words, not from the MAC itself).
+    assert_eq!(cycle_totals[5], blocks as u64); // nm-ssa mac
+    assert_eq!(cycle_totals[6], blocks as u64); // bsr mac
+    assert_eq!(cycle_totals[7], blocks as u64); // bbs mac
 }
 
 #[test]
@@ -402,9 +417,9 @@ fn compiled_lane_handles_clamp_edges_and_zero_blocks() {
         let mut cfu = AnyCfu::new(design, 128);
         let mut ci = CycleCounter::new(CostModel::vexriscv());
         let ai = run_lane(
-            design,
+            &prep,
+            0,
             &mut cfu,
-            prep.lane_words(0),
             |j| (pack4_le(&xs[j * 4..j * 4 + 4]), 1, 0),
             0,
             &mut ci,
@@ -424,6 +439,66 @@ fn compiled_lane_handles_clamp_edges_and_zero_blocks() {
         assert_eq!(ci.total_instrs(), cc.total_instrs(), "{design}: instrs");
         assert_eq!(ci.cfu_stalls(), cc.cfu_stalls(), "{design}: stalls");
         assert_eq!(ci.loaded_bytes(), cc.loaded_bytes(), "{design}: loads");
+    }
+}
+
+/// Format-design sparsity edges: exactly one non-zero per 2:4 group
+/// (the N:M single-survivor shape), a single occupied 8×8 tile in an
+/// otherwise empty lane group (BSR), and an unbalanced visited-bank
+/// pattern that forces BBS stall cycles — interpreted walk and compiled
+/// schedule must agree on accumulator and every charge, per lane,
+/// including the all-zero lanes around the action.
+#[test]
+fn format_designs_agree_on_single_nz_edges() {
+    use sparse_riscv::cfu::AnyCfu;
+    use sparse_riscv::cpu::{CostModel, CycleCounter};
+    use sparse_riscv::encoding::pack::pack4_le;
+    use sparse_riscv::kernels::lane::{
+        prepare_lanes, run_lane, run_lane_compiled, INPUT_COST_DENSE,
+    };
+
+    let (lanes, lane_len) = (16usize, 64usize); // two 8-lane BSR tile rows
+    let mut ws = vec![0i8; lanes * lane_len];
+    // Lane 0: one non-zero per 4-weight group (2:4-compliant with a
+    // single survivor; word 7 stays all-zero because the value is 0).
+    for g in 0..lane_len / 4 {
+        ws[g * 4 + (g % 4)] = g as i8 - 7;
+    }
+    // Lane 9: a single non-zero weight — exactly one occupied 8×8 tile
+    // for the second BSR lane group.
+    ws[9 * lane_len + 30] = -77;
+    let xs: Vec<i8> = (0..lane_len).map(|i| (i as i8).wrapping_mul(29)).collect();
+
+    for design in [DesignKind::NmSsa, DesignKind::Bsr, DesignKind::Bbs] {
+        let prep = prepare_lanes(&ws, lane_len, design).unwrap();
+        assert_eq!(prep.nm_pruned, 0, "{design}: single survivors need no pruning");
+        for lane in 0..lanes {
+            let mut cfu = AnyCfu::new(design, 100);
+            let mut ci = CycleCounter::new(CostModel::vexriscv());
+            let ai = run_lane(
+                &prep,
+                lane,
+                &mut cfu,
+                |j| (pack4_le(&xs[j * 4..j * 4 + 4]), 1, 0),
+                5,
+                &mut ci,
+            )
+            .unwrap();
+            let mut cc = CycleCounter::new(CostModel::vexriscv());
+            let ac = run_lane_compiled(
+                prep.lane_schedule(lane),
+                100,
+                INPUT_COST_DENSE,
+                |j| pack4_le(&xs[j * 4..j * 4 + 4]),
+                5,
+                &mut cc,
+            );
+            assert_eq!(ai, ac, "{design}/lane{lane}: accumulator");
+            assert_eq!(ci.cycles(), cc.cycles(), "{design}/lane{lane}: cycles");
+            assert_eq!(ci.total_instrs(), cc.total_instrs(), "{design}/lane{lane}: instrs");
+            assert_eq!(ci.cfu_stalls(), cc.cfu_stalls(), "{design}/lane{lane}: stalls");
+            assert_eq!(ci.loaded_bytes(), cc.loaded_bytes(), "{design}/lane{lane}: loads");
+        }
     }
 }
 

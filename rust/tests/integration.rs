@@ -95,15 +95,8 @@ fn mac_only_matches_closed_form_for_ussa() {
             let mut counter =
                 sparse_riscv::cpu::CycleCounter::new(CostModel::mac_only());
             for lane in 0..prep.lanes {
-                run_lane(
-                    design,
-                    &mut cfu,
-                    prep.lane_words(lane),
-                    |_| (0x01010101, 1, 0),
-                    0,
-                    &mut counter,
-                )
-                .unwrap();
+                run_lane(&prep, lane, &mut cfu, |_| (0x01010101, 1, 0), 0, &mut counter)
+                    .unwrap();
             }
             cycles[slot] = counter.cycles();
         }

@@ -103,7 +103,7 @@ fn simulator_tracks_ussa_closed_form() {
             let mut cfu = AnyCfu::new(design, 0);
             let mut counter = CycleCounter::new(CostModel::mac_only());
             for lane in 0..prep.lanes {
-                run_lane(design, &mut cfu, prep.lane_words(lane), |_| (0x01010101, 1, 0), 0, &mut counter)
+                run_lane(&prep, lane, &mut cfu, |_| (0x01010101, 1, 0), 0, &mut counter)
                     .unwrap();
             }
             cycles[slot] = counter.cycles();
@@ -142,7 +142,7 @@ fn simulator_tracks_sssa_closed_form() {
         let mut cfu = AnyCfu::new(design, 0);
         let mut counter = CycleCounter::new(CostModel::vexriscv());
         for lane in 0..prep.lanes {
-            run_lane(design, &mut cfu, prep.lane_words(lane), |_| (0x01010101, 1, 0), 0, &mut counter)
+            run_lane(&prep, lane, &mut cfu, |_| (0x01010101, 1, 0), 0, &mut counter)
                 .unwrap();
         }
         cycles[slot] = counter.cycles();
