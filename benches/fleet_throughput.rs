@@ -1,0 +1,129 @@
+//! Fleet-scale serving throughput: a seeded multi-tenant Zipf trace
+//! replayed through [`Fleet`]s of increasing size, plus a device-crash
+//! storm cell that measures failover cost.
+//!
+//! Correctness is asserted hard on every cell — the fleet ledger
+//! balances (`accepted == completed + failed` with `failed == 0`),
+//! every completed answer is bit-identical to a single-engine oracle,
+//! and the crash cell actually fails over. Throughput, utilization and
+//! failover counters are informational `host_fleet_*`/`wall_*` records
+//! sunk via `$BENCH_JSON`.
+//!
+//! ```bash
+//! cargo bench --bench fleet_throughput
+//! # knobs: FLEET_REQUESTS (default 96), FLEET_TENANTS (6),
+//! #        FLEET_RATE (400), FLEET_SCALE (0.07), FLEET_CRASH (0.2)
+//! ```
+
+use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions};
+use sparse_riscv::coordinator::fleet::{
+    run_tenant_trace, tenant_input_seed, tenant_specs, Fleet, FleetOptions, SimOutcome,
+    TenantTrace,
+};
+use sparse_riscv::faults::{FaultPlan, FaultRates};
+use sparse_riscv::metrics::{sink_and_report, MetricRecord};
+use std::sync::Arc;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Every completed outcome must match a fault-free single-engine run
+/// bit-for-bit (prediction AND simulated cycles).
+fn assert_oracle(outcomes: &[SimOutcome], trace: &TenantTrace, engine: &BatchOptions) {
+    let oracle = BatchEngine::new(engine.clone());
+    let specs = tenant_specs(trace);
+    for o in outcomes {
+        if o.shed {
+            continue;
+        }
+        let spec = &specs[o.tenant];
+        let seed = tenant_input_seed(trace, o.request);
+        let input = BatchEngine::gen_requests(&spec.model, 1, seed).expect("oracle input");
+        let report = oracle.run_batch(spec, input).expect("oracle run");
+        assert_eq!(
+            (o.prediction, o.cycles),
+            (report.predictions[0], report.total_cycles),
+            "request {} diverged from the single-engine oracle",
+            o.request
+        );
+    }
+}
+
+fn main() {
+    let requests = env_or("FLEET_REQUESTS", 96usize).max(8);
+    let tenants = env_or("FLEET_TENANTS", 6usize).max(1);
+    let rate = env_or("FLEET_RATE", 400.0f64).max(1.0);
+    let scale = env_or("FLEET_SCALE", 0.07f64);
+    let crash = env_or("FLEET_CRASH", 0.2f64).clamp(0.0, 1.0);
+
+    let trace = TenantTrace { tenants, requests, rate, scale, ..TenantTrace::default() };
+    let engine = BatchOptions { threads: 1, ..BatchOptions::default() };
+    let mut records: Vec<MetricRecord> = Vec::new();
+
+    // ---- Scaling sweep: same trace over growing fleets ----------------
+    for devices in [1usize, 2, 4] {
+        let opts = FleetOptions {
+            devices,
+            engine: engine.clone(),
+            probe_every: 1000,
+            ..FleetOptions::default()
+        };
+        let fleet = Fleet::new(opts);
+        let outcomes = run_tenant_trace(&fleet, &trace).expect("trace replay");
+        let report = fleet.report();
+        assert!(report.ledger_holds(), "devices {devices}: ledger broke: {report:?}");
+        assert_eq!(report.failed, 0, "devices {devices}: requests lost: {report:?}");
+        assert_oracle(&outcomes, &trace, &engine);
+        println!(
+            "fleet/n{devices}: {} completed, {} shed — {:.1} req/s over {:.4} s span, \
+             {} replications",
+            report.completed,
+            report.shed,
+            report.throughput(),
+            report.span_s,
+            report.replications,
+        );
+        records.extend(report.to_records(&format!("fleet/n{devices}")));
+    }
+
+    // ---- Crash storm: plan-driven device loss under the same trace ----
+    let plan = Arc::new(FaultPlan::new(
+        0xF1EE_7B3C,
+        FaultRates { device_crash: crash, ..Default::default() },
+    ));
+    let opts = FleetOptions {
+        devices: 3,
+        engine: engine.clone(),
+        probe_every: 1000,
+        faults: Some(plan),
+        ..FleetOptions::default()
+    };
+    let fleet = Fleet::new(opts);
+    let outcomes = run_tenant_trace(&fleet, &trace).expect("storm replay");
+    let report = fleet.report();
+    assert!(report.ledger_holds(), "storm: ledger broke: {report:?}");
+    assert_eq!(report.failed, 0, "storm: accepted requests lost: {report:?}");
+    assert!(report.alive >= 1, "storm: the last survivor must never crash");
+    if crash > 0.0 {
+        assert!(report.crashes >= 1, "storm: crash rate {crash} never fired: {report:?}");
+        assert!(
+            report.failovers >= report.crashes,
+            "storm: every crash kills the serving device, so each must fail over: {report:?}"
+        );
+    }
+    assert_oracle(&outcomes, &trace, &engine);
+    println!(
+        "fleet/storm: {} completed with {} crashes, {} failovers, {} rebalances — \
+         {} of {} devices alive",
+        report.completed,
+        report.crashes,
+        report.failovers,
+        report.rebalances,
+        report.alive,
+        report.devices,
+    );
+    records.extend(report.to_records("fleet/storm"));
+
+    sink_and_report("regenerate: BENCH_JSON=<path> cargo bench --bench fleet_throughput", &records);
+}

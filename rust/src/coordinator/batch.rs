@@ -34,7 +34,6 @@ use crate::tensor::quant::QuantParams;
 use crate::tensor::QTensor;
 use crate::util::stats::{OnlineStats, Percentiles};
 use crate::util::Pcg32;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -76,7 +75,7 @@ impl BatchSpec {
         }
     }
 
-    fn key(&self) -> ModelKey {
+    pub(crate) fn key(&self) -> ModelKey {
         ModelKey::assigned(
             &self.model,
             self.assignment.clone(),
@@ -300,6 +299,60 @@ struct ReqStat {
 /// the bit-trustworthy reference).
 const DEGRADE_STRIKES: u32 = 2;
 
+/// Most distinct model keys the integrity-strike ledger tracks at once.
+/// A long corruption storm over many keys would otherwise grow the
+/// ledger without bound; at the cap the least-recently-struck key is
+/// evicted (and counted), which at worst forgets one strike and makes a
+/// noisy key take one extra strike to degrade.
+const STRIKE_CAP: usize = 64;
+
+/// LRU-bounded integrity-strike ledger: most-recently-touched keys sit
+/// at the back of `entries`, so eviction pops the front. Linear scans
+/// are fine — the ledger never exceeds the (small) cap.
+struct StrikeLedger {
+    cap: usize,
+    entries: Vec<(ModelKey, u32)>,
+    evictions: u64,
+}
+
+impl StrikeLedger {
+    fn new(cap: usize) -> Self {
+        StrikeLedger { cap: cap.max(1), entries: Vec::new(), evictions: 0 }
+    }
+
+    /// Record one strike against `key`, evicting the least-recently
+    /// struck entry if the ledger is full.
+    fn strike(&mut self, key: &ModelKey) {
+        if let Some(i) = self.entries.iter().position(|(k, _)| k == key) {
+            let (k, s) = self.entries.remove(i);
+            self.entries.push((k, s.saturating_add(1)));
+            return;
+        }
+        if self.entries.len() >= self.cap {
+            self.entries.remove(0);
+            self.evictions += 1;
+        }
+        self.entries.push((key.clone(), 1));
+    }
+
+    /// Whether `key` has struck out; a degraded hit refreshes the key's
+    /// recency so actively-served degraded models stay pinned.
+    fn is_degraded(&mut self, key: &ModelKey) -> bool {
+        match self.entries.iter().position(|(k, s)| k == key && *s >= DEGRADE_STRIKES) {
+            Some(i) => {
+                let e = self.entries.remove(i);
+                self.entries.push(e);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn degraded_keys(&self) -> usize {
+        self.entries.iter().filter(|(_, s)| *s >= DEGRADE_STRIKES).count()
+    }
+}
+
 /// The batched multi-design inference engine.
 pub struct BatchEngine {
     pool: JobPool,
@@ -309,8 +362,9 @@ pub struct BatchEngine {
     cache: Arc<PreparedCache>,
     opts: BatchOptions,
     /// Integrity strikes per model key; keys at [`DEGRADE_STRIKES`] run
-    /// on the interpreted-oracle backend from then on.
-    strikes: Mutex<HashMap<ModelKey, u32>>,
+    /// on the interpreted-oracle backend from then on. LRU-bounded at
+    /// [`STRIKE_CAP`] keys so a corruption storm cannot grow it forever.
+    strikes: Mutex<StrikeLedger>,
     /// Batches executed in degraded (oracle-fallback) mode.
     degraded_runs: AtomicU64,
     /// Transient lane faults detected by redundant re-execution and
@@ -334,7 +388,7 @@ impl BatchEngine {
             tiling,
             cache,
             opts,
-            strikes: Mutex::new(HashMap::new()),
+            strikes: Mutex::new(StrikeLedger::new(STRIKE_CAP)),
             degraded_runs: AtomicU64::new(0),
             transient_corrected: Arc::new(AtomicU64::new(0)),
         }
@@ -378,17 +432,27 @@ impl BatchEngine {
 
     /// Model keys currently pinned to the degraded oracle backend.
     pub fn degraded_keys(&self) -> usize {
-        lock_clean(&self.strikes).values().filter(|&&s| s >= DEGRADE_STRIKES).count()
+        lock_clean(&self.strikes).degraded_keys()
+    }
+
+    /// Bound on distinct keys the integrity-strike ledger tracks.
+    pub fn strike_cap(&self) -> usize {
+        STRIKE_CAP
+    }
+
+    /// Keys evicted from the strike ledger to stay within the cap.
+    pub fn strike_evictions(&self) -> u64 {
+        lock_clean(&self.strikes).evictions
     }
 
     /// Record one integrity strike against a key.
     fn note_integrity_strike(&self, key: &ModelKey) {
-        *lock_clean(&self.strikes).entry(key.clone()).or_insert(0) += 1;
+        lock_clean(&self.strikes).strike(key);
     }
 
     /// Whether a key has struck out and runs on the oracle backend.
     fn is_degraded(&self, key: &ModelKey) -> bool {
-        lock_clean(&self.strikes).get(key).is_some_and(|&s| s >= DEGRADE_STRIKES)
+        lock_clean(&self.strikes).is_degraded(key)
     }
 
     /// Synthesize a deterministic request batch for a model (quantized
@@ -868,6 +932,41 @@ mod tests {
         assert_eq!(degraded.predictions, baseline.predictions);
         assert_eq!(degraded.total_cycles, baseline.total_cycles);
         assert_eq!(degraded.request_cycles, baseline.request_cycles);
+    }
+
+    #[test]
+    fn strike_ledger_is_bounded_and_counts_evictions() {
+        fn key(seed: u64) -> ModelKey {
+            ModelKey::assigned(
+                "dscnn",
+                DesignAssignment::Uniform(DesignKind::Csa),
+                0.5,
+                0.3,
+                0.07,
+                seed,
+            )
+        }
+        let mut ledger = StrikeLedger::new(4);
+        // Degrade one key, then storm many distinct keys past the cap.
+        for _ in 0..DEGRADE_STRIKES {
+            ledger.strike(&key(0));
+        }
+        assert!(ledger.is_degraded(&key(0)));
+        for seed in 1..=8u64 {
+            ledger.strike(&key(seed));
+        }
+        assert!(ledger.entries.len() <= 4, "ledger must stay within its cap");
+        assert_eq!(ledger.evictions, 5, "9 distinct keys through a cap of 4");
+        // The degraded key was least-recently-touched once the storm
+        // rolled through — bounded memory trades away its pin.
+        assert!(!ledger.is_degraded(&key(0)));
+        // Re-striking a resident key refreshes recency without evicting.
+        ledger.strike(&key(8));
+        assert_eq!(ledger.evictions, 5);
+        // The engine surfaces the cap and eviction counter.
+        let engine = BatchEngine::new(BatchOptions::default());
+        assert_eq!(engine.strike_cap(), STRIKE_CAP);
+        assert_eq!(engine.strike_evictions(), 0);
     }
 
     #[test]

@@ -1,0 +1,1271 @@
+//! Fleet-scale multi-device serving: placement, replication, failover.
+//!
+//! A [`Fleet`] simulates N small-FPGA devices, each a full [`BatchEngine`]
+//! with its own prepared-model cache and a per-device resource budget
+//! (LUT/FF/BRAM/DSP, costed from `resources::fpga::estimate_cfu`). In
+//! front of the devices sits a placement/routing layer:
+//!
+//! - **Cache-affinity routing** — a model spec is *placed* on one or more
+//!   devices; requests for that spec are only ever routed to holders, so
+//!   each device's `PreparedCache` stays warm for the models it owns.
+//! - **Replication for hot models** — once a spec's hit count crosses
+//!   `hot_threshold`, it is replicated (best-fit by LUT headroom) up to
+//!   `replicas` devices.
+//! - **Admission** — a request is shed (503) only when *every* replica of
+//!   its spec is saturated (per-device backlog at `device_queue`).
+//!
+//! The robustness core mirrors PR 8 one level up. Device-level fault
+//! sites ([`FaultSite::DeviceCrash`], [`FaultSite::DeviceSlow`],
+//! [`FaultSite::DeviceCorrupt`]) crash a device, put it in a slow spell,
+//! or confine a persistent-corruption storm to it. The router detects a
+//! dead device either at send time or via periodic health probes; an
+//! accepted request whose device died is **failed over** to a surviving
+//! replica and the dead device's models are re-placed under the resource
+//! budget. The fleet-wide ledger invariant is preserved throughout:
+//! `accepted == completed + failed`, with shed requests accounted
+//! separately — no request is ever lost to a crash.
+//!
+//! Determinism: device selection, placement, fault decisions, and the
+//! tenant trace generator are all pure functions of seeds and submission
+//! order, and simulated cycle totals come from prepare-time schedules, so
+//! outputs *and* cycle counts are bit-identical across replays and
+//! invariant to which replica served a request.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::batch::{BatchEngine, BatchOptions, BatchReport, BatchSpec};
+use super::loadgen::{arrival_offsets, Arrival, TraceConfig};
+use super::lock_clean;
+use crate::config::Value;
+use crate::error::{Error, Result};
+use crate::faults::{FaultPlan, FaultSite};
+use crate::isa::DesignKind;
+use crate::metrics::MetricRecord;
+use crate::resources::{estimate_cfu, ResourceUsage};
+use crate::tensor::QTensor;
+use crate::util::{Pcg32, Percentiles};
+
+/// Virtual-time service multiplier while a device is in a slow spell.
+const SLOW_FACTOR: f64 = 8.0;
+/// Stream tag for storm bit-flip RNGs (odd, fixed).
+const STORM_TAG: u64 = 0x5707_0051_0B17_F11B;
+/// Stream tag for the Zipf tenant-popularity stream.
+const ZIPF_TAG: u64 = 0x21BF_7E4A_0D15_7A1F;
+/// Stream tag for per-request input seeds.
+const INPUT_TAG: u64 = 0x1A9B_0CAF_E77E_4A57;
+
+/// Fleet construction options.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Number of simulated devices (clamped to at least 1).
+    pub devices: usize,
+    /// Replication factor for hot models.
+    pub replicas: usize,
+    /// Spec hit count at which a model is considered hot and replicated.
+    pub hot_threshold: u64,
+    /// Per-device backlog bound; admission sheds only when every replica
+    /// is at this bound.
+    pub device_queue: usize,
+    /// Health-probe period in submissions (every N-th submission probes
+    /// all devices).
+    pub probe_every: u64,
+    /// Virtual-time request deadline in seconds; a sojourn beyond it
+    /// counts as a deadline miss and flags slow devices.
+    pub deadline_s: f64,
+    /// Per-device CFU resource budget (over `BASELINE_SOC`).
+    pub budget: ResourceUsage,
+    /// Options for each device's `BatchEngine`.
+    pub engine: BatchOptions,
+    /// Device-level fault plan (also handed to each engine via
+    /// `engine.faults` by callers that want engine-level sites armed).
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            devices: 3,
+            replicas: 2,
+            hot_threshold: 8,
+            device_queue: 64,
+            probe_every: 4,
+            deadline_s: 0.050,
+            budget: ResourceUsage { luts: 300, ffs: 400, brams: 2, dsps: 6 },
+            engine: BatchOptions::default(),
+            faults: None,
+        }
+    }
+}
+
+/// A completed routed batch.
+#[derive(Debug)]
+pub struct Routed {
+    /// Device that produced the result.
+    pub device: usize,
+    /// Whether the batch was re-routed after its first device died.
+    pub failed_over: bool,
+    /// The engine report (bit-identical to a single-engine run).
+    pub report: BatchReport,
+}
+
+/// Outcome of a fleet submission.
+#[derive(Debug)]
+pub enum Submission {
+    /// The batch ran on a device (possibly after failover).
+    Done(Routed),
+    /// Every replica was saturated, or no device is alive: 503.
+    Shed,
+}
+
+/// Router-side state for one device.
+struct DeviceCtl {
+    /// Ground truth: the device still answers.
+    alive: bool,
+    /// Router knowledge: the device has been observed dead (probe or
+    /// send-time failure) and its models re-placed.
+    detected_dead: bool,
+    /// Ground truth: slow spell active until this submission sequence.
+    slow_until: u64,
+    /// Router knowledge: deadline misses or probes flagged the device
+    /// slow; routing prefers other replicas until a probe clears it.
+    detected_slow: bool,
+    /// Corruption storm confined to this device until this sequence.
+    storm_until: u64,
+    /// Resource budget consumed by placed models.
+    used: ResourceUsage,
+    /// Placed model specs with their resource cost, oldest first.
+    placed: Vec<(String, ResourceUsage)>,
+    /// Requests currently executing on the device.
+    inflight: u64,
+    /// Virtual completion times of queued work (monotonic per device).
+    queue_done: Vec<f64>,
+    /// Latest virtual completion time ever observed.
+    last_done: f64,
+    /// Busy time (virtual service time, or wall time in live mode).
+    busy_s: f64,
+    /// Requests completed by this device.
+    completed: u64,
+    /// Simulated cycles accumulated by this device.
+    cycles: u64,
+}
+
+impl DeviceCtl {
+    fn new() -> DeviceCtl {
+        DeviceCtl {
+            alive: true,
+            detected_dead: false,
+            slow_until: 0,
+            detected_slow: false,
+            storm_until: 0,
+            used: ResourceUsage::default(),
+            placed: Vec::new(),
+            inflight: 0,
+            queue_done: Vec::new(),
+            last_done: 0.0,
+            busy_s: 0.0,
+            completed: 0,
+            cycles: 0,
+        }
+    }
+}
+
+/// Placement record for one model spec.
+#[derive(Default)]
+struct PlaceInfo {
+    /// Devices currently holding the spec.
+    devices: Vec<usize>,
+    /// Routed request count (drives hot-model replication).
+    hits: u64,
+    /// Resource cost of one replica.
+    cost: ResourceUsage,
+}
+
+/// Fleet-wide counters (the ledger plus robustness telemetry).
+#[derive(Default)]
+struct FleetCounters {
+    accepted: u64,
+    completed: u64,
+    failed: u64,
+    shed: u64,
+    failovers: u64,
+    rebalances: u64,
+    replications: u64,
+    evictions: u64,
+    crashes: u64,
+    slow_spells: u64,
+    storms: u64,
+    probes: u64,
+    deadline_misses: u64,
+    total_cycles: u64,
+    failover_ms: Percentiles,
+}
+
+/// All mutable router state, behind one mutex.
+struct FleetCtl {
+    devs: Vec<DeviceCtl>,
+    placements: HashMap<String, PlaceInfo>,
+    seq: u64,
+    counters: FleetCounters,
+}
+
+impl FleetCtl {
+    /// Devices the router believes it can route to.
+    fn routable_count(&self) -> usize {
+        self.devs.iter().filter(|d| !d.detected_dead).count()
+    }
+
+    /// Routable devices currently holding `key`, ascending.
+    fn holders(&self, key: &str) -> Vec<usize> {
+        let info = self.placements.get(key);
+        let mut v: Vec<usize> = info.map(|i| i.devices.clone()).unwrap_or_default();
+        v.retain(|&d| !self.devs[d].detected_dead);
+        v.sort_unstable();
+        v
+    }
+
+    fn holder_count(&self, key: &str) -> usize {
+        self.holders(key).len()
+    }
+
+    /// Replication target for `key`: 1 for cold specs, up to
+    /// `opts.replicas` once the hit count crosses the hot threshold.
+    fn desired_replicas(&self, key: &str, opts: &FleetOptions) -> usize {
+        let routable = self.routable_count();
+        if routable == 0 {
+            return 0;
+        }
+        let hot = self.placements.get(key).is_some_and(|info| info.hits >= opts.hot_threshold);
+        if hot {
+            opts.replicas.clamp(1, routable)
+        } else {
+            1
+        }
+    }
+
+    /// Place one replica of `key` on the best-fit device (max LUT
+    /// headroom among routable non-holders that fit the budget). With
+    /// `force`, availability beats budget: evict oldest-placed models
+    /// from the roomiest device until the new one fits.
+    fn place_one(
+        &mut self,
+        key: &str,
+        cost: ResourceUsage,
+        budget: &ResourceUsage,
+        force: bool,
+    ) -> Option<usize> {
+        let holders = self.holders(key);
+        let mut fit_best: Option<(u32, usize)> = None;
+        let mut any_best: Option<(u32, usize)> = None;
+        for (i, dev) in self.devs.iter().enumerate() {
+            if dev.detected_dead || holders.contains(&i) {
+                continue;
+            }
+            let head = budget.luts.saturating_sub(dev.used.luts);
+            let better_fit = match fit_best {
+                Some((h, _)) => head > h,
+                None => true,
+            };
+            if fits(&dev.used, &cost, budget) && better_fit {
+                fit_best = Some((head, i));
+            }
+            let better_any = match any_best {
+                Some((h, _)) => head > h,
+                None => true,
+            };
+            if better_any {
+                any_best = Some((head, i));
+            }
+        }
+        let target = match (fit_best, any_best) {
+            (Some((_, i)), _) => i,
+            (None, Some((_, i))) if force => i,
+            _ => return None,
+        };
+        if fit_best.is_none() {
+            while !fits(&self.devs[target].used, &cost, budget)
+                && !self.devs[target].placed.is_empty()
+            {
+                let (evicted, _) = self.devs[target].placed.remove(0);
+                if let Some(info) = self.placements.get_mut(&evicted) {
+                    info.devices.retain(|&d| d != target);
+                }
+                self.counters.evictions += 1;
+                self.devs[target].used = placed_usage(&self.devs[target].placed);
+            }
+        }
+        self.devs[target].placed.push((key.to_string(), cost));
+        self.devs[target].used = self.devs[target].used.add(&cost);
+        self.placements
+            .entry(key.to_string())
+            .or_default()
+            .devices
+            .push(target);
+        Some(target)
+    }
+
+    /// Ensure `key` is placed on its desired replica count; returns the
+    /// routable holders, or `None` when no device can take it (fleet
+    /// fully dead).
+    fn ensure_placed(
+        &mut self,
+        key: &str,
+        cost: ResourceUsage,
+        opts: &FleetOptions,
+        record_hit: bool,
+    ) -> Option<Vec<usize>> {
+        if self.routable_count() == 0 {
+            return None;
+        }
+        {
+            let info = self.placements.entry(key.to_string()).or_default();
+            if record_hit {
+                info.hits += 1;
+            }
+            info.cost = cost;
+        }
+        let desired = self.desired_replicas(key, opts).max(1);
+        while self.holder_count(key) < desired {
+            let scale_up = self.holder_count(key) >= 1;
+            if self.place_one(key, cost, &opts.budget, !scale_up).is_none() {
+                break;
+            }
+            if scale_up {
+                self.counters.replications += 1;
+            }
+        }
+        let holders = self.holders(key);
+        if holders.is_empty() {
+            None
+        } else {
+            Some(holders)
+        }
+    }
+
+    /// React to an observed device death: mark it, drop its placements,
+    /// and restore each displaced model's replication on survivors.
+    fn on_dead_detected(&mut self, dead: usize, opts: &FleetOptions) {
+        if self.devs[dead].detected_dead {
+            return;
+        }
+        self.devs[dead].detected_dead = true;
+        self.devs[dead].detected_slow = false;
+        let moved = std::mem::take(&mut self.devs[dead].placed);
+        self.devs[dead].used = ResourceUsage::default();
+        for (key, cost) in moved {
+            if let Some(info) = self.placements.get_mut(&key) {
+                info.devices.retain(|&d| d != dead);
+            }
+            let desired = self.desired_replicas(&key, opts).max(1);
+            while self.holder_count(&key) < desired {
+                let force = self.holder_count(&key) == 0;
+                if self.place_one(&key, cost, &opts.budget, force).is_none() {
+                    break;
+                }
+                self.counters.rebalances += 1;
+            }
+        }
+    }
+
+    /// Periodic health probe: refresh slow flags from ground truth and
+    /// detect crashed devices that have not yet failed a send.
+    fn probe(&mut self, now: u64, opts: &FleetOptions) {
+        self.counters.probes += self.devs.len() as u64;
+        for d in self.devs.iter_mut() {
+            d.detected_slow = d.slow_until > now;
+        }
+        let dead: Vec<usize> = self
+            .devs
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| !d.alive && !d.detected_dead)
+            .map(|(i, _)| i)
+            .collect();
+        for d in dead {
+            self.on_dead_detected(d, opts);
+        }
+    }
+}
+
+/// Budget check for adding `cost` on top of `used`.
+fn fits(used: &ResourceUsage, cost: &ResourceUsage, budget: &ResourceUsage) -> bool {
+    let total = used.add(cost);
+    total.luts <= budget.luts
+        && total.ffs <= budget.ffs
+        && total.brams <= budget.brams
+        && total.dsps <= budget.dsps
+}
+
+/// Recompute a device's usage from its placed set (no subtraction on
+/// `ResourceUsage`, so eviction recomputes).
+fn placed_usage(placed: &[(String, ResourceUsage)]) -> ResourceUsage {
+    placed.iter().fold(ResourceUsage::default(), |acc, (_, c)| acc.add(c))
+}
+
+/// Placement key for a spec — same shape as the net layer's queue key.
+fn place_key(spec: &BatchSpec) -> String {
+    format!(
+        "{}|{}|{}|{}|{}|{}",
+        spec.model,
+        spec.assignment.label(),
+        spec.x_us,
+        spec.x_ss,
+        spec.scale,
+        spec.weight_seed
+    )
+}
+
+/// Resource cost of one replica: the sum of CFU estimates over the
+/// designs the assignment actually uses.
+fn spec_cost(spec: &BatchSpec) -> ResourceUsage {
+    spec.assignment
+        .designs_used()
+        .into_iter()
+        .fold(ResourceUsage::default(), |acc, d| acc.add(&estimate_cfu(d)))
+}
+
+/// Pending work on a device as seen at `arrival_s` (virtual time), or
+/// just in-flight batches in live mode.
+fn backlog(dev: &DeviceCtl, arrival_s: Option<f64>) -> usize {
+    let queued = match arrival_s {
+        Some(at) => dev.queue_done.iter().filter(|&&done| done > at).count(),
+        None => 0,
+    };
+    queued + dev.inflight as usize
+}
+
+/// Deterministic device choice: prefer not-slow, then least backlog,
+/// then least lifetime cycles, then lowest id.
+fn choose(ctl: &FleetCtl, candidates: &[usize], arrival_s: Option<f64>) -> usize {
+    let mut best = candidates[0];
+    for &d in &candidates[1..] {
+        let dev = &ctl.devs[d];
+        let cur = &ctl.devs[best];
+        let kd = (dev.detected_slow, backlog(dev, arrival_s), dev.cycles, d);
+        let kb = (cur.detected_slow, backlog(cur, arrival_s), cur.cycles, best);
+        if kd < kb {
+            best = d;
+        }
+    }
+    best
+}
+
+/// Fire device-level fault sites for this submission. A crash always
+/// hits the device the batch was just routed to (so every crash
+/// exercises an accepted-request failover) and is suppressed when it
+/// would kill the last live device; slow spells and storms pick a
+/// seeded victim among live devices.
+fn pump_faults(ctl: &mut FleetCtl, plan: &FaultPlan, serving: usize, now: u64) {
+    if plan.decide(FaultSite::DeviceCrash).is_some() {
+        let alive = ctl.devs.iter().filter(|d| d.alive).count();
+        if alive >= 2 && ctl.devs[serving].alive {
+            ctl.devs[serving].alive = false;
+            ctl.counters.crashes += 1;
+        }
+    }
+    if let Some(mut rng) = plan.decide(FaultSite::DeviceSlow) {
+        let alive: Vec<usize> = ctl
+            .devs
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.alive)
+            .map(|(i, _)| i)
+            .collect();
+        if !alive.is_empty() {
+            let v = alive[rng.below(alive.len() as u32) as usize];
+            ctl.devs[v].slow_until = now + 3 + u64::from(rng.below(6));
+            ctl.counters.slow_spells += 1;
+        }
+    }
+    if let Some(mut rng) = plan.decide(FaultSite::DeviceCorrupt) {
+        let alive: Vec<usize> = ctl
+            .devs
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.alive)
+            .map(|(i, _)| i)
+            .collect();
+        if !alive.is_empty() {
+            let v = alive[rng.below(alive.len() as u32) as usize];
+            ctl.devs[v].storm_until = now + 2 + u64::from(rng.below(4));
+            ctl.counters.storms += 1;
+        }
+    }
+}
+
+/// N simulated devices behind a placement/routing layer with replica
+/// failover. See the module docs for the full contract.
+pub struct Fleet {
+    engines: Vec<BatchEngine>,
+    ctl: Mutex<FleetCtl>,
+    opts: FleetOptions,
+    started: Instant,
+}
+
+impl Fleet {
+    /// Build a fleet of `opts.devices` engines (at least one).
+    pub fn new(opts: FleetOptions) -> Fleet {
+        let n = opts.devices.max(1);
+        let opts = FleetOptions { devices: n, ..opts };
+        let engines = (0..n).map(|_| BatchEngine::new(opts.engine.clone())).collect();
+        let devs = (0..n).map(|_| DeviceCtl::new()).collect();
+        Fleet {
+            engines,
+            ctl: Mutex::new(FleetCtl {
+                devs,
+                placements: HashMap::new(),
+                seq: 0,
+                counters: FleetCounters::default(),
+            }),
+            opts,
+            started: Instant::now(),
+        }
+    }
+
+    /// Construction options (devices clamped).
+    pub fn options(&self) -> &FleetOptions {
+        &self.opts
+    }
+
+    /// Number of devices in the fleet.
+    pub fn device_count(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Devices still alive (ground truth).
+    pub fn alive_devices(&self) -> usize {
+        lock_clean(&self.ctl).devs.iter().filter(|d| d.alive).count()
+    }
+
+    /// The engine simulating one device (tests and benches).
+    pub fn engine(&self, device: usize) -> &BatchEngine {
+        &self.engines[device]
+    }
+
+    /// Kill one device (chaos hook). Refuses to kill the last live
+    /// device or an already-dead one; detection still happens through
+    /// the normal probe/send paths.
+    pub fn crash_device(&self, device: usize) -> bool {
+        let mut ctl = lock_clean(&self.ctl);
+        if device >= ctl.devs.len() || !ctl.devs[device].alive {
+            return false;
+        }
+        if ctl.devs.iter().filter(|d| d.alive).count() <= 1 {
+            return false;
+        }
+        ctl.devs[device].alive = false;
+        ctl.counters.crashes += 1;
+        true
+    }
+
+    /// Route and run one batch. `arrival_s` is the request's virtual
+    /// arrival time (trace mode); `None` means live mode (wall-clock
+    /// accounting, backlog from in-flight counts only).
+    pub fn submit(
+        &self,
+        spec: &BatchSpec,
+        requests: Vec<QTensor>,
+        arrival_s: Option<f64>,
+    ) -> Result<Submission> {
+        let n = requests.len() as u64;
+        if n == 0 {
+            return Err(Error::Coordinator("empty fleet submission".into()));
+        }
+        let key = place_key(spec);
+        let cost = spec_cost(spec);
+
+        let (device, now, slow, storm, failed_over) = {
+            let mut ctl = lock_clean(&self.ctl);
+            ctl.seq += 1;
+            let now = ctl.seq;
+            if now % self.opts.probe_every.max(1) == 0 {
+                ctl.probe(now, &self.opts);
+            }
+            let Some(holders) = ctl.ensure_placed(&key, cost, &self.opts, true) else {
+                ctl.counters.shed += n;
+                return Ok(Submission::Shed);
+            };
+            let cap = self.opts.device_queue.max(1);
+            let open: Vec<usize> = holders
+                .iter()
+                .copied()
+                .filter(|&d| backlog(&ctl.devs[d], arrival_s) < cap)
+                .collect();
+            if open.is_empty() {
+                ctl.counters.shed += n;
+                return Ok(Submission::Shed);
+            }
+            let mut device = choose(&ctl, &open, arrival_s);
+            ctl.counters.accepted += n;
+            if let Some(plan) = &self.opts.faults {
+                pump_faults(&mut ctl, plan, device, now);
+            }
+            let mut failed_over = false;
+            if !ctl.devs[device].alive {
+                // Send-time failure detection: the accepted batch fails
+                // over to a surviving replica and the dead device's
+                // models are re-placed under the budget. The ledger
+                // keeps the batch — it completes elsewhere or counts as
+                // failed, never disappears.
+                ctl.counters.failovers += n;
+                ctl.on_dead_detected(device, &self.opts);
+                device = loop {
+                    let next = ctl.ensure_placed(&key, cost, &self.opts, false);
+                    let Some(holders) = next else {
+                        ctl.counters.failed += n;
+                        return Err(Error::Coordinator(
+                            "fleet: no surviving replica for failover".into(),
+                        ));
+                    };
+                    let d2 = choose(&ctl, &holders, arrival_s);
+                    if ctl.devs[d2].alive {
+                        break d2;
+                    }
+                    ctl.on_dead_detected(d2, &self.opts);
+                };
+                failed_over = true;
+            }
+            ctl.devs[device].inflight += 1;
+            let dev = &ctl.devs[device];
+            (device, now, dev.slow_until > now, dev.storm_until > now, failed_over)
+        };
+
+        if storm {
+            if let Some(plan) = &self.opts.faults {
+                // Persistent-corruption storm confined to this device:
+                // flip a cached weight bit before the run; the engine's
+                // integrity check detects it and recovers (or degrades)
+                // deterministically, so outputs stay bit-identical.
+                let mut rng = Pcg32::new(plan.seed() ^ STORM_TAG).fork(now);
+                self.engines[device].cache().corrupt_cached(&spec.key(), |m| {
+                    m.corrupt_weight_bit(&mut rng);
+                });
+            }
+        }
+        if slow && arrival_s.is_none() {
+            // Live mode has no virtual clock; model the hang as a real
+            // stall so request deadlines can observe it.
+            thread::sleep(Duration::from_millis(2));
+        }
+
+        let t0 = Instant::now();
+        let result = self.engines[device].run_batch(spec, requests);
+        let wall = t0.elapsed().as_secs_f64();
+
+        let mut ctl = lock_clean(&self.ctl);
+        ctl.devs[device].inflight = ctl.devs[device].inflight.saturating_sub(1);
+        let report = match result {
+            Ok(report) => report,
+            Err(e) => {
+                ctl.counters.failed += n;
+                return Err(e);
+            }
+        };
+        ctl.counters.completed += n;
+        ctl.counters.total_cycles += report.total_cycles;
+        let clock = self.opts.engine.clock_hz.max(1);
+        let mut service = report.total_cycles as f64 / clock as f64;
+        if slow {
+            service *= SLOW_FACTOR;
+        }
+        let mut missed = false;
+        {
+            let dev = &mut ctl.devs[device];
+            dev.completed += n;
+            dev.cycles += report.total_cycles;
+            match arrival_s {
+                Some(at) => {
+                    dev.busy_s += service;
+                    dev.queue_done.retain(|&done| done > at);
+                    let start = dev.queue_done.last().copied().unwrap_or(at).max(at);
+                    let done = start + service;
+                    dev.queue_done.push(done);
+                    dev.last_done = dev.last_done.max(done);
+                    missed = done - at > self.opts.deadline_s;
+                }
+                None => dev.busy_s += wall,
+            }
+        }
+        if missed {
+            ctl.counters.deadline_misses += n;
+            // Request-deadline detection: a device that blows deadlines
+            // during a slow spell is routed around until the next probe
+            // observes it healthy again.
+            if ctl.devs[device].slow_until > now {
+                ctl.devs[device].detected_slow = true;
+            }
+        }
+        if failed_over {
+            ctl.counters.failover_ms.push(wall * 1e3);
+        }
+        Ok(Submission::Done(Routed { device, failed_over, report }))
+    }
+
+    /// Engine-compatible entry point: route one batch and return its
+    /// report, turning a fleet-wide shed into an error (the net layer
+    /// maps it to a 5xx).
+    pub fn run_batch(&self, spec: &BatchSpec, requests: Vec<QTensor>) -> Result<BatchReport> {
+        match self.submit(spec, requests, None)? {
+            Submission::Done(routed) => Ok(routed.report),
+            Submission::Shed => {
+                Err(Error::Coordinator("fleet saturated: every replica at capacity".into()))
+            }
+        }
+    }
+
+    /// Integrity-check failures summed over all devices.
+    pub fn integrity_fails(&self) -> u64 {
+        self.engines.iter().map(|e| e.integrity_fails()).sum()
+    }
+
+    /// Degraded (oracle-path) runs summed over all devices.
+    pub fn degraded_runs(&self) -> u64 {
+        self.engines.iter().map(|e| e.degraded_runs()).sum()
+    }
+
+    /// Transparently re-prepared corruptions summed over all devices.
+    pub fn transient_corrected(&self) -> u64 {
+        self.engines.iter().map(|e| e.transient_corrected()).sum()
+    }
+
+    /// Currently-degraded model keys summed over all devices.
+    pub fn degraded_keys(&self) -> usize {
+        self.engines.iter().map(|e| e.degraded_keys()).sum()
+    }
+
+    /// Strike-ledger evictions summed over all devices.
+    pub fn strike_evictions(&self) -> u64 {
+        self.engines.iter().map(|e| e.strike_evictions()).sum()
+    }
+
+    /// Per-device strike-ledger capacity (uniform across the fleet).
+    pub fn strike_cap(&self) -> usize {
+        self.engines[0].strike_cap()
+    }
+
+    /// Snapshot the fleet-wide ledger, robustness counters, and
+    /// per-device utilization/cache telemetry.
+    pub fn report(&self) -> FleetReport {
+        let mut ctl = lock_clean(&self.ctl);
+        let wall = self.started.elapsed().as_secs_f64();
+        let virtual_span = ctl.devs.iter().map(|d| d.last_done).fold(0.0_f64, f64::max);
+        let span_s = if virtual_span > 0.0 {
+            virtual_span
+        } else {
+            wall.max(1e-9)
+        };
+        let alive = ctl.devs.iter().filter(|d| d.alive).count();
+        let per_device: Vec<DeviceReport> = ctl
+            .devs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let cache = self.engines[i].cache();
+                let (hits, misses) = (cache.hits(), cache.misses());
+                let lookups = hits + misses;
+                DeviceReport {
+                    device: i,
+                    alive: d.alive,
+                    placed: d.placed.len(),
+                    completed: d.completed,
+                    cycles: d.cycles,
+                    utilization: (d.busy_s / span_s).min(1.0),
+                    cache_hits: hits,
+                    cache_misses: misses,
+                    cache_hit_rate: if lookups > 0 {
+                        hits as f64 / lookups as f64
+                    } else {
+                        0.0
+                    },
+                    integrity_fails: self.engines[i].integrity_fails(),
+                    degraded_keys: self.engines[i].degraded_keys(),
+                }
+            })
+            .collect();
+        let fo = ctl.counters.failover_ms.count();
+        let failover_p50_ms = if fo > 0 {
+            ctl.counters.failover_ms.percentile(50.0)
+        } else {
+            0.0
+        };
+        let failover_p99_ms = if fo > 0 {
+            ctl.counters.failover_ms.percentile(99.0)
+        } else {
+            0.0
+        };
+        let c = &ctl.counters;
+        FleetReport {
+            devices: self.engines.len(),
+            alive,
+            accepted: c.accepted,
+            completed: c.completed,
+            failed: c.failed,
+            shed: c.shed,
+            failovers: c.failovers,
+            rebalances: c.rebalances,
+            replications: c.replications,
+            evictions: c.evictions,
+            crashes: c.crashes,
+            slow_spells: c.slow_spells,
+            storms: c.storms,
+            probes: c.probes,
+            deadline_misses: c.deadline_misses,
+            total_cycles: c.total_cycles,
+            failover_p50_ms,
+            failover_p99_ms,
+            span_s,
+            wall_seconds: wall,
+            per_device,
+        }
+    }
+}
+
+/// Telemetry for one device in a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct DeviceReport {
+    /// Device id.
+    pub device: usize,
+    /// Still alive (ground truth).
+    pub alive: bool,
+    /// Models currently placed.
+    pub placed: usize,
+    /// Requests completed.
+    pub completed: u64,
+    /// Simulated cycles accumulated.
+    pub cycles: u64,
+    /// Busy fraction of the fleet span, in `[0, 1]`.
+    pub utilization: f64,
+    /// Prepared-cache hits.
+    pub cache_hits: u64,
+    /// Prepared-cache misses.
+    pub cache_misses: u64,
+    /// Hit fraction of cache lookups, in `[0, 1]`.
+    pub cache_hit_rate: f64,
+    /// Integrity-check failures on this device.
+    pub integrity_fails: u64,
+    /// Currently-degraded model keys on this device.
+    pub degraded_keys: usize,
+}
+
+impl DeviceReport {
+    /// JSON form.
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("device", Value::Num(self.device as f64)),
+            ("alive", Value::Bool(self.alive)),
+            ("placed", Value::Num(self.placed as f64)),
+            ("completed", Value::Num(self.completed as f64)),
+            ("cycles", Value::Num(self.cycles as f64)),
+            ("utilization", Value::Num(self.utilization)),
+            ("cache_hits", Value::Num(self.cache_hits as f64)),
+            ("cache_misses", Value::Num(self.cache_misses as f64)),
+            ("cache_hit_rate", Value::Num(self.cache_hit_rate)),
+            ("integrity_fails", Value::Num(self.integrity_fails as f64)),
+            ("degraded_keys", Value::Num(self.degraded_keys as f64)),
+        ])
+    }
+}
+
+/// Fleet-wide snapshot: ledger, robustness counters, per-device stats.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Devices in the fleet.
+    pub devices: usize,
+    /// Devices still alive.
+    pub alive: usize,
+    /// Requests admitted past the saturation check.
+    pub accepted: u64,
+    /// Accepted requests that produced a result.
+    pub completed: u64,
+    /// Accepted requests that errored (including failovers with no
+    /// surviving replica).
+    pub failed: u64,
+    /// Requests shed because every replica was saturated.
+    pub shed: u64,
+    /// Accepted requests re-routed after their device died.
+    pub failovers: u64,
+    /// Replicas restored on survivors after device deaths.
+    pub rebalances: u64,
+    /// Hot-model replica scale-ups.
+    pub replications: u64,
+    /// Placements evicted by forced (availability-over-budget) placement.
+    pub evictions: u64,
+    /// Device crashes (injected plus `crash_device`).
+    pub crashes: u64,
+    /// Slow spells started.
+    pub slow_spells: u64,
+    /// Corruption storms started.
+    pub storms: u64,
+    /// Individual device health probes performed.
+    pub probes: u64,
+    /// Requests whose virtual sojourn exceeded the deadline.
+    pub deadline_misses: u64,
+    /// Simulated cycles over all completed batches.
+    pub total_cycles: u64,
+    /// Median wall latency of failed-over requests, ms (0 if none).
+    pub failover_p50_ms: f64,
+    /// p99 wall latency of failed-over requests, ms (0 if none).
+    pub failover_p99_ms: f64,
+    /// Fleet span: max virtual completion time, or wall time in live
+    /// mode.
+    pub span_s: f64,
+    /// Wall-clock lifetime of the fleet at snapshot time.
+    pub wall_seconds: f64,
+    /// Per-device telemetry.
+    pub per_device: Vec<DeviceReport>,
+}
+
+impl FleetReport {
+    /// The fleet-wide ledger invariant: every accepted request either
+    /// completed or failed — none lost to a crash.
+    pub fn ledger_holds(&self) -> bool {
+        self.accepted == self.completed + self.failed
+    }
+
+    /// Aggregate throughput in requests per (virtual) second.
+    pub fn throughput(&self) -> f64 {
+        self.completed as f64 / self.span_s.max(1e-9)
+    }
+
+    /// JSON form.
+    pub fn to_value(&self) -> Value {
+        let devs: Vec<Value> = self.per_device.iter().map(DeviceReport::to_value).collect();
+        Value::obj(vec![
+            ("devices", Value::Num(self.devices as f64)),
+            ("alive", Value::Num(self.alive as f64)),
+            ("accepted", Value::Num(self.accepted as f64)),
+            ("completed", Value::Num(self.completed as f64)),
+            ("failed", Value::Num(self.failed as f64)),
+            ("shed", Value::Num(self.shed as f64)),
+            ("failovers", Value::Num(self.failovers as f64)),
+            ("rebalances", Value::Num(self.rebalances as f64)),
+            ("replications", Value::Num(self.replications as f64)),
+            ("evictions", Value::Num(self.evictions as f64)),
+            ("crashes", Value::Num(self.crashes as f64)),
+            ("slow_spells", Value::Num(self.slow_spells as f64)),
+            ("storms", Value::Num(self.storms as f64)),
+            ("probes", Value::Num(self.probes as f64)),
+            ("deadline_misses", Value::Num(self.deadline_misses as f64)),
+            ("total_cycles", Value::Num(self.total_cycles as f64)),
+            ("throughput_rps", Value::Num(self.throughput())),
+            ("failover_p50_ms", Value::Num(self.failover_p50_ms)),
+            ("failover_p99_ms", Value::Num(self.failover_p99_ms)),
+            ("span_s", Value::Num(self.span_s)),
+            ("ledger_holds", Value::Bool(self.ledger_holds())),
+            ("per_device", Value::Arr(devs)),
+        ])
+    }
+
+    /// Metric records: one fleet-level record under `id`, plus one
+    /// `"{id}/dev{i}"` record per device.
+    pub fn to_records(&self, id: &str) -> Vec<MetricRecord> {
+        let fleet_record = MetricRecord::new(id)
+            .with_value("host_fleet_throughput", self.throughput())
+            .with_value("host_fleet_devices", self.devices as f64)
+            .with_value("host_fleet_alive", self.alive as f64)
+            .with_value("host_fleet_accepted", self.accepted as f64)
+            .with_value("host_fleet_completed", self.completed as f64)
+            .with_value("host_fleet_failed", self.failed as f64)
+            .with_value("host_fleet_shed", self.shed as f64)
+            .with_value("host_fleet_failovers", self.failovers as f64)
+            .with_value("host_fleet_rebalances", self.rebalances as f64)
+            .with_value("host_fleet_replications", self.replications as f64)
+            .with_value("host_fleet_crashes", self.crashes as f64)
+            .with_value("host_fleet_deadline_misses", self.deadline_misses as f64)
+            .with_value("wall_failover_p50_ms", self.failover_p50_ms)
+            .with_value("wall_failover_p99_ms", self.failover_p99_ms);
+        let mut records = vec![fleet_record];
+        for d in &self.per_device {
+            records.push(
+                MetricRecord::new(&format!("{id}/dev{}", d.device))
+                    .with_value("host_completed", d.completed as f64)
+                    .with_value("host_util", d.utilization)
+                    .with_value("host_cache_hit_rate", d.cache_hit_rate)
+                    .with_value("host_integrity_fail", d.integrity_fails as f64),
+            );
+        }
+        records
+    }
+}
+
+/// Seeded multi-tenant traffic mix: `tenants` model specs with Zipf
+/// popularity, Poisson arrivals from `loadgen`'s deterministic streams.
+#[derive(Debug, Clone)]
+pub struct TenantTrace {
+    /// Number of tenant model specs.
+    pub tenants: usize,
+    /// Total requests in the trace.
+    pub requests: usize,
+    /// Mean arrival rate, requests per virtual second.
+    pub rate: f64,
+    /// Zipf skew exponent for tenant popularity.
+    pub zipf_s: f64,
+    /// Master seed for popularity, arrivals, and inputs.
+    pub seed: u64,
+    /// Model width multiplier for every tenant spec.
+    pub scale: f64,
+}
+
+impl Default for TenantTrace {
+    fn default() -> Self {
+        TenantTrace {
+            tenants: 6,
+            requests: 96,
+            rate: 400.0,
+            zipf_s: 1.1,
+            seed: 0xF1EE7,
+            scale: 0.07,
+        }
+    }
+}
+
+/// One spec per tenant: distinct weight seeds (distinct models) over a
+/// rotating design mix, so placement must juggle real variety.
+pub fn tenant_specs(trace: &TenantTrace) -> Vec<BatchSpec> {
+    const DESIGNS: [DesignKind; 3] = [DesignKind::Csa, DesignKind::Sssa, DesignKind::Ussa];
+    (0..trace.tenants.max(1))
+        .map(|t| {
+            let mut spec = BatchSpec::new("dscnn", DESIGNS[t % DESIGNS.len()]);
+            spec.scale = trace.scale;
+            spec.weight_seed = 0x7E40 + t as u64;
+            spec
+        })
+        .collect()
+}
+
+/// Zipf-popular tenant index per request (deterministic in the seed).
+pub fn tenant_assignment(trace: &TenantTrace) -> Vec<usize> {
+    let tenants = trace.tenants.max(1);
+    let weights: Vec<f64> = (0..tenants)
+        .map(|i| 1.0 / ((i + 1) as f64).powf(trace.zipf_s))
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut rng = Pcg32::new(trace.seed ^ ZIPF_TAG);
+    (0..trace.requests)
+        .map(|_| {
+            let mut x = rng.next_f64() * total;
+            for (i, w) in weights.iter().enumerate() {
+                if x < *w {
+                    return i;
+                }
+                x -= w;
+            }
+            tenants - 1
+        })
+        .collect()
+}
+
+/// Virtual arrival time (seconds) of each request, via `loadgen`'s
+/// deterministic Poisson stream.
+pub fn tenant_arrivals(trace: &TenantTrace) -> Vec<f64> {
+    let cfg = TraceConfig {
+        requests: trace.requests,
+        rate: trace.rate,
+        arrival: Arrival::Poisson,
+        burst: 8,
+        seed: trace.seed,
+        retries: 0,
+    };
+    arrival_offsets(&cfg).into_iter().map(|d| d.as_secs_f64()).collect()
+}
+
+/// Deterministic input seed for request `i` of a trace.
+pub fn tenant_input_seed(trace: &TenantTrace, i: usize) -> u64 {
+    let mut rng = Pcg32::new(trace.seed ^ INPUT_TAG).fork(i as u64);
+    rng.next_u64()
+}
+
+/// Outcome of one trace request, comparable across replays and against
+/// a single-engine oracle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimOutcome {
+    /// Request index in the trace.
+    pub request: usize,
+    /// Tenant the request belongs to.
+    pub tenant: usize,
+    /// Shed by admission (503): no device ran it.
+    pub shed: bool,
+    /// Device that served it (`usize::MAX` when shed).
+    pub device: usize,
+    /// Argmax prediction (0 when shed).
+    pub prediction: usize,
+    /// Simulated cycles (0 when shed).
+    pub cycles: u64,
+    /// Re-routed after a device death.
+    pub failed_over: bool,
+}
+
+/// Replay a tenant trace through the fleet, single-threaded and fully
+/// deterministic. Returns one outcome per request, in trace order.
+pub fn run_tenant_trace(fleet: &Fleet, trace: &TenantTrace) -> Result<Vec<SimOutcome>> {
+    let specs = tenant_specs(trace);
+    let tenants = tenant_assignment(trace);
+    let arrivals = tenant_arrivals(trace);
+    let mut out = Vec::with_capacity(tenants.len());
+    for (i, (&tenant, &at)) in tenants.iter().zip(arrivals.iter()).enumerate() {
+        let spec = &specs[tenant];
+        let input = BatchEngine::gen_requests(&spec.model, 1, tenant_input_seed(trace, i))?;
+        match fleet.submit(spec, input, Some(at))? {
+            Submission::Done(routed) => out.push(SimOutcome {
+                request: i,
+                tenant,
+                shed: false,
+                device: routed.device,
+                prediction: routed.report.predictions[0],
+                cycles: routed.report.total_cycles,
+                failed_over: routed.failed_over,
+            }),
+            Submission::Shed => out.push(SimOutcome {
+                request: i,
+                tenant,
+                shed: true,
+                device: usize::MAX,
+                prediction: 0,
+                cycles: 0,
+                failed_over: false,
+            }),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_trace() -> TenantTrace {
+        TenantTrace { tenants: 3, requests: 24, ..TenantTrace::default() }
+    }
+
+    fn quiet_opts() -> FleetOptions {
+        let engine = BatchOptions { threads: 1, ..BatchOptions::default() };
+        FleetOptions { engine, probe_every: 1000, ..FleetOptions::default() }
+    }
+
+    #[test]
+    fn zipf_assignment_is_deterministic_and_skewed() {
+        let trace = TenantTrace { tenants: 4, requests: 400, ..TenantTrace::default() };
+        let a = tenant_assignment(&trace);
+        let b = tenant_assignment(&trace);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| t < 4));
+        let count = |t: usize| a.iter().filter(|&&x| x == t).count();
+        assert!(count(0) > count(3), "Zipf head must beat the tail");
+        let arrivals = tenant_arrivals(&trace);
+        assert_eq!(arrivals.len(), 400);
+        assert!(arrivals.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn fleet_matches_single_engine_oracle_and_replays_deterministically() {
+        let trace = small_trace();
+        let fleet = Fleet::new(quiet_opts());
+        let outcomes = run_tenant_trace(&fleet, &trace).unwrap();
+        let replay = run_tenant_trace(&Fleet::new(quiet_opts()), &trace).unwrap();
+        assert_eq!(outcomes, replay, "same seed must replay identically");
+
+        let oracle = BatchEngine::new(quiet_opts().engine);
+        let specs = tenant_specs(&trace);
+        for o in &outcomes {
+            assert!(!o.shed, "unsaturated fleet must not shed");
+            assert!(!o.failed_over);
+            let seed = tenant_input_seed(&trace, o.request);
+            let input = BatchEngine::gen_requests("dscnn", 1, seed).unwrap();
+            let want = oracle.run_batch(&specs[o.tenant], input).unwrap();
+            assert_eq!(o.prediction, want.predictions[0], "request {}", o.request);
+            assert_eq!(o.cycles, want.total_cycles, "request {}", o.request);
+        }
+        let report = fleet.report();
+        assert!(report.ledger_holds());
+        assert_eq!(report.accepted, trace.requests as u64);
+        assert_eq!(report.completed, trace.requests as u64);
+        assert_eq!(report.failed + report.shed, 0);
+    }
+
+    #[test]
+    fn saturation_sheds_but_ledger_holds() {
+        let opts = FleetOptions { devices: 1, device_queue: 1, ..quiet_opts() };
+        let fleet = Fleet::new(opts);
+        let spec = tenant_specs(&small_trace()).remove(0);
+        let mut shed = 0;
+        for i in 0..3 {
+            let input = BatchEngine::gen_requests("dscnn", 1, i).unwrap();
+            match fleet.submit(&spec, input, Some(0.0)).unwrap() {
+                Submission::Done(_) => {}
+                Submission::Shed => shed += 1,
+            }
+        }
+        assert_eq!(shed, 2, "cap-1 queue at one instant admits exactly one");
+        let report = fleet.report();
+        assert!(report.ledger_holds());
+        assert_eq!(report.accepted, 1);
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.shed, 2);
+    }
+
+    #[test]
+    fn hot_models_replicate_and_budget_is_respected() {
+        let opts = FleetOptions { hot_threshold: 2, replicas: 2, ..quiet_opts() };
+        let fleet = Fleet::new(opts);
+        let spec = tenant_specs(&small_trace()).remove(0);
+        for i in 0..4 {
+            let input = BatchEngine::gen_requests("dscnn", 1, 100 + i).unwrap();
+            let got = fleet.submit(&spec, input, Some(i as f64)).unwrap();
+            assert!(matches!(got, Submission::Done(_)));
+        }
+        let report = fleet.report();
+        assert!(report.replications >= 1, "hot spec must scale out");
+        assert!(report.ledger_holds());
+        let holders: usize = report.per_device.iter().filter(|d| d.placed > 0).count();
+        assert!(holders >= 2, "replicas must land on distinct devices");
+        assert_eq!(report.evictions, 0, "one spec fits every budget");
+    }
+
+    #[test]
+    fn crash_fails_over_without_losing_requests_and_stays_bit_identical() {
+        let fleet = Fleet::new(FleetOptions { replicas: 1, ..quiet_opts() });
+        let spec = tenant_specs(&small_trace()).remove(0);
+        let input = BatchEngine::gen_requests("dscnn", 1, 7).unwrap();
+        let before = match fleet.submit(&spec, input.clone(), Some(0.0)).unwrap() {
+            Submission::Done(routed) => routed,
+            Submission::Shed => panic!("must admit"),
+        };
+        assert!(fleet.crash_device(before.device));
+        assert_eq!(fleet.alive_devices(), 2);
+        let after = match fleet.submit(&spec, input, Some(1.0)).unwrap() {
+            Submission::Done(routed) => routed,
+            Submission::Shed => panic!("must fail over, not shed"),
+        };
+        assert!(after.failed_over, "sole holder died: request must fail over");
+        assert_ne!(after.device, before.device);
+        assert_eq!(after.report.predictions, before.report.predictions);
+        assert_eq!(after.report.total_cycles, before.report.total_cycles);
+        let report = fleet.report();
+        assert!(report.ledger_holds());
+        assert_eq!(report.accepted, 2);
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.crashes, 1);
+        assert!(report.failovers >= 1);
+        assert!(report.rebalances >= 1, "dead device's model must be re-placed");
+        assert!(report.failover_p50_ms >= 0.0);
+    }
+
+    #[test]
+    fn crash_device_refuses_last_survivor() {
+        let fleet = Fleet::new(FleetOptions { devices: 2, ..quiet_opts() });
+        assert!(fleet.crash_device(0));
+        assert!(!fleet.crash_device(0), "already dead");
+        assert!(!fleet.crash_device(1), "never kill the last device");
+        assert_eq!(fleet.alive_devices(), 1);
+    }
+
+    #[test]
+    fn spec_cost_sums_designs_used() {
+        let spec = BatchSpec::new("dscnn", DesignKind::Csa);
+        let cost = spec_cost(&spec);
+        assert_eq!(cost, estimate_cfu(DesignKind::Csa));
+        assert!(cost.luts > 0);
+    }
+}

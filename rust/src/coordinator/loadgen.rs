@@ -251,8 +251,14 @@ pub struct LoadReport {
     pub ok: u64,
     /// Well-formed `503 + Retry-After` shed responses.
     pub shed: u64,
-    /// Transport errors and `500`s.
+    /// Transport errors and `500`s (excluding retry-exhausted requests,
+    /// which count under `gave_up`).
     pub failed: u64,
+    /// Requests that exhausted a configured retry budget and still
+    /// ended in a transport error or `500`. Kept distinct from `failed`
+    /// so fleet failover accounting can tell "failed once, one-shot"
+    /// from "the client gave up after riding out every retry".
+    pub gave_up: u64,
     /// Responses that were not well-formed JSON with the expected
     /// status semantics.
     pub malformed: u64,
@@ -268,9 +274,13 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
-    /// Every response was either a good `200` or a well-formed shed.
+    /// Every response was either a good `200` or a well-formed shed —
+    /// including none that burned through a retry budget and gave up.
     pub fn well_formed(&self) -> bool {
-        self.malformed == 0 && self.failed == 0 && self.ok + self.shed == self.sent
+        self.malformed == 0
+            && self.failed == 0
+            && self.gave_up == 0
+            && self.ok + self.shed == self.sent
     }
 
     /// Serialize for CLI output.
@@ -280,6 +290,7 @@ impl LoadReport {
             ("ok", Value::Num(self.ok as f64)),
             ("shed", Value::Num(self.shed as f64)),
             ("failed", Value::Num(self.failed as f64)),
+            ("gave_up", Value::Num(self.gave_up as f64)),
             ("malformed", Value::Num(self.malformed as f64)),
             ("retried", Value::Num(self.retried as f64)),
             ("well_formed", Value::Bool(self.well_formed())),
@@ -298,6 +309,7 @@ impl LoadReport {
             .with_value("host_ok", self.ok as f64)
             .with_value("host_shed_total", self.shed as f64)
             .with_value("host_failed", self.failed as f64)
+            .with_value("host_gave_up", self.gave_up as f64)
             .with_value("host_retry_total", self.retried as f64)
     }
 }
@@ -307,14 +319,16 @@ impl LoadReport {
 /// honored up to a 300 ms cap (so seeded chaos runs stay fast); other
 /// retryable outcomes (transport error, `500`, malformed) back off
 /// exponentially from 10 ms, capped at 200 ms. Returns the final
-/// attempt's class, its wall latency in ms, and the retries performed.
+/// attempt's class, its wall latency in ms, the retries performed, and
+/// whether the request *gave up* (exhausted a nonzero retry budget and
+/// still ended in a transport error or `500`).
 fn request_with_retries(
     addr: &str,
     body: &str,
     timeout: Duration,
     retries: usize,
     rng: &mut Pcg32,
-) -> (Class, f64, u64) {
+) -> (Class, f64, u64, bool) {
     let mut attempt = 0u64;
     loop {
         let t0 = Instant::now();
@@ -331,7 +345,8 @@ fn request_with_retries(
             Err(_) => (Class::Failed, None),
         };
         if class == Class::Ok || attempt >= retries as u64 {
-            return (class, wall_ms, attempt);
+            let gave_up = retries > 0 && class == Class::Failed;
+            return (class, wall_ms, attempt, gave_up);
         }
         attempt += 1;
         let backoff = match retry_after_ms {
@@ -357,7 +372,7 @@ pub fn run_trace(
 ) -> LoadReport {
     let offsets = arrival_offsets(trace);
     let n = offsets.len();
-    let (tx, rx) = mpsc::channel::<(Class, f64, u64)>();
+    let (tx, rx) = mpsc::channel::<(Class, f64, u64, bool)>();
     let start = Instant::now();
     // Backoff jitter stream, independent of the arrival stream so
     // enabling retries never reshapes the offered trace.
@@ -384,7 +399,7 @@ pub fn run_trace(
             Ok(h) => handles.push(h),
             Err(_) => {
                 // Spawn failure: count the request as failed client-side.
-                let _ = tx.send((Class::Failed, 0.0, 0));
+                let _ = tx.send((Class::Failed, 0.0, 0, false));
             }
         }
     }
@@ -392,7 +407,7 @@ pub fn run_trace(
 
     let mut report = LoadReport { sent: n as u64, ..Default::default() };
     let mut wall = Percentiles::new();
-    for (class, wall_ms, retried) in rx {
+    for (class, wall_ms, retried, gave_up) in rx {
         report.retried += retried;
         match class {
             Class::Ok => {
@@ -400,6 +415,7 @@ pub fn run_trace(
                 wall.push(wall_ms);
             }
             Class::Shed => report.shed += 1,
+            Class::Failed if gave_up => report.gave_up += 1,
             Class::Failed => report.failed += 1,
             Class::Malformed => report.malformed += 1,
         }
@@ -548,6 +564,14 @@ mod tests {
         assert_eq!(retried.to_record("x").get("host_retry_total"), Some(5.0));
         let lossy = LoadReport { failed: 1, ..report.clone() };
         assert!(!lossy.well_formed());
+        // Retry-exhausted requests land in their own column and break
+        // well-formedness just like a plain failure would.
+        let exhausted = LoadReport { gave_up: 2, ..report.clone() };
+        assert!(!exhausted.well_formed());
+        assert_eq!(exhausted.to_record("x").get("host_gave_up"), Some(2.0));
+        let gave_up_spec = crate::metrics::spec_for("host_gave_up");
+        assert!(!gave_up_spec.gate);
+        assert_eq!(gave_up_spec.better, crate::metrics::Direction::LowerIsBetter);
         let short = LoadReport { shed: 2, ..report };
         assert!(!short.well_formed(), "ok + shed must account for every sent request");
         let json = lossy.to_value().to_json();

@@ -19,9 +19,14 @@
 //!   shedding, and graceful drain on shutdown,
 //! - [`loadgen`] — a deterministic open-loop load generator (Poisson and
 //!   bursty arrivals) plus the minimal HTTP client used to replay traces
-//!   against [`net::NetServer`].
+//!   against [`net::NetServer`],
+//! - [`fleet`] — fleet-scale multi-device serving: N simulated devices
+//!   behind a placement/routing layer with cache-affinity routing,
+//!   hot-model replication, device-level fault domains, and replica
+//!   failover that preserves the ledger invariant fleet-wide.
 
 pub mod batch;
+pub mod fleet;
 pub mod loadgen;
 pub mod net;
 pub mod runner;
@@ -29,6 +34,7 @@ pub mod scheduler;
 pub mod serve;
 
 pub use batch::{BatchEngine, BatchOptions, BatchReport, BatchSpec};
+pub use fleet::{Fleet, FleetOptions, FleetReport, Submission, TenantTrace};
 pub use loadgen::{Arrival, LoadReport, TraceConfig};
 pub use net::{NetHandle, NetOptions, NetServer, NetStats};
 pub use runner::{run_experiment, DesignResult, ExperimentResult};

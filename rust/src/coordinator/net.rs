@@ -42,7 +42,8 @@
 //! `POST /v1/infer` data path, so graceful drain is never broken by a
 //! chaos plan.
 
-use super::batch::{BatchEngine, BatchSpec};
+use super::batch::{BatchEngine, BatchReport, BatchSpec};
+use super::fleet::Fleet;
 use super::lock_clean;
 use crate::config::value::Value;
 use crate::error::Result;
@@ -160,8 +161,75 @@ struct StatsInner {
     wall: Percentiles,
 }
 
+/// The inference back-end behind the server: one engine, or a
+/// multi-device [`Fleet`] that routes every batch through placement
+/// and replica failover. The serving layer is agnostic — both expose
+/// the same `run_batch` and robustness counters.
+enum Backend {
+    Single(BatchEngine),
+    Fleet(Arc<Fleet>),
+}
+
+impl Backend {
+    fn run_batch(&self, spec: &BatchSpec, inputs: Vec<QTensor>) -> Result<BatchReport> {
+        match self {
+            Backend::Single(engine) => engine.run_batch(spec, inputs),
+            Backend::Fleet(fleet) => fleet.run_batch(spec, inputs),
+        }
+    }
+
+    fn integrity_fails(&self) -> u64 {
+        match self {
+            Backend::Single(engine) => engine.integrity_fails(),
+            Backend::Fleet(fleet) => fleet.integrity_fails(),
+        }
+    }
+
+    fn degraded_runs(&self) -> u64 {
+        match self {
+            Backend::Single(engine) => engine.degraded_runs(),
+            Backend::Fleet(fleet) => fleet.degraded_runs(),
+        }
+    }
+
+    fn transient_corrected(&self) -> u64 {
+        match self {
+            Backend::Single(engine) => engine.transient_corrected(),
+            Backend::Fleet(fleet) => fleet.transient_corrected(),
+        }
+    }
+
+    fn degraded_keys(&self) -> usize {
+        match self {
+            Backend::Single(engine) => engine.degraded_keys(),
+            Backend::Fleet(fleet) => fleet.degraded_keys(),
+        }
+    }
+
+    fn strike_cap(&self) -> usize {
+        match self {
+            Backend::Single(engine) => engine.strike_cap(),
+            Backend::Fleet(fleet) => fleet.strike_cap(),
+        }
+    }
+
+    fn strike_evictions(&self) -> u64 {
+        match self {
+            Backend::Single(engine) => engine.strike_evictions(),
+            Backend::Fleet(fleet) => fleet.strike_evictions(),
+        }
+    }
+
+    fn fleet(&self) -> Option<&Arc<Fleet>> {
+        match self {
+            Backend::Single(_) => None,
+            Backend::Fleet(fleet) => Some(fleet),
+        }
+    }
+}
+
 struct Shared {
-    engine: BatchEngine,
+    engine: Backend,
     opts: NetOptions,
     queues: Mutex<HashMap<String, Arc<ModelQueue>>>,
     batchers: Mutex<Vec<JoinHandle<()>>>,
@@ -294,7 +362,19 @@ pub struct NetServer {
 impl NetServer {
     /// Bind `addr` (use port 0 for an ephemeral port) and start the
     /// accept loop over `engine`.
-    pub fn bind(addr: &str, engine: BatchEngine, mut opts: NetOptions) -> Result<NetServer> {
+    pub fn bind(addr: &str, engine: BatchEngine, opts: NetOptions) -> Result<NetServer> {
+        NetServer::bind_backend(addr, Backend::Single(engine), opts)
+    }
+
+    /// Bind `addr` and serve over a multi-device [`Fleet`]: every batch
+    /// routes through placement, hot-model replication, and replica
+    /// failover, so a device crash mid-serve degrades to a failover
+    /// instead of an outage.
+    pub fn bind_fleet(addr: &str, fleet: Arc<Fleet>, opts: NetOptions) -> Result<NetServer> {
+        NetServer::bind_backend(addr, Backend::Fleet(fleet), opts)
+    }
+
+    fn bind_backend(addr: &str, engine: Backend, mut opts: NetOptions) -> Result<NetServer> {
         opts.batch_max = opts.batch_max.max(1);
         opts.queue_capacity = opts.queue_capacity.max(1);
         let listener = TcpListener::bind(addr)?;
@@ -822,17 +902,23 @@ fn healthz_body(shared: &Arc<Shared>) -> String {
         "ok"
     };
     let injected = shared.opts.faults.as_ref().map_or(0, |p| p.total_injected());
-    Value::obj(vec![
+    let mut fields = vec![
         ("ok", Value::Bool(true)),
         ("status", Value::Str(status.to_string())),
         ("integrity_fails", Value::Num(shared.engine.integrity_fails() as f64)),
         ("degraded_runs", Value::Num(shared.engine.degraded_runs() as f64)),
         ("degraded_keys", Value::Num(shared.engine.degraded_keys() as f64)),
+        ("degraded_keys_cap", Value::Num(shared.engine.strike_cap() as f64)),
+        ("strike_evictions", Value::Num(shared.engine.strike_evictions() as f64)),
         ("transient_corrected", Value::Num(shared.engine.transient_corrected() as f64)),
         ("batcher_restarts", Value::Num(lock_clean(&shared.stats).batcher_restarts as f64)),
         ("faults_injected", Value::Num(injected as f64)),
-    ])
-    .to_json()
+    ];
+    if let Some(fleet) = shared.engine.fleet() {
+        fields.push(("fleet_devices", Value::Num(fleet.device_count() as f64)));
+        fields.push(("fleet_alive", Value::Num(fleet.alive_devices() as f64)));
+    }
+    Value::obj(fields).to_json()
 }
 
 /// Parse an infer-request body into a [`BatchSpec`] and its input

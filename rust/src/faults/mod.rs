@@ -5,8 +5,10 @@
 //! networks. This module provides a seeded, fully replayable
 //! [`FaultPlan`] that the batch engine and network front-end consult at
 //! well-defined *fault sites*: packed-weight and schedule-arena bit
-//! flips, transient per-lane compute faults, batcher-thread panics, and
-//! connection-level faults (drop, stall, truncate).
+//! flips, transient per-lane compute faults, batcher-thread panics,
+//! connection-level faults (drop, stall, truncate), and device-level
+//! faults for the fleet router (crash, slow device, and persistent
+//! corruption storms confined to one device).
 //!
 //! ## Determinism contract
 //!
@@ -32,7 +34,7 @@ use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Number of distinct fault sites (length of [`FaultSite::ALL`]).
-const SITES: usize = 7;
+const SITES: usize = 10;
 
 /// A place in the serving stack where the plan may inject a fault.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -52,6 +54,15 @@ pub enum FaultSite {
     ConnStall,
     /// Truncate an inference response mid-body and close.
     ConnTruncate,
+    /// Crash one fleet device: it stops answering and its in-flight
+    /// requests must fail over to a surviving replica.
+    DeviceCrash,
+    /// Make one fleet device hang/slow so requests against it miss
+    /// their deadline and the router routes around it.
+    DeviceSlow,
+    /// Persistent-corruption storm confined to one fleet device: every
+    /// cached model on the victim keeps taking integrity strikes.
+    DeviceCorrupt,
 }
 
 impl FaultSite {
@@ -64,6 +75,9 @@ impl FaultSite {
         FaultSite::ConnDrop,
         FaultSite::ConnStall,
         FaultSite::ConnTruncate,
+        FaultSite::DeviceCrash,
+        FaultSite::DeviceSlow,
+        FaultSite::DeviceCorrupt,
     ];
 
     /// Stable human-readable name (used in logs and `/healthz`).
@@ -76,6 +90,9 @@ impl FaultSite {
             FaultSite::ConnDrop => "conn_drop",
             FaultSite::ConnStall => "conn_stall",
             FaultSite::ConnTruncate => "conn_truncate",
+            FaultSite::DeviceCrash => "device_crash",
+            FaultSite::DeviceSlow => "device_slow",
+            FaultSite::DeviceCorrupt => "device_corrupt",
         }
     }
 
@@ -88,6 +105,9 @@ impl FaultSite {
             FaultSite::ConnDrop => 4,
             FaultSite::ConnStall => 5,
             FaultSite::ConnTruncate => 6,
+            FaultSite::DeviceCrash => 7,
+            FaultSite::DeviceSlow => 8,
+            FaultSite::DeviceCorrupt => 9,
         }
     }
 
@@ -104,6 +124,9 @@ impl FaultSite {
             0xA076_1D64_78BD_642F,
             0xE703_7ED1_A0B4_28DB,
             0x8EBC_6AF0_9C88_C6E3,
+            0xC2B2_AE3D_27D4_EB4F,
+            0x1656_67B1_9E37_79F9,
+            0x27D4_EB2F_1656_67C5,
         ];
         TAGS[self.index()]
     }
@@ -129,6 +152,12 @@ pub struct FaultRates {
     pub conn_stall: f64,
     /// Rate for [`FaultSite::ConnTruncate`].
     pub conn_truncate: f64,
+    /// Rate for [`FaultSite::DeviceCrash`].
+    pub device_crash: f64,
+    /// Rate for [`FaultSite::DeviceSlow`].
+    pub device_slow: f64,
+    /// Rate for [`FaultSite::DeviceCorrupt`].
+    pub device_corrupt: f64,
 }
 
 impl FaultRates {
@@ -142,6 +171,9 @@ impl FaultRates {
             FaultSite::ConnDrop => self.conn_drop,
             FaultSite::ConnStall => self.conn_stall,
             FaultSite::ConnTruncate => self.conn_truncate,
+            FaultSite::DeviceCrash => self.device_crash,
+            FaultSite::DeviceSlow => self.device_slow,
+            FaultSite::DeviceCorrupt => self.device_corrupt,
         }
     }
 
@@ -259,6 +291,9 @@ mod tests {
             conn_drop: p,
             conn_stall: p,
             conn_truncate: p,
+            device_crash: p,
+            device_slow: p,
+            device_corrupt: p,
         }
     }
 

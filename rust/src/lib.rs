@@ -27,8 +27,9 @@
 //!   resource pricing ([`analysis`]),
 //! - an experiment coordinator with a threaded scheduler, a request
 //!   serving loop, a dependency-free TCP/HTTP front-end with
-//!   continuous batching and overload shedding, and an open-loop load
-//!   generator ([`coordinator`]),
+//!   continuous batching and overload shedding, an open-loop load
+//!   generator, and fleet-scale multi-device serving with placement
+//!   and replica failover ([`coordinator`]),
 //! - structured perf telemetry: metric records, the committed
 //!   `BENCH_*.json` baseline store, and the CI regression diff engine
 //!   ([`metrics`]),

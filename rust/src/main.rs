@@ -9,6 +9,7 @@ use sparse_riscv::cli::{ArgSpec, Command, ParsedArgs};
 use sparse_riscv::config::experiment::{ExperimentConfig, SimOptions};
 use sparse_riscv::config::value::Value;
 use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions, BatchSpec};
+use sparse_riscv::coordinator::fleet::{run_tenant_trace, Fleet, FleetOptions, TenantTrace};
 use sparse_riscv::coordinator::loadgen::{self, Arrival, TraceConfig};
 use sparse_riscv::coordinator::net::{NetOptions, NetServer};
 use sparse_riscv::coordinator::runner::run_experiment;
@@ -83,7 +84,7 @@ fn cli() -> Command {
                     "host multiply kernel for batched lanes (auto|scalar|swar|sse2|neon)",
                 )),
         )
-        .subcommand(
+        .subcommand(with_fault_args(
             Command::new("serve-tcp", "TCP/HTTP serving front-end with continuous batching")
                 .arg(ArgSpec::opt("addr", "127.0.0.1:0", "bind address (port 0 = ephemeral)"))
                 .arg(ArgSpec::opt("batch-max", "16", "batch size that fires immediately"))
@@ -113,47 +114,35 @@ fn cli() -> Command {
                     "auto-shutdown after this many seconds (0 = run until POST /shutdown)",
                 ))
                 .arg(ArgSpec::opt(
-                    "chaos-seed",
-                    "",
-                    "arm the deterministic fault-injection plan with this seed (empty = off)",
-                ))
-                .arg(ArgSpec::opt(
-                    "fault-weight-flip",
+                    "fleet",
                     "0",
-                    "per-batch probability of a packed-weight bit flip in the cached model",
-                ))
-                .arg(ArgSpec::opt(
-                    "fault-arena-flip",
-                    "0",
-                    "per-batch probability of a schedule-arena bit flip in the cached model",
-                ))
-                .arg(ArgSpec::opt(
-                    "fault-lane",
-                    "0",
-                    "per-request probability of a transient lane compute fault",
-                ))
-                .arg(ArgSpec::opt(
-                    "fault-panic",
-                    "0",
-                    "per-batch probability of an injected batcher-thread panic",
-                ))
-                .arg(ArgSpec::opt(
-                    "fault-conn-drop",
-                    "0",
-                    "per-infer probability of dropping the connection before admission",
-                ))
-                .arg(ArgSpec::opt(
-                    "fault-conn-stall",
-                    "0",
-                    "per-infer probability of stalling the response by 5-45 ms",
-                ))
-                .arg(ArgSpec::opt(
-                    "fault-conn-truncate",
-                    "0",
-                    "per-infer probability of truncating the response mid-write",
+                    "serve over a fleet of N simulated devices with placement + replica \
+                     failover (0 = single engine)",
                 ))
                 .arg(ArgSpec::opt("json", "", "upsert serving metric records into this store")),
-        )
+        ))
+        .subcommand(with_fault_args(
+            Command::new("fleet-sim", "replay a seeded multi-tenant trace through a device fleet")
+                .arg(ArgSpec::opt("devices", "3", "simulated devices in the fleet"))
+                .arg(ArgSpec::opt("replicas", "2", "replication factor for hot models"))
+                .arg(ArgSpec::opt("hot-threshold", "8", "spec hits before replication kicks in"))
+                .arg(ArgSpec::opt(
+                    "device-queue",
+                    "64",
+                    "per-device backlog bound; admission sheds when every replica is at it",
+                ))
+                .arg(ArgSpec::opt("probe-every", "4", "health-probe period in submissions"))
+                .arg(ArgSpec::opt("deadline-ms", "50", "virtual request deadline (ms)"))
+                .arg(ArgSpec::opt("tenants", "6", "tenant model specs in the traffic mix"))
+                .arg(ArgSpec::opt("requests", "96", "requests in the trace"))
+                .arg(ArgSpec::opt("rate", "400", "mean offered load (requests/s, virtual)"))
+                .arg(ArgSpec::opt("zipf", "1.1", "Zipf skew of tenant popularity"))
+                .arg(ArgSpec::opt("seed", "990951", "trace seed (popularity/arrivals/inputs)"))
+                .arg(ArgSpec::opt("scale", "0.07", "model width multiplier"))
+                .arg(ArgSpec::opt("threads", "0", "engine worker threads per device (0=auto)"))
+                .arg(ArgSpec::opt("cache-cap", "64", "prepared-model LRU capacity per device"))
+                .arg(ArgSpec::opt("json", "", "upsert fleet metric records into this store")),
+        ))
         .subcommand(
             Command::new("loadgen", "replay a deterministic open-loop trace against serve-tcp")
                 .arg(ArgSpec::opt("addr", "", "server address, e.g. 127.0.0.1:8080 (required)"))
@@ -255,6 +244,67 @@ fn cli() -> Command {
         )
         .subcommand(Command::new("resources", "print the FPGA resource estimate (Table III)"))
         .subcommand(Command::new("models", "list the model zoo"))
+}
+
+/// Chaos-plan flags shared by `serve-tcp` and `fleet-sim`: a non-empty
+/// `--chaos-seed` arms the plan; each `--fault-*` rate is a per-event
+/// probability in `[0, 1]`.
+fn with_fault_args(cmd: Command) -> Command {
+    cmd.arg(ArgSpec::opt(
+        "chaos-seed",
+        "",
+        "arm the deterministic fault-injection plan with this seed (empty = off)",
+    ))
+    .arg(ArgSpec::opt(
+        "fault-weight-flip",
+        "0",
+        "per-batch probability of a packed-weight bit flip in the cached model",
+    ))
+    .arg(ArgSpec::opt(
+        "fault-arena-flip",
+        "0",
+        "per-batch probability of a schedule-arena bit flip in the cached model",
+    ))
+    .arg(ArgSpec::opt(
+        "fault-lane",
+        "0",
+        "per-request probability of a transient lane compute fault",
+    ))
+    .arg(ArgSpec::opt(
+        "fault-panic",
+        "0",
+        "per-batch probability of an injected batcher-thread panic",
+    ))
+    .arg(ArgSpec::opt(
+        "fault-conn-drop",
+        "0",
+        "per-infer probability of dropping the connection before admission",
+    ))
+    .arg(ArgSpec::opt(
+        "fault-conn-stall",
+        "0",
+        "per-infer probability of stalling the response by 5-45 ms",
+    ))
+    .arg(ArgSpec::opt(
+        "fault-conn-truncate",
+        "0",
+        "per-infer probability of truncating the response mid-write",
+    ))
+    .arg(ArgSpec::opt(
+        "fault-device-crash",
+        "0",
+        "per-submission probability of crashing the fleet device a batch was routed to",
+    ))
+    .arg(ArgSpec::opt(
+        "fault-device-slow",
+        "0",
+        "per-submission probability of starting a slow spell on a fleet device",
+    ))
+    .arg(ArgSpec::opt(
+        "fault-device-corrupt",
+        "0",
+        "per-submission probability of a corruption storm confined to one fleet device",
+    ))
 }
 
 fn parse_designs(s: &str) -> Result<Vec<DesignKind>, String> {
@@ -448,6 +498,9 @@ fn parse_fault_plan(args: &ParsedArgs) -> sparse_riscv::Result<Option<std::sync:
         conn_drop: rate("fault-conn-drop")?,
         conn_stall: rate("fault-conn-stall")?,
         conn_truncate: rate("fault-conn-truncate")?,
+        device_crash: rate("fault-device-crash")?,
+        device_slow: rate("fault-device-slow")?,
+        device_corrupt: rate("fault-device-corrupt")?,
     };
     Ok(Some(std::sync::Arc::new(FaultPlan::new(seed, rates))))
 }
@@ -456,7 +509,7 @@ fn cmd_serve_tcp(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     use std::io::Write as _;
     let host_kernel = parse_host_kernel(args.get("host-kernel")?)?;
     let faults = parse_fault_plan(args)?;
-    let engine = BatchEngine::new(BatchOptions {
+    let engine_opts = BatchOptions {
         threads: args.get_usize("threads")?,
         clock_hz: 100_000_000,
         verify: false,
@@ -465,7 +518,7 @@ fn cmd_serve_tcp(args: &ParsedArgs) -> sparse_riscv::Result<()> {
         tile_threads: args.get_usize("tile-threads")?,
         host_kernel,
         faults: faults.clone(),
-    });
+    };
     let opts = NetOptions {
         batch_max: args.get_usize("batch-max")?,
         batch_deadline: Duration::from_millis(args.get_u64("deadline-ms")?),
@@ -478,7 +531,24 @@ fn cmd_serve_tcp(args: &ParsedArgs) -> sparse_riscv::Result<()> {
     if let Some(plan) = &faults {
         println!("serve-tcp: chaos plan armed — {plan:?}");
     }
-    let server = NetServer::bind(args.get("addr")?, engine, opts)?;
+    let fleet_n = args.get_usize("fleet")?;
+    let fleet = if fleet_n > 0 {
+        Some(std::sync::Arc::new(Fleet::new(FleetOptions {
+            devices: fleet_n,
+            engine: engine_opts.clone(),
+            faults: faults.clone(),
+            ..FleetOptions::default()
+        })))
+    } else {
+        None
+    };
+    let server = match &fleet {
+        Some(f) => {
+            println!("serve-tcp: fleet of {} devices behind the front-end", f.device_count());
+            NetServer::bind_fleet(args.get("addr")?, std::sync::Arc::clone(f), opts)?
+        }
+        None => NetServer::bind(args.get("addr")?, BatchEngine::new(engine_opts), opts)?,
+    };
     // The exact line automation scrapes for the ephemeral port — flush
     // so a piped stdout delivers it before the server blocks in join().
     println!("serve-tcp: listening on {}", server.addr());
@@ -517,15 +587,120 @@ fn cmd_serve_tcp(args: &ParsedArgs) -> sparse_riscv::Result<()> {
         stats.transient_corrected,
         faults.as_ref().map_or(0, |p| p.total_injected()),
     );
+    let mut records = vec![stats.to_record("serve/net")];
+    if let Some(f) = &fleet {
+        let fr = f.report();
+        println!(
+            "serve-tcp: fleet — devices {} alive {} failovers {} rebalances {} crashes {}",
+            fr.devices, fr.alive, fr.failovers, fr.rebalances, fr.crashes,
+        );
+        records.extend(fr.to_records("serve/fleet"));
+    }
     let note = "regenerate: cargo run --release -- serve-tcp (plus a loadgen trace)";
-    let rec = stats.to_record("serve/net");
-    if let Some(path) = sparse_riscv::metrics::sink_records_env(note, &[rec.clone()])? {
-        println!("metrics: wrote 1 record into {path}");
+    if let Some(path) = sparse_riscv::metrics::sink_records_env(note, &records)? {
+        println!("metrics: wrote {} record(s) into {path}", records.len());
     }
     let json_path = args.get("json")?;
     if !json_path.is_empty() {
-        BaselineStore::upsert_file(json_path, note, vec![rec])?;
-        println!("metrics: upserted 1 record into {json_path}");
+        let n = records.len();
+        BaselineStore::upsert_file(json_path, note, records)?;
+        println!("metrics: upserted {n} record(s) into {json_path}");
+    }
+    Ok(())
+}
+
+fn cmd_fleet_sim(args: &ParsedArgs) -> sparse_riscv::Result<()> {
+    let faults = parse_fault_plan(args)?;
+    let engine = BatchOptions {
+        threads: args.get_usize("threads")?,
+        clock_hz: 100_000_000,
+        verify: false,
+        exec_mode: ExecMode::default(),
+        cache_capacity: args.get_usize("cache-cap")?,
+        tile_threads: 0,
+        host_kernel: HostKernel::Auto,
+        faults: faults.clone(),
+    };
+    let opts = FleetOptions {
+        devices: args.get_usize("devices")?.max(1),
+        replicas: args.get_usize("replicas")?.max(1),
+        hot_threshold: args.get_u64("hot-threshold")?,
+        device_queue: args.get_usize("device-queue")?.max(1),
+        probe_every: args.get_u64("probe-every")?.max(1),
+        deadline_s: args.get_f64("deadline-ms")?.max(0.0) / 1e3,
+        engine,
+        faults: faults.clone(),
+        ..FleetOptions::default()
+    };
+    let trace = TenantTrace {
+        tenants: args.get_usize("tenants")?.max(1),
+        requests: args.get_usize("requests")?,
+        rate: args.get_f64("rate")?,
+        zipf_s: args.get_f64("zipf")?,
+        seed: args.get_u64("seed")?,
+        scale: args.get_f64("scale")?,
+    };
+    if trace.rate <= 0.0 {
+        return Err(sparse_riscv::Error::Cli("--rate must be positive".into()));
+    }
+    if let Some(plan) = &faults {
+        println!("fleet-sim: chaos plan armed — {plan:?}");
+    }
+    println!(
+        "fleet-sim: {} devices, {} tenants, {} requests at {} req/s (seed {})",
+        opts.devices, trace.tenants, trace.requests, trace.rate, trace.seed,
+    );
+    let fleet = Fleet::new(opts);
+    let outcomes = run_tenant_trace(&fleet, &trace)?;
+    let report = fleet.report();
+    let failed_over = outcomes.iter().filter(|o| o.failed_over).count();
+    println!(
+        "fleet-sim: drained — accepted {} completed {} failed {} shed {} over {} devices \
+         ({} alive)",
+        report.accepted, report.completed, report.failed, report.shed, report.devices, report.alive,
+    );
+    println!(
+        "fleet-sim: failover — failovers {} rebalances {} replications {} crashes {} \
+         slow_spells {} storms {} deadline_misses {}",
+        report.failovers,
+        report.rebalances,
+        report.replications,
+        report.crashes,
+        report.slow_spells,
+        report.storms,
+        report.deadline_misses,
+    );
+    println!(
+        "fleet-sim: throughput {:.1} req/s over {:.4} s virtual span ({} requests failed \
+         over, total cycles {})",
+        report.throughput(),
+        report.span_s,
+        failed_over,
+        report.total_cycles,
+    );
+    for d in &report.per_device {
+        println!(
+            "fleet-sim: dev{} alive={} placed={} completed={} util={:.3} cache_hit_rate={:.3}",
+            d.device, d.alive, d.placed, d.completed, d.utilization, d.cache_hit_rate,
+        );
+    }
+    let records = report.to_records("fleet/sim");
+    let note = "regenerate: cargo run --release -- fleet-sim --json <path>";
+    if let Some(path) = sparse_riscv::metrics::sink_records_env(note, &records)? {
+        println!("metrics: wrote {} record(s) into {path}", records.len());
+    }
+    let json_path = args.get("json")?;
+    if !json_path.is_empty() {
+        let n = records.len();
+        BaselineStore::upsert_file(json_path, note, records)?;
+        println!("metrics: upserted {n} record(s) into {json_path}");
+    }
+    if !report.ledger_holds() || report.failed > 0 {
+        eprintln!(
+            "fleet-sim: ledger violated — accepted {} != completed {} + failed {} (or failures)",
+            report.accepted, report.completed, report.failed
+        );
+        std::process::exit(1);
     }
     Ok(())
 }
@@ -1038,6 +1213,7 @@ fn main() {
         [_, "experiment"] => cmd_experiment(&parsed),
         [_, "serve"] => cmd_serve(&parsed),
         [_, "serve-tcp"] => cmd_serve_tcp(&parsed),
+        [_, "fleet-sim"] => cmd_fleet_sim(&parsed),
         [_, "loadgen"] => cmd_loadgen(&parsed),
         [_, "explore"] => cmd_explore(&parsed),
         [_, "bench-e2e"] => cmd_bench_e2e(&parsed),

@@ -263,6 +263,65 @@ pub const METRIC_SPECS: &[MetricSpec] = &[
         rel_tol: 0.25,
         abs_floor: 1.0,
     },
+    MetricSpec {
+        name: "host_gave_up",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    // Fleet serving counters: informational, lower-is-better — crashes,
+    // sheds, failovers, rebalances, and deadline misses are costs, and
+    // the generic `host_` prefix would read them as wins.
+    MetricSpec {
+        name: "host_fleet_failed",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_fleet_shed",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_fleet_failovers",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_fleet_rebalances",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_fleet_crashes",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
+    MetricSpec {
+        name: "host_fleet_deadline_misses",
+        prefix: false,
+        better: Direction::LowerIsBetter,
+        gate: false,
+        rel_tol: 0.25,
+        abs_floor: 1.0,
+    },
     // Host wall-clock: informational only, never gated. The generous
     // tolerance keeps run-to-run jitter out of the diff table; only
     // swings beyond it get flagged (still non-fatal).
@@ -483,6 +542,13 @@ mod tests {
             "host_degraded_total",
             "host_batcher_restarts",
             "host_retry_total",
+            "host_gave_up",
+            "host_fleet_failed",
+            "host_fleet_shed",
+            "host_fleet_failovers",
+            "host_fleet_rebalances",
+            "host_fleet_crashes",
+            "host_fleet_deadline_misses",
         ] {
             let s = spec_for(name);
             assert_eq!(s.name, name, "{name} must hit its exact entry");

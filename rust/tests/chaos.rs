@@ -136,6 +136,11 @@ fn chaos_storm_loses_no_accepted_request_and_drains_cleanly() {
             conn_drop: 0.15,
             conn_stall: 0.1,
             conn_truncate: 0.15,
+            // Device-level sites only fire inside a fleet; keeping them
+            // in the storm proves they are inert on a single engine.
+            device_crash: 0.5,
+            device_slow: 0.5,
+            device_corrupt: 0.5,
         },
     ));
     let server = start_chaos_server(Some(plan.clone()));

@@ -23,6 +23,7 @@ fn help_lists_subcommands() {
         "experiment",
         "serve",
         "serve-tcp",
+        "fleet-sim",
         "loadgen",
         "explore",
         "bench-e2e",
@@ -419,6 +420,18 @@ fn metrics_diff_exit_codes_and_verdict() {
     assert_eq!(code, Some(1));
     assert!(stderr.contains("a.json"), "{stderr}");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fleet_sim_drains_with_a_balanced_ledger() {
+    let (code, stdout, stderr) = run_with_exit(&[
+        "fleet-sim", "--devices", "2", "--tenants", "2", "--requests", "10", "--scale", "0.07",
+        "--threads", "1",
+    ]);
+    assert_eq!(code, Some(0), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("fleet-sim: drained"), "{stdout}");
+    assert!(stdout.contains("fleet-sim: failover"), "{stdout}");
+    assert!(stdout.contains("throughput"), "{stdout}");
 }
 
 #[test]

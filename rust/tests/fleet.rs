@@ -1,0 +1,208 @@
+//! Chaos-tier tests for fleet-scale serving: device-level fault
+//! domains, replica failover, and placement under resource budgets.
+//!
+//! The contract under any single-device loss, for N >= 3 devices:
+//!
+//! 1. **Zero accepted requests are lost** — the fleet ledger
+//!    (`accepted == completed + failed`) holds with `failed == 0`.
+//! 2. **Surviving replicas answer bit-identically** to a single-engine
+//!    oracle: predictions AND simulated cycle totals are
+//!    placement-invariant.
+//! 3. **Everything replays deterministically**: two runs with the same
+//!    trace seed and the same crash schedule produce identical
+//!    outcome streams, counter for counter.
+
+use sparse_riscv::coordinator::batch::{BatchEngine, BatchOptions};
+use sparse_riscv::coordinator::fleet::{
+    run_tenant_trace, tenant_arrivals, tenant_assignment, tenant_input_seed, tenant_specs, Fleet,
+    FleetOptions, SimOutcome, Submission, TenantTrace,
+};
+use sparse_riscv::faults::{FaultPlan, FaultRates};
+use std::sync::Arc;
+
+/// Three tenants over 24 requests: small enough for unoptimized test
+/// builds, large enough that every tenant spec gets traffic after the
+/// mid-trace crash.
+fn small_trace() -> TenantTrace {
+    TenantTrace { tenants: 3, requests: 24, ..TenantTrace::default() }
+}
+
+/// Single-threaded engines and no periodic probes: detection happens
+/// at send time, which is the interesting (laggy-router) path.
+fn quiet_opts() -> FleetOptions {
+    let engine = BatchOptions { threads: 1, ..BatchOptions::default() };
+    FleetOptions { devices: 3, engine, probe_every: 1000, ..FleetOptions::default() }
+}
+
+/// Replay `trace` like [`run_tenant_trace`], but crash `victim` right
+/// before submitting request `kill_at`.
+fn run_with_kill(
+    fleet: &Fleet,
+    trace: &TenantTrace,
+    kill_at: usize,
+    victim: usize,
+) -> Vec<SimOutcome> {
+    let specs = tenant_specs(trace);
+    let tenants = tenant_assignment(trace);
+    let arrivals = tenant_arrivals(trace);
+    let mut out = Vec::with_capacity(tenants.len());
+    for (i, (&tenant, &at)) in tenants.iter().zip(arrivals.iter()).enumerate() {
+        if i == kill_at {
+            assert!(fleet.crash_device(victim), "victim {victim} must be killable");
+        }
+        let spec = &specs[tenant];
+        let input = BatchEngine::gen_requests(&spec.model, 1, tenant_input_seed(trace, i)).unwrap();
+        match fleet.submit(spec, input, Some(at)).unwrap() {
+            Submission::Done(r) => out.push(SimOutcome {
+                request: i,
+                tenant,
+                shed: false,
+                device: r.device,
+                prediction: r.report.predictions[0],
+                cycles: r.report.total_cycles,
+                failed_over: r.failed_over,
+            }),
+            Submission::Shed => out.push(SimOutcome {
+                request: i,
+                tenant,
+                shed: true,
+                device: usize::MAX,
+                prediction: 0,
+                cycles: 0,
+                failed_over: false,
+            }),
+        }
+    }
+    out
+}
+
+/// Every completed outcome must match a fault-free single-engine run
+/// of the same (spec, input) pair — prediction AND cycles.
+fn assert_matches_oracle(outcomes: &[SimOutcome], trace: &TenantTrace, engine: &BatchOptions) {
+    let oracle = BatchEngine::new(engine.clone());
+    let specs = tenant_specs(trace);
+    for o in outcomes {
+        if o.shed {
+            continue;
+        }
+        let spec = &specs[o.tenant];
+        let seed = tenant_input_seed(trace, o.request);
+        let input = BatchEngine::gen_requests(&spec.model, 1, seed).unwrap();
+        let report = oracle.run_batch(spec, input).unwrap();
+        assert_eq!(
+            (o.prediction, o.cycles),
+            (report.predictions[0], report.total_cycles),
+            "request {} (tenant {}, failed_over {}) diverged from the single-engine oracle",
+            o.request,
+            o.tenant,
+            o.failed_over
+        );
+    }
+}
+
+#[test]
+fn killing_any_single_device_mid_trace_loses_nothing() {
+    // Contract 1-3, exhaustively over the victim: whichever of the
+    // three devices dies mid-trace, the fleet finishes the trace with
+    // a balanced ledger and oracle-identical answers.
+    let trace = small_trace();
+    let kill_at = trace.requests / 2;
+    for victim in 0..3 {
+        let fleet = Fleet::new(quiet_opts());
+        let outcomes = run_with_kill(&fleet, &trace, kill_at, victim);
+        let report = fleet.report();
+        assert!(report.ledger_holds(), "victim {victim}: ledger broke: {report:?}");
+        assert_eq!(report.failed, 0, "victim {victim}: accepted requests lost: {report:?}");
+        assert_eq!(report.crashes, 1, "victim {victim}");
+        assert_eq!(report.alive, 2, "victim {victim}");
+        assert!(
+            outcomes.iter().filter(|o| !o.shed).count() > 0,
+            "victim {victim}: nothing completed"
+        );
+        assert!(
+            outcomes.iter().all(|o| !o.shed || o.request >= kill_at),
+            "victim {victim}: shed before the crash with idle devices"
+        );
+        assert!(
+            outcomes.iter().all(|o| o.shed || o.device != victim || o.request < kill_at),
+            "victim {victim}: routed to a dead device after its crash was detectable"
+        );
+        assert_matches_oracle(&outcomes, &trace, &quiet_opts().engine);
+
+        // Contract 3: an identical fleet with the identical crash
+        // schedule replays the identical outcome stream.
+        let again = Fleet::new(quiet_opts());
+        let replay = run_with_kill(&again, &trace, kill_at, victim);
+        assert_eq!(outcomes, replay, "victim {victim}: same seed must replay identically");
+        let r2 = again.report();
+        assert_eq!(
+            (report.accepted, report.completed, report.failed, report.shed, report.failovers),
+            (r2.accepted, r2.completed, r2.failed, r2.shed, r2.failovers),
+            "victim {victim}: counters must replay identically"
+        );
+    }
+}
+
+#[test]
+fn seeded_crash_plan_drives_failover_deterministically() {
+    // A plan-driven storm of device crashes: the plan always kills the
+    // device a request was just routed to, so every crash exercises a
+    // live failover — and the whole run stays seeded + replayable.
+    let trace = TenantTrace { tenants: 3, requests: 48, ..TenantTrace::default() };
+    let run = || {
+        let plan = Arc::new(FaultPlan::new(
+            0xF1EE7_CAFE,
+            FaultRates { device_crash: 0.25, ..Default::default() },
+        ));
+        let opts = FleetOptions { faults: Some(plan), ..quiet_opts() };
+        let fleet = Fleet::new(opts);
+        let outcomes = run_tenant_trace(&fleet, &trace).unwrap();
+        (outcomes, fleet.report())
+    };
+    let (outcomes, report) = run();
+
+    assert!(report.ledger_holds(), "ledger broke under crash storm: {report:?}");
+    assert_eq!(report.failed, 0, "accepted requests lost: {report:?}");
+    assert!(report.crashes >= 1, "a 25% crash rate over 48 requests must fire: {report:?}");
+    assert!(report.alive >= 1, "the last survivor must never be crashed by the plan");
+    assert!(
+        report.failovers >= report.crashes,
+        "every plan-driven crash kills the serving device, so each must fail over: {report:?}"
+    );
+    assert!(report.rebalances >= 1, "death of a model-holding device must re-place: {report:?}");
+    assert_matches_oracle(&outcomes, &trace, &quiet_opts().engine);
+
+    let (replay, r2) = run();
+    assert_eq!(outcomes, replay, "same plan seed must replay identically");
+    assert_eq!(
+        (report.accepted, report.completed, report.shed, report.crashes, report.failovers),
+        (r2.accepted, r2.completed, r2.shed, r2.crashes, r2.failovers),
+        "fleet counters must replay identically"
+    );
+}
+
+#[test]
+fn fleet_report_records_expose_failover_counters() {
+    let trace = small_trace();
+    let fleet = Fleet::new(quiet_opts());
+    run_tenant_trace(&fleet, &trace).unwrap();
+    let report = fleet.report();
+    let records = report.to_records("fleet/test");
+    assert_eq!(records.len(), 1 + report.devices, "one fleet record + one per device");
+    assert_eq!(records[0].id, "fleet/test");
+    for name in [
+        "host_fleet_throughput",
+        "host_fleet_accepted",
+        "host_fleet_completed",
+        "host_fleet_failed",
+        "host_fleet_shed",
+        "host_fleet_failovers",
+        "host_fleet_rebalances",
+        "host_fleet_crashes",
+    ] {
+        assert!(records[0].get(name).is_some(), "fleet record missing {name}");
+    }
+    assert_eq!(records[1].id, "fleet/test/dev0");
+    assert!(records[1].get("host_completed").is_some());
+    assert!(records[1].get("host_util").is_some());
+}

@@ -209,6 +209,87 @@ fn burst_sheds_beyond_watermark_without_losing_accepted_requests() {
 }
 
 #[test]
+fn shutdown_race_drains_multiple_spec_queues_without_loss() {
+    // Two specs, each with its own admission queue and batcher thread.
+    // Requests admitted to spec A while spec B (and the whole server)
+    // begins draining must still complete: the drain walks *every*
+    // per-spec queue, not just the one that noticed shutdown first.
+    let server = start_server(NetOptions {
+        batch_max: 64,
+        batch_deadline: Duration::from_millis(300),
+        ..test_opts()
+    });
+    let addr = server.addr().to_string();
+
+    let specs = [("csa", DesignKind::Csa), ("sssa", DesignKind::Sssa)];
+    let n_per = 3;
+    let mut handles = Vec::new();
+    for (s, (design, _)) in specs.iter().enumerate() {
+        for i in 0..n_per {
+            let addr = addr.clone();
+            let body = Value::obj(vec![
+                ("model", Value::Str("dscnn".to_string())),
+                ("design", Value::Str(design.to_string())),
+                ("scale", Value::Num(SCALE)),
+                ("seed", Value::Num((500 + s * 10 + i) as f64)),
+            ])
+            .to_json();
+            handles.push(std::thread::spawn(move || {
+                let resp = loadgen::http_request(&addr, "POST", "/v1/infer", &body, TIMEOUT)
+                    .expect("infer request");
+                assert_eq!(resp.code, 200, "body: {}", resp.body);
+                let v = Value::parse(&resp.body).expect("infer response is valid JSON");
+                (
+                    v.get("prediction").unwrap().as_usize().unwrap(),
+                    v.get("cycles").unwrap().as_f64().unwrap() as u64,
+                )
+            }));
+        }
+    }
+
+    // Wait until every request has been *admitted* (all six sit queued
+    // behind the 300ms deadline trigger), then flip shutdown: both spec
+    // queues hold work at the instant the drain starts.
+    let total = (specs.len() * n_per) as f64;
+    let deadline = std::time::Instant::now() + TIMEOUT;
+    loop {
+        let live = loadgen::http_request(&addr, "GET", "/stats", "", TIMEOUT).unwrap();
+        let v = Value::parse(&live.body).unwrap();
+        if v.get("accepted").unwrap().as_f64().unwrap() >= total {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "admission never reached {total}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let bye = loadgen::http_request(&addr, "POST", "/shutdown", "{}", TIMEOUT).unwrap();
+    assert_eq!(bye.code, 200);
+
+    let via_net: Vec<(usize, u64)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let stats = server.join();
+    assert_eq!(stats.accepted, total as u64);
+    assert_eq!(stats.completed, total as u64, "drain lost queued requests: {stats:?}");
+    assert_eq!(stats.failed + stats.shed, 0);
+
+    // Bit-identity per spec against direct engine runs: racing the
+    // drain must not perturb simulated results.
+    let direct = engine();
+    for (s, (design, kind)) in specs.iter().enumerate() {
+        let spec = BatchSpec { scale: SCALE, ..BatchSpec::new("dscnn", *kind) };
+        for i in 0..n_per {
+            let seed = (500 + s * 10 + i) as u64;
+            let reqs = BatchEngine::gen_requests("dscnn", 1, seed).unwrap();
+            let report = direct.run_batch(&spec, reqs).unwrap();
+            assert_eq!(
+                via_net[s * n_per + i],
+                (report.predictions[0], report.request_cycles[0]),
+                "{design} seed {seed} diverged across the drain"
+            );
+        }
+    }
+}
+
+#[test]
 fn malformed_requests_get_4xx_over_the_wire() {
     let server = start_server(test_opts());
     let addr = server.addr().to_string();
